@@ -1,0 +1,68 @@
+//! Quickstart: define a tiny SNN, compile it through the full stack
+//! (fusion → partition → placement → codegen), deploy it on the
+//! behavioral chip, and watch spikes flow.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use taibai::compiler::{self, Options};
+use taibai::coordinator::Deployment;
+use taibai::datasets::SpikeSample;
+use taibai::energy::EnergyModel;
+use taibai::model::{Layer, NetDef, NeuronModel};
+
+fn main() {
+    // 1. Describe a network: 8 inputs -> 16 LIF -> 4 readout.
+    let mut net = NetDef::new("quickstart", 12);
+    net.layers.push(Layer::Input { size: 8 });
+    net.layers.push(Layer::Fc {
+        input: 8,
+        output: 16,
+        neuron: NeuronModel::Lif { tau: 0.6, vth: 1.0 },
+    });
+    net.layers.push(Layer::Fc {
+        input: 16,
+        output: 4,
+        neuron: NeuronModel::Readout { tau: 0.9 },
+    });
+
+    // 2. Weights (normally trained via the L2 JAX path — see
+    //    python/compile/aot.py; random here).
+    let mut rng = taibai::util::Rng::new(1);
+    let w1: Vec<f32> = (0..8 * 16).map(|_| rng.f32() * 0.8).collect();
+    let w2: Vec<f32> = (0..16 * 4).map(|_| rng.f32() * 0.5).collect();
+    let weights = vec![vec![], w1, w2];
+
+    // 3. Compile: the full Fig 12 pipeline.
+    let report = compiler::compile(&net, &weights, &Options::default())
+        .expect("compile");
+    println!(
+        "compiled {:?}: {} cores, avg hop distance {:.2}",
+        net.name, report.compiled.used_cores, report.avg_hops
+    );
+
+    // 4. Deploy and run a burst-coded sample.
+    let mut chip = Deployment::new(report.compiled);
+    let mut spikes = vec![vec![]; 12];
+    for t in 0..6 {
+        spikes[t] = vec![0u16, 1, 2, 3]; // channels 0-3 active early
+    }
+    let run = chip
+        .run_spikes(&SpikeSample { spikes, labels: vec![0] })
+        .expect("run");
+
+    println!("hidden spikes fired : {}", run.spikes);
+    println!("packets routed      : {}", run.packets);
+    println!("readout (summed)    : {:?}", run.summed());
+
+    // 5. Energy accounting (Table IV's pJ/SOP metric on this workload).
+    let em = EnergyModel::default();
+    let a = chip.chip.activity();
+    println!(
+        "synaptic ops: {}   energy: {:.2} nJ   pJ/SOP: {:.2}",
+        a.nc.sops,
+        em.energy(&a).dynamic_j() * 1e9,
+        em.pj_per_sop(&a)
+    );
+}

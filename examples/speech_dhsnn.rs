@@ -1,0 +1,50 @@
+//! SHD-style speech recognition with the dendritic DH-LIF model — paper
+//! §V-B.3 application 2. A single DH-LIF neuron has 4 dendrites × 700
+//! inputs = 2800 fan-ins, over the chip's 2048 limit, so the deployment
+//! exercises the §IV-B fan-in expansion (branch banks inside one NC).
+//!
+//! ```sh
+//! cargo run --release --example speech_dhsnn -- --samples 20
+//! ```
+
+use taibai::apps;
+use taibai::datasets::shd;
+use taibai::metrics::{accuracy, argmax};
+use taibai::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let per_class = (args.usize("samples", 20) / shd::CLASSES).max(1);
+    let seed = args.u64("seed", 42);
+
+    let data = shd::dataset(per_class, seed);
+    let rate =
+        data.iter().map(|s| s.rate(shd::CHANNELS)).sum::<f64>() / data.len() as f64;
+    println!(
+        "SHD: {} utterances, {} channels, input spike rate {:.2}% (paper: 1.2%)",
+        data.len(),
+        shd::CHANNELS,
+        rate * 100.0
+    );
+
+    for dendrites in [true, false] {
+        let mut d = apps::deploy_shd(dendrites, seed);
+        let mut pairs = Vec::new();
+        let mut hidden_spikes = 0u64;
+        for s in &data {
+            d.reset_state();
+            let run = d.run_spikes(s).expect("chip run");
+            hidden_spikes += run.spikes;
+            pairs.push((argmax(&run.summed()), s.labels[0]));
+        }
+        let acc = accuracy(&pairs);
+        let label = if dendrites { "DH-LIF (4 dendrites)" } else { "LIF (no dendrites)" };
+        println!(
+            "  {:22} accuracy: {:5.1}%   hidden rate: {:.2}%   cores: {}",
+            label,
+            acc * 100.0,
+            hidden_spikes as f64 / (data.len() * shd::TIMESTEPS * 64) as f64 * 100.0,
+            d.compiled.used_cores
+        );
+    }
+}

@@ -1,0 +1,209 @@
+"""AOT build entry point: `python -m compile.aot --out ../artifacts`.
+
+Produces everything the Rust binary needs at run time:
+  * `*.hlo.txt`        — HLO-text artifacts of the baseline step
+                         functions (Pallas kernel included), loadable by
+                         `HloModuleProto::from_text_file` (text, NOT
+                         serialized protos: xla_extension 0.5.1 rejects
+                         jax>=0.5's 64-bit instruction ids).
+  * `weights/*.bin`    — STBP-trained weights for the three applications
+                         (format TBW1, see rust/src/runtime/artifacts.rs).
+  * `data/*.bin`       — held-out test tensors (format TBD1).
+  * `manifest.txt`     — what was built, with training losses.
+
+Python runs ONCE here; it is never on the Rust request path.
+"""
+
+import argparse
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model
+
+
+# ------------------------------------------------------------ binary IO
+
+def write_weights(path, w):
+    w = np.asarray(w, np.float32).reshape(-1)
+    with open(path, "wb") as f:
+        f.write(b"TBW1")
+        f.write(struct.pack("<I", w.size))
+        f.write(w.tobytes())
+
+
+def write_tensor(path, arr):
+    arr = np.asarray(arr, np.float32)
+    with open(path, "wb") as f:
+        f.write(b"TBD1")
+        f.write(struct.pack("<I", arr.ndim))
+        for d in arr.shape:
+            f.write(struct.pack("<I", d))
+        f.write(arr.astype("<f4").tobytes())
+
+
+# ------------------------------------------------------------ HLO text
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def dump_hlo(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+# ------------------------------------------------------------ pipeline
+
+def build(out_dir, quick=False):
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "data"), exist_ok=True)
+    manifest = []
+    t0 = time.time()
+
+    # ---- HLO artifacts (L1 kernel inside L2 step functions) ----------
+    f32 = jnp.float32
+    spec = lambda *s: jax.ShapeDtypeStruct(s, f32)
+    n = dump_hlo(
+        model.lif_fc_step,
+        (spec(8, 128), spec(128, 128), spec(8, 128),
+         spec(1), spec(1)),
+        os.path.join(out_dir, "lif_step.hlo.txt"),
+    )
+    manifest.append(f"lif_step.hlo.txt {n}B (pallas fused LIF step 8x128x128)")
+
+    # dense SRNN baseline step (what the GPU would run per timestep)
+    def srnn_step(x, w1, w2, v, a, s_prev, vo):
+        from .kernels import ref
+        inp = jnp.concatenate([x, s_prev], axis=-1)
+        i = inp @ w1
+        v_new = 0.9 * v + i
+        a_dec = 0.97 * a
+        spk = (v_new >= 1.0 + a_dec).astype(f32)
+        v_new = v_new * (1.0 - spk)
+        a_new = a_dec + 1.8 * spk
+        vo_new = 0.9 * vo + spk @ w2
+        return (v_new, a_new, spk, vo_new)
+
+    n = dump_hlo(
+        srnn_step,
+        (spec(4), spec(68, 64), spec(64, 6), spec(64), spec(64), spec(64), spec(6)),
+        os.path.join(out_dir, "srnn_step.hlo.txt"),
+    )
+    manifest.append(f"srnn_step.hlo.txt {n}B")
+
+    def bci_step(x, w1, w2, w3, v1, v2, vo):
+        i1 = x @ w1
+        v1n = 0.5 * v1 + i1
+        s1 = (v1n >= 1.0).astype(f32)
+        v1n = v1n * (1.0 - s1)
+        i2 = s1 @ w2
+        v2n = 0.5 * v2 + i2
+        s2 = (v2n >= 1.0).astype(f32)
+        v2n = v2n * (1.0 - s2)
+        vo_new = 0.9 * vo + s2 @ w3
+        return (v1n, v2n, vo_new)
+
+    nmid = 128
+    n = dump_hlo(
+        bci_step,
+        (spec(128), spec(128, nmid), spec(nmid, nmid), spec(nmid, 4),
+         spec(nmid), spec(nmid), spec(4)),
+        os.path.join(out_dir, "bci_step.hlo.txt"),
+    )
+    manifest.append(f"bci_step.hlo.txt {n}B")
+
+    # ---- training (STBP) ---------------------------------------------
+    key = jax.random.PRNGKey(7)
+
+    # ECG SRNN — heterogeneous (ALIF) and homogeneous ablation
+    n_train = 8 if quick else 24
+    ecg_x, ecg_y = datasets.ecg_dataset(n_train, seed=42)
+    for het, stem in [(True, "ecg_srnn"), (False, "ecg_srnn_homog")]:
+        params = model.srnn_init(key)
+        fwd = lambda p, x, het=het: model.srnn_forward(p, x, heterogeneous=het)
+        loss = model.softmax_ce_batched(fwd)
+        # ALIF's adaptive threshold sharpens the loss landscape: smaller lr
+        params, losses = model.train(
+            loss, params, (ecg_x, ecg_y),
+            lr=0.004 if het else 0.01, epochs=1 if quick else 4, batch=4)
+        write_weights(os.path.join(out_dir, "weights", f"{stem}_w1.bin"), params["w1"])
+        write_weights(os.path.join(out_dir, "weights", f"{stem}_w2.bin"), params["w2"])
+        manifest.append(f"{stem}: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+    # export a small ECG test set
+    tx, ty = datasets.ecg_dataset(4, seed=777)
+    write_tensor(os.path.join(out_dir, "data", "ecg_test_x.bin"), tx)
+    write_tensor(os.path.join(out_dir, "data", "ecg_test_y.bin"), ty.astype(np.float32))
+
+    # SHD DH-SFNN — dendritic and homogeneous ablation
+    per = 2 if quick else 4
+    shd_x, shd_y = datasets.shd_dataset(per, seed=42)
+    for branches, stem in [(4, "shd_dhsnn"), (1, "shd_dhsnn_homog")]:
+        params = model.dhsnn_init(key, branches=branches)
+        fwd = lambda p, x, b=branches: model.dhsnn_forward(p, x, branches=b)
+        loss = model.softmax_ce_batched(fwd)
+        params, losses = model.train(
+            loss, params, (shd_x, shd_y),
+            lr=0.02, epochs=2 if quick else 6, batch=8)
+        # export in the Rust layout: [branches*input][output]
+        wb = np.asarray(params["wb"]).reshape(branches * 700, 64)
+        write_weights(os.path.join(out_dir, "weights", f"{stem}_w1.bin"), wb)
+        write_weights(os.path.join(out_dir, "weights", f"{stem}_w2.bin"), params["w2"])
+        manifest.append(f"{stem}: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+    tsx, tsy = datasets.shd_dataset(1, seed=777)
+    write_tensor(os.path.join(out_dir, "data", "shd_test_x.bin"), tsx)
+    write_tensor(os.path.join(out_dir, "data", "shd_test_y.bin"), tsy.astype(np.float32))
+
+    # BCI — train on day 0, test days 1..3 (cross-day protocol)
+    masks = model.bci_masks()
+    bx, by = datasets.bci_day_dataset(0, 4 if quick else 10, seed=42)
+    params = model.bci_init(key)
+    fwd = lambda p, x: model.bci_forward(p, x, masks)
+    loss = model.softmax_ce_batched(fwd)
+    params, losses = model.train(loss, params, (bx, by),
+                                 lr=0.01, epochs=2 if quick else 5, batch=8)
+    m1, m2 = masks
+    write_weights(os.path.join(out_dir, "weights", "bci_w1.bin"),
+                  np.asarray(params["w1"] * m1))
+    write_weights(os.path.join(out_dir, "weights", "bci_w2.bin"),
+                  np.asarray(params["w2"] * m2))
+    write_weights(os.path.join(out_dir, "weights", "bci_w3.bin"), params["w3"])
+    manifest.append(f"bci: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    for day in range(4):
+        dx, dy = datasets.bci_day_dataset(day, 5, seed=777)
+        write_tensor(os.path.join(out_dir, "data", f"bci_day{day}_x.bin"), dx)
+        write_tensor(os.path.join(out_dir, "data", f"bci_day{day}_y.bin"),
+                     dy.astype(np.float32))
+
+    manifest.append(f"total build time {time.time() - t0:.1f}s")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print("\n".join(manifest))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="minimal training (CI smoke)")
+    args = ap.parse_args()
+    build(args.out, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

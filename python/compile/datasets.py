@@ -1,0 +1,140 @@
+"""Synthetic datasets for L2 training — the same distributions as
+`rust/src/datasets/` (QTDB-like ECG, SHD-like spikes, M1-like BCI with
+per-day drift). See DESIGN.md "Substitutions"."""
+
+import numpy as np
+
+# ---------------------------------------------------------------- ECG --
+ECG_T = 1301
+ECG_CH = 4
+ECG_CLASSES = 6
+
+
+def _bump(t, c, w, a):
+    d = (t - c) / w
+    return a * np.exp(-0.5 * d * d)
+
+
+def ecg_sample(rng):
+    beats = 4
+    per = ECG_T // beats
+    l1, l2, lab = [], [], []
+    for _ in range(beats):
+        j = lambda x: x + (rng.random() - 0.5) * 0.02
+        p_end, q_start, r_peak, s_end, t_end = (
+            j(0.12), j(0.20), j(0.28), j(0.36), j(0.60))
+        amp_r = 2.0 + rng.random() * 0.8
+        amp_p = 0.25 + rng.random() * 0.1
+        amp_t = 0.5 + rng.random() * 0.2
+        t = np.arange(per) / per
+        v = (_bump(t, 0.06, 0.03, amp_p) + _bump(t, r_peak, 0.015, amp_r)
+             - _bump(t, (r_peak + s_end) / 2 + 0.03, 0.012, amp_r * 0.3)
+             + _bump(t, (s_end + t_end) / 2 + 0.05, 0.05, amp_t))
+        l1.append(v + (rng.random(per) - 0.5) * 0.04)
+        l2.append(0.7 * v + _bump(t, r_peak, 0.02, 0.5)
+                  + (rng.random(per) - 0.5) * 0.04)
+        bands = np.full(per, 5)
+        bands[t < t_end] = 4
+        bands[t < s_end] = 3
+        bands[t < r_peak] = 2
+        bands[t < q_start] = 1
+        bands[t < p_end] = 0
+        lab.append(bands)
+    l1 = np.concatenate(l1)[:ECG_T]
+    l2 = np.concatenate(l2)[:ECG_T]
+    lab = np.concatenate(lab)[:ECG_T]
+    pad = ECG_T - len(l1)
+    if pad > 0:
+        l1 = np.pad(l1, (0, pad))
+        l2 = np.pad(l2, (0, pad))
+        lab = np.pad(lab, (0, pad), constant_values=5)
+    spikes = np.zeros((ECG_T, ECG_CH), np.float32)
+    for ci, sig in enumerate([l1, l2]):
+        level = sig[0]
+        for t in range(ECG_T):
+            while sig[t] >= level + 0.04:
+                spikes[t, 2 * ci] = 1.0
+                level += 0.04
+            while sig[t] <= level - 0.04:
+                spikes[t, 2 * ci + 1] = 1.0
+                level -= 0.04
+    return spikes, lab.astype(np.int32)
+
+
+def ecg_dataset(n, seed):
+    rng = np.random.default_rng(seed)
+    xs, ys = zip(*[ecg_sample(rng) for _ in range(n)])
+    return np.stack(xs), np.stack(ys)
+
+
+# ---------------------------------------------------------------- SHD --
+SHD_CH = 700
+SHD_CLASSES = 20
+SHD_T = 100
+
+
+def shd_sample(cls, rng):
+    spikes = np.zeros((SHD_T, SHD_CH), np.float32)
+    base = 35 * (cls % 10) + 20
+    lang = cls // 10
+    for center, onset, strength in [
+        (base, 10 + 3 * lang, 1.0),
+        (base + 150, 30 + 5 * (cls % 4), 0.8),
+        (base + 320 + 10 * lang, 55 + 2 * (cls % 7), 0.6),
+    ]:
+        for dc in range(40):
+            ch = (center + dc) % SHD_CH
+            reps = 1 + (rng.random() < strength * 0.6)
+            for _ in range(reps):
+                t = int(np.clip(onset + rng.normal() * 4 + dc * 0.15, 0, SHD_T - 1))
+                if rng.random() < strength:
+                    spikes[t, ch] = 1.0
+    noise_t = rng.random(SHD_T) < 0.3
+    spikes[noise_t, rng.integers(0, SHD_CH, noise_t.sum())] = 1.0
+    return spikes
+
+
+def shd_dataset(per_class, seed):
+    rng = np.random.default_rng(seed)
+    xs, ys = [], []
+    for cls in range(SHD_CLASSES):
+        for _ in range(per_class):
+            xs.append(shd_sample(cls, rng))
+            ys.append(cls)
+    return np.stack(xs), np.array(ys, np.int32)
+
+
+# ---------------------------------------------------------------- BCI --
+BCI_CH = 128
+BCI_BINS = 50
+BCI_CLASSES = 4
+BCI_DAYS = 8
+
+
+def bci_sample(cls, day, rng):
+    ch = np.arange(BCI_CH)
+    pref = cls * np.pi / 2
+    tuning = np.maximum(
+        np.sin(ch * 0.197) * np.cos(pref) + np.cos(ch * 0.311) * np.sin(pref),
+        -0.8)
+    x = (day * 131 + ch * 17).astype(np.float64)
+    gain = 1.0 + 0.25 * (day / BCI_DAYS) * np.sin(x * 0.7)
+    offset = 0.15 * (day / BCI_DAYS) * np.cos(x * 1.3)
+    out = np.zeros((BCI_BINS, BCI_CH), np.float32)
+    for b in range(BCI_BINS):
+        t = b / BCI_BINS
+        env = np.exp(-8.0 * (t - 0.45) ** 2)
+        r = (1.0 + tuning) * env * gain + offset
+        out[b] = np.maximum(
+            r + rng.normal(size=BCI_CH) * 0.25 * np.sqrt(np.abs(r) + 0.2), 0.0)
+    return out
+
+
+def bci_day_dataset(day, trials, seed):
+    rng = np.random.default_rng(seed ^ (day * 0x9E3779B9) & 0xFFFFFFFF)
+    xs, ys = [], []
+    for cls in range(BCI_CLASSES):
+        for _ in range(trials):
+            xs.append(bci_sample(cls, day, rng))
+            ys.append(cls)
+    return np.stack(xs), np.array(ys, np.int32)

@@ -1,0 +1,139 @@
+"""Layer-1: the fused LIF-step Pallas kernel.
+
+The SNN hot-spot on the dense (GPU-baseline) path is one timestep of a
+fully-connected spiking layer:
+
+    I = S @ W            # synaptic matmul        (MXU)
+    v' = tau * v + I     # leak + integrate       (VPU, fused)
+    s' = v' >= vth       # threshold              (VPU)
+    v'' = v' * (1 - s')  # reset                  (VPU)
+
+Hardware adaptation (paper's RTX 3090 -> TPU-shaped kernel): instead of
+three separate CUDA kernels (matmul, leak-add, compare) round-tripping
+HBM, the whole step is ONE Pallas kernel: the `(block_b, block_n)` output
+tile lives in VMEM across all four ops, the matmul accumulates over the
+K (fan-in) grid dimension into that resident tile, and the
+leak/threshold/reset run on it in-register on the final K step. BlockSpec
+expresses the HBM->VMEM schedule the paper's baseline left to the CUDA
+runtime.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated against `ref.py` and real-TPU
+efficiency is estimated analytically (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_B = 8
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _lif_kernel(s_ref, w_ref, v_ref, tau_ref, vth_ref, v_out_ref, s_out_ref, *, nsteps_k):
+    """One (block_b, block_n) tile of the fused LIF step.
+
+    Grid = (B/bb, N/bn, K/bk); K is the reduction (fan-in) dimension.
+    The output tile is accumulated in place across K steps; the
+    leak/threshold/reset epilogue runs on the last K step only.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        v_out_ref[...] = jnp.zeros_like(v_out_ref)
+
+    # accumulate the synaptic current tile (MXU on real hardware)
+    v_out_ref[...] += jnp.dot(
+        s_ref[...], w_ref[...], preferred_element_type=v_out_ref.dtype
+    )
+
+    @pl.when(k == nsteps_k - 1)
+    def _epilogue():
+        tau = tau_ref[0]
+        vth = vth_ref[0]
+        v_new = tau * v_ref[...] + v_out_ref[...]
+        spk = (v_new >= vth).astype(v_out_ref.dtype)
+        v_out_ref[...] = v_new * (1.0 - spk)
+        s_out_ref[...] = spk
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_n", "block_k")
+)
+def lif_step(
+    spikes,
+    weights,
+    v,
+    tau,
+    vth,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+):
+    """Fused LIF layer step.
+
+    Args:
+      spikes:  (B, K) float — presynaptic spikes (0/1) or FP inputs.
+      weights: (K, N) float.
+      v:       (B, N) float — membrane potentials.
+      tau, vth: scalars (passed as shape-(1,) arrays).
+    Returns:
+      (v_next, out_spikes), both (B, N).
+    """
+    b, k = spikes.shape
+    k2, n = weights.shape
+    assert k == k2, (spikes.shape, weights.shape)
+    bb = min(block_b, b)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    assert b % bb == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({b},{k},{n}) not divisible by blocks ({bb},{bk},{bn})"
+    )
+    nsteps_k = k // bk
+    grid = (b // bb, n // bn, nsteps_k)
+    tau = jnp.asarray(tau, spikes.dtype).reshape((1,))
+    vth = jnp.asarray(vth, spikes.dtype).reshape((1,))
+
+    kernel = functools.partial(_lif_kernel, nsteps_k=nsteps_k)
+    v_next, out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bb, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bb, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), spikes.dtype),
+            jax.ShapeDtypeStruct((b, n), spikes.dtype),
+        ],
+        interpret=True,
+    )(spikes, weights, v, tau, vth)
+    return v_next, out
+
+
+def vmem_footprint_bytes(block_b, block_n, block_k, dtype_bytes=4):
+    """Estimated VMEM residency of one grid step (perf-model input):
+    spike tile + weight tile + v tile + 2 output tiles."""
+    return dtype_bytes * (
+        block_b * block_k + block_k * block_n + 3 * block_b * block_n
+    )
+
+
+def mxu_utilization_estimate(block_b, block_n, block_k):
+    """Fraction of 128x128 MXU lanes a (bb, bk)x(bk, bn) tile keeps busy."""
+    eff_m = min(block_b, 128) / 128.0
+    eff_n = min(block_n, 128) / 128.0
+    eff_k = min(block_k, 128) / 128.0
+    return eff_m * eff_n * eff_k

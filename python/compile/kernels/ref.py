@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground
+truth the pytest suite checks `lif_pallas.lif_step` against, and the
+reference implementation used by the L2 training path (fast under jit,
+no interpret-mode overhead)."""
+
+import jax.numpy as jnp
+
+
+def lif_step_ref(spikes, weights, v, tau, vth):
+    """One fused LIF step: I = S@W; v' = tau v + I; spike/reset."""
+    i = spikes @ weights
+    v_new = tau * v + i
+    spk = (v_new >= vth).astype(v.dtype)
+    return v_new * (1.0 - spk), spk
+
+
+def alif_step_ref(spikes, weights, v, a, tau, vth, rho, beta):
+    """Adaptive-threshold LIF (the ECG SRNN hidden layer)."""
+    i = spikes @ weights
+    v_new = tau * v + i
+    a_dec = rho * a
+    spk = (v_new >= vth + a_dec).astype(v.dtype)
+    return v_new * (1.0 - spk), a_dec + beta * spk, spk
+
+
+def readout_step_ref(spikes, weights, v, tau):
+    """Non-firing readout: leaky integration, emits the membrane."""
+    v_new = tau * v + spikes @ weights
+    return v_new
+
+
+def dhlif_step_ref(spikes, weights_b, b_state, v, tau_b, tau_s, vth):
+    """Dendritic-heterogeneity LIF: per-branch integration then soma.
+
+    Args:
+      spikes:    (B, K)
+      weights_b: (BR, K, N) per-branch weights
+      b_state:   (BR, B, N) branch states
+      v:         (B, N) soma membrane
+      tau_b:     (BR,) branch decays; tau_s scalar soma decay
+    """
+    i = jnp.einsum("bk,rkn->rbn", spikes, weights_b)
+    b_new = tau_b[:, None, None] * b_state + i
+    v_new = tau_s * v + b_new.sum(axis=0)
+    spk = (v_new >= vth).astype(v.dtype)
+    return b_new, v_new * (1.0 - spk), spk

@@ -1,0 +1,211 @@
+"""Layer-2: JAX models of the paper's SNN workloads.
+
+Two roles:
+ 1. the dense **GPU-baseline** step functions (calling the Layer-1
+    Pallas kernel) that `aot.py` lowers to HLO-text artifacts for the
+    Rust PJRT runtime;
+ 2. the **STBP training** path (surrogate-gradient BPTT, paper §II-A)
+    that produces the deployed weights — pure-jnp dynamics identical to
+    the chip programs (LIF / ALIF / DH-LIF / non-firing readout).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.lif_pallas import lif_step as lif_step_pallas
+
+
+# ----------------------------------------------------------------------
+# surrogate gradient (STBP, Wu et al.)
+# ----------------------------------------------------------------------
+
+@jax.custom_vjp
+def spike_fn(x):
+    return (x >= 0.0).astype(x.dtype)
+
+
+def _spike_fwd(x):
+    return spike_fn(x), x
+
+
+def _spike_bwd(x, g):
+    # piecewise-linear surrogate: max(0, 1 - |x|)
+    return (g * jnp.maximum(0.0, 1.0 - jnp.abs(x)),)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+# ----------------------------------------------------------------------
+# baseline step (AOT target): one dense LIF layer step via the kernel
+# ----------------------------------------------------------------------
+
+def lif_fc_step(spikes, weights, v, tau, vth):
+    """The artifact `lif_step.hlo.txt`: the Pallas kernel lowered into
+    the same HLO as the surrounding jax function."""
+    v2, s2 = lif_step_pallas(spikes, weights, v, tau, vth)
+    return (v2, s2)
+
+
+# ----------------------------------------------------------------------
+# ECG SRNN (ALIF hidden + per-step readout), trainable
+# ----------------------------------------------------------------------
+
+def srnn_forward(params, x, heterogeneous=True,
+                 tau=0.9, vth=1.0, rho=0.97, beta=0.3):
+    """x: (T, 4) spikes -> per-step logits (T, 6)."""
+    w1, w2 = params["w1"], params["w2"]  # (4+64, 64), (64, 6)
+    nh = w1.shape[1]
+
+    def step(carry, xt):
+        v, a, s_prev, vo = carry
+        inp = jnp.concatenate([xt, s_prev])
+        i = inp @ w1
+        v_new = tau * v + i
+        thr = vth + (a if heterogeneous else 0.0)
+        s = spike_fn(v_new - thr)
+        v_new = v_new * (1.0 - s)
+        a_new = rho * a + beta * s if heterogeneous else a
+        vo_new = tau * vo + s @ w2
+        return (v_new, a_new, s, vo_new), vo_new
+
+    init = (jnp.zeros(nh), jnp.zeros(nh), jnp.zeros(nh), jnp.zeros(w2.shape[1]))
+    _, logits = jax.lax.scan(step, init, x)
+    return logits
+
+
+def srnn_init(key, nh=64):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (4 + nh, nh)) * 0.35,
+        "w2": jax.random.normal(k2, (nh, 6)) * 0.3,
+    }
+
+
+# ----------------------------------------------------------------------
+# SHD DH-SFNN (dendritic hidden), trainable
+# ----------------------------------------------------------------------
+
+DH_TAUS = jnp.array([0.2, 0.5, 0.8, 0.95])
+
+
+def dhsnn_forward(params, x, branches=4, tau_s=0.9, vth=1.0, tau_o=0.9):
+    """x: (T, 700) spikes -> summed readout logits (20,)."""
+    wb, w2 = params["wb"], params["w2"]  # (BR, 700, 64), (64, 20)
+    nh = wb.shape[2]
+    taus = DH_TAUS[:branches]
+
+    def step(carry, xt):
+        b, v, vo = carry
+        i = jnp.einsum("k,rkn->rn", xt, wb)
+        b_new = taus[:, None] * b + i
+        v_new = tau_s * v + b_new.sum(0)
+        s = spike_fn(v_new - vth)
+        v_new = v_new * (1.0 - s)
+        vo_new = tau_o * vo + s @ w2
+        return (b_new, v_new, vo_new), vo_new
+
+    init = (jnp.zeros((branches, nh)), jnp.zeros(nh), jnp.zeros(w2.shape[1]))
+    _, vos = jax.lax.scan(step, init, x)
+    return vos.mean(0)
+
+
+def dhsnn_init(key, branches=4, nh=64):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wb": jax.random.normal(k1, (branches, 700, nh)) * 0.05,
+        "w2": jax.random.normal(k2, (nh, 20)) * 0.3,
+    }
+
+
+# ----------------------------------------------------------------------
+# BCI sub-path network (sparse masks match the Rust deployment)
+# ----------------------------------------------------------------------
+
+def bci_masks(subpaths=16, nin=128):
+    import numpy as np
+    nmid = subpaths * 8
+    m1 = np.zeros((nin, nmid), np.float32)
+    for t in range(nmid):
+        for k in range(8):
+            m1[(t * 8 + k * 13) % nin, t] = 1.0
+    m2 = np.zeros((nmid, nmid), np.float32)
+    for t in range(nmid):
+        sp = t // 8
+        m2[sp * 8:(sp + 1) * 8, t] = 1.0
+    return jnp.array(m1), jnp.array(m2)
+
+
+def bci_forward(params, x, masks, tau=0.5, vth=1.0, tau_o=0.9):
+    """x: (50, 128) rates -> summed logits (4,)."""
+    w1, w2, w3 = params["w1"], params["w2"], params["w3"]
+    m1, m2 = masks
+    nmid = w1.shape[1]
+
+    def step(carry, xt):
+        v1, v2, vo = carry
+        i1 = xt @ (w1 * m1)
+        v1n = tau * v1 + i1
+        s1 = spike_fn(v1n - vth)
+        v1n = v1n * (1.0 - s1)
+        i2 = s1 @ (w2 * m2)
+        v2n = tau * v2 + i2
+        s2 = spike_fn(v2n - vth)
+        v2n = v2n * (1.0 - s2)
+        vo_new = tau_o * vo + s2 @ w3
+        return (v1n, v2n, vo_new), vo_new
+
+    init = (jnp.zeros(nmid), jnp.zeros(nmid), jnp.zeros(w3.shape[1]))
+    _, vos = jax.lax.scan(step, init, x)
+    return vos.mean(0)
+
+
+def bci_init(key, subpaths=16):
+    nmid = subpaths * 8
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": jax.random.normal(k1, (128, nmid)) * 0.1 + 0.08,
+        "w2": jax.random.normal(k2, (nmid, nmid)) * 0.1 + 0.2,
+        "w3": jax.random.normal(k3, (nmid, 4)) * 0.1,
+    }
+
+
+# ----------------------------------------------------------------------
+# shared training loop (STBP = surrogate BPTT + softmax CE)
+# ----------------------------------------------------------------------
+
+def train(loss_fn, params, data, lr=0.02, epochs=4, batch=8, seed=0):
+    import numpy as np
+    xs, ys = data
+    n = len(xs)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    rng = np.random.default_rng(seed)
+    losses = []
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            bx = jnp.array(xs[order[i:i + batch]])
+            by = jnp.array(ys[order[i:i + batch]])
+            loss, g = grad_fn(params, bx, by)
+            params = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params, g)
+            losses.append(float(loss))
+    return params, losses
+
+
+def ce(logits, label, n_classes):
+    logp = jax.nn.log_softmax(logits)
+    return -logp[label] if logits.ndim == 1 else -logp[jnp.arange(len(label)), label].mean()
+
+
+def softmax_ce_batched(forward):
+    """Loss over a batch of (x, y) with per-sample forward()."""
+    def loss(params, bx, by):
+        logits = jax.vmap(lambda x: forward(params, x))(bx)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        if logp.ndim == 3:  # per-timestep labels (ECG)
+            return -jnp.take_along_axis(logp, by[..., None], -1).mean()
+        return -jnp.take_along_axis(logp, by[:, None], -1).mean()
+    return loss

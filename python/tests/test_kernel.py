@@ -1,0 +1,130 @@
+"""L1 correctness: the Pallas fused-LIF kernel vs the pure-jnp oracle —
+hypothesis sweeps shapes/block sizes/parameters (the CORE correctness
+signal for the kernel), plus targeted edge cases."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lif_pallas import (
+    lif_step, mxu_utilization_estimate, vmem_footprint_bytes)
+from compile.kernels.ref import lif_step_ref, alif_step_ref, dhlif_step_ref
+
+
+def run_both(s, w, v, tau, vth, **blocks):
+    v1, o1 = lif_step(jnp.array(s), jnp.array(w), jnp.array(v), tau, vth, **blocks)
+    v2, o2 = lif_step_ref(jnp.array(s), jnp.array(w), jnp.array(v), tau, vth)
+    return np.asarray(v1), np.asarray(o1), np.asarray(v2), np.asarray(o2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    k=st.sampled_from([16, 64, 128, 256]),
+    n=st.sampled_from([16, 64, 128]),
+    tau=st.floats(0.0, 1.0),
+    vth=st.floats(0.2, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_across_shapes(b, k, n, tau, vth, seed):
+    rng = np.random.default_rng(seed)
+    s = (rng.random((b, k)) < 0.15).astype(np.float32)
+    w = rng.normal(0, 0.2, (k, n)).astype(np.float32)
+    v = rng.normal(0, 0.4, (b, n)).astype(np.float32)
+    v1, o1, v2, o2 = run_both(s, w, v, tau, vth)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-5)
+    # spikes may flip only where v is within float eps of the threshold
+    disagree = (o1 != o2)
+    if disagree.any():
+        margin = np.abs((tau * v + s @ w) - vth)
+        assert margin[disagree].max() < 1e-4
+
+
+@pytest.mark.parametrize("blocks", [
+    dict(block_b=1, block_n=16, block_k=16),
+    dict(block_b=8, block_n=64, block_k=32),
+    dict(block_b=4, block_n=128, block_k=128),
+])
+def test_block_shapes_are_numerically_equivalent(blocks):
+    rng = np.random.default_rng(0)
+    b, k, n = 8, 128, 128
+    s = (rng.random((b, k)) < 0.1).astype(np.float32)
+    w = rng.normal(0, 0.1, (k, n)).astype(np.float32)
+    v = rng.normal(0, 0.3, (b, n)).astype(np.float32)
+    v1, o1, v2, o2 = run_both(s, w, v, 0.9, 1.0, **blocks)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-5)
+    assert (o1 == o2).all()
+
+
+def test_zero_input_pure_decay():
+    b, k, n = 2, 16, 16
+    s = np.zeros((b, k), np.float32)
+    w = np.ones((k, n), np.float32)
+    v = np.full((b, n), 0.5, np.float32)
+    v1, o1, v2, o2 = run_both(s, w, v, 0.5, 1.0)
+    np.testing.assert_allclose(v1, 0.25, rtol=1e-6)
+    assert o1.sum() == 0
+
+
+def test_all_spike_reset():
+    b, k, n = 2, 16, 16
+    s = np.ones((b, k), np.float32)
+    w = np.full((k, n), 0.2, np.float32)  # I = 3.2 >= vth
+    v = np.zeros((b, n), np.float32)
+    v1, o1, _, _ = run_both(s, w, v, 0.9, 1.0)
+    assert (o1 == 1).all()
+    assert (v1 == 0).all(), "reset must zero the membrane"
+
+
+def test_multi_step_trajectory_matches_ref():
+    rng = np.random.default_rng(3)
+    b, k, n = 4, 64, 64
+    w = rng.normal(0, 0.3, (k, n)).astype(np.float32)
+    vk = np.zeros((b, n), np.float32)
+    vr = jnp.zeros((b, n))
+    for t in range(10):
+        s = (rng.random((b, k)) < 0.2).astype(np.float32)
+        vk, ok = lif_step(jnp.array(s), jnp.array(w), jnp.array(vk), 0.8, 1.0)
+        vr, orf = lif_step_ref(jnp.array(s), jnp.array(w), vr, 0.8, 1.0)
+        np.testing.assert_allclose(np.asarray(vk), np.asarray(vr),
+                                   rtol=1e-4, atol=1e-4, err_msg=f"t={t}")
+        assert (np.asarray(ok) == np.asarray(orf)).all(), f"t={t}"
+        vk = np.asarray(vk)
+
+
+def test_perf_model_helpers():
+    # structural sanity of the TPU perf estimators used in EXPERIMENTS §Perf
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(8, 128, 128) == pytest.approx(8 / 128)
+    small = vmem_footprint_bytes(8, 128, 128)
+    big = vmem_footprint_bytes(8, 256, 256)
+    assert big > small
+    assert small < 16 * 1024 * 1024, "tile must fit VMEM"
+
+
+def test_alif_ref_adapts_threshold():
+    rng = np.random.default_rng(1)
+    s = jnp.array((rng.random((1, 8)) < 1.0).astype(np.float32))
+    w = jnp.full((8, 4), 0.5)
+    v = jnp.zeros((1, 4))
+    a = jnp.zeros((1, 4))
+    v, a, spk = alif_step_ref(s, w, v, a, 0.9, 1.0, 0.97, 1.8)
+    assert spk.sum() == 4  # I = 4.0 fires everything
+    assert (np.asarray(a) == 1.8).all()
+    # next step: threshold raised; same input no longer guaranteed to fire
+    v2, a2, spk2 = alif_step_ref(s, w, v, a, 0.9, 1.0, 0.97, 1.8)
+    assert float(a2.min()) > 1.0
+
+
+def test_dhlif_ref_branch_heterogeneity():
+    s = jnp.ones((1, 8))
+    wb = jnp.full((2, 8, 4), 0.1)
+    b = jnp.zeros((2, 1, 4))
+    v = jnp.zeros((1, 4))
+    taus = jnp.array([0.9, 0.1])
+    b1, v1, _ = dhlif_step_ref(s, wb, b, v, taus, 0.5, 10.0)
+    b2, v2, _ = dhlif_step_ref(jnp.zeros((1, 8)), wb, b1, v1, taus, 0.5, 10.0)
+    # slow branch retains 0.9 of its charge, fast branch only 0.1
+    np.testing.assert_allclose(np.asarray(b2[0]), 0.9 * np.asarray(b1[0]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(b2[1]), 0.1 * np.asarray(b1[1]), rtol=1e-6)

@@ -1,0 +1,85 @@
+"""L2 model tests: shapes, gradient flow through the surrogate, training
+actually reduces loss on a micro-dataset, and HLO-text lowering works."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import datasets, model
+from compile.aot import to_hlo_text
+
+
+def test_srnn_shapes_and_gradients():
+    key = jax.random.PRNGKey(0)
+    params = model.srnn_init(key)
+    x = jnp.zeros((50, 4)).at[::5, 0].set(1.0)
+    logits = model.srnn_forward(params, x)
+    assert logits.shape == (50, 6)
+
+    def loss(p):
+        return model.srnn_forward(p, x).sum()
+
+    g = jax.grad(loss)(params)
+    assert float(jnp.abs(g["w1"]).sum()) > 0, "surrogate gradient is dead"
+
+
+def test_homogeneous_srnn_differs_from_alif():
+    key = jax.random.PRNGKey(1)
+    params = model.srnn_init(key)
+    x = jnp.ones((30, 4))
+    het = model.srnn_forward(params, x, heterogeneous=True)
+    hom = model.srnn_forward(params, x, heterogeneous=False)
+    assert not np.allclose(np.asarray(het), np.asarray(hom))
+
+
+def test_dhsnn_forward_and_branch_effect():
+    key = jax.random.PRNGKey(2)
+    params = model.dhsnn_init(key, branches=4)
+    x = jnp.zeros((40, 700)).at[3, :50].set(1.0)
+    out = model.dhsnn_forward(params, x, branches=4)
+    assert out.shape == (20,)
+
+
+def test_bci_masks_match_rust_pattern():
+    m1, m2 = model.bci_masks(subpaths=16)
+    assert m1.shape == (128, 128)
+    # each mid unit reads exactly 8 channels (t*8 + k*13 collisions aside)
+    counts = np.asarray(m1.sum(0))
+    assert counts.max() <= 8
+    assert counts.min() >= 1
+
+
+def test_training_reduces_loss_micro():
+    xs, ys = datasets.shd_dataset(1, seed=3)
+    params = model.dhsnn_init(jax.random.PRNGKey(4), branches=4)
+    fwd = lambda p, x: model.dhsnn_forward(p, x)
+    loss = model.softmax_ce_batched(fwd)
+    _, losses = model.train(loss, params, (xs, ys), lr=0.02, epochs=3, batch=4)
+    assert losses[-1] < losses[0], f"{losses[0]} -> {losses[-1]}"
+
+
+def test_datasets_statistics():
+    xs, ys = datasets.ecg_dataset(2, seed=1)
+    assert xs.shape == (2, 1301, 4)
+    assert set(np.unique(ys)) <= set(range(6))
+    rate = xs.mean()
+    assert 0.01 < rate < 0.5
+
+    sx, sy = datasets.shd_dataset(1, seed=1)
+    assert sx.shape == (20, 100, 700)
+    assert 0.001 < sx.mean() < 0.05  # paper: ~1.2% input rate
+
+    bx, by = datasets.bci_day_dataset(0, 2, seed=1)
+    assert bx.shape == (8, 50, 128)
+    assert (bx >= 0).all()
+
+
+def test_hlo_text_lowering_includes_kernel():
+    f32 = jnp.float32
+    spec = lambda *s: jax.ShapeDtypeStruct(s, f32)
+    lowered = jax.jit(model.lif_fc_step).lower(
+        spec(8, 128), spec(128, 128), spec(8, 128), spec(1), spec(1))
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text and "dot" in text, "matmul missing from HLO"
+    # text-format artifact must be parseable-looking (no serialized proto)
+    assert text.lstrip().startswith("HloModule")

@@ -1,0 +1,32 @@
+//! Fig 13c — power breakdown of TaiBai under a representative workload
+//! (paper: memory 70.3 % dominates).
+
+use taibai::apps;
+use taibai::bench::Table;
+use taibai::datasets::shd;
+use taibai::energy::EnergyModel;
+
+fn main() {
+    // representative workload: the SHD app (mixed sparse + FC traffic)
+    let mut d = apps::deploy_shd(true, 42);
+    for s in shd::dataset(1, 7).iter().take(6) {
+        d.reset_state();
+        d.run_spikes(s).expect("run");
+    }
+    let em = EnergyModel::default();
+    let e = em.energy(&d.chip.activity());
+
+    let mut t = Table::new(&["component", "share", "bar"]);
+    for (name, frac) in e.shares() {
+        let bar = "#".repeat((frac * 50.0).round() as usize);
+        t.row(&[name.into(), format!("{:.1}%", frac * 100.0), bar]);
+    }
+    t.print();
+    println!(
+        "\nmemory share {:.1}% (paper Fig 13c: 70.3% — 'the memory module \
+         (including the accessing memory process of the NCs and schedulers) \
+         consumes the most power')",
+        e.memory_share() * 100.0
+    );
+    assert!(e.memory_share() > 0.5, "memory must dominate");
+}

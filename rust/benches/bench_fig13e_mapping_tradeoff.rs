@@ -1,0 +1,79 @@
+//! Fig 13e — compiler-controlled mapping trade-off: sweeping the
+//! placement objective from minimize-cores to maximize-throughput on one
+//! SNN. Paper: cores 182 → 749 (×4) while energy efficiency drops
+//! 6190 → 3590 FPS/W (÷1.7). `--ablate` also compares zigzag-only vs
+//! +greedy/SA placement.
+
+use taibai::bench::Table;
+use taibai::chip::fast::{simulate, FastParams};
+use taibai::compiler::{partition, placement};
+use taibai::energy::EnergyModel;
+use taibai::model;
+use taibai::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let em = EnergyModel::default();
+    let net = model::blocks5_net(); // one mid-size SNN, like the paper
+    let rates = vec![0.13; net.layers.len()];
+
+    let mut t = Table::new(&["neurons/NC", "cores", "fps", "fps/W", "avg hops"]);
+    let mut first: Option<(usize, f64)> = None;
+    let mut last: Option<(usize, f64)> = None;
+
+    for npn in [256usize, 192, 128, 96, 64] {
+        let limits = partition::Limits { neurons_per_nc: npn, ..Default::default() };
+        let part = partition::partition(&net, &limits);
+        let traffic = placement::traffic_matrix(&net, &part, &rates, 0.13);
+        let cores = part.num_cores();
+        // placement quality feeds avg_hops into the analytic model
+        let cap = taibai::noc::NUM_CCS * taibai::topology::NCS_PER_CC;
+        let (hops, _cost) = if cores <= cap {
+            let init = placement::initial(cores);
+            let opt = placement::optimize(&traffic, init, 3000, 42);
+            (placement::avg_hops(&traffic, &opt), placement::cost(&traffic, &opt))
+        } else {
+            (4.0, 0.0) // multi-chip: pessimistic constant
+        };
+
+        let mut p = FastParams::default();
+        p.default_rate = 0.13;
+        p.nc_neuron_capacity = npn;
+        p.avg_hops = hops.max(0.5);
+        let r = simulate(&net, &p, &em);
+
+        t.row(&[
+            format!("{npn}"),
+            format!("{}", r.used_cores),
+            format!("{:.1}", r.fps),
+            format!("{:.1}", r.fps_per_w),
+            format!("{hops:.2}"),
+        ]);
+        if first.is_none() {
+            first = Some((r.used_cores, r.fps_per_w));
+        }
+        last = Some((r.used_cores, r.fps_per_w));
+    }
+    t.print();
+
+    let (c0, e0) = first.unwrap();
+    let (c1, e1) = last.unwrap();
+    println!(
+        "\ncores x{:.1} (paper: x4.1, 182→749); efficiency /{:.2} (paper: /1.7, 6190→3590)",
+        c1 as f64 / c0 as f64,
+        e0 / e1
+    );
+    assert!(c1 > c0, "throughput objective must use more cores");
+
+    if args.has("ablate") {
+        // placement ablation: zigzag vs optimized on the 128-npn point
+        let limits = partition::Limits { neurons_per_nc: 128, ..Default::default() };
+        let part = partition::partition(&net, &limits);
+        let traffic = placement::traffic_matrix(&net, &part, &rates, 0.13);
+        let zig = placement::initial(part.num_cores());
+        let h0 = placement::avg_hops(&traffic, &zig);
+        let opt = placement::optimize(&traffic, zig, 5000, 7);
+        let h1 = placement::avg_hops(&traffic, &opt);
+        println!("[ablation] placement: zigzag {h0:.2} hops -> +SA {h1:.2} hops");
+    }
+}

@@ -1,0 +1,61 @@
+//! Fig 14 — efficiency of the network-topology representation: per
+//! model, the cumulative storage of the four schemes (FC-unfolded
+//! baseline → +decoupled conv → +parallel send → +incremental FC), plus
+//! the ResNet18 skip-connection core comparison. Paper: 286–947×
+//! reduction; ResNet18 cores at 70.3 % of the duplicate-core method.
+
+use taibai::bench::Table;
+use taibai::model;
+use taibai::topology::storage::{skip_core_cost, storage, ALL_SCHEMES};
+
+fn main() {
+    let nets = [
+        model::vgg16(),
+        model::resnet18(),
+        model::plif_net(),
+        model::blocks5_net(),
+        model::resnet19(),
+    ];
+
+    let mut t = Table::new(&[
+        "model", "baseline MiB", "+conv decouple", "+parallel send",
+        "+incremental FC (ours)", "reduction",
+    ]);
+    for net in &nets {
+        let sizes: Vec<f64> = ALL_SCHEMES
+            .iter()
+            .map(|&s| storage(net, s).total_bits() as f64 / 8.0 / 1024.0 / 1024.0)
+            .collect();
+        let red = sizes[0] / sizes[3];
+        t.row(&[
+            net.name.clone(),
+            format!("{:.1}", sizes[0]),
+            format!("{:.1}", sizes[1]),
+            format!("{:.2}", sizes[2]),
+            format!("{:.2}", sizes[3]),
+            format!("{red:.0}x"),
+        ]);
+        assert!(
+            sizes.windows(2).all(|w| w[0] >= w[1]),
+            "{}: schemes not monotone",
+            net.name
+        );
+        // the paper's 286–947x band is for the wide-channel VGG/ResNet
+        // class; thin nets (16-channel 5Blocks) reduce less since the
+        // decoupling factor scales with cin*cout
+        let floor = if net.name.contains("5Blocks") { 20.0 } else { 100.0 };
+        assert!(red > floor, "{}: reduction {red:.0}x too small", net.name);
+    }
+    t.print();
+    println!("\n(paper: storage reduced 286–947x vs the FC-unfolded baseline)");
+
+    // skip connections: delayed-spike scheme vs relay/duplicate cores
+    let net = model::resnet18();
+    let (ours, dup) = skip_core_cost(&net, 2048);
+    println!(
+        "ResNet18 cores: ours {} vs duplicate-core {} = {:.1}% (paper: 70.3%)",
+        ours,
+        dup,
+        ours as f64 / dup as f64 * 100.0
+    );
+}

@@ -1,0 +1,61 @@
+//! Fig 15 — the three applications on the detailed engine: (a) accuracy
+//! incl. the homogeneous ablations, (b) power, (c) energy efficiency
+//! (FPS/W) vs the GPU baseline. Paper: power ≈0.34 W avg (~200× below
+//! GPU), efficiency 296–855× GPU.
+
+use taibai::apps;
+use taibai::bench::Table;
+
+fn main() {
+    let seed = 42;
+    let reports = [
+        apps::run_ecg_demo(2, seed),
+        apps::run_shd_demo(20, seed),
+        apps::run_bci_demo(8, seed),
+    ];
+
+    let mut t = Table::new(&[
+        "application", "accuracy", "cores", "TaiBai W", "GPU W",
+        "power ratio", "TaiBai fps/W", "GPU fps/W", "eff ratio",
+    ]);
+    for r in &reports {
+        let gpu_eff = r.gpu_fps / r.gpu.power_w;
+        t.row(&[
+            r.name.clone(),
+            format!("{:.1}%", r.accuracy * 100.0),
+            format!("{}", r.used_cores),
+            format!("{:.3}", r.power_w),
+            format!("{:.1}", r.gpu.power_w),
+            format!("{:.0}x", r.gpu.power_w / r.power_w),
+            format!("{:.1}", r.fps_per_w),
+            format!("{:.3}", gpu_eff),
+            format!("{:.0}x", r.fps_per_w / gpu_eff),
+        ]);
+        assert!(
+            r.gpu.power_w / r.power_w > 20.0,
+            "{}: power advantage collapsed",
+            r.name
+        );
+        assert!(r.fps_per_w > gpu_eff, "{}: efficiency advantage lost", r.name);
+    }
+    t.print();
+
+    let avg_p: f64 =
+        reports.iter().map(|r| r.power_w).sum::<f64>() / reports.len() as f64;
+    println!(
+        "\naverage TaiBai power {avg_p:.3} W (paper Fig 15b: ≈0.34 W, \
+         ~200x below GPU; efficiency 296–855x GPU)"
+    );
+
+    // ablations (Fig 15's TaiBai-homogeneous bars): heterogeneity on vs off
+    println!("\n[ablation] heterogeneous vs homogeneous deployments compile to:");
+    for (name, d_het, d_hom) in [
+        ("ECG", apps::deploy_ecg(true, seed), apps::deploy_ecg(false, seed)),
+        ("SHD", apps::deploy_shd(true, seed), apps::deploy_shd(false, seed)),
+    ] {
+        println!(
+            "  {name}: het {} cores / hom {} cores (same topology, different neuron programs)",
+            d_het.compiled.used_cores, d_hom.compiled.used_cores
+        );
+    }
+}

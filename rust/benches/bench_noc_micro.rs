@@ -1,0 +1,66 @@
+//! NoC microbenchmarks (perf-pass instrumentation): routing-mode costs,
+//! tag-filtered multicast overhead, and the simulator's own hot-loop
+//! throughput (events/s) — the §Perf "L3 should not be the bottleneck"
+//! check.
+
+use taibai::bench::{si, Table};
+use taibai::isa::assembler::assemble;
+use taibai::nc::{NcEvent, NeuronCore};
+use taibai::noc::router::Mesh;
+use taibai::noc::{cc_id, NUM_CCS};
+use taibai::topology::RouteMode;
+
+fn main() {
+    // routing cost table
+    let mut t = Table::new(&["mode", "deliveries", "traversals", "latency cyc"]);
+    let mut mesh = Mesh::new();
+    for (name, mode) in [
+        ("unicast corner->corner", RouteMode::Unicast { x: 11, y: 10 }),
+        ("multicast 4x4 region", RouteMode::Multicast { x0: 4, y0: 4, x1: 7, y1: 7 }),
+        ("multicast 8x8 region", RouteMode::Multicast { x0: 2, y0: 2, x1: 9, y1: 9 }),
+        ("broadcast", RouteMode::Broadcast),
+    ] {
+        let r = mesh.route(cc_id(0, 0), mode);
+        t.row(&[
+            name.into(),
+            format!("{}", r.deliveries.len()),
+            format!("{}", r.link_traversals),
+            format!("{}", r.latency),
+        ]);
+    }
+    t.print();
+
+    // mesh model throughput
+    let mut m = Mesh::new();
+    let secs = taibai::bench::time(2, 10, || {
+        for s in 0..NUM_CCS {
+            m.route(s, RouteMode::Unicast { x: 5, y: 5 });
+        }
+    });
+    println!("\nmesh route(): {} routes/s", si(NUM_CCS as f64 / secs));
+
+    // NC interpreter throughput on the dense INTEG loop
+    let integ = assemble(
+        "loop:\nrecv\nld.f r6, r2, 256\nlocacc.f r6, r1, 128\nb loop",
+    )
+    .unwrap();
+    let mut nc = NeuronCore::new(4096);
+    nc.load_integ(&integ);
+    let batch = 10_000;
+    let secs = taibai::bench::time(1, 5, || {
+        for i in 0..batch {
+            nc.push_event(NcEvent {
+                kind: taibai::isa::EventKind::Spike,
+                neuron: (i % 64) as u16,
+                axon: (i % 32) as u16,
+                data: 0,
+            });
+        }
+        nc.run(u64::MAX).unwrap();
+    });
+    println!(
+        "NC interpreter: {} events/s, {} instr/s",
+        si(batch as f64 / secs),
+        si(batch as f64 * 4.0 / secs)
+    );
+}

@@ -1,0 +1,76 @@
+//! Table III — chip characteristics: capacity accounting and peak-rate
+//! microbenchmarks on the behavioral model, printed next to the paper's
+//! numbers.
+
+use taibai::bench::{si, Table};
+use taibai::energy::{dense_sop_activity, EnergyModel, CLOCK_HZ};
+use taibai::noc::router::{inter_chip_cost, Mesh, CYCLES_PER_HOP};
+use taibai::noc::{cc_id, MESH_H, MESH_W, NUM_CCS};
+use taibai::topology::{RouteMode, NCS_PER_CC, MAX_FAN_IN};
+
+fn main() {
+    let em = EnergyModel::default();
+    let mut t = Table::new(&["characteristic", "TaiBai (paper)", "this model"]);
+
+    t.row(&["technology".into(), "28 nm".into(), "behavioral (28 nm-class constants)".into()]);
+    t.row(&["clock".into(), "500 MHz".into(), format!("{} MHz", CLOCK_HZ / 1e6)]);
+    t.row(&["cores".into(), "1056 (132 CC x 8 NC)".into(), format!("{} ({} CC x {} NC)", NUM_CCS * NCS_PER_CC, NUM_CCS, NCS_PER_CC)]);
+
+    // neuron capacity: state words per neuron (v + I + params share) over
+    // the NC memory budget
+    let words_per_neuron = 4;
+    let neurons = NUM_CCS * NCS_PER_CC * (taibai::nc::DEFAULT_DATA_WORDS / words_per_neuron / 32);
+    t.row(&["neurons".into(), "264K".into(), si(neurons as f64)]);
+
+    // synapse capacity: sparse mode (unique weights) vs conv multiplexing
+    let weight_words = NUM_CCS * NCS_PER_CC * 24 * 1024;
+    let conv_reuse = 36; // k^2 * typical spatial share
+    t.row(&[
+        "synapses".into(),
+        "6.95M ~ 297M".into(),
+        format!("{} ~ {}", si(weight_words as f64 / 3.2), si(weight_words as f64 * conv_reuse as f64 / 3.2)),
+    ]);
+    t.row(&["max fan-in/neuron".into(), "2K".into(), si(MAX_FAN_IN as f64)]);
+
+    // intra-chip spike-event bandwidth: each router forwards one flit per
+    // port per cycle when pipelined (5 ports: N/S/E/W/local)
+    let per_router = CLOCK_HZ * 5.0;
+    let intra = per_router * NUM_CCS as f64;
+    t.row(&["intra-chip SE/s".into(), "322 GSE/s".into(), format!("{}SE/s", si(intra))]);
+
+    // inter-chip: SerDes-limited through the 2*MESH_H edge proxies, one
+    // packet per SERDES_CYCLES-deep pipe each
+    let (_, lat) = inter_chip_cost(cc_id(0, 5), 1, cc_id(11, 5));
+    let _ = lat;
+    let serdes_rate =
+        (2 * MESH_H) as f64 * CLOCK_HZ / taibai::noc::router::SERDES_CYCLES as f64;
+    t.row(&["inter-chip SE/s".into(), "363 MSE/s".into(), format!("{}SE/s", si(serdes_rate))]);
+
+    // peak SOPs: one LOCACC retires per NC per cycle at full pipeline
+    // occupancy (the sustained *program* rate is ~4x lower; Table III
+    // quotes the peak, which is what we reproduce)
+    let gsops = NUM_CCS as f64 * NCS_PER_CC as f64 * CLOCK_HZ;
+    t.row(&["peak SOPs".into(), "528 GSOPS".into(), format!("{}SOPS", si(gsops))]);
+
+    // power at peak dense traffic
+    let a = dense_sop_activity((gsops / 1000.0) as u64);
+    let p = em.power_w(&a, (CLOCK_HZ / 1000.0) as u64);
+    t.row(&["power".into(), "1.83 W".into(), format!("{p:.2} W")]);
+    t.row(&["energy/SOP".into(), "2.61 pJ".into(), format!("{:.2} pJ", em.pj_per_sop(&a))]);
+    t.row(&["bit width".into(), "16 (FP16/INT16)".into(), "16 (FP16/INT16)".into()]);
+
+    t.print();
+
+    // microbench: routing throughput of the mesh model itself
+    let mut mesh = Mesh::new();
+    let secs = taibai::bench::time(1, 3, || {
+        for s in 0..NUM_CCS {
+            mesh.route(s, RouteMode::Unicast { x: (s % MESH_W) as u8, y: 0 });
+            mesh.route(s, RouteMode::Multicast { x0: 2, y0: 2, x1: 8, y1: 8 });
+        }
+    });
+    println!(
+        "\n[sim perf] mesh model: {:.1} Mpackets/s simulated",
+        (2 * NUM_CCS) as f64 / secs / 1e6
+    );
+}

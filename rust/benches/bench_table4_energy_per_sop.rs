@@ -1,0 +1,68 @@
+//! Table IV — energy per synaptic operation, measured on the detailed
+//! engine running a dense Type-2 workload, printed in the paper's
+//! cross-chip comparison context.
+
+use taibai::bench::Table;
+use taibai::compiler::{self, Options};
+use taibai::coordinator::Deployment;
+use taibai::datasets::SpikeSample;
+use taibai::energy::EnergyModel;
+use taibai::model::{Layer, NetDef, NeuronModel};
+
+fn main() {
+    // Dense two-layer FC net driven hard: every input channel spikes
+    // every step — a SOP-soaked workload for stable pJ/SOP measurement.
+    let mut net = NetDef::new("sop-soak", 20);
+    net.layers.push(Layer::Input { size: 64 });
+    net.layers.push(Layer::Fc {
+        input: 64,
+        output: 128,
+        neuron: NeuronModel::Lif { tau: 0.5, vth: 4.0 },
+    });
+    net.layers.push(Layer::Fc {
+        input: 128,
+        output: 16,
+        neuron: NeuronModel::Readout { tau: 0.9 },
+    });
+    let w1 = vec![0.05f32; 64 * 128];
+    let w2 = vec![0.05f32; 128 * 16];
+    let r = compiler::compile(&net, &vec![vec![], w1, w2], &Options::default()).unwrap();
+    let mut d = Deployment::new(r.compiled);
+
+    let spikes = vec![(0..64u16).collect::<Vec<_>>(); 20];
+    d.run_spikes(&SpikeSample { spikes, labels: vec![0] }).unwrap();
+
+    let em = EnergyModel::default();
+    let a = d.chip.activity();
+    let measured = em.pj_per_sop(&a);
+
+    let mut t = Table::new(&["processor", "tech", "precision", "programmability", "pJ/SOP"]);
+    // literature rows from the paper's Table IV
+    for (p, tech, prec, prog, e) in [
+        ("TrueNorth", "28nm", "1-bit", "LIF only", "26"),
+        ("Loihi", "14nm", "1-9 bit", "LIF+STDP", "23.6"),
+        ("Tianjic", "28nm", "8-bit", "LIF only", "1.54"),
+        ("PAICORE", "28nm", "1-bit", "LIF+STDP", "0.19"),
+        ("SpiNNaker", "130nm", "32-bit", "fully programmable", "11000"),
+        ("Loihi2", "7nm", "1-9 bit", "programmable", "7.8"),
+        ("Darwin3", "22nm", "1-16 bit", "programmable", "5.47"),
+        ("TaiBai (paper)", "28nm", "16-bit", "fully programmable", "2.61"),
+    ] {
+        t.row(&[p.into(), tech.into(), prec.into(), prog.into(), e.into()]);
+    }
+    t.row(&[
+        "TaiBai (this model)".into(),
+        "28nm-class".into(),
+        "16-bit".into(),
+        "fully programmable".into(),
+        format!("{measured:.2}"),
+    ]);
+    t.print();
+    println!(
+        "\nmeasured on {} SOPs through the detailed ISA engine \
+         (paper: 2.61 pJ; shape check: programmable 16-bit chips sit \
+         between PAICORE's 1-bit 0.19 pJ and SpiNNaker's CPU-based nJ)",
+        a.nc.sops
+    );
+    assert!((measured - 2.61).abs() < 1.3, "pJ/SOP drifted: {measured}");
+}

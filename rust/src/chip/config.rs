@@ -1,0 +1,92 @@
+//! Deployment images — the payload of the INIT-stage configuration
+//! packets (Fig 10). Produced by the compiler's code generator, consumed
+//! by [`super::Chip::configure`].
+
+use crate::isa::assembler::Program;
+use crate::noc::Packet;
+use crate::scheduler::NcConfig;
+use crate::topology::CcTables;
+use std::collections::HashMap;
+
+/// One NC's deployment image.
+#[derive(Clone, Debug)]
+pub struct NcImage {
+    pub integ: Program,
+    pub fire: Program,
+    /// Initial data-memory contents: (base address, words).
+    pub mem: Vec<(u16, Vec<u16>)>,
+    pub cfg: NcConfig,
+}
+
+/// One CC's deployment image.
+#[derive(Clone, Debug)]
+pub struct CcImage {
+    pub tables: CcTables,
+    /// Up to [`crate::topology::NCS_PER_CC`] entries; `None` = unused NC.
+    pub ncs: Vec<Option<NcImage>>,
+}
+
+/// A full-chip deployment.
+#[derive(Clone, Debug, Default)]
+pub struct ChipConfig {
+    pub ccs: HashMap<usize, CcImage>,
+    /// Per input channel: the packet templates the host injects when
+    /// that channel spikes (several per channel for multi-branch
+    /// dendritic fan-in; payload overridden for FP data inputs).
+    pub input_map: Vec<Vec<Packet>>,
+}
+
+impl ChipConfig {
+    /// Number of NCs used by this deployment (the "used cores" metric of
+    /// Fig 13e / §V-C).
+    pub fn used_cores(&self) -> usize {
+        self.ccs
+            .values()
+            .map(|cc| cc.ncs.iter().filter(|n| n.is_some()).count())
+            .sum()
+    }
+
+    /// Total configuration traffic in 64-bit packets (INIT stage cost):
+    /// program words + memory words + table entries, one word each.
+    pub fn init_packets(&self) -> u64 {
+        let mut words = 0u64;
+        for cc in self.ccs.values() {
+            words += (cc.tables.fanin_dt.len()
+                + cc.tables.fanin_it.len()
+                + cc.tables.fanout_dt.len()
+                + cc.tables.fanout_it.len()) as u64;
+            for nc in cc.ncs.iter().flatten() {
+                words += (nc.integ.code.len() + nc.fire.code.len()) as u64;
+                words += nc.mem.iter().map(|(_, w)| w.len() as u64).sum::<u64>();
+            }
+        }
+        words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assembler::assemble;
+
+    #[test]
+    fn used_cores_counts_some_ncs() {
+        let mut cfg = ChipConfig::default();
+        let img = NcImage {
+            integ: assemble("recv").unwrap(),
+            fire: assemble("recv").unwrap(),
+            mem: vec![(0, vec![7; 5])],
+            cfg: NcConfig::default(),
+        };
+        cfg.ccs.insert(
+            0,
+            CcImage {
+                tables: CcTables::default(),
+                ncs: vec![Some(img.clone()), None, Some(img)],
+            },
+        );
+        assert_eq!(cfg.used_cores(), 2);
+        // 2 programs × (1+1) words + 2×5 mem words
+        assert_eq!(cfg.init_packets(), 4 + 10);
+    }
+}

@@ -1,0 +1,298 @@
+//! Fast (analytic) simulation mode.
+//!
+//! The detailed engine interprets every ISA instruction of every event —
+//! perfect for the applications (≤ a few hundred neurons) but far too
+//! slow for Table II's ResNet19 (≈0.4 M neurons, ~10⁸ events/timestep).
+//! Fast mode computes the *same* activity counters analytically from the
+//! network shape, per-layer firing rates, and the placement geometry,
+//! then feeds them to the *same* [`EnergyModel`]. The
+//! `bench_ablation_fidelity` bench checks fast-vs-detailed agreement on
+//! small nets.
+
+use crate::chip::ChipActivity;
+use crate::energy::{EnergyModel, CLOCK_HZ};
+use crate::model::{Layer, NetDef};
+use crate::noc::router::SERDES_CYCLES;
+use crate::topology::NCS_PER_CC;
+
+/// NCs per chip (132 CC × 8 NC).
+pub const CORES_PER_CHIP: usize = 132 * NCS_PER_CC;
+
+/// Analytic-mode parameters.
+#[derive(Clone, Debug)]
+pub struct FastParams {
+    /// Firing rate per layer (probability a neuron spikes per timestep);
+    /// index 0 = input layer rate. Missing entries use `default_rate`.
+    pub firing_rates: Vec<f64>,
+    pub default_rate: f64,
+    /// Mean XY approach distance of a packet (placement quality; the
+    /// compiler's placement optimizer reports this).
+    pub avg_hops: f64,
+    /// Neuron-state capacity of one NC.
+    pub nc_neuron_capacity: usize,
+    /// Weight words storable in one NC.
+    pub nc_weight_capacity: usize,
+}
+
+impl Default for FastParams {
+    fn default() -> FastParams {
+        FastParams {
+            firing_rates: Vec::new(),
+            default_rate: 0.10,
+            avg_hops: 2.5,
+            nc_neuron_capacity: 256,
+            nc_weight_capacity: 24 * 1024,
+        }
+    }
+}
+
+/// Analytic per-sample report.
+#[derive(Clone, Debug)]
+pub struct FastReport {
+    pub activity: ChipActivity,
+    pub used_cores: usize,
+    pub chips: usize,
+    /// Pipeline-bottleneck cycles per timestep.
+    pub cycles_per_step: u64,
+    pub cycles_per_sample: u64,
+    pub sops_per_sample: u64,
+    pub fps: f64,
+    pub power_w: f64,
+    pub energy_per_sample_j: f64,
+    /// FPS per watt — Fig 13d/13e/15c's efficiency metric.
+    pub fps_per_w: f64,
+}
+
+/// Per-event cost constants of the deployed programs (match the
+/// program library in [`crate::programs`]; validated by the fidelity
+/// ablation bench).
+mod cost {
+    /// INTEG instructions per synaptic operation (recv+ld+locacc+b).
+    pub const INSTR_PER_SOP: f64 = 4.0;
+    /// NC data-memory accesses per SOP (weight read + RMW).
+    pub const MEM_PER_SOP: f64 = 3.0;
+    /// FIRE-stage instructions per resident neuron per timestep.
+    pub const INSTR_PER_NEURON_FIRE: f64 = 10.0;
+    /// FIRE-stage memory accesses per neuron per timestep.
+    pub const MEM_PER_NEURON_FIRE: f64 = 6.0;
+    /// Cycles per instruction (incl. branch bubbles), from the NC model.
+    pub const CPI: f64 = 1.35;
+}
+
+/// Run the analytic model for one input sample of `net`.
+pub fn simulate(net: &NetDef, p: &FastParams, em: &EnergyModel) -> FastReport {
+    let rate = |layer_idx: usize| -> f64 {
+        p.firing_rates
+            .get(layer_idx)
+            .copied()
+            .unwrap_or(p.default_rate)
+    };
+
+    let mut a = ChipActivity::default();
+    let mut used_cores = 0usize;
+    let mut max_core_cycles_per_step = 0f64;
+
+    for (li, l) in net.layers.iter().enumerate() {
+        let upstream_rate = rate(li.saturating_sub(1));
+        let own_rate = rate(li);
+        let neurons = l.neurons() as f64;
+        if matches!(l, Layer::Input { .. }) {
+            continue;
+        }
+
+        // --- placement: cores for this layer -------------------------
+        let cores_n = (l.neurons() + p.nc_neuron_capacity - 1) / p.nc_neuron_capacity;
+        let cores_w =
+            (l.unique_weights() as usize + p.nc_weight_capacity - 1) / p.nc_weight_capacity;
+        let cores = cores_n.max(cores_w).max(1);
+        used_cores += cores;
+
+        // --- INTEG traffic & work -------------------------------------
+        let upstream = upstream_neurons(net, li) as f64;
+        let events = upstream * upstream_rate; // spikes arriving per step
+        let sops = l.connections() as f64 * upstream_rate;
+        a.nc.sops += sops as u64;
+        a.nc.instret += (sops * cost::INSTR_PER_SOP) as u64;
+        a.nc.alu_fp += sops as u64;
+        let mem = sops * cost::MEM_PER_SOP;
+        a.nc.mem_reads += (mem * 2.0 / 3.0) as u64;
+        a.nc.mem_writes += (mem / 3.0) as u64;
+        a.nc.events_in += events as u64;
+        a.nc.wakeups += (events / 8.0) as u64;
+
+        // scheduler decode: one DT read per packet, IE reads ≈ expansion
+        let span_ccs = ((cores + NCS_PER_CC - 1) / NCS_PER_CC).max(1) as f64;
+        let packets = events; // one multicast packet per source spike
+        a.packets += packets as u64;
+        a.dt_reads += (packets * span_ccs) as u64;
+        let expansion = per_event_ies(l);
+        a.it_reads += (packets * span_ccs * expansion) as u64;
+        a.activations += (packets * span_ccs * expansion) as u64;
+
+        // NoC: approach + (span-1) tree traversals per packet
+        a.link_traversals += (packets * (p.avg_hops + (span_ccs - 1.0))) as u64;
+
+        // --- FIRE work --------------------------------------------------
+        a.nc.instret += (neurons * cost::INSTR_PER_NEURON_FIRE) as u64;
+        let fire_mem = neurons * cost::MEM_PER_NEURON_FIRE;
+        a.nc.mem_reads += (fire_mem * 2.0 / 3.0) as u64;
+        a.nc.mem_writes += (fire_mem / 3.0) as u64;
+        a.nc.alu_fp += (neurons * 2.0) as u64;
+        a.nc.spikes_out += (neurons * own_rate) as u64;
+
+        // --- per-core cycles this step (pipeline bottleneck) -----------
+        let layer_instr = sops * cost::INSTR_PER_SOP + neurons * cost::INSTR_PER_NEURON_FIRE;
+        let imbalance = 1.2;
+        let core_cycles = layer_instr / cores as f64 * cost::CPI * imbalance;
+        max_core_cycles_per_step = max_core_cycles_per_step.max(core_cycles);
+    }
+
+    // Multi-chip: serialization over SerDes stretches the bottleneck.
+    let chips = (used_cores + CORES_PER_CHIP - 1) / CORES_PER_CHIP;
+    if chips > 1 {
+        let inter_fraction = 1.0 - 1.0 / chips as f64;
+        let inter_packets = a.packets as f64 * inter_fraction;
+        // SerDes bandwidth: 1 packet/cycle equivalent; add latency term.
+        max_core_cycles_per_step +=
+            inter_packets / net.layers.len().max(1) as f64 + SERDES_CYCLES as f64;
+        a.link_traversals += (inter_packets * 2.0) as u64;
+    }
+
+    // Whole-sample scaling.
+    let t = net.timesteps as u64;
+    scale_activity(&mut a, t);
+    a.timesteps = t;
+
+    let cycles_per_step = (max_core_cycles_per_step.max(1.0)) as u64;
+    let cycles_per_sample = cycles_per_step * t;
+    a.nc.cycles = cycles_per_sample * used_cores as u64 / 4; // avg busy share
+
+    let fps = CLOCK_HZ / cycles_per_sample as f64;
+    let power = em.power_w(&a, cycles_per_sample) * chips as f64;
+    let energy = power * (cycles_per_sample as f64 / CLOCK_HZ);
+
+    FastReport {
+        sops_per_sample: a.nc.sops,
+        used_cores,
+        chips,
+        cycles_per_step,
+        cycles_per_sample,
+        fps,
+        power_w: power,
+        energy_per_sample_j: energy,
+        fps_per_w: fps / power,
+        activity: a,
+    }
+}
+
+fn scale_activity(a: &mut ChipActivity, t: u64) {
+    a.nc.sops *= t;
+    a.nc.instret *= t;
+    a.nc.alu_fp *= t;
+    a.nc.alu_int *= t;
+    a.nc.mem_reads *= t;
+    a.nc.mem_writes *= t;
+    a.nc.events_in *= t;
+    a.nc.wakeups *= t;
+    a.nc.spikes_out *= t;
+    a.packets *= t;
+    a.dt_reads *= t;
+    a.it_reads *= t;
+    a.activations *= t;
+    a.link_traversals *= t;
+}
+
+/// Upstream neuron count feeding layer `li`.
+fn upstream_neurons(net: &NetDef, li: usize) -> usize {
+    match &net.layers[li] {
+        Layer::Conv { cin, h, w, .. } => cin * h * w,
+        Layer::Pool { c, h, w, .. } => c * h * w,
+        Layer::Fc { input, .. } => *input,
+        Layer::Recurrent { input, size, .. } => input + size,
+        Layer::Sparse { input, .. } => *input,
+        Layer::Input { .. } => 0,
+    }
+}
+
+/// Fan-in IEs touched per arriving event (decode expansion).
+fn per_event_ies(l: &Layer) -> f64 {
+    match *l {
+        Layer::Conv { k, .. } => (k * k) as f64,
+        Layer::Pool { .. } => 1.0,
+        Layer::Fc { .. } | Layer::Recurrent { .. } => 1.0, // one Type2 IE
+        Layer::Sparse { output, density, .. } => (output as f64 * density).max(1.0),
+        Layer::Input { .. } => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model;
+
+    fn em() -> EnergyModel {
+        EnergyModel::default()
+    }
+
+    #[test]
+    fn resnet19_is_multi_chip_like_the_paper() {
+        // §V-C.1: "the PLIF-NET and ResNet19 models have a large number
+        // of neurons, requiring dozens of chips".
+        let r = simulate(&model::resnet19(), &FastParams::default(), &em());
+        assert!(r.chips > 1, "chips={}", r.chips);
+        assert!(r.used_cores > CORES_PER_CHIP);
+    }
+
+    #[test]
+    fn firing_rate_scales_chip_energy_not_cores() {
+        let net = model::blocks5_net();
+        let mut lo = FastParams::default();
+        lo.default_rate = 0.05;
+        let mut hi = FastParams::default();
+        hi.default_rate = 0.20;
+        let r_lo = simulate(&net, &lo, &em());
+        let r_hi = simulate(&net, &hi, &em());
+        assert_eq!(r_lo.used_cores, r_hi.used_cores);
+        assert!(r_hi.energy_per_sample_j > r_lo.energy_per_sample_j * 1.5);
+        assert!(r_hi.sops_per_sample > r_lo.sops_per_sample * 3);
+    }
+
+    #[test]
+    fn better_placement_reduces_noc_traffic() {
+        let net = model::blocks5_net();
+        let mut near = FastParams::default();
+        near.avg_hops = 1.0;
+        let mut far = FastParams::default();
+        far.avg_hops = 8.0;
+        let r_near = simulate(&net, &near, &em());
+        let r_far = simulate(&net, &far, &em());
+        assert!(r_far.activity.link_traversals > r_near.activity.link_traversals);
+        assert!(r_far.energy_per_sample_j > r_near.energy_per_sample_j);
+    }
+
+    #[test]
+    fn tiny_net_fits_one_chip_sub_watt() {
+        let r = simulate(&model::srnn_ecg(true), &FastParams::default(), &em());
+        assert_eq!(r.chips, 1);
+        assert!(r.used_cores <= 8);
+        // Fig 15b: application power ≈ 0.34 W on average
+        assert!(r.power_w < 1.5, "power={}", r.power_w);
+        assert!(r.fps > 10.0);
+    }
+
+    #[test]
+    fn sops_match_hand_count() {
+        // one FC 100->10 at rate 0.5 for 2 steps: 100*10*0.5*2 = 1000
+        let mut n = model::NetDef::new("t", 2);
+        n.layers.push(model::Layer::Input { size: 100 });
+        n.layers.push(model::Layer::Fc {
+            input: 100,
+            output: 10,
+            neuron: model::NeuronModel::Lif { tau: 0.5, vth: 1.0 },
+        });
+        let mut p = FastParams::default();
+        p.firing_rates = vec![0.5, 0.1];
+        let r = simulate(&n, &p, &em());
+        assert_eq!(r.sops_per_sample, 1000);
+    }
+}

@@ -1,0 +1,365 @@
+//! Chip-level engine: the INIT → (INTEG ⇄ FIRE)* workflow of Fig 10.
+//!
+//! [`Chip`] owns 132 cortical columns behind a 2-D mesh and advances the
+//! SNN one timestep at a time:
+//!
+//! 1. **INTEG** — pending packets (spikes fired in the previous FIRE
+//!    stage, expired skip-connection delays, and host inputs entering
+//!    through the edge proxy) are routed across the mesh and drained into
+//!    the NCs, which accumulate currents event-by-event.
+//! 2. **FIRE** — every CC runs its fire waves; fired neurons become the
+//!    next timestep's packets; host-bound DATA events are collected as
+//!    outputs.
+//!
+//! The detailed engine executes real ISA programs per event; the
+//! [`fast`] sibling replaces per-event interpretation with analytic
+//! event counts for large models (see DESIGN.md "fidelity modes").
+
+pub mod config;
+pub mod fast;
+
+use crate::nc::Trap;
+use crate::noc::{router::Mesh, Packet, NUM_CCS};
+use crate::scheduler::{CorticalColumn, HostOutput, Minted};
+
+/// Result of one timestep.
+#[derive(Clone, Debug, Default)]
+pub struct StepResult {
+    pub outputs: Vec<HostOutput>,
+    pub packets_routed: u64,
+    pub spikes: u64,
+}
+
+/// Whole-chip activity summary (feeds the energy model).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChipActivity {
+    pub nc: crate::nc::NcStats,
+    pub dt_reads: u64,
+    pub it_reads: u64,
+    pub activations: u64,
+    pub packets: u64,
+    pub link_traversals: u64,
+    pub timesteps: u64,
+}
+
+/// The TaiBai chip (one die; multi-chip scaling is modeled analytically
+/// through [`crate::noc::router::inter_chip_cost`]).
+pub struct Chip {
+    pub ccs: Vec<CorticalColumn>,
+    pub mesh: Mesh,
+    pub timestep: u64,
+    /// CC used as the host-side injection proxy (edge of the die).
+    pub proxy_cc: usize,
+    pending: Vec<Minted>,
+    /// CCs with configured NCs — the only ones the phase engine visits
+    /// (small deployments use 1–2 of the 132 columns; §Perf).
+    active: Vec<usize>,
+}
+
+impl Chip {
+    pub fn new(nc_data_words: usize) -> Chip {
+        Chip {
+            ccs: (0..NUM_CCS)
+                .map(|id| CorticalColumn::new(id, nc_data_words))
+                .collect(),
+            mesh: Mesh::new(),
+            timestep: 0,
+            proxy_cc: crate::noc::cc_id(0, 5),
+            pending: Vec::new(),
+            active: Vec::new(),
+        }
+    }
+
+    /// Apply a compiled deployment image (the INIT stage).
+    pub fn configure(&mut self, cfg: &config::ChipConfig) {
+        let mut active: Vec<usize> = cfg.ccs.keys().copied().collect();
+        active.sort_unstable();
+        self.active = active;
+        for (&cc_id, image) in &cfg.ccs {
+            let cc = &mut self.ccs[cc_id];
+            cc.tables = image.tables.clone();
+            for (i, nci) in image.ncs.iter().enumerate() {
+                let Some(nci) = nci else { continue };
+                let nc = &mut cc.ncs[i];
+                nc.load_integ(&nci.integ);
+                nc.load_fire(&nci.fire);
+                for (addr, words) in &nci.mem {
+                    nc.mem[*addr as usize..*addr as usize + words.len()]
+                        .copy_from_slice(words);
+                }
+                cc.cfg[i] = nci.cfg;
+            }
+        }
+    }
+
+    /// Advance one SNN timestep. `inputs` are host packets injected this
+    /// step (already carrying their routing mode / fan-in coordinates —
+    /// see [`config::ChipConfig::input_map`]).
+    pub fn step(&mut self, inputs: &[Packet]) -> Result<StepResult, Trap> {
+        let mut res = StepResult::default();
+
+        // ---- INTEG ----------------------------------------------------
+        let pending = std::mem::take(&mut self.pending);
+        for m in &pending {
+            self.deliver(m.src_cc, &m.packet, &mut res);
+        }
+        for p in inputs {
+            self.deliver(self.proxy_cc, p, &mut res);
+        }
+        // Unconfigured deployments (hand-built tests) visit every CC.
+        let active: Vec<usize> = if self.active.is_empty() {
+            (0..self.ccs.len()).collect()
+        } else {
+            self.active.clone()
+        };
+        for &i in &active {
+            let cc = &mut self.ccs[i];
+            if !cc.is_quiescent() {
+                cc.run_integ()?;
+            }
+        }
+
+        // ---- FIRE -----------------------------------------------------
+        for &i in &active {
+            let (minted, host) = self.ccs[i].fire(self.timestep)?;
+            res.spikes += minted.len() as u64;
+            self.pending.extend(minted);
+            res.outputs.extend(host);
+        }
+
+        // ---- skip-connection delay lines -------------------------------
+        for &i in &active {
+            let due = self.ccs[i].tick_delayed();
+            res.spikes += due.len() as u64;
+            self.pending.extend(due);
+        }
+
+        self.timestep += 1;
+        Ok(res)
+    }
+
+    /// Reset dynamic state (membrane potentials are NOT touched — callers
+    /// reconfigure or zero the relevant regions between samples).
+    pub fn flush_packets(&mut self) {
+        self.pending.clear();
+    }
+
+    fn deliver(&mut self, src: usize, pkt: &Packet, res: &mut StepResult) {
+        let route = self.mesh.route(src, pkt.mode);
+        res.packets_routed += 1;
+        for cc in route.deliveries {
+            self.ccs[cc].handle_packet(pkt);
+        }
+    }
+
+    /// Host memory-write (the MemWrite packet path, used by the
+    /// coordinator to clear state regions and learning accumulators
+    /// between samples).
+    pub fn poke(&mut self, cc: usize, nc: u8, addr: u16, words: &[u16]) {
+        let mem = &mut self.ccs[cc].ncs[nc as usize].mem;
+        mem[addr as usize..addr as usize + words.len()].copy_from_slice(words);
+    }
+
+    /// Host memory-read (the MemRead monitoring path of Fig 10).
+    pub fn peek(&self, cc: usize, nc: u8, addr: u16, n: usize) -> Vec<u16> {
+        self.ccs[cc].ncs[nc as usize].mem[addr as usize..addr as usize + n].to_vec()
+    }
+
+    /// Aggregate activity across the die.
+    pub fn activity(&self) -> ChipActivity {
+        let mut a = ChipActivity {
+            timesteps: self.timestep,
+            packets: self.mesh.total_packets(),
+            link_traversals: self.mesh.total_traversals,
+            ..Default::default()
+        };
+        for cc in &self.ccs {
+            a.nc.add(&cc.nc_stats());
+            a.dt_reads += cc.stats.dt_reads;
+            a.it_reads += cc.stats.it_reads;
+            a.activations += cc.stats.activations;
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assembler::assemble;
+    use crate::noc::{cc_id, PacketPhase, PacketType};
+    use crate::topology::{FanInDE, FanInIE, FanOutDE, FanOutIE, IeType, RouteMode};
+    use crate::util::F16;
+
+    /// Build a 2-layer chain across two CCs:
+    /// input → CC(2,2) NC0 neuron0 (LIF) → CC(8,7) NC0 neuron0 (host out).
+    fn two_cc_chip() -> Chip {
+        let mut chip = Chip::new(512);
+
+        let integ = assemble("loop:\nrecv\nlocacc.f r3, r1, 64\nb loop").unwrap();
+        let fire = assemble(
+            r#"
+        loop:
+            recv
+            ld.f  r5, r1, 64
+            ld.f  r8, r1, 128
+            cmp.f r5, r8
+            bc.lt next
+            send  r5, r1, 0
+        next:
+            movi  r6, 0
+            st    r6, r1, 64
+            b loop
+        "#,
+        )
+        .unwrap();
+
+        // layer-1 CC at (2,2)
+        let a = cc_id(2, 2);
+        {
+            let cc = &mut chip.ccs[a];
+            cc.ncs[0].load_integ(&integ);
+            cc.ncs[0].load_fire(&fire);
+            cc.ncs[0].mem[128] = F16::from_f32(1.0).0;
+            cc.cfg[0].neurons = 1;
+            cc.tables.push_fanin(
+                vec![FanInDE { tag: 1, ie_type: IeType::Sparse0, it_base: 0, it_len: 1, k2: 0 }],
+                vec![FanInIE::Type0 { nc: 0, neuron: 0 }],
+            );
+            cc.tables.push_fanout(
+                vec![FanOutDE { global_axon: 0, it_base: 0, it_len: 1 }],
+                vec![FanOutIE {
+                    mode: RouteMode::Unicast { x: 8, y: 7 },
+                    tag: 2,
+                    index: 0,
+                    delay: 0,
+                }],
+            );
+        }
+
+        // layer-2 CC at (8,7): DATA-out readout (non-firing, emits v)
+        let b = cc_id(8, 7);
+        {
+            let cc = &mut chip.ccs[b];
+            cc.ncs[0].load_integ(
+                // weight 0.7 at mem[16]; spike event carries axon in r2
+                &assemble("loop:\nrecv\nld.f r6, r2, 16\nlocacc.f r6, r1, 64\nb loop").unwrap(),
+            );
+            cc.ncs[0].load_fire(
+                &assemble("loop:\nrecv\nld.f r5, r1, 64\nsend r5, r1, 1\nb loop").unwrap(),
+            );
+            cc.ncs[0].mem[16] = F16::from_f32(0.7).0;
+            cc.cfg[0].neurons = 1;
+            cc.tables.push_fanin(
+                vec![FanInDE { tag: 2, ie_type: IeType::Sparse0, it_base: 0, it_len: 1, k2: 0 }],
+                vec![FanInIE::Type0 { nc: 0, neuron: 0 }],
+            );
+            // empty fan-out = host output
+            cc.tables.push_fanout(
+                vec![FanOutDE { global_axon: 0, it_base: 0, it_len: 0 }],
+                vec![],
+            );
+        }
+        chip
+    }
+
+    fn input_packet(value: f32) -> Packet {
+        Packet {
+            ptype: PacketType::Data,
+            phase: PacketPhase::Integ,
+            tag: 1,
+            index: 0,
+            payload: F16::from_f32(value).0,
+            mode: RouteMode::Unicast { x: 2, y: 2 },
+        }
+    }
+
+    #[test]
+    fn spike_propagates_across_the_mesh_with_one_step_latency() {
+        let mut chip = two_cc_chip();
+        // t=0: input drives layer-1 neuron above threshold; it fires.
+        let r0 = chip.step(&[input_packet(1.5)]).unwrap();
+        assert_eq!(r0.spikes, 1);
+        // layer-2 readout emits v=0 this step (spike not yet arrived)
+        assert_eq!(r0.outputs.len(), 1);
+        assert_eq!(F16(r0.outputs[0].value).to_f32(), 0.0);
+        // t=1: the spike arrives, readout sees 0.7
+        let r1 = chip.step(&[]).unwrap();
+        assert_eq!(r1.outputs.len(), 1);
+        let v = F16(r1.outputs[0].value).to_f32();
+        assert!((v - 0.7).abs() < 2e-3, "v={v}");
+    }
+
+    #[test]
+    fn subthreshold_input_never_crosses() {
+        let mut chip = two_cc_chip();
+        let r0 = chip.step(&[input_packet(0.4)]).unwrap();
+        assert_eq!(r0.spikes, 0);
+        let r1 = chip.step(&[]).unwrap();
+        assert_eq!(F16(r1.outputs[0].value).to_f32(), 0.0);
+    }
+
+    #[test]
+    fn activity_counters_accumulate() {
+        let mut chip = two_cc_chip();
+        chip.step(&[input_packet(1.5)]).unwrap();
+        chip.step(&[]).unwrap();
+        let a = chip.activity();
+        assert_eq!(a.timesteps, 2);
+        assert!(a.nc.sops >= 2); // input locacc + layer-2 locacc
+        assert!(a.link_traversals > 0);
+        assert!(a.dt_reads >= 2);
+    }
+
+    #[test]
+    fn integration_accumulates_within_a_timestep() {
+        // the minimal fire program clears its accumulator each step, so
+        // accumulation happens across events *within* one INTEG stage:
+        // 0.6 + 0.6 ≥ 1.0 fires; a lone 0.6 (previous test) does not.
+        let mut chip = two_cc_chip();
+        let r0 = chip
+            .step(&[input_packet(0.6), input_packet(0.6)])
+            .unwrap();
+        assert_eq!(r0.spikes, 1);
+    }
+
+    #[test]
+    fn configure_applies_images() {
+        use super::config::*;
+        use std::collections::HashMap;
+        let mut chip = Chip::new(256);
+        let mut ccs = HashMap::new();
+        let mut tables = crate::topology::CcTables::default();
+        tables.push_fanout(
+            vec![FanOutDE { global_axon: 3, it_base: 0, it_len: 0 }],
+            vec![],
+        );
+        ccs.insert(
+            cc_id(1, 1),
+            CcImage {
+                tables,
+                ncs: vec![
+                    Some(NcImage {
+                        integ: assemble("loop:\nrecv\nb loop").unwrap(),
+                        fire: assemble("loop:\nrecv\nb loop").unwrap(),
+                        mem: vec![(10, vec![1, 2, 3])],
+                        cfg: crate::scheduler::NcConfig {
+                            neurons: 4,
+                            ..Default::default()
+                        },
+                    }),
+                    None,
+                ],
+            },
+        );
+        let cfg = ChipConfig {
+            ccs,
+            input_map: vec![],
+        };
+        chip.configure(&cfg);
+        let cc = &chip.ccs[cc_id(1, 1)];
+        assert_eq!(cc.cfg[0].neurons, 4);
+        assert_eq!(cc.ncs[0].mem[10..13], [1, 2, 3]);
+        assert_eq!(cc.tables.fanout_dt.len(), 1);
+    }
+}

@@ -1,0 +1,947 @@
+//! Code generation (paper Fig 12e): lower a fused, partitioned, placed
+//! network into a [`ChipConfig`] — per-CC topology tables, per-NC
+//! programs (from [`crate::programs`]) and memory images, plus the host
+//! input/error packet maps.
+//!
+//! Supported layer kinds on the detailed engine: `Fc` (LIF / ALIF /
+//! Readout / DH-LIF / learning head), `Recurrent` (folded into an
+//! extended-input full connection: upstream axons `0..n_in` are the
+//! external inputs, `n_in..n_in+size` the hidden neurons themselves —
+//! §III-D: "recurrent connections … equivalently converted"), and
+//! `Sparse` (Type-1 direct addressing; FP-data inputs use the scaled
+//! accumulate path). Convolutional nets run through the fast analytic
+//! mode (see DESIGN.md §fidelity).
+
+use std::collections::HashMap;
+
+use crate::chip::config::{CcImage, ChipConfig, NcImage};
+use crate::model::{Layer, NetDef, NeuronModel};
+use crate::noc::{cc_xy, Packet, PacketPhase, PacketType};
+use crate::programs::{self, learning, NcLayout};
+use crate::scheduler::NcConfig;
+use crate::topology::{
+    CcTables, FanInDE, FanInIE, FanOutDE, FanOutIE, IeType, RouteMode, NCS_PER_CC,
+};
+use crate::util::F16;
+
+use super::merge::Merged;
+use super::placement::PlacementMap;
+
+/// Where one physical core landed and what it hosts.
+#[derive(Clone, Debug)]
+pub struct CoreMeta {
+    pub cc: usize,
+    pub nc: u8,
+    pub layout: NcLayout,
+    /// (layer, layer-local n_base, count, core-local base) per part.
+    pub parts: Vec<(usize, usize, usize, usize)>,
+}
+
+/// Full compilation output.
+#[derive(Clone, Debug, Default)]
+pub struct Compiled {
+    pub config: ChipConfig,
+    pub cores: Vec<CoreMeta>,
+    /// (cc, nc, local neuron) → flattened output index of the final
+    /// layer (host readout).
+    pub readout: HashMap<(usize, u8, u16), usize>,
+    /// Per output neuron: the packet that injects its FP16 error
+    /// (on-chip learning).
+    pub error_map: Vec<Packet>,
+    pub used_cores: usize,
+    pub cores_saved: usize,
+}
+
+/// FP16 quantization of a weight blob.
+fn q(ws: &[f32]) -> Vec<u16> {
+    ws.iter().map(|&w| F16::from_f32(w).0).collect()
+}
+
+struct Builder<'a> {
+    net: &'a NetDef,
+    weights: &'a [Vec<f32>],
+    merged: &'a Merged,
+    place: &'a PlacementMap,
+    learning: bool,
+    /// merged-core index → (cc, nc)
+    locs: Vec<(usize, u8)>,
+    tables: HashMap<usize, CcTables>,
+    images: HashMap<usize, Vec<Option<NcImage>>>,
+    /// (layer, cc) → fan-in DT base of the layer's inbound connection.
+    dt_base: HashMap<(usize, usize), u16>,
+    /// layer → list of (cc, members sorted by nc: (nc, merged idx, part))
+    layer_ccs: Vec<Vec<(usize, Vec<(u8, usize, usize)>)>>,
+    next_tag: u16,
+}
+
+/// Compile a fused network into a chip deployment.
+pub fn codegen(
+    net: &NetDef,
+    weights: &[Vec<f32>],
+    merged: &Merged,
+    place: &PlacementMap,
+    learning: bool,
+) -> Result<Compiled, String> {
+    let locs: Vec<(usize, u8)> = (0..merged.cores.len())
+        .map(|i| place.loc(i))
+        .collect();
+
+    // group layer parts by CC
+    let mut layer_ccs: Vec<Vec<(usize, Vec<(u8, usize, usize)>)>> =
+        vec![Vec::new(); net.layers.len()];
+    for (mi, core) in merged.cores.iter().enumerate() {
+        let (cc, nc) = locs[mi];
+        for (pi, part) in core.parts.iter().enumerate() {
+            let groups = &mut layer_ccs[part.layer];
+            match groups.iter_mut().find(|(c, _)| *c == cc) {
+                Some((_, members)) => members.push((nc, mi, pi)),
+                None => groups.push((cc, vec![(nc, mi, pi)])),
+            }
+        }
+    }
+    for groups in &mut layer_ccs {
+        for (_, members) in groups.iter_mut() {
+            members.sort();
+        }
+    }
+
+    let mut b = Builder {
+        net,
+        weights,
+        merged,
+        place,
+        learning,
+        locs,
+        tables: HashMap::new(),
+        images: HashMap::new(),
+        dt_base: HashMap::new(),
+        layer_ccs,
+        next_tag: 1,
+    };
+
+    // 1. fan-in tables + NC images per layer
+    for li in 1..net.layers.len() {
+        b.build_layer_fanin(li)?;
+        b.build_layer_images(li)?;
+    }
+    // 2. fan-out tables (needs all fan-in DT bases)
+    b.build_fanout()?;
+    // 3. host maps
+    let input_map = b.build_input_map()?;
+    let (error_map, readout) = b.build_host_maps()?;
+
+    let mut config = ChipConfig {
+        ccs: HashMap::new(),
+        input_map,
+    };
+    let mut cores = Vec::new();
+    for (mi, core) in merged.cores.iter().enumerate() {
+        let (cc, nc) = b.locs[mi];
+        let layout = b.layout_for(mi)?;
+        cores.push(CoreMeta {
+            cc,
+            nc,
+            layout,
+            parts: core
+                .parts
+                .iter()
+                .enumerate()
+                .map(|(pi, p)| (p.layer, p.n_base, p.count, core.base_of(pi)))
+                .collect(),
+        });
+    }
+    let all_ccs: Vec<usize> = b.tables.keys().copied().collect();
+    for cc in all_ccs {
+        let tables = b.tables.remove(&cc).unwrap_or_default();
+        let ncs = b
+            .images
+            .remove(&cc)
+            .unwrap_or_else(|| (0..NCS_PER_CC).map(|_| None).collect());
+        config.ccs.insert(cc, CcImage { tables, ncs });
+    }
+
+    let used = config.used_cores();
+    Ok(Compiled {
+        config,
+        cores,
+        readout,
+        error_map,
+        used_cores: used,
+        cores_saved: merged.saved(),
+    })
+}
+
+impl<'a> Builder<'a> {
+    fn tag(&mut self) -> u16 {
+        let t = self.next_tag;
+        self.next_tag = (self.next_tag + 1) % 250 + 1;
+        t
+    }
+
+    fn tables_of(&mut self, cc: usize) -> &mut CcTables {
+        self.tables.entry(cc).or_default()
+    }
+
+    fn images_of(&mut self, cc: usize) -> &mut Vec<Option<NcImage>> {
+        self.images
+            .entry(cc)
+            .or_insert_with(|| (0..NCS_PER_CC).map(|_| None).collect())
+    }
+
+    /// Upstream axon-space size of layer `li`'s inbound connection.
+    fn axon_space(&self, li: usize) -> usize {
+        match &self.net.layers[li] {
+            Layer::Fc { input, neuron, .. } => match neuron {
+                NeuronModel::DhLif { branches, .. } => input * branches,
+                _ => *input,
+            },
+            Layer::Recurrent { input, size, .. } => input + size,
+            Layer::Sparse { input, .. } => *input,
+            _ => 0,
+        }
+    }
+
+    /// Build fan-in DT/IT blocks for layer `li` in every CC hosting it.
+    fn build_layer_fanin(&mut self, li: usize) -> Result<(), String> {
+        let layer = self.net.layers[li].clone();
+        let tag = self.tag();
+        let groups = self.layer_ccs[li].clone();
+        match layer {
+            Layer::Fc { neuron, .. } | Layer::Recurrent { neuron, .. } => {
+                let branches = match neuron {
+                    NeuronModel::DhLif { branches, .. } => branches,
+                    _ => 1,
+                };
+                for (cc, members) in &groups {
+                    // per-branch DT entry; Type2 IE per member NC
+                    // (regular-margin single-IE optimization applies when
+                    // counts are uniform except the last).
+                    let mut des = Vec::new();
+                    let mut ies = Vec::new();
+                    for br in 0..branches {
+                        let it_base = ies.len() as u32;
+                        // The single-IE "regular margin" optimization only
+                        // applies to branch-free layers: branch banks make
+                        // each NC's accumulator start depend on its own
+                        // resident count.
+                        let regular = if branches == 1 {
+                            regular_group(self.merged, members)
+                        } else {
+                            None
+                        };
+                        if let Some((mask, margin, total)) = regular {
+                            ies.push(FanInIE::Type2 {
+                                nc_mask: mask,
+                                margin,
+                                count: total,
+                                start: 0,
+                            });
+                        } else {
+                            for &(nc, mi, pi) in members {
+                                let count = self.part_count(mi, pi) as u16;
+                                let local_base =
+                                    self.merged.cores[mi].base_of(pi) as u16;
+                                ies.push(FanInIE::Type2 {
+                                    nc_mask: 1 << nc,
+                                    margin: count,
+                                    count,
+                                    start: local_base + br as u16 * count,
+                                });
+                            }
+                        }
+                        des.push(FanInDE {
+                            tag,
+                            ie_type: IeType::Full2,
+                            it_base,
+                            it_len: ies.len() as u32 - it_base,
+                            k2: 0,
+                        });
+                    }
+                    let base = self.tables_of(*cc).push_fanin(des, ies);
+                    self.dt_base.insert((li, *cc), base);
+                }
+            }
+            Layer::Sparse { input, .. } => {
+                // Type-1 entries per upstream; weight cells allocated in
+                // core-local order.
+                let blob = &self.weights[li];
+                let outputs = self.net.layers[li].neurons();
+                if blob.len() != input * outputs {
+                    return Err(format!(
+                        "layer {li}: sparse blob {} != {input}x{outputs}",
+                        blob.len()
+                    ));
+                }
+                for (cc, members) in &groups {
+                    // per-core weight allocation counters
+                    let mut next_w: HashMap<usize, u16> = HashMap::new();
+                    let mut des = Vec::new();
+                    let mut ies = Vec::new();
+                    for u in 0..input {
+                        let it_base = ies.len() as u32;
+                        for &(nc, mi, pi) in members {
+                            let part = self.merged.cores[mi].parts[pi];
+                            let local_base = self.merged.cores[mi].base_of(pi);
+                            for j in 0..part.count {
+                                let t = part.n_base + j;
+                                let w = blob[u * outputs + t];
+                                if w != 0.0 {
+                                    let slot = next_w.entry(mi).or_insert(0);
+                                    ies.push(FanInIE::Type1 {
+                                        nc,
+                                        neuron: (local_base + j) as u16,
+                                        local_axon: *slot,
+                                    });
+                                    *slot += 1;
+                                }
+                            }
+                        }
+                        des.push(FanInDE {
+                            tag,
+                            ie_type: IeType::Sparse1,
+                            it_base,
+                            it_len: ies.len() as u32 - it_base,
+                            k2: 0,
+                        });
+                    }
+                    let base = self.tables_of(*cc).push_fanin(des, ies);
+                    self.dt_base.insert((li, *cc), base);
+                }
+            }
+            Layer::Input { .. } | Layer::Pool { .. } | Layer::Conv { .. } => {
+                return Err(format!(
+                    "layer {li}: kind not supported by the detailed-engine \
+                     code generator (use fast mode)"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn part_count(&self, mi: usize, pi: usize) -> usize {
+        self.merged.cores[mi].parts[pi].count
+    }
+
+    /// Build NC programs + memory images for layer `li`'s cores.
+    fn build_layer_images(&mut self, li: usize) -> Result<(), String> {
+        let layer = self.net.layers[li].clone();
+        let groups = self.layer_ccs[li].clone();
+        for (cc, members) in &groups {
+            for &(nc, mi, pi) in members {
+                self.emit_image(*cc, nc, mi, pi, li, &layer)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn layout_for(&self, mi: usize) -> Result<NcLayout, String> {
+        let core = &self.merged.cores[mi];
+        let mut n = 0usize;
+        let mut w = 0usize;
+        let mut a = 16usize;
+        for part in &core.parts {
+            let layer = &self.net.layers[part.layer];
+            let (banks, per_n) = match layer {
+                Layer::Fc { input, neuron, .. } => match neuron {
+                    NeuronModel::DhLif { branches, .. } => (*branches, input * branches),
+                    _ => (1, *input),
+                },
+                Layer::Recurrent { input, size, .. } => (1, input + size),
+                Layer::Sparse { input, density, .. } => {
+                    (1, ((*input as f64 * density).ceil() as usize).max(1))
+                }
+                _ => (1, 0),
+            };
+            n += part.count * banks;
+            w += part.count * per_n;
+            a = a.max(self.axon_space(part.layer));
+        }
+        // learning needs the ITOF table appended
+        Ok(NcLayout::standard(n.max(1), w.max(1), a))
+    }
+
+    fn emit_image(
+        &mut self,
+        cc: usize,
+        nc: u8,
+        mi: usize,
+        pi: usize,
+        li: usize,
+        layer: &Layer,
+    ) -> Result<(), String> {
+        let layout = self.layout_for(mi)?;
+        let part = self.merged.cores[mi].parts[pi];
+        let local_base = self.merged.cores[mi].base_of(pi);
+        let count = part.count;
+        let is_head = self.learning && li == self.net.layers.len() - 1;
+
+        let neuron = layer.neuron_model().ok_or("layer without neurons")?;
+        let e = |x: Result<crate::isa::assembler::Program, crate::isa::assembler::AsmError>|
+         -> Result<crate::isa::assembler::Program, String> {
+            x.map_err(|err| format!("layer {li}: {err}"))
+        };
+
+        // ---- programs --------------------------------------------------
+        let (integ, fire) = match layer {
+            Layer::Fc { .. } | Layer::Recurrent { .. } => {
+                let integ = if is_head {
+                    e(learning::integ_learn_head(&layout, count))?
+                } else {
+                    e(programs::integ_fc(&layout, count))?
+                };
+                let fire = match neuron {
+                    NeuronModel::Alif { .. } => e(programs::fire_alif(&layout))?,
+                    NeuronModel::DhLif { branches, .. } => {
+                        e(programs::dendrite::fire_dhlif(&layout, branches, count))?
+                    }
+                    NeuronModel::Readout { .. } => {
+                        if is_head {
+                            e(learning::fire_learn_head(
+                                &layout,
+                                self.axon_space(li),
+                                count,
+                            ))?
+                        } else {
+                            e(programs::fire_readout(&layout))?
+                        }
+                    }
+                    _ => e(programs::fire_lif(&layout))?,
+                };
+                (integ, fire)
+            }
+            Layer::Sparse { .. } => {
+                let integ = e(integ_direct_scaled(&layout))?;
+                let fire = match neuron {
+                    NeuronModel::Readout { .. } => e(programs::fire_readout(&layout))?,
+                    _ => e(programs::fire_lif(&layout))?,
+                };
+                (integ, fire)
+            }
+            _ => return Err(format!("layer {li}: unsupported kind")),
+        };
+
+        // ---- memory image ----------------------------------------------
+        let mut mem: Vec<(u16, Vec<u16>)> = Vec::new();
+        // params
+        let mut params = vec![0u16; 16];
+        let (tau, vth, rho, beta) = match neuron {
+            NeuronModel::Lif { tau, vth } => (tau, vth, 0.0, 0.0),
+            NeuronModel::Alif { tau, vth, beta, rho } => (tau, vth, rho, beta),
+            NeuronModel::DhLif { tau_soma, vth, .. } => (tau_soma, vth, 0.0, 0.0),
+            NeuronModel::Readout { tau } => (tau, 1.0, 0.0, 0.0),
+            NeuronModel::Psum => (0.0, 1.0, 0.0, 0.0),
+        };
+        params[0] = F16::from_f32(tau).0;
+        params[1] = F16::from_f32(vth).0;
+        params[2] = F16::from_f32(rho).0;
+        params[3] = F16::from_f32(beta).0;
+        params[4] = F16::from_f32(0.02).0; // lr
+        params[13] = F16::ONE.0;
+        if let NeuronModel::DhLif { branches, .. } = neuron {
+            // heterogeneous branch time constants (the paper's point)
+            let taus = [0.2f32, 0.5, 0.8, 0.95, 0.3, 0.6, 0.9, 0.99];
+            for b in 0..branches {
+                params[5 + b] = F16::from_f32(taus[b % taus.len()]).0;
+            }
+        }
+        mem.push((layout.params, params));
+
+        // weights
+        let blob = &self.weights[li];
+        let w_words = self.core_weights(li, layer, part.n_base, count, blob)?;
+        if !w_words.is_empty() {
+            // merged cores: parts' weights are laid out sequentially; the
+            // sparse fan-in builder allocates local axons in the same
+            // first-fit order, so recompute the base from earlier parts.
+            let mut w_off = 0usize;
+            for k in 0..pi {
+                let p = self.merged.cores[mi].parts[k];
+                let lay = &self.net.layers[p.layer];
+                let pb = &self.weights[p.layer];
+                w_off += self.core_weights(p.layer, lay, p.n_base, p.count, pb)?.len();
+            }
+            mem.push((layout.weights + w_off as u16, w_words));
+        }
+
+        if is_head {
+            mem.push((layout.itof, learning::itof_table()));
+        }
+
+        // ---- register the image ----------------------------------------
+        let images = self.images_of(cc);
+        let slot = &mut images[nc as usize];
+        match slot {
+            None => {
+                *slot = Some(NcImage {
+                    integ,
+                    fire,
+                    mem,
+                    cfg: NcConfig {
+                        neurons: (local_base + count) as u16,
+                        wave1: 0,
+                        learn: is_head,
+                        learn_from: 0,
+                    },
+                });
+            }
+            Some(img) => {
+                // merged part: same programs (mergeable layers share the
+                // Type-1 path); extend neurons + memory
+                img.cfg.neurons = img.cfg.neurons.max((local_base + count) as u16);
+                img.mem.extend(mem.into_iter().filter(|(a, _)| {
+                    // params already written by the first part
+                    *a != layout.params
+                }));
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract this core's weight words for `layer` (rows = upstream
+    /// axon space, stride = resident count).
+    fn core_weights(
+        &self,
+        li: usize,
+        layer: &Layer,
+        n_base: usize,
+        count: usize,
+        blob: &[f32],
+    ) -> Result<Vec<u16>, String> {
+        match layer {
+            Layer::Fc { input, output, neuron } => {
+                let branches = match neuron {
+                    NeuronModel::DhLif { branches, .. } => *branches,
+                    _ => 1,
+                };
+                let rows = input * branches;
+                if blob.len() != rows * output {
+                    return Err(format!(
+                        "layer {li}: fc blob {} != {rows}x{output}",
+                        blob.len()
+                    ));
+                }
+                let mut w = Vec::with_capacity(rows * count);
+                for r in 0..rows {
+                    for j in 0..count {
+                        w.push(F16::from_f32(blob[r * output + n_base + j]).0);
+                    }
+                }
+                Ok(w)
+            }
+            Layer::Recurrent { input, size, .. } => {
+                let rows = input + size;
+                if blob.len() != rows * size {
+                    return Err(format!(
+                        "layer {li}: recurrent blob {} != {rows}x{size}",
+                        blob.len()
+                    ));
+                }
+                let mut w = Vec::with_capacity(rows * count);
+                for r in 0..rows {
+                    for j in 0..count {
+                        w.push(F16::from_f32(blob[r * size + n_base + j]).0);
+                    }
+                }
+                Ok(w)
+            }
+            Layer::Sparse { input, output, .. } => {
+                // first-fit order must match the fan-in builder: iterate
+                // upstream-major over this core's residents
+                let mut w = Vec::new();
+                for u in 0..*input {
+                    for j in 0..count {
+                        let v = blob[u * output + n_base + j];
+                        if v != 0.0 {
+                            w.push(F16::from_f32(v).0);
+                        }
+                    }
+                }
+                Ok(w)
+            }
+            _ => Ok(Vec::new()),
+        }
+    }
+
+    /// Fan-out tables: for each CC, DEs in flattened (nc, local) order.
+    fn build_fanout(&mut self) -> Result<(), String> {
+        // collect (cc) -> ordered cores
+        let mut by_cc: HashMap<usize, Vec<(u8, usize)>> = HashMap::new();
+        for (mi, _) in self.merged.cores.iter().enumerate() {
+            let (cc, nc) = self.locs[mi];
+            by_cc.entry(cc).or_default().push((nc, mi));
+        }
+        for (&cc, cores) in by_cc.iter_mut() {
+            cores.sort();
+            let mut des: Vec<FanOutDE> = Vec::new();
+            let mut ies: Vec<FanOutIE> = Vec::new();
+            for &(_nc, mi) in cores.iter() {
+                let core = self.merged.cores[mi].clone();
+                for (pi, part) in core.parts.iter().enumerate() {
+                    let li = part.layer;
+                    let _ = pi;
+                    let next = li + 1;
+                    // route IEs for this part's neurons
+                    let it_base = ies.len() as u32;
+                    let mut it_len = 0u32;
+                    if next < self.net.layers.len() {
+                        for (dcc, _) in self.layer_ccs[next].clone() {
+                            let index = *self
+                                .dt_base
+                                .get(&(next, dcc))
+                                .ok_or("missing dt base")?;
+                            let (x, y) = cc_xy(dcc);
+                            ies.push(FanOutIE {
+                                mode: RouteMode::Unicast { x, y },
+                                tag: self.fanin_tag(next, dcc)?,
+                                index,
+                                delay: 0,
+                            });
+                            it_len += 1;
+                        }
+                    }
+                    // recurrent self-connection
+                    let recurrent_off = match &self.net.layers[li] {
+                        Layer::Recurrent { input, .. } => {
+                            for (dcc, _) in self.layer_ccs[li].clone() {
+                                let index =
+                                    *self.dt_base.get(&(li, dcc)).ok_or("missing dt base")?;
+                                let (x, y) = cc_xy(dcc);
+                                ies.push(FanOutIE {
+                                    mode: RouteMode::Unicast { x, y },
+                                    tag: self.fanin_tag(li, dcc)?,
+                                    index,
+                                    delay: 0,
+                                });
+                                it_len += 1;
+                            }
+                            Some(*input)
+                        }
+                        _ => None,
+                    };
+                    for j in 0..part.count {
+                        let global = part.n_base + j;
+                        let axon = match recurrent_off {
+                            // recurrent neurons feed both ahead (axon =
+                            // global upstream id) and back (axon =
+                            // n_inputs + id); the extended-input fold
+                            // makes them the same number space
+                            Some(off) => (off + global) as u16,
+                            None => global as u16,
+                        };
+                        des.push(FanOutDE {
+                            global_axon: axon,
+                            it_base,
+                            it_len,
+                        });
+                    }
+                }
+            }
+            self.tables_of(cc).push_fanout(des, ies);
+        }
+        Ok(())
+    }
+
+    fn fanin_tag(&self, li: usize, cc: usize) -> Result<u16, String> {
+        let base = self.dt_base.get(&(li, cc)).ok_or("missing dt base")?;
+        Ok(self.tables[&cc].fanin_dt[*base as usize].tag)
+    }
+
+    /// Host input packets: one per input channel (per branch for DH-LIF
+    /// first layers; FP-data channels get payload patched at send time).
+    fn build_input_map(&mut self) -> Result<Vec<Vec<Packet>>, String> {
+        let Layer::Input { size } = self.net.layers[0] else {
+            return Err("first layer must be Input".into());
+        };
+        let li = 1;
+        let branches = match self.net.layers[li].neuron_model() {
+            Some(NeuronModel::DhLif { branches, .. }) => branches,
+            _ => 1,
+        };
+        let is_data = matches!(self.net.layers[li], Layer::Sparse { .. });
+        let n_in = match &self.net.layers[li] {
+            Layer::Fc { input, .. } => *input,
+            Layer::Recurrent { input, .. } => *input,
+            Layer::Sparse { input, .. } => *input,
+            _ => return Err("unsupported first layer".into()),
+        };
+        if n_in != size {
+            return Err(format!("input size {size} != first-layer input {n_in}"));
+        }
+        let mut map = Vec::with_capacity(size);
+        for ch in 0..size {
+            let mut pkts = Vec::new();
+            for br in 0..branches {
+                for (dcc, _) in self.layer_ccs[li].clone() {
+                    let base = *self.dt_base.get(&(li, dcc)).ok_or("missing dt base")?;
+                    let (x, y) = cc_xy(dcc);
+                    let index = match &self.net.layers[li] {
+                        // sparse: per-upstream DT entries; fc: per-branch
+                        Layer::Sparse { .. } => base + ch as u16,
+                        _ => base + br as u16,
+                    };
+                    pkts.push(Packet {
+                        ptype: if is_data { PacketType::Data } else { PacketType::Spike },
+                        phase: PacketPhase::Integ,
+                        tag: self.fanin_tag(li, dcc)? as u8,
+                        index,
+                        payload: (br * n_in + ch) as u16,
+                        mode: RouteMode::Unicast { x, y },
+                    });
+                }
+            }
+            map.push(pkts);
+        }
+        Ok(map)
+    }
+
+    /// Error-injection packets (learning) + readout map (host outputs).
+    fn build_host_maps(
+        &mut self,
+    ) -> Result<(Vec<Packet>, HashMap<(usize, u8, u16), usize>), String> {
+        let last = self.net.layers.len() - 1;
+        let mut readout = HashMap::new();
+        for (cc, members) in self.layer_ccs[last].clone() {
+            for (nc, mi, pi) in members {
+                let part = self.merged.cores[mi].parts[pi];
+                let base = self.merged.cores[mi].base_of(pi);
+                for j in 0..part.count {
+                    readout.insert(
+                        (cc, nc, (base + j) as u16),
+                        part.n_base + j,
+                    );
+                }
+            }
+        }
+        let mut error_map = Vec::new();
+        if self.learning {
+            // error lands through the same fan-in path as data: build a
+            // dedicated Type0 block per head CC
+            let tag = self.tag();
+            let n_out = self.net.layers[last].neurons();
+            let mut per_neuron: Vec<Option<Packet>> = vec![None; n_out];
+            for (cc, members) in self.layer_ccs[last].clone() {
+                let mut des = Vec::new();
+                let mut ies = Vec::new();
+                for (nc, mi, pi) in &members {
+                    let part = self.merged.cores[*mi].parts[*pi];
+                    let base = self.merged.cores[*mi].base_of(*pi);
+                    for j in 0..part.count {
+                        des.push(FanInDE {
+                            tag,
+                            ie_type: IeType::Sparse0,
+                            it_base: ies.len() as u32,
+                            it_len: 1,
+                            k2: 0,
+                        });
+                        ies.push(FanInIE::Type0 {
+                            nc: *nc,
+                            neuron: (base + j) as u16,
+                        });
+                    }
+                }
+                let dt = self.tables_of(cc).push_fanin(des, ies);
+                let (x, y) = cc_xy(cc);
+                let mut k = 0;
+                for (_nc, mi, pi) in &members {
+                    let part = self.merged.cores[*mi].parts[*pi];
+                    for j in 0..part.count {
+                        per_neuron[part.n_base + j] = Some(Packet {
+                            ptype: PacketType::Data,
+                            phase: PacketPhase::Integ,
+                            tag: tag as u8,
+                            index: dt + k,
+                            payload: 0, // patched with the error value
+                            mode: RouteMode::Unicast { x, y },
+                        });
+                        k += 1;
+                    }
+                }
+            }
+            error_map = per_neuron
+                .into_iter()
+                .map(|p| p.ok_or("uncovered head neuron".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+        }
+        Ok((error_map, readout))
+    }
+}
+
+/// Type-2 regularity check: one IE can cover the whole CC group iff the
+/// member NCs (in ascending order) all host `margin` neurons except
+/// possibly the last, and every part starts at core-local base 0.
+fn regular_group(
+    merged: &Merged,
+    members: &[(u8, usize, usize)],
+) -> Option<(u16, u16, u16)> {
+    let margin = merged.cores[members[0].1].parts[members[0].2].count as u16;
+    let mut mask = 0u16;
+    let mut total = 0u16;
+    for (k, &(nc, mi, pi)) in members.iter().enumerate() {
+        if merged.cores[mi].base_of(pi) != 0 {
+            return None;
+        }
+        let c = merged.cores[mi].parts[pi].count as u16;
+        if k + 1 < members.len() && c != margin {
+            return None;
+        }
+        if c > margin {
+            return None;
+        }
+        mask |= 1 << nc;
+        total += c;
+    }
+    // decode assigns blocks in ascending set-bit order == ascending nc ✓
+    Some((mask, margin, total))
+}
+
+/// Sparse INTEG with FP-data scaling: `I[n] += w[axon] · payload` —
+/// the floating-point input mode of §III-B (BCI binned rates).
+fn integ_direct_scaled(
+    l: &NcLayout,
+) -> Result<crate::isa::assembler::Program, crate::isa::assembler::AsmError> {
+    use crate::isa::assembler::assemble;
+    let mut src = l.consts();
+    src.push_str(
+        r#"
+    loop:
+        recv
+        ld.f    r6, r2, WEIGHTS
+        cmpi    r4, 2
+        bc.ne   acc
+        mul.f   r6, r6, r3
+    acc:
+        locacc.f r6, r1, CUR
+        b       loop
+    "#,
+    );
+    assemble(&src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::merge::merge;
+    use crate::compiler::partition::{partition, Limits};
+    use crate::compiler::placement;
+    use crate::model;
+
+    fn compile_net(
+        net: &model::NetDef,
+        weights: Vec<Vec<f32>>,
+        learning: bool,
+        neurons_per_nc: usize,
+    ) -> Compiled {
+        let limits = Limits { neurons_per_nc, ..Default::default() };
+        let part = partition(net, &limits);
+        let merged = merge(net, &part, limits.neurons_per_nc, learning);
+        let place = placement::initial(merged.cores.len());
+        codegen(net, &weights, &merged, &place, learning).unwrap()
+    }
+
+    fn fc_weights(input: usize, output: usize, w: f32) -> Vec<f32> {
+        vec![w; input * output]
+    }
+
+    #[test]
+    fn compiles_two_layer_fc_net() {
+        let mut net = model::NetDef::new("fc2", 4);
+        net.layers.push(model::Layer::Input { size: 8 });
+        net.layers.push(model::Layer::Fc {
+            input: 8,
+            output: 16,
+            neuron: model::NeuronModel::Lif { tau: 0.5, vth: 1.0 },
+        });
+        net.layers.push(model::Layer::Fc {
+            input: 16,
+            output: 4,
+            neuron: model::NeuronModel::Readout { tau: 0.9 },
+        });
+        let c = compile_net(
+            &net,
+            vec![vec![], fc_weights(8, 16, 0.2), fc_weights(16, 4, 0.1)],
+            false,
+            256,
+        );
+        assert_eq!(c.config.input_map.len(), 8);
+        assert_eq!(c.readout.len(), 4);
+        assert_eq!(c.used_cores, 2);
+        // every readout index covered exactly once
+        let mut idx: Vec<usize> = c.readout.values().copied().collect();
+        idx.sort();
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn srnn_compiles_with_recurrence() {
+        let net = model::srnn_ecg(true);
+        let w1 = vec![0.1; (4 + 64) * 64];
+        let w2 = vec![0.1; 64 * 6];
+        let c = compile_net(&net, vec![vec![], w1, w2], false, 256);
+        // hidden CC fan-out must include the self-connection IE
+        let hidden_cc = c.cores[0].cc;
+        let tables = &c.config.ccs[&hidden_cc].tables;
+        // neuron 0 of the hidden layer: fan-out to readout + itself
+        let (axon, ies) = tables.fanout(0).unwrap();
+        assert_eq!(axon, 4, "recurrent axon offset = n_inputs + idx");
+        assert_eq!(ies.len(), 2);
+    }
+
+    #[test]
+    fn dhsnn_head_and_branches_compile() {
+        let net = model::dhsnn_shd(true);
+        let w1 = vec![0.05; 4 * 700 * 64];
+        let w2 = vec![0.1; 64 * 20];
+        let c = compile_net(&net, vec![vec![], w1, w2], false, 256);
+        // 4 branch packets per input channel
+        assert_eq!(c.config.input_map.len(), 700);
+        assert_eq!(c.config.input_map[0].len(), 4);
+        assert_eq!(c.config.input_map[0][1].payload, 700 + 0);
+    }
+
+    #[test]
+    fn learning_head_gets_error_map() {
+        let net = model::bci_net(4);
+        let l1 = net.layers[1].connections();
+        let _ = l1;
+        // dense blobs with the sparse patterns implied by density
+        let w1 = sparse_blob(128, 32, 3);
+        let w2 = sparse_blob(32, 32, 5);
+        let w3 = vec![0.1; 32 * 4];
+        let c = compile_net(&net, vec![vec![], w1, w2, w3], true, 64);
+        assert_eq!(c.error_map.len(), 4);
+        assert!(c.cores_saved > 0, "BCI sparse layers should merge");
+    }
+
+    fn sparse_blob(input: usize, output: usize, per_out: usize) -> Vec<f32> {
+        let mut w = vec![0.0f32; input * output];
+        for t in 0..output {
+            for k in 0..per_out {
+                let u = (t * 7 + k * 13) % input;
+                w[u * output + t] = 0.2;
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn regular_group_detection() {
+        use crate::compiler::merge::Core;
+        use crate::compiler::partition::CoreAssign;
+        let mk = |count: usize, n_base: usize| CoreAssign { layer: 1, slot: 0, n_base, count };
+        let merged = Merged {
+            cores: vec![Core::single(mk(10, 0)), Core::single(mk(10, 10)), Core::single(mk(4, 20))],
+            origin: vec![(0, 0), (1, 0), (2, 0)],
+            cores_before: 3,
+        };
+        let members = vec![(0u8, 0usize, 0usize), (1, 1, 0), (2, 2, 0)];
+        let r = regular_group(&merged, &members).unwrap();
+        assert_eq!(r, (0b111, 10, 24));
+        // irregular middle count
+        let merged2 = Merged {
+            cores: vec![Core::single(mk(10, 0)), Core::single(mk(4, 10)), Core::single(mk(10, 14))],
+            origin: vec![(0, 0), (1, 0), (2, 0)],
+            cores_before: 3,
+        };
+        assert!(regular_group(&merged2, &members).is_none());
+    }
+}

@@ -1,0 +1,289 @@
+//! Front-end operator IR + fusion pass (paper Fig 12b: "extracts the
+//! basic operators of the model and fuses multiple operations of a layer
+//! into one operator, such as fusing convolution and BN or pooling into
+//! convolution").
+//!
+//! Front-end graphs arrive as [`OpGraph`]s (what a PyTorch/ONNX importer
+//! would emit); [`fuse`] folds BatchNorm into the preceding conv/fc
+//! weights (the BCI model's "fused weights / fused bias", Fig 9d) and
+//! drops identity ops, yielding the deploy-ready [`crate::model::NetDef`]
+//! plus transformed weight blobs.
+
+use crate::model::{Layer, NetDef, NeuronModel};
+
+/// One front-end operator.
+#[derive(Clone, Debug)]
+pub enum Op {
+    Input { size: usize },
+    Conv { cin: usize, h: usize, w: usize, cout: usize, k: usize, s: usize, p: usize },
+    Fc { input: usize, output: usize },
+    Recurrent { input: usize, size: usize },
+    Sparse { input: usize, output: usize, density: f64 },
+    Pool { c: usize, h: usize, w: usize, k: usize },
+    /// BatchNorm over `c` channels: y = gamma·(x−mean)/sqrt(var+eps)+beta.
+    BatchNorm { c: usize },
+    /// Spiking activation with the given neuron model.
+    Spike(NeuronModel),
+    /// Identity / dropout-at-inference — removed by fusion.
+    Identity,
+}
+
+/// A weight blob attached to an op (f32, layout documented per op).
+#[derive(Clone, Debug, Default)]
+pub struct Blob {
+    /// Conv: `[cout][cin][k][k]`; Fc: `[input][output]`;
+    /// BatchNorm: gamma ++ beta ++ mean ++ var (4·c).
+    pub data: Vec<f32>,
+}
+
+/// The front-end graph: a linear op chain (the paper's app models are
+/// chains; residual skips ride separately, as in [`NetDef::skips`]).
+#[derive(Clone, Debug, Default)]
+pub struct OpGraph {
+    pub name: String,
+    pub ops: Vec<Op>,
+    pub blobs: Vec<Blob>,
+    pub skips: Vec<crate::model::Skip>,
+    pub timesteps: usize,
+}
+
+/// Result of fusion: the deployable net + per-layer weight blobs.
+#[derive(Clone, Debug)]
+pub struct Fused {
+    pub net: NetDef,
+    /// One blob per `net.layers` entry (empty for Input/Pool).
+    pub weights: Vec<Vec<f32>>,
+    /// Fusion log for diagnostics / DESIGN.md §compiler.
+    pub fused_ops: Vec<String>,
+}
+
+/// Fold BN into the preceding linear op and attach spike activations to
+/// their producing layer.
+pub fn fuse(g: &OpGraph) -> Result<Fused, String> {
+    let mut net = NetDef::new(&g.name, g.timesteps);
+    net.skips = g.skips.clone();
+    let mut weights: Vec<Vec<f32>> = Vec::new();
+    let mut fused_ops = Vec::new();
+
+    // pending linear op awaiting its activation (and possible BN)
+    let mut pending: Option<(Layer, Vec<f32>)> = None;
+
+    let flush = |pending: &mut Option<(Layer, Vec<f32>)>,
+                 net: &mut NetDef,
+                 weights: &mut Vec<Vec<f32>>| {
+        if let Some((l, w)) = pending.take() {
+            net.layers.push(l);
+            weights.push(w);
+        }
+    };
+
+    for (i, op) in g.ops.iter().enumerate() {
+        let blob = g.blobs.get(i).cloned().unwrap_or_default();
+        match op {
+            Op::Input { size } => {
+                flush(&mut pending, &mut net, &mut weights);
+                net.layers.push(Layer::Input { size: *size });
+                weights.push(Vec::new());
+            }
+            Op::Conv { cin, h, w, cout, k, s, p } => {
+                flush(&mut pending, &mut net, &mut weights);
+                pending = Some((
+                    Layer::Conv {
+                        cin: *cin,
+                        h: *h,
+                        w: *w,
+                        cout: *cout,
+                        k: *k,
+                        s: *s,
+                        p: *p,
+                        neuron: NeuronModel::Lif { tau: 0.5, vth: 1.0 },
+                    },
+                    blob.data,
+                ));
+            }
+            Op::Fc { input, output } => {
+                flush(&mut pending, &mut net, &mut weights);
+                pending = Some((
+                    Layer::Fc {
+                        input: *input,
+                        output: *output,
+                        neuron: NeuronModel::Lif { tau: 0.5, vth: 1.0 },
+                    },
+                    blob.data,
+                ));
+            }
+            Op::Recurrent { input, size } => {
+                flush(&mut pending, &mut net, &mut weights);
+                pending = Some((
+                    Layer::Recurrent {
+                        input: *input,
+                        size: *size,
+                        neuron: NeuronModel::Lif { tau: 0.5, vth: 1.0 },
+                    },
+                    blob.data,
+                ));
+            }
+            Op::Sparse { input, output, density } => {
+                flush(&mut pending, &mut net, &mut weights);
+                pending = Some((
+                    Layer::Sparse {
+                        input: *input,
+                        output: *output,
+                        density: *density,
+                        neuron: NeuronModel::Lif { tau: 0.5, vth: 1.0 },
+                    },
+                    blob.data,
+                ));
+            }
+            Op::Pool { c, h, w, k } => {
+                flush(&mut pending, &mut net, &mut weights);
+                net.layers.push(Layer::Pool { c: *c, h: *h, w: *w, k: *k });
+                weights.push(Vec::new());
+            }
+            Op::BatchNorm { c } => {
+                let Some((layer, w)) = pending.as_mut() else {
+                    return Err(format!("op {i}: BatchNorm with no preceding linear op"));
+                };
+                fold_bn(layer, w, &blob.data, *c)
+                    .map_err(|e| format!("op {i}: {e}"))?;
+                fused_ops.push(format!("BN({c}) folded into {}", layer_name(layer)));
+            }
+            Op::Spike(model) => {
+                let Some((layer, _)) = pending.as_mut() else {
+                    return Err(format!("op {i}: activation with no producing layer"));
+                };
+                set_neuron(layer, *model);
+            }
+            Op::Identity => {
+                fused_ops.push(format!("identity at op {i} removed"));
+            }
+        }
+    }
+    flush(&mut pending, &mut net, &mut weights);
+    Ok(Fused {
+        net,
+        weights,
+        fused_ops,
+    })
+}
+
+fn layer_name(l: &Layer) -> &'static str {
+    match l {
+        Layer::Conv { .. } => "conv",
+        Layer::Fc { .. } => "fc",
+        Layer::Recurrent { .. } => "recurrent",
+        Layer::Sparse { .. } => "sparse",
+        Layer::Pool { .. } => "pool",
+        Layer::Input { .. } => "input",
+    }
+}
+
+fn set_neuron(l: &mut Layer, m: NeuronModel) {
+    match l {
+        Layer::Conv { neuron, .. }
+        | Layer::Fc { neuron, .. }
+        | Layer::Recurrent { neuron, .. }
+        | Layer::Sparse { neuron, .. } => *neuron = m,
+        _ => {}
+    }
+}
+
+/// Fold y = gamma·(Wx−mean)/sigma + beta into W' = W·gamma/sigma (the
+/// bias lands in the threshold in deployments that need it; paper Fig 9d
+/// "fused weights and fused bias").
+fn fold_bn(layer: &mut Layer, w: &mut [f32], bn: &[f32], c: usize) -> Result<(), String> {
+    if bn.len() != 4 * c {
+        return Err(format!("BN blob must be 4*{c} floats, got {}", bn.len()));
+    }
+    let (gamma, rest) = bn.split_at(c);
+    let (_beta, rest) = rest.split_at(c);
+    let (_mean, var) = rest.split_at(c);
+    let scale: Vec<f32> = gamma
+        .iter()
+        .zip(var)
+        .map(|(g, v)| g / (v + 1e-5).sqrt())
+        .collect();
+    match layer {
+        Layer::Conv { cin, cout, k, .. } => {
+            if w.len() != *cout * *cin * *k * *k {
+                return Err("conv weight blob size mismatch".into());
+            }
+            let per_out = *cin * *k * *k;
+            for co in 0..*cout {
+                for i in 0..per_out {
+                    w[co * per_out + i] *= scale[co % c];
+                }
+            }
+        }
+        Layer::Fc { input, output, .. } => {
+            if w.len() != *input * *output {
+                return Err("fc weight blob size mismatch".into());
+            }
+            for r in 0..*input {
+                for o in 0..*output {
+                    w[r * *output + o] *= scale[o % c];
+                }
+            }
+        }
+        _ => return Err("BN can only fold into conv/fc".into()),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fuses_bn_into_fc_weights() {
+        let mut g = OpGraph {
+            name: "t".into(),
+            timesteps: 4,
+            ..Default::default()
+        };
+        g.ops.push(Op::Input { size: 2 });
+        g.blobs.push(Blob::default());
+        g.ops.push(Op::Fc { input: 2, output: 2 });
+        g.blobs.push(Blob { data: vec![1.0, 2.0, 3.0, 4.0] });
+        // gamma=[2,1], beta=0, mean=0, var=[1,1] → col0 scaled by ~2
+        g.ops.push(Op::BatchNorm { c: 2 });
+        g.blobs.push(Blob { data: vec![2.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 1.0] });
+        g.ops.push(Op::Spike(NeuronModel::Lif { tau: 0.9, vth: 1.0 }));
+        g.blobs.push(Blob::default());
+
+        let f = fuse(&g).unwrap();
+        assert_eq!(f.net.layers.len(), 2);
+        assert_eq!(f.fused_ops.len(), 1);
+        let w = &f.weights[1];
+        assert!((w[0] - 2.0).abs() < 1e-3); // w[0][0] * 2
+        assert!((w[1] - 2.0).abs() < 1e-3); // w[0][1] * 1
+        assert!((w[2] - 6.0).abs() < 1e-3); // w[1][0] * 2
+        // activation attached
+        assert_eq!(
+            f.net.layers[1].neuron_model().unwrap(),
+            NeuronModel::Lif { tau: 0.9, vth: 1.0 }
+        );
+    }
+
+    #[test]
+    fn bn_without_linear_op_errors() {
+        let mut g = OpGraph::default();
+        g.ops.push(Op::BatchNorm { c: 2 });
+        g.blobs.push(Blob { data: vec![0.0; 8] });
+        assert!(fuse(&g).is_err());
+    }
+
+    #[test]
+    fn identity_ops_are_dropped() {
+        let mut g = OpGraph { timesteps: 1, ..Default::default() };
+        g.ops.push(Op::Input { size: 4 });
+        g.blobs.push(Blob::default());
+        g.ops.push(Op::Identity);
+        g.blobs.push(Blob::default());
+        g.ops.push(Op::Fc { input: 4, output: 2 });
+        g.blobs.push(Blob { data: vec![0.0; 8] });
+        let f = fuse(&g).unwrap();
+        assert_eq!(f.net.layers.len(), 2);
+        assert!(f.fused_ops[0].contains("identity"));
+    }
+}

@@ -1,0 +1,176 @@
+//! Resource optimizer (paper Fig 12d): merge under-utilized cores that
+//! run the *same operator* at different layers into one NC, "solving the
+//! problem of low utilization of some core resources … thus reducing the
+//! number of cores required" (§IV-C). The BCI deployment uses this to
+//! cut core count 3.4× (§V-B.3).
+//!
+//! We merge cores whose layers are Sparse-kind with identical neuron
+//! models: their INTEG path (Type-1 direct addressing) is the same
+//! program regardless of layer, so merging is pure table/weight
+//! concatenation — no program dispatch needed.
+
+use crate::model::{Layer, NetDef};
+
+use super::partition::{CoreAssign, Partition};
+
+/// A physical core after merging: one or more layer parts sharing an NC.
+/// `parts[k]`'s neurons occupy local ids starting at `bases[k]`.
+#[derive(Clone, Debug, Default)]
+pub struct Core {
+    pub parts: Vec<CoreAssign>,
+    pub bases: Vec<usize>,
+}
+
+impl Core {
+    pub fn single(a: CoreAssign) -> Core {
+        Core {
+            parts: vec![a],
+            bases: vec![0],
+        }
+    }
+
+    pub fn total_neurons(&self) -> usize {
+        self.parts.iter().map(|p| p.count).sum()
+    }
+
+    /// Local base of `part` k.
+    pub fn base_of(&self, k: usize) -> usize {
+        self.bases[k]
+    }
+}
+
+/// The merged core list plus a map core-index → (physical core, part).
+#[derive(Clone, Debug, Default)]
+pub struct Merged {
+    pub cores: Vec<Core>,
+    /// For each original partition core: (merged core idx, part idx).
+    pub origin: Vec<(usize, usize)>,
+    pub cores_before: usize,
+}
+
+impl Merged {
+    pub fn saved(&self) -> usize {
+        self.cores_before - self.cores.len()
+    }
+}
+
+fn mergeable(a: &Layer, b: &Layer) -> bool {
+    match (a, b) {
+        (
+            Layer::Sparse { neuron: na, .. },
+            Layer::Sparse { neuron: nb, .. },
+        ) => na == nb,
+        _ => false,
+    }
+}
+
+/// Greedy first-fit merge under the capacity limits.
+pub fn merge(
+    net: &NetDef,
+    part: &Partition,
+    neurons_per_nc: usize,
+    enable: bool,
+) -> Merged {
+    let mut out = Merged {
+        cores_before: part.num_cores(),
+        origin: vec![(usize::MAX, 0); part.num_cores()],
+        ..Default::default()
+    };
+    for (ci, &ca) in part.cores.iter().enumerate() {
+        if !enable {
+            out.origin[ci] = (out.cores.len(), 0);
+            out.cores.push(Core::single(ca));
+            continue;
+        }
+        // try to place into an existing compatible core
+        let layer = &net.layers[ca.layer];
+        let mut placed = false;
+        for (mi, m) in out.cores.iter_mut().enumerate() {
+            let head = &net.layers[m.parts[0].layer];
+            if m.parts[0].layer != ca.layer
+                && mergeable(head, layer)
+                && m.total_neurons() + ca.count <= neurons_per_nc
+            {
+                let base = m.total_neurons();
+                m.bases.push(base);
+                m.parts.push(ca);
+                out.origin[ci] = (mi, m.parts.len() - 1);
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            out.origin[ci] = (out.cores.len(), 0);
+            out.cores.push(Core::single(ca));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::partition::{partition, Limits};
+    use crate::model::{self, NeuronModel};
+
+    #[test]
+    fn bci_sparse_layers_merge() {
+        let net = model::bci_net(16);
+        let limits = Limits { neurons_per_nc: 256, ..Default::default() };
+        let part = partition(&net, &limits);
+        let merged = merge(&net, &part, limits.neurons_per_nc, true);
+        assert!(
+            merged.saved() > 0,
+            "expected sparse layers to share cores: {} -> {}",
+            merged.cores_before,
+            merged.cores.len()
+        );
+        // every original core appears exactly once
+        let mut seen = vec![false; part.num_cores()];
+        for (ci, &(m, p)) in merged.origin.iter().enumerate() {
+            assert!(m < merged.cores.len());
+            assert_eq!(merged.cores[m].parts[p], part.cores[ci]);
+            seen[ci] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn disabled_merge_is_identity() {
+        let net = model::bci_net(4);
+        let part = partition(&net, &Limits::default());
+        let merged = merge(&net, &part, 256, false);
+        assert_eq!(merged.saved(), 0);
+        assert_eq!(merged.cores.len(), part.num_cores());
+    }
+
+    #[test]
+    fn capacity_blocks_oversized_merges() {
+        let mut net = model::NetDef::new("t", 1);
+        net.layers.push(model::Layer::Input { size: 10 });
+        let lif = NeuronModel::Lif { tau: 0.5, vth: 1.0 };
+        net.layers.push(model::Layer::Sparse { input: 10, output: 200, density: 0.1, neuron: lif });
+        net.layers.push(model::Layer::Sparse { input: 200, output: 200, density: 0.1, neuron: lif });
+        let part = partition(&net, &Limits { neurons_per_nc: 200, ..Default::default() });
+        // each layer fills a 200-neuron core: no merge possible
+        let merged = merge(&net, &part, 200, true);
+        assert_eq!(merged.saved(), 0);
+    }
+
+    #[test]
+    fn different_neuron_models_do_not_merge() {
+        let mut net = model::NetDef::new("t", 1);
+        net.layers.push(model::Layer::Input { size: 10 });
+        net.layers.push(model::Layer::Sparse {
+            input: 10, output: 8, density: 0.5,
+            neuron: NeuronModel::Lif { tau: 0.5, vth: 1.0 },
+        });
+        net.layers.push(model::Layer::Sparse {
+            input: 8, output: 8, density: 0.5,
+            neuron: NeuronModel::Lif { tau: 0.9, vth: 1.0 },
+        });
+        let part = partition(&net, &Limits::default());
+        let merged = merge(&net, &part, 256, true);
+        assert_eq!(merged.saved(), 0);
+    }
+}

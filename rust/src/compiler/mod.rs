@@ -1,0 +1,150 @@
+//! The TaiBai compiler stack (paper §IV-C, Fig 12): front-end IR →
+//! operator fusion → network partition → resource merge → core placement
+//! → code generation, with the behavioral simulator in the loop as the
+//! evaluation oracle (Fig 12d).
+
+pub mod ir;
+pub mod partition;
+pub mod placement;
+pub mod merge;
+pub mod codegen;
+
+use crate::model::NetDef;
+
+pub use codegen::Compiled;
+pub use partition::Limits;
+
+/// Placement objective (the Fig 13e trade-off knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Pack neurons densely — fewest cores.
+    MinCores,
+    /// Spread layers across cores for parallelism — highest throughput.
+    MaxThroughput,
+    /// Interpolation: `neurons_per_nc` chosen between the extremes.
+    Balanced(usize),
+}
+
+/// End-to-end compile options.
+#[derive(Clone, Debug)]
+pub struct Options {
+    pub limits: Limits,
+    pub objective: Objective,
+    /// Simulated-annealing iterations for placement (0 = zigzag only).
+    pub sa_iters: usize,
+    /// Enable the resource optimizer (core merging).
+    pub merge: bool,
+    /// Deploy on-chip learning on the final layer.
+    pub learning: bool,
+    pub seed: u64,
+    /// Firing-rate estimates per layer (for the traffic matrix).
+    pub rates: Vec<f64>,
+}
+
+impl Default for Options {
+    fn default() -> Options {
+        Options {
+            limits: Limits::default(),
+            objective: Objective::MinCores,
+            sa_iters: 2000,
+            merge: true,
+            learning: false,
+            seed: 0x7a1b41,
+            rates: Vec::new(),
+        }
+    }
+}
+
+/// Compile a network + weights end-to-end into a chip deployment.
+pub fn compile(
+    net: &NetDef,
+    weights: &[Vec<f32>],
+    opts: &Options,
+) -> Result<CompileReport, String> {
+    let mut limits = opts.limits;
+    match opts.objective {
+        Objective::MinCores => {}
+        Objective::MaxThroughput => limits.neurons_per_nc = limits.neurons_per_nc.min(16).max(1),
+        Objective::Balanced(n) => limits.neurons_per_nc = n.max(1),
+    }
+    let part = partition::partition(net, &limits);
+    let merged = merge::merge(net, &part, limits.neurons_per_nc, opts.merge);
+    let traffic = placement::traffic_matrix(net, &part, &opts.rates, 0.1);
+    // traffic is indexed by partition cores; collapse to merged cores
+    let mut mtraffic = vec![vec![0.0; merged.cores.len()]; merged.cores.len()];
+    for (i, row) in traffic.iter().enumerate() {
+        for (j, &t) in row.iter().enumerate() {
+            let (mi, _) = merged.origin[i];
+            let (mj, _) = merged.origin[j];
+            if mi != mj {
+                mtraffic[mi][mj] += t;
+            }
+        }
+    }
+    let init = placement::initial(merged.cores.len());
+    let place = if opts.sa_iters > 0 {
+        placement::optimize(&mtraffic, init, opts.sa_iters, opts.seed)
+    } else {
+        init
+    };
+    let avg_hops = placement::avg_hops(&mtraffic, &place);
+    let compiled = codegen::codegen(net, weights, &merged, &place, opts.learning)?;
+    Ok(CompileReport {
+        avg_hops,
+        placement_cost: placement::cost(&mtraffic, &place),
+        compiled,
+    })
+}
+
+/// Compilation result + placement diagnostics.
+#[derive(Clone, Debug)]
+pub struct CompileReport {
+    pub compiled: Compiled,
+    pub avg_hops: f64,
+    pub placement_cost: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model;
+
+    #[test]
+    fn objectives_trade_cores_for_parallelism() {
+        let net = model::dhsnn_shd(false);
+        let w1 = vec![0.05; 700 * 64];
+        let w2 = vec![0.1; 64 * 20];
+        let weights = vec![vec![], w1, w2];
+
+        let min = compile(&net, &weights, &Options {
+            objective: Objective::MinCores,
+            ..Default::default()
+        })
+        .unwrap();
+        let max = compile(&net, &weights, &Options {
+            objective: Objective::MaxThroughput,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(
+            max.compiled.used_cores > min.compiled.used_cores,
+            "{} !> {}",
+            max.compiled.used_cores,
+            min.compiled.used_cores
+        );
+    }
+
+    #[test]
+    fn sa_placement_does_not_break_codegen() {
+        let net = model::srnn_ecg(false);
+        let weights = vec![vec![], vec![0.1; (4 + 64) * 64], vec![0.1; 64 * 6]];
+        let r = compile(&net, &weights, &Options {
+            sa_iters: 500,
+            rates: vec![0.3, 0.33, 0.2],
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(r.compiled.used_cores >= 2);
+        assert!(r.avg_hops >= 0.0);
+    }
+}

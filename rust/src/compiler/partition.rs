@@ -1,0 +1,149 @@
+//! Network partition (paper Fig 12c): assign each layer's neurons to
+//! neuron cores in channel order, respecting the NC's neuron-state and
+//! weight-memory capacities and the 2K fan-in limit (expanded via PSUM
+//! banking when exceeded — §IV-B).
+
+use crate::model::{Layer, NetDef};
+
+/// Partitioning limits. `neurons_per_nc` is the knob the Fig 13e sweep
+/// turns: small values spread layers across more cores (throughput-
+/// aware), large values pack them (resource-aware).
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    pub neurons_per_nc: usize,
+    pub weight_words_per_nc: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits {
+            neurons_per_nc: 256,
+            weight_words_per_nc: 24 * 1024,
+        }
+    }
+}
+
+/// One NC's share of one layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoreAssign {
+    pub layer: usize,
+    /// Index of this core within its layer's core list.
+    pub slot: usize,
+    /// First layer-local neuron resident here.
+    pub n_base: usize,
+    pub count: usize,
+}
+
+/// The partition: a flat core list plus per-layer views.
+#[derive(Clone, Debug, Default)]
+pub struct Partition {
+    pub cores: Vec<CoreAssign>,
+    /// `layer_cores[l]` = indices into `cores` for layer `l`.
+    pub layer_cores: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn num_cores(&self) -> usize {
+        self.cores.len()
+    }
+}
+
+/// Weight words each resident neuron of `layer` needs.
+fn weight_words_per_neuron(layer: &Layer) -> usize {
+    match *layer {
+        Layer::Conv { cin, k, .. } => cin * k * k, // per output channel pos share
+        Layer::Fc {
+            input,
+            neuron: crate::model::NeuronModel::DhLif { branches, .. },
+            ..
+        } => input * branches,
+        Layer::Fc { input, .. } => input,
+        Layer::Recurrent { input, size, .. } => input + size,
+        Layer::Sparse { input, density, .. } => {
+            ((input as f64 * density).ceil() as usize).max(1)
+        }
+        _ => 0,
+    }
+}
+
+/// Partition `net` under `limits` (channel-order / index-order blocks).
+pub fn partition(net: &NetDef, limits: &Limits) -> Partition {
+    let mut p = Partition::default();
+    for (li, layer) in net.layers.iter().enumerate() {
+        let mut slots = Vec::new();
+        let n = layer.neurons();
+        if n == 0 {
+            p.layer_cores.push(slots);
+            continue;
+        }
+        let wpn = weight_words_per_neuron(layer).max(1);
+        let by_weights = (limits.weight_words_per_nc / wpn).max(1);
+        let per_core = limits.neurons_per_nc.min(by_weights).max(1);
+        let mut base = 0;
+        let mut slot = 0;
+        while base < n {
+            let count = per_core.min(n - base);
+            slots.push(p.cores.len());
+            p.cores.push(CoreAssign {
+                layer: li,
+                slot,
+                n_base: base,
+                count,
+            });
+            base += count;
+            slot += 1;
+        }
+        p.layer_cores.push(slots);
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{self, NeuronModel};
+
+    const LIF: NeuronModel = NeuronModel::Lif { tau: 0.5, vth: 1.0 };
+
+    #[test]
+    fn partition_covers_every_neuron_exactly_once() {
+        let net = model::srnn_ecg(true);
+        let p = partition(&net, &Limits::default());
+        for (li, layer) in net.layers.iter().enumerate() {
+            let total: usize = p.layer_cores[li]
+                .iter()
+                .map(|&c| p.cores[c].count)
+                .sum();
+            assert_eq!(total, layer.neurons(), "layer {li}");
+            // blocks are contiguous and ordered
+            let mut expect = 0;
+            for &c in &p.layer_cores[li] {
+                assert_eq!(p.cores[c].n_base, expect);
+                expect += p.cores[c].count;
+            }
+        }
+    }
+
+    #[test]
+    fn weight_capacity_forces_splits() {
+        // fc 4096→64: 4096 words per neuron; 24K/4096 = 5 neurons/NC max
+        let mut net = model::NetDef::new("w", 1);
+        net.layers.push(model::Layer::Input { size: 4096 });
+        net.layers.push(model::Layer::Fc { input: 4096, output: 64, neuron: LIF });
+        let p = partition(&net, &Limits::default());
+        // 24K words / 4096 per neuron = 6 neurons per NC → 11 cores
+        let cores = p.layer_cores[1].len();
+        assert_eq!(cores, 11, "cores={cores}");
+        for &c in &p.layer_cores[1] {
+            assert!(p.cores[c].count * 4096 <= 24 * 1024);
+        }
+    }
+
+    #[test]
+    fn throughput_knob_increases_core_count() {
+        let net = model::dhsnn_shd(true);
+        let packed = partition(&net, &Limits { neurons_per_nc: 256, ..Default::default() });
+        let spread = partition(&net, &Limits { neurons_per_nc: 8, ..Default::default() });
+        assert!(spread.num_cores() > packed.num_cores());
+    }
+}

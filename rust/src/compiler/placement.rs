@@ -1,0 +1,227 @@
+//! Core placement (paper Fig 12d): map partitioned cores onto the CC
+//! grid. Initial placement follows a zigzag (boustrophedon) space-filling
+//! curve — consecutive cores land in adjacent CCs — then a local-search
+//! optimizer (greedy swaps with simulated-annealing acceptance, §V-B.1:
+//! "genetic algorithms or simulated annealing algorithms are used to
+//! optimize core placement") minimizes traffic-weighted distance, the
+//! congestion proxy the chip simulator feeds back.
+
+use crate::model::NetDef;
+use crate::noc::{cc_xy, MESH_H, MESH_W, NUM_CCS};
+use crate::topology::NCS_PER_CC;
+use crate::util::Rng;
+
+use super::partition::Partition;
+
+/// A placement: `core_slot[i]` = global NC slot (cc·8 + nc) of core `i`,
+/// where CC order follows the zigzag curve.
+#[derive(Clone, Debug, Default)]
+pub struct PlacementMap {
+    pub core_slot: Vec<usize>,
+}
+
+impl PlacementMap {
+    /// (cc, nc) of core `i`.
+    pub fn loc(&self, core: usize) -> (usize, u8) {
+        let slot = self.core_slot[core];
+        (zigzag_cc(slot / NCS_PER_CC), (slot % NCS_PER_CC) as u8)
+    }
+}
+
+/// The n-th CC along the zigzag curve (row-major, alternating direction).
+pub fn zigzag_cc(n: usize) -> usize {
+    let row = n / MESH_W;
+    let col = n % MESH_W;
+    let col = if row % 2 == 0 { col } else { MESH_W - 1 - col };
+    (row % MESH_H) * MESH_W + col
+}
+
+/// Packets per timestep flowing core→core, estimated from layer shapes
+/// and firing rates (fan-out of each source core spreads uniformly over
+/// the destination layer's cores).
+pub fn traffic_matrix(
+    net: &NetDef,
+    part: &Partition,
+    rates: &[f64],
+    default_rate: f64,
+) -> Vec<Vec<f64>> {
+    let n = part.num_cores();
+    let mut t = vec![vec![0.0; n]; n];
+    for li in 1..net.layers.len() {
+        let src_cores = &part.layer_cores[li - 1];
+        let dst_cores = &part.layer_cores[li];
+        if src_cores.is_empty() || dst_cores.is_empty() {
+            continue;
+        }
+        let rate = rates.get(li - 1).copied().unwrap_or(default_rate);
+        for &s in src_cores {
+            let events = part.cores[s].count as f64 * rate;
+            let per_dst = events / dst_cores.len() as f64;
+            for &d in dst_cores {
+                t[s][d] += per_dst;
+            }
+        }
+    }
+    t
+}
+
+/// Manhattan distance between the CCs hosting two slots.
+fn slot_dist(a: usize, b: usize) -> f64 {
+    let (ax, ay) = cc_xy(zigzag_cc(a / NCS_PER_CC));
+    let (bx, by) = cc_xy(zigzag_cc(b / NCS_PER_CC));
+    ((ax as i32 - bx as i32).abs() + (ay as i32 - by as i32).abs()) as f64
+}
+
+/// Traffic-weighted total distance of a placement (the SA objective).
+pub fn cost(traffic: &[Vec<f64>], map: &PlacementMap) -> f64 {
+    let mut c = 0.0;
+    for (i, row) in traffic.iter().enumerate() {
+        for (j, &t) in row.iter().enumerate() {
+            if t > 0.0 {
+                c += t * slot_dist(map.core_slot[i], map.core_slot[j]);
+            }
+        }
+    }
+    c
+}
+
+/// Mean hops per packet under a placement — the `avg_hops` parameter of
+/// the fast analytic model.
+pub fn avg_hops(traffic: &[Vec<f64>], map: &PlacementMap) -> f64 {
+    let mut hops = 0.0;
+    let mut pkts = 0.0;
+    for (i, row) in traffic.iter().enumerate() {
+        for (j, &t) in row.iter().enumerate() {
+            if t > 0.0 {
+                hops += t * slot_dist(map.core_slot[i], map.core_slot[j]);
+                pkts += t;
+            }
+        }
+    }
+    if pkts > 0.0 {
+        hops / pkts
+    } else {
+        0.0
+    }
+}
+
+/// Initial zigzag placement: core `i` → slot `i`.
+pub fn initial(n_cores: usize) -> PlacementMap {
+    assert!(
+        n_cores <= NUM_CCS * NCS_PER_CC,
+        "{n_cores} cores exceed one chip; shard first"
+    );
+    PlacementMap {
+        core_slot: (0..n_cores).collect(),
+    }
+}
+
+/// Simulated-annealing swap optimizer over NC slots.
+pub fn optimize(
+    traffic: &[Vec<f64>],
+    init: PlacementMap,
+    iters: usize,
+    seed: u64,
+) -> PlacementMap {
+    let n = init.core_slot.len();
+    if n < 2 {
+        return init;
+    }
+    let mut rng = Rng::new(seed);
+    let mut cur = init;
+    let mut cur_cost = cost(traffic, &cur);
+    let mut best = cur.clone();
+    let mut best_cost = cur_cost;
+    let t0 = (cur_cost / n as f64).max(1.0);
+    for it in 0..iters {
+        let temp = t0 * (1.0 - it as f64 / iters as f64).max(1e-3);
+        let a = rng.below(n as u64) as usize;
+        let b = rng.below(n as u64) as usize;
+        if a == b {
+            continue;
+        }
+        cur.core_slot.swap(a, b);
+        let c = cost(traffic, &cur);
+        let accept = c <= cur_cost || rng.chance(((cur_cost - c) / temp).exp().min(1.0));
+        if accept {
+            cur_cost = c;
+            if c < best_cost {
+                best_cost = c;
+                best = cur.clone();
+            }
+        } else {
+            cur.core_slot.swap(a, b); // revert
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::partition::{partition, Limits};
+    use crate::model;
+
+    #[test]
+    fn zigzag_visits_each_cc_once_adjacent_steps() {
+        let mut seen = vec![false; NUM_CCS];
+        let mut prev = None;
+        for n in 0..NUM_CCS {
+            let cc = zigzag_cc(n);
+            assert!(!seen[cc]);
+            seen[cc] = true;
+            if let Some(p) = prev {
+                let (px, py) = cc_xy(p);
+                let (cx, cy) = cc_xy(cc);
+                let d = (px as i32 - cx as i32).abs() + (py as i32 - cy as i32).abs();
+                assert_eq!(d, 1, "zigzag step {n} not adjacent");
+            }
+            prev = Some(cc);
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sa_never_worsens_the_best_cost() {
+        let net = model::dhsnn_shd(true);
+        let part = partition(&net, &Limits { neurons_per_nc: 8, ..Default::default() });
+        let traffic = traffic_matrix(&net, &part, &[0.012, 0.025], 0.1);
+        let init = initial(part.num_cores());
+        let c0 = cost(&traffic, &init);
+        let opt = optimize(&traffic, init, 2000, 42);
+        let c1 = cost(&traffic, &opt);
+        assert!(c1 <= c0 + 1e-9, "SA worsened cost: {c0} -> {c1}");
+    }
+
+    #[test]
+    fn optimized_placement_lowers_avg_hops_for_scattered_init() {
+        let net = model::dhsnn_shd(true);
+        let part = partition(&net, &Limits { neurons_per_nc: 4, ..Default::default() });
+        let traffic = traffic_matrix(&net, &part, &[0.012, 0.025], 0.1);
+        // adversarial init: reverse order scatters talking cores apart
+        let n = part.num_cores();
+        let bad = PlacementMap {
+            core_slot: (0..n).map(|i| i * (NUM_CCS * NCS_PER_CC) / n.max(1)).collect(),
+        };
+        let h0 = avg_hops(&traffic, &bad);
+        let opt = optimize(&traffic, bad, 4000, 7);
+        let h1 = avg_hops(&traffic, &opt);
+        assert!(h1 < h0, "hops {h0} -> {h1}");
+    }
+
+    #[test]
+    fn traffic_matrix_respects_rates() {
+        let net = model::srnn_ecg(true);
+        let part = partition(&net, &Limits::default());
+        let t_lo = traffic_matrix(&net, &part, &[0.1], 0.1);
+        let t_hi = traffic_matrix(&net, &part, &[0.4], 0.4);
+        let sum = |t: &Vec<Vec<f64>>| -> f64 { t.iter().flatten().sum() };
+        assert!(sum(&t_hi) > sum(&t_lo) * 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed one chip")]
+    fn oversubscription_panics() {
+        initial(NUM_CCS * NCS_PER_CC + 1);
+    }
+}

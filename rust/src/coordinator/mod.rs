@@ -1,0 +1,331 @@
+//! The host-machine coordinator (paper §V-A: the host streams sample
+//! data to the chip, collects results, and repeats). This is the Layer-3
+//! driver that owns a deployed chip: it injects input packets per
+//! timestep, gathers readout values, clears dynamic state between
+//! samples, and drives the on-chip learning loop (error injection for
+//! the BCI cross-day fine-tune).
+
+use crate::chip::{config::ChipConfig, Chip};
+use crate::compiler::Compiled;
+use crate::datasets::{DenseSample, SpikeSample};
+use crate::nc::Trap;
+use crate::noc::Packet;
+use crate::util::F16;
+
+/// A deployed model: chip + compilation metadata.
+pub struct Deployment {
+    pub chip: Chip,
+    pub compiled: Compiled,
+    n_outputs: usize,
+}
+
+/// Per-sample run result: readout values per timestep.
+#[derive(Clone, Debug)]
+pub struct SampleRun {
+    /// `outputs[t][k]` = readout neuron k's value at timestep t.
+    pub outputs: Vec<Vec<f32>>,
+    pub spikes: u64,
+    pub packets: u64,
+}
+
+impl SampleRun {
+    /// Sum of readout values across timesteps (rate-style decoding).
+    pub fn summed(&self) -> Vec<f32> {
+        let k = self.outputs.first().map(|o| o.len()).unwrap_or(0);
+        let mut s = vec![0.0; k];
+        for row in &self.outputs {
+            for (i, v) in row.iter().enumerate() {
+                s[i] += v;
+            }
+        }
+        s
+    }
+}
+
+impl Deployment {
+    /// Configure a fresh chip with a compiled deployment (INIT stage).
+    pub fn new(compiled: Compiled) -> Deployment {
+        let mut chip = Chip::new(crate::nc::DEFAULT_DATA_WORDS);
+        chip.configure(&compiled.config);
+        let n_outputs = compiled.readout.len();
+        Deployment {
+            chip,
+            compiled,
+            n_outputs,
+        }
+    }
+
+    pub fn config(&self) -> &ChipConfig {
+        &self.compiled.config
+    }
+
+    /// Run one spike-train sample (ECG / SHD style inputs).
+    pub fn run_spikes(&mut self, sample: &SpikeSample) -> Result<SampleRun, Trap> {
+        let t_max = sample.spikes.len();
+        let mut run = SampleRun {
+            outputs: Vec::with_capacity(t_max),
+            spikes: 0,
+            packets: 0,
+        };
+        for t in 0..t_max {
+            let mut packets: Vec<Packet> = Vec::new();
+            for &ch in &sample.spikes[t] {
+                packets.extend(self.compiled.config.input_map[ch as usize].iter().copied());
+            }
+            self.step_into(&packets, &mut run)?;
+        }
+        Ok(run)
+    }
+
+    /// Run one dense-valued sample (BCI binned rates — FP input mode).
+    pub fn run_values(&mut self, sample: &DenseSample) -> Result<SampleRun, Trap> {
+        let mut run = SampleRun {
+            outputs: Vec::with_capacity(sample.values.len()),
+            spikes: 0,
+            packets: 0,
+        };
+        for row in &sample.values {
+            let mut packets: Vec<Packet> = Vec::new();
+            for (ch, &v) in row.iter().enumerate() {
+                if v == 0.0 {
+                    continue; // zero bins carry no information: stay sparse
+                }
+                for tpl in &self.compiled.config.input_map[ch] {
+                    let mut p = *tpl;
+                    p.payload = F16::from_f32(v).0;
+                    packets.push(p);
+                }
+            }
+            self.step_into(&packets, &mut run)?;
+        }
+        Ok(run)
+    }
+
+    fn step_into(&mut self, packets: &[Packet], run: &mut SampleRun) -> Result<(), Trap> {
+        let res = self.chip.step(packets)?;
+        run.spikes += res.spikes;
+        run.packets += res.packets_routed;
+        let mut row = vec![0.0f32; self.n_outputs];
+        for h in &res.outputs {
+            if let Some(&k) = self.compiled.readout.get(&(h.cc, h.nc, h.neuron)) {
+                row[k] = F16(h.value).to_f32();
+            }
+        }
+        run.outputs.push(row);
+        Ok(())
+    }
+
+    /// Inject per-output-neuron errors and trigger the on-chip learning
+    /// update (one Learn sweep in the next FIRE stage).
+    pub fn learn_step(&mut self, errors: &[f32]) -> Result<(), Trap> {
+        assert_eq!(errors.len(), self.compiled.error_map.len());
+        let mut packets = Vec::with_capacity(errors.len());
+        for (k, &e) in errors.iter().enumerate() {
+            let mut p = self.compiled.error_map[k];
+            p.payload = F16::from_f32(e).0;
+            packets.push(p);
+        }
+        // deliver errors (INTEG) and run a FIRE stage (Learn events fire
+        // because the head cores are configured with `learn = true`)
+        self.chip.step(&packets)?;
+        Ok(())
+    }
+
+    /// Zero all dynamic state (membrane, currents, adaptation, learning
+    /// accumulators, errors) — between samples. Weights and parameters
+    /// survive.
+    pub fn reset_state(&mut self) {
+        self.chip.flush_packets();
+        for core in &self.compiled.cores.clone() {
+            let l = core.layout;
+            // [cur, params) — currents + membrane
+            let n = (l.params - l.cur) as usize;
+            self.chip.poke(core.cc, core.nc, l.cur, &vec![0u16; n]);
+            // [adapt, itof) — adaptation, acc counters, errors
+            let n2 = (l.itof - l.adapt) as usize;
+            self.chip.poke(core.cc, core.nc, l.adapt, &vec![0u16; n2]);
+        }
+    }
+
+    /// Read back a weight region (host monitoring path) — used by tests
+    /// and the learning demo to show weights actually moved.
+    pub fn peek_weights(&self, core_idx: usize, n: usize) -> Vec<f32> {
+        let core = &self.compiled.cores[core_idx];
+        self.chip
+            .peek(core.cc, core.nc, core.layout.weights, n)
+            .into_iter()
+            .map(|w| F16(w).to_f32())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{self, Options};
+    use crate::datasets::SpikeSample;
+    use crate::model;
+
+    /// A hand-buildable 2-layer net: 4 inputs → 3 LIF → 2 readout.
+    fn tiny_net() -> (model::NetDef, Vec<Vec<f32>>) {
+        let mut net = model::NetDef::new("tiny", 5);
+        net.layers.push(model::Layer::Input { size: 4 });
+        net.layers.push(model::Layer::Fc {
+            input: 4,
+            output: 3,
+            neuron: model::NeuronModel::Lif { tau: 0.5, vth: 0.9 },
+        });
+        net.layers.push(model::Layer::Fc {
+            input: 3,
+            output: 2,
+            neuron: model::NeuronModel::Readout { tau: 0.5 },
+        });
+        // input->hidden: channel i drives neuron i%3 strongly
+        let mut w1 = vec![0.0f32; 4 * 3];
+        for i in 0..4 {
+            w1[i * 3 + i % 3] = 1.0;
+        }
+        // hidden->readout: neuron 0,1 -> out 0; neuron 2 -> out 1
+        let w2 = vec![0.6, 0.0, 0.6, 0.0, 0.0, 0.6];
+        (net, vec![vec![], w1, w2])
+    }
+
+    fn deploy(net: &model::NetDef, weights: &[Vec<f32>], learning: bool) -> Deployment {
+        let r = compiler::compile(
+            net,
+            weights,
+            &Options {
+                learning,
+                sa_iters: 200,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        Deployment::new(r.compiled)
+    }
+
+    #[test]
+    fn end_to_end_spike_flow_reaches_readout() {
+        let (net, weights) = tiny_net();
+        let mut d = deploy(&net, &weights, false);
+        // drive channel 0 every step: hidden neuron 0 fires, readout 0
+        // integrates (2-step pipeline latency: t spike -> t+1 hidden
+        // fires -> t+2 readout sees it)
+        let sample = SpikeSample {
+            spikes: vec![vec![0u16]; 6],
+            labels: vec![0],
+        };
+        let run = d.run_spikes(&sample).unwrap();
+        assert!(run.spikes > 0, "hidden layer never fired");
+        let summed = run.summed();
+        assert!(
+            summed[0] > summed[1],
+            "readout 0 should dominate: {summed:?}"
+        );
+    }
+
+    #[test]
+    fn reset_state_silences_the_chip() {
+        let (net, weights) = tiny_net();
+        let mut d = deploy(&net, &weights, false);
+        let sample = SpikeSample {
+            spikes: vec![vec![0u16, 1, 2, 3]; 4],
+            labels: vec![0],
+        };
+        d.run_spikes(&sample).unwrap();
+        d.reset_state();
+        // with no input, a reset chip must produce zero readout
+        let quiet = SpikeSample {
+            spikes: vec![vec![]; 3],
+            labels: vec![0],
+        };
+        let run = d.run_spikes(&quiet).unwrap();
+        assert_eq!(run.spikes, 0);
+        assert!(run.summed().iter().all(|&v| v == 0.0), "{:?}", run.summed());
+    }
+
+    #[test]
+    fn weights_survive_reset() {
+        let (net, weights) = tiny_net();
+        let mut d = deploy(&net, &weights, false);
+        let before = d.peek_weights(0, 6);
+        d.reset_state();
+        assert_eq!(before, d.peek_weights(0, 6));
+        assert!(before.iter().any(|&w| w != 0.0));
+    }
+
+    #[test]
+    fn srnn_recurrence_sustains_activity() {
+        // recurrent weights keep the hidden layer firing after input stops
+        let mut net = model::NetDef::new("rec", 8);
+        net.layers.push(model::Layer::Input { size: 2 });
+        net.layers.push(model::Layer::Recurrent {
+            input: 2,
+            size: 4,
+            neuron: model::NeuronModel::Lif { tau: 0.9, vth: 0.5 },
+        });
+        net.layers.push(model::Layer::Fc {
+            input: 4,
+            output: 1,
+            neuron: model::NeuronModel::Readout { tau: 0.9 },
+        });
+        // strong input + strong self-excitation
+        let mut w1 = vec![0.0f32; (2 + 4) * 4];
+        for i in 0..2 {
+            w1[i * 4 + i] = 1.0; // input i -> hidden i
+        }
+        for j in 0..4 {
+            w1[(2 + j) * 4 + (j + 1) % 4] = 0.8; // ring recurrence
+        }
+        let w2 = vec![0.5; 4];
+        let mut d = deploy(&net, &vec![vec![], w1, w2], false);
+        // one input burst at t=0 only
+        let mut spikes = vec![vec![]; 8];
+        spikes[0] = vec![0u16, 1];
+        let run = d
+            .run_spikes(&SpikeSample { spikes, labels: vec![0] })
+            .unwrap();
+        // ring should keep spiking well past the input burst
+        assert!(run.spikes >= 4, "recurrence died: {} spikes", run.spikes);
+    }
+
+    #[test]
+    fn on_chip_learning_moves_head_weights() {
+        let net = model::bci_net(2);
+        let n_in = 2 * 8;
+        let mut w = Vec::new();
+        w.push(vec![]);
+        // sparse blobs
+        let mut w1 = vec![0.0f32; 128 * 16];
+        for t in 0..16 {
+            for k in 0..8 {
+                w1[((t * 8 + k) % 128) * 16 + t] = 0.3;
+            }
+        }
+        w.push(w1);
+        let mut w2 = vec![0.0f32; 16 * 16];
+        for t in 0..16 {
+            w2[((t * 3) % 16) * 16 + t] = 1.5; // strong enough to relay spikes
+        }
+        w.push(w2);
+        w.push(vec![0.05f32; n_in * 4]);
+        let mut d = deploy(&net, &w, true);
+
+        // find the head core (layer 3)
+        let head = d
+            .compiled
+            .cores
+            .iter()
+            .position(|c| c.parts.iter().any(|p| p.0 == 3))
+            .unwrap();
+        let before = d.peek_weights(head, 8);
+        // run a real dense sample so layer-2 spikes reach the head and
+        // charge its presynaptic accumulators, then inject errors
+        let s = crate::datasets::bci::sample(0, 0, &mut crate::util::Rng::new(3));
+        let run = d.run_values(&s).unwrap();
+        assert!(run.spikes > 0, "no spikes reached the head");
+        d.learn_step(&[0.5, -0.5, 0.25, -0.25]).unwrap();
+        let after = d.peek_weights(head, 8);
+        assert_ne!(before, after, "learning did not touch the head weights");
+    }
+}

@@ -1,0 +1,118 @@
+//! Macaque-M1-like synthetic BCI data (paper §V-B.3): 128-channel binned
+//! firing rates (20 ms windows → 50 bins), 4 hand-movement classes,
+//! recorded over 8 "days" with per-day covariate drift — the signal
+//! degradation that motivates cross-day on-chip fine-tuning.
+
+use super::DenseSample;
+use crate::util::Rng;
+
+pub const CHANNELS: usize = 128;
+pub const BINS: usize = 50;
+pub const CLASSES: usize = 4;
+pub const DAYS: usize = 8;
+
+/// Per-class movement template: directional tuning over channels with a
+/// bell-shaped temporal envelope.
+fn class_rate(class: usize, ch: usize, bin: usize) -> f32 {
+    let pref = (class as f32) * std::f32::consts::FRAC_PI_2;
+    let tuning = ((ch as f32 * 0.197).sin() * pref.cos()
+        + (ch as f32 * 0.311).cos() * pref.sin())
+    .max(-0.8);
+    let t = bin as f32 / BINS as f32;
+    let envelope = (-8.0 * (t - 0.45) * (t - 0.45)).exp();
+    (1.0 + tuning) * envelope
+}
+
+/// Day drift: a smooth per-channel gain + offset that changes day to day
+/// (electrode impedance / unit turnover proxy).
+fn day_gain(day: usize, ch: usize) -> (f32, f32) {
+    let x = (day * 131 + ch * 17) as f32;
+    let gain = 1.0 + 0.25 * (day as f32 / DAYS as f32) * (x * 0.7).sin();
+    let offset = 0.15 * (day as f32 / DAYS as f32) * (x * 1.3).cos();
+    (gain, offset)
+}
+
+/// One trial of `class` recorded on `day`.
+pub fn sample(class: usize, day: usize, rng: &mut Rng) -> DenseSample {
+    assert!(class < CLASSES && day < DAYS);
+    let mut values = Vec::with_capacity(BINS);
+    for bin in 0..BINS {
+        let mut row = Vec::with_capacity(CHANNELS);
+        for ch in 0..CHANNELS {
+            let (gain, offset) = day_gain(day, ch);
+            let r = class_rate(class, ch, bin) * gain + offset;
+            // Poisson-ish bin noise
+            let noisy = r + rng.normal() as f32 * 0.25 * (r.abs() + 0.2).sqrt();
+            row.push(noisy.max(0.0));
+        }
+        values.push(row);
+    }
+    DenseSample {
+        values,
+        label: class,
+    }
+}
+
+/// `trials` per class for one day.
+pub fn day_dataset(day: usize, trials: usize, seed: u64) -> Vec<DenseSample> {
+    let mut rng = Rng::new(seed ^ (day as u64).wrapping_mul(0x9e37_79b9));
+    let mut out = Vec::new();
+    for class in 0..CLASSES {
+        for _ in 0..trials {
+            out.push(sample(class, day, &mut rng));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn centroid(ds: &[DenseSample], class: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; CHANNELS];
+        let mut n = 0;
+        for s in ds.iter().filter(|s| s.label == class) {
+            for row in &s.values {
+                for (i, v) in row.iter().enumerate() {
+                    c[i] += v;
+                }
+            }
+            n += 1;
+        }
+        c.iter_mut().for_each(|v| *v /= (n * BINS) as f32);
+        c
+    }
+
+    fn dist(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt()
+    }
+
+    #[test]
+    fn classes_separate_within_a_day() {
+        let ds = day_dataset(0, 10, 7);
+        let c0 = centroid(&ds, 0);
+        let c1 = centroid(&ds, 1);
+        assert!(dist(&c0, &c1) > 0.5, "classes not separable");
+    }
+
+    #[test]
+    fn cross_day_drift_exists_and_grows() {
+        let d0 = day_dataset(0, 10, 7);
+        let d1 = day_dataset(1, 10, 7);
+        let d7 = day_dataset(7, 10, 7);
+        let c0 = centroid(&d0, 2);
+        let drift1 = dist(&c0, &centroid(&d1, 2));
+        let drift7 = dist(&c0, &centroid(&d7, 2));
+        assert!(drift7 > drift1, "drift must grow across days: {drift1} vs {drift7}");
+        assert!(drift7 > 0.2, "late-day drift too small to matter");
+    }
+
+    #[test]
+    fn shapes_match_paper() {
+        let s = sample(3, 5, &mut Rng::new(1));
+        assert_eq!(s.values.len(), BINS);
+        assert_eq!(s.values[0].len(), CHANNELS);
+        assert!(s.values.iter().flatten().all(|&v| v >= 0.0));
+    }
+}

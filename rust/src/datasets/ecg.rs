@@ -1,0 +1,154 @@
+//! QTDB-like synthetic ECG (paper §V-B.3): two-lead waveforms built from
+//! P–QRS–T morphology, labeled per timestep with the six characteristic
+//! bands (P, PQ, QR, RS, ST, TP), level-crossing coded into 4 spike
+//! channels × 1301 timesteps.
+
+use super::{level_crossing, SpikeSample};
+use crate::util::Rng;
+
+pub const TIMESTEPS: usize = 1301;
+pub const CHANNELS: usize = 4; // 2 leads × (pos, neg)
+pub const CLASSES: usize = 6;
+
+/// Band labels.
+pub const BANDS: [&str; CLASSES] = ["P", "PQ", "QR", "RS", "ST", "TP"];
+
+/// Gaussian bump helper.
+fn bump(t: f32, center: f32, width: f32, amp: f32) -> f32 {
+    let d = (t - center) / width;
+    amp * (-0.5 * d * d).exp()
+}
+
+/// One synthetic heartbeat cycle sampled at `n` points, returning
+/// (lead1, lead2, band label per point).
+fn beat(n: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<usize>) {
+    // band boundaries as fractions of the cycle (jittered per beat)
+    let jit = |x: f32, r: &mut Rng| x + (r.f32() - 0.5) * 0.02;
+    let p_start = jit(0.00, rng);
+    let p_end = jit(0.12, rng); // P wave
+    let q_start = jit(0.20, rng); // PQ segment ends
+    let r_peak = jit(0.28, rng); // QR rising
+    let s_end = jit(0.36, rng); // RS falling
+    let t_end = jit(0.60, rng); // ST + T wave
+    let amp_r = 2.0 + rng.f32() * 0.8;
+    let amp_p = 0.25 + rng.f32() * 0.1;
+    let amp_t = 0.5 + rng.f32() * 0.2;
+
+    let mut l1 = Vec::with_capacity(n);
+    let mut l2 = Vec::with_capacity(n);
+    let mut lab = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = i as f32 / n as f32;
+        let v = bump(t, (p_start + p_end) / 2.0, 0.03, amp_p)
+            + bump(t, r_peak, 0.015, amp_r)
+            - bump(t, (r_peak + s_end) / 2.0 + 0.03, 0.012, amp_r * 0.3)
+            + bump(t, (s_end + t_end) / 2.0 + 0.05, 0.05, amp_t);
+        let noise = (rng.f32() - 0.5) * 0.04;
+        l1.push(v + noise);
+        l2.push(0.7 * v + bump(t, r_peak, 0.02, 0.5) + (rng.f32() - 0.5) * 0.04);
+        let band = if t < p_end {
+            0 // P
+        } else if t < q_start {
+            1 // PQ
+        } else if t < r_peak {
+            2 // QR
+        } else if t < s_end {
+            3 // RS
+        } else if t < t_end {
+            4 // ST
+        } else {
+            5 // TP
+        };
+        lab.push(band);
+    }
+    (l1, l2, lab)
+}
+
+/// Generate one QTDB-like recording: ~4 beats over 1301 steps.
+pub fn sample(rng: &mut Rng) -> SpikeSample {
+    let beats = 4;
+    let per = TIMESTEPS / beats;
+    let mut l1 = Vec::with_capacity(TIMESTEPS);
+    let mut l2 = Vec::with_capacity(TIMESTEPS);
+    let mut labels = Vec::with_capacity(TIMESTEPS);
+    for _ in 0..beats {
+        let (a, b, l) = beat(per, rng);
+        l1.extend(a);
+        l2.extend(b);
+        labels.extend(l);
+    }
+    while l1.len() < TIMESTEPS {
+        l1.push(0.0);
+        l2.push(0.0);
+        labels.push(5);
+    }
+    let delta = 0.04; // tuned for ~33% aggregate spike rate (paper)
+    let (p1, n1) = level_crossing(&l1, delta);
+    let (p2, n2) = level_crossing(&l2, delta);
+    let mut spikes = Vec::with_capacity(TIMESTEPS);
+    for t in 0..TIMESTEPS {
+        let mut at = Vec::new();
+        if p1[t] {
+            at.push(0u16);
+        }
+        if n1[t] {
+            at.push(1);
+        }
+        if p2[t] {
+            at.push(2);
+        }
+        if n2[t] {
+            at.push(3);
+        }
+        spikes.push(at);
+    }
+    SpikeSample { spikes, labels }
+}
+
+/// A dataset of `n` recordings.
+pub fn dataset(n: usize, seed: u64) -> Vec<SpikeSample> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| sample(&mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_the_paper() {
+        let s = sample(&mut Rng::new(1));
+        assert_eq!(s.spikes.len(), TIMESTEPS);
+        assert_eq!(s.labels.len(), TIMESTEPS);
+        assert!(s.labels.iter().all(|&l| l < CLASSES));
+    }
+
+    #[test]
+    fn all_bands_appear() {
+        let s = sample(&mut Rng::new(2));
+        for band in 0..CLASSES {
+            assert!(s.labels.contains(&band), "band {band} missing");
+        }
+    }
+
+    #[test]
+    fn spike_rate_near_paper_33_percent() {
+        // paper: "the spike firing rate in the ECG recognition task is
+        // high (33%)" — aggregate over the 4 channels
+        let ds = dataset(8, 3);
+        let rate: f64 =
+            ds.iter().map(|s| s.rate(CHANNELS)).sum::<f64>() / ds.len() as f64;
+        assert!(
+            rate > 0.05 && rate < 0.5,
+            "rate {rate} wildly off the paper's regime"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = dataset(2, 42);
+        let b = dataset(2, 42);
+        assert_eq!(a[0].spikes, b[0].spikes);
+        assert_eq!(a[1].labels, b[1].labels);
+    }
+}

@@ -1,0 +1,504 @@
+//! Two-pass assembler for the TaiBai ISA.
+//!
+//! The paper implements its assembler with flex/bison (§V-B.1); ours is a
+//! hand-written two-pass assembler with the same job: turn neuron-model /
+//! learning-rule source into NC program images.
+//!
+//! Syntax:
+//! ```text
+//! ; comment            # comment
+//! .const WBASE 0x100   ; symbolic constant
+//! loop:                ; label
+//!     recv
+//!     ld.f   r5, r2, WBASE     ; dtype suffix: .f = FP16, .i = INT16
+//!     locacc.f r5, r1, CUR
+//!     cmpi   r4, 1
+//!     bc.eq  fire
+//!     addc.ge.f r6, r6, r7     ; predicated arithmetic: cond then dtype
+//!     b      loop
+//! fire:
+//!     send   r5, r1, 0
+//!     halt
+//! ```
+//! Immediates: decimal, `0x` hex, or a `.const` symbol. Branch targets:
+//! labels (absolute instruction index).
+
+use super::{DType, Instr, Opcode, IMM17_MAX, IMM17_MIN, IMM_MAX, IMM_MIN};
+use super::Cond;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+/// Assemble source text into a program image (decoded instructions) plus
+/// the label table (used by callers to locate entry points).
+pub fn assemble(src: &str) -> Result<Program, AsmError> {
+    let mut consts: HashMap<String, i32> = HashMap::new();
+    let mut labels: HashMap<String, usize> = HashMap::new();
+    let mut items: Vec<(usize, String)> = Vec::new(); // (line_no, instr text)
+
+    // Pass 1: strip comments, collect consts + labels, index instructions.
+    for (ln, raw) in src.lines().enumerate() {
+        let line = raw.split(';').next().unwrap().split('#').next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix(".const") {
+            let mut parts = rest.split_whitespace();
+            let name = parts
+                .next()
+                .ok_or_else(|| err(ln, ".const needs a name"))?;
+            let val = parts
+                .next()
+                .ok_or_else(|| err(ln, ".const needs a value"))?;
+            let v = parse_int(val, &consts).map_err(|m| err(ln, &m))?;
+            consts.insert(name.to_string(), v);
+            continue;
+        }
+        let mut rest = line;
+        // Possibly multiple labels then an instruction on one line.
+        while let Some(colon) = rest.find(':') {
+            let (lab, after) = rest.split_at(colon);
+            let lab = lab.trim();
+            if lab.is_empty() || lab.contains(char::is_whitespace) {
+                break; // not a label — could be an operand (none use ':')
+            }
+            if labels.insert(lab.to_string(), items.len()).is_some() {
+                return Err(err(ln, &format!("duplicate label {lab:?}")));
+            }
+            rest = after[1..].trim();
+        }
+        if !rest.is_empty() {
+            items.push((ln, rest.to_string()));
+        }
+    }
+
+    // Pass 2: encode.
+    let mut code = Vec::with_capacity(items.len());
+    for (ln, text) in &items {
+        let instr = parse_instr(text, &consts, &labels).map_err(|m| err(*ln, &m))?;
+        code.push(instr);
+    }
+    Ok(Program { code, labels })
+}
+
+/// An assembled program image.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub code: Vec<Instr>,
+    pub labels: HashMap<String, usize>,
+}
+
+impl Program {
+    pub fn entry(&self, label: &str) -> Option<usize> {
+        self.labels.get(label).copied()
+    }
+
+    /// Binary image (little-endian 32-bit words) — what the config packets
+    /// carry to the chip.
+    pub fn to_words(&self) -> Vec<u32> {
+        self.code.iter().map(|i| i.encode()).collect()
+    }
+
+    pub fn from_words(words: &[u32]) -> Option<Program> {
+        let code = words
+            .iter()
+            .map(|&w| Instr::decode(w))
+            .collect::<Option<Vec<_>>>()?;
+        Some(Program {
+            code,
+            labels: HashMap::new(),
+        })
+    }
+}
+
+fn err(line: usize, msg: &str) -> AsmError {
+    AsmError {
+        line: line + 1,
+        msg: msg.to_string(),
+    }
+}
+
+fn parse_int(s: &str, consts: &HashMap<String, i32>) -> Result<i32, String> {
+    let s = s.trim();
+    if let Some(v) = consts.get(s) {
+        return Ok(*v);
+    }
+    let (neg, body) = match s.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, s),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x").or_else(|| body.strip_prefix("0X")) {
+        i32::from_str_radix(hex, 16).map_err(|_| format!("bad hex literal {s:?}"))?
+    } else {
+        body.parse::<i32>().map_err(|_| format!("bad integer {s:?}"))?
+    };
+    Ok(if neg { -v } else { v })
+}
+
+fn parse_reg(s: &str) -> Result<u8, String> {
+    let s = s.trim();
+    let n = s
+        .strip_prefix('r')
+        .or_else(|| s.strip_prefix('R'))
+        .ok_or_else(|| format!("expected register, got {s:?}"))?;
+    let v: u8 = n.parse().map_err(|_| format!("bad register {s:?}"))?;
+    if v as usize >= super::NUM_REGS {
+        return Err(format!("register {s:?} out of range"));
+    }
+    Ok(v)
+}
+
+fn parse_imm(
+    s: &str,
+    consts: &HashMap<String, i32>,
+    labels: &HashMap<String, usize>,
+    wide: bool,
+) -> Result<i32, String> {
+    let s = s.trim();
+    let v = if let Some(&target) = labels.get(s) {
+        target as i32
+    } else {
+        parse_int(s, consts)?
+    };
+    let (lo, hi) = if wide { (IMM17_MIN, IMM17_MAX) } else { (IMM_MIN, IMM_MAX) };
+    if !(lo..=hi).contains(&v) {
+        return Err(format!("immediate {v} out of range [{lo}, {hi}]"));
+    }
+    Ok(v)
+}
+
+fn opcode_by_name(name: &str) -> Option<Opcode> {
+    use Opcode::*;
+    Some(match name {
+        "nop" => Nop,
+        "recv" => Recv,
+        "send" => Send,
+        "findidx" => Findidx,
+        "locacc" => Locacc,
+        "diff" => Diff,
+        "add" => Add,
+        "sub" => Sub,
+        "mul" => Mul,
+        "addc" => Addc,
+        "subc" => Subc,
+        "mulc" => Mulc,
+        "and" => And,
+        "or" => Or,
+        "xor" => Xor,
+        "cmp" => Cmp,
+        "mov" => Mov,
+        "movi" => Movi,
+        "ld" => Ld,
+        "st" => St,
+        "b" => B,
+        "bc" => Bc,
+        "addi" => Addi,
+        "subi" => Subi,
+        "muli" => Muli,
+        "andi" => Andi,
+        "ori" => Ori,
+        "xori" => Xori,
+        "cmpi" => Cmpi,
+        "shl" => Shl,
+        "shr" => Shr,
+        "halt" => Halt,
+        _ => return None,
+    })
+}
+
+fn cond_by_name(name: &str) -> Option<Cond> {
+    Some(match name {
+        "al" => Cond::Al,
+        "eq" => Cond::Eq,
+        "ne" => Cond::Ne,
+        "lt" => Cond::Lt,
+        "ge" => Cond::Ge,
+        "gt" => Cond::Gt,
+        "le" => Cond::Le,
+        _ => return None,
+    })
+}
+
+fn parse_instr(
+    text: &str,
+    consts: &HashMap<String, i32>,
+    labels: &HashMap<String, usize>,
+) -> Result<Instr, String> {
+    let (mn, ops_text) = match text.find(char::is_whitespace) {
+        Some(i) => (&text[..i], text[i..].trim()),
+        None => (text, ""),
+    };
+
+    // mnemonic[.cond][.dtype] — e.g. `addc.ge.f`, `ld.f`, `bc.eq`
+    let mut parts = mn.split('.');
+    let base = parts.next().unwrap().to_ascii_lowercase();
+    let op = opcode_by_name(&base).ok_or_else(|| format!("unknown mnemonic {base:?}"))?;
+    let mut dt = DType::I16;
+    let mut cond = Cond::Al;
+    for suffix in parts {
+        match suffix.to_ascii_lowercase().as_str() {
+            "f" => dt = DType::F16,
+            "i" => dt = DType::I16,
+            c => {
+                cond = cond_by_name(c).ok_or_else(|| format!("unknown suffix .{c}"))?;
+            }
+        }
+    }
+
+    let ops: Vec<&str> = if ops_text.is_empty() {
+        Vec::new()
+    } else {
+        ops_text.split(',').map(|s| s.trim()).collect()
+    };
+
+    let mut i = Instr::new(op);
+    i.dt = dt;
+    i.cond = cond;
+
+    let need = |n: usize| -> Result<(), String> {
+        if ops.len() != n {
+            Err(format!("{base} expects {n} operand(s), got {}", ops.len()))
+        } else {
+            Ok(())
+        }
+    };
+
+    use Opcode::*;
+    match op {
+        Nop | Recv | Halt => need(0)?,
+        Send => {
+            // send rvalue, rneuron, type_imm
+            need(3)?;
+            i.rd = parse_reg(ops[0])?;
+            i.rs1 = parse_reg(ops[1])?;
+            i.imm = parse_imm(ops[2], consts, labels, op.wide_imm())?;
+        }
+        Findidx | Locacc => {
+            // findidx rd, rs1(bitpos), base_imm ; locacc rval, ridx, base_imm
+            need(3)?;
+            i.rd = parse_reg(ops[0])?;
+            i.rs1 = parse_reg(ops[1])?;
+            i.imm = parse_imm(ops[2], consts, labels, op.wide_imm())?;
+        }
+        Diff => {
+            // diff rd(v), rs1(tau), rs2(I): rd = rs1*rd + rs2
+            need(3)?;
+            i.rd = parse_reg(ops[0])?;
+            i.rs1 = parse_reg(ops[1])?;
+            i.rs2 = parse_reg(ops[2])?;
+        }
+        Add | Sub | Mul | Addc | Subc | Mulc | And | Or | Xor => {
+            need(3)?;
+            i.rd = parse_reg(ops[0])?;
+            i.rs1 = parse_reg(ops[1])?;
+            i.rs2 = parse_reg(ops[2])?;
+        }
+        Cmp => {
+            need(2)?;
+            i.rd = parse_reg(ops[0])?;
+            i.rs1 = parse_reg(ops[1])?;
+        }
+        Mov => {
+            need(2)?;
+            i.rd = parse_reg(ops[0])?;
+            i.rs1 = parse_reg(ops[1])?;
+        }
+        Movi => {
+            need(2)?;
+            i.rd = parse_reg(ops[0])?;
+            i.imm = parse_imm(ops[1], consts, labels, op.wide_imm())?;
+        }
+        Ld | St => {
+            // ld rd, rs1, base ; st rval, rs1, base  => mem[rs1 + base]
+            need(3)?;
+            i.rd = parse_reg(ops[0])?;
+            i.rs1 = parse_reg(ops[1])?;
+            i.imm = parse_imm(ops[2], consts, labels, op.wide_imm())?;
+        }
+        B => {
+            need(1)?;
+            i.imm = parse_imm(ops[0], consts, labels, op.wide_imm())?;
+        }
+        Bc => {
+            if cond == Cond::Al {
+                return Err("bc needs a condition suffix (e.g. bc.eq)".into());
+            }
+            need(1)?;
+            i.imm = parse_imm(ops[0], consts, labels, op.wide_imm())?;
+        }
+        Addi | Subi | Muli | Andi | Ori | Xori | Shl | Shr => {
+            need(3)?;
+            i.rd = parse_reg(ops[0])?;
+            i.rs1 = parse_reg(ops[1])?;
+            i.imm = parse_imm(ops[2], consts, labels, op.wide_imm())?;
+        }
+        Cmpi => {
+            need(2)?;
+            i.rd = parse_reg(ops[0])?;
+            i.imm = parse_imm(ops[1], consts, labels, op.wide_imm())?;
+        }
+    }
+    if matches!(op, Addi | Subi | Muli | Cmpi) && dt == DType::F16 {
+        return Err(format!(
+            "{base}: FP16 immediates cannot be encoded inline; load constants with ld.f"
+        ));
+    }
+    Ok(i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::disasm::disassemble;
+    use crate::util::prop::propcheck;
+
+    #[test]
+    fn assembles_lif_integ_loop() {
+        let src = r#"
+            .const WBASE 256
+            .const CUR   0x40
+        loop:
+            recv
+            ld.f    r5, r2, WBASE
+            locacc.f r5, r1, CUR
+            b       loop
+        "#;
+        let p = assemble(src).unwrap();
+        assert_eq!(p.code.len(), 4);
+        assert_eq!(p.entry("loop"), Some(0));
+        assert_eq!(p.code[0].op, Opcode::Recv);
+        assert_eq!(p.code[1].op, Opcode::Ld);
+        assert_eq!(p.code[1].dt, DType::F16);
+        assert_eq!(p.code[1].imm, 256);
+        assert_eq!(p.code[3].op, Opcode::B);
+        assert_eq!(p.code[3].imm, 0);
+    }
+
+    #[test]
+    fn cond_and_dtype_suffixes() {
+        let p = assemble("cmp r1, r2\naddc.ge.f r3, r4, r5\nbc.lt 0").unwrap();
+        assert_eq!(p.code[1].cond, Cond::Ge);
+        assert_eq!(p.code[1].dt, DType::F16);
+        assert_eq!(p.code[2].cond, Cond::Lt);
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        let e = assemble("nop\nbadop r1").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.msg.contains("badop"));
+
+        let e = assemble("movi r1, 99999").unwrap_err();
+        assert!(e.msg.contains("out of range"));
+
+        let e = assemble("bc 3").unwrap_err();
+        assert!(e.msg.contains("condition"));
+
+        let e = assemble("x: nop\nx: nop").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+
+        let e = assemble("addi.f r1, r2, 3").unwrap_err();
+        assert!(e.msg.contains("FP16 immediates"));
+    }
+
+    #[test]
+    fn forward_label_references() {
+        let p = assemble("b end\nnop\nend: halt").unwrap();
+        assert_eq!(p.code[0].imm, 2);
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let src = "recv\nmovi r1, -5\nsend r1, r2, 3\nhalt";
+        let p = assemble(src).unwrap();
+        let q = Program::from_words(&p.to_words()).unwrap();
+        assert_eq!(p.code, q.code);
+    }
+
+    #[test]
+    fn prop_asm_disasm_roundtrip() {
+        // any assembled program disassembles to text that reassembles
+        // to the identical code
+        let srcs = [
+            "recv\nfindidx r4, r2, 128\nbc.eq 0\nld.f r5, r4, 256\nlocacc.f r5, r1, 64\nb 0",
+            "movi r1, 0\nloop: addi r1, r1, 1\ncmpi r1, 10\nbc.lt loop\nhalt",
+            "diff.f r5, r7, r6\ncmp.f r5, r8\nsubc.ge.f r5, r5, r5\nsend r5, r1, 1",
+        ];
+        for src in srcs {
+            let p = assemble(src).unwrap();
+            let text = disassemble(&p.code);
+            let q = assemble(&text).unwrap();
+            assert_eq!(p.code, q.code, "src: {src}\ndisasm: {text}");
+        }
+        // randomized: encode random valid instrs, disassemble, reassemble
+        propcheck("asm-roundtrip", 100, |rng| {
+            use crate::isa::*;
+            let mut code = Vec::new();
+            for _ in 0..rng.range(1, 20) {
+                let op = Opcode::from_bits(rng.below(32) as u32).unwrap();
+                let mut i = Instr::new(op);
+                i.dt = if rng.chance(0.5) { DType::F16 } else { DType::I16 };
+                if matches!(op, Opcode::Bc) {
+                    i.cond = Cond::from_bits(1 + rng.below(6) as u32);
+                } else if matches!(op, Opcode::Addc | Opcode::Subc | Opcode::Mulc) {
+                    i.cond = Cond::from_bits(rng.below(7) as u32);
+                }
+                if matches!(op, Opcode::Addi | Opcode::Subi | Opcode::Muli | Opcode::Cmpi) {
+                    i.dt = DType::I16;
+                }
+                i.rd = rng.below(16) as u8;
+                i.rs1 = rng.below(16) as u8;
+                if op.is_imm() {
+                    i.imm = rng.below(16384) as i32 + IMM_MIN;
+                    if matches!(op, Opcode::B | Opcode::Bc) {
+                        i.imm = rng.below(20) as i32; // label targets must exist
+                    }
+                } else {
+                    i.rs2 = rng.below(16) as u8;
+                }
+                // Zero the fields each syntax form does not carry, so the
+                // text rendering is information-preserving.
+                match op {
+                    Opcode::Nop | Opcode::Recv | Opcode::Halt => {
+                        i.rd = 0;
+                        i.rs1 = 0;
+                        i.rs2 = 0;
+                    }
+                    Opcode::B | Opcode::Bc => {
+                        i.rd = 0;
+                        i.rs1 = 0;
+                    }
+                    Opcode::Movi | Opcode::Cmpi => i.rs1 = 0,
+                    Opcode::Cmp | Opcode::Mov => i.rs2 = 0,
+                    _ => {}
+                }
+                code.push(i);
+            }
+            // branch targets must be within program for labels to resolve
+            let n = code.len() as i32;
+            for i in &mut code {
+                if matches!(i.op, Opcode::B | Opcode::Bc) && i.imm >= n {
+                    i.imm = 0;
+                }
+            }
+            let text = disassemble(&code);
+            let p = assemble(&text).map_err(|e| e.to_string())?;
+            if p.code != code {
+                return Err(format!("roundtrip mismatch:\n{text}"));
+            }
+            Ok(())
+        });
+    }
+}

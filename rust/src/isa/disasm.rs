@@ -1,0 +1,94 @@
+//! Disassembler — inverse of the assembler, used by the CLI (`taibai
+//! disasm`), debugging dumps, and the asm↔disasm roundtrip property tests.
+
+use super::{Cond, DType, Instr, Opcode};
+
+/// Render one instruction as assembler text (labels `L<n>:` are emitted
+/// for branch targets by [`disassemble`]; this renders the body only).
+pub fn render_instr(i: &Instr, label_of: impl Fn(i32) -> String) -> String {
+    let mut mn = i.op.mnemonic().to_string();
+    if i.cond != Cond::Al {
+        mn.push('.');
+        mn.push_str(i.cond.name());
+    }
+    if i.dt == DType::F16 {
+        mn.push_str(".f");
+    }
+    let r = |n: u8| format!("r{n}");
+    use Opcode::*;
+    let ops = match i.op {
+        Nop | Recv | Halt => String::new(),
+        Send | Findidx | Locacc | Ld | St => {
+            format!("{}, {}, {}", r(i.rd), r(i.rs1), i.imm)
+        }
+        Diff | Add | Sub | Mul | Addc | Subc | Mulc | And | Or | Xor => {
+            format!("{}, {}, {}", r(i.rd), r(i.rs1), r(i.rs2))
+        }
+        Cmp => format!("{}, {}", r(i.rd), r(i.rs1)),
+        Mov => format!("{}, {}", r(i.rd), r(i.rs1)),
+        Movi => format!("{}, {}", r(i.rd), i.imm),
+        Cmpi => format!("{}, {}", r(i.rd), i.imm),
+        B | Bc => label_of(i.imm),
+        Addi | Subi | Muli | Andi | Ori | Xori | Shl | Shr => {
+            format!("{}, {}, {}", r(i.rd), r(i.rs1), i.imm)
+        }
+    };
+    if ops.is_empty() {
+        mn
+    } else {
+        format!("{mn} {ops}")
+    }
+}
+
+/// Disassemble a program into reassemblable text with `L<idx>:` labels at
+/// branch targets.
+pub fn disassemble(code: &[Instr]) -> String {
+    let mut targets: Vec<i32> = code
+        .iter()
+        .filter(|i| matches!(i.op, Opcode::B | Opcode::Bc))
+        .map(|i| i.imm)
+        .collect();
+    targets.sort_unstable();
+    targets.dedup();
+
+    let mut out = String::new();
+    for (pc, i) in code.iter().enumerate() {
+        if targets.binary_search(&(pc as i32)).is_ok() {
+            out.push_str(&format!("L{pc}:\n"));
+        }
+        out.push_str("    ");
+        out.push_str(&render_instr(i, |t| format!("L{t}")));
+        out.push('\n');
+    }
+    // Branch targets one past the end (halt loops) still need a label.
+    if targets.binary_search(&(code.len() as i32)).is_ok() {
+        out.push_str(&format!("L{}:\n    nop\n", code.len()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assembler::assemble;
+
+    #[test]
+    fn disassembles_branching_program() {
+        let src = "movi r1, 0\nloop: addi r1, r1, 1\ncmpi r1, 5\nbc.lt loop\nhalt";
+        let p = assemble(src).unwrap();
+        let text = disassemble(&p.code);
+        assert!(text.contains("L1:"));
+        assert!(text.contains("bc.lt L1"));
+        let q = assemble(&text).unwrap();
+        assert_eq!(p.code, q.code);
+    }
+
+    #[test]
+    fn renders_special_instrs() {
+        let p = assemble("locacc.f r5, r1, 64\ndiff.f r5, r7, r6\nsend r5, r1, 1").unwrap();
+        let text = disassemble(&p.code);
+        assert!(text.contains("locacc.f r5, r1, 64"));
+        assert!(text.contains("diff.f r5, r7, r6"));
+        assert!(text.contains("send r5, r1, 1"));
+    }
+}

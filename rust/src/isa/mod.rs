@@ -1,0 +1,446 @@
+//! The TaiBai brain-inspired instruction set (paper §III-B, Table I).
+//!
+//! A Turing-complete, 32-bit-encoded ISA executed by every neuron core
+//! (NC). It contains five special brain-inspired instructions —
+//! `RECV`, `SEND`, `FINDIDX`, `LOCACC`, `DIFF` — plus general arithmetic,
+//! logic, comparison, data-movement, memory, and branch instructions in
+//! both FP16 and INT16 flavours. The paper does not publish the binary
+//! encoding; this module defines a faithful one:
+//!
+//! ```text
+//!  31        26 25 24  22 21  18 17  14 13  10 9      0
+//! ┌────────────┬──┬──────┬──────┬──────┬──────┬────────┐
+//! │   opcode   │dt│ cond │  rd  │ rs1  │ rs2  │ (R-fmt)│
+//! │   opcode   │dt│ cond │  rd  │ rs1  │    imm14      │ (I-fmt)
+//! └────────────┴──┴──────┴──────┴──────┴───────────────┘
+//! ```
+//!
+//! * 16 general-purpose 16-bit registers `r0..r15`.
+//! * `dt` selects INT16 (0) or FP16 (1) for arithmetic/compare datapaths.
+//! * `cond` predicates the conditional ops (`ADDC/SUBC/MULC`, `BC`)
+//!   against the flags written by the last `CMP/CMPI/FINDIDX`.
+//! * `imm14` is sign-extended for arithmetic immediates and branch/memory
+//!   offsets; FP16 constants cannot be encoded inline and are loaded from
+//!   the per-neuron parameter region with `LD` (matching the paper:
+//!   "each neuron has independent parameters").
+//!
+//! Event convention (written by `RECV`): `r1` = NC-local target neuron
+//! index, `r2` = axon id (global or local depending on fan-in IE type),
+//! `r3` = 16-bit payload, `r4` = event kind (see [`EventKind`]).
+
+pub mod assembler;
+pub mod disasm;
+
+/// Register count and index type.
+pub const NUM_REGS: usize = 16;
+
+/// Event kinds delivered by `RECV` in `r4`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u16)]
+pub enum EventKind {
+    /// A presynaptic spike (INTEG stage).
+    Spike = 0,
+    /// A per-neuron membrane-update activation (FIRE stage).
+    Fire = 1,
+    /// An accumulated-current transfer from a PSUM neuron (fan-in
+    /// expansion, §IV-B) or a floating-point data input.
+    Current = 2,
+    /// A learning activation (on-chip plasticity, FIRE stage).
+    Learn = 3,
+}
+
+/// Data type selector for the dual FP16/INT16 datapath.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum DType {
+    #[default]
+    I16 = 0,
+    F16 = 1,
+}
+
+/// Branch / predication conditions, evaluated against the CMP flags.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum Cond {
+    /// Unconditional (always true).
+    #[default]
+    Al = 0,
+    Eq = 1,
+    Ne = 2,
+    Lt = 3,
+    Ge = 4,
+    Gt = 5,
+    Le = 6,
+}
+
+impl Cond {
+    pub fn from_bits(b: u32) -> Cond {
+        match b & 7 {
+            0 => Cond::Al,
+            1 => Cond::Eq,
+            2 => Cond::Ne,
+            3 => Cond::Lt,
+            4 => Cond::Ge,
+            5 => Cond::Gt,
+            6 => Cond::Le,
+            _ => Cond::Al,
+        }
+    }
+
+    /// Evaluate against (eq, lt, gt) flags.
+    pub fn eval(self, eq: bool, lt: bool, gt: bool) -> bool {
+        match self {
+            Cond::Al => true,
+            Cond::Eq => eq,
+            Cond::Ne => !eq,
+            Cond::Lt => lt,
+            Cond::Ge => !lt,
+            Cond::Gt => gt,
+            Cond::Le => !gt,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Cond::Al => "al",
+            Cond::Eq => "eq",
+            Cond::Ne => "ne",
+            Cond::Lt => "lt",
+            Cond::Ge => "ge",
+            Cond::Gt => "gt",
+            Cond::Le => "le",
+        }
+    }
+}
+
+/// Opcodes (Table I plus the immediate/shift forms the table's
+/// "Register, immediate" operand column implies).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum Opcode {
+    Nop = 0,
+    /// Hang until a spike/fire/learn event arrives; unpack it into r1..r4.
+    Recv = 1,
+    /// Emit an output event: value = rd, fired neuron id = rs1,
+    /// neuron type / flags = imm14 low 8 bits.
+    Send = 2,
+    /// Bitmap sparse-weight lookup: bit position rs1 within the bitmap at
+    /// `mem[imm14..]`; rd = popcount of set bits before that position
+    /// (the compressed weight index). Sets EQ flag iff the bit is CLEAR
+    /// (no connection), so `bc.eq` skips absent synapses.
+    Findidx = 3,
+    /// Current accumulation: `mem[imm14 + rs1] += rd` (dtype-aware
+    /// read-modify-write — the INTEG-stage workhorse).
+    Locacc = 4,
+    /// First-order PDE step (fused multiply-add): `rd = rs1*rd + rs2`
+    /// with a single rounding — `v = tau*v + I`.
+    Diff = 5,
+    Add = 6,
+    Sub = 7,
+    Mul = 8,
+    /// Conditionally-executed arithmetic (predicated on `cond`).
+    Addc = 9,
+    Subc = 10,
+    Mulc = 11,
+    And = 12,
+    Or = 13,
+    Xor = 14,
+    /// Compare rd ? rs1, set (eq, lt, gt) flags.
+    Cmp = 15,
+    Mov = 16,
+    /// rd = sign-extended imm14 (INT16 domain).
+    Movi = 17,
+    /// rd = mem[rs1 + imm14].
+    Ld = 18,
+    /// mem[rs1 + imm14] = rd.
+    St = 19,
+    /// Unconditional branch to absolute instruction index imm14.
+    B = 20,
+    /// Conditional branch.
+    Bc = 21,
+    Addi = 22,
+    Subi = 23,
+    Muli = 24,
+    Andi = 25,
+    Ori = 26,
+    Xori = 27,
+    /// Compare rd ? sign-extended imm14.
+    Cmpi = 28,
+    /// Logical shift left/right by imm14 (0..15).
+    Shl = 29,
+    Shr = 30,
+    Halt = 31,
+}
+
+impl Opcode {
+    pub fn from_bits(b: u32) -> Option<Opcode> {
+        use Opcode::*;
+        Some(match b & 0x3f {
+            0 => Nop,
+            1 => Recv,
+            2 => Send,
+            3 => Findidx,
+            4 => Locacc,
+            5 => Diff,
+            6 => Add,
+            7 => Sub,
+            8 => Mul,
+            9 => Addc,
+            10 => Subc,
+            11 => Mulc,
+            12 => And,
+            13 => Or,
+            14 => Xor,
+            15 => Cmp,
+            16 => Mov,
+            17 => Movi,
+            18 => Ld,
+            19 => St,
+            20 => B,
+            21 => Bc,
+            22 => Addi,
+            23 => Subi,
+            24 => Muli,
+            25 => Andi,
+            26 => Ori,
+            27 => Xori,
+            28 => Cmpi,
+            29 => Shl,
+            30 => Shr,
+            31 => Halt,
+            _ => return None,
+        })
+    }
+
+    /// Does this opcode use the immediate field (I-format)?
+    pub fn is_imm(self) -> bool {
+        use Opcode::*;
+        matches!(
+            self,
+            Send | Findidx | Locacc | Movi | Ld | St | B | Bc | Addi | Subi | Muli | Andi
+                | Ori | Xori | Cmpi | Shl | Shr
+        )
+    }
+
+    /// I-format ops that do not need the `cond` field reuse its 3 bits as
+    /// imm[16:14], giving a 17-bit signed immediate — enough to address
+    /// the full 32K-word NC data memory. `BC` keeps cond + imm14.
+    pub fn wide_imm(self) -> bool {
+        self.is_imm() && self != Opcode::Bc
+    }
+
+    pub fn mnemonic(self) -> &'static str {
+        use Opcode::*;
+        match self {
+            Nop => "nop",
+            Recv => "recv",
+            Send => "send",
+            Findidx => "findidx",
+            Locacc => "locacc",
+            Diff => "diff",
+            Add => "add",
+            Sub => "sub",
+            Mul => "mul",
+            Addc => "addc",
+            Subc => "subc",
+            Mulc => "mulc",
+            And => "and",
+            Or => "or",
+            Xor => "xor",
+            Cmp => "cmp",
+            Mov => "mov",
+            Movi => "movi",
+            Ld => "ld",
+            St => "st",
+            B => "b",
+            Bc => "bc",
+            Addi => "addi",
+            Subi => "subi",
+            Muli => "muli",
+            Andi => "andi",
+            Ori => "ori",
+            Xori => "xori",
+            Cmpi => "cmpi",
+            Shl => "shl",
+            Shr => "shr",
+            Halt => "halt",
+        }
+    }
+}
+
+/// A decoded instruction.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Instr {
+    pub op: Opcode,
+    pub dt: DType,
+    pub cond: Cond,
+    pub rd: u8,
+    pub rs1: u8,
+    pub rs2: u8,
+    /// Sign-extended immediate (14 or 17 bits per [`Opcode::wide_imm`]).
+    pub imm: i32,
+}
+
+pub const IMM_MIN: i32 = -(1 << 13);
+pub const IMM_MAX: i32 = (1 << 13) - 1;
+pub const IMM17_MIN: i32 = -(1 << 16);
+pub const IMM17_MAX: i32 = (1 << 16) - 1;
+
+impl Instr {
+    pub fn new(op: Opcode) -> Instr {
+        Instr {
+            op,
+            dt: DType::I16,
+            cond: Cond::Al,
+            rd: 0,
+            rs1: 0,
+            rs2: 0,
+            imm: 0,
+        }
+    }
+
+    pub fn encode(&self) -> u32 {
+        debug_assert!((self.rd as usize) < NUM_REGS);
+        debug_assert!((self.rs1 as usize) < NUM_REGS);
+        debug_assert!((self.rs2 as usize) < NUM_REGS);
+        let mut w = (self.op as u32) << 26;
+        w |= (self.dt as u32) << 25;
+        w |= (self.rd as u32) << 18;
+        w |= (self.rs1 as u32) << 14;
+        if self.op.wide_imm() {
+            debug_assert!(self.imm >= IMM17_MIN && self.imm <= IMM17_MAX);
+            w |= ((self.imm as u32) & 0x1_c000) << 8; // imm[16:14] -> [24:22]
+            w |= (self.imm as u32) & 0x3fff;
+        } else if self.op.is_imm() {
+            debug_assert!(self.imm >= IMM_MIN && self.imm <= IMM_MAX);
+            w |= (self.cond as u32) << 22;
+            w |= (self.imm as u32) & 0x3fff;
+        } else {
+            w |= (self.cond as u32) << 22;
+            w |= (self.rs2 as u32) << 10;
+        }
+        w
+    }
+
+    pub fn decode(w: u32) -> Option<Instr> {
+        let op = Opcode::from_bits(w >> 26)?;
+        let dt = if (w >> 25) & 1 == 1 { DType::F16 } else { DType::I16 };
+        let mut cond = Cond::Al;
+        let rd = ((w >> 18) & 0xf) as u8;
+        let rs1 = ((w >> 14) & 0xf) as u8;
+        let (rs2, imm) = if op.wide_imm() {
+            let raw = ((w >> 8) & 0x1_c000) | (w & 0x3fff);
+            // sign-extend 17 -> 32
+            let imm = ((raw << 15) as i32) >> 15;
+            (0u8, imm)
+        } else if op.is_imm() {
+            cond = Cond::from_bits(w >> 22);
+            let raw = (w & 0x3fff) as u32;
+            let imm = ((raw << 18) as i32) >> 18;
+            (0u8, imm)
+        } else {
+            cond = Cond::from_bits(w >> 22);
+            (((w >> 10) & 0xf) as u8, 0i32)
+        };
+        Some(Instr {
+            op,
+            dt,
+            cond,
+            rd,
+            rs1,
+            rs2,
+            imm,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::propcheck;
+
+    #[test]
+    fn encode_decode_roundtrip_basic() {
+        let i = Instr {
+            op: Opcode::Add,
+            dt: DType::F16,
+            cond: Cond::Al,
+            rd: 3,
+            rs1: 4,
+            rs2: 5,
+            imm: 0,
+        };
+        assert_eq!(Instr::decode(i.encode()).unwrap(), i);
+    }
+
+    #[test]
+    fn imm_sign_extension() {
+        for imm in [-8192i32, -1, 0, 1, 8191, -65536, 65535] {
+            let i = Instr {
+                op: Opcode::Movi,
+                imm,
+                ..Instr::new(Opcode::Movi)
+            };
+            assert_eq!(Instr::decode(i.encode()).unwrap().imm, imm);
+        }
+    }
+
+    #[test]
+    fn cond_eval_table() {
+        // (eq, lt, gt) = "a < b"
+        let (eq, lt, gt) = (false, true, false);
+        assert!(Cond::Al.eval(eq, lt, gt));
+        assert!(!Cond::Eq.eval(eq, lt, gt));
+        assert!(Cond::Ne.eval(eq, lt, gt));
+        assert!(Cond::Lt.eval(eq, lt, gt));
+        assert!(!Cond::Ge.eval(eq, lt, gt));
+        assert!(!Cond::Gt.eval(eq, lt, gt));
+        assert!(Cond::Le.eval(eq, lt, gt));
+        // equality
+        let (eq, lt, gt) = (true, false, false);
+        assert!(Cond::Eq.eval(eq, lt, gt));
+        assert!(Cond::Ge.eval(eq, lt, gt));
+        assert!(Cond::Le.eval(eq, lt, gt));
+        assert!(!Cond::Lt.eval(eq, lt, gt));
+    }
+
+    #[test]
+    fn prop_roundtrip_random_instructions() {
+        propcheck("isa-roundtrip", 500, |rng| {
+            let op = Opcode::from_bits(rng.below(32) as u32).unwrap();
+            let i = Instr {
+                op,
+                dt: if rng.chance(0.5) { DType::F16 } else { DType::I16 },
+                // wide-imm ops have no cond bits (reused as imm[16:14])
+                cond: if op.wide_imm() {
+                    Cond::Al
+                } else {
+                    Cond::from_bits(rng.below(7) as u32)
+                },
+                rd: rng.below(16) as u8,
+                rs1: rng.below(16) as u8,
+                rs2: if op.is_imm() { 0 } else { rng.below(16) as u8 },
+                imm: if op.wide_imm() {
+                    rng.below(131072) as i32 + IMM17_MIN
+                } else if op.is_imm() {
+                    rng.below(16384) as i32 + IMM_MIN
+                } else {
+                    0
+                },
+            };
+            let d = Instr::decode(i.encode())
+                .ok_or_else(|| "decode failed".to_string())?;
+            if d != i {
+                return Err(format!("{i:?} != {d:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn all_opcodes_decode() {
+        for b in 0..32u32 {
+            let op = Opcode::from_bits(b).unwrap();
+            assert_eq!(op as u32, b);
+            assert!(!op.mnemonic().is_empty());
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! # TaiBai — a fully programmable brain-inspired processor
+//!
+//! Reproduction of *"TaiBai: A fully programmable brain-inspired processor
+//! with topology-aware efficiency"* (CS.AR 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's system contribution: a
+//!   behavioral, event-driven simulator of the TaiBai chip (neuron cores
+//!   executing the brain-inspired ISA, cortical-column schedulers with
+//!   two-level fan-in/fan-out topology tables, a 2-D mesh NoC with
+//!   hybrid-mode routing, the INIT/INTEG/FIRE phase engine, a calibrated
+//!   energy model) plus the full compiler stack (operator fusion, network
+//!   partition, core placement, resource optimization, code generation).
+//! * **Layer 2 (python/compile, build-time only)** — JAX models of the
+//!   paper's SNN workloads (the GPU baseline), AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels)** — the fused LIF-step Pallas
+//!   kernel used by the Layer-2 models, verified against a pure-jnp oracle.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) so the Rust binary never calls into Python at run time.
+
+pub mod util;
+pub mod isa;
+pub mod nc;
+pub mod topology;
+pub mod noc;
+pub mod scheduler;
+pub mod chip;
+pub mod energy;
+pub mod programs;
+pub mod model;
+pub mod compiler;
+pub mod datasets;
+pub mod runtime;
+pub mod coordinator;
+pub mod metrics;
+pub mod apps;
+pub mod bench;

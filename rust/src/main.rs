@@ -1,0 +1,171 @@
+//! `taibai` — CLI for the TaiBai brain-inspired processor reproduction.
+//!
+//! Subcommands:
+//! * `info`                         — chip characteristics (Table III view)
+//! * `asm <file.s>`                 — assemble a TaiBai program, print words
+//! * `disasm <file.s>`              — assemble then disassemble (roundtrip view)
+//! * `run-app <ecg|shd|bci>`        — deploy an application on the detailed
+//!                                    engine with random-init weights (or
+//!                                    trained artifacts when present)
+//! * `fast <plif|5blocks|resnet19>` — analytic (fast-mode) report for the
+//!                                    Table II benchmark nets
+//! * `storage <vgg16|resnet18|…>`   — Fig 14 topology-table storage view
+//! * `baseline <model.hlo.txt>`     — load + execute an AOT artifact via PJRT
+
+use taibai::bench::Table;
+use taibai::chip::fast::{simulate, FastParams};
+use taibai::energy::EnergyModel;
+use taibai::model;
+use taibai::topology::storage::{storage, ALL_SCHEMES};
+use taibai::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "info" => info(),
+        "asm" | "disasm" => asm(&args, cmd == "disasm"),
+        "fast" => fast(&args),
+        "storage" => storage_cmd(&args),
+        "run-app" => run_app(&args),
+        "baseline" => baseline(&args),
+        other => {
+            eprintln!("unknown command {other:?}; see rust/src/main.rs header");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info() {
+    use taibai::energy::{dense_sop_activity, CLOCK_HZ};
+    let em = EnergyModel::default();
+    let a = dense_sop_activity(1_000_000);
+    println!("TaiBai behavioral model — chip characteristics (cf. Table III)");
+    println!("  mesh            : {}x{} CCs, {} NCs", taibai::noc::MESH_W, taibai::noc::MESH_H, taibai::noc::NUM_CCS * 8);
+    println!("  clock           : {} MHz", CLOCK_HZ / 1e6);
+    println!("  energy per SOP  : {:.2} pJ (paper: 2.61)", em.pj_per_sop(&a));
+    println!("  memory share    : {:.1}% (paper: 70.3%)", em.energy(&a).memory_share() * 100.0);
+    println!("  bit width       : FP16 / INT16");
+    println!("  neuron models   : fully programmable (ISA, see `taibai asm`)");
+}
+
+fn asm(args: &Args, round: bool) {
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: taibai asm <file.s>");
+        std::process::exit(2);
+    };
+    let src = std::fs::read_to_string(path).expect("reading source");
+    match taibai::isa::assembler::assemble(&src) {
+        Ok(p) => {
+            if round {
+                print!("{}", taibai::isa::disasm::disassemble(&p.code));
+            } else {
+                for (i, w) in p.to_words().iter().enumerate() {
+                    println!("{i:04}: {w:08x}");
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn net_by_name(name: &str) -> model::NetDef {
+    match name {
+        "plif" => model::plif_net(),
+        "5blocks" => model::blocks5_net(),
+        "resnet19" => model::resnet19(),
+        "resnet18" => model::resnet18(),
+        "vgg16" => model::vgg16(),
+        "ecg" => model::srnn_ecg(true),
+        "shd" => model::dhsnn_shd(true),
+        "bci" => model::bci_net(16),
+        other => {
+            eprintln!("unknown net {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn fast(args: &Args) {
+    let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("plif");
+    let net = net_by_name(name);
+    let mut p = FastParams::default();
+    p.default_rate = args.f64("rate", 0.10);
+    let r = simulate(&net, &p, &EnergyModel::default());
+    let mut t = Table::new(&["net", "neurons", "cores", "chips", "fps", "power W", "fps/W", "pJ/SOP"]);
+    let em = EnergyModel::default();
+    t.row(&[
+        net.name.clone(),
+        format!("{}", net.total_neurons()),
+        format!("{}", r.used_cores),
+        format!("{}", r.chips),
+        format!("{:.1}", r.fps),
+        format!("{:.2}", r.power_w),
+        format!("{:.1}", r.fps_per_w),
+        format!("{:.2}", em.pj_per_sop(&r.activity)),
+    ]);
+    t.print();
+}
+
+fn storage_cmd(args: &Args) {
+    let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("vgg16");
+    let net = net_by_name(name);
+    let mut t = Table::new(&["scheme", "fan-in DT KiB", "fan-in IT KiB", "fan-out KiB", "total KiB", "vs baseline"]);
+    let base = storage(&net, ALL_SCHEMES[0]).total_bits() as f64;
+    for s in ALL_SCHEMES {
+        let r = storage(&net, s);
+        t.row(&[
+            s.name().to_string(),
+            format!("{:.1}", r.fanin_dt_bits as f64 / 8192.0),
+            format!("{:.1}", r.fanin_it_bits as f64 / 8192.0),
+            format!("{:.1}", r.fanout_bits as f64 / 8192.0),
+            format!("{:.1}", r.total_kib()),
+            format!("{:.0}x", base / r.total_bits() as f64),
+        ]);
+    }
+    t.print();
+}
+
+fn run_app(args: &Args) {
+    let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("ecg");
+    let n = args.usize("samples", 3);
+    // The examples/ binaries carry the full application flows; the CLI
+    // exposes the quick random-weight smoke path.
+    match name {
+        "ecg" => {
+            let r = taibai::apps::run_ecg_demo(n, 42);
+            println!("ECG SRNN on-chip: {} samples, {:.1}% per-step accuracy, {:.3} W model power", n, r.accuracy * 100.0, r.power_w);
+        }
+        "shd" => {
+            let r = taibai::apps::run_shd_demo(n, 42);
+            println!("SHD DHSNN on-chip: {} samples, {:.1}% accuracy, {:.3} W model power", n, r.accuracy * 100.0, r.power_w);
+        }
+        "bci" => {
+            let r = taibai::apps::run_bci_demo(n, 42);
+            println!("BCI on-chip: {} samples, {:.1}% accuracy, {:.3} W model power", n, r.accuracy * 100.0, r.power_w);
+        }
+        other => {
+            eprintln!("unknown app {other:?} (ecg|shd|bci)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn baseline(args: &Args) {
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: taibai baseline <model.hlo.txt>");
+        std::process::exit(2);
+    };
+    let engine = taibai::runtime::Engine::cpu().expect("PJRT CPU client");
+    println!("platform: {}", engine.platform());
+    match engine.load_hlo(path) {
+        Ok(exe) => println!("compiled {} OK", exe.name),
+        Err(e) => {
+            eprintln!("failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Evaluation metrics shared by the coordinator, examples, and benches.
+
+/// Classification accuracy from (prediction, label) pairs.
+pub fn accuracy(pairs: &[(usize, usize)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    pairs.iter().filter(|(p, l)| p == l).count() as f64 / pairs.len() as f64
+}
+
+/// Argmax helper (ties break low).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Softmax (numerically stable) — used for error signals in on-chip
+/// fine-tuning.
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let e: Vec<f32> = xs.iter().map(|x| (x - m).exp()).collect();
+    let s: f32 = e.iter().sum();
+    e.iter().map(|x| x / s).collect()
+}
+
+/// Simple streaming mean/min/max aggregator for bench reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn add(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_matches() {
+        assert_eq!(accuracy(&[(0, 0), (1, 1), (2, 0), (1, 1)]), 0.75);
+        assert_eq!(accuracy(&[]), 0.0);
+    }
+
+    #[test]
+    fn argmax_and_softmax() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn summary_tracks_extremes() {
+        let mut s = Summary::default();
+        for x in [3.0, 1.0, 2.0] {
+            s.add(x);
+        }
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+    }
+}

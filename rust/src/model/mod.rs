@@ -1,0 +1,447 @@
+//! Front-end SNN model descriptions (paper Table II + §V-B.3).
+//!
+//! A [`NetDef`] is the framework-neutral intermediate form the compiler
+//! consumes: an ordered list of layers with shapes, a neuron model per
+//! layer, optional skip connections, and (at deploy time) weight blobs
+//! loaded from `artifacts/weights/`. The paper's front-ends (PyTorch,
+//! TensorFlow, …, Fig 12a) correspond to constructors here; the Table II
+//! benchmark nets and the three §V applications are all expressible.
+
+/// Spiking neuron models supported out of the box. Each maps to a
+/// TaiBai-assembly program in [`crate::programs`] — and because the NC is
+/// fully programmable, users can register their own (§III-B).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NeuronModel {
+    /// Leaky integrate-and-fire (eqs. 1–3).
+    Lif { tau: f32, vth: f32 },
+    /// Adaptive-threshold LIF (Yin et al. — the ECG SRNN hidden layer):
+    /// threshold grows by `beta` per spike and decays with `rho`.
+    Alif { tau: f32, vth: f32, beta: f32, rho: f32 },
+    /// Dendritic-heterogeneity LIF (Zheng et al. — the SHD model):
+    /// `branches` dendritic compartments with distinct timing factors
+    /// feeding a somatic LIF.
+    DhLif { branches: usize, tau_soma: f32, vth: f32 },
+    /// Non-firing readout (LIF variant without spiking/reset; §V-B.3
+    /// speech output layer) — emits membrane potential as FP data.
+    Readout { tau: f32 },
+    /// Partial-sum helper neuron for fan-in expansion (§IV-B, Fig 11).
+    Psum,
+}
+
+/// One layer of connections + destination neurons.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Layer {
+    /// External input of `size` channels (spike or FP16 data).
+    Input { size: usize },
+    /// 2-D convolution `cin×h×w → cout×oh×ow`, `k×k` kernel,
+    /// stride `s`, zero padding `p`. `oh/ow` derived.
+    Conv {
+        cin: usize,
+        h: usize,
+        w: usize,
+        cout: usize,
+        k: usize,
+        s: usize,
+        p: usize,
+        neuron: NeuronModel,
+    },
+    /// Max/avg pooling (deployed via Type0 IEs).
+    Pool {
+        c: usize,
+        h: usize,
+        w: usize,
+        k: usize,
+    },
+    /// Fully connected `input → output`.
+    Fc {
+        input: usize,
+        output: usize,
+        neuron: NeuronModel,
+    },
+    /// Recurrently-connected hidden layer (input → size plus size → size
+    /// recurrence; deployed by unrolling the recurrence into an
+    /// equivalent one-step-delayed full connection, §III-D: "recurrent
+    /// connections … equivalently converted into existing ones").
+    Recurrent {
+        input: usize,
+        size: usize,
+        neuron: NeuronModel,
+    },
+    /// Random sparse connection with `density` ∈ (0,1].
+    Sparse {
+        input: usize,
+        output: usize,
+        density: f64,
+        neuron: NeuronModel,
+    },
+}
+
+impl Layer {
+    /// Number of destination neurons this layer instantiates.
+    pub fn neurons(&self) -> usize {
+        match *self {
+            Layer::Input { .. } => 0,
+            Layer::Conv { cout, .. } => cout * self.out_hw().0 * self.out_hw().1,
+            Layer::Pool { c, h, w, k } => c * (h / k) * (w / k),
+            Layer::Fc { output, .. } => output,
+            Layer::Recurrent { size, .. } => size,
+            Layer::Sparse { output, .. } => output,
+        }
+    }
+
+    /// Output spatial dims (conv/pool only; (1,1) otherwise).
+    pub fn out_hw(&self) -> (usize, usize) {
+        match *self {
+            Layer::Conv { h, w, k, s, p, .. } => {
+                ((h + 2 * p - k) / s + 1, (w + 2 * p - k) / s + 1)
+            }
+            Layer::Pool { h, w, k, .. } => (h / k, w / k),
+            _ => (1, 1),
+        }
+    }
+
+    /// Number of synapses (unique weights × their reuse = connections).
+    pub fn connections(&self) -> u64 {
+        match *self {
+            Layer::Input { .. } => 0,
+            Layer::Conv { cin, cout, k, .. } => {
+                let (oh, ow) = self.out_hw();
+                (cin * cout * k * k * oh * ow) as u64
+            }
+            Layer::Pool { c, h, w, k } => (c * (h / k) * (w / k) * k * k) as u64,
+            Layer::Fc { input, output, .. } => (input * output) as u64,
+            Layer::Recurrent { input, size, .. } => ((input + size) * size) as u64,
+            Layer::Sparse { input, output, density, .. } => {
+                ((input * output) as f64 * density).round() as u64
+            }
+        }
+    }
+
+    /// Number of *unique* weights (conv weights are shared).
+    pub fn unique_weights(&self) -> u64 {
+        match *self {
+            Layer::Conv { cin, cout, k, .. } => (cin * cout * k * k) as u64,
+            _ => self.connections(),
+        }
+    }
+
+    pub fn neuron_model(&self) -> Option<NeuronModel> {
+        match *self {
+            Layer::Conv { neuron, .. }
+            | Layer::Fc { neuron, .. }
+            | Layer::Recurrent { neuron, .. }
+            | Layer::Sparse { neuron, .. } => Some(neuron),
+            _ => None,
+        }
+    }
+}
+
+/// A skip (residual) connection from the output of `from` to the input of
+/// `to` (layer indices), crossing `to - from - 1` intermediate layers —
+/// i.e. spikes must be delayed that many timesteps (§III-D.6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Skip {
+    pub from: usize,
+    pub to: usize,
+}
+
+impl Skip {
+    pub fn delay(&self) -> usize {
+        self.to - self.from - 1
+    }
+}
+
+/// A complete network definition.
+#[derive(Clone, Debug)]
+pub struct NetDef {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    pub skips: Vec<Skip>,
+    /// SNN timesteps per sample.
+    pub timesteps: usize,
+}
+
+impl NetDef {
+    pub fn new(name: &str, timesteps: usize) -> NetDef {
+        NetDef {
+            name: name.to_string(),
+            layers: Vec::new(),
+            skips: Vec::new(),
+            timesteps,
+        }
+    }
+
+    pub fn total_neurons(&self) -> usize {
+        self.layers.iter().map(|l| l.neurons()).sum()
+    }
+
+    pub fn total_connections(&self) -> u64 {
+        self.layers.iter().map(|l| l.connections()).sum()
+    }
+
+    pub fn total_unique_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.unique_weights()).sum()
+    }
+}
+
+const LIF: NeuronModel = NeuronModel::Lif { tau: 0.5, vth: 1.0 };
+
+/// PLIF-Net (Table II): Input-256c3p1×3-mp2-256c3p1×3-mp2-fc4096-fc10,
+/// input 32×32×3.
+pub fn plif_net() -> NetDef {
+    let mut n = NetDef::new("PLIF-Net", 4);
+    n.layers.push(Layer::Input { size: 3 * 32 * 32 });
+    let mut cin = 3;
+    for _ in 0..3 {
+        n.layers.push(Layer::Conv { cin, h: 32, w: 32, cout: 256, k: 3, s: 1, p: 1, neuron: LIF });
+        cin = 256;
+    }
+    n.layers.push(Layer::Pool { c: 256, h: 32, w: 32, k: 2 });
+    for _ in 0..3 {
+        n.layers.push(Layer::Conv { cin: 256, h: 16, w: 16, cout: 256, k: 3, s: 1, p: 1, neuron: LIF });
+    }
+    n.layers.push(Layer::Pool { c: 256, h: 16, w: 16, k: 2 });
+    n.layers.push(Layer::Fc { input: 256 * 8 * 8, output: 4096, neuron: LIF });
+    n.layers.push(Layer::Fc { input: 4096, output: 10, neuron: LIF });
+    n
+}
+
+/// 5Blocks-Net (Table II): five [16c3p1×2]-mp2 blocks on 128×128×2 input.
+pub fn blocks5_net() -> NetDef {
+    let mut n = NetDef::new("5Blocks-Net", 8);
+    n.layers.push(Layer::Input { size: 2 * 128 * 128 });
+    n.layers.push(Layer::Pool { c: 2, h: 128, w: 128, k: 2 });
+    n.layers.push(Layer::Conv { cin: 2, h: 64, w: 64, cout: 16, k: 3, s: 1, p: 0, neuron: LIF });
+    let (mut h, mut w) = (62usize, 62usize);
+    for _ in 0..5 {
+        n.layers.push(Layer::Conv { cin: 16, h, w, cout: 16, k: 3, s: 1, p: 1, neuron: LIF });
+        n.layers.push(Layer::Conv { cin: 16, h, w, cout: 16, k: 3, s: 1, p: 1, neuron: LIF });
+        n.layers.push(Layer::Pool { c: 16, h, w, k: 2 });
+        h /= 2;
+        w /= 2;
+    }
+    n.layers.push(Layer::Fc { input: 16 * h * w, output: 11, neuron: LIF });
+    n
+}
+
+/// ResNet19 (Table II): 64c3-[128c3p1×2]×3-[256c3p1×2]×3-[512c3p1×2]×2-
+/// fc256-fc10 with residual skips, input 32×32×3.
+pub fn resnet19() -> NetDef {
+    let mut n = NetDef::new("ResNet19", 4);
+    n.layers.push(Layer::Input { size: 3 * 32 * 32 });
+    n.layers.push(Layer::Conv { cin: 3, h: 32, w: 32, cout: 64, k: 3, s: 1, p: 1, neuron: LIF });
+    let mut cin = 64;
+    let mut hw = 32usize;
+    let stages: [(usize, usize); 3] = [(128, 3), (256, 3), (512, 2)];
+    for (cout, blocks) in stages {
+        for b in 0..blocks {
+            let s = if b == 0 { 2 } else { 1 };
+            let h_in = if b == 0 { hw } else { hw / 2 * 2 / 2 * 2 / 2 + 0 };
+            let _ = h_in;
+            let (h, c_in) = if b == 0 { (hw, cin) } else { (hw / 2, cout) };
+            let from = n.layers.len() - 1;
+            n.layers.push(Layer::Conv { cin: c_in, h, w: h, cout, k: 3, s, p: 1, neuron: LIF });
+            let oh = (h + 2 - 3) / s + 1;
+            n.layers.push(Layer::Conv { cin: cout, h: oh, w: oh, cout, k: 3, s: 1, p: 1, neuron: LIF });
+            n.skips.push(Skip { from, to: n.layers.len() });
+        }
+        cin = cout;
+        hw /= 2;
+    }
+    n.layers.push(Layer::Fc { input: 512 * 4 * 4, output: 256, neuron: LIF });
+    n.layers.push(Layer::Fc { input: 256, output: 10, neuron: LIF });
+    n
+}
+
+/// ResNet18 at 32×32 (used in Fig 14's core-count comparison).
+pub fn resnet18() -> NetDef {
+    let mut n = NetDef::new("ResNet18", 4);
+    n.layers.push(Layer::Input { size: 3 * 32 * 32 });
+    n.layers.push(Layer::Conv { cin: 3, h: 32, w: 32, cout: 64, k: 3, s: 1, p: 1, neuron: LIF });
+    let stages: [(usize, usize, usize); 4] = [(64, 2, 32), (128, 2, 32), (256, 2, 16), (512, 2, 8)];
+    let mut cin = 64;
+    for (cout, blocks, h_in) in stages {
+        let mut h = h_in;
+        for b in 0..blocks {
+            let s = if b == 0 && cout != 64 { 2 } else { 1 };
+            let from = n.layers.len() - 1;
+            n.layers.push(Layer::Conv { cin, h, w: h, cout, k: 3, s, p: 1, neuron: LIF });
+            h = (h + 2 - 3) / s + 1;
+            n.layers.push(Layer::Conv { cin: cout, h, w: h, cout, k: 3, s: 1, p: 1, neuron: LIF });
+            n.skips.push(Skip { from, to: n.layers.len() });
+            cin = cout;
+        }
+    }
+    n.layers.push(Layer::Fc { input: 512 * 4 * 4, output: 10, neuron: LIF });
+    n
+}
+
+/// VGG16 at 32×32 (Fig 14 topology-representation benchmark).
+pub fn vgg16() -> NetDef {
+    let mut n = NetDef::new("VGG16", 4);
+    n.layers.push(Layer::Input { size: 3 * 32 * 32 });
+    let cfg: [(usize, usize, usize); 13] = [
+        (3, 64, 32), (64, 64, 32),
+        (64, 128, 16), (128, 128, 16),
+        (128, 256, 8), (256, 256, 8), (256, 256, 8),
+        (256, 512, 4), (512, 512, 4), (512, 512, 4),
+        (512, 512, 2), (512, 512, 2), (512, 512, 2),
+    ];
+    let mut last_hw = 32;
+    for (i, (cin, cout, hw)) in cfg.iter().enumerate() {
+        if *hw != last_hw {
+            n.layers.push(Layer::Pool { c: *cin, h: last_hw, w: last_hw, k: 2 });
+        }
+        n.layers.push(Layer::Conv { cin: *cin, h: *hw, w: *hw, cout: *cout, k: 3, s: 1, p: 1, neuron: LIF });
+        last_hw = *hw;
+        if i == cfg.len() - 1 {
+            n.layers.push(Layer::Pool { c: *cout, h: *hw, w: *hw, k: 2 });
+        }
+    }
+    n.layers.push(Layer::Fc { input: 512, output: 4096, neuron: LIF });
+    n.layers.push(Layer::Fc { input: 4096, output: 4096, neuron: LIF });
+    n.layers.push(Layer::Fc { input: 4096, output: 10, neuron: LIF });
+    n
+}
+
+/// ECG SRNN (Yin et al.): 4 input channels (2 ECG leads × ±polarity),
+/// recurrently connected ALIF hidden layer, per-timestep LIF readout.
+pub fn srnn_ecg(heterogeneous: bool) -> NetDef {
+    let hidden_neuron = if heterogeneous {
+        NeuronModel::Alif { tau: 0.9, vth: 1.0, beta: 0.3, rho: 0.97 }
+    } else {
+        NeuronModel::Lif { tau: 0.9, vth: 1.0 }
+    };
+    let mut n = NetDef::new(
+        if heterogeneous { "SRNN-ECG" } else { "SRNN-ECG-homogeneous" },
+        1301,
+    );
+    n.layers.push(Layer::Input { size: 4 });
+    n.layers.push(Layer::Recurrent { input: 4, size: 64, neuron: hidden_neuron });
+    n.layers.push(Layer::Fc { input: 64, output: 6, neuron: NeuronModel::Readout { tau: 0.9 } });
+    n
+}
+
+/// SHD DH-SFNN (Zheng et al.): 700 inputs, 64 DH-LIF hidden neurons with
+/// 4 dendritic branches (fan-in 2800 > the 2048 limit → fan-in
+/// expansion), 20-class non-firing readout.
+pub fn dhsnn_shd(dendrites: bool) -> NetDef {
+    let hidden = if dendrites {
+        NeuronModel::DhLif { branches: 4, tau_soma: 0.9, vth: 1.0 }
+    } else {
+        NeuronModel::Lif { tau: 0.9, vth: 1.0 }
+    };
+    let mut n = NetDef::new(
+        if dendrites { "DHSNN-SHD" } else { "DHSNN-SHD-homogeneous" },
+        100,
+    );
+    n.layers.push(Layer::Input { size: 700 });
+    n.layers.push(Layer::Fc { input: 700, output: 64, neuron: hidden });
+    n.layers.push(Layer::Fc { input: 64, output: 20, neuron: NeuronModel::Readout { tau: 0.9 } });
+    n
+}
+
+/// BCI cross-day decoder (§V-B.3): 16 sub-path networks over 128-channel
+/// M1 data (modeled at deploy granularity: per-subpath linear + attention
+/// + temporal-conv fused into sparse/fc blocks), concatenated into a
+/// LIF + BN1D+FC (fused) head of 4 classes. On-chip learning fine-tunes
+/// the head FC.
+pub fn bci_net(subpaths: usize) -> NetDef {
+    let mut n = NetDef::new("BCI-CrossDay", 50);
+    n.layers.push(Layer::Input { size: 128 });
+    // Each sub-path: linear transform (8 units) on the 128 channels.
+    // Deployed as one grouped sparse connection: 128 -> subpaths*8.
+    n.layers.push(Layer::Sparse {
+        input: 128,
+        output: subpaths * 8,
+        density: 8.0 * 8.0 / 128.0 / 8.0, // each unit sees 8 channels
+        neuron: LIF,
+    });
+    // Channel-attention + temporal-conv fusion per sub-path (Hadamard +
+    // add): modeled as a per-subpath fc 8 -> 8.
+    n.layers.push(Layer::Sparse {
+        input: subpaths * 8,
+        output: subpaths * 8,
+        density: 8.0 / (subpaths as f64 * 8.0),
+        neuron: LIF,
+    });
+    // Concatenate -> LIF -> fused BN1D+FC head (4 classes).
+    n.layers.push(Layer::Fc { input: subpaths * 8, output: 4, neuron: NeuronModel::Readout { tau: 0.9 } });
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_math() {
+        let c = Layer::Conv { cin: 3, h: 32, w: 32, cout: 64, k: 3, s: 1, p: 1, neuron: LIF };
+        assert_eq!(c.out_hw(), (32, 32));
+        assert_eq!(c.neurons(), 64 * 32 * 32);
+        assert_eq!(c.connections(), 3 * 64 * 9 * 32 * 32);
+        assert_eq!(c.unique_weights(), 3 * 64 * 9);
+
+        let s = Layer::Conv { cin: 64, h: 32, w: 32, cout: 128, k: 3, s: 2, p: 1, neuron: LIF };
+        assert_eq!(s.out_hw(), (16, 16));
+    }
+
+    #[test]
+    fn pool_and_fc_shapes() {
+        let p = Layer::Pool { c: 16, h: 8, w: 8, k: 2 };
+        assert_eq!(p.neurons(), 16 * 4 * 4);
+        assert_eq!(p.connections(), (16 * 4 * 4 * 4) as u64);
+        let f = Layer::Fc { input: 100, output: 10, neuron: LIF };
+        assert_eq!(f.connections(), 1000);
+    }
+
+    #[test]
+    fn recurrent_counts_recurrence() {
+        let r = Layer::Recurrent { input: 4, size: 64, neuron: LIF };
+        assert_eq!(r.connections(), (4 + 64) * 64);
+        assert_eq!(r.neurons(), 64);
+    }
+
+    #[test]
+    fn table2_nets_have_paper_scale() {
+        let p = plif_net();
+        // conv stack + fc4096: ~0.6M neurons, dominated by 256-ch conv maps
+        assert!(p.total_neurons() > 500_000 && p.total_neurons() < 1_500_000);
+
+        let b = blocks5_net();
+        assert!(b.total_neurons() > 50_000 && b.total_neurons() < 400_000);
+
+        let r = resnet19();
+        assert!(r.total_neurons() > 150_000 && r.total_neurons() < 600_000);
+        assert_eq!(r.skips.len(), 8); // 3+3+2 residual blocks
+        // each residual path crosses the two convs of its block
+        assert!(r.skips.iter().all(|s| s.delay() == 2));
+    }
+
+    #[test]
+    fn app_nets_shapes() {
+        let e = srnn_ecg(true);
+        assert_eq!(e.total_neurons(), 64 + 6);
+        assert_eq!(e.timesteps, 1301);
+
+        let s = dhsnn_shd(true);
+        assert_eq!(s.total_neurons(), 64 + 20);
+        // dendritic fan-in 4*700 = 2800 > 2048 → needs expansion; the
+        // layer itself reports the raw connection count
+        assert_eq!(s.layers[1].connections(), 700 * 64);
+
+        let b = bci_net(16);
+        assert_eq!(b.total_neurons(), 16 * 8 + 16 * 8 + 4);
+    }
+
+    #[test]
+    fn vgg16_synapse_count_plausible() {
+        let v = vgg16();
+        // ≈ 300M connections at 32×32 input
+        let c = v.total_connections();
+        assert!(c > 100_000_000 && c < 500_000_000, "c={c}");
+        // unique weights ≈ 15M+33M fc
+        let u = v.total_unique_weights();
+        assert!(u > 10_000_000 && u < 60_000_000, "u={u}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Dual FP16/INT16 ALU datapaths of the neuron core (§III-B: "The NC
+//! supports two data formats: 16-bit floating point (FP16) and 16-bit
+//! integer (INT16)").
+//!
+//! All values are raw 16-bit words; `DType` selects the interpretation.
+//! INT16 arithmetic wraps (two's complement); FP16 follows IEEE-754
+//! binary16 with round-to-nearest-even (see [`crate::util::f16`]).
+
+use crate::isa::DType;
+use crate::util::F16;
+
+#[inline]
+pub fn add(dt: DType, a: u16, b: u16) -> u16 {
+    match dt {
+        DType::I16 => (a as i16).wrapping_add(b as i16) as u16,
+        DType::F16 => F16(a).add(F16(b)).0,
+    }
+}
+
+#[inline]
+pub fn sub(dt: DType, a: u16, b: u16) -> u16 {
+    match dt {
+        DType::I16 => (a as i16).wrapping_sub(b as i16) as u16,
+        DType::F16 => F16(a).sub(F16(b)).0,
+    }
+}
+
+#[inline]
+pub fn mul(dt: DType, a: u16, b: u16) -> u16 {
+    match dt {
+        DType::I16 => (a as i16).wrapping_mul(b as i16) as u16,
+        DType::F16 => F16(a).mul(F16(b)).0,
+    }
+}
+
+/// The DIFF datapath: `a*v + c` with a single rounding in FP16 —
+/// the first-order PDE step `v = tau*v + I` (§III-B).
+#[inline]
+pub fn fma(dt: DType, a: u16, v: u16, c: u16) -> u16 {
+    match dt {
+        DType::I16 => (a as i16)
+            .wrapping_mul(v as i16)
+            .wrapping_add(c as i16) as u16,
+        DType::F16 => F16(a).mul_add(F16(v), F16(c)).0,
+    }
+}
+
+/// Compare `a ? b`, returning (eq, lt, gt). NaN is unordered (all false).
+#[inline]
+pub fn cmp(dt: DType, a: u16, b: u16) -> (bool, bool, bool) {
+    match dt {
+        DType::I16 => {
+            let (x, y) = (a as i16, b as i16);
+            (x == y, x < y, x > y)
+        }
+        DType::F16 => F16(a).cmp_flags(F16(b)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int16_wraps() {
+        assert_eq!(add(DType::I16, 0x7fff, 1) as i16, i16::MIN);
+        assert_eq!(sub(DType::I16, 0x8000, 1) as i16, i16::MAX);
+        assert_eq!(mul(DType::I16, 300i16 as u16, 300i16 as u16) as i16,
+                   (300i32 * 300 % 65536) as i16);
+    }
+
+    #[test]
+    fn fp16_basics() {
+        let one = F16::ONE.0;
+        let two = F16::from_f32(2.0).0;
+        assert_eq!(F16(add(DType::F16, one, one)).to_f32(), 2.0);
+        assert_eq!(F16(mul(DType::F16, two, two)).to_f32(), 4.0);
+        assert_eq!(F16(sub(DType::F16, two, one)).to_f32(), 1.0);
+    }
+
+    #[test]
+    fn fma_is_lif_update() {
+        // v = tau*v + I with tau=0.9, v=1.0, I=0.5 => 1.4
+        let tau = F16::from_f32(0.9).0;
+        let v = F16::from_f32(1.0).0;
+        let i = F16::from_f32(0.5).0;
+        let out = F16(fma(DType::F16, tau, v, i)).to_f32();
+        assert!((out - 1.4).abs() < 2e-3, "{out}");
+    }
+
+    #[test]
+    fn int_fma() {
+        // fixed-point style: 3*7 + 4
+        assert_eq!(fma(DType::I16, 3, 7, 4) as i16, 25);
+    }
+
+    #[test]
+    fn cmp_both_dtypes() {
+        assert_eq!(cmp(DType::I16, (-5i16) as u16, 3), (false, true, false));
+        let a = F16::from_f32(-0.5).0;
+        let b = F16::from_f32(0.25).0;
+        assert_eq!(cmp(DType::F16, a, b), (false, true, false));
+        assert_eq!(cmp(DType::F16, F16::NAN.0, b), (false, false, false));
+    }
+}

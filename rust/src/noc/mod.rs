@@ -1,0 +1,231 @@
+//! 2-D mesh Network-on-Chip with hybrid-mode routing (paper §III-C).
+//!
+//! The chip is an 11×12 array of cortical columns; each CC sits behind a
+//! router. A destination-driven router supports three spike-routing
+//! modes — point-to-point (XY dimension-ordered), regional multicast
+//! (shortest path to the rectangle boundary, then a tree inside it), and
+//! tree broadcast — plus memory-access packet types for configuration
+//! and run-time monitoring. Packets are 64 bits:
+//!
+//! ```text
+//!  63    61 60  59 58   51 50    35 34      19 18       3  2    0
+//! ┌────────┬──────┬───────┬────────┬──────────┬───────────┬──────┐
+//! │  type  │phase │  tag  │ index  │ payload  │ dest area │ mode │
+//! └────────┴──────┴───────┴────────┴──────────┴───────────┴──────┘
+//! ```
+//!
+//! `dest area` packs (x0,y0,x1,y1) 4 bits each; unicast uses (x0,y0).
+
+pub mod router;
+
+use crate::topology::RouteMode;
+
+/// Mesh dimensions: 11 rows × 12 columns = 132 CCs (paper Fig 2a).
+pub const MESH_W: usize = 12;
+pub const MESH_H: usize = 11;
+pub const NUM_CCS: usize = MESH_W * MESH_H;
+
+/// CC coordinates → linear id.
+#[inline]
+pub fn cc_id(x: u8, y: u8) -> usize {
+    y as usize * MESH_W + x as usize
+}
+
+/// Linear id → CC coordinates.
+#[inline]
+pub fn cc_xy(id: usize) -> (u8, u8) {
+    ((id % MESH_W) as u8, (id / MESH_W) as u8)
+}
+
+/// Packet types (§III-C: "The type field not only encodes the three
+/// spike-packet routing modes … but also specifies memory-access modes").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PacketType {
+    /// A spike event (INTEG traffic).
+    Spike,
+    /// An accumulated-current / FP-data event (fan-in expansion, inputs).
+    Data,
+    /// Configuration write into CC/NC memory (INIT stage).
+    MemWrite,
+    /// Run-time monitoring read request (allowed in FIRE stage).
+    MemRead,
+    /// Monitoring reply routed back to the host proxy.
+    MemReply,
+}
+
+impl PacketType {
+    fn to_bits(self) -> u64 {
+        match self {
+            PacketType::Spike => 0,
+            PacketType::Data => 1,
+            PacketType::MemWrite => 2,
+            PacketType::MemRead => 3,
+            PacketType::MemReply => 4,
+        }
+    }
+
+    fn from_bits(b: u64) -> Option<PacketType> {
+        Some(match b & 7 {
+            0 => PacketType::Spike,
+            1 => PacketType::Data,
+            2 => PacketType::MemWrite,
+            3 => PacketType::MemRead,
+            4 => PacketType::MemReply,
+            _ => return None,
+        })
+    }
+}
+
+/// Work-stage marker (§III-C: "the phase field is used to mark the work
+/// stage of multicast and broadcast").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PacketPhase {
+    Integ = 0,
+    Fire = 1,
+    Init = 2,
+}
+
+/// A routed 64-bit packet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Packet {
+    pub ptype: PacketType,
+    pub phase: PacketPhase,
+    /// Destination fan-in tag.
+    pub tag: u8,
+    /// Destination fan-in DT index.
+    pub index: u16,
+    /// Payload: global axon / channel id for spikes, data word for
+    /// memory packets.
+    pub payload: u16,
+    pub mode: RouteMode,
+}
+
+impl Packet {
+    /// Pack into the 64-bit wire format.
+    pub fn encode(&self) -> u64 {
+        let (mode_bits, x0, y0, x1, y1) = match self.mode {
+            RouteMode::Unicast { x, y } => (0u64, x, y, 0, 0),
+            RouteMode::Multicast { x0, y0, x1, y1 } => (1, x0, y0, x1, y1),
+            RouteMode::Broadcast => (2, 0, 0, 0, 0),
+        };
+        let phase = match self.phase {
+            PacketPhase::Integ => 0u64,
+            PacketPhase::Fire => 1,
+            PacketPhase::Init => 2,
+        };
+        (self.ptype.to_bits() << 61)
+            | (phase << 59)
+            | ((self.tag as u64) << 51)
+            | ((self.index as u64) << 35)
+            | ((self.payload as u64) << 19)
+            | ((x0 as u64 & 0xf) << 15)
+            | ((y0 as u64 & 0xf) << 11)
+            | ((x1 as u64 & 0xf) << 7)
+            | ((y1 as u64 & 0xf) << 3)
+            | mode_bits
+    }
+
+    pub fn decode(w: u64) -> Option<Packet> {
+        let ptype = PacketType::from_bits(w >> 61)?;
+        let phase = match (w >> 59) & 3 {
+            0 => PacketPhase::Integ,
+            1 => PacketPhase::Fire,
+            2 => PacketPhase::Init,
+            _ => return None,
+        };
+        let tag = ((w >> 51) & 0xff) as u8;
+        let index = ((w >> 35) & 0xffff) as u16;
+        let payload = ((w >> 19) & 0xffff) as u16;
+        let x0 = ((w >> 15) & 0xf) as u8;
+        let y0 = ((w >> 11) & 0xf) as u8;
+        let x1 = ((w >> 7) & 0xf) as u8;
+        let y1 = ((w >> 3) & 0xf) as u8;
+        let mode = match w & 7 {
+            0 => RouteMode::Unicast { x: x0, y: y0 },
+            1 => RouteMode::Multicast { x0, y0, x1, y1 },
+            2 => RouteMode::Broadcast,
+            _ => return None,
+        };
+        Some(Packet {
+            ptype,
+            phase,
+            tag,
+            index,
+            payload,
+            mode,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::propcheck;
+
+    #[test]
+    fn cc_id_xy_roundtrip() {
+        for id in 0..NUM_CCS {
+            let (x, y) = cc_xy(id);
+            assert_eq!(cc_id(x, y), id);
+            assert!((x as usize) < MESH_W && (y as usize) < MESH_H);
+        }
+    }
+
+    #[test]
+    fn packet_encode_decode_known() {
+        let p = Packet {
+            ptype: PacketType::Spike,
+            phase: PacketPhase::Integ,
+            tag: 0x5a,
+            index: 0x1234,
+            payload: 0xbeef,
+            mode: RouteMode::Multicast { x0: 1, y0: 2, x1: 9, y1: 10 },
+        };
+        assert_eq!(Packet::decode(p.encode()).unwrap(), p);
+    }
+
+    #[test]
+    fn prop_packet_roundtrip() {
+        propcheck("packet-roundtrip", 300, |rng| {
+            let ptype = match rng.below(5) {
+                0 => PacketType::Spike,
+                1 => PacketType::Data,
+                2 => PacketType::MemWrite,
+                3 => PacketType::MemRead,
+                _ => PacketType::MemReply,
+            };
+            let phase = match rng.below(3) {
+                0 => PacketPhase::Integ,
+                1 => PacketPhase::Fire,
+                _ => PacketPhase::Init,
+            };
+            let mode = match rng.below(3) {
+                0 => RouteMode::Unicast {
+                    x: rng.below(MESH_W as u64) as u8,
+                    y: rng.below(MESH_H as u64) as u8,
+                },
+                1 => {
+                    let x0 = rng.below(MESH_W as u64) as u8;
+                    let y0 = rng.below(MESH_H as u64) as u8;
+                    let x1 = x0 + rng.below(MESH_W as u64 - x0 as u64) as u8;
+                    let y1 = y0 + rng.below(MESH_H as u64 - y0 as u64) as u8;
+                    RouteMode::Multicast { x0, y0, x1, y1 }
+                }
+                _ => RouteMode::Broadcast,
+            };
+            let p = Packet {
+                ptype,
+                phase,
+                tag: rng.below(256) as u8,
+                index: rng.below(65536) as u16,
+                payload: rng.below(65536) as u16,
+                mode,
+            };
+            let q = Packet::decode(p.encode()).ok_or("decode failed")?;
+            if q != p {
+                return Err(format!("{p:?} != {q:?}"));
+            }
+            Ok(())
+        });
+    }
+}

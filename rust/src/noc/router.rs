@@ -1,0 +1,372 @@
+//! Hybrid-mode routing algorithms and mesh traffic accounting.
+//!
+//! * **Point-to-point**: XY dimension-ordered routing (deadlock-free).
+//! * **Broadcast**: a dimension-ordered spanning tree rooted at the
+//!   source — exactly `NUM_CCS - 1` link traversals chip-wide.
+//! * **Regional multicast**: the router "automatically selects the
+//!   shortest path to the regional boundary based on the current node
+//!   location, and then uses the tree-based multicasting algorithm within
+//!   the region" (§III-C) — `dist_to_rect + (area − 1)` traversals.
+//!
+//! [`Mesh`] accumulates per-link loads (the congestion signal consumed by
+//! the compiler's placement optimizer), per-mode packet counts, and
+//! latency estimates in router cycles.
+
+use super::{cc_id, cc_xy, MESH_H, MESH_W, NUM_CCS};
+use crate::topology::RouteMode;
+
+/// Cycles for one router hop (arbitration + link traversal).
+pub const CYCLES_PER_HOP: u64 = 2;
+
+/// Extra latency for crossing a chip boundary through a proxy unit +
+/// high-speed SerDes interface (§III-A, §IV-B "chip-scale expansion").
+pub const SERDES_CYCLES: u64 = 40;
+
+/// One directed mesh link: from CC `a` towards neighbour in `dir`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dir {
+    E = 0,
+    W = 1,
+    N = 2,
+    S = 3,
+}
+
+/// Result of routing one packet.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteResult {
+    /// CCs that receive a copy.
+    pub deliveries: Vec<usize>,
+    /// Total link traversals (energy ∝ this).
+    pub link_traversals: u64,
+    /// Worst-case delivery latency in cycles.
+    pub latency: u64,
+}
+
+/// XY path length between two CCs.
+#[inline]
+pub fn xy_dist(src: usize, dst: usize) -> u64 {
+    let (sx, sy) = cc_xy(src);
+    let (dx, dy) = cc_xy(dst);
+    ((sx as i32 - dx as i32).unsigned_abs() + (sy as i32 - dy as i32).unsigned_abs()) as u64
+}
+
+/// Manhattan distance from a CC to the nearest cell of a rectangle.
+#[inline]
+pub fn dist_to_rect(src: usize, x0: u8, y0: u8, x1: u8, y1: u8) -> u64 {
+    let (sx, sy) = cc_xy(src);
+    let dx = if sx < x0 {
+        (x0 - sx) as u64
+    } else if sx > x1 {
+        (sx - x1) as u64
+    } else {
+        0
+    };
+    let dy = if sy < y0 {
+        (y0 - sy) as u64
+    } else if sy > y1 {
+        (sy - y1) as u64
+    } else {
+        0
+    };
+    dx + dy
+}
+
+/// The entry cell of a rectangle for a given source (clamp to rect).
+#[inline]
+fn rect_entry(src: usize, x0: u8, y0: u8, x1: u8, y1: u8) -> (u8, u8) {
+    let (sx, sy) = cc_xy(src);
+    (sx.clamp(x0, x1), sy.clamp(y0, y1))
+}
+
+/// The per-chip mesh: routes packets and accumulates traffic statistics.
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    /// Directed per-link loads, indexed `[cc][dir]`.
+    pub link_load: Vec<[u64; 4]>,
+    pub unicast_packets: u64,
+    pub multicast_packets: u64,
+    pub broadcast_packets: u64,
+    pub total_traversals: u64,
+    /// Sum of worst-case latencies (for averages).
+    pub total_latency: u64,
+}
+
+impl Default for Mesh {
+    fn default() -> Mesh {
+        Mesh::new()
+    }
+}
+
+impl Mesh {
+    pub fn new() -> Mesh {
+        Mesh {
+            link_load: vec![[0; 4]; NUM_CCS],
+            unicast_packets: 0,
+            multicast_packets: 0,
+            broadcast_packets: 0,
+            total_traversals: 0,
+            total_latency: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        *self = Mesh::new();
+    }
+
+    /// Route one packet from `src`; returns deliveries + cost and updates
+    /// the accounting.
+    pub fn route(&mut self, src: usize, mode: RouteMode) -> RouteResult {
+        let r = match mode {
+            RouteMode::Unicast { x, y } => {
+                self.unicast_packets += 1;
+                let dst = cc_id(x, y);
+                self.load_xy_path(src, dst);
+                let hops = xy_dist(src, dst);
+                RouteResult {
+                    deliveries: vec![dst],
+                    link_traversals: hops,
+                    latency: hops * CYCLES_PER_HOP,
+                }
+            }
+            RouteMode::Multicast { x0, y0, x1, y1 } => {
+                self.multicast_packets += 1;
+                let entry = rect_entry(src, x0, y0, x1, y1);
+                let entry_id = cc_id(entry.0, entry.1);
+                self.load_xy_path(src, entry_id);
+                let approach = xy_dist(src, entry_id);
+                // Tree multicast inside the rectangle: row-first tree from
+                // the entry cell. area-1 traversals, depth = max Manhattan
+                // distance from entry within the rect.
+                let mut deliveries = Vec::new();
+                let mut depth = 0u64;
+                for y in y0..=y1 {
+                    for x in x0..=x1 {
+                        let id = cc_id(x, y);
+                        deliveries.push(id);
+                        let d = xy_dist(entry_id, id);
+                        depth = depth.max(d);
+                    }
+                }
+                self.load_tree(entry_id, x0, y0, x1, y1);
+                let area = deliveries.len() as u64;
+                RouteResult {
+                    deliveries,
+                    link_traversals: approach + (area - 1),
+                    latency: (approach + depth) * CYCLES_PER_HOP,
+                }
+            }
+            RouteMode::Broadcast => {
+                self.broadcast_packets += 1;
+                self.load_tree(src, 0, 0, (MESH_W - 1) as u8, (MESH_H - 1) as u8);
+                let mut depth = 0;
+                for id in 0..NUM_CCS {
+                    depth = depth.max(xy_dist(src, id));
+                }
+                RouteResult {
+                    deliveries: (0..NUM_CCS).collect(),
+                    link_traversals: (NUM_CCS - 1) as u64,
+                    latency: depth * CYCLES_PER_HOP,
+                }
+            }
+        };
+        self.total_traversals += r.link_traversals;
+        self.total_latency += r.latency;
+        r
+    }
+
+    /// Maximum per-link load (the congestion hot-spot metric).
+    pub fn max_link_load(&self) -> u64 {
+        self.link_load
+            .iter()
+            .flat_map(|l| l.iter())
+            .copied()
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn total_packets(&self) -> u64 {
+        self.unicast_packets + self.multicast_packets + self.broadcast_packets
+    }
+
+    /// Add the XY (x first, then y) path's links to the load map.
+    fn load_xy_path(&mut self, src: usize, dst: usize) {
+        let (mut x, mut y) = cc_xy(src);
+        let (dx, dy) = cc_xy(dst);
+        while x != dx {
+            if x < dx {
+                self.link_load[cc_id(x, y)][Dir::E as usize] += 1;
+                x += 1;
+            } else {
+                self.link_load[cc_id(x, y)][Dir::W as usize] += 1;
+                x -= 1;
+            }
+        }
+        while y != dy {
+            if y < dy {
+                self.link_load[cc_id(x, y)][Dir::S as usize] += 1;
+                y += 1;
+            } else {
+                self.link_load[cc_id(x, y)][Dir::N as usize] += 1;
+                y -= 1;
+            }
+        }
+    }
+
+    /// Add a row-first spanning tree of the rectangle rooted near `root`.
+    fn load_tree(&mut self, root: usize, x0: u8, y0: u8, x1: u8, y1: u8) {
+        let (rx, ry) = cc_xy(root);
+        let rx = rx.clamp(x0, x1);
+        let ry = ry.clamp(y0, y1);
+        // vertical trunk along column rx
+        for y in y0..ry {
+            self.link_load[cc_id(rx, y + 1)][Dir::N as usize] += 1;
+        }
+        for y in ry..y1 {
+            self.link_load[cc_id(rx, y)][Dir::S as usize] += 1;
+        }
+        // horizontal branches along each row
+        for y in y0..=y1 {
+            for x in x0..rx {
+                self.link_load[cc_id(x + 1, y)][Dir::W as usize] += 1;
+            }
+            for x in rx..x1 {
+                self.link_load[cc_id(x, y)][Dir::E as usize] += 1;
+            }
+        }
+    }
+}
+
+/// Multi-chip routing cost through edge proxy units: XY to the nearest
+/// edge, SerDes crossing(s), then XY in the destination chip. Returns
+/// (link traversals, latency) — used for Table III's inter-chip numbers
+/// and large-model sharding.
+pub fn inter_chip_cost(
+    src: usize,
+    chips_away: u64,
+    dst_in_remote: usize,
+) -> (u64, u64) {
+    let (sx, _sy) = cc_xy(src);
+    // exit through the nearest E/W edge
+    let to_edge = (sx as u64).min((MESH_W - 1 - sx as usize) as u64);
+    let (dx, _dy) = cc_xy(dst_in_remote);
+    let from_edge = (dx as u64).min((MESH_W - 1 - dx as usize) as u64);
+    let traversals = to_edge + from_edge + chips_away;
+    let latency =
+        (to_edge + from_edge) * CYCLES_PER_HOP + chips_away * SERDES_CYCLES;
+    (traversals, latency)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::propcheck;
+
+    #[test]
+    fn unicast_xy_distance() {
+        let mut m = Mesh::new();
+        let src = cc_id(2, 3);
+        let r = m.route(src, RouteMode::Unicast { x: 7, y: 9 });
+        assert_eq!(r.deliveries, vec![cc_id(7, 9)]);
+        assert_eq!(r.link_traversals, 5 + 6);
+        assert_eq!(r.latency, 11 * CYCLES_PER_HOP);
+        assert_eq!(m.unicast_packets, 1);
+    }
+
+    #[test]
+    fn unicast_to_self_is_free() {
+        let mut m = Mesh::new();
+        let r = m.route(cc_id(4, 4), RouteMode::Unicast { x: 4, y: 4 });
+        assert_eq!(r.link_traversals, 0);
+        assert_eq!(r.deliveries, vec![cc_id(4, 4)]);
+    }
+
+    #[test]
+    fn broadcast_covers_all_ccs_with_minimal_tree() {
+        let mut m = Mesh::new();
+        let r = m.route(cc_id(5, 5), RouteMode::Broadcast);
+        assert_eq!(r.deliveries.len(), NUM_CCS);
+        // spanning tree: exactly N-1 traversals
+        assert_eq!(r.link_traversals, (NUM_CCS - 1) as u64);
+        // tree edges in the load map equal traversals
+        let loaded: u64 = m.link_load.iter().flat_map(|l| l.iter()).sum();
+        assert_eq!(loaded, (NUM_CCS - 1) as u64);
+    }
+
+    #[test]
+    fn multicast_delivers_rect_and_beats_unicasts() {
+        let mut m = Mesh::new();
+        let src = cc_id(0, 0);
+        let rect = RouteMode::Multicast { x0: 4, y0: 4, x1: 7, y1: 7 };
+        let r = m.route(src, rect);
+        assert_eq!(r.deliveries.len(), 16);
+        // approach = dist((0,0) -> (4,4)) = 8; tree = 15
+        assert_eq!(r.link_traversals, 8 + 15);
+        // equivalent unicasts would cost sum of distances ≥ 16*8
+        let mut uni = Mesh::new();
+        let mut uni_cost = 0;
+        for y in 4..=7u8 {
+            for x in 4..=7u8 {
+                uni_cost += uni.route(src, RouteMode::Unicast { x, y }).link_traversals;
+            }
+        }
+        assert!(r.link_traversals < uni_cost / 4);
+    }
+
+    #[test]
+    fn multicast_from_inside_region_has_no_approach() {
+        let mut m = Mesh::new();
+        let r = m.route(cc_id(5, 5), RouteMode::Multicast { x0: 4, y0: 4, x1: 6, y1: 6 });
+        assert_eq!(r.link_traversals, 9 - 1);
+    }
+
+    #[test]
+    fn dist_to_rect_cases() {
+        let src = cc_id(0, 0);
+        assert_eq!(dist_to_rect(src, 2, 2, 4, 4), 4);
+        assert_eq!(dist_to_rect(cc_id(3, 3), 2, 2, 4, 4), 0);
+        assert_eq!(dist_to_rect(cc_id(11, 0), 2, 2, 4, 4), 7 + 2);
+    }
+
+    #[test]
+    fn link_loads_track_congestion() {
+        let mut m = Mesh::new();
+        // ten packets across the same column
+        for _ in 0..10 {
+            m.route(cc_id(0, 5), RouteMode::Unicast { x: 11, y: 5 });
+        }
+        assert_eq!(m.max_link_load(), 10);
+        assert_eq!(m.total_traversals, 110);
+    }
+
+    #[test]
+    fn inter_chip_adds_serdes_latency() {
+        let (trav, lat) = inter_chip_cost(cc_id(1, 5), 2, cc_id(10, 3));
+        assert_eq!(trav, 1 + 1 + 2);
+        assert_eq!(lat, 2 * CYCLES_PER_HOP + 2 * SERDES_CYCLES);
+    }
+
+    #[test]
+    fn prop_multicast_traversals_are_approach_plus_tree() {
+        propcheck("mc-cost", 200, |rng| {
+            let src = rng.below(NUM_CCS as u64) as usize;
+            let x0 = rng.below(MESH_W as u64) as u8;
+            let y0 = rng.below(MESH_H as u64) as u8;
+            let x1 = x0 + rng.below(MESH_W as u64 - x0 as u64) as u8;
+            let y1 = y0 + rng.below(MESH_H as u64 - y0 as u64) as u8;
+            let mut m = Mesh::new();
+            let r = m.route(src, RouteMode::Multicast { x0, y0, x1, y1 });
+            let area = ((x1 - x0 + 1) as u64) * ((y1 - y0 + 1) as u64);
+            let expect = dist_to_rect(src, x0, y0, x1, y1) + area - 1;
+            if r.link_traversals != expect {
+                return Err(format!(
+                    "src={src} rect=({x0},{y0},{x1},{y1}): {} != {expect}",
+                    r.link_traversals
+                ));
+            }
+            if r.deliveries.len() as u64 != area {
+                return Err("delivery count mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

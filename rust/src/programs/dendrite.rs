@@ -1,0 +1,173 @@
+//! DH-LIF: the dendritic-heterogeneity neuron of the SHD speech model
+//! (Zheng et al., §V-B.3). Each neuron owns `B` dendritic branches with
+//! *distinct* timing factors tau_b; branch states integrate their own
+//! afferent currents and the soma integrates the branch outputs:
+//!
+//! ```text
+//! b_i(t) = tau_i · b_i(t-1) + I_i(t)          (per branch)
+//! v(t)   = tau_s · v(t-1) + Σ_i b_i(t)        (soma)
+//! ```
+//!
+//! Deployment trick (see `crate::compiler`): each branch is an ordinary
+//! fan-in connection whose IEs pre-offset the accumulator index by
+//! `branch · n_neurons`, so the INTEG programs need no changes; only
+//! this FIRE program knows about branches. Branch decays live in the
+//! parameter block at `P_TAU_BRANCH + b`, demonstrating per-compartment
+//! heterogeneity.
+
+use super::{NcLayout, param};
+use crate::isa::assembler::{AsmError, Program};
+
+/// DH-LIF FIRE program for `branches` dendritic compartments over
+/// `n_neurons` resident neurons. Branch state is stored in the ADAPT
+/// region (bank `b` at `adapt + b·n_neurons`); branch currents in the
+/// CUR region with the same banking.
+pub fn fire_dhlif(
+    l: &NcLayout,
+    branches: usize,
+    n_neurons: usize,
+) -> Result<Program, AsmError> {
+    assert!(branches >= 1 && branches <= 8);
+    // Unroll the branch loop: branch decays are distinct registers, and
+    // unrolling keeps the hot path tight (the paper's NC would do the
+    // same — the program is generated per deployment).
+    let mut body = String::new();
+    body.push_str("        ld.f    r14, r0, P_TAU\n");
+    body.push_str("        ld.f    r15, r0, P_VTH\n");
+    body.push_str("    loop:\n        recv\n");
+    // soma accumulator r5 = tau_s * v
+    body.push_str("        ld.f    r5, r1, VMEM\n");
+    body.push_str("        movi    r6, 0\n");
+    body.push_str("        diff.f  r5, r14, r6\n"); // v = tau*v + 0
+    for b in 0..branches {
+        let cur_off = format!("CUR_B{b}");
+        let st_off = format!("ADAPT_B{b}");
+        let tau_off = format!("P_TAUB{b}");
+        body.push_str(&format!(
+            "        ld.f    r7, r0, {tau_off}\n\
+                     ld.f    r8, r1, {st_off}\n\
+                     ld.f    r9, r1, {cur_off}\n\
+                     diff.f  r8, r7, r9\n\
+                     st.f    r8, r1, {st_off}\n\
+                     movi    r9, 0\n\
+                     st      r9, r1, {cur_off}\n\
+                     add.f   r5, r5, r8\n"
+        ));
+    }
+    body.push_str(
+        "        cmp.f   r5, r15\n\
+                 bc.lt   store\n\
+                 send    r5, r1, 0\n\
+                 movi    r5, 0\n\
+             store:\n\
+                 st.f    r5, r1, VMEM\n\
+                 b       loop\n",
+    );
+
+    let mut consts: Vec<(String, i32)> = Vec::new();
+    for b in 0..branches {
+        consts.push((
+            format!("CUR_B{b}"),
+            l.cur as i32 + (b * n_neurons) as i32,
+        ));
+        consts.push((
+            format!("ADAPT_B{b}"),
+            l.adapt as i32 + (b * n_neurons) as i32,
+        ));
+        consts.push((
+            format!("P_TAUB{b}"),
+            l.params as i32 + param::TAU_BRANCH + b as i32,
+        ));
+    }
+    let refs: Vec<(&str, i32)> = consts.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    l.build(&refs, &body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::EventKind;
+    use crate::nc::{NcEvent, NeuronCore, Phase};
+    use crate::programs::{integ_direct, NcLayout};
+    use crate::util::F16;
+
+    fn f(x: f32) -> u16 {
+        F16::from_f32(x).0
+    }
+    fn g(x: u16) -> f32 {
+        F16(x).to_f32()
+    }
+
+    #[test]
+    fn branches_integrate_with_distinct_time_constants() {
+        // 2 neurons, 2 branches; slow branch tau=0.9, fast tau=0.1.
+        let n = 2;
+        let l = NcLayout::standard(n * 2 + 2, 64, 32); // room for banks
+        let mut nc = NeuronCore::new(4096);
+        nc.load_integ(&integ_direct(&l).unwrap());
+        nc.load_fire(&fire_dhlif(&l, 2, n).unwrap());
+        nc.mem[(l.params) as usize] = f(0.5); // tau soma
+        nc.mem[(l.params + 1) as usize] = f(10.0); // vth high: no spikes
+        nc.mem[(l.params as usize) + 5] = f(0.9); // tau branch 0
+        nc.mem[(l.params as usize) + 6] = f(0.1); // tau branch 1
+
+        // one unit of current into each branch of neuron 0
+        nc.mem[l.cur as usize] = f(1.0); // branch 0, neuron 0
+        nc.mem[l.cur as usize + n] = f(1.0); // branch 1, neuron 0
+        nc.set_phase(Phase::Fire);
+        nc.push_event(NcEvent { kind: EventKind::Fire, neuron: 0, axon: 0, data: 0 });
+        nc.run(100_000).unwrap();
+        // both branches hold 1.0 after one step (decay applies to prior
+        // state); soma v = 0.5*0 + (1.0 + 1.0)
+        assert!((g(nc.mem[l.vmem as usize]) - 2.0).abs() < 4e-3);
+
+        // next step without input: b0=0.9, b1=0.1 → v = 0.5*2 + 1.0 = 2.0
+        nc.set_phase(Phase::Fire);
+        nc.push_event(NcEvent { kind: EventKind::Fire, neuron: 0, axon: 0, data: 0 });
+        nc.run(100_000).unwrap();
+        let b0 = g(nc.mem[l.adapt as usize]);
+        let b1 = g(nc.mem[l.adapt as usize + n]);
+        assert!((b0 - 0.9).abs() < 3e-3, "slow branch {b0}");
+        assert!((b1 - 0.1).abs() < 3e-3, "fast branch {b1}");
+        let v = g(nc.mem[l.vmem as usize]);
+        assert!((v - 2.0).abs() < 8e-3, "soma {v}");
+    }
+
+    #[test]
+    fn dhlif_spikes_when_branch_sum_crosses() {
+        let n = 1;
+        let l = NcLayout::standard(8, 64, 32);
+        let mut nc = NeuronCore::new(4096);
+        nc.load_integ(&integ_direct(&l).unwrap());
+        nc.load_fire(&fire_dhlif(&l, 4, n).unwrap());
+        nc.mem[l.params as usize] = f(0.5);
+        nc.mem[(l.params + 1) as usize] = f(1.0);
+        for b in 0..4 {
+            nc.mem[l.params as usize + 5 + b] = f(0.5);
+            nc.mem[l.cur as usize + b * n] = f(0.3); // 4×0.3 = 1.2 ≥ 1
+        }
+        nc.set_phase(Phase::Fire);
+        nc.push_event(NcEvent { kind: EventKind::Fire, neuron: 0, axon: 0, data: 0 });
+        nc.run(100_000).unwrap();
+        let out = nc.take_out_events();
+        assert_eq!(out.len(), 1);
+        assert_eq!(g(nc.mem[l.vmem as usize]), 0.0, "reset after spike");
+    }
+
+    #[test]
+    fn homogeneous_variant_is_plain_lif() {
+        // one branch with tau == soma tau behaves like LIF over one step
+        let l = NcLayout::standard(8, 64, 32);
+        let mut nc = NeuronCore::new(4096);
+        nc.load_integ(&integ_direct(&l).unwrap());
+        nc.load_fire(&fire_dhlif(&l, 1, 1).unwrap());
+        nc.mem[l.params as usize] = f(0.5);
+        nc.mem[(l.params + 1) as usize] = f(10.0);
+        nc.mem[l.params as usize + 5] = f(0.0); // branch passes current through
+        nc.mem[l.cur as usize] = f(0.8);
+        nc.set_phase(Phase::Fire);
+        nc.push_event(NcEvent { kind: EventKind::Fire, neuron: 0, axon: 0, data: 0 });
+        nc.run(100_000).unwrap();
+        assert!((g(nc.mem[l.vmem as usize]) - 0.8).abs() < 3e-3);
+    }
+}

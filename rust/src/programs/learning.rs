@@ -1,0 +1,330 @@
+//! On-chip learning programs (paper §IV-B, Fig 9d/e).
+//!
+//! Two rules ship with the library — both expressed in plain TaiBai
+//! assembly, which is the point: the chip's learning algorithms are
+//! *fully programmable* (Table IV's rightmost column).
+//!
+//! 1. **Accumulated-spike backprop head** — the BCI cross-day rule: the
+//!    paper avoids storing per-timestep spikes by *accumulating* input
+//!    spike counts during the forward pass and using the accumulated
+//!    counts in place of timestep-by-timestep spikes during the weight
+//!    update (a delta rule over the readout layer):
+//!    `Δw_ij = −lr · err_i · acc_j`. The error arrives from the host as
+//!    an FP-data packet per output neuron.
+//! 2. **STDP** — pair-based with per-axon presynaptic traces, for
+//!    unsupervised local adaptation.
+//!
+//! INT16 spike counters are converted to FP16 through a small `ITOF`
+//! lookup table written by the code generator (counts saturate at the
+//! table size — timesteps per sample are bounded).
+
+use super::NcLayout;
+use crate::isa::assembler::{AsmError, Program};
+
+/// Size of the INT→FP16 lookup table (max representable accumulated
+/// spike count per axon).
+pub const ITOF_SIZE: usize = 256;
+
+/// Words for the ITOF table contents (codegen writes these at
+/// `layout.itof`).
+pub fn itof_table() -> Vec<u16> {
+    (0..ITOF_SIZE)
+        .map(|i| crate::util::F16::from_f32(i as f32).0)
+        .collect()
+}
+
+/// INTEG program for a learning readout head fed by a Type-2 (full
+/// connection) fan-in: per spike event (start `r1`, upstream axon `r2`,
+/// count `r3`) it walks the weight row `axon·NOUT` accumulating currents
+/// — exactly `integ_fc` — *and* counts the presynaptic spike in
+/// `ACC[axon]`. FP-data events (kind 2) carry the host-provided
+/// per-neuron error into `ERR[neuron]`.
+pub fn integ_learn_head(l: &NcLayout, n_out: usize) -> Result<Program, AsmError> {
+    l.build(
+        &[("NOUT", n_out as i32)],
+        r#"
+    loop:
+        recv
+        cmpi    r4, 2
+        bc.eq   err_evt
+        muli    r5, r2, NOUT
+        movi    r6, 0
+    inner:
+        add     r7, r5, r6
+        ld.f    r8, r7, WEIGHTS
+        add     r9, r1, r6
+        locacc.f r8, r9, CUR
+        addi    r6, r6, 1
+        cmp     r6, r3
+        bc.lt   inner
+        movi    r7, 1
+        locacc  r7, r2, ACC
+        b       loop
+    err_evt:
+        st.f    r3, r1, ERR
+        b       loop
+    "#,
+    )
+}
+
+/// FIRE program for the learning readout: behaves as a non-firing
+/// readout on Fire events; on Learn events (kind 3) it sweeps the `n_in`
+/// accumulated spike counters and applies the delta rule to its column
+/// of the weight matrix.
+pub fn fire_learn_head(l: &NcLayout, n_in: usize, n_out: usize) -> Result<Program, AsmError> {
+    l.build(
+        &[("NIN", n_in as i32), ("NOUT", n_out as i32)],
+        r#"
+        ld.f    r14, r0, P_TAU
+        ld.f    r13, r0, P_LR
+    loop:
+        recv
+        cmpi    r4, 3
+        bc.eq   learn
+        ld.f    r5, r1, VMEM
+        ld.f    r6, r1, CUR
+        diff.f  r5, r14, r6
+        movi    r6, 0
+        st      r6, r1, CUR
+        st.f    r5, r1, VMEM
+        send    r5, r1, 1
+        b       loop
+    learn:
+        ld.f    r5, r1, ERR
+        mul.f   r5, r5, r13     ; lr * err_i
+        movi    r7, 0           ; j
+    lloop:
+        ld      r8, r7, ACC
+        ld.f    r9, r8, ITOF    ; fp16(acc_j)
+        mul.f   r9, r9, r5      ; delta = lr*err*acc
+        muli    r10, r7, NOUT
+        add     r10, r10, r1
+        ld.f    r11, r10, WEIGHTS
+        sub.f   r11, r11, r9
+        st.f    r11, r10, WEIGHTS
+        addi    r7, r7, 1
+        cmpi    r7, NIN
+        bc.lt   lloop
+        b       loop
+    "#,
+    )
+}
+
+/// Host-side helper: clear the ACC counters between samples (emitted as
+/// a mem image region by codegen; here for tests).
+pub fn acc_words(n_axons: usize) -> Vec<u16> {
+    vec![0; n_axons]
+}
+
+/// STDP FIRE program: on each Fire event the neuron updates membrane
+/// and, when it spikes, potentiates every synapse in proportion to its
+/// presynaptic trace (`w += A⁺ · x_j`). The INTEG side bumps the traces.
+/// Trace decay is applied lazily by neuron 0's fire event once per
+/// timestep (×rho over the whole trace array).
+pub fn fire_stdp(l: &NcLayout, n_in: usize, n_out: usize) -> Result<Program, AsmError> {
+    l.build(
+        &[("NIN", n_in as i32), ("NOUT", n_out as i32)],
+        r#"
+        ld.f    r14, r0, P_TAU
+        ld.f    r15, r0, P_VTH
+        ld.f    r13, r0, P_RHO
+        ld.f    r12, r0, P_LR   ; A+ reuses the LR slot
+    loop:
+        recv
+        cmpi    r1, 0           ; neuron 0 decays the shared traces
+        bc.ne   dynamics
+        movi    r7, 0
+    decay:
+        ld.f    r8, r7, ACC
+        mul.f   r8, r8, r13
+        st.f    r8, r7, ACC
+        addi    r7, r7, 1
+        cmpi    r7, NIN
+        bc.lt   decay
+    dynamics:
+        ld.f    r5, r1, VMEM
+        ld.f    r6, r1, CUR
+        diff.f  r5, r14, r6
+        movi    r6, 0
+        st      r6, r1, CUR
+        cmp.f   r5, r15
+        bc.lt   store
+        send    r5, r1, 0
+        movi    r5, 0
+        ; potentiate: w[j][i] += A+ * x_j for all j
+        movi    r7, 0
+    pot:
+        ld.f    r8, r7, ACC
+        mul.f   r8, r8, r12
+        muli    r9, r7, NOUT
+        add     r9, r9, r1
+        ld.f    r10, r9, WEIGHTS
+        add.f   r10, r10, r8
+        st.f    r10, r9, WEIGHTS
+        addi    r7, r7, 1
+        cmpi    r7, NIN
+        bc.lt   pot
+    store:
+        st.f    r5, r1, VMEM
+        b       loop
+    "#,
+    )
+}
+
+/// STDP INTEG program: spike events integrate current (direct
+/// addressing `axon·n_out + neuron`) and bump the presynaptic FP16 trace
+/// `x[axon] += 1`.
+pub fn integ_stdp(l: &NcLayout, n_out: usize) -> Result<Program, AsmError> {
+    l.build(
+        &[("NOUT", n_out as i32)],
+        r#"
+        ld.f    r12, r0, P_ONE
+    loop:
+        recv
+        muli    r5, r2, NOUT
+        add     r5, r5, r1
+        ld.f    r6, r5, WEIGHTS
+        locacc.f r6, r1, CUR
+        locacc.f r12, r2, ACC
+        b       loop
+    "#,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::EventKind;
+    use crate::nc::{NcEvent, NeuronCore, Phase};
+    use crate::programs::NcLayout;
+    use crate::util::F16;
+
+    fn f(x: f32) -> u16 {
+        F16::from_f32(x).0
+    }
+    fn g(x: u16) -> f32 {
+        F16(x).to_f32()
+    }
+
+    fn learn_nc(n_in: usize, n_out: usize) -> (NcLayout, NeuronCore) {
+        let l = NcLayout::standard(n_out, n_in * n_out, n_in.max(16));
+        let mut nc = NeuronCore::new(8192);
+        nc.load_integ(&integ_learn_head(&l, n_out).unwrap());
+        nc.load_fire(&fire_learn_head(&l, n_in, n_out).unwrap());
+        nc.mem[l.params as usize] = f(0.9); // tau
+        nc.mem[(l.params + 4) as usize] = f(0.1); // lr
+        let tab = itof_table();
+        nc.mem[l.itof as usize..l.itof as usize + tab.len()].copy_from_slice(&tab);
+        (l, nc)
+    }
+
+    #[test]
+    fn forward_pass_accumulates_spike_counts() {
+        let (l, mut nc) = learn_nc(4, 2);
+        nc.mem[l.weights as usize + 0] = f(0.5); // w[0][0]
+        nc.mem[l.weights as usize + 1] = f(0.25); // w[0][1]
+        // axon 0 spikes 3 times toward neurons 0..2 (Type-2 event)
+        for _ in 0..3 {
+            nc.push_event(NcEvent { kind: EventKind::Spike, neuron: 0, axon: 0, data: 2 });
+        }
+        nc.run(100_000).unwrap();
+        assert_eq!(nc.mem[l.acc as usize], 3, "acc counter");
+        assert!((g(nc.mem[l.cur as usize]) - 1.5).abs() < 3e-3);
+        assert!((g(nc.mem[l.cur as usize + 1]) - 0.75).abs() < 3e-3);
+    }
+
+    #[test]
+    fn delta_rule_moves_weights_against_error() {
+        let (l, mut nc) = learn_nc(4, 2);
+        // forward: axon 1 spiked twice; axon 2 never
+        nc.mem[l.acc as usize + 1] = 2;
+        // host injects error +0.8 for neuron 0 via Data event
+        nc.push_event(NcEvent {
+            kind: EventKind::Current,
+            neuron: 0,
+            axon: 0,
+            data: f(0.8),
+        });
+        nc.run(100_000).unwrap();
+        assert!((g(nc.mem[l.err as usize]) - 0.8).abs() < 2e-3);
+
+        let w10_before = g(nc.mem[l.weights as usize + 1 * 2 + 0]);
+        let w20_before = g(nc.mem[l.weights as usize + 2 * 2 + 0]);
+        nc.set_phase(Phase::Fire);
+        nc.push_event(NcEvent { kind: EventKind::Learn, neuron: 0, axon: 0, data: 0 });
+        nc.run(1_000_000).unwrap();
+        let w10 = g(nc.mem[l.weights as usize + 1 * 2 + 0]);
+        let w20 = g(nc.mem[l.weights as usize + 2 * 2 + 0]);
+        // Δw = -lr*err*acc = -0.1*0.8*2 = -0.16 for axon 1; 0 for axon 2
+        assert!((w10 - (w10_before - 0.16)).abs() < 4e-3, "w10={w10}");
+        assert_eq!(w20, w20_before);
+    }
+
+    #[test]
+    fn learning_reduces_readout_error_over_iterations() {
+        // end-to-end sanity: a single weight trained toward a target.
+        let (l, mut nc) = learn_nc(1, 1);
+        let target = 2.0f32;
+        let mut last_err = f32::INFINITY;
+        let mut w = 0.1f32;
+        nc.mem[l.weights as usize] = f(w);
+        for _ in 0..10 {
+            // forward: 4 input spikes through weight w
+            nc.set_phase(Phase::Integ);
+            for _ in 0..4 {
+                nc.push_event(NcEvent { kind: EventKind::Spike, neuron: 0, axon: 0, data: 0 });
+            }
+            nc.run(100_000).unwrap();
+            // readout fire
+            nc.set_phase(Phase::Fire);
+            nc.mem[l.vmem as usize] = 0; // fresh membrane per sample
+            nc.push_event(NcEvent { kind: EventKind::Fire, neuron: 0, axon: 0, data: 0 });
+            nc.run(100_000).unwrap();
+            let y = g(nc.take_out_events()[0].value);
+            let err = y - target;
+            assert!(err.abs() <= last_err.abs() + 1e-3, "diverged: {err} vs {last_err}");
+            last_err = err;
+            // host sends error; learn
+            nc.set_phase(Phase::Integ);
+            nc.push_event(NcEvent { kind: EventKind::Current, neuron: 0, axon: 0, data: f(err) });
+            nc.run(100_000).unwrap();
+            nc.set_phase(Phase::Fire);
+            nc.push_event(NcEvent { kind: EventKind::Learn, neuron: 0, axon: 0, data: 0 });
+            nc.run(100_000).unwrap();
+            // clear acc between samples (host INIT packet in deployment)
+            nc.mem[l.acc as usize] = 0;
+            w = g(nc.mem[l.weights as usize]);
+        }
+        assert!(last_err.abs() < 0.5, "final err {last_err}");
+    }
+
+    #[test]
+    fn stdp_potentiates_recently_active_synapses() {
+        let n_in = 3;
+        let n_out = 1;
+        let l = NcLayout::standard(n_out, n_in * n_out, 16);
+        let mut nc = NeuronCore::new(8192);
+        nc.load_integ(&integ_stdp(&l, n_out).unwrap());
+        nc.load_fire(&fire_stdp(&l, n_in, n_out).unwrap());
+        nc.mem[l.params as usize] = f(0.5); // tau
+        nc.mem[(l.params + 1) as usize] = f(1.0); // vth
+        nc.mem[(l.params + 2) as usize] = f(0.5); // rho (trace decay)
+        nc.mem[(l.params + 4) as usize] = f(0.05); // A+
+        nc.mem[(l.params + 13) as usize] = f(1.0); // P_ONE
+        nc.mem[l.weights as usize] = f(0.6); // w[0]
+        nc.mem[l.weights as usize + 1] = f(0.6); // w[1]
+        // axons 0 and 1 spike (axon 2 silent): current 1.2 ≥ vth
+        nc.push_event(NcEvent { kind: EventKind::Spike, neuron: 0, axon: 0, data: 0 });
+        nc.push_event(NcEvent { kind: EventKind::Spike, neuron: 0, axon: 1, data: 0 });
+        nc.run(100_000).unwrap();
+        nc.set_phase(Phase::Fire);
+        nc.push_event(NcEvent { kind: EventKind::Fire, neuron: 0, axon: 0, data: 0 });
+        nc.run(100_000).unwrap();
+        assert_eq!(nc.take_out_events().len(), 1, "post neuron spiked");
+        // active synapses potentiated by A+ * trace(=1*rho after decay)
+        let w0 = g(nc.mem[l.weights as usize]);
+        let w2 = g(nc.mem[l.weights as usize + 2]);
+        assert!(w0 > 0.6, "w0={w0}");
+        assert_eq!(w2, 0.0, "silent synapse untouched");
+    }
+}

@@ -1,0 +1,515 @@
+//! The neuron-model / plasticity program library (paper §IV-B, Fig 9).
+//!
+//! Every neuron and synapse model on TaiBai is *software*: a pair of
+//! TaiBai-assembly programs (INTEG + FIRE) produced here as text, wired
+//! to a per-NC memory layout by the compiler's code generator, and
+//! assembled into NC images. This is the substance of the paper's
+//! "fully programmable" claim — adding a neuron model means adding a
+//! function in this module, not new hardware.
+//!
+//! Register conventions (see [`crate::isa`]): `r0` is never written and
+//! reads as 0 (programs use it for absolute addressing); `RECV` writes
+//! `r1` = target neuron, `r2` = axon, `r3` = payload, `r4` = event kind.
+//!
+//! Memory layout: [`NcLayout`] assigns each region a base address; the
+//! program constructors emit `.const` headers so one template serves any
+//! layout.
+
+pub mod dendrite;
+pub mod learning;
+
+use crate::isa::assembler::{assemble, AsmError, Program};
+
+/// Per-NC data-memory layout, in 16-bit words. Regions the deployed
+/// model does not use are zero-length.
+#[derive(Clone, Copy, Debug)]
+pub struct NcLayout {
+    /// Sparse-connectivity bitmap (FINDIDX operand).
+    pub bitmap: u16,
+    /// Weight array (layout depends on the connection pattern).
+    pub weights: u16,
+    /// Per-neuron accumulated-current array `I[n]` (DH-LIF: one bank per
+    /// branch, bank `b` at `cur + b·n_neurons`).
+    pub cur: u16,
+    /// Per-neuron membrane potential `v[n]`.
+    pub vmem: u16,
+    /// Parameter block (tau, vth, rho, beta, lr … — shared scalars).
+    pub params: u16,
+    /// Per-neuron adaptation state (ALIF threshold offset).
+    pub adapt: u16,
+    /// Per-axon accumulated-spike counters (on-chip learning, §IV-B).
+    pub acc: u16,
+    /// Per-neuron error slots (written by host Data packets).
+    pub err: u16,
+    /// INT16→FP16 conversion lookup table (for learning programs).
+    pub itof: u16,
+}
+
+/// Offsets of shared scalars inside the parameter block.
+pub mod param {
+    pub const TAU: i32 = 0;
+    pub const VTH: i32 = 1;
+    pub const RHO: i32 = 2;
+    pub const BETA: i32 = 3;
+    pub const LR: i32 = 4;
+    pub const TAU_BRANCH: i32 = 5; // first of up to 8 branch decays
+    /// FP16 constant 1.0 (FP16 immediates cannot be encoded inline).
+    pub const ONE: i32 = 13;
+}
+
+impl NcLayout {
+    /// A comfortable default layout for NCs with `n` resident neurons,
+    /// `w` weight words, and `a` axons (bitmap + learning accumulators).
+    pub fn standard(n: usize, w: usize, a: usize) -> NcLayout {
+        let bitmap = 0u16;
+        let bitmap_words = a.div_ceil(16).max(1);
+        let weights = bitmap + bitmap_words as u16;
+        let cur = weights + w as u16;
+        // reserve 8 banks for dendritic branches when needed
+        let vmem = cur + n as u16;
+        let params = vmem + n as u16;
+        let adapt = params + 16;
+        let acc = adapt + n as u16;
+        let err = acc + a as u16;
+        let itof = err + n as u16;
+        NcLayout {
+            bitmap,
+            weights,
+            cur,
+            vmem,
+            params,
+            adapt,
+            acc,
+            err,
+            itof,
+        }
+    }
+
+    /// Emit the `.const` header shared by all programs on this layout.
+    pub fn consts(&self) -> String {
+        format!(
+            ".const BITMAP {}\n.const WEIGHTS {}\n.const CUR {}\n.const VMEM {}\n\
+             .const PARAMS {}\n.const ADAPT {}\n.const ACC {}\n.const ERR {}\n\
+             .const ITOF {}\n\
+             .const P_TAU {}\n.const P_VTH {}\n.const P_RHO {}\n.const P_BETA {}\n\
+             .const P_LR {}\n.const P_ONE {}\n",
+            self.bitmap,
+            self.weights,
+            self.cur,
+            self.vmem,
+            self.params,
+            self.adapt,
+            self.acc,
+            self.err,
+            self.itof,
+            self.params as i32 + param::TAU,
+            self.params as i32 + param::VTH,
+            self.params as i32 + param::RHO,
+            self.params as i32 + param::BETA,
+            self.params as i32 + param::LR,
+            self.params as i32 + param::ONE,
+        )
+    }
+
+    fn build(&self, extra_consts: &[(&str, i32)], body: &str) -> Result<Program, AsmError> {
+        let mut src = self.consts();
+        for (k, v) in extra_consts {
+            src.push_str(&format!(".const {k} {v}\n"));
+        }
+        src.push_str(body);
+        assemble(&src)
+    }
+}
+
+// ---------------------------------------------------------------------
+// INTEG programs — one per fan-in IE type.
+// ---------------------------------------------------------------------
+
+/// Type-0 sparse INTEG: bitmap-compressed weights decoded with FINDIDX
+/// (the paper's Fig 9b basic model — 5 instructions on the hot path).
+pub fn integ_sparse_bitmap(l: &NcLayout) -> Result<Program, AsmError> {
+    l.build(
+        &[],
+        r#"
+    loop:
+        recv
+        findidx r5, r2, BITMAP
+        bc.eq   loop
+        ld.f    r6, r5, WEIGHTS
+        locacc.f r6, r1, CUR
+        b       loop
+    "#,
+    )
+}
+
+/// Type-1 direct INTEG: the event's axon is already the weight address.
+pub fn integ_direct(l: &NcLayout) -> Result<Program, AsmError> {
+    l.build(
+        &[],
+        r#"
+    loop:
+        recv
+        ld.f    r6, r2, WEIGHTS
+        locacc.f r6, r1, CUR
+        b       loop
+    "#,
+    )
+}
+
+/// Type-2 full-connection INTEG (incremental addressing): the event
+/// carries (start neuron r1, upstream axon r2, count r3); the program
+/// walks the weight row `axon·stride` accumulating into neurons
+/// `start..start+count`.
+pub fn integ_fc(l: &NcLayout, stride: usize) -> Result<Program, AsmError> {
+    l.build(
+        &[("STRIDE", stride as i32)],
+        r#"
+    loop:
+        recv
+        muli    r5, r2, STRIDE
+        movi    r6, 0
+    inner:
+        add     r7, r5, r6
+        ld.f    r8, r7, WEIGHTS
+        add     r9, r1, r6
+        locacc.f r8, r9, CUR
+        addi    r6, r6, 1
+        cmp     r6, r3
+        bc.lt   inner
+        b       loop
+    "#,
+    )
+}
+
+/// Type-3 convolution INTEG (decoupled weight addressing, eq. 4): the
+/// event carries (dest position r1, `ci·k²+offset` r2); the program
+/// loops over the NC's resident output channels, reading
+/// `weights[co·cin·k² + r2]` and accumulating into `cur[co·hw + pos]`.
+pub fn integ_conv(
+    l: &NcLayout,
+    n_channels: usize,
+    cin_k2: usize,
+    hw: usize,
+) -> Result<Program, AsmError> {
+    l.build(
+        &[
+            ("NCO", n_channels as i32),
+            ("CINK2", cin_k2 as i32),
+            ("HW", hw as i32),
+        ],
+        r#"
+    loop:
+        recv
+        movi    r6, 0
+    inner:
+        muli    r7, r6, CINK2
+        add     r7, r7, r2
+        ld.f    r8, r7, WEIGHTS
+        muli    r9, r6, HW
+        add     r9, r9, r1
+        locacc.f r8, r9, CUR
+        addi    r6, r6, 1
+        cmpi    r6, NCO
+        bc.lt   inner
+        b       loop
+    "#,
+    )
+}
+
+/// FP-data INTEG: the payload *is* the current (input layers fed by the
+/// host's floating-point input mode, and PSUM hand-offs).
+pub fn integ_data(l: &NcLayout) -> Result<Program, AsmError> {
+    l.build(
+        &[],
+        r#"
+    loop:
+        recv
+        locacc.f r3, r1, CUR
+        b       loop
+    "#,
+    )
+}
+
+// ---------------------------------------------------------------------
+// FIRE programs — neuron dynamics.
+// ---------------------------------------------------------------------
+
+/// LIF FIRE with shared (homogeneous) tau/vth preloaded outside the
+/// event loop: v = tau·v + I; fire & reset at threshold.
+pub fn fire_lif(l: &NcLayout) -> Result<Program, AsmError> {
+    l.build(
+        &[],
+        r#"
+        ld.f    r14, r0, P_TAU
+        ld.f    r15, r0, P_VTH
+    loop:
+        recv
+        ld.f    r5, r1, VMEM
+        ld.f    r6, r1, CUR
+        diff.f  r5, r14, r6
+        movi    r6, 0
+        st      r6, r1, CUR
+        cmp.f   r5, r15
+        bc.lt   store
+        send    r5, r1, 0
+        movi    r5, 0
+    store:
+        st.f    r5, r1, VMEM
+        b       loop
+    "#,
+    )
+}
+
+/// ALIF FIRE (adaptive threshold, the ECG SRNN hidden layer):
+/// a ← rho·a (+ beta on spike); threshold = vth + a.
+pub fn fire_alif(l: &NcLayout) -> Result<Program, AsmError> {
+    l.build(
+        &[],
+        r#"
+        ld.f    r14, r0, P_TAU
+        ld.f    r15, r0, P_VTH
+        ld.f    r13, r0, P_RHO
+        ld.f    r12, r0, P_BETA
+    loop:
+        recv
+        ld.f    r5, r1, VMEM
+        ld.f    r6, r1, CUR
+        diff.f  r5, r14, r6
+        movi    r6, 0
+        st      r6, r1, CUR
+        ld.f    r10, r1, ADAPT
+        mul.f   r10, r10, r13
+        add.f   r11, r15, r10
+        cmp.f   r5, r11
+        bc.lt   store
+        send    r5, r1, 0
+        movi    r5, 0
+        add.f   r10, r10, r12
+    store:
+        st.f    r10, r1, ADAPT
+        st.f    r5, r1, VMEM
+        b       loop
+    "#,
+    )
+}
+
+/// Non-firing readout FIRE (speech/BCI output layers): v = tau·v + I,
+/// no threshold/reset; the membrane potential is emitted as FP data
+/// every timestep (§III-B floating-point output mode).
+pub fn fire_readout(l: &NcLayout) -> Result<Program, AsmError> {
+    l.build(
+        &[],
+        r#"
+        ld.f    r14, r0, P_TAU
+    loop:
+        recv
+        ld.f    r5, r1, VMEM
+        ld.f    r6, r1, CUR
+        diff.f  r5, r14, r6
+        movi    r6, 0
+        st      r6, r1, CUR
+        st.f    r5, r1, VMEM
+        send    r5, r1, 1
+        b       loop
+    "#,
+    )
+}
+
+/// PSUM FIRE (fan-in expansion, Fig 11): hand the accumulated partial
+/// current to spiking neuron `r1 + target_offset` *within the same NC*,
+/// then clear.
+pub fn fire_psum(l: &NcLayout, target_offset: i32) -> Result<Program, AsmError> {
+    l.build(
+        &[("TOFF", target_offset)],
+        r#"
+    loop:
+        recv
+        ld.f    r5, r1, CUR
+        movi    r6, 0
+        st      r6, r1, CUR
+        addi    r7, r1, TOFF
+        send    r5, r7, 3
+        b       loop
+    "#,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::EventKind;
+    use crate::nc::{NcEvent, NeuronCore, Phase};
+    use crate::util::F16;
+
+    pub(super) fn f(x: f32) -> u16 {
+        F16::from_f32(x).0
+    }
+
+    pub(super) fn g(x: u16) -> f32 {
+        F16(x).to_f32()
+    }
+
+    pub(super) fn make_nc(l: &NcLayout, integ: Program, fire: Program) -> NeuronCore {
+        let mut nc = NeuronCore::new(4096);
+        nc.load_integ(&integ);
+        nc.load_fire(&fire);
+        nc.mem[(l.params + 0) as usize] = f(0.5); // tau
+        nc.mem[(l.params + 1) as usize] = f(1.0); // vth
+        nc.mem[(l.params + 2) as usize] = f(0.9); // rho
+        nc.mem[(l.params + 3) as usize] = f(0.4); // beta
+        nc.mem[(l.params + 4) as usize] = f(0.05); // lr
+        nc
+    }
+
+    pub(super) fn spike(neuron: u16, axon: u16) -> NcEvent {
+        NcEvent { kind: EventKind::Spike, neuron, axon, data: 0 }
+    }
+
+    pub(super) fn fire_evt(neuron: u16) -> NcEvent {
+        NcEvent { kind: EventKind::Fire, neuron, axon: 0, data: 0 }
+    }
+
+    fn layout() -> NcLayout {
+        NcLayout::standard(8, 64, 32)
+    }
+
+    #[test]
+    fn sparse_bitmap_integ_decodes_compressed_weights() {
+        let l = layout();
+        let mut nc = make_nc(&l, integ_sparse_bitmap(&l).unwrap(), fire_lif(&l).unwrap());
+        nc.mem[l.bitmap as usize] = 0b10101; // axons 0,2,4
+        nc.mem[l.weights as usize] = f(0.1);
+        nc.mem[l.weights as usize + 1] = f(0.2);
+        nc.mem[l.weights as usize + 2] = f(0.3);
+        for ax in 0..5 {
+            nc.push_event(spike(2, ax));
+        }
+        nc.run(100_000).unwrap();
+        // axons 1,3 not connected: I = 0.1+0.2+0.3
+        assert!((g(nc.mem[l.cur as usize + 2]) - 0.6).abs() < 2e-3);
+    }
+
+    #[test]
+    fn fc_integ_walks_the_weight_row() {
+        let l = layout();
+        let stride = 4; // 4 resident neurons per row
+        let mut nc = make_nc(&l, integ_fc(&l, stride).unwrap(), fire_lif(&l).unwrap());
+        // weight row for upstream axon 3: [3*4 .. 3*4+4)
+        for j in 0..4 {
+            nc.mem[l.weights as usize + 12 + j] = f(0.1 * (j as f32 + 1.0));
+        }
+        // event: start neuron 0, upstream 3, count 4
+        nc.push_event(NcEvent { kind: EventKind::Spike, neuron: 0, axon: 3, data: 4 });
+        nc.run(100_000).unwrap();
+        for j in 0..4 {
+            let want = 0.1 * (j as f32 + 1.0);
+            let got = g(nc.mem[l.cur as usize + j]);
+            assert!((got - want).abs() < 2e-3, "neuron {j}: {got} != {want}");
+        }
+    }
+
+    #[test]
+    fn conv_integ_applies_polynomial_addressing() {
+        let l = layout();
+        // 2 output channels resident, cin*k2 = 18 (2 in-ch × 3×3), hw = 4
+        let mut nc = make_nc(&l, integ_conv(&l, 2, 18, 4).unwrap(), fire_lif(&l).unwrap());
+        // event: pos=1, axon = ci*9+offset = 1*9+4 = 13
+        nc.mem[l.weights as usize + 13] = f(0.25); // co=0
+        nc.mem[l.weights as usize + 18 + 13] = f(0.5); // co=1
+        nc.push_event(NcEvent { kind: EventKind::Spike, neuron: 1, axon: 13, data: 0 });
+        nc.run(100_000).unwrap();
+        assert!((g(nc.mem[l.cur as usize + 1]) - 0.25).abs() < 2e-3); // co0·hw+pos
+        assert!((g(nc.mem[l.cur as usize + 4 + 1]) - 0.5).abs() < 2e-3); // co1
+        assert_eq!(nc.stats.sops, 2);
+    }
+
+    #[test]
+    fn lif_fire_spikes_and_leaks() {
+        let l = layout();
+        let mut nc = make_nc(&l, integ_data(&l).unwrap(), fire_lif(&l).unwrap());
+        nc.set_phase(Phase::Fire);
+        // neuron 0: v=0.8, I=0.9 → v'=0.5*0.8+0.9=1.3 ≥ 1.0 → spike+reset
+        nc.mem[l.vmem as usize] = f(0.8);
+        nc.mem[l.cur as usize] = f(0.9);
+        // neuron 1: subthreshold decay: v'=0.5*0.6=0.3
+        nc.mem[l.vmem as usize + 1] = f(0.6);
+        nc.push_event(fire_evt(0));
+        nc.push_event(fire_evt(1));
+        nc.run(100_000).unwrap();
+        let out = nc.take_out_events();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].neuron, 0);
+        assert_eq!(g(nc.mem[l.vmem as usize]), 0.0);
+        assert!((g(nc.mem[l.vmem as usize + 1]) - 0.3).abs() < 2e-3);
+        assert_eq!(nc.mem[l.cur as usize], 0, "current cleared");
+    }
+
+    #[test]
+    fn alif_threshold_adapts_and_recovers() {
+        let l = layout();
+        let mut nc = make_nc(&l, integ_data(&l).unwrap(), fire_alif(&l).unwrap());
+        nc.set_phase(Phase::Fire);
+        // drive neuron 0 with constant strong current for 3 steps
+        let mut spikes = 0;
+        for _ in 0..3 {
+            nc.mem[l.cur as usize] = f(1.2);
+            nc.push_event(fire_evt(0));
+            nc.run(100_000).unwrap();
+            spikes += nc.take_out_events().len();
+        }
+        // first step fires (1.2 ≥ 1.0) and raises the threshold by beta
+        assert!(spikes >= 1);
+        let a = g(nc.mem[l.adapt as usize]);
+        assert!(a > 0.0, "adaptation accumulated: {a}");
+        // with no further spikes, adaptation decays toward zero
+        for _ in 0..10 {
+            nc.push_event(fire_evt(0));
+            nc.run(100_000).unwrap();
+            nc.take_out_events();
+        }
+        assert!(g(nc.mem[l.adapt as usize]) < a);
+    }
+
+    #[test]
+    fn readout_emits_membrane_every_step() {
+        let l = layout();
+        let mut nc = make_nc(&l, integ_data(&l).unwrap(), fire_readout(&l).unwrap());
+        nc.set_phase(Phase::Fire);
+        nc.mem[l.cur as usize] = f(2.5); // way above any threshold
+        nc.push_event(fire_evt(0));
+        nc.run(100_000).unwrap();
+        let out = nc.take_out_events();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].ntype & 0xff, 1); // DATA, not spike
+        assert!((g(out[0].value) - 2.5).abs() < 3e-3);
+        // no reset: v persists
+        assert!((g(nc.mem[l.vmem as usize]) - 2.5).abs() < 3e-3);
+    }
+
+    #[test]
+    fn psum_hands_current_to_target() {
+        let l = layout();
+        let mut nc = make_nc(&l, integ_data(&l).unwrap(), fire_psum(&l, 4).unwrap());
+        nc.set_phase(Phase::Fire);
+        nc.mem[l.cur as usize + 1] = f(0.75); // psum neuron 1
+        nc.push_event(fire_evt(1));
+        nc.run(100_000).unwrap();
+        let out = nc.take_out_events();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].ntype & 0xff, 3); // PSUM
+        assert_eq!(out[0].neuron, 5); // target = 1 + 4
+        assert!((g(out[0].value) - 0.75).abs() < 2e-3);
+        assert_eq!(nc.mem[l.cur as usize + 1], 0);
+    }
+
+    #[test]
+    fn integ_event_cost_is_paper_scale() {
+        // Fig 9b: "5 instructions in INTEG stage and 7 in FIRE" for the
+        // basic model. Our direct INTEG path: recv+ld+locacc+b = 4.
+        let l = layout();
+        let mut nc = make_nc(&l, integ_direct(&l).unwrap(), fire_lif(&l).unwrap());
+        nc.push_event(spike(0, 0));
+        nc.run(100_000).unwrap();
+        assert!(nc.stats.instret <= 5, "instret={}", nc.stats.instret);
+    }
+}

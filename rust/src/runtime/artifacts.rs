@@ -1,0 +1,117 @@
+//! Binary artifact I/O shared with the Python build path.
+//!
+//! Formats (little-endian):
+//! * weights — magic `TBW1`, u32 n, then n×f32.
+//! * tensor  — magic `TBD1`, u32 rank, rank×u32 dims, then ∏dims×f32.
+//!
+//! Written by `python/compile/aot.py`, read here at deploy time.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub fn write_weights(path: &Path, w: &[f32]) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(b"TBW1")?;
+    f.write_all(&(w.len() as u32).to_le_bytes())?;
+    for x in w {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_weights(path: &Path) -> Result<Vec<f32>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening weights {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"TBW1" {
+        bail!("{}: bad weights magic {magic:?}", path.display());
+    }
+    let mut n4 = [0u8; 4];
+    f.read_exact(&mut n4)?;
+    let n = u32::from_le_bytes(n4) as usize;
+    read_f32s(&mut f, n)
+}
+
+pub fn write_tensor(path: &Path, dims: &[usize], data: &[f32]) -> Result<()> {
+    assert_eq!(dims.iter().product::<usize>(), data.len());
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(b"TBD1")?;
+    f.write_all(&(dims.len() as u32).to_le_bytes())?;
+    for d in dims {
+        f.write_all(&(*d as u32).to_le_bytes())?;
+    }
+    for x in data {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_tensor(path: &Path) -> Result<(Vec<usize>, Vec<f32>)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening tensor {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"TBD1" {
+        bail!("{}: bad tensor magic {magic:?}", path.display());
+    }
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let rank = u32::from_le_bytes(b4) as usize;
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        f.read_exact(&mut b4)?;
+        dims.push(u32::from_le_bytes(b4) as usize);
+    }
+    let n = dims.iter().product();
+    let data = read_f32s(&mut f, n)?;
+    Ok((dims, data))
+}
+
+fn read_f32s(f: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Root of the artifacts directory (`TAIBAI_ARTIFACTS` overrides).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("TAIBAI_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|_| "artifacts".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_roundtrip() {
+        let dir = std::env::temp_dir().join("taibai_test_w.bin");
+        let w = vec![1.0f32, -2.5, 0.0, 3.75];
+        write_weights(&dir, &w).unwrap();
+        assert_eq!(read_weights(&dir).unwrap(), w);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let dir = std::env::temp_dir().join("taibai_test_t.bin");
+        let data: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        write_tensor(&dir, &[2, 3, 4], &data).unwrap();
+        let (dims, d) = read_tensor(&dir).unwrap();
+        assert_eq!(dims, vec![2, 3, 4]);
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("taibai_test_bad.bin");
+        std::fs::write(&dir, b"XXXX\x01\x00\x00\x00").unwrap();
+        assert!(read_weights(&dir).is_err());
+        assert!(read_tensor(&dir).is_err());
+    }
+}

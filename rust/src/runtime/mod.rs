@@ -1,0 +1,96 @@
+//! PJRT runtime — the Rust side of the AOT bridge.
+//!
+//! `make artifacts` lowers the Layer-2 JAX models (which call the Layer-1
+//! Pallas kernel) to **HLO text** (`artifacts/*.hlo.txt`); this module
+//! loads those artifacts through the `xla` crate's PJRT CPU client and
+//! executes them from the request path with zero Python. HLO *text* is
+//! the interchange format because jax ≥ 0.5 emits HloModuleProtos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+
+use anyhow::{Context, Result};
+
+/// A PJRT execution engine (CPU).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable + its input shapes.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo(&self, path: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))?;
+        Ok(Executable {
+            exe,
+            name: path.to_string(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs of the given shapes; returns the flattened
+    /// f32 outputs (the artifact is lowered with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .with_context(|| format!("reshaping input to {dims:?}"))?;
+            lits.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            out.push(t.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT round-trip smoke tests live in `tests/` (integration) since
+    // they need the artifacts built by `make artifacts`. Here we only
+    // check client creation, which must work offline.
+    #[test]
+    fn cpu_client_comes_up() {
+        let e = Engine::cpu().unwrap();
+        assert!(e.platform().to_lowercase().contains("cpu"), "{}", e.platform());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let e = Engine::cpu().unwrap();
+        match e.load_hlo("/nonexistent/xyz.hlo.txt") {
+            Ok(_) => panic!("expected an error"),
+            Err(err) => assert!(err.to_string().contains("xyz")),
+        }
+    }
+}

@@ -1,0 +1,587 @@
+//! The cortical-column (CC) scheduler (paper §III-D.1, Fig 4).
+//!
+//! A CC couples one NoC router port to eight neuron cores. The scheduler
+//! * decodes arriving spike/data packets through the **fan-in** two-level
+//!   table into NC activations and dispatches them to the NC input
+//!   buffers (waking only the cores that own targeted neurons — the
+//!   event-driven sparsity win);
+//! * drives the INTEG/FIRE stages of its NCs, including the two-wave
+//!   FIRE order needed by fan-in expansion (PSUM neurons hand their
+//!   accumulated currents to spiking neurons *within the same NC*,
+//!   §IV-B / Fig 11);
+//! * converts fired neurons into outbound packets through the **fan-out**
+//!   table, applying the skip-connection delay scheme (§III-D.6: delayed
+//!   and non-delayed spikes share the fan-out DT);
+//! * surfaces host-bound DATA events (membrane potentials, errors,
+//!   classification outputs — the FP output mode).
+
+use crate::isa::EventKind;
+use crate::nc::{out_type, NcEvent, NeuronCore, OutEvent, RunExit, Trap};
+use crate::noc::{Packet, PacketPhase, PacketType};
+use crate::topology::{Activation, CcTables, FanOutIE, NCS_PER_CC};
+
+/// Per-NC deployment configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NcConfig {
+    /// Resident neurons (fire events injected per FIRE stage).
+    pub neurons: u16,
+    /// The first `wave1` neurons fire in wave 1 (PSUM partial-sum
+    /// neurons); the rest fire in wave 2 after intra-NC currents land.
+    pub wave1: u16,
+    /// Inject a Learn activation per neuron in `learn_from..neurons`
+    /// after the fire waves (on-chip plasticity).
+    pub learn: bool,
+    pub learn_from: u16,
+}
+
+/// A packet minted by this CC, to be routed by the chip engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Minted {
+    pub src_cc: usize,
+    pub packet: Packet,
+}
+
+/// A host-bound output value (readout membrane potential, error, …).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HostOutput {
+    pub cc: usize,
+    pub nc: u8,
+    pub neuron: u16,
+    pub value: u16,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CcStats {
+    pub packets_in: u64,
+    pub packets_dropped: u64,
+    pub dt_reads: u64,
+    pub it_reads: u64,
+    pub activations: u64,
+    pub packets_out: u64,
+    pub host_outputs: u64,
+    pub delayed_held: u64,
+}
+
+/// A spike waiting out its skip-connection delay.
+#[derive(Clone, Copy, Debug)]
+struct DelayedSpike {
+    remaining: u8,
+    global_axon: u16,
+    ie: FanOutIE,
+}
+
+/// One cortical column: scheduler + 8 NCs + tables.
+pub struct CorticalColumn {
+    pub id: usize,
+    pub tables: CcTables,
+    pub ncs: Vec<NeuronCore>,
+    pub cfg: Vec<NcConfig>,
+    pub stats: CcStats,
+    delayed: Vec<DelayedSpike>,
+    /// scratch buffer reused across decodes (hot path)
+    scratch: Vec<Activation>,
+}
+
+impl CorticalColumn {
+    pub fn new(id: usize, nc_data_words: usize) -> CorticalColumn {
+        CorticalColumn {
+            id,
+            tables: CcTables::default(),
+            ncs: (0..NCS_PER_CC).map(|_| NeuronCore::new(nc_data_words)).collect(),
+            cfg: vec![NcConfig::default(); NCS_PER_CC],
+            stats: CcStats::default(),
+            delayed: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Decode one arriving packet and dispatch activations to NC buffers.
+    pub fn handle_packet(&mut self, pkt: &Packet) {
+        self.stats.packets_in += 1;
+        self.scratch.clear();
+        let d = self.tables.decode_fanin(
+            pkt.tag as u16,
+            pkt.index,
+            pkt.payload,
+            &mut self.scratch,
+        );
+        self.stats.dt_reads += d.dt_reads;
+        self.stats.it_reads += d.it_reads;
+        if d.dropped {
+            self.stats.packets_dropped += 1;
+            return;
+        }
+        let kind = match pkt.ptype {
+            PacketType::Spike => EventKind::Spike,
+            PacketType::Data => EventKind::Current,
+            _ => return, // memory packets handled by the config layer
+        };
+        for a in &self.scratch {
+            self.stats.activations += 1;
+            let data = if pkt.ptype == PacketType::Data {
+                pkt.payload
+            } else {
+                a.data
+            };
+            self.ncs[a.nc as usize].push_event(NcEvent {
+                kind,
+                neuron: a.neuron,
+                axon: a.axon,
+                data,
+            });
+        }
+    }
+
+    /// Run all NCs until idle (INTEG stage drain). Returns instructions
+    /// retired.
+    pub fn run_integ(&mut self) -> Result<u64, Trap> {
+        let mut total = 0;
+        for nc in &mut self.ncs {
+            loop {
+                let before = nc.stats.instret;
+                match nc.run(u64::MAX)? {
+                    RunExit::Blocked | RunExit::Halted => {
+                        total += nc.stats.instret - before;
+                        break;
+                    }
+                    RunExit::Budget => unreachable!("unbounded budget"),
+                }
+            }
+        }
+        Ok(total)
+    }
+
+    /// Execute the FIRE stage: switch phase, fire wave 1 (PSUM), deliver
+    /// intra-NC currents, fire wave 2, then optional Learn activations.
+    /// Returns minted packets + host outputs.
+    pub fn fire(
+        &mut self,
+        timestep: u64,
+    ) -> Result<(Vec<Minted>, Vec<HostOutput>), Trap> {
+        let mut minted = Vec::new();
+        let mut host = Vec::new();
+
+        for nc in &mut self.ncs {
+            nc.set_phase(crate::nc::Phase::Fire);
+        }
+
+        // Wave 1: PSUM partial-sum neurons.
+        let mut any_wave1 = false;
+        for (i, cfg) in self.cfg.iter().enumerate() {
+            for n in 0..cfg.wave1 {
+                self.ncs[i].push_event(NcEvent {
+                    kind: EventKind::Fire,
+                    neuron: n,
+                    axon: 0,
+                    data: timestep as u16,
+                });
+                any_wave1 = true;
+            }
+        }
+        if any_wave1 {
+            self.drain_fire(&mut minted, &mut host)?;
+        }
+
+        // Wave 2: spiking neurons.
+        for (i, cfg) in self.cfg.iter().enumerate() {
+            for n in cfg.wave1..cfg.neurons {
+                self.ncs[i].push_event(NcEvent {
+                    kind: EventKind::Fire,
+                    neuron: n,
+                    axon: 0,
+                    data: timestep as u16,
+                });
+            }
+        }
+        self.drain_fire(&mut minted, &mut host)?;
+
+        // Learning activations (FIRE stage, §III-B).
+        let mut any_learn = false;
+        for (i, cfg) in self.cfg.iter().enumerate() {
+            if cfg.learn {
+                for n in cfg.learn_from..cfg.neurons {
+                    self.ncs[i].push_event(NcEvent {
+                        kind: EventKind::Learn,
+                        neuron: n,
+                        axon: 0,
+                        data: timestep as u16,
+                    });
+                    any_learn = true;
+                }
+            }
+        }
+        if any_learn {
+            self.drain_fire(&mut minted, &mut host)?;
+        }
+
+        // Return NCs to INTEG for the next timestep.
+        for nc in &mut self.ncs {
+            nc.set_phase(crate::nc::Phase::Integ);
+        }
+        Ok((minted, host))
+    }
+
+    /// Run NCs until idle and convert their output events.
+    fn drain_fire(
+        &mut self,
+        minted: &mut Vec<Minted>,
+        host: &mut Vec<HostOutput>,
+    ) -> Result<(), Trap> {
+        loop {
+            let mut progressed = false;
+            for i in 0..self.ncs.len() {
+                if !self.ncs[i].is_idle() {
+                    self.ncs[i].run(u64::MAX)?;
+                    progressed = true;
+                }
+                let evs = self.ncs[i].take_out_events();
+                for ev in evs {
+                    progressed = true;
+                    self.route_out_event(i as u8, ev, minted, host);
+                }
+            }
+            if !progressed {
+                return Ok(());
+            }
+        }
+    }
+
+    fn route_out_event(
+        &mut self,
+        nc: u8,
+        ev: OutEvent,
+        minted: &mut Vec<Minted>,
+        host: &mut Vec<HostOutput>,
+    ) {
+        let ty = (ev.ntype & 0xff) as u8;
+        let extra_delay = (ev.ntype >> 8) as u8;
+        match ty {
+            out_type::PSUM => {
+                // Intra-NC current hand-off (fan-in expansion): the value
+                // lands in the same NC's buffer as a Current event.
+                self.ncs[nc as usize].push_event(NcEvent {
+                    kind: EventKind::Current,
+                    neuron: ev.neuron,
+                    axon: 0,
+                    data: ev.value,
+                });
+            }
+            out_type::SPIKE | out_type::DATA | out_type::DELAYED => {
+                // global-neuron id = per-NC rebase: local fan-out DT is
+                // per CC, indexed by (nc, neuron) flattened by config.
+                let local = self.fanout_index(nc, ev.neuron);
+                let Some((global_axon, ies)) = self.tables.fanout(local) else {
+                    return;
+                };
+                if ies.is_empty() {
+                    // empty fan-out = host-bound output
+                    self.stats.host_outputs += 1;
+                    host.push(HostOutput {
+                        cc: self.id,
+                        nc,
+                        neuron: ev.neuron,
+                        value: ev.value,
+                    });
+                    return;
+                }
+                // hot path: iterate by index to avoid borrowing `self`
+                // across the mutation below (no per-spike allocation)
+                let (it_base, it_len) = {
+                    let de = &self.tables.fanout_dt[local as usize];
+                    (de.it_base as usize, de.it_len as usize)
+                };
+                for k in 0..it_len {
+                    let ie = self.tables.fanout_it[it_base + k];
+                    let delay = ie.delay + extra_delay;
+                    if delay > 0 && ty != out_type::DATA {
+                        self.stats.delayed_held += 1;
+                        self.delayed.push(DelayedSpike {
+                            remaining: delay,
+                            global_axon,
+                            ie,
+                        });
+                    } else {
+                        self.stats.packets_out += 1;
+                        minted.push(Minted {
+                            src_cc: self.id,
+                            packet: Packet {
+                                ptype: if ty == out_type::DATA {
+                                    PacketType::Data
+                                } else {
+                                    PacketType::Spike
+                                },
+                                phase: PacketPhase::Fire,
+                                tag: ie.tag as u8,
+                                index: ie.index,
+                                payload: if ty == out_type::DATA {
+                                    ev.value
+                                } else {
+                                    global_axon
+                                },
+                                mode: ie.mode,
+                            },
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Flatten (nc, local neuron) into the CC fan-out DT index: NC `i`'s
+    /// neurons occupy a contiguous block after NCs `0..i` (block sizes
+    /// from config).
+    pub fn fanout_index(&self, nc: u8, neuron: u16) -> u16 {
+        let mut base = 0u16;
+        for i in 0..nc as usize {
+            base += self.cfg[i].neurons;
+        }
+        base + neuron
+    }
+
+    /// Advance skip-connection delay counters at the timestep boundary;
+    /// mint any spikes whose delay expired.
+    pub fn tick_delayed(&mut self) -> Vec<Minted> {
+        let mut due = Vec::new();
+        self.delayed.retain_mut(|d| {
+            d.remaining -= 1;
+            if d.remaining == 0 {
+                due.push(Minted {
+                    src_cc: self.id,
+                    packet: Packet {
+                        ptype: PacketType::Spike,
+                        phase: PacketPhase::Fire,
+                        tag: d.ie.tag as u8,
+                        index: d.ie.index,
+                        payload: d.global_axon,
+                        mode: d.ie.mode,
+                    },
+                });
+                false
+            } else {
+                true
+            }
+        });
+        self.stats.packets_out += due.len() as u64;
+        due
+    }
+
+    /// True iff no NC has pending events (INTEG stage can end — the
+    /// paper's "no spike events in the NoC" condition, locally).
+    pub fn is_quiescent(&self) -> bool {
+        self.ncs.iter().all(|nc| nc.is_idle())
+    }
+
+    /// Aggregate NC activity counters.
+    pub fn nc_stats(&self) -> crate::nc::NcStats {
+        let mut s = crate::nc::NcStats::default();
+        for nc in &self.ncs {
+            s.add(&nc.stats);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assembler::assemble;
+    use crate::topology::{FanInDE, FanInIE, FanOutDE, IeType, RouteMode};
+    use crate::util::F16;
+
+    /// Minimal INTEG: weight rides in the event payload (Data packets).
+    const ECHO_INTEG: &str = "loop:\nrecv\nlocacc.f r3, r1, 64\nb loop";
+    /// Minimal FIRE: threshold at vth=1.0 stored per-neuron at 128+n.
+    const THRESH_FIRE: &str = r#"
+    loop:
+        recv
+        ld.f  r5, r1, 64
+        ld.f  r8, r1, 128
+        cmp.f r5, r8
+        bc.lt next
+        send  r5, r1, 0
+    next:
+        movi  r6, 0
+        st    r6, r1, 64
+        b loop
+    "#;
+
+    fn simple_cc() -> CorticalColumn {
+        let mut cc = CorticalColumn::new(3, 512);
+        let integ = assemble(ECHO_INTEG).unwrap();
+        let fire = assemble(THRESH_FIRE).unwrap();
+        for nc in &mut cc.ncs {
+            nc.load_integ(&integ);
+            nc.load_fire(&fire);
+            nc.mem[128] = F16::from_f32(1.0).0; // vth for neuron 0
+            nc.mem[129] = F16::from_f32(1.0).0;
+        }
+        cc.cfg[0].neurons = 2;
+        // fan-in: index 0 -> NC0 neuron 0 (type0)
+        cc.tables.push_fanin(
+            vec![FanInDE { tag: 1, ie_type: IeType::Sparse0, it_base: 0, it_len: 1, k2: 0 }],
+            vec![FanInIE::Type0 { nc: 0, neuron: 0 }],
+        );
+        // fan-out: neuron 0 -> unicast to (2,2) tag 9; neuron 1 -> host
+        cc.tables.push_fanout(
+            vec![
+                FanOutDE { global_axon: 7, it_base: 0, it_len: 1 },
+                FanOutDE { global_axon: 8, it_base: 1, it_len: 0 },
+            ],
+            vec![crate::topology::FanOutIE {
+                mode: RouteMode::Unicast { x: 2, y: 2 },
+                tag: 9,
+                index: 4,
+                delay: 0,
+            }],
+        );
+        cc
+    }
+
+    fn spike_packet(index: u16, payload: u16) -> Packet {
+        Packet {
+            ptype: PacketType::Data,
+            phase: PacketPhase::Integ,
+            tag: 1,
+            index,
+            payload,
+            mode: RouteMode::Unicast { x: 3, y: 0 },
+        }
+    }
+
+    #[test]
+    fn packet_to_activation_to_fire_to_packet() {
+        let mut cc = simple_cc();
+        // deliver current 1.5 to neuron 0
+        cc.handle_packet(&spike_packet(0, F16::from_f32(1.5).0));
+        cc.run_integ().unwrap();
+        let (minted, host) = cc.fire(0).unwrap();
+        assert!(host.is_empty());
+        assert_eq!(minted.len(), 1);
+        let p = minted[0].packet;
+        assert_eq!(p.tag, 9);
+        assert_eq!(p.index, 4);
+        assert_eq!(p.payload, 7); // global axon from fan-out DE
+        assert_eq!(p.mode, RouteMode::Unicast { x: 2, y: 2 });
+        assert_eq!(minted[0].src_cc, 3);
+    }
+
+    #[test]
+    fn subthreshold_neuron_stays_silent() {
+        let mut cc = simple_cc();
+        cc.handle_packet(&spike_packet(0, F16::from_f32(0.5).0));
+        cc.run_integ().unwrap();
+        let (minted, host) = cc.fire(0).unwrap();
+        assert!(minted.is_empty() && host.is_empty());
+    }
+
+    #[test]
+    fn empty_fanout_routes_to_host() {
+        let mut cc = simple_cc();
+        // inject current directly into NC0 neuron 1 (the host-bound one)
+        cc.ncs[0].mem[65] = F16::from_f32(2.0).0;
+        let (minted, host) = cc.fire(0).unwrap();
+        assert!(minted.is_empty());
+        assert_eq!(host.len(), 1);
+        assert_eq!(host[0].neuron, 1);
+        assert_eq!(F16(host[0].value).to_f32(), 2.0);
+    }
+
+    #[test]
+    fn dropped_packets_are_counted() {
+        let mut cc = simple_cc();
+        let mut p = spike_packet(0, 0);
+        p.tag = 99;
+        cc.handle_packet(&p);
+        assert_eq!(cc.stats.packets_dropped, 1);
+    }
+
+    #[test]
+    fn delayed_spikes_wait_their_turn() {
+        let mut cc = simple_cc();
+        // make neuron 0's fan-out delayed by 2 steps
+        cc.tables.fanout_it[0].delay = 2;
+        cc.handle_packet(&spike_packet(0, F16::from_f32(1.5).0));
+        cc.run_integ().unwrap();
+        let (minted, _) = cc.fire(0).unwrap();
+        assert!(minted.is_empty());
+        assert_eq!(cc.stats.delayed_held, 1);
+        assert!(cc.tick_delayed().is_empty()); // t+1: still waiting
+        let due = cc.tick_delayed(); // t+2: due
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].packet.payload, 7);
+    }
+
+    #[test]
+    fn psum_current_lands_in_same_nc() {
+        // NC0: neuron 0 is a PSUM neuron (wave 1) whose FIRE sends its
+        // accumulated current to neuron 1 (wave 2) via out_type::PSUM.
+        let mut cc = CorticalColumn::new(0, 512);
+        let integ = assemble(ECHO_INTEG).unwrap();
+        // PSUM fire program: neuron 0 sends mem[64+0] to neuron 1 as
+        // PSUM; neuron 1 thresholds at mem[128+1].
+        let fire = assemble(
+            r#"
+            .const PSUM_TYPE 3
+        loop:
+            recv
+            cmpi r1, 0
+            bc.ne spiking
+            ld.f r5, r1, 64
+            movi r6, 1
+            send r5, r6, PSUM_TYPE
+            movi r7, 0
+            st   r7, r1, 64
+            b loop
+        spiking:
+            cmpi r4, 2        ; Current event from PSUM?
+            bc.ne fire_evt
+            locacc.f r3, r1, 64
+            b loop
+        fire_evt:
+            ld.f  r5, r1, 64
+            ld.f  r8, r1, 128
+            cmp.f r5, r8
+            bc.lt loop
+            send  r5, r1, 0
+            b loop
+        "#,
+        )
+        .unwrap();
+        cc.ncs[0].load_integ(&integ);
+        cc.ncs[0].load_fire(&fire);
+        cc.ncs[0].mem[129] = F16::from_f32(1.0).0;
+        cc.cfg[0].neurons = 2;
+        cc.cfg[0].wave1 = 1;
+        // fan-out: both neurons unicast out (so we can observe firing)
+        cc.tables.push_fanout(
+            vec![
+                FanOutDE { global_axon: 0, it_base: 0, it_len: 1 },
+                FanOutDE { global_axon: 1, it_base: 0, it_len: 1 },
+            ],
+            vec![crate::topology::FanOutIE {
+                mode: RouteMode::Unicast { x: 0, y: 0 },
+                tag: 2,
+                index: 0,
+                delay: 0,
+            }],
+        );
+        // PSUM neuron 0 accumulated 1.25 during INTEG
+        cc.ncs[0].mem[64] = F16::from_f32(1.25).0;
+        let (minted, _) = cc.fire(0).unwrap();
+        // neuron 1 got 1.25 ≥ 1.0 → fired (payload = its global axon 1)
+        assert_eq!(minted.len(), 1);
+        assert_eq!(minted[0].packet.payload, 1);
+    }
+
+    #[test]
+    fn fanout_index_flattens_nc_blocks() {
+        let mut cc = CorticalColumn::new(0, 64);
+        cc.cfg[0].neurons = 10;
+        cc.cfg[1].neurons = 5;
+        cc.cfg[2].neurons = 8;
+        assert_eq!(cc.fanout_index(0, 3), 3);
+        assert_eq!(cc.fanout_index(1, 0), 10);
+        assert_eq!(cc.fanout_index(2, 7), 22);
+    }
+}

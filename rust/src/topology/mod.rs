@@ -1,0 +1,501 @@
+//! Hierarchical network-topology representation (paper §III-D, Figs 4–8).
+//!
+//! Each cortical column (CC) stores two **two-level tables**:
+//!
+//! * **fan-in**: arriving spike packets carry `(tag, index)`; `index`
+//!   addresses the first-level Directory Table (DT) whose Directory Entry
+//!   (DE) points at a slice of the second-level Information Table (IT).
+//!   The Information Entries (IE) come in four types tuned to the
+//!   connection pattern (sparse/pool, sparse-fast, fully-connected,
+//!   convolutional); `tag` filters out non-targeted CCs inside a
+//!   multicast region.
+//! * **fan-out**: a fired neuron's local id addresses the fan-out DT; its
+//!   DE carries the **global axon id** (for conv connections this is the
+//!   upstream *channel* id — the key to decoupled convolution weight
+//!   addressing, eq. (4)) and points at fan-out IEs holding the routing
+//!   information used to mint packets.
+//!
+//! The four fan-in IE types and what they buy (paper §III-D.2–5):
+//!
+//! | type | layout | used for | mechanism |
+//! |------|--------|----------|-----------|
+//! | 0 | target neuron id | pooling, low-rate sparse | NC decodes weights via `FINDIDX` over a bitmap with the global axon id |
+//! | 1 | (neuron id, local axon id) | high-throughput sparse | direct weight addressing, no decode latency |
+//! | 2 | (coding mask, margin, #accum, start id) | full connection | **incremental addressing**: 4 fields represent *all* destination neurons; **parallel sending** fans the event to every NC in the mask |
+//! | 3 | (mask, dest position, local axon id) | convolution | **decoupled weight addressing**: `w_addr = global_axon·k² + local_axon`; IE count scales with *single-channel* positions, not channels |
+
+pub mod storage;
+
+/// Network-global neuron id.
+pub type NeuronId = u32;
+
+/// Number of NCs per CC (Table IV note: 132 CCs × 8 NCs = 1056 cores).
+pub const NCS_PER_CC: usize = 8;
+
+/// Maximum fan-in per neuron (§IV-B: "TaiBai constrains each neuron to
+/// have a maximum of 2K fan-ins").
+pub const MAX_FAN_IN: usize = 2048;
+
+/// Fan-in IE discriminant.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum IeType {
+    Sparse0,
+    Sparse1,
+    Full2,
+    Conv3,
+}
+
+/// First-level fan-in Directory Entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FanInDE {
+    /// Connection tag; packets whose tag mismatches are dropped (regional
+    /// multicast rectangles cover non-targeted CCs).
+    pub tag: u16,
+    pub ie_type: IeType,
+    pub it_base: u32,
+    pub it_len: u32,
+    /// k² for Conv3 entries (weight-address polynomial), 0 otherwise.
+    pub k2: u16,
+}
+
+/// Second-level fan-in Information Entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FanInIE {
+    /// Target neuron id only; weights decoded in the NC via FINDIDX with
+    /// the global axon id (carried in the packet payload).
+    Type0 { nc: u8, neuron: u16 },
+    /// Direct (neuron, local axon) pair — no decode latency.
+    Type1 { nc: u8, neuron: u16, local_axon: u16 },
+    /// Incremental addressing of a fully-connected layer + parallel send.
+    /// Neurons `start .. start+count` live at the same local base in every
+    /// NC of `nc_mask`, `margin` per NC (the last NC takes the remainder).
+    Type2 {
+        nc_mask: u16,
+        margin: u16,
+        count: u16,
+        start: u16,
+    },
+    /// Decoupled convolutional addressing: one entry per (destination
+    /// position, kernel offset) pair of a *single* channel; every NC in
+    /// `nc_mask` applies it to its own resident output channels.
+    Type3 {
+        nc_mask: u16,
+        pos: u16,
+        local_axon: u16,
+    },
+}
+
+/// Packet routing modes (§III-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteMode {
+    /// XY-routed point-to-point.
+    Unicast { x: u8, y: u8 },
+    /// Shortest path to the region boundary, then tree multicast within
+    /// the rectangle [x0..=x1, y0..=y1].
+    Multicast { x0: u8, y0: u8, x1: u8, y1: u8 },
+    /// Tree broadcast to every CC.
+    Broadcast,
+}
+
+/// Fan-out Directory Entry (addressed by fired local neuron id).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FanOutDE {
+    /// Global axon id of this neuron: its index within the connection for
+    /// sparse/full patterns, its *channel id* for convolutional ones.
+    pub global_axon: u16,
+    pub it_base: u32,
+    pub it_len: u32,
+}
+
+/// Fan-out Information Entry — everything needed to mint one packet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FanOutIE {
+    pub mode: RouteMode,
+    /// Destination-CC fan-in tag.
+    pub tag: u16,
+    /// Destination-CC fan-in DT index (for conv: the single-channel
+    /// position; for full: the shared entry; for sparse: per-neuron).
+    pub index: u16,
+    /// Timestep delay for skip connections (0 = fire this step; §III-D.6
+    /// reuses the output-event neuron type to mark delayed spikes).
+    pub delay: u8,
+}
+
+/// A decoded NC activation produced from one arriving packet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Activation {
+    pub nc: u8,
+    /// NC-local target neuron index (or loop start for Type2/Type3).
+    pub neuron: u16,
+    /// Axon operand handed to the NC program (global or local per type;
+    /// for Conv3 this is the decoupled `ci·k² + local` address).
+    pub axon: u16,
+    /// Loop count for Type2 (0 otherwise).
+    pub data: u16,
+}
+
+/// Both two-level tables of one CC.
+#[derive(Clone, Debug, Default)]
+pub struct CcTables {
+    pub fanin_dt: Vec<FanInDE>,
+    pub fanin_it: Vec<FanInIE>,
+    pub fanout_dt: Vec<FanOutDE>,
+    pub fanout_it: Vec<FanOutIE>,
+}
+
+/// Statistics of one fan-in decode (feeds the energy/latency model).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    pub dt_reads: u64,
+    pub it_reads: u64,
+    pub dropped: bool,
+}
+
+impl CcTables {
+    /// Decode an arriving spike packet into NC activations.
+    ///
+    /// `index` selects the DT entry, `tag` must match, `payload` carries
+    /// the upstream global axon id (sparse/full) or upstream channel id
+    /// (conv).
+    pub fn decode_fanin(
+        &self,
+        tag: u16,
+        index: u16,
+        payload: u16,
+        out: &mut Vec<Activation>,
+    ) -> DecodeStats {
+        let mut stats = DecodeStats {
+            dt_reads: 1,
+            ..Default::default()
+        };
+        let Some(de) = self.fanin_dt.get(index as usize) else {
+            stats.dropped = true;
+            return stats;
+        };
+        if de.tag != tag {
+            stats.dropped = true;
+            return stats;
+        }
+        let it = &self.fanin_it[de.it_base as usize..(de.it_base + de.it_len) as usize];
+        for ie in it {
+            stats.it_reads += 1;
+            match *ie {
+                FanInIE::Type0 { nc, neuron } => out.push(Activation {
+                    nc,
+                    neuron,
+                    axon: payload,
+                    data: 0,
+                }),
+                FanInIE::Type1 {
+                    nc,
+                    neuron,
+                    local_axon,
+                } => out.push(Activation {
+                    nc,
+                    neuron,
+                    axon: local_axon,
+                    data: 0,
+                }),
+                FanInIE::Type2 {
+                    nc_mask,
+                    margin,
+                    count,
+                    start,
+                } => {
+                    // Parallel sending: one activation per NC in the mask;
+                    // NC j (j-th set bit) covers `margin` neurons, the last
+                    // one the remainder.
+                    let mut j = 0u16;
+                    for nc in 0..NCS_PER_CC as u8 {
+                        if nc_mask >> nc & 1 == 0 {
+                            continue;
+                        }
+                        let off = j * margin;
+                        if off >= count {
+                            break;
+                        }
+                        let n = margin.min(count - off);
+                        out.push(Activation {
+                            nc,
+                            neuron: start,
+                            axon: payload,
+                            data: n,
+                        });
+                        j += 1;
+                    }
+                }
+                FanInIE::Type3 {
+                    nc_mask,
+                    pos,
+                    local_axon,
+                } => {
+                    // Decoupled conv addressing: the NC receives the
+                    // polynomial-ready axon ci·k² + local. Each NC in the
+                    // mask loops over its own resident output channels.
+                    let axon = payload * de.k2 + local_axon;
+                    for nc in 0..NCS_PER_CC as u8 {
+                        if nc_mask >> nc & 1 == 1 {
+                            out.push(Activation {
+                                nc,
+                                neuron: pos,
+                                axon,
+                                data: 0,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        stats
+    }
+
+    /// Look up the fan-out of a fired local neuron: the packets to mint.
+    /// Returns (global axon id, IE slice).
+    pub fn fanout(&self, local_neuron: u16) -> Option<(u16, &[FanOutIE])> {
+        let de = self.fanout_dt.get(local_neuron as usize)?;
+        let it = &self.fanout_it[de.it_base as usize..(de.it_base + de.it_len) as usize];
+        Some((de.global_axon, it))
+    }
+
+    /// Append a fan-in connection block; returns its DT base index.
+    pub fn push_fanin(&mut self, des: Vec<FanInDE>, ies: Vec<FanInIE>) -> u16 {
+        let dt_base = self.fanin_dt.len() as u16;
+        let it_base = self.fanin_it.len() as u32;
+        for mut de in des {
+            de.it_base += it_base;
+            self.fanin_dt.push(de);
+        }
+        self.fanin_it.extend(ies);
+        dt_base
+    }
+
+    /// Append fan-out entries for a local neuron range. `des[i]` becomes
+    /// the DE of local neuron `base_neuron + i`.
+    pub fn push_fanout(&mut self, des: Vec<FanOutDE>, ies: Vec<FanOutIE>) {
+        let it_base = self.fanout_it.len() as u32;
+        for mut de in des {
+            de.it_base += it_base;
+            self.fanout_dt.push(de);
+        }
+        self.fanout_it.extend(ies);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acts(tables: &CcTables, tag: u16, index: u16, payload: u16) -> Vec<Activation> {
+        let mut v = Vec::new();
+        tables.decode_fanin(tag, index, payload, &mut v);
+        v
+    }
+
+    #[test]
+    fn type0_pooling_decode() {
+        let mut t = CcTables::default();
+        t.push_fanin(
+            vec![FanInDE {
+                tag: 7,
+                ie_type: IeType::Sparse0,
+                it_base: 0,
+                it_len: 2,
+                k2: 0,
+            }],
+            vec![
+                FanInIE::Type0 { nc: 0, neuron: 3 },
+                FanInIE::Type0 { nc: 1, neuron: 9 },
+            ],
+        );
+        let a = acts(&t, 7, 0, 42);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0], Activation { nc: 0, neuron: 3, axon: 42, data: 0 });
+        assert_eq!(a[1].nc, 1);
+    }
+
+    #[test]
+    fn tag_mismatch_drops_packet() {
+        let mut t = CcTables::default();
+        t.push_fanin(
+            vec![FanInDE {
+                tag: 7,
+                ie_type: IeType::Sparse0,
+                it_base: 0,
+                it_len: 1,
+                k2: 0,
+            }],
+            vec![FanInIE::Type0 { nc: 0, neuron: 0 }],
+        );
+        let mut v = Vec::new();
+        let s = t.decode_fanin(8, 0, 0, &mut v);
+        assert!(s.dropped);
+        assert!(v.is_empty());
+        // out-of-range index also drops
+        let s = t.decode_fanin(7, 99, 0, &mut v);
+        assert!(s.dropped);
+    }
+
+    #[test]
+    fn type1_direct_local_axon() {
+        let mut t = CcTables::default();
+        t.push_fanin(
+            vec![FanInDE {
+                tag: 1,
+                ie_type: IeType::Sparse1,
+                it_base: 0,
+                it_len: 1,
+                k2: 0,
+            }],
+            vec![FanInIE::Type1 {
+                nc: 2,
+                neuron: 5,
+                local_axon: 17,
+            }],
+        );
+        let a = acts(&t, 1, 0, 999); // payload ignored for type1
+        assert_eq!(a[0].axon, 17);
+        assert_eq!(a[0].nc, 2);
+    }
+
+    #[test]
+    fn type2_full_connection_parallel_send() {
+        // 100 downstream neurons over 4 NCs, margin 30 (last NC gets 10).
+        let mut t = CcTables::default();
+        t.push_fanin(
+            vec![FanInDE {
+                tag: 3,
+                ie_type: IeType::Full2,
+                it_base: 0,
+                it_len: 1,
+                k2: 0,
+            }],
+            vec![FanInIE::Type2 {
+                nc_mask: 0b1111,
+                margin: 30,
+                count: 100,
+                start: 0,
+            }],
+        );
+        let a = acts(&t, 3, 0, 55); // upstream neuron 55 fired
+        assert_eq!(a.len(), 4);
+        assert_eq!(a[0], Activation { nc: 0, neuron: 0, axon: 55, data: 30 });
+        assert_eq!(a[3], Activation { nc: 3, neuron: 0, axon: 55, data: 10 });
+        // all NCs receive the upstream id as the weight-row selector
+        assert!(a.iter().all(|x| x.axon == 55));
+    }
+
+    #[test]
+    fn type2_sparse_mask_skips_unused_ncs() {
+        let mut t = CcTables::default();
+        t.push_fanin(
+            vec![FanInDE {
+                tag: 0,
+                ie_type: IeType::Full2,
+                it_base: 0,
+                it_len: 1,
+                k2: 0,
+            }],
+            vec![FanInIE::Type2 {
+                nc_mask: 0b1010, // NCs 1 and 3
+                margin: 8,
+                count: 16,
+                start: 4,
+            }],
+        );
+        let a = acts(&t, 0, 0, 0);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].nc, 1);
+        assert_eq!(a[1].nc, 3);
+        assert_eq!(a[0].neuron, 4);
+    }
+
+    #[test]
+    fn type3_conv_polynomial_addressing() {
+        // 3x3 kernel: k2 = 9. Upstream channel 2 fires at some position;
+        // IE says (dest pos 14, kernel offset 5).
+        let mut t = CcTables::default();
+        t.push_fanin(
+            vec![FanInDE {
+                tag: 9,
+                ie_type: IeType::Conv3,
+                it_base: 0,
+                it_len: 1,
+                k2: 9,
+            }],
+            vec![FanInIE::Type3 {
+                nc_mask: 0b11,
+                pos: 14,
+                local_axon: 5,
+            }],
+        );
+        let a = acts(&t, 9, 0, 2); // payload = channel id 2
+        assert_eq!(a.len(), 2);
+        // w_addr operand = ci*k2 + local = 2*9 + 5 = 23 (eq. 4)
+        assert!(a.iter().all(|x| x.axon == 23 && x.neuron == 14));
+        assert_eq!((a[0].nc, a[1].nc), (0, 1));
+    }
+
+    #[test]
+    fn fanout_lookup() {
+        let mut t = CcTables::default();
+        t.push_fanout(
+            vec![
+                FanOutDE { global_axon: 11, it_base: 0, it_len: 1 },
+                FanOutDE { global_axon: 12, it_base: 1, it_len: 2 },
+            ],
+            vec![
+                FanOutIE {
+                    mode: RouteMode::Unicast { x: 1, y: 2 },
+                    tag: 5,
+                    index: 0,
+                    delay: 0,
+                },
+                FanOutIE {
+                    mode: RouteMode::Multicast { x0: 0, y0: 0, x1: 3, y1: 3 },
+                    tag: 6,
+                    index: 1,
+                    delay: 0,
+                },
+                FanOutIE {
+                    mode: RouteMode::Broadcast,
+                    tag: 7,
+                    index: 2,
+                    delay: 2, // skip connection: fire 2 steps late
+                },
+            ],
+        );
+        let (axon, ies) = t.fanout(1).unwrap();
+        assert_eq!(axon, 12);
+        assert_eq!(ies.len(), 2);
+        assert_eq!(ies[1].delay, 2);
+        assert!(t.fanout(5).is_none());
+    }
+
+    #[test]
+    fn push_fanin_rebases_it_offsets() {
+        let mut t = CcTables::default();
+        t.push_fanin(
+            vec![FanInDE {
+                tag: 0,
+                ie_type: IeType::Sparse0,
+                it_base: 0,
+                it_len: 1,
+                k2: 0,
+            }],
+            vec![FanInIE::Type0 { nc: 0, neuron: 1 }],
+        );
+        let base = t.push_fanin(
+            vec![FanInDE {
+                tag: 1,
+                ie_type: IeType::Sparse0,
+                it_base: 0,
+                it_len: 1,
+                k2: 0,
+            }],
+            vec![FanInIE::Type0 { nc: 0, neuron: 2 }],
+        );
+        assert_eq!(base, 1);
+        let a = acts(&t, 1, 1, 0);
+        assert_eq!(a[0].neuron, 2);
+    }
+}

@@ -1,0 +1,359 @@
+//! Storage accounting for the topology-representation schemes — the
+//! machinery behind **Fig 14** ("Efficiency of network topology
+//! representation on conventional models") and the ResNet18 core-count
+//! comparison for skip connections.
+//!
+//! Four cumulative schemes are modeled, matching the figure's columns:
+//!
+//! 1. `Baseline` — fully-connected unfolded mode: every connection is an
+//!    individual (neuron id, axon id) fan-in entry, exactly as if conv
+//!    layers had been expanded to full connections.
+//! 2. `+DecoupledConv` — convolutional layers use Type3 IEs: one entry
+//!    per (single-channel position, kernel offset) pair, duplicated per
+//!    destination NC because parallel sending is still off.
+//! 3. `+ParallelSend` — the NC coding mask removes the per-NC
+//!    duplication (÷N for layers spanning N NCs).
+//! 4. `+IncrementalFc` (= "ours") — fully-connected layers collapse to a
+//!    single 4-field Type2 IE each.
+//!
+//! Entry widths are the bit costs of the encodings in
+//! [`crate::topology`]; the paper's claim is relative (286–947×
+//! reduction), which is what we reproduce.
+
+use crate::model::{Layer, NetDef};
+
+/// Bit widths of table entries (from the field layouts in `topology`).
+pub mod bits {
+    /// Fan-in DE: tag(8) + type(2) + it_base(20) + it_len(12) + k2(6).
+    pub const FANIN_DE: u64 = 48;
+    /// Type0 IE: nc(3) + neuron(13).
+    pub const IE0: u64 = 16;
+    /// Type1 IE: nc(3) + neuron(13) + local axon(16).
+    pub const IE1: u64 = 32;
+    /// Type2 IE: mask(8) + margin(16) + count(16) + start(16).
+    pub const IE2: u64 = 56;
+    /// Type3 IE: mask(8) + pos(16) + local axon(8).
+    pub const IE3: u64 = 32;
+    /// Fan-out DE: global axon(16) + it_base(20) + it_len(12).
+    pub const FANOUT_DE: u64 = 48;
+    /// Fan-out IE: mode+dest(18) + tag(8) + index(16) + delay(4).
+    pub const FANOUT_IE: u64 = 46;
+}
+
+/// The cumulative schemes of Fig 14, leftmost to rightmost column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Baseline,
+    DecoupledConv,
+    ParallelSend,
+    IncrementalFc,
+}
+
+pub const ALL_SCHEMES: [Scheme; 4] = [
+    Scheme::Baseline,
+    Scheme::DecoupledConv,
+    Scheme::ParallelSend,
+    Scheme::IncrementalFc,
+];
+
+impl Scheme {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Baseline => "FC-unfolded baseline",
+            Scheme::DecoupledConv => "+decoupled conv addressing",
+            Scheme::ParallelSend => "+parallel sending",
+            Scheme::IncrementalFc => "+incremental FC (ours)",
+        }
+    }
+}
+
+/// Per-model topology-table storage, in bits.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StorageReport {
+    pub fanin_dt_bits: u64,
+    pub fanin_it_bits: u64,
+    pub fanout_bits: u64,
+}
+
+impl StorageReport {
+    pub fn total_bits(&self) -> u64 {
+        self.fanin_dt_bits + self.fanin_it_bits + self.fanout_bits
+    }
+
+    pub fn total_kib(&self) -> f64 {
+        self.total_bits() as f64 / 8.0 / 1024.0
+    }
+}
+
+/// Average NCs spanned by one layer's destination neurons (parallel-send
+/// fan-out factor). The paper's CC hosts 8 NCs; large layers span all 8.
+fn ncs_spanned(neurons: usize) -> u64 {
+    // One NC comfortably hosts ~256 neurons of state; layers smaller than
+    // that sit in one NC.
+    ((neurons + 255) / 256).min(crate::topology::NCS_PER_CC) as u64
+}
+
+/// Compute topology-table storage for `net` under `scheme`.
+pub fn storage(net: &NetDef, scheme: Scheme) -> StorageReport {
+    let mut r = StorageReport::default();
+
+    // Fan-out side: one DE per source neuron; IEs are shared per source
+    // channel/layer (identical routing within a layer), one per
+    // destination connection of that layer. This side is scheme-invariant
+    // in our accounting (Fig 14's reductions come from the fan-in IT).
+    for l in &net.layers {
+        let n = l.neurons();
+        r.fanout_bits += n as u64 * bits::FANOUT_DE;
+        // shared routing IEs: a handful per layer; bounded by spanned CCs
+        r.fanout_bits += 4 * bits::FANOUT_IE;
+    }
+    // skip connections reuse the fan-out DT (delayed spikes) — no extra
+    // DE cost in our scheme; see `skip_core_cost` for the alternative.
+
+    for l in &net.layers {
+        match *l {
+            Layer::Input { .. } => {}
+            Layer::Conv { cin, h, w, k, s, p, .. } => {
+                let (oh, ow) = l.out_hw();
+                let span = ncs_spanned(l.neurons());
+                match scheme {
+                    Scheme::Baseline => {
+                        // Unfolded: per-synapse IEs, DT per upstream neuron.
+                        let upstream = (cin * h * w) as u64;
+                        r.fanin_dt_bits += upstream * bits::FANIN_DE;
+                        r.fanin_it_bits += l.connections() * bits::IE1;
+                    }
+                    Scheme::DecoupledConv => {
+                        // Type3: single-channel (pos, kernel-offset) pairs,
+                        // duplicated per destination NC (no mask yet).
+                        let upstream_pos = (h * w) as u64;
+                        r.fanin_dt_bits += upstream_pos * bits::FANIN_DE;
+                        let pairs = per_position_pairs(h, w, k, s, p, oh, ow);
+                        r.fanin_it_bits += pairs * bits::IE3 * span;
+                    }
+                    Scheme::ParallelSend | Scheme::IncrementalFc => {
+                        let upstream_pos = (h * w) as u64;
+                        r.fanin_dt_bits += upstream_pos * bits::FANIN_DE;
+                        let pairs = per_position_pairs(h, w, k, s, p, oh, ow);
+                        r.fanin_it_bits += pairs * bits::IE3;
+                    }
+                }
+            }
+            Layer::Pool { c, h, w, k } => {
+                match scheme {
+                    Scheme::Baseline => {
+                        let upstream = (c * h * w) as u64;
+                        r.fanin_dt_bits += upstream * bits::FANIN_DE;
+                        r.fanin_it_bits += l.connections() * bits::IE1;
+                    }
+                    _ => {
+                        // Type0 per single-channel upstream position.
+                        let upstream_pos = (h * w) as u64;
+                        r.fanin_dt_bits += upstream_pos * bits::FANIN_DE;
+                        let dup = if scheme == Scheme::DecoupledConv {
+                            ncs_spanned(l.neurons())
+                        } else {
+                            1
+                        };
+                        r.fanin_it_bits += upstream_pos * bits::IE0 * dup;
+                        let _ = k;
+                    }
+                }
+            }
+            Layer::Fc { input, output, .. } => {
+                match scheme {
+                    Scheme::Baseline | Scheme::DecoupledConv | Scheme::ParallelSend => {
+                        // per-synapse entries; DT per upstream neuron
+                        r.fanin_dt_bits += input as u64 * bits::FANIN_DE;
+                        r.fanin_it_bits += (input * output) as u64 * bits::IE1;
+                    }
+                    Scheme::IncrementalFc => {
+                        // one shared DT entry + ONE 4-field IE per layer
+                        r.fanin_dt_bits += bits::FANIN_DE;
+                        r.fanin_it_bits += bits::IE2;
+                    }
+                }
+            }
+            Layer::Recurrent { input, size, .. } => {
+                // input->size plus size->size treated as two FC blocks
+                let conns = ((input + size) * size) as u64;
+                match scheme {
+                    Scheme::IncrementalFc => {
+                        r.fanin_dt_bits += 2 * bits::FANIN_DE;
+                        r.fanin_it_bits += 2 * bits::IE2;
+                    }
+                    _ => {
+                        r.fanin_dt_bits += (input + size) as u64 * bits::FANIN_DE;
+                        r.fanin_it_bits += conns * bits::IE1;
+                    }
+                }
+            }
+            Layer::Sparse { input, .. } => {
+                // sparse stays Type0/1 in every scheme
+                r.fanin_dt_bits += input as u64 * bits::FANIN_DE;
+                r.fanin_it_bits += l.connections() * bits::IE1;
+            }
+        }
+    }
+    r
+}
+
+/// Total (dest position, kernel offset) pairs of a single upstream
+/// channel — boundary-exact (padding clips receptive fields).
+fn per_position_pairs(
+    h: usize,
+    w: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    oh: usize,
+    ow: usize,
+) -> u64 {
+    // For each upstream position, count output positions whose k×k window
+    // covers it. Sum over all upstream positions == sum over all output
+    // positions of their in-bounds window size.
+    let mut pairs = 0u64;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let y0 = oy * s as usize;
+            let x0 = ox * s;
+            for ky in 0..k {
+                for kx in 0..k {
+                    let iy = y0 + ky;
+                    let ix = x0 + kx;
+                    if iy >= p && iy < h + p && ix >= p && ix < w + p {
+                        pairs += 1;
+                    }
+                }
+            }
+        }
+    }
+    let _ = w;
+    pairs
+}
+
+/// Fig 14's last claim: supporting residual (skip) structures directly.
+/// Returns (cores with the delayed-spike scheme, cores with the
+/// duplicate/relay-core baseline). `capacity` = neurons per NC.
+pub fn skip_core_cost(net: &NetDef, capacity: usize) -> (u64, u64) {
+    let base_cores = net
+        .layers
+        .iter()
+        .map(|l| ((l.neurons() + capacity - 1) / capacity) as u64)
+        .sum::<u64>()
+        .max(1);
+    // Baseline: each skip connection needs relay neurons caching the
+    // source layer's spikes for `delay` timesteps — one relay population
+    // per crossed layer (Fig 8a/b), each the size of the source layer.
+    let mut relay_neurons = 0usize;
+    for s in &net.skips {
+        let src = net.layers[s.from].neurons();
+        relay_neurons += src * s.delay().max(1);
+    }
+    let relay_cores = ((relay_neurons + capacity - 1) / capacity) as u64;
+    (base_cores, base_cores + relay_cores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model;
+
+    #[test]
+    fn schemes_are_monotonically_smaller() {
+        for net in [model::vgg16(), model::resnet18(), model::plif_net()] {
+            let sizes: Vec<u64> = ALL_SCHEMES
+                .iter()
+                .map(|&s| storage(&net, s).total_bits())
+                .collect();
+            for w in sizes.windows(2) {
+                assert!(
+                    w[0] >= w[1],
+                    "{}: scheme sizes not monotone: {sizes:?}",
+                    net.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vgg16_reduction_in_paper_band() {
+        // Paper: 286–947× total reduction vs the unfolded baseline.
+        let net = model::vgg16();
+        let base = storage(&net, Scheme::Baseline).total_bits();
+        let ours = storage(&net, Scheme::IncrementalFc).total_bits();
+        let ratio = base as f64 / ours as f64;
+        assert!(
+            ratio > 100.0 && ratio < 2000.0,
+            "vgg16 reduction {ratio:.0}x outside plausible band"
+        );
+    }
+
+    #[test]
+    fn conv_pairs_boundary_exact() {
+        // 4x4 input, 3x3 kernel, stride 1, pad 1 -> 4x4 output.
+        // Interior output positions have 9 in-bounds taps, corners 4,
+        // edges 6: total = 4*4*9 - boundary clipping.
+        let pairs = per_position_pairs(4, 4, 3, 1, 1, 4, 4);
+        let expect: u64 = 4 * 4 + 4 * 6 * 2 + 8 * 6 / 6 * 0 + 0; // compute directly below
+        let _ = expect;
+        // direct: corners(4)*4 + edges(8)*6 + interior(4)*9 = 16+48+36 = 100
+        assert_eq!(pairs, 100);
+        // no padding: every tap in bounds: oh*ow*k*k
+        assert_eq!(per_position_pairs(6, 6, 3, 1, 0, 4, 4), 4 * 4 * 9);
+    }
+
+    #[test]
+    fn incremental_fc_collapses_fc_layers() {
+        let mut n = model::NetDef::new("fc-only", 1);
+        n.layers.push(model::Layer::Input { size: 1024 });
+        n.layers.push(model::Layer::Fc {
+            input: 1024,
+            output: 1024,
+            neuron: model::NeuronModel::Lif { tau: 0.5, vth: 1.0 },
+        });
+        let before = storage(&n, Scheme::ParallelSend);
+        let after = storage(&n, Scheme::IncrementalFc);
+        // 1M IE1 entries collapse to one IE2
+        assert!(before.fanin_it_bits > 1_000_000 * bits::IE1 / 2);
+        assert_eq!(after.fanin_it_bits, bits::IE2);
+    }
+
+    #[test]
+    fn resnet18_skip_scheme_saves_cores() {
+        let net = model::resnet18();
+        let (ours, dup) = skip_core_cost(&net, 2048);
+        assert!(ours < dup);
+        let ratio = ours as f64 / dup as f64;
+        // paper: 70.3% — accept a sane band around it
+        assert!(ratio > 0.4 && ratio < 0.95, "ratio={ratio:.3}");
+    }
+
+    #[test]
+    fn decoupled_conv_is_channel_count_independent() {
+        // Two conv layers with identical spatial geometry but different
+        // channel counts must cost the same fan-in IT bits under Type3.
+        let mk = |cin: usize, cout: usize| {
+            let mut n = model::NetDef::new("c", 1);
+            n.layers.push(model::Layer::Input { size: cin * 16 * 16 });
+            n.layers.push(model::Layer::Conv {
+                cin,
+                h: 16,
+                w: 16,
+                cout,
+                k: 3,
+                s: 1,
+                p: 1,
+                neuron: model::NeuronModel::Lif { tau: 0.5, vth: 1.0 },
+            });
+            n
+        };
+        let small = storage(&mk(4, 4), Scheme::ParallelSend).fanin_it_bits;
+        let large = storage(&mk(256, 256), Scheme::ParallelSend).fanin_it_bits;
+        assert_eq!(small, large);
+        // while the baseline scales with cin*cout
+        let sb = storage(&mk(4, 4), Scheme::Baseline).fanin_it_bits;
+        let lb = storage(&mk(256, 256), Scheme::Baseline).fanin_it_bits;
+        assert_eq!(lb / sb, (256u64 * 256) / (4 * 4));
+    }
+}

@@ -1,0 +1,255 @@
+//! IEEE-754 binary16 soft-float.
+//!
+//! The TaiBai neuron core ALU operates on FP16 and INT16 (§III-B). We model
+//! FP16 as a bit-exact storage format with round-to-nearest-even
+//! conversions; arithmetic is performed by widening to f32, operating, and
+//! rounding back. (Products of two 11-bit significands are exact in f32;
+//! sums can in principle double-round, which is a <1-ulp-probability
+//! corner we accept for a behavioral model.)
+
+/// A 16-bit IEEE-754 binary16 value (1 sign, 5 exponent, 10 mantissa bits).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3c00);
+    pub const NEG_ONE: F16 = F16(0xbc00);
+    pub const INFINITY: F16 = F16(0x7c00);
+    pub const NEG_INFINITY: F16 = F16(0xfc00);
+    pub const NAN: F16 = F16(0x7e00);
+    /// Largest finite f16 (65504).
+    pub const MAX: F16 = F16(0x7bff);
+
+    #[inline]
+    pub fn from_bits(b: u16) -> F16 {
+        F16(b)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// Convert from f32 with round-to-nearest-even.
+    #[inline]
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xff) as i32;
+        let man = bits & 0x007f_ffff;
+
+        if exp == 0xff {
+            // Inf or NaN. Preserve NaN-ness (quiet), drop payload detail.
+            return if man != 0 {
+                F16(sign | 0x7e00)
+            } else {
+                F16(sign | 0x7c00)
+            };
+        }
+
+        let e16 = exp - 127 + 15;
+        if e16 >= 0x1f {
+            // Overflow -> infinity.
+            return F16(sign | 0x7c00);
+        }
+        if e16 <= 0 {
+            // Subnormal (or underflow to zero).
+            if e16 < -10 {
+                return F16(sign);
+            }
+            let man = man | 0x0080_0000; // implicit leading 1
+            let shift = (14 - e16) as u32; // 14..24
+            // round to nearest even
+            let lsb = (man >> shift) & 1;
+            let half = 1u32 << (shift - 1);
+            let rem = man & ((1u32 << shift) - 1);
+            let mut out = man >> shift;
+            if rem > half || (rem == half && lsb == 1) {
+                out += 1;
+            }
+            return F16(sign | out as u16);
+        }
+
+        // Normal.
+        let out = ((e16 as u32) << 10) | (man >> 13);
+        let rem = man & 0x1fff;
+        let out = if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+            out + 1 // may carry into exponent; 0x7c00 == infinity, correct
+        } else {
+            out
+        };
+        F16(sign | out as u16)
+    }
+
+    /// Convert to f32 (exact).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        let h = self.0;
+        let sign = ((h & 0x8000) as u32) << 16;
+        let exp = (h >> 10) & 0x1f;
+        let man = (h & 0x3ff) as u32;
+        if exp == 0 {
+            if man == 0 {
+                return f32::from_bits(sign);
+            }
+            // subnormal: value = man * 2^-24
+            let v = man as f32 * (1.0 / 16_777_216.0);
+            return if sign != 0 { -v } else { v };
+        }
+        if exp == 0x1f {
+            return if man != 0 {
+                f32::NAN
+            } else {
+                f32::from_bits(sign | 0x7f80_0000)
+            };
+        }
+        let e32 = (exp as i32 - 15 + 127) as u32;
+        f32::from_bits(sign | (e32 << 23) | (man << 13))
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7c00) == 0x7c00 && (self.0 & 0x3ff) != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7fff) == 0x7c00
+    }
+
+    #[inline]
+    pub fn is_sign_negative(self) -> bool {
+        self.0 & 0x8000 != 0
+    }
+
+    #[inline]
+    pub fn add(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() + rhs.to_f32())
+    }
+
+    #[inline]
+    pub fn sub(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() - rhs.to_f32())
+    }
+
+    #[inline]
+    pub fn mul(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() * rhs.to_f32())
+    }
+
+    /// Fused multiply-add with a single final rounding: `self * b + c`.
+    /// This is the `DIFF` instruction's datapath (v = tau*v + I).
+    #[inline]
+    pub fn mul_add(self, b: F16, c: F16) -> F16 {
+        // Exact in f64: products of 11-bit significands and one addition
+        // fit comfortably within 53 bits.
+        F16::from_f32((self.to_f32() as f64 * b.to_f32() as f64 + c.to_f32() as f64) as f32)
+    }
+
+    /// IEEE comparison (NaN compares unordered => all false).
+    pub fn cmp_flags(self, rhs: F16) -> (bool, bool, bool) {
+        let (a, b) = (self.to_f32(), rhs.to_f32());
+        (a == b, a < b, a > b)
+    }
+}
+
+impl From<f32> for F16 {
+    fn from(x: f32) -> F16 {
+        F16::from_f32(x)
+    }
+}
+
+impl std::fmt::Display for F16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.099976] {
+            let h = F16::from_f32(v);
+            let back = h.to_f32();
+            assert!((back - v).abs() <= v.abs() * 1e-3 + 1e-7, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(F16::from_f32(1.0).0, 0x3c00);
+        assert_eq!(F16::from_f32(-2.0).0, 0xc000);
+        assert_eq!(F16::from_f32(0.5).0, 0x3800);
+        assert_eq!(F16::from_f32(65504.0).0, 0x7bff);
+        assert_eq!(F16::from_f32(f32::INFINITY).0, 0x7c00);
+        assert!(F16::from_f32(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        assert_eq!(F16::from_f32(70000.0).0, 0x7c00);
+        assert_eq!(F16::from_f32(-70000.0).0, 0xfc00);
+    }
+
+    #[test]
+    fn subnormals() {
+        // smallest positive subnormal = 2^-24
+        let tiny = F16::from_f32(5.9604645e-8);
+        assert_eq!(tiny.0, 1);
+        assert_eq!(tiny.to_f32(), 5.9604645e-8);
+        // underflow to zero
+        assert_eq!(F16::from_f32(1e-9).0, 0);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 1 ulp/2 exactly -> ties to even (stays 1.0)
+        let v = f32::from_bits(0x3f80_0000 | 0x1000); // 1.0 + 2^-11
+        assert_eq!(F16::from_f32(v).0, 0x3c00);
+        // 1.0 + 3*2^-12 -> rounds up to odd+1
+        let v = f32::from_bits(0x3f80_0000 | 0x3000);
+        assert_eq!(F16::from_f32(v).0, 0x3c02);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = F16::from_f32(1.5);
+        let b = F16::from_f32(2.25);
+        assert_eq!(a.add(b).to_f32(), 3.75);
+        assert_eq!(a.mul(b).to_f32(), 3.375);
+        assert_eq!(b.sub(a).to_f32(), 0.75);
+        // DIFF: v = tau*v + I
+        let v = F16::from_f32(0.5);
+        let tau = F16::from_f32(0.9);
+        let i = F16::from_f32(0.25);
+        let out = tau.mul_add(v, i);
+        assert!((out.to_f32() - 0.7).abs() < 1e-3);
+    }
+
+    #[test]
+    fn comparisons() {
+        let a = F16::from_f32(1.0);
+        let b = F16::from_f32(2.0);
+        assert_eq!(a.cmp_flags(b), (false, true, false));
+        assert_eq!(b.cmp_flags(a), (false, false, true));
+        assert_eq!(a.cmp_flags(a), (true, false, false));
+        assert_eq!(F16::NAN.cmp_flags(a), (false, false, false));
+    }
+
+    #[test]
+    fn exhaustive_f16_roundtrip() {
+        // Every finite f16 must roundtrip bit-exactly through f32.
+        for bits in 0..=0xffffu16 {
+            let h = F16(bits);
+            if h.is_nan() {
+                assert!(F16::from_f32(h.to_f32()).is_nan());
+            } else {
+                assert_eq!(F16::from_f32(h.to_f32()).0, bits, "bits={bits:#06x}");
+            }
+        }
+    }
+}

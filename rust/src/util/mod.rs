@@ -1,0 +1,12 @@
+//! Self-contained utilities (the build environment is offline: no `half`,
+//! `rand`, `proptest`, `serde` or `clap`; everything those crates would
+//! provide lives here instead).
+
+pub mod f16;
+pub mod rng;
+pub mod prop;
+pub mod json;
+pub mod cli;
+
+pub use f16::F16;
+pub use rng::Rng;

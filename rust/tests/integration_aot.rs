@@ -1,0 +1,218 @@
+//! Integration: the three-layer contract. Loads the AOT artifacts
+//! (Pallas kernel → JAX → HLO text) through the PJRT runtime and checks
+//! their numerics against (a) a Rust-side reference and (b) the detailed
+//! chip engine running the same LIF dynamics through the ISA programs —
+//! i.e. L1 ⇔ L2 ⇔ L3 agree.
+//!
+//! Skips cleanly when `make artifacts` has not run.
+
+use taibai::runtime::{artifacts::artifacts_dir, Engine};
+
+fn artifact(name: &str) -> Option<String> {
+    let p = artifacts_dir().join(name);
+    p.exists().then(|| p.to_string_lossy().into_owned())
+}
+
+/// Rust-side oracle of the fused LIF step (mirrors kernels/ref.py).
+fn lif_step_ref(
+    s: &[f32],
+    w: &[f32],
+    v: &[f32],
+    b: usize,
+    k: usize,
+    n: usize,
+    tau: f32,
+    vth: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut v_out = vec![0.0f32; b * n];
+    let mut spk = vec![0.0f32; b * n];
+    for bi in 0..b {
+        for ni in 0..n {
+            let mut i = 0.0;
+            for ki in 0..k {
+                i += s[bi * k + ki] * w[ki * n + ni];
+            }
+            let vn = tau * v[bi * n + ni] + i;
+            if vn >= vth {
+                spk[bi * n + ni] = 1.0;
+                v_out[bi * n + ni] = 0.0;
+            } else {
+                v_out[bi * n + ni] = vn;
+            }
+        }
+    }
+    (v_out, spk)
+}
+
+#[test]
+fn pallas_artifact_matches_rust_reference() {
+    let Some(path) = artifact("lif_step.hlo.txt") else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let engine = Engine::cpu().expect("PJRT client");
+    let exe = engine.load_hlo(&path).expect("compile artifact");
+
+    let (b, k, n) = (8usize, 128usize, 128usize);
+    let mut rng = taibai::util::Rng::new(123);
+    let s: Vec<f32> = (0..b * k).map(|_| if rng.chance(0.12) { 1.0 } else { 0.0 }).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| (rng.f32() - 0.5) * 0.4).collect();
+    let v: Vec<f32> = (0..b * n).map(|_| (rng.f32() - 0.5) * 0.8).collect();
+    let tau = [0.9f32];
+    let vth = [1.0f32];
+
+    let out = exe
+        .run_f32(&[
+            (&s, &[b as i64, k as i64]),
+            (&w, &[k as i64, n as i64]),
+            (&v, &[b as i64, n as i64]),
+            (&tau, &[1]),
+            (&vth, &[1]),
+        ])
+        .expect("execute artifact");
+    assert_eq!(out.len(), 2, "artifact returns (v_next, spikes)");
+
+    let (v_ref, s_ref) = lif_step_ref(&s, &w, &v, b, k, n, 0.9, 1.0);
+    let mut max_err = 0.0f32;
+    for (a, r) in out[0].iter().zip(&v_ref) {
+        max_err = max_err.max((a - r).abs());
+    }
+    assert!(max_err < 1e-4, "membrane mismatch: {max_err}");
+    let spike_flips = out[1]
+        .iter()
+        .zip(&s_ref)
+        .filter(|(a, r)| (*a - *r).abs() > 0.5)
+        .count();
+    assert!(spike_flips <= 1, "spike mismatch count {spike_flips}");
+}
+
+#[test]
+fn chip_engine_matches_pallas_artifact_dynamics() {
+    // Layer-3 check: a 4->8 LIF layer deployed through the compiler on
+    // the ISA engine must reproduce the same spike/membrane trajectory
+    // as the reference dynamics (which the artifact test above ties to
+    // the Pallas kernel). FP16 on chip vs f32 reference: tolerance.
+    use taibai::compiler::{self, Options};
+    use taibai::coordinator::Deployment;
+    use taibai::datasets::SpikeSample;
+    use taibai::model::{Layer, NetDef, NeuronModel};
+
+    let (k, n) = (4usize, 8usize);
+    let tau = 0.5f32;
+    let vth = 1.0f32;
+    let mut rng = taibai::util::Rng::new(5);
+    let w: Vec<f32> = (0..k * n).map(|_| (rng.f32() * 0.9) - 0.2).collect();
+
+    let mut net = NetDef::new("xcheck", 12);
+    net.layers.push(Layer::Input { size: k });
+    net.layers.push(Layer::Fc {
+        input: k,
+        output: n,
+        neuron: NeuronModel::Lif { tau, vth },
+    });
+    let r = compiler::compile(&net, &vec![vec![], w.clone()], &Options::default()).unwrap();
+    let mut d = Deployment::new(r.compiled);
+
+    // random spike train
+    let t_steps = 12;
+    let mut spikes = Vec::new();
+    for _ in 0..t_steps {
+        let mut at = Vec::new();
+        for ch in 0..k as u16 {
+            if rng.chance(0.5) {
+                at.push(ch);
+            }
+        }
+        spikes.push(at);
+    }
+
+    // reference trajectory
+    let mut v = vec![0.0f32; n];
+    let mut ref_spikes: Vec<Vec<usize>> = Vec::new();
+    for t in 0..t_steps {
+        let mut s_in = vec![0.0f32; k];
+        for &ch in &spikes[t] {
+            s_in[ch as usize] = 1.0;
+        }
+        let (v2, spk) = lif_step_ref(&s_in, &w, &v, 1, k, n, tau, vth);
+        v = v2;
+        ref_spikes.push(
+            spk.iter()
+                .enumerate()
+                .filter(|(_, &x)| x > 0.5)
+                .map(|(i, _)| i)
+                .collect(),
+        );
+    }
+    let ref_total: usize = ref_spikes.iter().map(|s| s.len()).sum();
+
+    // chip trajectory (spike counts per step via run stats)
+    let run = d
+        .run_spikes(&SpikeSample { spikes, labels: vec![0] })
+        .expect("chip run");
+    // output layer has empty fan-out (host) — count host spikes? The
+    // layer is terminal with LIF (spiking); its spikes go nowhere, so
+    // compare total fired via chip activity.
+    let chip_total = d.chip.activity().nc.spikes_out as usize;
+    let _ = run;
+    assert!(
+        (chip_total as i64 - ref_total as i64).abs() <= (ref_total / 10 + 2) as i64,
+        "chip {} vs reference {} spikes",
+        chip_total,
+        ref_total
+    );
+}
+
+#[test]
+fn srnn_and_bci_artifacts_compile_and_execute() {
+    for name in ["srnn_step.hlo.txt", "bci_step.hlo.txt"] {
+        let Some(path) = artifact(name) else {
+            eprintln!("skipping {name}: run `make artifacts`");
+            return;
+        };
+        let engine = Engine::cpu().unwrap();
+        let exe = engine.load_hlo(&path).expect("compile");
+        if name.starts_with("srnn") {
+            let x = vec![1.0f32; 4];
+            let w1 = vec![0.05f32; 68 * 64];
+            let w2 = vec![0.05f32; 64 * 6];
+            let z64 = vec![0.0f32; 64];
+            let z6 = vec![0.0f32; 6];
+            let out = exe
+                .run_f32(&[
+                    (&x, &[4]),
+                    (&w1, &[68, 64]),
+                    (&w2, &[64, 6]),
+                    (&z64, &[64]),
+                    (&z64, &[64]),
+                    (&z64, &[64]),
+                    (&z6, &[6]),
+                ])
+                .expect("run srnn step");
+            assert_eq!(out.len(), 4);
+            assert_eq!(out[0].len(), 64);
+        }
+    }
+}
+
+#[test]
+fn trained_weights_load_with_expected_shapes() {
+    use taibai::runtime::artifacts::read_weights;
+    let dir = artifacts_dir().join("weights");
+    if !dir.exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    for (stem, expect) in [
+        ("ecg_srnn_w1", (4 + 64) * 64),
+        ("ecg_srnn_w2", 64 * 6),
+        ("shd_dhsnn_w1", 4 * 700 * 64),
+        ("shd_dhsnn_w2", 64 * 20),
+        ("bci_w1", 128 * 128),
+        ("bci_w3", 128 * 4),
+    ] {
+        let w = read_weights(&dir.join(format!("{stem}.bin"))).expect(stem);
+        assert_eq!(w.len(), expect, "{stem}");
+        assert!(w.iter().any(|&x| x != 0.0), "{stem} all zeros");
+    }
+}
