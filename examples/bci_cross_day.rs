@@ -2,16 +2,17 @@
 //! cross-day decoding with on-chip learning — paper §V-B.3 application 3.
 //!
 //! All three layers compose here: the model was trained by the L2 JAX
-//! path (STBP, `make artifacts`), deployed through the full compiler
-//! stack onto the behavioral chip, and fine-tuned *on chip* with the
-//! accumulated-spike backprop head (32 samples, exactly the paper's
-//! protocol), with the loss/accuracy trajectory logged per day.
+//! path (STBP, `make artifacts`), deployed through `api::Taibai` onto
+//! the behavioral chip, and fine-tuned *on chip* through
+//! `Session::learn_step` (32 samples, exactly the paper's protocol),
+//! with the loss/accuracy trajectory logged per day.
 //!
 //! ```sh
 //! cargo run --release --example bci_cross_day -- --days 4 --trials 6
 //! ```
 
-use taibai::apps;
+use taibai::api::workloads::Bci;
+use taibai::api::{Backend, Sample, Workload};
 use taibai::datasets::bci;
 use taibai::metrics::{accuracy, softmax};
 use taibai::util::cli::Args;
@@ -26,22 +27,31 @@ fn main() {
     println!("day | before ft | after ft | mean |err| trajectory (32 on-chip updates)");
 
     for day in 1..=days {
-        let mut d = apps::deploy_bci(16, true, seed);
-        let test = bci::day_dataset(day, trials, seed ^ 0xbeef);
-
-        let before: Vec<(usize, usize)> = test
-            .iter()
-            .map(|s| (apps::bci_classify(&mut d, s), s.label))
+        let workload = Bci { subpaths: 16, day };
+        let mut session = workload
+            .session(Backend::Detailed, seed)
+            .expect("compile");
+        let test: Vec<Sample> = bci::day_dataset(day, trials, seed ^ 0xbeef)
+            .into_iter()
+            .map(Sample::Dense)
             .collect();
-        let acc_before = accuracy(&before);
+
+        let decode_all = |session: &mut taibai::api::Session| -> f64 {
+            let mut pairs = Vec::new();
+            for s in &test {
+                let run = session.run(s).expect("run");
+                pairs.extend(workload.decode(&run, s));
+            }
+            accuracy(&pairs)
+        };
+        let acc_before = decode_all(&mut session);
 
         // on-chip fine-tune: 32 samples from the same day, logging the
         // error magnitude per update (the "loss curve" of the run)
         let train = bci::day_dataset(day, 8, seed ^ 0xfeed);
         let mut errs = Vec::new();
         for s in train.iter().take(32) {
-            d.reset_state();
-            let run = d.run_values(s).expect("run");
+            let run = session.run(&Sample::Dense(s.clone())).expect("run");
             let y = softmax(&run.summed());
             let mut e = vec![0.0f32; bci::CLASSES];
             let mut mag = 0.0;
@@ -50,14 +60,10 @@ fn main() {
                 mag += ek.abs();
             }
             errs.push(mag / bci::CLASSES as f32);
-            d.learn_step(&e).expect("learn");
+            session.learn_step(&e).expect("learn");
         }
 
-        let after: Vec<(usize, usize)> = test
-            .iter()
-            .map(|s| (apps::bci_classify(&mut d, s), s.label))
-            .collect();
-        let acc_after = accuracy(&after);
+        let acc_after = decode_all(&mut session);
 
         let spark: String = errs
             .chunks(4)

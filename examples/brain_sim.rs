@@ -2,14 +2,15 @@
 //! brain simulation and brain-inspired computation"): a small-world
 //! cortical network of sparsely-connected LIF neurons — dense local and
 //! sparse long-range connectivity (§III-C's motivation) — driven by
-//! Poisson background input, with per-population rate logging.
+//! Poisson background input, with per-population rate logging. The
+//! custom net deploys through the same `api::Taibai` builder as the
+//! packaged applications.
 //!
 //! ```sh
 //! cargo run --release --example brain_sim -- --neurons 512 --steps 80
 //! ```
 
-use taibai::compiler::{self, Options};
-use taibai::coordinator::Deployment;
+use taibai::api::{Sample, Taibai};
 use taibai::datasets::SpikeSample;
 use taibai::energy::EnergyModel;
 use taibai::model::{Layer, NetDef, NeuronModel};
@@ -66,22 +67,18 @@ fn main() {
         w2[j * 8 + j * 8 / n] = 1.0 / (n / 8) as f32;
     }
 
-    let report = compiler::compile(
-        &net,
-        &vec![vec![], w1, w2],
-        &Options {
-            sa_iters: 1000,
-            rates: vec![0.2, 0.1, 0.0],
-            ..Default::default()
-        },
-    )
-    .expect("compile");
+    let mut session = Taibai::new(net)
+        .weights(vec![vec![], w1, w2])
+        .rates(vec![0.2, 0.1, 0.0])
+        .sa_iters(1000)
+        .build()
+        .expect("compile");
     println!(
         "cortical sheet: {n} neurons on {} cores (avg hops {:.2})",
-        report.compiled.used_cores, report.avg_hops
+        session.info().used_cores,
+        session.info().avg_hops
     );
 
-    let mut chip = Deployment::new(report.compiled);
     // Poisson background drive
     let mut spikes = Vec::with_capacity(steps);
     for _ in 0..steps {
@@ -93,8 +90,8 @@ fn main() {
         }
         spikes.push(at);
     }
-    let run = chip
-        .run_spikes(&SpikeSample { spikes, labels: vec![0] })
+    let run = session
+        .run(&Sample::Spikes(SpikeSample { spikes, labels: vec![0] }))
         .expect("simulate");
 
     println!("total population spikes: {}", run.spikes);
@@ -111,7 +108,7 @@ fn main() {
     }
 
     let em = EnergyModel::default();
-    let a = chip.chip.activity();
+    let a = session.activity();
     println!(
         "energy: {:.2} µJ over {} SOPs ({:.2} pJ/SOP)",
         em.energy(&a).dynamic_j() * 1e6,

@@ -1,6 +1,7 @@
 //! ECG band recognition with the heterogeneous (ALIF) SRNN — paper
 //! §V-B.3 application 1, including the TaiBai-homogeneous ablation of
-//! Fig 15 (plain-LIF hidden layer).
+//! Fig 15 (plain-LIF hidden layer). Both variants run through the same
+//! `api::Session` pipeline.
 //!
 //! Uses trained weights from `artifacts/weights/` when present
 //! (`make artifacts`), otherwise a structured random fallback.
@@ -9,9 +10,10 @@
 //! cargo run --release --example ecg_srnn -- --samples 4
 //! ```
 
-use taibai::apps;
+use taibai::api::workloads::Ecg;
+use taibai::api::{Backend, Workload};
 use taibai::datasets::ecg;
-use taibai::metrics::{accuracy, argmax};
+use taibai::metrics::accuracy;
 use taibai::util::cli::Args;
 
 fn main() {
@@ -19,25 +21,30 @@ fn main() {
     let n = args.usize("samples", 3);
     let seed = args.u64("seed", 42);
 
-    let data = ecg::dataset(n, seed);
+    // the recordings don't depend on the hidden-layer variant: one
+    // dataset serves the banner and both ablation arms
+    let data = Ecg { heterogeneous: true }.dataset(n, seed);
+    let rate: f64 = data
+        .iter()
+        .map(|s| s.input_rate(ecg::CHANNELS))
+        .sum::<f64>()
+        / n as f64;
     println!(
         "ECG: {} synthetic QTDB-like recordings, {} timesteps, ~{:.0}% spike rate",
         n,
         ecg::TIMESTEPS,
-        data.iter().map(|s| s.rate(ecg::CHANNELS)).sum::<f64>() / n as f64 * 100.0
+        rate * 100.0
     );
 
     for het in [true, false] {
-        let mut d = apps::deploy_ecg(het, seed);
+        let workload = Ecg { heterogeneous: het };
+        let mut session = workload
+            .session(Backend::Detailed, seed)
+            .expect("compile");
         let mut pairs = Vec::new();
         for s in &data {
-            d.reset_state();
-            let run = d.run_spikes(s).expect("chip run");
-            for (t, out) in run.outputs.iter().enumerate() {
-                if t >= 2 {
-                    pairs.push((argmax(out), s.labels[t - 2]));
-                }
-            }
+            let run = session.run(s).expect("chip run");
+            pairs.extend(workload.decode(&run, s));
         }
         let acc = accuracy(&pairs);
         let label = if het { "ALIF (heterogeneous)" } else { "LIF (homogeneous)" };
@@ -45,7 +52,7 @@ fn main() {
             "  {:24} per-timestep band accuracy: {:.1}%  (cores: {})",
             label,
             acc * 100.0,
-            d.compiled.used_cores
+            session.info().used_cores
         );
     }
     println!("(Fig 15a: the adaptive-threshold hidden layer makes ECG bands easier to identify.)");

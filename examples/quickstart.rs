@@ -1,13 +1,12 @@
-//! Quickstart: define a tiny SNN, compile it through the full stack
-//! (fusion → partition → placement → codegen), deploy it on the
-//! behavioral chip, and watch spikes flow.
+//! Quickstart: define a tiny SNN, compile and deploy it through the
+//! `api::Taibai` builder (fusion → partition → placement → codegen),
+//! and watch spikes flow through the resulting `Session`.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use taibai::compiler::{self, Options};
-use taibai::coordinator::Deployment;
+use taibai::api::{Sample, Taibai};
 use taibai::datasets::SpikeSample;
 use taibai::energy::EnergyModel;
 use taibai::model::{Layer, NetDef, NeuronModel};
@@ -32,24 +31,27 @@ fn main() {
     let mut rng = taibai::util::Rng::new(1);
     let w1: Vec<f32> = (0..8 * 16).map(|_| rng.f32() * 0.8).collect();
     let w2: Vec<f32> = (0..16 * 4).map(|_| rng.f32() * 0.5).collect();
-    let weights = vec![vec![], w1, w2];
 
-    // 3. Compile: the full Fig 12 pipeline.
-    let report = compiler::compile(&net, &weights, &Options::default())
+    // 3. Build a session: one call compiles the full Fig 12 pipeline
+    //    and deploys the image on the behavioral chip.
+    let mut session = Taibai::new(net)
+        .weights(vec![vec![], w1, w2])
+        .build()
         .expect("compile");
     println!(
         "compiled {:?}: {} cores, avg hop distance {:.2}",
-        net.name, report.compiled.used_cores, report.avg_hops
+        session.net().name,
+        session.info().used_cores,
+        session.info().avg_hops
     );
 
-    // 4. Deploy and run a burst-coded sample.
-    let mut chip = Deployment::new(report.compiled);
+    // 4. Run a burst-coded sample.
     let mut spikes = vec![vec![]; 12];
     for t in 0..6 {
         spikes[t] = vec![0u16, 1, 2, 3]; // channels 0-3 active early
     }
-    let run = chip
-        .run_spikes(&SpikeSample { spikes, labels: vec![0] })
+    let run = session
+        .run(&Sample::Spikes(SpikeSample { spikes, labels: vec![0] }))
         .expect("run");
 
     println!("hidden spikes fired : {}", run.spikes);
@@ -58,7 +60,7 @@ fn main() {
 
     // 5. Energy accounting (Table IV's pJ/SOP metric on this workload).
     let em = EnergyModel::default();
-    let a = chip.chip.activity();
+    let a = session.activity();
     println!(
         "synaptic ops: {}   energy: {:.2} nJ   pJ/SOP: {:.2}",
         a.nc.sops,

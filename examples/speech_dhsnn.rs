@@ -2,24 +2,30 @@
 //! §V-B.3 application 2. A single DH-LIF neuron has 4 dendrites × 700
 //! inputs = 2800 fan-ins, over the chip's 2048 limit, so the deployment
 //! exercises the §IV-B fan-in expansion (branch banks inside one NC).
+//! This example also shows `Session::run_batch`: the utterances are
+//! independent, so they fan out over std-thread deployment clones.
 //!
 //! ```sh
 //! cargo run --release --example speech_dhsnn -- --samples 20
 //! ```
 
-use taibai::apps;
+use taibai::api::workloads::Shd;
+use taibai::api::{Backend, Workload};
 use taibai::datasets::shd;
-use taibai::metrics::{accuracy, argmax};
+use taibai::metrics::accuracy;
 use taibai::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
-    let per_class = (args.usize("samples", 20) / shd::CLASSES).max(1);
+    let samples = args.usize("samples", 20);
     let seed = args.u64("seed", 42);
 
-    let data = shd::dataset(per_class, seed);
-    let rate =
-        data.iter().map(|s| s.rate(shd::CHANNELS)).sum::<f64>() / data.len() as f64;
+    let data = Shd { dendrites: true }.dataset(samples, seed);
+    let rate = data
+        .iter()
+        .map(|s| s.input_rate(shd::CHANNELS))
+        .sum::<f64>()
+        / data.len() as f64;
     println!(
         "SHD: {} utterances, {} channels, input spike rate {:.2}% (paper: 1.2%)",
         data.len(),
@@ -28,14 +34,18 @@ fn main() {
     );
 
     for dendrites in [true, false] {
-        let mut d = apps::deploy_shd(dendrites, seed);
+        let workload = Shd { dendrites };
+        let mut session = workload
+            .session(Backend::Detailed, seed)
+            .expect("compile");
+        // independent utterances: run the whole batch in parallel
+        // (the dataset above is identical for both ablation arms)
+        let runs = session.run_batch(&data).expect("chip run");
         let mut pairs = Vec::new();
         let mut hidden_spikes = 0u64;
-        for s in &data {
-            d.reset_state();
-            let run = d.run_spikes(s).expect("chip run");
+        for (run, s) in runs.iter().zip(&data) {
             hidden_spikes += run.spikes;
-            pairs.push((argmax(&run.summed()), s.labels[0]));
+            pairs.extend(workload.decode(run, s));
         }
         let acc = accuracy(&pairs);
         let label = if dendrites { "DH-LIF (4 dendrites)" } else { "LIF (no dendrites)" };
@@ -44,7 +54,7 @@ fn main() {
             label,
             acc * 100.0,
             hidden_spikes as f64 / (data.len() * shd::TIMESTEPS * 64) as f64 * 100.0,
-            d.compiled.used_cores
+            session.info().used_cores
         );
     }
 }

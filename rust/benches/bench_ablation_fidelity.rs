@@ -1,12 +1,10 @@
 //! Fidelity ablation (DESIGN.md §fidelity modes): the fast analytic
-//! model vs the detailed ISA-level engine on a small net — SOP counts
-//! must agree closely; energy within a documented band.
+//! backend vs the detailed ISA-level engine on a small net — SOP counts
+//! must agree closely; energy within a documented band. Both engines run
+//! behind the same `api::Session` surface, on the *same* input sample.
 
+use taibai::api::{Backend, Sample, Taibai};
 use taibai::bench::Table;
-use taibai::chip::fast::{simulate, FastParams};
-use taibai::compiler::{self, Options};
-use taibai::coordinator::Deployment;
-use taibai::datasets::SpikeSample;
 use taibai::energy::EnergyModel;
 use taibai::model::{Layer, NetDef, NeuronModel};
 use taibai::util::Rng;
@@ -27,39 +25,38 @@ fn main() {
     });
     let w1: Vec<f32> = (0..32 * 64).map(|_| rng.f32() * 0.1).collect();
 
+    // one sample drives both engines
+    let sample = Sample::poisson(32, t_steps, rate, 11);
+    let measured = sample.input_rate(32);
+
     // detailed run
-    let r = compiler::compile(&net, &vec![vec![], w1], &Options::default()).unwrap();
-    let mut d = Deployment::new(r.compiled);
-    let mut spikes = Vec::new();
-    let mut input_events = 0u64;
-    for _ in 0..t_steps {
-        let mut at = Vec::new();
-        for ch in 0..32u16 {
-            if rng.chance(rate) {
-                at.push(ch);
-                input_events += 1;
-            }
-        }
-        spikes.push(at);
-    }
-    d.run_spikes(&SpikeSample { spikes, labels: vec![0] }).unwrap();
-    let da = d.chip.activity();
+    let mut detailed = Taibai::new(net.clone())
+        .weights(vec![vec![], w1])
+        .build()
+        .expect("compile");
+    detailed.run(&sample).expect("detailed run");
+    let da = detailed.activity();
     let detailed_sops = da.nc.sops;
     let detailed_energy = em.energy(&da).dynamic_j();
 
-    // fast-mode prediction with the *measured* input rate
-    let measured_rate = input_events as f64 / (32 * t_steps) as f64;
-    let mut p = FastParams::default();
-    p.firing_rates = vec![measured_rate, 0.0];
-    let f = simulate(&net, &p, &em);
+    // analytic prediction at the measured input rate, silent hidden
+    let mut fast = Taibai::new(net)
+        .backend(Backend::Analytic)
+        .rates(vec![measured, 0.0])
+        .build()
+        .expect("analytic deploy");
+    fast.run(&sample).expect("analytic run");
+    let fa = fast.activity();
+    let fast_sops = fa.nc.sops;
 
-    // compare dynamic energies (fast's energy_per_sample_j additionally
-    // includes static leakage over the estimated wall time, which has no
-    // detailed-mode counterpart on an idle-dominated micro-workload)
-    let fast_dynamic = em.energy(&f.activity).dynamic_j();
+    // compare dynamic energies (the analytic energy_per_sample_j
+    // additionally includes static leakage over the estimated wall
+    // time, which has no detailed-mode counterpart on an
+    // idle-dominated micro-workload)
+    let fast_dynamic = em.energy(&fa).dynamic_j();
     let mut t = Table::new(&["metric", "detailed", "fast", "error"]);
     let rows: [(&str, f64, f64); 2] = [
-        ("SOPs/sample", detailed_sops as f64, f.sops_per_sample as f64),
+        ("SOPs/sample", detailed_sops as f64, fast_sops as f64),
         ("dynamic energy (nJ)", detailed_energy * 1e9, fast_dynamic * 1e9),
     ];
     for (name, dv, fv) in rows {
@@ -73,8 +70,8 @@ fn main() {
     }
     t.print();
 
-    let sop_err = (f.sops_per_sample as f64 - detailed_sops as f64).abs()
-        / detailed_sops as f64;
+    let sop_err =
+        (fast_sops as f64 - detailed_sops as f64).abs() / detailed_sops as f64;
     println!("\nSOP agreement: {:.2}% error (target < 5%)", sop_err * 100.0);
     assert!(sop_err < 0.05, "fast mode SOP count diverged: {sop_err}");
     // energy: FIRE-stage costs are estimated, not interpreted — allow a

@@ -1,20 +1,20 @@
 //! Fig 13c — power breakdown of TaiBai under a representative workload
 //! (paper: memory 70.3 % dominates).
 
-use taibai::apps;
+use taibai::api::workloads::Shd;
+use taibai::api::{Backend, Workload};
 use taibai::bench::Table;
-use taibai::datasets::shd;
 use taibai::energy::EnergyModel;
 
 fn main() {
     // representative workload: the SHD app (mixed sparse + FC traffic)
-    let mut d = apps::deploy_shd(true, 42);
-    for s in shd::dataset(1, 7).iter().take(6) {
-        d.reset_state();
-        d.run_spikes(s).expect("run");
+    let workload = Shd { dendrites: true };
+    let mut session = workload.session(Backend::Detailed, 42).expect("compile");
+    for s in workload.dataset(6, 7).iter().take(6) {
+        session.run(s).expect("run");
     }
     let em = EnergyModel::default();
-    let e = em.energy(&d.chip.activity());
+    let e = em.energy(&session.activity());
 
     let mut t = Table::new(&["component", "share", "bar"]);
     for (name, frac) in e.shares() {

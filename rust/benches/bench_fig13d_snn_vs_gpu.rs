@@ -1,66 +1,86 @@
-//! Fig 13d — the three Table II SNN benchmarks on TaiBai (fast analytic
-//! mode; these nets are 10⁵–10⁶ neurons) vs the GPU-baseline model.
+//! Fig 13d — the three Table II SNN benchmarks on TaiBai (analytic
+//! backend; these nets are 10⁵–10⁶ neurons) vs the GPU-baseline model.
 //! Paper: comparable accuracy, power ÷65–338, efficiency ×6–20; the
 //! 13 %-firing-rate nets lose efficiency relative to the 8 % one, and
 //! the multi-chip nets (PLIF, ResNet19) lose throughput to inter-chip
 //! packets.
 
+use taibai::api::{Backend, Sample, Taibai};
 use taibai::bench::{f2, si, Table};
-use taibai::chip::fast::{simulate, FastParams};
 use taibai::energy::gpu::GpuModel;
-use taibai::energy::EnergyModel;
-use taibai::model;
+use taibai::model::{self, Layer};
+
+fn input_channels(net: &model::NetDef) -> usize {
+    match net.layers.first() {
+        Some(Layer::Input { size }) => *size,
+        _ => 0,
+    }
+}
 
 fn main() {
-    let em = EnergyModel::default();
     let gpu = GpuModel::default();
     let mut t = Table::new(&[
         "net", "rate", "chips", "TaiBai W", "GPU W", "power ratio",
         "TaiBai fps/W", "GPU fps/W", "eff ratio",
     ]);
 
-    // paper §V-C.1: first model 8% firing rate, latter two 13%
-    for (net, rate) in [
-        (model::plif_net(), 0.08),
-        (model::blocks5_net(), 0.13),
-        (model::resnet19(), 0.13),
+    // paper §V-C.1: first model 8% firing rate, latter two 13%;
+    // the footer quotes SOP totals for the two nets the paper names
+    let mut sop_notes: Vec<String> = Vec::new();
+    for (net, rate, note_sops) in [
+        (model::plif_net(), 0.08, true),
+        (model::blocks5_net(), 0.13, false),
+        (model::resnet19(), 0.13, true),
     ] {
-        let mut p = FastParams::default();
-        p.default_rate = rate;
-        let r = simulate(&net, &p, &em);
+        let channels = input_channels(&net);
+        let timesteps = net.timesteps;
+        let name = net.name.clone();
+        let connections = net.total_connections();
+        let neurons = net.total_neurons() as u64;
+        let layers = net.layers.len() as u64;
 
-        let flops = GpuModel::snn_step_flops(
-            net.total_connections(),
-            net.total_neurons() as u64,
-        ) * net.timesteps as f64;
+        let mut session = Taibai::new(net)
+            .backend(Backend::Analytic)
+            .rates(vec![rate]) // pin the input rate exactly
+            .default_rate(rate)
+            .build()
+            .expect("analytic deploy");
+        session
+            .run(&Sample::poisson(channels, timesteps, rate, 42))
+            .expect("analytic run");
+        let m = session.metrics();
+
+        let flops = GpuModel::snn_step_flops(connections, neurons) * timesteps as f64;
         // the GPU baseline batches 64 samples to amortize kernel
         // launches (the paper's pynvml measurements ran batched)
         let batch = 64.0;
-        let launches = (net.layers.len() as u64) * 3 * net.timesteps as u64;
+        let launches = layers * 3 * timesteps as u64;
         let g = gpu.estimate(flops * batch, launches);
         let gpu_fps = batch / g.time_s;
         let gpu_eff = gpu_fps / g.power_w;
 
         t.row(&[
-            net.name.clone(),
+            name.clone(),
             format!("{:.0}%", rate * 100.0),
-            format!("{}", r.chips),
-            f2(r.power_w),
+            format!("{}", m.chips),
+            f2(m.power_w),
             f2(g.power_w),
-            format!("{:.0}x", g.power_w / r.power_w),
-            f2(r.fps_per_w),
+            format!("{:.0}x", g.power_w / m.power_w),
+            f2(m.fps_per_w),
             format!("{:.3}", gpu_eff),
-            format!("{:.1}x", r.fps_per_w / gpu_eff),
+            format!("{:.1}x", m.fps_per_w / gpu_eff),
         ]);
         // shape assertions (who wins, roughly by how much)
-        assert!(g.power_w / r.power_w > 10.0, "{}: power win lost", net.name);
-        assert!(r.fps_per_w > gpu_eff, "{}: efficiency win lost", net.name);
+        assert!(g.power_w / m.power_w > 10.0, "{name}: power win lost");
+        assert!(m.fps_per_w > gpu_eff, "{name}: efficiency win lost");
+        if note_sops {
+            sop_notes.push(format!("{name}={}", si(m.sops as f64)));
+        }
     }
     t.print();
     println!(
         "\n(paper Fig 13d: power reduced 65–338x, efficiency improved 6–20x; \
-         SOP totals: plif={}, resnet19={})",
-        si(simulate(&model::plif_net(), &FastParams::default(), &em).sops_per_sample as f64),
-        si(simulate(&model::resnet19(), &FastParams::default(), &em).sops_per_sample as f64),
+         SOP totals: {})",
+        sop_notes.join(", ")
     );
 }

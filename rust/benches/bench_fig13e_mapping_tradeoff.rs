@@ -2,18 +2,18 @@
 //! placement objective from minimize-cores to maximize-throughput on one
 //! SNN. Paper: cores 182 → 749 (×4) while energy efficiency drops
 //! 6190 → 3590 FPS/W (÷1.7). `--ablate` also compares zigzag-only vs
-//! +greedy/SA placement.
+//! +greedy/SA placement. The per-point report runs through an analytic
+//! `api::Session` parameterized with the placement-derived hop count.
 
+use taibai::api::{Backend, Sample, Taibai};
 use taibai::bench::Table;
-use taibai::chip::fast::{simulate, FastParams};
+use taibai::chip::fast::FastParams;
 use taibai::compiler::{partition, placement};
-use taibai::energy::EnergyModel;
 use taibai::model;
 use taibai::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
-    let em = EnergyModel::default();
     let net = model::blocks5_net(); // one mid-size SNN, like the paper
     let rates = vec![0.13; net.layers.len()];
 
@@ -28,31 +28,40 @@ fn main() {
         let cores = part.num_cores();
         // placement quality feeds avg_hops into the analytic model
         let cap = taibai::noc::NUM_CCS * taibai::topology::NCS_PER_CC;
-        let (hops, _cost) = if cores <= cap {
+        let hops = if cores <= cap {
             let init = placement::initial(cores);
             let opt = placement::optimize(&traffic, init, 3000, 42);
-            (placement::avg_hops(&traffic, &opt), placement::cost(&traffic, &opt))
+            placement::avg_hops(&traffic, &opt)
         } else {
-            (4.0, 0.0) // multi-chip: pessimistic constant
+            4.0 // multi-chip: pessimistic constant
         };
 
         let mut p = FastParams::default();
+        p.firing_rates = rates.clone();
         p.default_rate = 0.13;
         p.nc_neuron_capacity = npn;
         p.avg_hops = hops.max(0.5);
-        let r = simulate(&net, &p, &em);
+        let mut session = Taibai::new(net.clone())
+            .backend(Backend::Analytic)
+            .fast_params(p)
+            .build()
+            .expect("analytic deploy");
+        session
+            .run(&Sample::poisson(0, net.timesteps, 0.0, 1))
+            .expect("analytic run");
+        let m = session.metrics();
 
         t.row(&[
             format!("{npn}"),
-            format!("{}", r.used_cores),
-            format!("{:.1}", r.fps),
-            format!("{:.1}", r.fps_per_w),
+            format!("{}", m.used_cores),
+            format!("{:.1}", m.fps),
+            format!("{:.1}", m.fps_per_w),
             format!("{hops:.2}"),
         ]);
         if first.is_none() {
-            first = Some((r.used_cores, r.fps_per_w));
+            first = Some((m.used_cores, m.fps_per_w));
         }
-        last = Some((r.used_cores, r.fps_per_w));
+        last = Some((m.used_cores, m.fps_per_w));
     }
     t.print();
 

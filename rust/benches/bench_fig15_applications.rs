@@ -1,18 +1,27 @@
 //! Fig 15 — the three applications on the detailed engine: (a) accuracy
 //! incl. the homogeneous ablations, (b) power, (c) energy efficiency
 //! (FPS/W) vs the GPU baseline. Paper: power ≈0.34 W avg (~200× below
-//! GPU), efficiency 296–855× GPU.
+//! GPU), efficiency 296–855× GPU. Everything runs through one
+//! `api::Session` per workload.
 
-use taibai::apps;
+use taibai::api::workloads::{Bci, Ecg, Shd};
+use taibai::api::{evaluate, Backend, Workload, WorkloadReport};
 use taibai::bench::Table;
 
 fn main() {
     let seed = 42;
-    let reports = [
-        apps::run_ecg_demo(2, seed),
-        apps::run_shd_demo(20, seed),
-        apps::run_bci_demo(8, seed),
+    let apps: Vec<(Box<dyn Workload>, usize)> = vec![
+        (Box::new(Ecg { heterogeneous: true }), 2),
+        (Box::new(Shd { dendrites: true }), 20),
+        (Box::new(Bci::default()), 8),
     ];
+    let reports: Vec<WorkloadReport> = apps
+        .iter()
+        .map(|(w, n)| {
+            let mut session = w.session(Backend::Detailed, seed).expect("compile");
+            evaluate(w.as_ref(), &mut session, *n, seed).expect("run")
+        })
+        .collect();
 
     let mut t = Table::new(&[
         "application", "accuracy", "cores", "TaiBai W", "GPU W",
@@ -49,13 +58,25 @@ fn main() {
 
     // ablations (Fig 15's TaiBai-homogeneous bars): heterogeneity on vs off
     println!("\n[ablation] heterogeneous vs homogeneous deployments compile to:");
-    for (name, d_het, d_hom) in [
-        ("ECG", apps::deploy_ecg(true, seed), apps::deploy_ecg(false, seed)),
-        ("SHD", apps::deploy_shd(true, seed), apps::deploy_shd(false, seed)),
-    ] {
+    let pairs: [(&str, Box<dyn Workload>, Box<dyn Workload>); 2] = [
+        (
+            "ECG",
+            Box::new(Ecg { heterogeneous: true }),
+            Box::new(Ecg { heterogeneous: false }),
+        ),
+        (
+            "SHD",
+            Box::new(Shd { dendrites: true }),
+            Box::new(Shd { dendrites: false }),
+        ),
+    ];
+    for (name, het, hom) in pairs {
+        let s_het = het.session(Backend::Detailed, seed).expect("compile");
+        let s_hom = hom.session(Backend::Detailed, seed).expect("compile");
         println!(
             "  {name}: het {} cores / hom {} cores (same topology, different neuron programs)",
-            d_het.compiled.used_cores, d_hom.compiled.used_cores
+            s_het.info().used_cores,
+            s_hom.info().used_cores
         );
     }
 }

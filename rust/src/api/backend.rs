@@ -1,0 +1,288 @@
+//! The two execution engines behind one trait.
+//!
+//! [`DetailedBackend`] wraps the event-detailed [`crate::chip::Chip`]
+//! via [`Deployment`]; [`AnalyticBackend`] wraps
+//! [`crate::chip::fast::simulate`]. Both surface the same
+//! [`ChipActivity`] counters, so one [`crate::energy::EnergyModel`]
+//! prices either — that invariant is what the fast-vs-detailed parity
+//! tests pin down.
+
+use crate::chip::fast::{simulate, FastParams, FastReport};
+use crate::chip::ChipActivity;
+use crate::compiler::Compiled;
+use crate::coordinator::{Deployment, SampleRun};
+use crate::energy::{EnergyModel, CLOCK_HZ};
+use crate::model::{Layer, NetDef};
+
+use super::{Backend, RunError, Sample, SessionMetrics};
+
+/// One execution engine under a [`super::Session`]. Implementations
+/// must be cheap to [`fork`](ExecBackend::fork) so `run_batch` can
+/// parallelize across deployment clones.
+pub trait ExecBackend: Send {
+    /// Execute one sample with the dynamic state as-is
+    /// ([`super::Session::run`] resets first).
+    fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError>;
+
+    /// Zero dynamic state (membranes, currents, accumulators); weights
+    /// and programs survive.
+    fn reset(&mut self);
+
+    /// Inject output errors and trigger one on-chip learning sweep.
+    fn learn_step(&mut self, errors: &[f32]) -> Result<(), RunError>;
+
+    /// Activity accumulated since deployment.
+    fn activity(&self) -> ChipActivity;
+
+    /// A fresh backend from the same deployed image (initial weights —
+    /// `learn_step` updates do not carry over).
+    fn fork(&self) -> Result<Box<dyn ExecBackend>, RunError>;
+
+    /// Performance metrics over activity `a` spanning `samples` runs.
+    fn metrics(&self, a: &ChipActivity, samples: u64) -> SessionMetrics;
+
+    fn kind(&self) -> Backend;
+}
+
+// ---------------------------------------------------------------------
+// Detailed: the ISA-interpreting behavioral chip.
+// ---------------------------------------------------------------------
+
+/// [`ExecBackend`] over the event-detailed engine.
+pub struct DetailedBackend {
+    dep: Deployment,
+    em: EnergyModel,
+    /// SNN timesteps per sample (per-timestep stage-transition overhead
+    /// feeds the throughput estimate).
+    timesteps: usize,
+}
+
+impl DetailedBackend {
+    pub fn new(compiled: Compiled, em: EnergyModel, timesteps: usize) -> DetailedBackend {
+        DetailedBackend {
+            dep: Deployment::new(compiled),
+            em,
+            timesteps,
+        }
+    }
+
+    /// The wrapped deployment (host monitoring paths: `peek_weights`,
+    /// raw chip access).
+    pub fn deployment(&self) -> &Deployment {
+        &self.dep
+    }
+}
+
+impl ExecBackend for DetailedBackend {
+    fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
+        match sample {
+            Sample::Spikes(s) => self.dep.run_spikes(s).map_err(RunError::Trap),
+            Sample::Dense(d) => self.dep.run_values(d).map_err(RunError::Trap),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.dep.reset_state();
+    }
+
+    fn learn_step(&mut self, errors: &[f32]) -> Result<(), RunError> {
+        let expected = self.dep.compiled.error_map.len();
+        if expected == 0 {
+            return Err(RunError::Unsupported(
+                "the session was built with learning disabled",
+            ));
+        }
+        if errors.len() != expected {
+            return Err(RunError::ErrorVector {
+                expected,
+                got: errors.len(),
+            });
+        }
+        self.dep.learn_step(errors).map_err(RunError::Trap)
+    }
+
+    fn activity(&self) -> ChipActivity {
+        self.dep.chip.activity()
+    }
+
+    fn fork(&self) -> Result<Box<dyn ExecBackend>, RunError> {
+        Ok(Box::new(DetailedBackend::new(
+            self.dep.compiled.clone(),
+            self.em,
+            self.timesteps,
+        )))
+    }
+
+    fn metrics(&self, a: &ChipActivity, samples: u64) -> SessionMetrics {
+        let used = self.dep.compiled.used_cores.max(1);
+        let samples = samples.max(1);
+        // bottleneck-core cycles per sample: busy cycles spread over
+        // cores, plus a per-timestep stage-transition overhead
+        let busy = a.nc.cycles as f64 / used as f64;
+        let cycles_per_sample =
+            (busy / samples as f64 + (self.timesteps * 24) as f64).max(1.0);
+        let fps = CLOCK_HZ / cycles_per_sample;
+        let cycles_total = ((cycles_per_sample * samples as f64) as u64).max(1);
+        let power = self.em.power_w(a, cycles_total);
+        SessionMetrics {
+            samples,
+            used_cores: used,
+            chips: 1,
+            fps,
+            power_w: power,
+            fps_per_w: if power > 0.0 { fps / power } else { 0.0 },
+            energy_per_sample_j: power * cycles_per_sample / CLOCK_HZ,
+            pj_per_sop: self.em.pj_per_sop(a),
+            spikes_per_sample: a.nc.spikes_out as f64 / samples as f64,
+            sops: a.nc.sops,
+        }
+    }
+
+    fn kind(&self) -> Backend {
+        Backend::Detailed
+    }
+}
+
+// ---------------------------------------------------------------------
+// Analytic: shape/rate-driven activity counting.
+// ---------------------------------------------------------------------
+
+/// [`ExecBackend`] over the fast analytic engine.
+pub struct AnalyticBackend {
+    net: NetDef,
+    params: FastParams,
+    em: EnergyModel,
+    acc: ChipActivity,
+    last: Option<FastReport>,
+}
+
+impl AnalyticBackend {
+    pub fn new(net: NetDef, params: FastParams, em: EnergyModel) -> AnalyticBackend {
+        AnalyticBackend {
+            net,
+            params,
+            em,
+            acc: ChipActivity::default(),
+            last: None,
+        }
+    }
+
+    fn input_channels(&self) -> usize {
+        match self.net.layers.first() {
+            Some(Layer::Input { size }) => *size,
+            _ => 0,
+        }
+    }
+}
+
+impl ExecBackend for AnalyticBackend {
+    fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
+        let mut p = self.params.clone();
+        if p.firing_rates.is_empty() {
+            // no configured rates: measure the input rate off the sample
+            p.firing_rates = vec![sample.input_rate(self.input_channels())];
+        }
+        let mut net = self.net.clone();
+        net.timesteps = sample.timesteps().max(1);
+        let r = simulate(&net, &p, &self.em);
+        super::add_activity(&mut self.acc, &r.activity);
+        let run = SampleRun {
+            // analytic mode has no per-neuron readout; metrics only
+            outputs: Vec::new(),
+            spikes: r.activity.nc.spikes_out,
+            packets: r.activity.packets,
+        };
+        self.last = Some(r);
+        Ok(run)
+    }
+
+    fn reset(&mut self) {}
+
+    fn learn_step(&mut self, _errors: &[f32]) -> Result<(), RunError> {
+        Err(RunError::Unsupported(
+            "on-chip learning needs the detailed backend",
+        ))
+    }
+
+    fn activity(&self) -> ChipActivity {
+        self.acc
+    }
+
+    fn fork(&self) -> Result<Box<dyn ExecBackend>, RunError> {
+        Ok(Box::new(AnalyticBackend::new(
+            self.net.clone(),
+            self.params.clone(),
+            self.em,
+        )))
+    }
+
+    fn metrics(&self, a: &ChipActivity, samples: u64) -> SessionMetrics {
+        let samples = samples.max(1);
+        // per-sample figures come from the most recent analytic report
+        // (or a probe at configured rates before any run)
+        let r = match &self.last {
+            Some(r) => r.clone(),
+            None => simulate(&self.net, &self.params, &self.em),
+        };
+        SessionMetrics {
+            samples,
+            used_cores: r.used_cores,
+            chips: r.chips,
+            fps: r.fps,
+            power_w: r.power_w,
+            fps_per_w: r.fps_per_w,
+            energy_per_sample_j: r.energy_per_sample_j,
+            pj_per_sop: self.em.pj_per_sop(a),
+            spikes_per_sample: a.nc.spikes_out as f64 / samples as f64,
+            sops: a.nc.sops,
+        }
+    }
+
+    fn kind(&self) -> Backend {
+        Backend::Analytic
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model;
+
+    #[test]
+    fn analytic_fork_starts_clean() {
+        let mut be = AnalyticBackend::new(
+            model::srnn_ecg(true),
+            FastParams::default(),
+            EnergyModel::default(),
+        );
+        let s = Sample::poisson(4, 20, 0.3, 1);
+        be.run(&s).unwrap();
+        assert!(be.activity().nc.sops > 0);
+        let fork = be.fork().unwrap();
+        assert_eq!(fork.activity().nc.sops, 0, "forks must not inherit activity");
+        assert_eq!(fork.kind(), Backend::Analytic);
+    }
+
+    #[test]
+    fn analytic_respects_configured_rates() {
+        // configured layer-0 rate wins over the measured sample rate
+        let net = model::dhsnn_shd(false);
+        let mut p = FastParams::default();
+        p.firing_rates = vec![0.5, 0.0, 0.0];
+        let mut hi = AnalyticBackend::new(net.clone(), p, EnergyModel::default());
+        let mut lo = AnalyticBackend::new(
+            net,
+            FastParams::default(),
+            EnergyModel::default(),
+        );
+        let quiet = Sample::poisson(700, 10, 0.01, 2);
+        hi.run(&quiet).unwrap();
+        lo.run(&quiet).unwrap();
+        assert!(
+            hi.activity().nc.sops > lo.activity().nc.sops * 5,
+            "configured 50% rate must dwarf the measured 1%: {} vs {}",
+            hi.activity().nc.sops,
+            lo.activity().nc.sops
+        );
+    }
+}

@@ -1,0 +1,661 @@
+//! The one way to run anything on TaiBai: a builder-based
+//! compile → deploy → run pipeline.
+//!
+//! The paper's pitch is *programmability* — one chip, one compiler
+//! stack, many workloads (§V-B.3: speech, ECG, BCI, brain simulation).
+//! This module is the crate-level expression of that: every workload is
+//! a [`crate::model::NetDef`] plus weights, every execution engine is an
+//! [`ExecBackend`], and a [`Session`] ties one deployment of the former
+//! to one instance of the latter behind a uniform
+//! `run` / `run_batch` / `learn_step` / `metrics` surface.
+//!
+//! ```no_run
+//! use taibai::api::{Backend, Sample, Taibai};
+//! use taibai::compiler::Objective;
+//! use taibai::model;
+//!
+//! let mut session = Taibai::new(model::srnn_ecg(true))
+//!     .weights(taibai::api::workloads::ecg_weights(true, 42))
+//!     .rates(vec![0.33, 0.2, 0.1])
+//!     .objective(Objective::MinCores)
+//!     .backend(Backend::Detailed)
+//!     .build()
+//!     .expect("compile");
+//! let sample = Sample::poisson(4, 64, 0.3, 7);
+//! let run = session.run(&sample).expect("run");
+//! println!("{} spikes, {:?}", run.spikes, session.metrics());
+//! ```
+//!
+//! The same builder with `.backend(Backend::Analytic)` yields a session
+//! whose `run` computes the identical activity counters analytically
+//! (for the 10⁵-neuron Table II nets the detailed engine cannot
+//! interpret event-by-event), feeding the same [`EnergyModel`].
+
+pub mod backend;
+pub mod workloads;
+
+use crate::chip::fast::{simulate, FastParams};
+use crate::chip::ChipActivity;
+use crate::compiler::{self, Options};
+use crate::datasets::{DenseSample, SpikeSample};
+use crate::energy::EnergyModel;
+use crate::model::NetDef;
+use crate::nc::Trap;
+use crate::util::Rng;
+
+pub use crate::compiler::{CompileError, Objective};
+pub use crate::coordinator::SampleRun;
+pub use backend::{AnalyticBackend, DetailedBackend, ExecBackend};
+pub use workloads::{evaluate, Workload, WorkloadReport};
+
+/// Which execution engine a [`Session`] drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The cycle/event-detailed engine: real ISA programs interpreted
+    /// per event on the behavioral [`crate::chip::Chip`].
+    Detailed,
+    /// The fast analytic engine ([`crate::chip::fast`]): activity
+    /// counters computed from shapes, rates, and placement geometry.
+    Analytic,
+}
+
+impl Backend {
+    /// Parse a CLI-style backend name.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "detailed" | "chip" => Some(Backend::Detailed),
+            "analytic" | "fast" => Some(Backend::Analytic),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Detailed => write!(f, "detailed"),
+            Backend::Analytic => write!(f, "analytic"),
+        }
+    }
+}
+
+/// One input sample, spike-coded or dense-valued — the union of the two
+/// host injection modes of §III-B.
+#[derive(Clone, Debug)]
+pub enum Sample {
+    /// Spike trains (ECG / SHD style): per timestep, the active channels.
+    Spikes(SpikeSample),
+    /// Dense FP values (BCI binned rates): `[timesteps][channels]`.
+    Dense(DenseSample),
+}
+
+impl Sample {
+    pub fn timesteps(&self) -> usize {
+        match self {
+            Sample::Spikes(s) => s.spikes.len(),
+            Sample::Dense(d) => d.values.len(),
+        }
+    }
+
+    /// The sample's (first) label.
+    pub fn label(&self) -> usize {
+        match self {
+            Sample::Spikes(s) => s.labels.first().copied().unwrap_or(0),
+            Sample::Dense(d) => d.label,
+        }
+    }
+
+    /// Mean fraction of input channels active per timestep — the
+    /// measured layer-0 firing rate the analytic backend uses when no
+    /// explicit rate is configured.
+    pub fn input_rate(&self, channels: usize) -> f64 {
+        let t = self.timesteps();
+        if t == 0 || channels == 0 {
+            return 0.0;
+        }
+        let active: usize = match self {
+            Sample::Spikes(s) => s.spikes.iter().map(|v| v.len()).sum(),
+            Sample::Dense(d) => d
+                .values
+                .iter()
+                .map(|row| row.iter().filter(|&&v| v != 0.0).count())
+                .sum(),
+        };
+        active as f64 / (t * channels) as f64
+    }
+
+    /// A synthetic Bernoulli spike train: every channel fires with
+    /// probability `rate` each timestep. Handy for driving a net that
+    /// has no natural dataset (benchmark nets, brain simulation drive).
+    pub fn poisson(channels: usize, timesteps: usize, rate: f64, seed: u64) -> Sample {
+        let mut rng = Rng::new(seed);
+        let mut spikes = Vec::with_capacity(timesteps);
+        for _ in 0..timesteps {
+            let mut at = Vec::new();
+            for ch in 0..channels {
+                if rng.chance(rate) {
+                    at.push(ch as u16);
+                }
+            }
+            spikes.push(at);
+        }
+        Sample::Spikes(SpikeSample {
+            spikes,
+            labels: vec![0],
+        })
+    }
+}
+
+impl From<SpikeSample> for Sample {
+    fn from(s: SpikeSample) -> Sample {
+        Sample::Spikes(s)
+    }
+}
+
+impl From<DenseSample> for Sample {
+    fn from(d: DenseSample) -> Sample {
+        Sample::Dense(d)
+    }
+}
+
+/// Everything that can go wrong while *running* a deployed session
+/// (compile-time failures are [`CompileError`]s from `build()`).
+#[derive(Clone, Debug)]
+pub enum RunError {
+    /// The chip engine trapped (bad program/config — a simulator fault).
+    Trap(Trap),
+    /// The operation is not available on this backend / configuration.
+    Unsupported(&'static str),
+    /// `learn_step` got the wrong number of output errors.
+    ErrorVector { expected: usize, got: usize },
+    /// A `run_batch` worker thread died.
+    Thread(String),
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunError::Trap(t) => write!(f, "{t}"),
+            RunError::Unsupported(what) => write!(f, "unsupported: {what}"),
+            RunError::ErrorVector { expected, got } => write!(
+                f,
+                "learn_step expects {expected} output errors, got {got}"
+            ),
+            RunError::Thread(msg) => write!(f, "run_batch worker failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RunError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RunError::Trap(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+impl From<Trap> for RunError {
+    fn from(t: Trap) -> RunError {
+        RunError::Trap(t)
+    }
+}
+
+/// Static facts about a deployment, fixed at `build()` time.
+#[derive(Clone, Debug)]
+pub struct DeployInfo {
+    pub backend: Backend,
+    /// NCs occupied by the deployment (Fig 13e's core-count axis).
+    pub used_cores: usize,
+    pub chips: usize,
+    /// Cores saved by the resource optimizer (merging).
+    pub cores_saved: usize,
+    /// Mean traffic-weighted hop distance after placement.
+    pub avg_hops: f64,
+    pub placement_cost: f64,
+    /// INIT-stage configuration traffic in packets (detailed backend).
+    pub init_packets: u64,
+}
+
+/// Throughput / power / efficiency of everything a session has run —
+/// the Fig 13d / Fig 15 metric set, computed identically on both
+/// backends from the shared [`ChipActivity`] counters.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionMetrics {
+    /// Samples executed (via `run` + `run_batch`).
+    pub samples: u64,
+    pub used_cores: usize,
+    pub chips: usize,
+    pub fps: f64,
+    pub power_w: f64,
+    /// FPS per watt — the paper's energy-efficiency metric.
+    pub fps_per_w: f64,
+    pub energy_per_sample_j: f64,
+    pub pj_per_sop: f64,
+    pub spikes_per_sample: f64,
+    pub sops: u64,
+}
+
+/// Builder for a [`Session`]: collect the network, weights, compiler
+/// options, and backend choice, then `build()` once.
+///
+/// Defaults: `Backend::Detailed`, `Objective::MinCores`, learning off,
+/// default [`EnergyModel`] and [`FastParams`].
+pub struct Taibai {
+    net: NetDef,
+    weights: Vec<Vec<f32>>,
+    opts: Options,
+    backend: Backend,
+    em: EnergyModel,
+    fast: FastParams,
+}
+
+impl Taibai {
+    pub fn new(net: NetDef) -> Taibai {
+        Taibai {
+            net,
+            weights: Vec::new(),
+            opts: Options::default(),
+            backend: Backend::Detailed,
+            em: EnergyModel::default(),
+            fast: FastParams::default(),
+        }
+    }
+
+    /// Per-layer weight blobs (entry 0, the input layer, stays empty).
+    pub fn weights(mut self, w: Vec<Vec<f32>>) -> Taibai {
+        self.weights = w;
+        self
+    }
+
+    /// Placement objective (the Fig 13e cores-vs-throughput knob).
+    pub fn objective(mut self, o: Objective) -> Taibai {
+        self.opts.objective = o;
+        self
+    }
+
+    pub fn backend(mut self, b: Backend) -> Taibai {
+        self.backend = b;
+        self
+    }
+
+    /// Deploy on-chip learning on the final layer.
+    pub fn learning(mut self, on: bool) -> Taibai {
+        self.opts.learning = on;
+        self
+    }
+
+    /// Per-layer firing-rate estimates (index 0 = input layer). Feeds
+    /// the placement traffic matrix *and* the analytic backend's rates.
+    pub fn rates(mut self, r: Vec<f64>) -> Taibai {
+        self.opts.rates = r.clone();
+        self.fast.firing_rates = r;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Taibai {
+        self.opts.seed = s;
+        self
+    }
+
+    /// Simulated-annealing iterations for placement (0 = zigzag only).
+    pub fn sa_iters(mut self, n: usize) -> Taibai {
+        self.opts.sa_iters = n;
+        self
+    }
+
+    /// Enable/disable the resource optimizer (core merging).
+    pub fn merge(mut self, on: bool) -> Taibai {
+        self.opts.merge = on;
+        self
+    }
+
+    pub fn energy_model(mut self, em: EnergyModel) -> Taibai {
+        self.em = em;
+        self
+    }
+
+    /// Full compiler options override (keeps the individual setters
+    /// above as the common path). Replaces everything the individual
+    /// setters touch; like [`Taibai::rates`], the option's `rates` are
+    /// mirrored into the analytic backend's firing rates so both
+    /// engines see the same estimates.
+    pub fn options(mut self, o: Options) -> Taibai {
+        self.fast.firing_rates = o.rates.clone();
+        self.opts = o;
+        self
+    }
+
+    /// Analytic-backend parameters override (capacities, avg hops).
+    /// Call before [`Taibai::rates`] if you set both — the later call
+    /// wins for `firing_rates`.
+    pub fn fast_params(mut self, p: FastParams) -> Taibai {
+        self.fast = p;
+        self
+    }
+
+    /// Fallback firing rate for layers without an explicit entry
+    /// (analytic backend only).
+    pub fn default_rate(mut self, r: f64) -> Taibai {
+        self.fast.default_rate = r;
+        self
+    }
+
+    /// Compile (detailed) or parameterize (analytic) and deploy.
+    pub fn build(self) -> Result<Session, CompileError> {
+        match self.backend {
+            Backend::Detailed => {
+                let report = compiler::compile(&self.net, &self.weights, &self.opts)?;
+                let info = DeployInfo {
+                    backend: Backend::Detailed,
+                    used_cores: report.compiled.used_cores,
+                    chips: 1,
+                    cores_saved: report.compiled.cores_saved,
+                    avg_hops: report.avg_hops,
+                    placement_cost: report.placement_cost,
+                    init_packets: report.compiled.config.init_packets(),
+                };
+                let timesteps = self.net.timesteps;
+                let be = DetailedBackend::new(report.compiled, self.em, timesteps);
+                Ok(Session {
+                    net: self.net,
+                    learning: self.opts.learning,
+                    info,
+                    backend: Box::new(be),
+                    samples_run: 0,
+                    batch_activity: ChipActivity::default(),
+                })
+            }
+            Backend::Analytic => {
+                // probe once for the deployment geometry (pure function)
+                let probe = simulate(&self.net, &self.fast, &self.em);
+                let info = DeployInfo {
+                    backend: Backend::Analytic,
+                    used_cores: probe.used_cores,
+                    chips: probe.chips,
+                    cores_saved: 0,
+                    avg_hops: self.fast.avg_hops,
+                    placement_cost: 0.0,
+                    init_packets: 0,
+                };
+                let be = AnalyticBackend::new(self.net.clone(), self.fast, self.em);
+                Ok(Session {
+                    net: self.net,
+                    learning: self.opts.learning,
+                    info,
+                    backend: Box::new(be),
+                    samples_run: 0,
+                    batch_activity: ChipActivity::default(),
+                })
+            }
+        }
+    }
+}
+
+/// A deployed, runnable model: one network on one backend.
+///
+/// Samples are independent by construction — `run` zeroes dynamic state
+/// (membranes, currents, accumulators) before injecting the sample, so
+/// `run_batch` can fan samples out over std-thread clones of the
+/// deployment and return bit-identical results in order. Weights and
+/// programs persist across runs; `learn_step` mutates the weights of
+/// the *primary* deployment, so learning sessions run batches
+/// sequentially rather than on (pre-learning) clones.
+pub struct Session {
+    net: NetDef,
+    learning: bool,
+    info: DeployInfo,
+    backend: Box<dyn ExecBackend>,
+    samples_run: u64,
+    /// Activity contributed by `run_batch` worker clones.
+    batch_activity: ChipActivity,
+}
+
+impl Session {
+    /// Run one sample from a clean dynamic state.
+    pub fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
+        self.backend.reset();
+        let run = self.backend.run(sample)?;
+        self.samples_run += 1;
+        Ok(run)
+    }
+
+    /// Run many independent samples, in parallel across deployment
+    /// clones when the backend allows it. Results are in input order and
+    /// identical to sequential [`Session::run`] calls.
+    pub fn run_batch(&mut self, samples: &[Sample]) -> Result<Vec<SampleRun>, RunError> {
+        if samples.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Each detailed-engine clone owns a full chip image (~64 MB of
+        // NC data memory), so cap the worker count independently of the
+        // host's core count.
+        const MAX_WORKERS: usize = 8;
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_WORKERS)
+            .min(samples.len());
+        // Learning sessions must see the primary deployment's (possibly
+        // fine-tuned) weights; the analytic engine is too cheap to be
+        // worth forking.
+        if self.learning || self.info.backend != Backend::Detailed || threads <= 1 {
+            let mut out = Vec::with_capacity(samples.len());
+            for s in samples {
+                out.push(self.run(s)?);
+            }
+            return Ok(out);
+        }
+
+        let per = (samples.len() + threads - 1) / threads;
+        let mut forks = Vec::new();
+        for _ in 0..samples.chunks(per).len() {
+            forks.push(self.backend.fork()?);
+        }
+        let results: Vec<Result<(Vec<SampleRun>, ChipActivity), RunError>> =
+            std::thread::scope(|sc| {
+                let mut handles = Vec::new();
+                for (chunk, mut be) in samples.chunks(per).zip(forks) {
+                    handles.push(sc.spawn(move || {
+                        let mut out = Vec::with_capacity(chunk.len());
+                        for s in chunk {
+                            be.reset();
+                            out.push(be.run(s)?);
+                        }
+                        Ok::<(Vec<SampleRun>, ChipActivity), RunError>((out, be.activity()))
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| {
+                            Err(RunError::Thread("worker panicked".into()))
+                        })
+                    })
+                    .collect()
+            });
+        // Account every successful worker's activity AND run count
+        // before surfacing an error, so metrics stay consistent even
+        // on a partial failure.
+        let mut out = Vec::with_capacity(samples.len());
+        let mut first_err = None;
+        for r in results {
+            match r {
+                Ok((runs, act)) => {
+                    add_activity(&mut self.batch_activity, &act);
+                    self.samples_run += runs.len() as u64;
+                    out.extend(runs);
+                }
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+
+    /// Inject per-output errors and trigger one on-chip learning sweep
+    /// (detailed backend, `learning(true)` deployments).
+    pub fn learn_step(&mut self, errors: &[f32]) -> Result<(), RunError> {
+        self.backend.learn_step(errors)
+    }
+
+    /// Zero dynamic state explicitly (run() already does this per
+    /// sample; useful mid-protocol, e.g. between fine-tune phases).
+    pub fn reset(&mut self) {
+        self.backend.reset();
+    }
+
+    /// Performance metrics over everything run so far.
+    pub fn metrics(&self) -> SessionMetrics {
+        let a = self.activity();
+        self.backend.metrics(&a, self.samples_run)
+    }
+
+    /// Aggregate activity counters (primary deployment + batch clones) —
+    /// feed these to an [`EnergyModel`] for custom accounting.
+    pub fn activity(&self) -> ChipActivity {
+        let mut a = self.backend.activity();
+        add_activity(&mut a, &self.batch_activity);
+        a
+    }
+
+    pub fn info(&self) -> &DeployInfo {
+        &self.info
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.info.backend
+    }
+
+    pub fn net(&self) -> &NetDef {
+        &self.net
+    }
+
+    /// Samples executed so far.
+    pub fn samples_run(&self) -> u64 {
+        self.samples_run
+    }
+}
+
+/// Field-wise sum of two activity traces.
+pub(crate) fn add_activity(a: &mut ChipActivity, b: &ChipActivity) {
+    a.nc.add(&b.nc);
+    a.dt_reads += b.dt_reads;
+    a.it_reads += b.it_reads;
+    a.activations += b.activations;
+    a.packets += b.packets;
+    a.link_traversals += b.link_traversals;
+    a.timesteps += b.timesteps;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Layer, NeuronModel};
+
+    fn tiny_net() -> (NetDef, Vec<Vec<f32>>) {
+        let mut net = NetDef::new("tiny-api", 6);
+        net.layers.push(Layer::Input { size: 4 });
+        net.layers.push(Layer::Fc {
+            input: 4,
+            output: 3,
+            neuron: NeuronModel::Lif { tau: 0.5, vth: 0.9 },
+        });
+        net.layers.push(Layer::Fc {
+            input: 3,
+            output: 2,
+            neuron: NeuronModel::Readout { tau: 0.5 },
+        });
+        let mut w1 = vec![0.0f32; 4 * 3];
+        for i in 0..4 {
+            w1[i * 3 + i % 3] = 1.0;
+        }
+        let w2 = vec![0.6, 0.0, 0.6, 0.0, 0.0, 0.6];
+        (net, vec![vec![], w1, w2])
+    }
+
+    #[test]
+    fn builder_compiles_and_runs_detailed() {
+        let (net, w) = tiny_net();
+        let mut s = Taibai::new(net).weights(w).build().unwrap();
+        assert_eq!(s.backend(), Backend::Detailed);
+        assert!(s.info().used_cores >= 1);
+        let sample = Sample::Spikes(SpikeSample {
+            spikes: vec![vec![0u16]; 6],
+            labels: vec![0],
+        });
+        let run = s.run(&sample).unwrap();
+        assert!(run.spikes > 0);
+        assert_eq!(s.samples_run(), 1);
+        let m = s.metrics();
+        assert!(m.fps > 0.0 && m.power_w > 0.0);
+    }
+
+    #[test]
+    fn runs_are_independent() {
+        // the implicit per-run reset makes repeated runs identical
+        let (net, w) = tiny_net();
+        let mut s = Taibai::new(net).weights(w).build().unwrap();
+        let sample = Sample::Spikes(SpikeSample {
+            spikes: vec![vec![0u16, 1, 2, 3]; 5],
+            labels: vec![0],
+        });
+        let a = s.run(&sample).unwrap();
+        let b = s.run(&sample).unwrap();
+        assert_eq!(a.outputs, b.outputs);
+        assert_eq!(a.spikes, b.spikes);
+    }
+
+    #[test]
+    fn typed_build_errors_surface() {
+        let (net, _) = tiny_net();
+        match Taibai::new(net).weights(vec![vec![]]).build() {
+            Err(CompileError::WeightCount { .. }) => {}
+            other => panic!("expected WeightCount, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn analytic_backend_runs_without_weights() {
+        let (net, _) = tiny_net();
+        let mut s = Taibai::new(net)
+            .backend(Backend::Analytic)
+            .build()
+            .unwrap();
+        let sample = Sample::poisson(4, 6, 0.5, 3);
+        let run = s.run(&sample).unwrap();
+        assert!(run.outputs.is_empty(), "analytic mode has no readout");
+        let m = s.metrics();
+        assert!(m.sops > 0, "analytic run must count SOPs");
+        assert!(m.fps > 0.0);
+    }
+
+    #[test]
+    fn learn_step_requires_learning_deployment() {
+        let (net, w) = tiny_net();
+        let mut s = Taibai::new(net).weights(w).build().unwrap();
+        match s.learn_step(&[0.1, -0.1]) {
+            Err(RunError::Unsupported(_)) => {}
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        assert_eq!(Backend::parse("detailed"), Some(Backend::Detailed));
+        assert_eq!(Backend::parse("fast"), Some(Backend::Analytic));
+        assert_eq!(Backend::parse("analytic"), Some(Backend::Analytic));
+        assert_eq!(Backend::parse("gpu"), None);
+        assert_eq!(Backend::Analytic.to_string(), "analytic");
+    }
+
+    #[test]
+    fn poisson_sample_hits_requested_rate() {
+        let s = Sample::poisson(64, 100, 0.25, 9);
+        let r = s.input_rate(64);
+        assert!((r - 0.25).abs() < 0.05, "rate={r}");
+        assert_eq!(s.timesteps(), 100);
+    }
+}

@@ -1,0 +1,482 @@
+//! The three paper applications (§V-B.3 / Fig 15) as [`Workload`]s:
+//! network definition + weights + dataset + decode logic, runnable on
+//! either backend through one [`Session`].
+//!
+//! Weights come from `artifacts/weights/` when the L2 JAX training path
+//! has produced them (`make artifacts`), otherwise from structured
+//! heuristic fallbacks that keep the chip code paths honest.
+
+use std::path::PathBuf;
+
+use crate::datasets::{bci, ecg, shd};
+use crate::energy::gpu::{GpuEstimate, GpuModel};
+use crate::metrics::{accuracy, argmax, softmax};
+use crate::model::{self, NetDef};
+use crate::runtime::artifacts::{artifacts_dir, read_weights};
+use crate::util::Rng;
+
+use super::{Backend, CompileError, RunError, Sample, SampleRun, Session, Taibai};
+
+/// A complete application: everything a [`Session`] needs plus the
+/// dataset and the decode (output → prediction) logic.
+pub trait Workload {
+    fn name(&self) -> String;
+    fn net(&self) -> NetDef;
+    /// Per-layer weight blobs (trained artifacts or heuristic fallback).
+    fn weights(&self, seed: u64) -> Vec<Vec<f32>>;
+    /// Per-layer firing-rate estimates (placement traffic + analytic
+    /// backend).
+    fn rates(&self) -> Vec<f64>;
+    /// Whether the deployment carries the on-chip learning head.
+    fn learning(&self) -> bool {
+        false
+    }
+    /// Generate evaluation samples. `samples` is a *target*, not a
+    /// contract: class-balanced workloads round up so every class is
+    /// covered at least once (e.g. SHD never returns fewer than its 20
+    /// classes) — size follow-up work by the returned `Vec`'s length.
+    fn dataset(&self, samples: usize, seed: u64) -> Vec<Sample>;
+    /// (prediction, label) pairs one run contributes to accuracy.
+    fn decode(&self, run: &SampleRun, sample: &Sample) -> Vec<(usize, usize)>;
+    /// Pre-evaluation hook (the BCI on-chip fine-tune). No-op for
+    /// workloads without a training protocol.
+    fn prepare(&self, _session: &mut Session, _seed: u64) -> Result<(), RunError> {
+        Ok(())
+    }
+    /// Build a [`Session`] for this workload on the chosen backend.
+    fn session(&self, backend: Backend, seed: u64) -> Result<Session, CompileError> {
+        Taibai::new(self.net())
+            .weights(self.weights(seed))
+            .rates(self.rates())
+            .learning(self.learning())
+            .backend(backend)
+            .build()
+    }
+}
+
+fn weight_file(stem: &str) -> Option<Vec<f32>> {
+    let p: PathBuf = artifacts_dir().join("weights").join(format!("{stem}.bin"));
+    read_weights(&p).ok()
+}
+
+// ---------------------------------------------------------------------
+// ECG — SRNN with ALIF hidden layer (heterogeneous) vs plain LIF.
+// ---------------------------------------------------------------------
+
+/// ECG band recognition (per-timestep classification on a recurrent
+/// ALIF reservoir). `heterogeneous: false` is the Fig 15 ablation.
+#[derive(Clone, Copy, Debug)]
+pub struct Ecg {
+    pub heterogeneous: bool,
+}
+
+/// Weights for the ECG SRNN: trained artifact or a structured fallback.
+pub fn ecg_weights(heterogeneous: bool, seed: u64) -> Vec<Vec<f32>> {
+    let stem = if heterogeneous { "ecg_srnn" } else { "ecg_srnn_homog" };
+    if let (Some(w1), Some(w2)) = (
+        weight_file(&format!("{stem}_w1")),
+        weight_file(&format!("{stem}_w2")),
+    ) {
+        return vec![vec![], w1, w2];
+    }
+    // fallback: random sparse recurrent reservoir + heuristic readout
+    let mut rng = Rng::new(seed);
+    let (nin, nh, nout) = (4usize, 64usize, 6usize);
+    let mut w1 = vec![0.0f32; (nin + nh) * nh];
+    for i in 0..nin {
+        for h in 0..nh {
+            if rng.chance(0.5) {
+                w1[i * nh + h] = (rng.f32() - 0.3) * 1.2;
+            }
+        }
+    }
+    for j in 0..nh {
+        for h in 0..nh {
+            if rng.chance(0.08) {
+                w1[(nin + j) * nh + h] = (rng.f32() - 0.5) * 0.8;
+            }
+        }
+    }
+    let mut w2 = vec![0.0f32; nh * nout];
+    for h in 0..nh {
+        w2[h * nout + h % nout] = 0.4 + rng.f32() * 0.2;
+    }
+    vec![vec![], w1, w2]
+}
+
+impl Workload for Ecg {
+    fn name(&self) -> String {
+        if self.heterogeneous {
+            "ECG-SRNN".into()
+        } else {
+            "ECG-SRNN-homogeneous".into()
+        }
+    }
+
+    fn net(&self) -> NetDef {
+        model::srnn_ecg(self.heterogeneous)
+    }
+
+    fn weights(&self, seed: u64) -> Vec<Vec<f32>> {
+        ecg_weights(self.heterogeneous, seed)
+    }
+
+    fn rates(&self) -> Vec<f64> {
+        vec![0.33, 0.2, 0.1]
+    }
+
+    fn dataset(&self, samples: usize, seed: u64) -> Vec<Sample> {
+        ecg::dataset(samples, seed)
+            .into_iter()
+            .map(Sample::Spikes)
+            .collect()
+    }
+
+    fn decode(&self, run: &SampleRun, sample: &Sample) -> Vec<(usize, usize)> {
+        let Sample::Spikes(s) = sample else {
+            return Vec::new();
+        };
+        let mut pairs = Vec::new();
+        for (t, out) in run.outputs.iter().enumerate() {
+            // 2-step chip pipeline latency: compare against the label
+            // two steps back
+            if t >= 2 && t - 2 < s.labels.len() {
+                pairs.push((argmax(out), s.labels[t - 2]));
+            }
+        }
+        pairs
+    }
+}
+
+// ---------------------------------------------------------------------
+// SHD — DH-LIF dendritic model.
+// ---------------------------------------------------------------------
+
+/// SHD-style spoken-digit recognition with the 4-branch dendritic
+/// DH-LIF hidden layer. `dendrites: false` is the Fig 15 ablation.
+#[derive(Clone, Copy, Debug)]
+pub struct Shd {
+    pub dendrites: bool,
+}
+
+pub fn shd_weights(dendrites: bool, seed: u64) -> Vec<Vec<f32>> {
+    let stem = if dendrites { "shd_dhsnn" } else { "shd_dhsnn_homog" };
+    if let (Some(w1), Some(w2)) = (
+        weight_file(&format!("{stem}_w1")),
+        weight_file(&format!("{stem}_w2")),
+    ) {
+        return vec![vec![], w1, w2];
+    }
+    // fallback: template-matched input weights, class-aligned readout
+    let mut rng = Rng::new(seed);
+    let (nin, nh, nout) = (700usize, 64usize, 20usize);
+    let branches = if dendrites { 4 } else { 1 };
+    let mut w1 = vec![0.0f32; branches * nin * nh];
+    for h in 0..nh {
+        let class = h % nout;
+        // mirror the generator's formant bands (datasets::shd::template)
+        let base = 35 * (class % 10) + 20;
+        let lang = class / 10;
+        let centers = [base, base + 150, base + 320 + 10 * lang];
+        for (bi, &c) in centers.iter().enumerate() {
+            let b = bi % branches;
+            for dc in 0..40 {
+                let ch = (c + dc) % nin;
+                w1[(b * nin + ch) * nh + h] = 0.05 + rng.f32() * 0.02;
+            }
+        }
+    }
+    let mut w2 = vec![0.0f32; nh * nout];
+    for h in 0..nh {
+        w2[h * nout + h % nout] = 0.8;
+    }
+    vec![vec![], w1, w2]
+}
+
+impl Workload for Shd {
+    fn name(&self) -> String {
+        if self.dendrites {
+            "SHD-DHSNN".into()
+        } else {
+            "SHD-DHSNN-homogeneous".into()
+        }
+    }
+
+    fn net(&self) -> NetDef {
+        model::dhsnn_shd(self.dendrites)
+    }
+
+    fn weights(&self, seed: u64) -> Vec<Vec<f32>> {
+        shd_weights(self.dendrites, seed)
+    }
+
+    fn rates(&self) -> Vec<f64> {
+        vec![0.012, 0.025, 0.1]
+    }
+
+    fn dataset(&self, samples: usize, seed: u64) -> Vec<Sample> {
+        let per_class = (samples / shd::CLASSES).max(1);
+        shd::dataset(per_class, seed)
+            .into_iter()
+            .take(samples.max(shd::CLASSES))
+            .map(Sample::Spikes)
+            .collect()
+    }
+
+    fn decode(&self, run: &SampleRun, sample: &Sample) -> Vec<(usize, usize)> {
+        if run.outputs.is_empty() {
+            return Vec::new();
+        }
+        vec![(argmax(&run.summed()), sample.label())]
+    }
+}
+
+// ---------------------------------------------------------------------
+// BCI — cross-day decoding with on-chip fine-tuning.
+// ---------------------------------------------------------------------
+
+/// BCI cross-day decoding: day-0-trained sub-path networks, decoded on
+/// a later day after on-chip fine-tuning of the FC head (32 samples,
+/// the paper's protocol).
+#[derive(Clone, Copy, Debug)]
+pub struct Bci {
+    pub subpaths: usize,
+    /// Target recording day (drift grows with the day index).
+    pub day: usize,
+}
+
+impl Default for Bci {
+    fn default() -> Bci {
+        Bci { subpaths: 16, day: 3 }
+    }
+}
+
+pub fn bci_weights(subpaths: usize, seed: u64) -> Vec<Vec<f32>> {
+    // trained artifacts exist for the paper's 16-subpath configuration
+    if subpaths == 16 {
+        if let (Some(w1), Some(w2), Some(w3)) = (
+            weight_file("bci_w1"),
+            weight_file("bci_w2"),
+            weight_file("bci_w3"),
+        ) {
+            return vec![vec![], w1, w2, w3];
+        }
+    }
+    let mut rng = Rng::new(seed);
+    let nin = bci::CHANNELS;
+    let nmid = subpaths * 8;
+    // sub-path linear transforms: each unit reads 8 channels
+    let mut w1 = vec![0.0f32; nin * nmid];
+    for t in 0..nmid {
+        for k in 0..8 {
+            let u = (t * 8 + k * 13) % nin;
+            w1[u * nmid + t] = 0.08 + rng.f32() * 0.04;
+        }
+    }
+    // attention/temporal fusion: per-subpath mixing
+    let mut w2 = vec![0.0f32; nmid * nmid];
+    for t in 0..nmid {
+        let sp = t / 8;
+        for k in 0..8 {
+            let u = sp * 8 + k;
+            w2[u * nmid + t] = if u == t { 0.5 } else { 0.1 };
+        }
+    }
+    // head: matched filter against class centroids through the random
+    // projection (computed from day-0 templates)
+    let mut w3 = vec![0.0f32; nmid * 4];
+    for c in 0..4 {
+        let samp = bci::sample(c, 0, &mut rng);
+        // project centroid through w1 (ignoring dynamics — a heuristic)
+        let mut mid = vec![0.0f32; nmid];
+        for row in &samp.values {
+            for (u, &v) in row.iter().enumerate() {
+                for t in 0..nmid {
+                    let w = w1[u * nmid + t];
+                    if w != 0.0 {
+                        mid[t] += v * w;
+                    }
+                }
+            }
+        }
+        let norm: f32 = mid.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-3);
+        for t in 0..nmid {
+            w3[t * 4 + c] = mid[t] / norm * 0.5;
+        }
+    }
+    vec![vec![], w1, w2, w3]
+}
+
+impl Workload for Bci {
+    fn name(&self) -> String {
+        "BCI-CrossDay".into()
+    }
+
+    fn net(&self) -> NetDef {
+        model::bci_net(self.subpaths)
+    }
+
+    fn weights(&self, seed: u64) -> Vec<Vec<f32>> {
+        bci_weights(self.subpaths, seed)
+    }
+
+    fn rates(&self) -> Vec<f64> {
+        vec![0.5, 0.2, 0.2, 0.1]
+    }
+
+    fn learning(&self) -> bool {
+        true
+    }
+
+    fn dataset(&self, samples: usize, seed: u64) -> Vec<Sample> {
+        bci::day_dataset(self.day, (samples / bci::CLASSES).max(1), seed ^ 1)
+            .into_iter()
+            .take(samples.max(bci::CLASSES))
+            .map(Sample::Dense)
+            .collect()
+    }
+
+    fn decode(&self, run: &SampleRun, sample: &Sample) -> Vec<(usize, usize)> {
+        if run.outputs.is_empty() {
+            return Vec::new();
+        }
+        vec![(argmax(&run.summed()), sample.label())]
+    }
+
+    /// The paper's protocol: fine-tune the FC head on chip with 32
+    /// samples from the target day before decoding.
+    fn prepare(&self, session: &mut Session, seed: u64) -> Result<(), RunError> {
+        if session.backend() != Backend::Detailed {
+            return Ok(()); // analytic mode has no learning path
+        }
+        let train = bci::day_dataset(self.day, 8, seed ^ 0x5eed);
+        for s in train.iter().take(32) {
+            let run = session.run(&Sample::Dense(s.clone()))?;
+            let y = softmax(&run.summed());
+            let mut err = vec![0.0f32; bci::CLASSES];
+            for (k, e) in err.iter_mut().enumerate() {
+                *e = y[k] - if k == s.label { 1.0 } else { 0.0 };
+            }
+            session.learn_step(&err)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Evaluation harness.
+// ---------------------------------------------------------------------
+
+/// One Fig 15 bar group: accuracy + chip metrics next to the GPU
+/// baseline estimate.
+#[derive(Clone, Debug)]
+pub struct WorkloadReport {
+    pub name: String,
+    pub accuracy: f64,
+    pub power_w: f64,
+    pub fps: f64,
+    pub fps_per_w: f64,
+    pub spikes_per_sample: f64,
+    pub used_cores: usize,
+    pub gpu: GpuEstimate,
+    pub gpu_fps: f64,
+}
+
+/// Run a workload's protocol end-to-end on an existing session:
+/// `prepare` (fine-tune where applicable), then decode `samples`
+/// dataset samples and report accuracy next to the session metrics.
+pub fn evaluate(
+    w: &dyn Workload,
+    session: &mut Session,
+    samples: usize,
+    seed: u64,
+) -> Result<WorkloadReport, RunError> {
+    w.prepare(session, seed)?;
+    let data = w.dataset(samples, seed);
+    let mut pairs = Vec::new();
+    for s in &data {
+        let run = session.run(s)?;
+        pairs.extend(w.decode(&run, s));
+    }
+    let acc = accuracy(&pairs);
+    let m = session.metrics();
+
+    let net = w.net();
+    let timesteps = net.timesteps;
+    let gpu_model = GpuModel::default();
+    let flops = GpuModel::snn_step_flops(net.total_connections(), net.total_neurons() as u64)
+        * timesteps as f64;
+    // ~3 kernel launches per layer per timestep on the dense baseline
+    let launches = (net.layers.len() as u64).saturating_sub(1) * 3 * timesteps as u64;
+    let gpu = gpu_model.estimate(flops, launches);
+    Ok(WorkloadReport {
+        name: w.name(),
+        accuracy: acc,
+        power_w: m.power_w,
+        fps: m.fps,
+        fps_per_w: m.fps_per_w,
+        spikes_per_sample: m.spikes_per_sample,
+        used_cores: m.used_cores,
+        gpu,
+        gpu_fps: 1.0 / gpu.time_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shd_beats_chance_with_heuristic_weights() {
+        let w = Shd { dendrites: true };
+        let mut s = w.session(Backend::Detailed, 7).unwrap();
+        let r = evaluate(&w, &mut s, 20, 7).unwrap();
+        // 20 classes → chance = 5%; template-matched weights must do
+        // far better even without training
+        assert!(r.accuracy > 0.3, "accuracy {}", r.accuracy);
+        assert!(r.power_w < 2.0, "power {}", r.power_w);
+        assert!(
+            r.fps_per_w > r.gpu_fps / r.gpu.power_w,
+            "efficiency must beat GPU"
+        );
+    }
+
+    #[test]
+    fn bci_finetune_recovers_cross_day_accuracy() {
+        let w = Bci { subpaths: 8, day: 6 }; // late day: heavy drift
+        let mut s = w.session(Backend::Detailed, 11).unwrap();
+        let test: Vec<Sample> = bci::day_dataset(6, 8, 99)
+            .into_iter()
+            .map(Sample::Dense)
+            .collect();
+        let mut before = Vec::new();
+        for t in &test {
+            let run = s.run(t).unwrap();
+            before.extend(w.decode(&run, t));
+        }
+        let acc_before = accuracy(&before);
+        // fine-tune on 32 samples from the same day (paper's protocol);
+        // prepare() derives its train seed as `seed ^ 0x5eed`
+        w.prepare(&mut s, 55 ^ 0x5eed).unwrap();
+        let mut after = Vec::new();
+        for t in &test {
+            let run = s.run(t).unwrap();
+            after.extend(w.decode(&run, t));
+        }
+        let acc_after = accuracy(&after);
+        assert!(
+            acc_after >= acc_before,
+            "fine-tuning should not hurt: {acc_before} -> {acc_after}"
+        );
+    }
+
+    #[test]
+    fn ecg_runs_end_to_end() {
+        let w = Ecg { heterogeneous: true };
+        let mut s = w.session(Backend::Detailed, 3).unwrap();
+        let r = evaluate(&w, &mut s, 1, 3).unwrap();
+        assert!(r.accuracy >= 0.0 && r.accuracy <= 1.0);
+        assert!(r.spikes_per_sample > 0.0, "SRNN never spiked");
+        assert!(r.used_cores >= 2);
+    }
+}

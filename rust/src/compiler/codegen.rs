@@ -24,8 +24,21 @@ use crate::topology::{
 };
 use crate::util::F16;
 
+use super::error::CompileError;
 use super::merge::Merged;
 use super::placement::PlacementMap;
+
+/// Short layer-kind name for error reporting.
+fn kind_name(l: &Layer) -> &'static str {
+    match l {
+        Layer::Input { .. } => "Input",
+        Layer::Conv { .. } => "Conv",
+        Layer::Pool { .. } => "Pool",
+        Layer::Fc { .. } => "Fc",
+        Layer::Recurrent { .. } => "Recurrent",
+        Layer::Sparse { .. } => "Sparse",
+    }
+}
 
 /// Where one physical core landed and what it hosts.
 #[derive(Clone, Debug)]
@@ -81,7 +94,7 @@ pub fn codegen(
     merged: &Merged,
     place: &PlacementMap,
     learning: bool,
-) -> Result<Compiled, String> {
+) -> Result<Compiled, CompileError> {
     let locs: Vec<(usize, u8)> = (0..merged.cores.len())
         .map(|i| place.loc(i))
         .collect();
@@ -202,7 +215,7 @@ impl<'a> Builder<'a> {
     }
 
     /// Build fan-in DT/IT blocks for layer `li` in every CC hosting it.
-    fn build_layer_fanin(&mut self, li: usize) -> Result<(), String> {
+    fn build_layer_fanin(&mut self, li: usize) -> Result<(), CompileError> {
         let layer = self.net.layers[li].clone();
         let tag = self.tag();
         let groups = self.layer_ccs[li].clone();
@@ -267,10 +280,11 @@ impl<'a> Builder<'a> {
                 let blob = &self.weights[li];
                 let outputs = self.net.layers[li].neurons();
                 if blob.len() != input * outputs {
-                    return Err(format!(
-                        "layer {li}: sparse blob {} != {input}x{outputs}",
-                        blob.len()
-                    ));
+                    return Err(CompileError::WeightShape {
+                        layer: li,
+                        expected: input * outputs,
+                        got: blob.len(),
+                    });
                 }
                 for (cc, members) in &groups {
                     // per-core weight allocation counters
@@ -309,10 +323,10 @@ impl<'a> Builder<'a> {
                 }
             }
             Layer::Input { .. } | Layer::Pool { .. } | Layer::Conv { .. } => {
-                return Err(format!(
-                    "layer {li}: kind not supported by the detailed-engine \
-                     code generator (use fast mode)"
-                ));
+                return Err(CompileError::UnsupportedLayer {
+                    layer: li,
+                    kind: kind_name(&layer),
+                });
             }
         }
         Ok(())
@@ -323,7 +337,7 @@ impl<'a> Builder<'a> {
     }
 
     /// Build NC programs + memory images for layer `li`'s cores.
-    fn build_layer_images(&mut self, li: usize) -> Result<(), String> {
+    fn build_layer_images(&mut self, li: usize) -> Result<(), CompileError> {
         let layer = self.net.layers[li].clone();
         let groups = self.layer_ccs[li].clone();
         for (cc, members) in &groups {
@@ -334,7 +348,7 @@ impl<'a> Builder<'a> {
         Ok(())
     }
 
-    fn layout_for(&self, mi: usize) -> Result<NcLayout, String> {
+    fn layout_for(&self, mi: usize) -> Result<NcLayout, CompileError> {
         let core = &self.merged.cores[mi];
         let mut n = 0usize;
         let mut w = 0usize;
@@ -368,17 +382,22 @@ impl<'a> Builder<'a> {
         pi: usize,
         li: usize,
         layer: &Layer,
-    ) -> Result<(), String> {
+    ) -> Result<(), CompileError> {
         let layout = self.layout_for(mi)?;
         let part = self.merged.cores[mi].parts[pi];
         let local_base = self.merged.cores[mi].base_of(pi);
         let count = part.count;
         let is_head = self.learning && li == self.net.layers.len() - 1;
 
-        let neuron = layer.neuron_model().ok_or("layer without neurons")?;
+        let neuron = layer
+            .neuron_model()
+            .ok_or(CompileError::UnsupportedLayer {
+                layer: li,
+                kind: kind_name(layer),
+            })?;
         let e = |x: Result<crate::isa::assembler::Program, crate::isa::assembler::AsmError>|
-         -> Result<crate::isa::assembler::Program, String> {
-            x.map_err(|err| format!("layer {li}: {err}"))
+         -> Result<crate::isa::assembler::Program, CompileError> {
+            x.map_err(|err| CompileError::Asm { layer: li, err })
         };
 
         // ---- programs --------------------------------------------------
@@ -417,7 +436,12 @@ impl<'a> Builder<'a> {
                 };
                 (integ, fire)
             }
-            _ => return Err(format!("layer {li}: unsupported kind")),
+            _ => {
+                return Err(CompileError::UnsupportedLayer {
+                    layer: li,
+                    kind: kind_name(layer),
+                })
+            }
         };
 
         // ---- memory image ----------------------------------------------
@@ -506,7 +530,7 @@ impl<'a> Builder<'a> {
         n_base: usize,
         count: usize,
         blob: &[f32],
-    ) -> Result<Vec<u16>, String> {
+    ) -> Result<Vec<u16>, CompileError> {
         match layer {
             Layer::Fc { input, output, neuron } => {
                 let branches = match neuron {
@@ -515,10 +539,11 @@ impl<'a> Builder<'a> {
                 };
                 let rows = input * branches;
                 if blob.len() != rows * output {
-                    return Err(format!(
-                        "layer {li}: fc blob {} != {rows}x{output}",
-                        blob.len()
-                    ));
+                    return Err(CompileError::WeightShape {
+                        layer: li,
+                        expected: rows * output,
+                        got: blob.len(),
+                    });
                 }
                 let mut w = Vec::with_capacity(rows * count);
                 for r in 0..rows {
@@ -531,10 +556,11 @@ impl<'a> Builder<'a> {
             Layer::Recurrent { input, size, .. } => {
                 let rows = input + size;
                 if blob.len() != rows * size {
-                    return Err(format!(
-                        "layer {li}: recurrent blob {} != {rows}x{size}",
-                        blob.len()
-                    ));
+                    return Err(CompileError::WeightShape {
+                        layer: li,
+                        expected: rows * size,
+                        got: blob.len(),
+                    });
                 }
                 let mut w = Vec::with_capacity(rows * count);
                 for r in 0..rows {
@@ -563,7 +589,7 @@ impl<'a> Builder<'a> {
     }
 
     /// Fan-out tables: for each CC, DEs in flattened (nc, local) order.
-    fn build_fanout(&mut self) -> Result<(), String> {
+    fn build_fanout(&mut self) -> Result<(), CompileError> {
         // collect (cc) -> ordered cores
         let mut by_cc: HashMap<usize, Vec<(u8, usize)>> = HashMap::new();
         for (mi, _) in self.merged.cores.iter().enumerate() {
@@ -588,7 +614,7 @@ impl<'a> Builder<'a> {
                             let index = *self
                                 .dt_base
                                 .get(&(next, dcc))
-                                .ok_or("missing dt base")?;
+                                .ok_or(CompileError::MissingDtBase { layer: next, cc: dcc })?;
                             let (x, y) = cc_xy(dcc);
                             ies.push(FanOutIE {
                                 mode: RouteMode::Unicast { x, y },
@@ -603,8 +629,10 @@ impl<'a> Builder<'a> {
                     let recurrent_off = match &self.net.layers[li] {
                         Layer::Recurrent { input, .. } => {
                             for (dcc, _) in self.layer_ccs[li].clone() {
-                                let index =
-                                    *self.dt_base.get(&(li, dcc)).ok_or("missing dt base")?;
+                                let index = *self
+                                    .dt_base
+                                    .get(&(li, dcc))
+                                    .ok_or(CompileError::MissingDtBase { layer: li, cc: dcc })?;
                                 let (x, y) = cc_xy(dcc);
                                 ies.push(FanOutIE {
                                     mode: RouteMode::Unicast { x, y },
@@ -641,16 +669,22 @@ impl<'a> Builder<'a> {
         Ok(())
     }
 
-    fn fanin_tag(&self, li: usize, cc: usize) -> Result<u16, String> {
-        let base = self.dt_base.get(&(li, cc)).ok_or("missing dt base")?;
+    fn fanin_tag(&self, li: usize, cc: usize) -> Result<u16, CompileError> {
+        let base = self
+            .dt_base
+            .get(&(li, cc))
+            .ok_or(CompileError::MissingDtBase { layer: li, cc })?;
         Ok(self.tables[&cc].fanin_dt[*base as usize].tag)
     }
 
     /// Host input packets: one per input channel (per branch for DH-LIF
     /// first layers; FP-data channels get payload patched at send time).
-    fn build_input_map(&mut self) -> Result<Vec<Vec<Packet>>, String> {
+    fn build_input_map(&mut self) -> Result<Vec<Vec<Packet>>, CompileError> {
         let Layer::Input { size } = self.net.layers[0] else {
-            return Err("first layer must be Input".into());
+            return Err(CompileError::UnsupportedLayer {
+                layer: 0,
+                kind: "a non-Input first layer",
+            });
         };
         let li = 1;
         let branches = match self.net.layers[li].neuron_model() {
@@ -662,10 +696,18 @@ impl<'a> Builder<'a> {
             Layer::Fc { input, .. } => *input,
             Layer::Recurrent { input, .. } => *input,
             Layer::Sparse { input, .. } => *input,
-            _ => return Err("unsupported first layer".into()),
+            _ => {
+                return Err(CompileError::UnsupportedLayer {
+                    layer: li,
+                    kind: kind_name(&self.net.layers[li]),
+                })
+            }
         };
         if n_in != size {
-            return Err(format!("input size {size} != first-layer input {n_in}"));
+            return Err(CompileError::InputSizeMismatch {
+                expected: n_in,
+                got: size,
+            });
         }
         let mut map = Vec::with_capacity(size);
         for ch in 0..size {
@@ -697,7 +739,7 @@ impl<'a> Builder<'a> {
     /// Error-injection packets (learning) + readout map (host outputs).
     fn build_host_maps(
         &mut self,
-    ) -> Result<(Vec<Packet>, HashMap<(usize, u8, u16), usize>), String> {
+    ) -> Result<(Vec<Packet>, HashMap<(usize, u8, u16), usize>), CompileError> {
         let last = self.net.layers.len() - 1;
         let mut readout = HashMap::new();
         for (cc, members) in self.layer_ccs[last].clone() {
@@ -759,7 +801,8 @@ impl<'a> Builder<'a> {
             }
             error_map = per_neuron
                 .into_iter()
-                .map(|p| p.ok_or("uncovered head neuron".to_string()))
+                .enumerate()
+                .map(|(k, p)| p.ok_or(CompileError::UncoveredHeadNeuron { neuron: k }))
                 .collect::<Result<Vec<_>, _>>()?;
         }
         Ok((error_map, readout))

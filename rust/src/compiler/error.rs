@@ -1,0 +1,122 @@
+//! Typed compilation errors.
+//!
+//! `compile()` and every pass below it used to fail with bare `String`s;
+//! the [`crate::api`] layer needs callers to be able to *match* on what
+//! went wrong (unsupported layer kind → fall back to the analytic
+//! backend; weight-shape mismatch → reload artifacts; capacity exceeded
+//! → shard), so failures are now a closed enum.
+
+use crate::isa::assembler::AsmError;
+
+/// Everything that can go wrong between a [`crate::model::NetDef`] and a
+/// deployable chip image.
+#[derive(Clone, Debug)]
+pub enum CompileError {
+    /// The detailed-engine code generator cannot lower this layer kind
+    /// (Conv/Pool run through the fast analytic mode instead).
+    UnsupportedLayer { layer: usize, kind: &'static str },
+    /// A weight blob's length does not match the layer's shape.
+    WeightShape {
+        layer: usize,
+        expected: usize,
+        got: usize,
+    },
+    /// `weights.len()` must equal `net.layers.len()` (entry 0, the input
+    /// layer, is an empty blob).
+    WeightCount { expected: usize, got: usize },
+    /// The input layer's channel count disagrees with the first
+    /// connection layer's fan-in.
+    InputSizeMismatch { expected: usize, got: usize },
+    /// A program-library template failed to assemble (a bug in the
+    /// program generators, surfaced with its layer for context).
+    Asm { layer: usize, err: AsmError },
+    /// Internal table-linking failure: a layer/CC pair has no fan-in
+    /// descriptor-table base (indicates a pass-ordering bug).
+    MissingDtBase { layer: usize, cc: usize },
+    /// On-chip learning was requested but a head neuron ended up with no
+    /// error-injection route.
+    UncoveredHeadNeuron { neuron: usize },
+    /// The partitioned network needs more neuron cores than one chip
+    /// provides; shard the model or relax the objective.
+    TooManyCores { cores: usize, capacity: usize },
+    /// The front-end fusion pass rejected the op graph (e.g. a BatchNorm
+    /// with no preceding linear op, or a malformed BN blob).
+    Fusion { op: usize, msg: String },
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::UnsupportedLayer { layer, kind } => write!(
+                f,
+                "layer {layer}: {kind} is not supported by the detailed-engine \
+                 code generator (use the analytic backend)"
+            ),
+            CompileError::WeightShape {
+                layer,
+                expected,
+                got,
+            } => write!(
+                f,
+                "layer {layer}: weight blob has {got} values, expected {expected}"
+            ),
+            CompileError::WeightCount { expected, got } => write!(
+                f,
+                "weights must carry one blob per layer ({expected}), got {got}"
+            ),
+            CompileError::InputSizeMismatch { expected, got } => write!(
+                f,
+                "input layer has {got} channels but the first connection \
+                 layer expects {expected}"
+            ),
+            CompileError::Asm { layer, err } => {
+                write!(f, "layer {layer}: {err}")
+            }
+            CompileError::MissingDtBase { layer, cc } => write!(
+                f,
+                "internal: no fan-in DT base recorded for layer {layer} on CC {cc}"
+            ),
+            CompileError::UncoveredHeadNeuron { neuron } => write!(
+                f,
+                "learning head neuron {neuron} has no error-injection route"
+            ),
+            CompileError::TooManyCores { cores, capacity } => write!(
+                f,
+                "placement needs {cores} neuron cores but one chip has \
+                 {capacity}; shard the model or pick a denser objective"
+            ),
+            CompileError::Fusion { op, msg } => write!(f, "op {op}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CompileError::Asm { err, .. } => Some(err),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_carry_context() {
+        let e = CompileError::WeightShape {
+            layer: 2,
+            expected: 640,
+            got: 0,
+        };
+        let s = e.to_string();
+        assert!(s.contains("layer 2") && s.contains("640"), "{s}");
+
+        let e = CompileError::TooManyCores {
+            cores: 5000,
+            capacity: 1056,
+        };
+        assert!(e.to_string().contains("5000"));
+    }
+}

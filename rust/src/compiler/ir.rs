@@ -9,6 +9,7 @@
 //! drops identity ops, yielding the deploy-ready [`crate::model::NetDef`]
 //! plus transformed weight blobs.
 
+use super::error::CompileError;
 use crate::model::{Layer, NetDef, NeuronModel};
 
 /// One front-end operator.
@@ -59,7 +60,7 @@ pub struct Fused {
 
 /// Fold BN into the preceding linear op and attach spike activations to
 /// their producing layer.
-pub fn fuse(g: &OpGraph) -> Result<Fused, String> {
+pub fn fuse(g: &OpGraph) -> Result<Fused, CompileError> {
     let mut net = NetDef::new(&g.name, g.timesteps);
     net.skips = g.skips.clone();
     let mut weights: Vec<Vec<f32>> = Vec::new();
@@ -142,15 +143,21 @@ pub fn fuse(g: &OpGraph) -> Result<Fused, String> {
             }
             Op::BatchNorm { c } => {
                 let Some((layer, w)) = pending.as_mut() else {
-                    return Err(format!("op {i}: BatchNorm with no preceding linear op"));
+                    return Err(CompileError::Fusion {
+                        op: i,
+                        msg: "BatchNorm with no preceding linear op".into(),
+                    });
                 };
                 fold_bn(layer, w, &blob.data, *c)
-                    .map_err(|e| format!("op {i}: {e}"))?;
+                    .map_err(|msg| CompileError::Fusion { op: i, msg })?;
                 fused_ops.push(format!("BN({c}) folded into {}", layer_name(layer)));
             }
             Op::Spike(model) => {
                 let Some((layer, _)) = pending.as_mut() else {
-                    return Err(format!("op {i}: activation with no producing layer"));
+                    return Err(CompileError::Fusion {
+                        op: i,
+                        msg: "activation with no producing layer".into(),
+                    });
                 };
                 set_neuron(layer, *model);
             }

@@ -8,10 +8,12 @@ pub mod partition;
 pub mod placement;
 pub mod merge;
 pub mod codegen;
+pub mod error;
 
 use crate::model::NetDef;
 
 pub use codegen::Compiled;
+pub use error::CompileError;
 pub use partition::Limits;
 
 /// Placement objective (the Fig 13e trade-off knob).
@@ -60,7 +62,13 @@ pub fn compile(
     net: &NetDef,
     weights: &[Vec<f32>],
     opts: &Options,
-) -> Result<CompileReport, String> {
+) -> Result<CompileReport, CompileError> {
+    if weights.len() != net.layers.len() {
+        return Err(CompileError::WeightCount {
+            expected: net.layers.len(),
+            got: weights.len(),
+        });
+    }
     let mut limits = opts.limits;
     match opts.objective {
         Objective::MinCores => {}
@@ -69,12 +77,24 @@ pub fn compile(
     }
     let part = partition::partition(net, &limits);
     let merged = merge::merge(net, &part, limits.neurons_per_nc, opts.merge);
+    let capacity = crate::noc::NUM_CCS * crate::topology::NCS_PER_CC;
+    if merged.cores.len() > capacity {
+        return Err(CompileError::TooManyCores {
+            cores: merged.cores.len(),
+            capacity,
+        });
+    }
     let traffic = placement::traffic_matrix(net, &part, &opts.rates, 0.1);
-    // traffic is indexed by partition cores; collapse to merged cores
+    // traffic is indexed by partition cores; collapse to merged cores.
+    // Rows between non-adjacent layers are all-zero, so skip zero cells
+    // and look the source core's merged index up once per row.
     let mut mtraffic = vec![vec![0.0; merged.cores.len()]; merged.cores.len()];
     for (i, row) in traffic.iter().enumerate() {
+        let (mi, _) = merged.origin[i];
         for (j, &t) in row.iter().enumerate() {
-            let (mi, _) = merged.origin[i];
+            if t == 0.0 {
+                continue;
+            }
             let (mj, _) = merged.origin[j];
             if mi != mj {
                 mtraffic[mi][mj] += t;
@@ -146,5 +166,25 @@ mod tests {
         .unwrap();
         assert!(r.compiled.used_cores >= 2);
         assert!(r.avg_hops >= 0.0);
+    }
+
+    #[test]
+    fn typed_errors_are_matchable() {
+        // weight blob count mismatch
+        let net = model::srnn_ecg(false);
+        match compile(&net, &[vec![]], &Options::default()) {
+            Err(CompileError::WeightCount { expected: 3, got: 1 }) => {}
+            other => panic!("expected WeightCount, got {other:?}"),
+        }
+        // conv nets exceed one chip / hit unsupported kinds as typed errors
+        let big = model::resnet19();
+        let blobs: Vec<Vec<f32>> = big.layers.iter().map(|_| Vec::new()).collect();
+        match compile(&big, &blobs, &Options::default()) {
+            Err(CompileError::TooManyCores { cores, capacity }) => {
+                assert!(cores > capacity);
+            }
+            Err(CompileError::UnsupportedLayer { .. }) => {}
+            other => panic!("expected a typed failure, got {other:?}"),
+        }
     }
 }

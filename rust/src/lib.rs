@@ -16,8 +16,31 @@
 //! * **Layer 1 (python/compile/kernels)** — the fused LIF-step Pallas
 //!   kernel used by the Layer-2 models, verified against a pure-jnp oracle.
 //!
+//! ## Running a model: the [`api`] layer
+//!
+//! Everything runs through one pipeline — build a network (or pick a
+//! packaged [`api::workloads::Workload`]), compile and deploy it with the
+//! [`api::Taibai`] builder, then drive the resulting [`api::Session`]:
+//!
+//! ```no_run
+//! use taibai::api::{evaluate, Backend, Workload};
+//! use taibai::api::workloads::Shd;
+//!
+//! let workload = Shd { dendrites: true };
+//! // the same workload runs on either engine: the event-detailed chip …
+//! let mut chip = workload.session(Backend::Detailed, 42).expect("compile");
+//! let report = evaluate(&workload, &mut chip, 20, 42).expect("run");
+//! println!("{}: {:.1}% @ {:.2} W", report.name, report.accuracy * 100.0, report.power_w);
+//! // … or the fast analytic model (Table II-scale nets)
+//! let mut fast = workload.session(Backend::Analytic, 42).expect("deploy");
+//! ```
+//!
+//! See `rust/README.md` for the builder-level quickstart and the
+//! migration map from the pre-`Session` free functions.
+//!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) so the Rust binary never calls into Python at run time.
+//! (`xla` crate) when the optional `pjrt` feature is enabled; the default
+//! build is dependency-free so the simulator and compiler work offline.
 
 pub mod util;
 pub mod isa;
@@ -34,5 +57,6 @@ pub mod datasets;
 pub mod runtime;
 pub mod coordinator;
 pub mod metrics;
+pub mod api;
 pub mod apps;
 pub mod bench;

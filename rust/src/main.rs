@@ -4,16 +4,18 @@
 //! * `info`                         — chip characteristics (Table III view)
 //! * `asm <file.s>`                 — assemble a TaiBai program, print words
 //! * `disasm <file.s>`              — assemble then disassemble (roundtrip view)
-//! * `run-app <ecg|shd|bci>`        — deploy an application on the detailed
-//!                                    engine with random-init weights (or
-//!                                    trained artifacts when present)
-//! * `fast <plif|5blocks|resnet19>` — analytic (fast-mode) report for the
+//! * `run-app <ecg|shd|bci>`        — run an application through the unified
+//!                                    `api::Session` pipeline; pick the engine
+//!                                    with `--backend detailed|analytic`
+//! * `fast <plif|5blocks|resnet19>` — analytic-backend report for the
 //!                                    Table II benchmark nets
 //! * `storage <vgg16|resnet18|…>`   — Fig 14 topology-table storage view
 //! * `baseline <model.hlo.txt>`     — load + execute an AOT artifact via PJRT
+//!                                    (requires the `pjrt` feature)
 
+use taibai::api::{evaluate, Backend, Sample, Taibai, Workload};
+use taibai::api::workloads::{Bci, Ecg, Shd};
 use taibai::bench::Table;
-use taibai::chip::fast::{simulate, FastParams};
 use taibai::energy::EnergyModel;
 use taibai::model;
 use taibai::topology::storage::{storage, ALL_SCHEMES};
@@ -34,6 +36,14 @@ fn main() {
             std::process::exit(2);
         }
     }
+}
+
+fn backend_flag(args: &Args) -> Backend {
+    let name = args.get_or("backend", "detailed");
+    Backend::parse(name).unwrap_or_else(|| {
+        eprintln!("unknown backend {name:?} (detailed|analytic)");
+        std::process::exit(2);
+    })
 }
 
 fn info() {
@@ -89,23 +99,39 @@ fn net_by_name(name: &str) -> model::NetDef {
     }
 }
 
+/// Table II benchmark nets on the analytic backend.
 fn fast(args: &Args) {
     let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("plif");
     let net = net_by_name(name);
-    let mut p = FastParams::default();
-    p.default_rate = args.f64("rate", 0.10);
-    let r = simulate(&net, &p, &EnergyModel::default());
+    let rate = args.f64("rate", 0.10);
+    let channels = net.layers.first().map(|l| match l {
+        model::Layer::Input { size } => *size,
+        _ => 0,
+    });
+    let timesteps = net.timesteps;
+    let net_name = net.name.clone();
+    let neurons = net.total_neurons();
+
+    let mut session = Taibai::new(net)
+        .backend(Backend::Analytic)
+        .rates(vec![rate]) // pin the input-layer rate exactly
+        .default_rate(rate)
+        .build()
+        .expect("analytic deploy");
+    let sample = Sample::poisson(channels.unwrap_or(0), timesteps, rate, 42);
+    session.run(&sample).expect("analytic run");
+    let m = session.metrics();
+
     let mut t = Table::new(&["net", "neurons", "cores", "chips", "fps", "power W", "fps/W", "pJ/SOP"]);
-    let em = EnergyModel::default();
     t.row(&[
-        net.name.clone(),
-        format!("{}", net.total_neurons()),
-        format!("{}", r.used_cores),
-        format!("{}", r.chips),
-        format!("{:.1}", r.fps),
-        format!("{:.2}", r.power_w),
-        format!("{:.1}", r.fps_per_w),
-        format!("{:.2}", em.pj_per_sop(&r.activity)),
+        net_name,
+        format!("{neurons}"),
+        format!("{}", m.used_cores),
+        format!("{}", m.chips),
+        format!("{:.1}", m.fps),
+        format!("{:.2}", m.power_w),
+        format!("{:.1}", m.fps_per_w),
+        format!("{:.2}", m.pj_per_sop),
     ]);
     t.print();
 }
@@ -129,27 +155,51 @@ fn storage_cmd(args: &Args) {
     t.print();
 }
 
+/// One application, one Session, either backend — the programmability
+/// pitch in one subcommand.
 fn run_app(args: &Args) {
     let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("ecg");
     let n = args.usize("samples", 3);
-    // The examples/ binaries carry the full application flows; the CLI
-    // exposes the quick random-weight smoke path.
-    match name {
-        "ecg" => {
-            let r = taibai::apps::run_ecg_demo(n, 42);
-            println!("ECG SRNN on-chip: {} samples, {:.1}% per-step accuracy, {:.3} W model power", n, r.accuracy * 100.0, r.power_w);
-        }
-        "shd" => {
-            let r = taibai::apps::run_shd_demo(n, 42);
-            println!("SHD DHSNN on-chip: {} samples, {:.1}% accuracy, {:.3} W model power", n, r.accuracy * 100.0, r.power_w);
-        }
-        "bci" => {
-            let r = taibai::apps::run_bci_demo(n, 42);
-            println!("BCI on-chip: {} samples, {:.1}% accuracy, {:.3} W model power", n, r.accuracy * 100.0, r.power_w);
-        }
+    let seed = args.u64("seed", 42);
+    let backend = backend_flag(args);
+
+    let workload: Box<dyn Workload> = match name {
+        "ecg" => Box::new(Ecg { heterogeneous: true }),
+        "shd" => Box::new(Shd { dendrites: true }),
+        "bci" => Box::new(Bci::default()),
         other => {
             eprintln!("unknown app {other:?} (ecg|shd|bci)");
             std::process::exit(2);
+        }
+    };
+
+    let mut session = match workload.session(backend, seed) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("compile failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    match evaluate(workload.as_ref(), &mut session, n, seed) {
+        Ok(r) => {
+            println!(
+                "{} on the {} backend: {} samples, {:.1}% accuracy, {:.3} W, \
+                 {:.1} fps/W ({} cores)",
+                r.name,
+                backend,
+                n,
+                r.accuracy * 100.0,
+                r.power_w,
+                r.fps_per_w,
+                r.used_cores,
+            );
+            if backend == Backend::Analytic {
+                println!("(analytic mode reports performance only; accuracy needs --backend detailed)");
+            }
+        }
+        Err(e) => {
+            eprintln!("run failed: {e}");
+            std::process::exit(1);
         }
     }
 }
@@ -159,12 +209,18 @@ fn baseline(args: &Args) {
         eprintln!("usage: taibai baseline <model.hlo.txt>");
         std::process::exit(2);
     };
-    let engine = taibai::runtime::Engine::cpu().expect("PJRT CPU client");
+    let engine = match taibai::runtime::Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("PJRT unavailable: {e}");
+            std::process::exit(1);
+        }
+    };
     println!("platform: {}", engine.platform());
     match engine.load_hlo(path) {
         Ok(exe) => println!("compiled {} OK", exe.name),
         Err(e) => {
-            eprintln!("failed: {e:#}");
+            eprintln!("failed: {e}");
             std::process::exit(1);
         }
     }

@@ -5,10 +5,14 @@
 //! * tensor  — magic `TBD1`, u32 rank, rank×u32 dims, then ∏dims×f32.
 //!
 //! Written by `python/compile/aot.py`, read here at deploy time.
+//! Dependency-free (std only) so the default offline build carries it.
 
-use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
+use std::io::{Error, ErrorKind, Read, Result, Write};
 use std::path::Path;
+
+fn bad(path: &Path, what: String) -> Error {
+    Error::new(ErrorKind::InvalidData, format!("{}: {what}", path.display()))
+}
 
 pub fn write_weights(path: &Path, w: &[f32]) -> Result<()> {
     let mut f = std::fs::File::create(path)?;
@@ -22,11 +26,11 @@ pub fn write_weights(path: &Path, w: &[f32]) -> Result<()> {
 
 pub fn read_weights(path: &Path) -> Result<Vec<f32>> {
     let mut f = std::fs::File::open(path)
-        .with_context(|| format!("opening weights {}", path.display()))?;
+        .map_err(|e| Error::new(e.kind(), format!("opening weights {}: {e}", path.display())))?;
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic)?;
     if &magic != b"TBW1" {
-        bail!("{}: bad weights magic {magic:?}", path.display());
+        return Err(bad(path, format!("bad weights magic {magic:?}")));
     }
     let mut n4 = [0u8; 4];
     f.read_exact(&mut n4)?;
@@ -50,11 +54,11 @@ pub fn write_tensor(path: &Path, dims: &[usize], data: &[f32]) -> Result<()> {
 
 pub fn read_tensor(path: &Path) -> Result<(Vec<usize>, Vec<f32>)> {
     let mut f = std::fs::File::open(path)
-        .with_context(|| format!("opening tensor {}", path.display()))?;
+        .map_err(|e| Error::new(e.kind(), format!("opening tensor {}: {e}", path.display())))?;
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic)?;
     if &magic != b"TBD1" {
-        bail!("{}: bad tensor magic {magic:?}", path.display());
+        return Err(bad(path, format!("bad tensor magic {magic:?}")));
     }
     let mut b4 = [0u8; 4];
     f.read_exact(&mut b4)?;
@@ -111,7 +115,9 @@ mod tests {
     fn bad_magic_rejected() {
         let dir = std::env::temp_dir().join("taibai_test_bad.bin");
         std::fs::write(&dir, b"XXXX\x01\x00\x00\x00").unwrap();
-        assert!(read_weights(&dir).is_err());
+        let err = read_weights(&dir).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+        assert!(err.to_string().contains("taibai_test_bad"));
         assert!(read_tensor(&dir).is_err());
     }
 }

@@ -1,0 +1,141 @@
+//! Integration coverage for the `taibai::api` Session pipeline:
+//! * every packaged workload builds a `Session` on both backends;
+//! * a fast-vs-detailed parity smoke test (the two engines must agree
+//!   on activity/energy within the documented band);
+//! * `run_batch` returns exactly what sequential `run` calls return.
+
+use taibai::api::workloads::{Bci, Ecg, Shd};
+use taibai::api::{evaluate, Backend, Sample, Taibai, Workload};
+use taibai::energy::EnergyModel;
+use taibai::model::{Layer, NetDef, NeuronModel};
+
+#[test]
+fn all_workloads_build_sessions_on_both_backends() {
+    let workloads: Vec<Box<dyn Workload>> = vec![
+        Box::new(Ecg { heterogeneous: true }),
+        Box::new(Shd { dendrites: true }),
+        Box::new(Bci::default()),
+    ];
+    for w in &workloads {
+        for backend in [Backend::Detailed, Backend::Analytic] {
+            let session = w
+                .session(backend, 42)
+                .unwrap_or_else(|e| panic!("{} on {backend}: {e}", w.name()));
+            assert_eq!(session.backend(), backend);
+            assert!(
+                session.info().used_cores >= 1,
+                "{} on {backend}: no cores",
+                w.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn same_workload_runs_on_both_backends() {
+    // one flag flips the engine; the workload protocol is unchanged
+    let w = Ecg { heterogeneous: true };
+    for backend in [Backend::Detailed, Backend::Analytic] {
+        let mut session = w.session(backend, 7).unwrap();
+        let r = evaluate(&w, &mut session, 1, 7).unwrap();
+        let m = session.metrics();
+        assert!(m.sops > 0, "{backend}: no synaptic work recorded");
+        assert!(m.fps > 0.0 && m.power_w > 0.0, "{backend}: empty metrics");
+        if backend == Backend::Detailed {
+            assert!(r.accuracy >= 0.0 && r.accuracy <= 1.0);
+            assert!(r.spikes_per_sample > 0.0);
+        }
+    }
+}
+
+#[test]
+fn fast_vs_detailed_parity_on_a_small_net() {
+    // silent hidden layer makes the detailed SOP count deterministic:
+    // every input spike costs exactly `output` accumulates
+    let mut net = NetDef::new("parity", 30);
+    net.layers.push(Layer::Input { size: 24 });
+    net.layers.push(Layer::Fc {
+        input: 24,
+        output: 48,
+        neuron: NeuronModel::Lif { tau: 0.5, vth: 50.0 },
+    });
+    let w1 = vec![0.05f32; 24 * 48];
+    let sample = Sample::poisson(24, 30, 0.3, 5);
+    let measured = sample.input_rate(24);
+
+    let mut detailed = Taibai::new(net.clone())
+        .weights(vec![vec![], w1])
+        .build()
+        .unwrap();
+    detailed.run(&sample).unwrap();
+
+    let mut fast = Taibai::new(net)
+        .backend(Backend::Analytic)
+        .rates(vec![measured, 0.0])
+        .build()
+        .unwrap();
+    fast.run(&sample).unwrap();
+
+    let da = detailed.activity();
+    let fa = fast.activity();
+    assert!(da.nc.sops > 0);
+    let sop_err =
+        (fa.nc.sops as f64 - da.nc.sops as f64).abs() / da.nc.sops as f64;
+    assert!(sop_err < 0.05, "SOP divergence {sop_err}: {} vs {}", da.nc.sops, fa.nc.sops);
+
+    let em = EnergyModel::default();
+    let de = em.energy(&da).dynamic_j();
+    let fe = em.energy(&fa).dynamic_j();
+    let e_err = (fe - de).abs() / de;
+    assert!(e_err < 0.6, "energy divergence {e_err}: {de} vs {fe}");
+}
+
+#[test]
+fn run_batch_equals_sequential_runs() {
+    let w = Shd { dendrites: true };
+    let data = w.dataset(6, 3);
+
+    let mut seq = w.session(Backend::Detailed, 3).unwrap();
+    let mut expected = Vec::new();
+    for s in &data {
+        expected.push(seq.run(s).unwrap());
+    }
+
+    let mut par = w.session(Backend::Detailed, 3).unwrap();
+    let got = par.run_batch(&data).unwrap();
+
+    assert_eq!(got.len(), expected.len());
+    for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+        assert_eq!(g.outputs, e.outputs, "sample {i}: outputs diverged");
+        assert_eq!(g.spikes, e.spikes, "sample {i}: spike counts diverged");
+    }
+    assert_eq!(par.samples_run(), data.len() as u64);
+    // batch workers' activity is folded into the session totals
+    assert_eq!(par.activity().nc.sops, seq.activity().nc.sops);
+}
+
+#[test]
+fn run_batch_on_analytic_backend_is_sequential_but_equal() {
+    let w = Ecg { heterogeneous: true };
+    let data = w.dataset(3, 9);
+    let mut a = w.session(Backend::Analytic, 9).unwrap();
+    let batch = a.run_batch(&data).unwrap();
+    let mut b = w.session(Backend::Analytic, 9).unwrap();
+    let seq: Vec<_> = data.iter().map(|s| b.run(s).unwrap()).collect();
+    for (x, y) in batch.iter().zip(&seq) {
+        assert_eq!(x.spikes, y.spikes);
+        assert_eq!(x.packets, y.packets);
+    }
+}
+
+#[test]
+fn learning_session_fine_tunes_through_the_api() {
+    // the BCI protocol end-to-end: build with learning, prepare
+    // (on-chip fine-tune), decode — all through Session calls
+    let w = Bci { subpaths: 8, day: 2 };
+    let mut session = w.session(Backend::Detailed, 11).unwrap();
+    let r = evaluate(&w, &mut session, 4, 11).unwrap();
+    assert!(r.accuracy >= 0.0 && r.accuracy <= 1.0);
+    // 32 fine-tune runs + 4 eval runs all went through the session
+    assert!(session.samples_run() >= 36, "{}", session.samples_run());
+}
