@@ -27,7 +27,7 @@ fn main() {
     let w1 = vec![0.05f32; 64 * 128];
     let w2 = vec![0.05f32; 128 * 16];
     let r = compiler::compile(&net, &vec![vec![], w1, w2], &Options::default()).unwrap();
-    let mut d = Deployment::new(r.compiled);
+    let mut d = Deployment::new(r.compiled).unwrap();
 
     let spikes = vec![(0..64u16).collect::<Vec<_>>(); 20];
     d.run_spikes(&SpikeSample { spikes, labels: vec![0] }).unwrap();

@@ -1,0 +1,111 @@
+//! Wake-set sparsity bench: pins the event-driven engine's win on the
+//! SHD workload (700 input channels, the widest paper app).
+//!
+//! For input sparsity levels 0% (quiescent), 1%, 10%, and 50% it
+//! reports CC visits per timestep (INTEG + FIRE + delay phases, from
+//! [`taibai::chip::SchedStats`]) and wall-clock per sample. The claim
+//! under test: visits scale with the columns actually touched by
+//! traffic — a quiescent step visits **zero** columns — not with
+//! deployment size, which is what a scan-every-column engine pays.
+//!
+//! ```sh
+//! cargo bench --bench bench_wakeset_sparsity              # full run
+//! cargo bench --bench bench_wakeset_sparsity -- \
+//!     --samples 1 --timesteps 10                          # CI smoke
+//! ```
+
+use std::time::Instant;
+
+use taibai::api::workloads::shd_weights;
+use taibai::bench::Table;
+use taibai::compiler::{self, Options};
+use taibai::coordinator::Deployment;
+use taibai::datasets::SpikeSample;
+use taibai::model;
+use taibai::util::cli::Args;
+use taibai::util::Rng;
+
+const CHANNELS: usize = 700;
+
+fn bernoulli_sample(timesteps: usize, rate: f64, rng: &mut Rng) -> SpikeSample {
+    let mut spikes = Vec::with_capacity(timesteps);
+    for _ in 0..timesteps {
+        let mut at = Vec::new();
+        for ch in 0..CHANNELS {
+            if rng.chance(rate) {
+                at.push(ch as u16);
+            }
+        }
+        spikes.push(at);
+    }
+    SpikeSample { spikes, labels: vec![0] }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let samples = args.usize("samples", 5);
+    let timesteps = args.usize("timesteps", 100);
+    let seed = args.u64("seed", 42);
+
+    let net = model::dhsnn_shd(true);
+    let r = compiler::compile(
+        &net,
+        &shd_weights(true, seed),
+        &Options {
+            rates: vec![0.012, 0.025, 0.1],
+            ..Default::default()
+        },
+    )
+    .expect("compiling the SHD workload");
+    let configured_ccs = r.compiled.config.ccs.len();
+    let compiled = r.compiled;
+    println!(
+        "SHD deployment: {} CCs / {} NCs configured, {timesteps} steps x {samples} samples per level\n",
+        configured_ccs,
+        compiled.used_cores
+    );
+
+    let mut t = Table::new(&[
+        "input rate",
+        "CC visits/step",
+        "of configured",
+        "ms/sample",
+        "spikes/sample",
+    ]);
+    for &rate in &[0.0, 0.01, 0.10, 0.50] {
+        let mut d = Deployment::new(compiled.clone()).expect("deploying");
+        let mut rng = Rng::new(seed ^ (rate * 1000.0) as u64);
+        let data: Vec<SpikeSample> = (0..samples)
+            .map(|_| bernoulli_sample(timesteps, rate, &mut rng))
+            .collect();
+        let mut spikes_total = 0u64;
+        let start = Instant::now();
+        for s in &data {
+            d.reset_state().expect("resetting between samples");
+            spikes_total += d.run_spikes(s).expect("running sample").spikes;
+        }
+        let secs = start.elapsed().as_secs_f64();
+        let sched = d.chip.sched;
+        let visits =
+            sched.integ_cc_visits + sched.fire_cc_visits + sched.delay_cc_visits;
+        let per_step = visits as f64 / sched.steps.max(1) as f64;
+        t.row(&[
+            format!("{:>4.0}%", rate * 100.0),
+            format!("{per_step:.2}"),
+            format!("{:.0}%", per_step / configured_ccs as f64 * 100.0),
+            format!("{:.3}", secs / samples as f64 * 1e3),
+            format!("{:.1}", spikes_total as f64 / samples as f64),
+        ]);
+        if rate == 0.0 {
+            assert_eq!(
+                visits, 0,
+                "a quiescent deployment must visit zero columns"
+            );
+        }
+    }
+    t.print();
+    println!(
+        "\nCC visits track active columns (0 when quiescent), not the \
+         {configured_ccs}-column deployment — the wake-set sparsity win."
+    );
+}

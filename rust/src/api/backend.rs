@@ -25,8 +25,9 @@ pub trait ExecBackend: Send {
     fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError>;
 
     /// Zero dynamic state (membranes, currents, accumulators); weights
-    /// and programs survive.
-    fn reset(&mut self);
+    /// and programs survive. Fails only on a corrupt deployment image
+    /// (the detailed engine's host pokes are range-checked).
+    fn reset(&mut self) -> Result<(), RunError>;
 
     /// Inject output errors and trigger one on-chip learning sweep.
     fn learn_step(&mut self, errors: &[f32]) -> Result<(), RunError>;
@@ -58,12 +59,19 @@ pub struct DetailedBackend {
 }
 
 impl DetailedBackend {
-    pub fn new(compiled: Compiled, em: EnergyModel, timesteps: usize) -> DetailedBackend {
-        DetailedBackend {
-            dep: Deployment::new(compiled),
+    /// Deploy a compiled image on a fresh chip. Fails with a
+    /// [`RunError::Trap`] when the image addresses memory outside the
+    /// die (surfaced instead of panicking the simulator).
+    pub fn new(
+        compiled: Compiled,
+        em: EnergyModel,
+        timesteps: usize,
+    ) -> Result<DetailedBackend, RunError> {
+        Ok(DetailedBackend {
+            dep: Deployment::new(compiled).map_err(RunError::Trap)?,
             em,
             timesteps,
-        }
+        })
     }
 
     /// The wrapped deployment (host monitoring paths: `peek_weights`,
@@ -81,8 +89,8 @@ impl ExecBackend for DetailedBackend {
         }
     }
 
-    fn reset(&mut self) {
-        self.dep.reset_state();
+    fn reset(&mut self) -> Result<(), RunError> {
+        self.dep.reset_state().map_err(RunError::Trap)
     }
 
     fn learn_step(&mut self, errors: &[f32]) -> Result<(), RunError> {
@@ -110,7 +118,7 @@ impl ExecBackend for DetailedBackend {
             self.dep.compiled.clone(),
             self.em,
             self.timesteps,
-        )))
+        )?))
     }
 
     fn metrics(&self, a: &ChipActivity, samples: u64) -> SessionMetrics {
@@ -196,7 +204,9 @@ impl ExecBackend for AnalyticBackend {
         Ok(run)
     }
 
-    fn reset(&mut self) {}
+    fn reset(&mut self) -> Result<(), RunError> {
+        Ok(())
+    }
 
     fn learn_step(&mut self, _errors: &[f32]) -> Result<(), RunError> {
         Err(RunError::Unsupported(

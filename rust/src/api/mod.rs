@@ -356,7 +356,8 @@ impl Taibai {
                     init_packets: report.compiled.config.init_packets(),
                 };
                 let timesteps = self.net.timesteps;
-                let be = DetailedBackend::new(report.compiled, self.em, timesteps);
+                let be = DetailedBackend::new(report.compiled, self.em, timesteps)
+                    .map_err(|e| CompileError::Deploy { msg: e.to_string() })?;
                 Ok(Session {
                     net: self.net,
                     learning: self.opts.learning,
@@ -414,7 +415,7 @@ pub struct Session {
 impl Session {
     /// Run one sample from a clean dynamic state.
     pub fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
-        self.backend.reset();
+        self.backend.reset()?;
         let run = self.backend.run(sample)?;
         self.samples_run += 1;
         Ok(run)
@@ -459,7 +460,7 @@ impl Session {
                     handles.push(sc.spawn(move || {
                         let mut out = Vec::with_capacity(chunk.len());
                         for s in chunk {
-                            be.reset();
+                            be.reset()?;
                             out.push(be.run(s)?);
                         }
                         Ok::<(Vec<SampleRun>, ChipActivity), RunError>((out, be.activity()))
@@ -503,8 +504,8 @@ impl Session {
 
     /// Zero dynamic state explicitly (run() already does this per
     /// sample; useful mid-protocol, e.g. between fine-tune phases).
-    pub fn reset(&mut self) {
-        self.backend.reset();
+    pub fn reset(&mut self) -> Result<(), RunError> {
+        self.backend.reset()
     }
 
     /// Performance metrics over everything run so far.

@@ -43,7 +43,7 @@ fn deploy(w: &dyn Workload, seed: u64) -> Deployment {
         },
     )
     .expect("compiling workload");
-    Deployment::new(r.compiled)
+    Deployment::new(r.compiled).expect("applying deployment image")
 }
 
 #[deprecated(note = "use Ecg { heterogeneous }.session(Backend::Detailed, seed)")]
@@ -69,7 +69,7 @@ pub fn deploy_bci(subpaths: usize, learning: bool, seed: u64) -> Deployment {
         },
     )
     .expect("compiling BCI net");
-    Deployment::new(r.compiled)
+    Deployment::new(r.compiled).expect("applying deployment image")
 }
 
 fn run_demo(w: &dyn Workload, samples: usize, seed: u64) -> AppReport {
@@ -97,7 +97,7 @@ pub fn run_bci_demo(samples: usize, seed: u64) -> AppReport {
 /// Classify one BCI trial (host-side decode of a raw deployment).
 #[deprecated(note = "use Session::run + Workload::decode")]
 pub fn bci_classify(d: &mut Deployment, s: &crate::datasets::DenseSample) -> usize {
-    d.reset_state();
+    d.reset_state().expect("resetting dynamic state");
     let run = d.run_values(s).expect("BCI run");
     argmax(&run.summed())
 }
@@ -107,7 +107,7 @@ pub fn bci_classify(d: &mut Deployment, s: &crate::datasets::DenseSample) -> usi
 #[deprecated(note = "use Workload::prepare (workloads::Bci) on a learning Session")]
 pub fn bci_finetune(d: &mut Deployment, train: &[crate::datasets::DenseSample]) {
     for s in train {
-        d.reset_state();
+        d.reset_state().expect("resetting dynamic state");
         let run = d.run_values(s).expect("BCI run");
         let y = softmax(&run.summed());
         let mut err = vec![0.0f32; 4];

@@ -14,6 +14,37 @@
 //! The detailed engine executes real ISA programs per event; the
 //! [`fast`] sibling replaces per-event interpretation with analytic
 //! event counts for large models (see DESIGN.md "fidelity modes").
+//!
+//! # Wake-set scheduling
+//!
+//! The engine is event-driven end to end: instead of scanning every
+//! configured column each timestep, [`Chip`] maintains three bitset
+//! wake sets over the 132 CCs —
+//!
+//! * **integ** — columns that received a packet this step (host inputs,
+//!   spikes fired last step, expired delay lines). Only these run the
+//!   INTEG drain.
+//! * **live** — columns that have received *any* packet since
+//!   configure/flush. Until a column is touched its dynamic state is
+//!   provably still all-zero, so the FIRE stage skips it entirely; once
+//!   touched it stays in the set (membrane decay must keep running) so
+//!   results are bit-identical to a scan-everything engine. Relative to
+//!   the pre-wake-set engine this is a deliberate semantic change:
+//!   never-touched columns no longer execute zero-state FIRE programs,
+//!   so their idle-work counters (`instret`/`cycles`/`wakeups`) drop to
+//!   zero while every observable output — spikes, SOPs, readout rows,
+//!   host outputs of touched columns — is unchanged.
+//! * **delayed** — columns holding spikes in skip-connection delay
+//!   lines; only these are ticked at the step boundary.
+//!
+//! A fully quiescent network therefore costs *zero* CC visits per step,
+//! and cost scales with the columns actually touched by traffic, not
+//! with deployment size — the paper's temporal/spatial-sparsity claim
+//! made structural. [`SchedStats`] counts the visits (the
+//! `bench_wakeset_sparsity` bench reports them per sparsity level);
+//! setting [`Chip::scan_all`] switches to a naive scan-every-column
+//! reference that derives the same work sets by predicate scan, which
+//! the wake-set parity tests compare against bit-for-bit.
 
 pub mod config;
 pub mod fast;
@@ -23,15 +54,23 @@ use crate::noc::{router::Mesh, Packet, NUM_CCS};
 use crate::scheduler::{CorticalColumn, HostOutput, Minted};
 
 /// Result of one timestep.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct StepResult {
     pub outputs: Vec<HostOutput>,
     pub packets_routed: u64,
     pub spikes: u64,
 }
 
+impl StepResult {
+    fn clear(&mut self) {
+        self.outputs.clear();
+        self.packets_routed = 0;
+        self.spikes = 0;
+    }
+}
+
 /// Whole-chip activity summary (feeds the energy model).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ChipActivity {
     pub nc: crate::nc::NcStats,
     pub dt_reads: u64,
@@ -42,6 +81,88 @@ pub struct ChipActivity {
     pub timesteps: u64,
 }
 
+/// Wake-set bookkeeping counters (not part of [`ChipActivity`]: they
+/// measure *scheduler* work, which the energy model prices at zero —
+/// the counters exist so benches/tests can pin the sparsity win).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// Columns visited by the INTEG drain.
+    pub integ_cc_visits: u64,
+    /// Columns whose FIRE stage ran.
+    pub fire_cc_visits: u64,
+    /// Columns whose delay lines were ticked.
+    pub delay_cc_visits: u64,
+    /// Timesteps executed.
+    pub steps: u64,
+}
+
+const WAKE_WORDS: usize = (NUM_CCS + 63) / 64;
+
+/// A fixed-size bitset over the 132 CCs. Iteration is in ascending CC
+/// id (matching the scan order of the naive reference engine) and works
+/// on a copied snapshot, so the set can be mutated mid-iteration.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WakeSet {
+    bits: [u64; WAKE_WORDS],
+}
+
+impl WakeSet {
+    #[inline]
+    pub fn insert(&mut self, id: usize) {
+        self.bits[id / 64] |= 1 << (id % 64);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, id: usize) {
+        self.bits[id / 64] &= !(1 << (id % 64));
+    }
+
+    #[inline]
+    pub fn contains(&self, id: usize) -> bool {
+        self.bits[id / 64] >> (id % 64) & 1 == 1
+    }
+
+    pub fn clear(&mut self) {
+        self.bits = [0; WAKE_WORDS];
+    }
+
+    pub fn count(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.iter().all(|&w| w == 0)
+    }
+
+    /// Ascending-id iteration over a snapshot of the set.
+    pub fn iter(&self) -> WakeIter {
+        WakeIter { bits: self.bits, word: 0 }
+    }
+}
+
+/// Snapshot iterator over a [`WakeSet`].
+pub struct WakeIter {
+    bits: [u64; WAKE_WORDS],
+    word: usize,
+}
+
+impl Iterator for WakeIter {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.word < WAKE_WORDS {
+            let w = self.bits[self.word];
+            if w == 0 {
+                self.word += 1;
+                continue;
+            }
+            self.bits[self.word] = w & (w - 1); // clear lowest set bit
+            return Some(self.word * 64 + w.trailing_zeros() as usize);
+        }
+        None
+    }
+}
+
 /// The TaiBai chip (one die; multi-chip scaling is modeled analytically
 /// through [`crate::noc::router::inter_chip_cost`]).
 pub struct Chip {
@@ -50,10 +171,24 @@ pub struct Chip {
     pub timestep: u64,
     /// CC used as the host-side injection proxy (edge of the die).
     pub proxy_cc: usize,
+    /// Naive reference mode: derive each phase's work set by scanning
+    /// every column's predicate instead of the incremental wake sets.
+    /// Used by the wake-set parity tests; results must be identical.
+    pub scan_all: bool,
+    /// Wake-set bookkeeping counters (see [`SchedStats`]).
+    pub sched: SchedStats,
+    /// Packets minted this step, delivered next step (reused buffer).
     pending: Vec<Minted>,
-    /// CCs with configured NCs — the only ones the phase engine visits
-    /// (small deployments use 1–2 of the 132 columns; §Perf).
-    active: Vec<usize>,
+    /// Previous step's `pending` while it is being delivered.
+    inbox: Vec<Minted>,
+    /// Columns woken by a delivery this step (INTEG work).
+    integ_wake: WakeSet,
+    /// Columns touched since configure/flush (FIRE work).
+    live: WakeSet,
+    /// Columns holding delayed spikes.
+    delayed: WakeSet,
+    /// Reusable delivery buffer for [`Mesh::route_into`].
+    route_buf: Vec<usize>,
 }
 
 impl Chip {
@@ -65,16 +200,47 @@ impl Chip {
             mesh: Mesh::new(),
             timestep: 0,
             proxy_cc: crate::noc::cc_id(0, 5),
+            scan_all: false,
+            sched: SchedStats::default(),
             pending: Vec::new(),
-            active: Vec::new(),
+            inbox: Vec::new(),
+            integ_wake: WakeSet::default(),
+            live: WakeSet::default(),
+            delayed: WakeSet::default(),
+            route_buf: Vec::new(),
         }
     }
 
-    /// Apply a compiled deployment image (the INIT stage).
-    pub fn configure(&mut self, cfg: &config::ChipConfig) {
-        let mut active: Vec<usize> = cfg.ccs.keys().copied().collect();
-        active.sort_unstable();
-        self.active = active;
+    /// Apply a compiled deployment image (the INIT stage). Columns are
+    /// *not* woken: a freshly configured chip is quiescent until traffic
+    /// arrives. Returns a [`Trap`] (instead of panicking) when the image
+    /// addresses a CC/NC outside the die or a memory range outside the
+    /// NC data memory.
+    pub fn configure(&mut self, cfg: &config::ChipConfig) -> Result<(), Trap> {
+        // Validate every image against the die before mutating anything,
+        // so a rejected configuration leaves the chip untouched. Range
+        // checks share `check_host_range` with the poke/peek paths.
+        for (&cc_id, image) in &cfg.ccs {
+            if cc_id >= self.ccs.len() {
+                return Err(host_trap(format!(
+                    "configure: CC id {cc_id} outside the {}-column die",
+                    self.ccs.len()
+                )));
+            }
+            if image.ncs.len() > self.ccs[cc_id].ncs.len() {
+                return Err(host_trap(format!(
+                    "configure: CC {cc_id} image carries {} NCs, die has {}",
+                    image.ncs.len(),
+                    self.ccs[cc_id].ncs.len()
+                )));
+            }
+            for (i, nci) in image.ncs.iter().enumerate() {
+                let Some(nci) = nci else { continue };
+                for (addr, words) in &nci.mem {
+                    check_host_range(&self.ccs, cc_id, i as u8, *addr, words.len())?;
+                }
+            }
+        }
         for (&cc_id, image) in &cfg.ccs {
             let cc = &mut self.ccs[cc_id];
             cc.tables = image.tables.clone();
@@ -84,85 +250,209 @@ impl Chip {
                 nc.load_integ(&nci.integ);
                 nc.load_fire(&nci.fire);
                 for (addr, words) in &nci.mem {
-                    nc.mem[*addr as usize..*addr as usize + words.len()]
-                        .copy_from_slice(words);
+                    let lo = *addr as usize;
+                    nc.mem[lo..lo + words.len()].copy_from_slice(words);
                 }
                 cc.cfg[i] = nci.cfg;
             }
         }
+        Ok(())
     }
 
     /// Advance one SNN timestep. `inputs` are host packets injected this
     /// step (already carrying their routing mode / fan-in coordinates —
-    /// see [`config::ChipConfig::input_map`]).
+    /// see [`config::ChipConfig::input_map`]). Convenience wrapper over
+    /// [`Chip::step_into`] that allocates a fresh [`StepResult`].
     pub fn step(&mut self, inputs: &[Packet]) -> Result<StepResult, Trap> {
         let mut res = StepResult::default();
+        self.step_into(inputs, &mut res)?;
+        Ok(res)
+    }
+
+    /// Allocation-free stepping: the caller owns (and reuses) the
+    /// [`StepResult`]; all engine-internal buffers (pending packets,
+    /// route deliveries, NC output drains) persist across steps.
+    pub fn step_into(
+        &mut self,
+        inputs: &[Packet],
+        res: &mut StepResult,
+    ) -> Result<(), Trap> {
+        res.clear();
+        self.sched.steps += 1;
 
         // ---- INTEG ----------------------------------------------------
-        let pending = std::mem::take(&mut self.pending);
-        for m in &pending {
-            self.deliver(m.src_cc, &m.packet, &mut res);
+        // Swap last step's minted packets into the inbox and deliver
+        // them; columns receiving work join the integ/live wake sets.
+        let mut inbox = std::mem::take(&mut self.inbox);
+        std::mem::swap(&mut self.pending, &mut inbox);
+        for m in &inbox {
+            self.deliver(m.src_cc, &m.packet, res);
         }
+        inbox.clear();
+        self.inbox = inbox;
         for p in inputs {
-            self.deliver(self.proxy_cc, p, &mut res);
+            self.deliver(self.proxy_cc, p, res);
         }
-        // Unconfigured deployments (hand-built tests) visit every CC.
-        let active: Vec<usize> = if self.active.is_empty() {
-            (0..self.ccs.len()).collect()
+        let integ = std::mem::take(&mut self.integ_wake);
+        if self.scan_all {
+            for i in 0..self.ccs.len() {
+                self.integ_cc(i)?;
+            }
         } else {
-            self.active.clone()
-        };
-        for &i in &active {
-            let cc = &mut self.ccs[i];
-            if !cc.is_quiescent() {
-                cc.run_integ()?;
+            for i in integ.iter() {
+                self.integ_cc(i)?;
             }
         }
 
         // ---- FIRE -----------------------------------------------------
-        for &i in &active {
-            let (minted, host) = self.ccs[i].fire(self.timestep)?;
-            res.spikes += minted.len() as u64;
-            self.pending.extend(minted);
-            res.outputs.extend(host);
+        // Visit only live columns; everything else is provably at rest.
+        let live = self.live;
+        if self.scan_all {
+            for i in 0..self.ccs.len() {
+                if self.ccs[i].is_live() {
+                    self.fire_cc(i, res)?;
+                }
+            }
+        } else {
+            for i in live.iter() {
+                self.fire_cc(i, res)?;
+            }
         }
 
         // ---- skip-connection delay lines -------------------------------
-        for &i in &active {
-            let due = self.ccs[i].tick_delayed();
-            res.spikes += due.len() as u64;
-            self.pending.extend(due);
+        let ticked = self.delayed;
+        if self.scan_all {
+            for i in 0..self.ccs.len() {
+                if self.ccs[i].has_delayed() {
+                    self.tick_cc(i, res);
+                }
+            }
+        } else {
+            for i in ticked.iter() {
+                self.tick_cc(i, res);
+            }
         }
 
         self.timestep += 1;
-        Ok(res)
+        Ok(())
     }
 
-    /// Reset dynamic state (membrane potentials are NOT touched — callers
-    /// reconfigure or zero the relevant regions between samples).
+    fn integ_cc(&mut self, i: usize) -> Result<(), Trap> {
+        // deliveries whose packets were all tag-dropped queue no events;
+        // both engines skip the column (identical visit counts)
+        if self.ccs[i].has_pending_events() {
+            self.sched.integ_cc_visits += 1;
+            self.ccs[i].run_integ()?;
+        }
+        Ok(())
+    }
+
+    fn fire_cc(&mut self, i: usize, res: &mut StepResult) -> Result<(), Trap> {
+        self.sched.fire_cc_visits += 1;
+        let before = self.pending.len();
+        {
+            // split borrows: minted packets land directly in `pending`
+            let Chip { ccs, pending, timestep, .. } = self;
+            ccs[i].fire_into(*timestep, pending, &mut res.outputs)?;
+        }
+        res.spikes += (self.pending.len() - before) as u64;
+        if self.ccs[i].has_delayed() {
+            self.delayed.insert(i);
+        }
+        Ok(())
+    }
+
+    fn tick_cc(&mut self, i: usize, res: &mut StepResult) {
+        self.sched.delay_cc_visits += 1;
+        let before = self.pending.len();
+        {
+            let Chip { ccs, pending, timestep, .. } = self;
+            ccs[i].tick_delayed(*timestep, pending);
+        }
+        res.spikes += (self.pending.len() - before) as u64;
+        if !self.ccs[i].has_delayed() {
+            self.delayed.remove(i);
+        }
+    }
+
+    /// Drop all in-flight work — pending/delayed packets and buffered NC
+    /// events — and put every column back to sleep. Data memory (weights,
+    /// parameters, *and* dynamic state regions) is untouched; callers
+    /// zero the relevant regions between samples (see
+    /// [`crate::coordinator::Deployment::reset_state`]), after which the
+    /// wake sets grow again only with actual traffic.
     pub fn flush_packets(&mut self) {
         self.pending.clear();
+        self.inbox.clear();
+        self.integ_wake.clear();
+        self.delayed.clear();
+        let live = self.live;
+        for i in live.iter() {
+            self.ccs[i].flush();
+        }
+        self.live.clear();
     }
 
     fn deliver(&mut self, src: usize, pkt: &Packet, res: &mut StepResult) {
-        let route = self.mesh.route(src, pkt.mode);
+        let Chip {
+            ccs,
+            mesh,
+            route_buf,
+            integ_wake,
+            live,
+            ..
+        } = self;
+        route_buf.clear();
+        mesh.route_into(src, pkt.mode, route_buf);
         res.packets_routed += 1;
-        for cc in route.deliveries {
-            self.ccs[cc].handle_packet(pkt);
+        for &cc in route_buf.iter() {
+            ccs[cc].handle_packet(pkt);
+            integ_wake.insert(cc);
+            live.insert(cc);
         }
     }
 
     /// Host memory-write (the MemWrite packet path, used by the
     /// coordinator to clear state regions and learning accumulators
-    /// between samples).
-    pub fn poke(&mut self, cc: usize, nc: u8, addr: u16, words: &[u16]) {
-        let mem = &mut self.ccs[cc].ncs[nc as usize].mem;
-        mem[addr as usize..addr as usize + words.len()].copy_from_slice(words);
+    /// between samples). Out-of-range host requests return a [`Trap`]
+    /// instead of panicking the simulator.
+    pub fn poke(
+        &mut self,
+        cc: usize,
+        nc: u8,
+        addr: u16,
+        words: &[u16],
+    ) -> Result<(), Trap> {
+        let mem = self.host_mem(cc, nc, addr, words.len())?;
+        mem.copy_from_slice(words);
+        Ok(())
     }
 
     /// Host memory-read (the MemRead monitoring path of Fig 10).
-    pub fn peek(&self, cc: usize, nc: u8, addr: u16, n: usize) -> Vec<u16> {
-        self.ccs[cc].ncs[nc as usize].mem[addr as usize..addr as usize + n].to_vec()
+    /// Out-of-range host requests return a [`Trap`].
+    pub fn peek(
+        &self,
+        cc: usize,
+        nc: u8,
+        addr: u16,
+        n: usize,
+    ) -> Result<Vec<u16>, Trap> {
+        check_host_range(&self.ccs, cc, nc, addr, n)?;
+        Ok(self.ccs[cc].ncs[nc as usize].mem
+            [addr as usize..addr as usize + n]
+            .to_vec())
+    }
+
+    fn host_mem(
+        &mut self,
+        cc: usize,
+        nc: u8,
+        addr: u16,
+        n: usize,
+    ) -> Result<&mut [u16], Trap> {
+        check_host_range(&self.ccs, cc, nc, addr, n)?;
+        Ok(&mut self.ccs[cc].ncs[nc as usize].mem
+            [addr as usize..addr as usize + n])
     }
 
     /// Aggregate activity across the die.
@@ -181,6 +471,41 @@ impl Chip {
         }
         a
     }
+}
+
+/// A host-side (not NC-program) fault: bad coordinates or memory range
+/// in a monitoring/configuration request.
+fn host_trap(msg: String) -> Trap {
+    Trap { pc: 0, msg }
+}
+
+fn check_host_range(
+    ccs: &[CorticalColumn],
+    cc: usize,
+    nc: u8,
+    addr: u16,
+    n: usize,
+) -> Result<(), Trap> {
+    if cc >= ccs.len() {
+        return Err(host_trap(format!(
+            "host access: CC id {cc} outside the {}-column die",
+            ccs.len()
+        )));
+    }
+    if nc as usize >= ccs[cc].ncs.len() {
+        return Err(host_trap(format!(
+            "host access: NC {nc} outside CC {cc}'s {} cores",
+            ccs[cc].ncs.len()
+        )));
+    }
+    let words = ccs[cc].ncs[nc as usize].mem.len();
+    if addr as usize + n > words {
+        return Err(host_trap(format!(
+            "host access: CC {cc} NC {nc} range [{addr}..{}) exceeds {words} data words",
+            addr as usize + n
+        )));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -280,10 +605,10 @@ mod tests {
         // t=0: input drives layer-1 neuron above threshold; it fires.
         let r0 = chip.step(&[input_packet(1.5)]).unwrap();
         assert_eq!(r0.spikes, 1);
-        // layer-2 readout emits v=0 this step (spike not yet arrived)
-        assert_eq!(r0.outputs.len(), 1);
-        assert_eq!(F16(r0.outputs[0].value).to_f32(), 0.0);
-        // t=1: the spike arrives, readout sees 0.7
+        // event-driven FIRE: the readout column has seen no packet yet,
+        // so it is never visited and emits nothing at t=0
+        assert!(r0.outputs.is_empty());
+        // t=1: the spike arrives, readout wakes and sees 0.7
         let r1 = chip.step(&[]).unwrap();
         assert_eq!(r1.outputs.len(), 1);
         let v = F16(r1.outputs[0].value).to_f32();
@@ -295,8 +620,9 @@ mod tests {
         let mut chip = two_cc_chip();
         let r0 = chip.step(&[input_packet(0.4)]).unwrap();
         assert_eq!(r0.spikes, 0);
+        // layer-1 never fired, so the readout column is never woken
         let r1 = chip.step(&[]).unwrap();
-        assert_eq!(F16(r1.outputs[0].value).to_f32(), 0.0);
+        assert!(r1.outputs.is_empty());
     }
 
     #[test]
@@ -356,10 +682,140 @@ mod tests {
             ccs,
             input_map: vec![],
         };
-        chip.configure(&cfg);
+        chip.configure(&cfg).unwrap();
         let cc = &chip.ccs[cc_id(1, 1)];
         assert_eq!(cc.cfg[0].neurons, 4);
         assert_eq!(cc.ncs[0].mem[10..13], [1, 2, 3]);
         assert_eq!(cc.tables.fanout_dt.len(), 1);
+    }
+
+    #[test]
+    fn configure_rejects_out_of_range_mem_image() {
+        use super::config::*;
+        use std::collections::HashMap;
+        let mut chip = Chip::new(64);
+        let mut ccs = HashMap::new();
+        ccs.insert(
+            cc_id(1, 1),
+            CcImage {
+                tables: crate::topology::CcTables::default(),
+                ncs: vec![Some(NcImage {
+                    integ: assemble("recv").unwrap(),
+                    fire: assemble("recv").unwrap(),
+                    // 64-word memory: [60..65) is out of range
+                    mem: vec![(60, vec![0; 5])],
+                    cfg: crate::scheduler::NcConfig::default(),
+                })],
+            },
+        );
+        let err = chip
+            .configure(&ChipConfig { ccs, input_map: vec![] })
+            .unwrap_err();
+        assert!(err.msg.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn poke_and_peek_trap_instead_of_panicking() {
+        let mut chip = Chip::new(64);
+        // in-range roundtrip still works
+        chip.poke(3, 0, 10, &[7, 8]).unwrap();
+        assert_eq!(chip.peek(3, 0, 10, 2).unwrap(), vec![7, 8]);
+        // out-of-range address
+        assert!(chip.poke(3, 0, 63, &[1, 2]).is_err());
+        assert!(chip.peek(3, 0, 60, 10).is_err());
+        // bad coordinates
+        assert!(chip.poke(999, 0, 0, &[1]).is_err());
+        assert!(chip.peek(0, 9, 0, 1).is_err());
+    }
+
+    #[test]
+    fn quiescent_network_costs_zero_cc_visits() {
+        let mut chip = two_cc_chip();
+        // a configured-but-silent chip must not visit a single column
+        for _ in 0..5 {
+            let r = chip.step(&[]).unwrap();
+            assert_eq!(r.spikes, 0);
+            assert!(r.outputs.is_empty());
+        }
+        assert_eq!(chip.sched.steps, 5);
+        assert_eq!(chip.sched.integ_cc_visits, 0);
+        assert_eq!(chip.sched.fire_cc_visits, 0);
+        assert_eq!(chip.sched.delay_cc_visits, 0);
+        // activity: no NC ever woke, no packet ever routed
+        let a = chip.activity();
+        assert_eq!(a.nc.instret, 0);
+        assert_eq!(a.packets, 0);
+    }
+
+    #[test]
+    fn wake_set_visits_scale_with_traffic_not_deployment() {
+        let mut chip = two_cc_chip();
+        // one step of input wakes exactly the input column; the readout
+        // column joins only when the spike reaches it at t=1
+        chip.step(&[input_packet(1.5)]).unwrap();
+        assert_eq!(chip.sched.integ_cc_visits, 1);
+        assert_eq!(chip.sched.fire_cc_visits, 1);
+        chip.step(&[]).unwrap();
+        assert_eq!(chip.sched.integ_cc_visits, 2);
+        // both columns are now live (sticky: membranes keep decaying)
+        assert_eq!(chip.sched.fire_cc_visits, 1 + 2);
+    }
+
+    #[test]
+    fn flush_packets_puts_the_die_back_to_sleep() {
+        let mut chip = two_cc_chip();
+        chip.step(&[input_packet(1.5)]).unwrap();
+        chip.step(&[]).unwrap();
+        assert!(chip.sched.fire_cc_visits > 0);
+        chip.flush_packets();
+        let visits = chip.sched;
+        chip.step(&[]).unwrap();
+        assert_eq!(chip.sched.integ_cc_visits, visits.integ_cc_visits);
+        assert_eq!(chip.sched.fire_cc_visits, visits.fire_cc_visits);
+    }
+
+    #[test]
+    fn tag_above_255_routes_across_the_mesh() {
+        // regression: the u8 packet tag aliased 0x129 -> 0x29, so the
+        // destination CC tag filter dropped every spike of a large net
+        let mut chip = two_cc_chip();
+        let a = cc_id(2, 2);
+        let b = cc_id(8, 7);
+        chip.ccs[a].tables.fanout_it[0].tag = 0x129;
+        chip.ccs[b].tables.fanin_dt[0].tag = 0x129;
+        chip.step(&[input_packet(1.5)]).unwrap();
+        let r1 = chip.step(&[]).unwrap();
+        assert_eq!(r1.outputs.len(), 1, "tag ≥ 256 spike was dropped");
+        let v = F16(r1.outputs[0].value).to_f32();
+        assert!((v - 0.7).abs() < 2e-3, "v={v}");
+    }
+
+    /// delay=d on the layer-1 fan-out: the readout must see the spike's
+    /// current exactly d steps later than with delay=0.
+    fn arrival_step(delay: u8) -> usize {
+        let mut chip = two_cc_chip();
+        chip.ccs[cc_id(2, 2)].tables.fanout_it[0].delay = delay;
+        chip.step(&[input_packet(1.5)]).unwrap();
+        for t in 1..8 {
+            let r = chip.step(&[]).unwrap();
+            if let Some(out) = r.outputs.first() {
+                if F16(out.value).to_f32() > 0.5 {
+                    return t;
+                }
+            }
+        }
+        panic!("spike with delay={delay} never arrived");
+    }
+
+    #[test]
+    fn delay_one_arrives_exactly_one_step_after_delay_zero() {
+        let t0 = arrival_step(0);
+        let t1 = arrival_step(1);
+        let t2 = arrival_step(2);
+        assert_eq!(t0, 1);
+        // regression: the delay line used to tick in the minting step,
+        // so delay=1 arrived together with delay=0
+        assert_eq!(t1, t0 + 1, "delay=1 must arrive one step later");
+        assert_eq!(t2, t0 + 2);
     }
 }

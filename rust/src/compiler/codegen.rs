@@ -724,7 +724,7 @@ impl<'a> Builder<'a> {
                     pkts.push(Packet {
                         ptype: if is_data { PacketType::Data } else { PacketType::Spike },
                         phase: PacketPhase::Integ,
-                        tag: self.fanin_tag(li, dcc)? as u8,
+                        tag: self.fanin_tag(li, dcc)?,
                         index,
                         payload: (br * n_in + ch) as u16,
                         mode: RouteMode::Unicast { x, y },
@@ -790,7 +790,7 @@ impl<'a> Builder<'a> {
                         per_neuron[part.n_base + j] = Some(Packet {
                             ptype: PacketType::Data,
                             phase: PacketPhase::Integ,
-                            tag: tag as u8,
+                            tag,
                             index: dt + k,
                             payload: 0, // patched with the error value
                             mode: RouteMode::Unicast { x, y },

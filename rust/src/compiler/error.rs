@@ -42,6 +42,10 @@ pub enum CompileError {
     /// The front-end fusion pass rejected the op graph (e.g. a BatchNorm
     /// with no preceding linear op, or a malformed BN blob).
     Fusion { op: usize, msg: String },
+    /// The compiled image failed to apply to the chip (an out-of-range
+    /// program/memory region — a code-generator bug surfaced by the
+    /// range-checked INIT stage instead of a panic).
+    Deploy { msg: String },
 }
 
 impl std::fmt::Display for CompileError {
@@ -86,6 +90,9 @@ impl std::fmt::Display for CompileError {
                  {capacity}; shard the model or pick a denser objective"
             ),
             CompileError::Fusion { op, msg } => write!(f, "op {op}: {msg}"),
+            CompileError::Deploy { msg } => {
+                write!(f, "deployment image rejected by the chip: {msg}")
+            }
         }
     }
 }

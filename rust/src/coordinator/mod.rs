@@ -5,7 +5,7 @@
 //! samples, and drives the on-chip learning loop (error injection for
 //! the BCI cross-day fine-tune).
 
-use crate::chip::{config::ChipConfig, Chip};
+use crate::chip::{config::ChipConfig, Chip, StepResult};
 use crate::compiler::Compiled;
 use crate::datasets::{DenseSample, SpikeSample};
 use crate::nc::Trap;
@@ -44,22 +44,27 @@ impl SampleRun {
 
 impl Deployment {
     /// Configure a fresh chip with a compiled deployment (INIT stage).
-    pub fn new(compiled: Compiled) -> Deployment {
+    /// Fails with a [`Trap`] when the image addresses memory outside the
+    /// die (a code-generator bug, surfaced instead of panicking).
+    pub fn new(compiled: Compiled) -> Result<Deployment, Trap> {
         let mut chip = Chip::new(crate::nc::DEFAULT_DATA_WORDS);
-        chip.configure(&compiled.config);
+        chip.configure(&compiled.config)?;
         let n_outputs = compiled.readout.len();
-        Deployment {
+        Ok(Deployment {
             chip,
             compiled,
             n_outputs,
-        }
+        })
     }
 
     pub fn config(&self) -> &ChipConfig {
         &self.compiled.config
     }
 
-    /// Run one spike-train sample (ECG / SHD style inputs).
+    /// Run one spike-train sample (ECG / SHD style inputs). The input
+    /// packet list and chip step result are reused across timesteps, so
+    /// the per-step loop is allocation-free apart from the readout rows
+    /// it returns.
     pub fn run_spikes(&mut self, sample: &SpikeSample) -> Result<SampleRun, Trap> {
         let t_max = sample.spikes.len();
         let mut run = SampleRun {
@@ -67,12 +72,14 @@ impl Deployment {
             spikes: 0,
             packets: 0,
         };
+        let mut packets: Vec<Packet> = Vec::new();
+        let mut res = StepResult::default();
         for t in 0..t_max {
-            let mut packets: Vec<Packet> = Vec::new();
+            packets.clear();
             for &ch in &sample.spikes[t] {
                 packets.extend(self.compiled.config.input_map[ch as usize].iter().copied());
             }
-            self.step_into(&packets, &mut run)?;
+            self.step_into(&packets, &mut res, &mut run)?;
         }
         Ok(run)
     }
@@ -84,8 +91,10 @@ impl Deployment {
             spikes: 0,
             packets: 0,
         };
+        let mut packets: Vec<Packet> = Vec::new();
+        let mut res = StepResult::default();
         for row in &sample.values {
-            let mut packets: Vec<Packet> = Vec::new();
+            packets.clear();
             for (ch, &v) in row.iter().enumerate() {
                 if v == 0.0 {
                     continue; // zero bins carry no information: stay sparse
@@ -96,13 +105,18 @@ impl Deployment {
                     packets.push(p);
                 }
             }
-            self.step_into(&packets, &mut run)?;
+            self.step_into(&packets, &mut res, &mut run)?;
         }
         Ok(run)
     }
 
-    fn step_into(&mut self, packets: &[Packet], run: &mut SampleRun) -> Result<(), Trap> {
-        let res = self.chip.step(packets)?;
+    fn step_into(
+        &mut self,
+        packets: &[Packet],
+        res: &mut StepResult,
+        run: &mut SampleRun,
+    ) -> Result<(), Trap> {
+        self.chip.step_into(packets, res)?;
         run.spikes += res.spikes;
         run.packets += res.packets_routed;
         let mut row = vec![0.0f32; self.n_outputs];
@@ -132,30 +146,41 @@ impl Deployment {
     }
 
     /// Zero all dynamic state (membrane, currents, adaptation, learning
-    /// accumulators, errors) — between samples. Weights and parameters
-    /// survive.
-    pub fn reset_state(&mut self) {
+    /// accumulators, errors) and put the wake sets back to sleep —
+    /// between samples. Weights and parameters survive. Fails with a
+    /// [`Trap`] if a compiled core layout addresses memory outside its
+    /// NC (a compiler bug, surfaced instead of panicking).
+    pub fn reset_state(&mut self) -> Result<(), Trap> {
         self.chip.flush_packets();
-        for core in &self.compiled.cores.clone() {
-            let l = core.layout;
+        // one shared zero buffer, grown to the largest region — this
+        // runs before every sample, so no per-core allocations
+        let mut zeros: Vec<u16> = Vec::new();
+        for k in 0..self.compiled.cores.len() {
+            let core = &self.compiled.cores[k];
+            let (cc, nc, l) = (core.cc, core.nc, core.layout);
             // [cur, params) — currents + membrane
             let n = (l.params - l.cur) as usize;
-            self.chip.poke(core.cc, core.nc, l.cur, &vec![0u16; n]);
             // [adapt, itof) — adaptation, acc counters, errors
             let n2 = (l.itof - l.adapt) as usize;
-            self.chip.poke(core.cc, core.nc, l.adapt, &vec![0u16; n2]);
+            if zeros.len() < n.max(n2) {
+                zeros.resize(n.max(n2), 0);
+            }
+            self.chip.poke(cc, nc, l.cur, &zeros[..n])?;
+            self.chip.poke(cc, nc, l.adapt, &zeros[..n2])?;
         }
+        Ok(())
     }
 
     /// Read back a weight region (host monitoring path) — used by tests
     /// and the learning demo to show weights actually moved.
-    pub fn peek_weights(&self, core_idx: usize, n: usize) -> Vec<f32> {
+    pub fn peek_weights(&self, core_idx: usize, n: usize) -> Result<Vec<f32>, Trap> {
         let core = &self.compiled.cores[core_idx];
-        self.chip
-            .peek(core.cc, core.nc, core.layout.weights, n)
+        Ok(self
+            .chip
+            .peek(core.cc, core.nc, core.layout.weights, n)?
             .into_iter()
             .map(|w| F16(w).to_f32())
-            .collect()
+            .collect())
     }
 }
 
@@ -201,7 +226,7 @@ mod tests {
             },
         )
         .unwrap();
-        Deployment::new(r.compiled)
+        Deployment::new(r.compiled).unwrap()
     }
 
     #[test]
@@ -233,7 +258,7 @@ mod tests {
             labels: vec![0],
         };
         d.run_spikes(&sample).unwrap();
-        d.reset_state();
+        d.reset_state().unwrap();
         // with no input, a reset chip must produce zero readout
         let quiet = SpikeSample {
             spikes: vec![vec![]; 3],
@@ -248,9 +273,9 @@ mod tests {
     fn weights_survive_reset() {
         let (net, weights) = tiny_net();
         let mut d = deploy(&net, &weights, false);
-        let before = d.peek_weights(0, 6);
-        d.reset_state();
-        assert_eq!(before, d.peek_weights(0, 6));
+        let before = d.peek_weights(0, 6).unwrap();
+        d.reset_state().unwrap();
+        assert_eq!(before, d.peek_weights(0, 6).unwrap());
         assert!(before.iter().any(|&w| w != 0.0));
     }
 
@@ -318,14 +343,14 @@ mod tests {
             .iter()
             .position(|c| c.parts.iter().any(|p| p.0 == 3))
             .unwrap();
-        let before = d.peek_weights(head, 8);
+        let before = d.peek_weights(head, 8).unwrap();
         // run a real dense sample so layer-2 spikes reach the head and
         // charge its presynaptic accumulators, then inject errors
         let s = crate::datasets::bci::sample(0, 0, &mut crate::util::Rng::new(3));
         let run = d.run_values(&s).unwrap();
         assert!(run.spikes > 0, "no spikes reached the head");
         d.learn_step(&[0.5, -0.5, 0.25, -0.25]).unwrap();
-        let after = d.peek_weights(head, 8);
+        let after = d.peek_weights(head, 8).unwrap();
         assert_ne!(before, after, "learning did not touch the head weights");
     }
 }

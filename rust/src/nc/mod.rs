@@ -115,7 +115,7 @@ impl Default for CostModel {
 }
 
 /// Activity counters — the raw material for the energy model (§V-C.1).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct NcStats {
     pub cycles: u64,
     pub instret: u64,

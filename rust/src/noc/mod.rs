@@ -5,13 +5,17 @@
 //! modes — point-to-point (XY dimension-ordered), regional multicast
 //! (shortest path to the rectangle boundary, then a tree inside it), and
 //! tree broadcast — plus memory-access packet types for configuration
-//! and run-time monitoring. Packets are 64 bits:
+//! and run-time monitoring. The behavioral header is 72 bits — the
+//! paper's 64-bit format reserves 8 tag bits, but the model widens the
+//! tag to 16 so large/deep topologies with ≥ 256 connection tags route
+//! without aliasing (real hardware would stream the extra byte as a
+//! header-extension flit):
 //!
 //! ```text
-//!  63    61 60  59 58   51 50    35 34      19 18       3  2    0
-//! ┌────────┬──────┬───────┬────────┬──────────┬───────────┬──────┐
-//! │  type  │phase │  tag  │ index  │ payload  │ dest area │ mode │
-//! └────────┴──────┴───────┴────────┴──────────┴───────────┴──────┘
+//!  71    69 68  67 66    51 50    35 34      19 18       3  2    0
+//! ┌────────┬──────┬────────┬────────┬──────────┬───────────┬──────┐
+//! │  type  │phase │  tag   │ index  │ payload  │ dest area │ mode │
+//! └────────┴──────┴────────┴────────┴──────────┴───────────┴──────┘
 //! ```
 //!
 //! `dest area` packs (x0,y0,x1,y1) 4 bits each; unicast uses (x0,y0).
@@ -85,13 +89,15 @@ pub enum PacketPhase {
     Init = 2,
 }
 
-/// A routed 64-bit packet.
+/// A routed packet (72-bit behavioral header, see the module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Packet {
     pub ptype: PacketType,
     pub phase: PacketPhase,
-    /// Destination fan-in tag.
-    pub tag: u8,
+    /// Destination fan-in tag — full 16 bits, matching the width of
+    /// [`crate::topology::FanInDE::tag`] / [`crate::topology::FanOutIE::tag`]
+    /// (an 8-bit wire tag silently aliased tags ≥ 256 in large networks).
+    pub tag: u16,
     /// Destination fan-in DT index.
     pub index: u16,
     /// Payload: global axon / channel id for spikes, data word for
@@ -101,39 +107,40 @@ pub struct Packet {
 }
 
 impl Packet {
-    /// Pack into the 64-bit wire format.
-    pub fn encode(&self) -> u64 {
+    /// Pack into the 72-bit wire format (returned in the low bits of a
+    /// `u128`).
+    pub fn encode(&self) -> u128 {
         let (mode_bits, x0, y0, x1, y1) = match self.mode {
-            RouteMode::Unicast { x, y } => (0u64, x, y, 0, 0),
+            RouteMode::Unicast { x, y } => (0u128, x, y, 0, 0),
             RouteMode::Multicast { x0, y0, x1, y1 } => (1, x0, y0, x1, y1),
             RouteMode::Broadcast => (2, 0, 0, 0, 0),
         };
         let phase = match self.phase {
-            PacketPhase::Integ => 0u64,
+            PacketPhase::Integ => 0u128,
             PacketPhase::Fire => 1,
             PacketPhase::Init => 2,
         };
-        (self.ptype.to_bits() << 61)
-            | (phase << 59)
-            | ((self.tag as u64) << 51)
-            | ((self.index as u64) << 35)
-            | ((self.payload as u64) << 19)
-            | ((x0 as u64 & 0xf) << 15)
-            | ((y0 as u64 & 0xf) << 11)
-            | ((x1 as u64 & 0xf) << 7)
-            | ((y1 as u64 & 0xf) << 3)
+        ((self.ptype.to_bits() as u128) << 69)
+            | (phase << 67)
+            | ((self.tag as u128) << 51)
+            | ((self.index as u128) << 35)
+            | ((self.payload as u128) << 19)
+            | ((x0 as u128 & 0xf) << 15)
+            | ((y0 as u128 & 0xf) << 11)
+            | ((x1 as u128 & 0xf) << 7)
+            | ((y1 as u128 & 0xf) << 3)
             | mode_bits
     }
 
-    pub fn decode(w: u64) -> Option<Packet> {
-        let ptype = PacketType::from_bits(w >> 61)?;
-        let phase = match (w >> 59) & 3 {
+    pub fn decode(w: u128) -> Option<Packet> {
+        let ptype = PacketType::from_bits((w >> 69) as u64)?;
+        let phase = match (w >> 67) & 3 {
             0 => PacketPhase::Integ,
             1 => PacketPhase::Fire,
             2 => PacketPhase::Init,
             _ => return None,
         };
-        let tag = ((w >> 51) & 0xff) as u8;
+        let tag = ((w >> 51) & 0xffff) as u16;
         let index = ((w >> 35) & 0xffff) as u16;
         let payload = ((w >> 19) & 0xffff) as u16;
         let x0 = ((w >> 15) & 0xf) as u8;
@@ -173,10 +180,12 @@ mod tests {
 
     #[test]
     fn packet_encode_decode_known() {
+        // tag ≥ 256: regression for the u8 wire tag that aliased large
+        // networks (0x15a used to decode as 0x5a)
         let p = Packet {
             ptype: PacketType::Spike,
             phase: PacketPhase::Integ,
-            tag: 0x5a,
+            tag: 0x15a,
             index: 0x1234,
             payload: 0xbeef,
             mode: RouteMode::Multicast { x0: 1, y0: 2, x1: 9, y1: 10 },
@@ -216,7 +225,7 @@ mod tests {
             let p = Packet {
                 ptype,
                 phase,
-                tag: rng.below(256) as u8,
+                tag: rng.below(65536) as u16,
                 index: rng.below(65536) as u16,
                 payload: rng.below(65536) as u16,
                 mode,

@@ -114,19 +114,37 @@ impl Mesh {
     }
 
     /// Route one packet from `src`; returns deliveries + cost and updates
-    /// the accounting.
+    /// the accounting. Allocates a fresh delivery `Vec` per call — the
+    /// chip engine's hot path uses [`Mesh::route_into`] with a reusable
+    /// buffer instead.
     pub fn route(&mut self, src: usize, mode: RouteMode) -> RouteResult {
-        let r = match mode {
+        let mut deliveries = Vec::new();
+        let (link_traversals, latency) = self.route_into(src, mode, &mut deliveries);
+        RouteResult {
+            deliveries,
+            link_traversals,
+            latency,
+        }
+    }
+
+    /// Allocation-free routing: appends the delivery CC ids to `out`
+    /// (callers clear it between packets) and returns
+    /// `(link_traversals, latency_cycles)`. Accounting is identical to
+    /// [`Mesh::route`].
+    pub fn route_into(
+        &mut self,
+        src: usize,
+        mode: RouteMode,
+        out: &mut Vec<usize>,
+    ) -> (u64, u64) {
+        let (traversals, latency) = match mode {
             RouteMode::Unicast { x, y } => {
                 self.unicast_packets += 1;
                 let dst = cc_id(x, y);
                 self.load_xy_path(src, dst);
                 let hops = xy_dist(src, dst);
-                RouteResult {
-                    deliveries: vec![dst],
-                    link_traversals: hops,
-                    latency: hops * CYCLES_PER_HOP,
-                }
+                out.push(dst);
+                (hops, hops * CYCLES_PER_HOP)
             }
             RouteMode::Multicast { x0, y0, x1, y1 } => {
                 self.multicast_packets += 1;
@@ -137,23 +155,18 @@ impl Mesh {
                 // Tree multicast inside the rectangle: row-first tree from
                 // the entry cell. area-1 traversals, depth = max Manhattan
                 // distance from entry within the rect.
-                let mut deliveries = Vec::new();
+                let mut area = 0u64;
                 let mut depth = 0u64;
                 for y in y0..=y1 {
                     for x in x0..=x1 {
                         let id = cc_id(x, y);
-                        deliveries.push(id);
-                        let d = xy_dist(entry_id, id);
-                        depth = depth.max(d);
+                        out.push(id);
+                        area += 1;
+                        depth = depth.max(xy_dist(entry_id, id));
                     }
                 }
                 self.load_tree(entry_id, x0, y0, x1, y1);
-                let area = deliveries.len() as u64;
-                RouteResult {
-                    deliveries,
-                    link_traversals: approach + (area - 1),
-                    latency: (approach + depth) * CYCLES_PER_HOP,
-                }
+                (approach + (area - 1), (approach + depth) * CYCLES_PER_HOP)
             }
             RouteMode::Broadcast => {
                 self.broadcast_packets += 1;
@@ -162,16 +175,13 @@ impl Mesh {
                 for id in 0..NUM_CCS {
                     depth = depth.max(xy_dist(src, id));
                 }
-                RouteResult {
-                    deliveries: (0..NUM_CCS).collect(),
-                    link_traversals: (NUM_CCS - 1) as u64,
-                    latency: depth * CYCLES_PER_HOP,
-                }
+                out.extend(0..NUM_CCS);
+                ((NUM_CCS - 1) as u64, depth * CYCLES_PER_HOP)
             }
         };
-        self.total_traversals += r.link_traversals;
-        self.total_latency += r.latency;
-        r
+        self.total_traversals += traversals;
+        self.total_latency += latency;
+        (traversals, latency)
     }
 
     /// Maximum per-link load (the congestion hot-spot metric).
@@ -343,6 +353,27 @@ mod tests {
         let (trav, lat) = inter_chip_cost(cc_id(1, 5), 2, cc_id(10, 3));
         assert_eq!(trav, 1 + 1 + 2);
         assert_eq!(lat, 2 * CYCLES_PER_HOP + 2 * SERDES_CYCLES);
+    }
+
+    #[test]
+    fn route_into_matches_route_with_a_reused_buffer() {
+        let mut a = Mesh::new();
+        let mut b = Mesh::new();
+        let mut buf = Vec::new();
+        for (src, mode) in [
+            (cc_id(2, 3), RouteMode::Unicast { x: 7, y: 9 }),
+            (cc_id(0, 0), RouteMode::Multicast { x0: 4, y0: 4, x1: 7, y1: 7 }),
+            (cc_id(5, 5), RouteMode::Broadcast),
+        ] {
+            let r = a.route(src, mode);
+            buf.clear();
+            let (trav, lat) = b.route_into(src, mode, &mut buf);
+            assert_eq!(buf, r.deliveries);
+            assert_eq!(trav, r.link_traversals);
+            assert_eq!(lat, r.latency);
+        }
+        assert_eq!(a.total_traversals, b.total_traversals);
+        assert_eq!(a.total_latency, b.total_latency);
     }
 
     #[test]

@@ -14,6 +14,29 @@
 //!   and non-delayed spikes share the fan-out DT);
 //! * surfaces host-bound DATA events (membrane potentials, errors,
 //!   classification outputs — the FP output mode).
+//!
+//! # Event-driven NC wake-up
+//!
+//! The scheduler keeps an 8-bit `nc_events` mask of which NCs hold
+//! buffered input events, maintained by every [`NcEvent`] push
+//! (packet decode, fire-wave injection, PSUM hand-off). `run_integ`
+//! and the FIRE drain loop walk only the set bits instead of polling
+//! all eight cores per spin-loop iteration, so idle cores cost
+//! nothing — the per-column half of the chip-level wake-set scheme
+//! (see [`crate::chip`]). A column also records whether it has ever
+//! received a packet since configuration (`is_live`); the chip uses
+//! that flag to skip the FIRE stage for columns whose dynamic state is
+//! provably still all-zero.
+//!
+//! # Skip-connection delay semantics
+//!
+//! A fan-out entry with `delay = d` holds the spike in the column's
+//! delay line and releases it at the end of timestep `mint_step + d`,
+//! so it is *delivered* in the INTEG stage of `mint_step + d + 1` —
+//! exactly `d` steps after an undelayed (`delay = 0`) spike from the
+//! same FIRE wave. (An earlier revision ticked the delay line in the
+//! minting step itself, making `delay = 1` arrive together with
+//! `delay = 0`.)
 
 use crate::isa::EventKind;
 use crate::nc::{out_type, NcEvent, NeuronCore, OutEvent, RunExit, Trap};
@@ -65,7 +88,10 @@ pub struct CcStats {
 /// A spike waiting out its skip-connection delay.
 #[derive(Clone, Copy, Debug)]
 struct DelayedSpike {
-    remaining: u8,
+    /// Absolute timestep at whose *end* the spike is released into the
+    /// outbound packet stream (delivered one step later, like any other
+    /// FIRE-minted packet).
+    release_step: u64,
     global_axon: u16,
     ie: FanOutIE,
 }
@@ -80,6 +106,16 @@ pub struct CorticalColumn {
     delayed: Vec<DelayedSpike>,
     /// scratch buffer reused across decodes (hot path)
     scratch: Vec<Activation>,
+    /// scratch for draining NC output-event memories without per-spike
+    /// allocation (ping-pongs capacity with the NC buffers)
+    out_scratch: Vec<OutEvent>,
+    /// bit i set ⇔ NC i holds buffered input events (the wake mask the
+    /// INTEG/FIRE drains walk instead of polling all 8 cores)
+    nc_events: u8,
+    /// true once any packet has landed since configure/flush — until
+    /// then every NC's dynamic state is provably all-zero and the chip
+    /// engine skips this column's FIRE stage entirely
+    live: bool,
 }
 
 impl CorticalColumn {
@@ -92,15 +128,60 @@ impl CorticalColumn {
             stats: CcStats::default(),
             delayed: Vec::new(),
             scratch: Vec::new(),
+            out_scratch: Vec::new(),
+            nc_events: 0,
+            live: false,
+        }
+    }
+
+    /// Push an event into NC `nc`'s input buffer, marking it in the
+    /// wake mask. All event injection (packet decode, fire waves, PSUM
+    /// hand-offs) must go through here so the drains see the core.
+    #[inline]
+    pub fn push_nc_event(&mut self, nc: u8, ev: NcEvent) {
+        self.nc_events |= 1 << nc;
+        self.ncs[nc as usize].push_event(ev);
+    }
+
+    /// True iff some NC holds buffered input events.
+    #[inline]
+    pub fn has_pending_events(&self) -> bool {
+        self.nc_events != 0
+    }
+
+    /// True once any packet has landed since configure/flush.
+    #[inline]
+    pub fn is_live(&self) -> bool {
+        self.live
+    }
+
+    /// True iff spikes are waiting out a skip-connection delay.
+    #[inline]
+    pub fn has_delayed(&self) -> bool {
+        !self.delayed.is_empty()
+    }
+
+    /// Drop all in-flight work (buffered NC events, un-collected output
+    /// events, held delayed spikes) and return the column to the
+    /// configured-idle state, so the chip's wake set can forget it.
+    /// Tables, programs, data memory, and activity counters survive.
+    pub fn flush(&mut self) {
+        self.live = false;
+        self.nc_events = 0;
+        self.delayed.clear();
+        for nc in &mut self.ncs {
+            nc.in_queue.clear();
+            nc.out_events.clear();
         }
     }
 
     /// Decode one arriving packet and dispatch activations to NC buffers.
     pub fn handle_packet(&mut self, pkt: &Packet) {
         self.stats.packets_in += 1;
+        self.live = true;
         self.scratch.clear();
         let d = self.tables.decode_fanin(
-            pkt.tag as u16,
+            pkt.tag,
             pkt.index,
             pkt.payload,
             &mut self.scratch,
@@ -123,6 +204,8 @@ impl CorticalColumn {
             } else {
                 a.data
             };
+            // inline push_nc_event (the activation loop holds `scratch`)
+            self.nc_events |= 1 << a.nc;
             self.ncs[a.nc as usize].push_event(NcEvent {
                 kind,
                 neuron: a.neuron,
@@ -132,20 +215,22 @@ impl CorticalColumn {
         }
     }
 
-    /// Run all NCs until idle (INTEG stage drain). Returns instructions
-    /// retired.
+    /// Drain the INTEG stage: run every NC with buffered events until it
+    /// rests. Idle cores are never touched (event-driven wake-up).
+    /// Returns instructions retired.
     pub fn run_integ(&mut self) -> Result<u64, Trap> {
         let mut total = 0;
-        for nc in &mut self.ncs {
-            loop {
-                let before = nc.stats.instret;
-                match nc.run(u64::MAX)? {
-                    RunExit::Blocked | RunExit::Halted => {
-                        total += nc.stats.instret - before;
-                        break;
-                    }
-                    RunExit::Budget => unreachable!("unbounded budget"),
+        let mut mask = std::mem::take(&mut self.nc_events);
+        while mask != 0 {
+            let i = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            let nc = &mut self.ncs[i];
+            let before = nc.stats.instret;
+            match nc.run(u64::MAX)? {
+                RunExit::Blocked | RunExit::Halted => {
+                    total += nc.stats.instret - before;
                 }
+                RunExit::Budget => unreachable!("unbounded budget"),
             }
         }
         Ok(total)
@@ -153,103 +238,138 @@ impl CorticalColumn {
 
     /// Execute the FIRE stage: switch phase, fire wave 1 (PSUM), deliver
     /// intra-NC currents, fire wave 2, then optional Learn activations.
-    /// Returns minted packets + host outputs.
+    /// Convenience wrapper over [`CorticalColumn::fire_into`] that
+    /// allocates fresh result vectors (tests / cold paths).
     pub fn fire(
         &mut self,
         timestep: u64,
     ) -> Result<(Vec<Minted>, Vec<HostOutput>), Trap> {
         let mut minted = Vec::new();
         let mut host = Vec::new();
+        self.fire_into(timestep, &mut minted, &mut host)?;
+        Ok((minted, host))
+    }
 
+    /// The allocation-free FIRE stage: minted packets and host outputs
+    /// are appended to caller-owned buffers (the chip engine threads its
+    /// persistent `pending` / step-result buffers straight through).
+    pub fn fire_into(
+        &mut self,
+        timestep: u64,
+        minted: &mut Vec<Minted>,
+        host: &mut Vec<HostOutput>,
+    ) -> Result<(), Trap> {
         for nc in &mut self.ncs {
             nc.set_phase(crate::nc::Phase::Fire);
         }
 
         // Wave 1: PSUM partial-sum neurons.
         let mut any_wave1 = false;
-        for (i, cfg) in self.cfg.iter().enumerate() {
+        for i in 0..self.cfg.len() {
+            let cfg = self.cfg[i];
             for n in 0..cfg.wave1 {
-                self.ncs[i].push_event(NcEvent {
+                let ev = NcEvent {
                     kind: EventKind::Fire,
                     neuron: n,
                     axon: 0,
                     data: timestep as u16,
-                });
+                };
+                self.push_nc_event(i as u8, ev);
                 any_wave1 = true;
             }
         }
         if any_wave1 {
-            self.drain_fire(&mut minted, &mut host)?;
+            self.drain_fire(timestep, minted, host)?;
         }
 
         // Wave 2: spiking neurons.
-        for (i, cfg) in self.cfg.iter().enumerate() {
+        for i in 0..self.cfg.len() {
+            let cfg = self.cfg[i];
             for n in cfg.wave1..cfg.neurons {
-                self.ncs[i].push_event(NcEvent {
+                let ev = NcEvent {
                     kind: EventKind::Fire,
                     neuron: n,
                     axon: 0,
                     data: timestep as u16,
-                });
+                };
+                self.push_nc_event(i as u8, ev);
             }
         }
-        self.drain_fire(&mut minted, &mut host)?;
+        self.drain_fire(timestep, minted, host)?;
 
         // Learning activations (FIRE stage, §III-B).
         let mut any_learn = false;
-        for (i, cfg) in self.cfg.iter().enumerate() {
+        for i in 0..self.cfg.len() {
+            let cfg = self.cfg[i];
             if cfg.learn {
                 for n in cfg.learn_from..cfg.neurons {
-                    self.ncs[i].push_event(NcEvent {
+                    let ev = NcEvent {
                         kind: EventKind::Learn,
                         neuron: n,
                         axon: 0,
                         data: timestep as u16,
-                    });
+                    };
+                    self.push_nc_event(i as u8, ev);
                     any_learn = true;
                 }
             }
         }
         if any_learn {
-            self.drain_fire(&mut minted, &mut host)?;
+            self.drain_fire(timestep, minted, host)?;
         }
 
         // Return NCs to INTEG for the next timestep.
         for nc in &mut self.ncs {
             nc.set_phase(crate::nc::Phase::Integ);
         }
-        Ok((minted, host))
+        Ok(())
     }
 
-    /// Run NCs until idle and convert their output events.
+    /// Drain the FIRE stage: walk the worklist of NCs with buffered
+    /// events or un-collected output events until it empties. PSUM
+    /// hand-offs re-queue their target core through the wake mask, so
+    /// only cores with actual work are ever visited (no all-core
+    /// polling per spin-loop pass).
     fn drain_fire(
         &mut self,
+        now: u64,
         minted: &mut Vec<Minted>,
         host: &mut Vec<HostOutput>,
     ) -> Result<(), Trap> {
-        loop {
-            let mut progressed = false;
-            for i in 0..self.ncs.len() {
-                if !self.ncs[i].is_idle() {
-                    self.ncs[i].run(u64::MAX)?;
-                    progressed = true;
-                }
-                let evs = self.ncs[i].take_out_events();
-                for ev in evs {
-                    progressed = true;
-                    self.route_out_event(i as u8, ev, minted, host);
-                }
-            }
-            if !progressed {
-                return Ok(());
+        let mut work = std::mem::take(&mut self.nc_events);
+        for (i, nc) in self.ncs.iter().enumerate() {
+            if !nc.out_events.is_empty() {
+                work |= 1 << i;
             }
         }
+        while work != 0 {
+            let i = work.trailing_zeros() as usize;
+            work &= work - 1;
+            if !self.ncs[i].is_idle() {
+                self.ncs[i].run(u64::MAX)?;
+            }
+            if !self.ncs[i].out_events.is_empty() {
+                // ping-pong the scratch buffer with the NC's output
+                // memory: no per-drain allocation, capacities survive
+                let mut evs = std::mem::take(&mut self.out_scratch);
+                std::mem::swap(&mut evs, &mut self.ncs[i].out_events);
+                for &ev in &evs {
+                    self.route_out_event(i as u8, ev, now, minted, host);
+                }
+                evs.clear();
+                self.out_scratch = evs;
+            }
+            // PSUM hand-offs (or anything else the drain re-queued)
+            work |= std::mem::take(&mut self.nc_events);
+        }
+        Ok(())
     }
 
     fn route_out_event(
         &mut self,
         nc: u8,
         ev: OutEvent,
+        now: u64,
         minted: &mut Vec<Minted>,
         host: &mut Vec<HostOutput>,
     ) {
@@ -259,12 +379,13 @@ impl CorticalColumn {
             out_type::PSUM => {
                 // Intra-NC current hand-off (fan-in expansion): the value
                 // lands in the same NC's buffer as a Current event.
-                self.ncs[nc as usize].push_event(NcEvent {
+                let psum = NcEvent {
                     kind: EventKind::Current,
                     neuron: ev.neuron,
                     axon: 0,
                     data: ev.value,
-                });
+                };
+                self.push_nc_event(nc, psum);
             }
             out_type::SPIKE | out_type::DATA | out_type::DELAYED => {
                 // global-neuron id = per-NC rebase: local fan-out DT is
@@ -292,11 +413,11 @@ impl CorticalColumn {
                 };
                 for k in 0..it_len {
                     let ie = self.tables.fanout_it[it_base + k];
-                    let delay = ie.delay + extra_delay;
+                    let delay = ie.delay as u64 + extra_delay as u64;
                     if delay > 0 && ty != out_type::DATA {
                         self.stats.delayed_held += 1;
                         self.delayed.push(DelayedSpike {
-                            remaining: delay,
+                            release_step: now + delay,
                             global_axon,
                             ie,
                         });
@@ -311,7 +432,7 @@ impl CorticalColumn {
                                     PacketType::Spike
                                 },
                                 phase: PacketPhase::Fire,
-                                tag: ie.tag as u8,
+                                tag: ie.tag,
                                 index: ie.index,
                                 payload: if ty == out_type::DATA {
                                     ev.value
@@ -339,19 +460,23 @@ impl CorticalColumn {
         base + neuron
     }
 
-    /// Advance skip-connection delay counters at the timestep boundary;
-    /// mint any spikes whose delay expired.
-    pub fn tick_delayed(&mut self) -> Vec<Minted> {
-        let mut due = Vec::new();
-        self.delayed.retain_mut(|d| {
-            d.remaining -= 1;
-            if d.remaining == 0 {
+    /// Release delayed spikes at the end of timestep `now`: every spike
+    /// whose `release_step` has arrived is appended to `due` (the chip
+    /// threads its persistent `pending` buffer through). A spike minted
+    /// *this* step with `delay = d` carries `release_step = now + d`, so
+    /// it is held for exactly `d` boundary ticks and arrives `d` steps
+    /// after its undelayed siblings.
+    pub fn tick_delayed(&mut self, now: u64, due: &mut Vec<Minted>) {
+        let before = due.len();
+        let id = self.id;
+        self.delayed.retain(|d| {
+            if d.release_step <= now {
                 due.push(Minted {
-                    src_cc: self.id,
+                    src_cc: id,
                     packet: Packet {
                         ptype: PacketType::Spike,
                         phase: PacketPhase::Fire,
-                        tag: d.ie.tag as u8,
+                        tag: d.ie.tag,
                         index: d.ie.index,
                         payload: d.global_axon,
                         mode: d.ie.mode,
@@ -362,14 +487,7 @@ impl CorticalColumn {
                 true
             }
         });
-        self.stats.packets_out += due.len() as u64;
-        due
-    }
-
-    /// True iff no NC has pending events (INTEG stage can end — the
-    /// paper's "no spike events in the NoC" condition, locally).
-    pub fn is_quiescent(&self) -> bool {
-        self.ncs.iter().all(|nc| nc.is_idle())
+        self.stats.packets_out += (due.len() - before) as u64;
     }
 
     /// Aggregate NC activity counters.
@@ -506,8 +624,12 @@ mod tests {
         let (minted, _) = cc.fire(0).unwrap();
         assert!(minted.is_empty());
         assert_eq!(cc.stats.delayed_held, 1);
-        assert!(cc.tick_delayed().is_empty()); // t+1: still waiting
-        let due = cc.tick_delayed(); // t+2: due
+        let mut due = Vec::new();
+        cc.tick_delayed(0, &mut due); // end of the minting step: held
+        assert!(due.is_empty());
+        cc.tick_delayed(1, &mut due); // t+1: still waiting
+        assert!(due.is_empty());
+        cc.tick_delayed(2, &mut due); // t+2: released
         assert_eq!(due.len(), 1);
         assert_eq!(due[0].packet.payload, 7);
     }
@@ -572,6 +694,31 @@ mod tests {
         // neuron 1 got 1.25 ≥ 1.0 → fired (payload = its global axon 1)
         assert_eq!(minted.len(), 1);
         assert_eq!(minted[0].packet.payload, 1);
+    }
+
+    #[test]
+    fn fanout_tags_above_255_survive_minting() {
+        // regression: the u8 packet tag used to alias 0x1234 -> 0x34
+        let mut cc = simple_cc();
+        cc.tables.fanout_it[0].tag = 0x1234;
+        cc.handle_packet(&spike_packet(0, F16::from_f32(1.5).0));
+        cc.run_integ().unwrap();
+        let (minted, _) = cc.fire(0).unwrap();
+        assert_eq!(minted.len(), 1);
+        assert_eq!(minted[0].packet.tag, 0x1234);
+    }
+
+    #[test]
+    fn wake_mask_tracks_buffered_events() {
+        let mut cc = simple_cc();
+        assert!(!cc.has_pending_events() && !cc.is_live());
+        cc.handle_packet(&spike_packet(0, F16::from_f32(0.5).0));
+        assert!(cc.has_pending_events() && cc.is_live());
+        cc.run_integ().unwrap();
+        assert!(!cc.has_pending_events(), "INTEG drain clears the mask");
+        assert!(cc.is_live(), "liveness is sticky until flush");
+        cc.flush();
+        assert!(!cc.is_live() && !cc.has_pending_events());
     }
 
     #[test]

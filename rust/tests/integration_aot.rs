@@ -118,7 +118,7 @@ fn chip_engine_matches_pallas_artifact_dynamics() {
         neuron: NeuronModel::Lif { tau, vth },
     });
     let r = compiler::compile(&net, &vec![vec![], w.clone()], &Options::default()).unwrap();
-    let mut d = Deployment::new(r.compiled);
+    let mut d = Deployment::new(r.compiled).unwrap();
 
     // random spike train
     let t_steps = 12;

@@ -1,0 +1,117 @@
+//! Wake-set parity suite: the event-driven engine (bitset wake sets,
+//! incremental bookkeeping) must produce results bit-identical to the
+//! naive scan-every-column reference (`Chip::scan_all`), which derives
+//! the same per-phase work sets by predicate scan each step. Divergence
+//! means the incremental bookkeeping lost or invented work.
+//!
+//! Covered per workload (ECG / SHD / BCI): readout rows, spike counts,
+//! routed-packet counts, the full [`ChipActivity`] counter set (so the
+//! energy model prices both engines identically), and the scheduler's
+//! own visit counters. Plus: a quiescent compiled deployment must cost
+//! zero column visits per step.
+
+use taibai::api::workloads::{Bci, Ecg, Shd, Workload};
+use taibai::api::Sample;
+use taibai::compiler::{self, Options};
+use taibai::coordinator::Deployment;
+
+/// Two deployments of the same compiled image: wake-set and scan-all.
+fn build_pair(w: &dyn Workload, seed: u64) -> (Deployment, Deployment) {
+    let r = compiler::compile(
+        &w.net(),
+        &w.weights(seed),
+        &Options {
+            learning: w.learning(),
+            rates: w.rates(),
+            ..Default::default()
+        },
+    )
+    .unwrap_or_else(|e| panic!("{}: compile failed: {e}", w.name()));
+    let wake = Deployment::new(r.compiled.clone()).unwrap();
+    let mut scan = Deployment::new(r.compiled).unwrap();
+    scan.chip.scan_all = true;
+    (wake, scan)
+}
+
+fn run_both(
+    wake: &mut Deployment,
+    scan: &mut Deployment,
+    s: &Sample,
+) -> (taibai::coordinator::SampleRun, taibai::coordinator::SampleRun) {
+    wake.reset_state().unwrap();
+    scan.reset_state().unwrap();
+    match s {
+        Sample::Spikes(sp) => (wake.run_spikes(sp).unwrap(), scan.run_spikes(sp).unwrap()),
+        Sample::Dense(d) => (wake.run_values(d).unwrap(), scan.run_values(d).unwrap()),
+    }
+}
+
+fn assert_parity(w: &dyn Workload, samples: usize, seed: u64) {
+    let (mut wake, mut scan) = build_pair(w, seed);
+    for (k, s) in w.dataset(samples, seed).iter().take(samples).enumerate() {
+        let (a, b) = run_both(&mut wake, &mut scan, s);
+        assert_eq!(a.outputs, b.outputs, "{} sample {k}: readout rows diverged", w.name());
+        assert_eq!(a.spikes, b.spikes, "{} sample {k}: spike counts diverged", w.name());
+        assert_eq!(a.packets, b.packets, "{} sample {k}: packet counts diverged", w.name());
+    }
+    assert_eq!(
+        wake.chip.activity(),
+        scan.chip.activity(),
+        "{}: ChipActivity counters diverged (energy model would disagree)",
+        w.name()
+    );
+    assert_eq!(
+        wake.chip.sched,
+        scan.chip.sched,
+        "{}: wake sets visited different columns than the predicate scan",
+        w.name()
+    );
+}
+
+#[test]
+fn ecg_wake_set_matches_scan_all_reference() {
+    assert_parity(&Ecg { heterogeneous: true }, 2, 7);
+}
+
+#[test]
+fn shd_wake_set_matches_scan_all_reference() {
+    assert_parity(&Shd { dendrites: true }, 2, 3);
+}
+
+#[test]
+fn bci_wake_set_matches_scan_all_reference() {
+    assert_parity(&Bci { subpaths: 8, day: 2 }, 2, 11);
+}
+
+#[test]
+fn bci_learning_step_matches_scan_all_reference() {
+    let w = Bci { subpaths: 8, day: 2 };
+    let (mut wake, mut scan) = build_pair(&w, 5);
+    let data = w.dataset(1, 5);
+    let (a, b) = run_both(&mut wake, &mut scan, &data[0]);
+    assert_eq!(a.outputs, b.outputs);
+    // identical error injection must move identical weights
+    let errors = [0.5, -0.25, -0.15, -0.1];
+    wake.learn_step(&errors).unwrap();
+    scan.learn_step(&errors).unwrap();
+    assert_eq!(wake.chip.activity(), scan.chip.activity());
+    let (a, b) = run_both(&mut wake, &mut scan, &data[0]);
+    assert_eq!(a.outputs, b.outputs, "post-learning runs diverged");
+}
+
+#[test]
+fn quiescent_deployment_visits_zero_columns() {
+    let w = Ecg { heterogeneous: true };
+    let (mut d, _) = build_pair(&w, 9);
+    for _ in 0..10 {
+        let r = d.chip.step(&[]).unwrap();
+        assert_eq!(r.spikes, 0);
+        assert!(r.outputs.is_empty());
+    }
+    assert_eq!(d.chip.sched.steps, 10);
+    let visits = d.chip.sched.integ_cc_visits
+        + d.chip.sched.fire_cc_visits
+        + d.chip.sched.delay_cc_visits;
+    assert_eq!(visits, 0, "a silent deployment must not visit a single column");
+    assert_eq!(d.chip.activity().nc.instret, 0, "no NC may execute");
+}
