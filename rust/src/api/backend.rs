@@ -7,10 +7,12 @@
 //! prices either — that invariant is what the fast-vs-detailed parity
 //! tests pin down.
 
+use std::sync::Arc;
+
 use crate::chip::fast::{simulate, FastParams, FastReport};
 use crate::chip::ChipActivity;
-use crate::compiler::Compiled;
-use crate::coordinator::{Deployment, SampleRun};
+use crate::compiler::{Compiled, ShardedCompiled};
+use crate::coordinator::{Deployment, MultiChipDeployment, SampleRun};
 use crate::energy::{EnergyModel, CLOCK_HZ};
 use crate::model::{Layer, NetDef};
 
@@ -67,8 +69,18 @@ impl DetailedBackend {
         em: EnergyModel,
         timesteps: usize,
     ) -> Result<DetailedBackend, RunError> {
+        DetailedBackend::from_image(Arc::new(compiled), em, timesteps)
+    }
+
+    /// Deploy a shared compiled image — the `fork` path: workers
+    /// allocate chip state only, never a copy of the image.
+    pub fn from_image(
+        compiled: Arc<Compiled>,
+        em: EnergyModel,
+        timesteps: usize,
+    ) -> Result<DetailedBackend, RunError> {
         Ok(DetailedBackend {
-            dep: Deployment::new(compiled).map_err(RunError::Trap)?,
+            dep: Deployment::from_image(compiled).map_err(RunError::Trap)?,
             em,
             timesteps,
         })
@@ -114,7 +126,9 @@ impl ExecBackend for DetailedBackend {
     }
 
     fn fork(&self) -> Result<Box<dyn ExecBackend>, RunError> {
-        Ok(Box::new(DetailedBackend::new(
+        // `compiled` is an Arc: the fork shares the image and only pays
+        // for its own chip state
+        Ok(Box::new(DetailedBackend::from_image(
             self.dep.compiled.clone(),
             self.em,
             self.timesteps,
@@ -148,6 +162,117 @@ impl ExecBackend for DetailedBackend {
 
     fn kind(&self) -> Backend {
         Backend::Detailed
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sharded: N event-detailed dies in lockstep behind a host bridge.
+// ---------------------------------------------------------------------
+
+/// [`ExecBackend`] over a multi-die [`MultiChipDeployment`]. Runs the
+/// same event-detailed engine as [`DetailedBackend`] — results are
+/// bit-identical to a single (hypothetically large enough) die — but
+/// spreads the cores of a [`ShardedCompiled`] image across chips.
+pub struct MultiChipBackend {
+    dep: MultiChipDeployment,
+    em: EnergyModel,
+    /// SNN timesteps per sample (same role as on the single-die backend).
+    timesteps: usize,
+}
+
+impl MultiChipBackend {
+    pub fn new(
+        compiled: Arc<ShardedCompiled>,
+        em: EnergyModel,
+        timesteps: usize,
+    ) -> Result<MultiChipBackend, RunError> {
+        Ok(MultiChipBackend {
+            dep: MultiChipDeployment::new(compiled).map_err(RunError::Trap)?,
+            em,
+            timesteps,
+        })
+    }
+
+    /// The wrapped deployment (per-die monitoring paths).
+    pub fn deployment(&self) -> &MultiChipDeployment {
+        &self.dep
+    }
+}
+
+impl ExecBackend for MultiChipBackend {
+    fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
+        match sample {
+            Sample::Spikes(s) => self.dep.run_spikes(s).map_err(RunError::Trap),
+            Sample::Dense(d) => self.dep.run_values(d).map_err(RunError::Trap),
+        }
+    }
+
+    fn reset(&mut self) -> Result<(), RunError> {
+        self.dep.reset_state().map_err(RunError::Trap)
+    }
+
+    fn learn_step(&mut self, errors: &[f32]) -> Result<(), RunError> {
+        let expected = self.dep.compiled.error_map.len();
+        if expected == 0 {
+            return Err(RunError::Unsupported(
+                "the session was built with learning disabled",
+            ));
+        }
+        if errors.len() != expected {
+            return Err(RunError::ErrorVector {
+                expected,
+                got: errors.len(),
+            });
+        }
+        self.dep.learn_step(errors).map_err(RunError::Trap)
+    }
+
+    fn activity(&self) -> ChipActivity {
+        self.dep.activity()
+    }
+
+    fn fork(&self) -> Result<Box<dyn ExecBackend>, RunError> {
+        Ok(Box::new(MultiChipBackend::new(
+            self.dep.compiled.clone(),
+            self.em,
+            self.timesteps,
+        )?))
+    }
+
+    fn metrics(&self, a: &ChipActivity, samples: u64) -> SessionMetrics {
+        let used = self.dep.compiled.used_cores.max(1);
+        let chips = self.dep.num_chips();
+        let samples = samples.max(1);
+        // same throughput model as the single-die backend: bottleneck-
+        // core cycles plus per-timestep stage-transition overhead (the
+        // bridge adds no modeled cycles — SerDes latency hides inside
+        // the stage transition, §IV-B)
+        let busy = a.nc.cycles as f64 / used as f64;
+        let cycles_per_sample =
+            (busy / samples as f64 + (self.timesteps * 24) as f64).max(1.0);
+        let fps = CLOCK_HZ / cycles_per_sample;
+        let cycles_total = ((cycles_per_sample * samples as f64) as u64).max(1);
+        // power_w prices one die's static draw; the other dies add theirs
+        let power = self.em.power_w(a, cycles_total)
+            + self.em.p_static_w * (chips as f64 - 1.0);
+        SessionMetrics {
+            samples,
+            used_cores: used,
+            chips,
+            fps,
+            power_w: power,
+            fps_per_w: if power > 0.0 { fps / power } else { 0.0 },
+            energy_per_sample_j: power * cycles_per_sample / CLOCK_HZ,
+            pj_per_sop: self.em.pj_per_sop(a),
+            spikes_per_sample: a.nc.spikes_out as f64 / samples as f64,
+            sops: a.nc.sops,
+        }
+    }
+
+    fn kind(&self) -> Backend {
+        Backend::Sharded {
+            chips: self.dep.num_chips(),
+        }
     }
 }
 

@@ -34,6 +34,8 @@
 pub mod backend;
 pub mod workloads;
 
+use std::sync::Arc;
+
 use crate::chip::fast::{simulate, FastParams};
 use crate::chip::ChipActivity;
 use crate::compiler::{self, Options};
@@ -45,7 +47,7 @@ use crate::util::Rng;
 
 pub use crate::compiler::{CompileError, Objective};
 pub use crate::coordinator::SampleRun;
-pub use backend::{AnalyticBackend, DetailedBackend, ExecBackend};
+pub use backend::{AnalyticBackend, DetailedBackend, ExecBackend, MultiChipBackend};
 pub use workloads::{evaluate, Workload, WorkloadReport};
 
 /// Which execution engine a [`Session`] drives.
@@ -54,14 +56,29 @@ pub enum Backend {
     /// The cycle/event-detailed engine: real ISA programs interpreted
     /// per event on the behavioral [`crate::chip::Chip`].
     Detailed,
+    /// The event-detailed engine sharded over multiple dies stepped in
+    /// lockstep ([`crate::coordinator::MultiChipDeployment`]); results
+    /// are bit-identical to [`Backend::Detailed`] on one big-enough
+    /// die. `chips = 0` uses just enough dies for the model (`Detailed`
+    /// also falls back here automatically when one die's 1056 cores are
+    /// exceeded); a larger value forces a finer split.
+    Sharded { chips: usize },
     /// The fast analytic engine ([`crate::chip::fast`]): activity
     /// counters computed from shapes, rates, and placement geometry.
     Analytic,
 }
 
 impl Backend {
-    /// Parse a CLI-style backend name.
+    /// Parse a CLI-style backend name (`detailed`, `analytic`,
+    /// `sharded`, or `sharded:N` for a forced N-die split).
     pub fn parse(s: &str) -> Option<Backend> {
+        if let Some(rest) = s.strip_prefix("sharded") {
+            let rest = rest.trim_start_matches(':');
+            if rest.is_empty() {
+                return Some(Backend::Sharded { chips: 0 });
+            }
+            return rest.parse().ok().map(|chips| Backend::Sharded { chips });
+        }
         match s {
             "detailed" | "chip" => Some(Backend::Detailed),
             "analytic" | "fast" => Some(Backend::Analytic),
@@ -74,6 +91,8 @@ impl std::fmt::Display for Backend {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Backend::Detailed => write!(f, "detailed"),
+            Backend::Sharded { chips: 0 } => write!(f, "sharded"),
+            Backend::Sharded { chips } => write!(f, "sharded:{chips}"),
             Backend::Analytic => write!(f, "analytic"),
         }
     }
@@ -97,11 +116,14 @@ impl Sample {
         }
     }
 
-    /// The sample's (first) label.
-    pub fn label(&self) -> usize {
+    /// The sample's (first) label, or `None` for unlabeled samples
+    /// (synthetic probes like [`Sample::poisson`] carry no ground truth
+    /// — decode/accuracy paths skip them instead of silently scoring
+    /// them as class 0).
+    pub fn label(&self) -> Option<usize> {
         match self {
-            Sample::Spikes(s) => s.labels.first().copied().unwrap_or(0),
-            Sample::Dense(d) => d.label,
+            Sample::Spikes(s) => s.labels.first().copied(),
+            Sample::Dense(d) => Some(d.label),
         }
     }
 
@@ -127,6 +149,8 @@ impl Sample {
     /// A synthetic Bernoulli spike train: every channel fires with
     /// probability `rate` each timestep. Handy for driving a net that
     /// has no natural dataset (benchmark nets, brain simulation drive).
+    /// Carries no labels — it is a probe, not a classified sample, so
+    /// [`Sample::label`] returns `None` and accuracy paths skip it.
     pub fn poisson(channels: usize, timesteps: usize, rate: f64, seed: u64) -> Sample {
         let mut rng = Rng::new(seed);
         let mut spikes = Vec::with_capacity(timesteps);
@@ -141,7 +165,7 @@ impl Sample {
         }
         Sample::Spikes(SpikeSample {
             spikes,
-            labels: vec![0],
+            labels: Vec::new(),
         })
     }
 }
@@ -341,48 +365,69 @@ impl Taibai {
         self
     }
 
-    /// Compile (detailed) or parameterize (analytic) and deploy.
+    /// Compile (detailed/sharded) or parameterize (analytic) and deploy.
+    ///
+    /// A [`Backend::Detailed`] build whose placement exceeds one die's
+    /// capacity falls back to the sharded pipeline automatically — the
+    /// remedy [`CompileError::TooManyCores`] has always pointed at.
     pub fn build(self) -> Result<Session, CompileError> {
-        match self.backend {
+        let Taibai {
+            net,
+            weights,
+            opts,
+            backend,
+            em,
+            fast,
+        } = self;
+        match backend {
             Backend::Detailed => {
-                let report = compiler::compile(&self.net, &self.weights, &self.opts)?;
-                let info = DeployInfo {
-                    backend: Backend::Detailed,
-                    used_cores: report.compiled.used_cores,
-                    chips: 1,
-                    cores_saved: report.compiled.cores_saved,
-                    avg_hops: report.avg_hops,
-                    placement_cost: report.placement_cost,
-                    init_packets: report.compiled.config.init_packets(),
-                };
-                let timesteps = self.net.timesteps;
-                let be = DetailedBackend::new(report.compiled, self.em, timesteps)
-                    .map_err(|e| CompileError::Deploy { msg: e.to_string() })?;
-                Ok(Session {
-                    net: self.net,
-                    learning: self.opts.learning,
-                    info,
-                    backend: Box::new(be),
-                    samples_run: 0,
-                    batch_activity: ChipActivity::default(),
-                })
+                match compiler::compile(&net, &weights, &opts) {
+                    Ok(report) => {
+                        let info = DeployInfo {
+                            backend: Backend::Detailed,
+                            used_cores: report.compiled.used_cores,
+                            chips: 1,
+                            cores_saved: report.compiled.cores_saved,
+                            avg_hops: report.avg_hops,
+                            placement_cost: report.placement_cost,
+                            init_packets: report.compiled.config.init_packets(),
+                        };
+                        let timesteps = net.timesteps;
+                        let be = DetailedBackend::new(report.compiled, em, timesteps)
+                            .map_err(|e| CompileError::Deploy { msg: e.to_string() })?;
+                        Ok(Session {
+                            net,
+                            learning: opts.learning,
+                            info,
+                            backend: Box::new(be),
+                            samples_run: 0,
+                            batch_activity: ChipActivity::default(),
+                        })
+                    }
+                    // capacity exceeded → shard across just enough dies
+                    Err(CompileError::TooManyCores { .. }) => {
+                        build_sharded(net, weights, opts, em, 0)
+                    }
+                    Err(e) => Err(e),
+                }
             }
+            Backend::Sharded { chips } => build_sharded(net, weights, opts, em, chips),
             Backend::Analytic => {
                 // probe once for the deployment geometry (pure function)
-                let probe = simulate(&self.net, &self.fast, &self.em);
+                let probe = simulate(&net, &fast, &em);
                 let info = DeployInfo {
                     backend: Backend::Analytic,
                     used_cores: probe.used_cores,
                     chips: probe.chips,
                     cores_saved: 0,
-                    avg_hops: self.fast.avg_hops,
+                    avg_hops: fast.avg_hops,
                     placement_cost: 0.0,
                     init_packets: 0,
                 };
-                let be = AnalyticBackend::new(self.net.clone(), self.fast, self.em);
+                let be = AnalyticBackend::new(net.clone(), fast, em);
                 Ok(Session {
-                    net: self.net,
-                    learning: self.opts.learning,
+                    net,
+                    learning: opts.learning,
                     info,
                     backend: Box::new(be),
                     samples_run: 0,
@@ -391,6 +436,40 @@ impl Taibai {
             }
         }
     }
+}
+
+/// Compile across multiple dies and deploy a lockstep multi-chip
+/// session ([`Backend::Sharded`] and the `Detailed` capacity fallback).
+fn build_sharded(
+    net: NetDef,
+    weights: Vec<Vec<f32>>,
+    opts: Options,
+    em: EnergyModel,
+    chips: usize,
+) -> Result<Session, CompileError> {
+    let report = compiler::compile_sharded(&net, &weights, &opts, chips)?;
+    let sharded = Arc::new(report.sharded);
+    let n_chips = sharded.num_chips();
+    let info = DeployInfo {
+        backend: Backend::Sharded { chips: n_chips },
+        used_cores: sharded.used_cores,
+        chips: n_chips,
+        cores_saved: sharded.cores_saved,
+        avg_hops: report.avg_hops,
+        placement_cost: report.placement_cost,
+        init_packets: sharded.init_packets,
+    };
+    let timesteps = net.timesteps;
+    let be = MultiChipBackend::new(sharded, em, timesteps)
+        .map_err(|e| CompileError::Deploy { msg: e.to_string() })?;
+    Ok(Session {
+        net,
+        learning: opts.learning,
+        info,
+        backend: Box::new(be),
+        samples_run: 0,
+        batch_activity: ChipActivity::default(),
+    })
 }
 
 /// A deployed, runnable model: one network on one backend.
@@ -428,19 +507,30 @@ impl Session {
         if samples.is_empty() {
             return Ok(Vec::new());
         }
-        // Each detailed-engine clone owns a full chip image (~64 MB of
-        // NC data memory), so cap the worker count independently of the
-        // host's core count.
-        const MAX_WORKERS: usize = 8;
-        let threads = std::thread::available_parallelism()
+        // Forks share the compiled image behind an `Arc` and size their
+        // chip state to the model (`Compiled::data_words`), so the old
+        // ~64 MB-per-clone image cap no longer applies. Still bounded so
+        // fork setup (per-worker INIT-stage configuration) cannot dwarf
+        // small batches on very wide hosts. A sharded fork runs one
+        // lockstep thread per die, so weight the worker count by the die
+        // count to keep total threads near the host's parallelism.
+        const MAX_WORKERS: usize = 32;
+        let threads_per_fork = self.info.chips.max(1);
+        let threads = (std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
+            / threads_per_fork)
+            .max(1)
             .min(MAX_WORKERS)
             .min(samples.len());
         // Learning sessions must see the primary deployment's (possibly
         // fine-tuned) weights; the analytic engine is too cheap to be
-        // worth forking.
-        if self.learning || self.info.backend != Backend::Detailed || threads <= 1 {
+        // worth forking. Detailed and sharded deployments both fork.
+        let forkable = matches!(
+            self.info.backend,
+            Backend::Detailed | Backend::Sharded { .. }
+        );
+        if self.learning || !forkable || threads <= 1 {
             let mut out = Vec::with_capacity(samples.len());
             for s in samples {
                 out.push(self.run(s)?);
@@ -650,6 +740,14 @@ mod tests {
         assert_eq!(Backend::parse("analytic"), Some(Backend::Analytic));
         assert_eq!(Backend::parse("gpu"), None);
         assert_eq!(Backend::Analytic.to_string(), "analytic");
+        assert_eq!(Backend::parse("sharded"), Some(Backend::Sharded { chips: 0 }));
+        assert_eq!(
+            Backend::parse("sharded:4"),
+            Some(Backend::Sharded { chips: 4 })
+        );
+        assert_eq!(Backend::parse("sharded:x"), None);
+        assert_eq!(Backend::Sharded { chips: 0 }.to_string(), "sharded");
+        assert_eq!(Backend::Sharded { chips: 2 }.to_string(), "sharded:2");
     }
 
     #[test]
@@ -658,5 +756,151 @@ mod tests {
         let r = s.input_rate(64);
         assert!((r - 0.25).abs() < 0.05, "rate={r}");
         assert_eq!(s.timesteps(), 100);
+    }
+
+    #[test]
+    fn poisson_probes_are_unlabeled() {
+        // regression: synthetic probes used to fabricate `labels: [0]`
+        // and silently count as correct class-0 predictions in evaluate
+        let s = Sample::poisson(4, 10, 0.3, 1);
+        assert_eq!(s.label(), None);
+        let w = workloads::Shd { dendrites: false };
+        let run = SampleRun {
+            outputs: vec![vec![1.0, 0.0]],
+            spikes: 1,
+            packets: 1,
+        };
+        assert!(
+            w.decode(&run, &s).is_empty(),
+            "unlabeled runs must not contribute accuracy pairs"
+        );
+    }
+
+    // ---- run_batch partial-failure accounting ------------------------
+
+    /// Mock backend whose `run` rejects (or panics on) samples with a
+    /// poisoned timestep count; every success books 10 SOPs.
+    struct FlakyBackend {
+        poison_t: usize,
+        panic_mode: bool,
+        acc: ChipActivity,
+    }
+
+    impl ExecBackend for FlakyBackend {
+        fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
+            if sample.timesteps() == self.poison_t {
+                if self.panic_mode {
+                    panic!("poisoned sample");
+                }
+                return Err(RunError::Unsupported("poisoned sample"));
+            }
+            self.acc.nc.sops += 10;
+            Ok(SampleRun {
+                outputs: Vec::new(),
+                spikes: 1,
+                packets: 1,
+            })
+        }
+
+        fn reset(&mut self) -> Result<(), RunError> {
+            Ok(())
+        }
+
+        fn learn_step(&mut self, _errors: &[f32]) -> Result<(), RunError> {
+            Err(RunError::Unsupported("mock"))
+        }
+
+        fn activity(&self) -> ChipActivity {
+            self.acc
+        }
+
+        fn fork(&self) -> Result<Box<dyn ExecBackend>, RunError> {
+            Ok(Box::new(FlakyBackend {
+                poison_t: self.poison_t,
+                panic_mode: self.panic_mode,
+                acc: ChipActivity::default(),
+            }))
+        }
+
+        fn metrics(&self, _a: &ChipActivity, samples: u64) -> SessionMetrics {
+            SessionMetrics {
+                samples,
+                used_cores: 1,
+                chips: 1,
+                fps: 0.0,
+                power_w: 0.0,
+                fps_per_w: 0.0,
+                energy_per_sample_j: 0.0,
+                pj_per_sop: 0.0,
+                spikes_per_sample: 0.0,
+                sops: 0,
+            }
+        }
+
+        fn kind(&self) -> Backend {
+            Backend::Detailed
+        }
+    }
+
+    fn flaky_session(poison_t: usize, panic_mode: bool) -> Session {
+        let (net, _) = tiny_net();
+        Session {
+            net,
+            learning: false,
+            info: DeployInfo {
+                backend: Backend::Detailed,
+                used_cores: 1,
+                chips: 1,
+                cores_saved: 0,
+                avg_hops: 0.0,
+                placement_cost: 0.0,
+                init_packets: 0,
+            },
+            backend: Box::new(FlakyBackend {
+                poison_t,
+                panic_mode,
+                acc: ChipActivity::default(),
+            }),
+            samples_run: 0,
+            batch_activity: ChipActivity::default(),
+        }
+    }
+
+    fn two_workers_available() -> bool {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            >= 2
+    }
+
+    #[test]
+    fn run_batch_partial_failure_keeps_successful_accounting() {
+        if !two_workers_available() {
+            return; // needs ≥ 2 workers to split the batch
+        }
+        // 2 samples → 2 single-sample workers; the 13-step one poisons
+        let mut s = flaky_session(13, false);
+        let good = Sample::poisson(2, 5, 0.5, 1);
+        let bad = Sample::poisson(2, 13, 0.5, 1);
+        let err = s.run_batch(&[good, bad]).unwrap_err();
+        assert!(matches!(err, RunError::Unsupported(_)), "{err}");
+        // the successful worker's runs and activity still merged
+        // (api::mod promises this; nothing pinned it until now)
+        assert_eq!(s.samples_run(), 1);
+        assert_eq!(s.activity().nc.sops, 10);
+    }
+
+    #[test]
+    fn run_batch_worker_panic_surfaces_as_thread_error() {
+        if !two_workers_available() {
+            return;
+        }
+        let mut s = flaky_session(13, true);
+        let good = Sample::poisson(2, 5, 0.5, 1);
+        let bad = Sample::poisson(2, 13, 0.5, 1);
+        let err = s.run_batch(&[good, bad]).unwrap_err();
+        assert!(matches!(err, RunError::Thread(_)), "{err}");
+        assert_eq!(s.samples_run(), 1);
+        assert_eq!(s.activity().nc.sops, 10);
     }
 }

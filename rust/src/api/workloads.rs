@@ -224,10 +224,13 @@ impl Workload for Shd {
     }
 
     fn decode(&self, run: &SampleRun, sample: &Sample) -> Vec<(usize, usize)> {
+        let Some(label) = sample.label() else {
+            return Vec::new(); // unlabeled probe: contributes no pairs
+        };
         if run.outputs.is_empty() {
             return Vec::new();
         }
-        vec![(argmax(&run.summed()), sample.label())]
+        vec![(argmax(&run.summed()), label)]
     }
 }
 
@@ -337,10 +340,13 @@ impl Workload for Bci {
     }
 
     fn decode(&self, run: &SampleRun, sample: &Sample) -> Vec<(usize, usize)> {
+        let Some(label) = sample.label() else {
+            return Vec::new(); // unlabeled probe: contributes no pairs
+        };
         if run.outputs.is_empty() {
             return Vec::new();
         }
-        vec![(argmax(&run.summed()), sample.label())]
+        vec![(argmax(&run.summed()), label)]
     }
 
     /// The paper's protocol: fine-tune the FC head on chip with 32

@@ -52,6 +52,7 @@ pub mod fast;
 use crate::nc::Trap;
 use crate::noc::{router::Mesh, Packet, NUM_CCS};
 use crate::scheduler::{CorticalColumn, HostOutput, Minted};
+use crate::topology::RouteMode;
 
 /// Result of one timestep.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -59,6 +60,11 @@ pub struct StepResult {
     pub outputs: Vec<HostOutput>,
     pub packets_routed: u64,
     pub spikes: u64,
+    /// Packets minted this step whose [`RouteMode::Remote`] destination
+    /// is another die. They are *not* delivered locally; the host bridge
+    /// must inject them into the destination chip's next step (multi-chip
+    /// deployments). Always empty on single-die images.
+    pub egress: Vec<Packet>,
 }
 
 impl StepResult {
@@ -66,6 +72,7 @@ impl StepResult {
         self.outputs.clear();
         self.packets_routed = 0;
         self.spikes = 0;
+        self.egress.clear();
     }
 }
 
@@ -163,8 +170,11 @@ impl Iterator for WakeIter {
     }
 }
 
-/// The TaiBai chip (one die; multi-chip scaling is modeled analytically
-/// through [`crate::noc::router::inter_chip_cost`]).
+/// The TaiBai chip (one die). Multi-die deployments instantiate one
+/// `Chip` per die and bridge them through [`StepResult::egress`] /
+/// [`Chip::step_ext`] (see [`crate::coordinator::MultiChipDeployment`]);
+/// the fast analytic engine still prices die crossings through
+/// [`crate::noc::router::inter_chip_cost`].
 pub struct Chip {
     pub ccs: Vec<CorticalColumn>,
     pub mesh: Mesh,
@@ -277,12 +287,32 @@ impl Chip {
         inputs: &[Packet],
         res: &mut StepResult,
     ) -> Result<(), Trap> {
+        self.step_ext(&[], inputs, res)
+    }
+
+    /// Multi-die stepping: like [`Chip::step_into`], but with a second
+    /// injection point. `pre` packets are delivered *before* this die's
+    /// own pending spikes, `post` packets after. The host bridge uses
+    /// this to reproduce the single-die delivery order exactly: remote
+    /// spikes from lower-numbered dies land in `pre`, those from
+    /// higher-numbered dies (plus host inputs) in `post`, matching the
+    /// ascending-source-CC order the on-die engine produces on one big
+    /// chip. Single-die callers pass `pre = &[]`.
+    pub fn step_ext(
+        &mut self,
+        pre: &[Packet],
+        post: &[Packet],
+        res: &mut StepResult,
+    ) -> Result<(), Trap> {
         res.clear();
         self.sched.steps += 1;
 
         // ---- INTEG ----------------------------------------------------
         // Swap last step's minted packets into the inbox and deliver
         // them; columns receiving work join the integ/live wake sets.
+        for p in pre {
+            self.deliver(self.proxy_cc, p, res);
+        }
         let mut inbox = std::mem::take(&mut self.inbox);
         std::mem::swap(&mut self.pending, &mut inbox);
         for m in &inbox {
@@ -290,7 +320,7 @@ impl Chip {
         }
         inbox.clear();
         self.inbox = inbox;
-        for p in inputs {
+        for p in post {
             self.deliver(self.proxy_cc, p, res);
         }
         let integ = std::mem::take(&mut self.integ_wake);
@@ -331,6 +361,28 @@ impl Chip {
             for i in ticked.iter() {
                 self.tick_cc(i, res);
             }
+        }
+
+        // ---- cross-die egress ------------------------------------------
+        // Packets minted for another die leave through the proxy now (the
+        // host bridge re-injects them into the destination chip's next
+        // step); keeping them in `pending` would alias local CCs. Minted
+        // order is preserved so the destination die sees the same event
+        // order a single big die would produce.
+        if self
+            .pending
+            .iter()
+            .any(|m| matches!(m.packet.mode, RouteMode::Remote { .. }))
+        {
+            let egress = &mut res.egress;
+            self.pending.retain(|m| {
+                if matches!(m.packet.mode, RouteMode::Remote { .. }) {
+                    egress.push(m.packet);
+                    false
+                } else {
+                    true
+                }
+            });
         }
 
         self.timestep += 1;

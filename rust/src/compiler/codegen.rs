@@ -16,7 +16,7 @@ use std::collections::HashMap;
 
 use crate::chip::config::{CcImage, ChipConfig, NcImage};
 use crate::model::{Layer, NetDef, NeuronModel};
-use crate::noc::{cc_xy, Packet, PacketPhase, PacketType};
+use crate::noc::{cc_xy, Packet, PacketPhase, PacketType, NUM_CCS};
 use crate::programs::{self, learning, NcLayout};
 use crate::scheduler::NcConfig;
 use crate::topology::{
@@ -43,6 +43,9 @@ fn kind_name(l: &Layer) -> &'static str {
 /// Where one physical core landed and what it hosts.
 #[derive(Clone, Debug)]
 pub struct CoreMeta {
+    /// Die-global CC id (`chip · NUM_CCS + local_cc`). Equal to the
+    /// die-local id for single-chip placements; multi-chip images are
+    /// split per die by [`crate::compiler::shard`].
     pub cc: usize,
     pub nc: u8,
     pub layout: NcLayout,
@@ -63,6 +66,28 @@ pub struct Compiled {
     pub error_map: Vec<Packet>,
     pub used_cores: usize,
     pub cores_saved: usize,
+    /// NC data-memory words this image needs (largest initialized or
+    /// layout-addressed extent plus headroom) — what
+    /// [`crate::coordinator::Deployment`] sizes its chip with, so clones
+    /// and multi-die fleets only pay for memory the model touches.
+    pub data_words: usize,
+}
+
+/// Routing mode from one die-global CC to another: same-die targets stay
+/// on the mesh, cross-die targets leave through the host bridge.
+fn route_between(src_gcc: usize, dst_gcc: usize) -> RouteMode {
+    let (schip, dchip) = (src_gcc / NUM_CCS, dst_gcc / NUM_CCS);
+    let (x, y) = cc_xy(dst_gcc % NUM_CCS);
+    if schip == dchip {
+        RouteMode::Unicast { x, y }
+    } else {
+        RouteMode::Remote { chip: dchip as u8, x, y }
+    }
+}
+
+/// Host-injected packets (sample inputs, learning errors) enter on die 0.
+fn route_host(dst_gcc: usize) -> RouteMode {
+    route_between(0, dst_gcc)
 }
 
 /// FP16 quantization of a weight blob.
@@ -96,7 +121,7 @@ pub fn codegen(
     learning: bool,
 ) -> Result<Compiled, CompileError> {
     let locs: Vec<(usize, u8)> = (0..merged.cores.len())
-        .map(|i| place.loc(i))
+        .map(|i| place.global_cc(i))
         .collect();
 
     // group layer parts by CC
@@ -174,6 +199,24 @@ pub fn codegen(
     }
 
     let used = config.used_cores();
+    // Size the NC data memory to what the image actually addresses: the
+    // largest initialized region / layout extent, with headroom for
+    // program over-reads (e.g. the recurrent forward-axon overhang into
+    // the state regions), power-of-two rounded and capped at the legacy
+    // fixed size unless the image itself is bigger.
+    let mut extent = 0usize;
+    for cc in config.ccs.values() {
+        for nc in cc.ncs.iter().flatten() {
+            for (addr, words) in &nc.mem {
+                extent = extent.max(*addr as usize + words.len());
+            }
+        }
+    }
+    for core in &cores {
+        extent = extent.max(core.layout.itof as usize);
+    }
+    let padded = (extent + extent / 2 + 512).next_power_of_two();
+    let data_words = padded.min(crate::nc::DEFAULT_DATA_WORDS.max(extent + 512));
     Ok(Compiled {
         config,
         cores,
@@ -181,6 +224,7 @@ pub fn codegen(
         error_map,
         used_cores: used,
         cores_saved: merged.saved(),
+        data_words,
     })
 }
 
@@ -615,9 +659,8 @@ impl<'a> Builder<'a> {
                                 .dt_base
                                 .get(&(next, dcc))
                                 .ok_or(CompileError::MissingDtBase { layer: next, cc: dcc })?;
-                            let (x, y) = cc_xy(dcc);
                             ies.push(FanOutIE {
-                                mode: RouteMode::Unicast { x, y },
+                                mode: route_between(cc, dcc),
                                 tag: self.fanin_tag(next, dcc)?,
                                 index,
                                 delay: 0,
@@ -633,9 +676,8 @@ impl<'a> Builder<'a> {
                                     .dt_base
                                     .get(&(li, dcc))
                                     .ok_or(CompileError::MissingDtBase { layer: li, cc: dcc })?;
-                                let (x, y) = cc_xy(dcc);
                                 ies.push(FanOutIE {
-                                    mode: RouteMode::Unicast { x, y },
+                                    mode: route_between(cc, dcc),
                                     tag: self.fanin_tag(li, dcc)?,
                                     index,
                                     delay: 0,
@@ -714,8 +756,10 @@ impl<'a> Builder<'a> {
             let mut pkts = Vec::new();
             for br in 0..branches {
                 for (dcc, _) in self.layer_ccs[li].clone() {
-                    let base = *self.dt_base.get(&(li, dcc)).ok_or("missing dt base")?;
-                    let (x, y) = cc_xy(dcc);
+                    let base = *self
+                        .dt_base
+                        .get(&(li, dcc))
+                        .ok_or(CompileError::MissingDtBase { layer: li, cc: dcc })?;
                     let index = match &self.net.layers[li] {
                         // sparse: per-upstream DT entries; fc: per-branch
                         Layer::Sparse { .. } => base + ch as u16,
@@ -727,7 +771,7 @@ impl<'a> Builder<'a> {
                         tag: self.fanin_tag(li, dcc)?,
                         index,
                         payload: (br * n_in + ch) as u16,
-                        mode: RouteMode::Unicast { x, y },
+                        mode: route_host(dcc),
                     });
                 }
             }
@@ -782,7 +826,6 @@ impl<'a> Builder<'a> {
                     }
                 }
                 let dt = self.tables_of(cc).push_fanin(des, ies);
-                let (x, y) = cc_xy(cc);
                 let mut k = 0;
                 for (_nc, mi, pi) in &members {
                     let part = self.merged.cores[*mi].parts[*pi];
@@ -793,7 +836,7 @@ impl<'a> Builder<'a> {
                             tag,
                             index: dt + k,
                             payload: 0, // patched with the error value
-                            mode: RouteMode::Unicast { x, y },
+                            mode: route_host(cc),
                         });
                         k += 1;
                     }

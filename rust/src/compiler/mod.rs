@@ -9,12 +9,14 @@ pub mod placement;
 pub mod merge;
 pub mod codegen;
 pub mod error;
+pub mod shard;
 
 use crate::model::NetDef;
 
 pub use codegen::Compiled;
 pub use error::CompileError;
 pub use partition::Limits;
+pub use shard::{compile_sharded, ShardReport, ShardedCompiled};
 
 /// Placement objective (the Fig 13e trade-off knob).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,18 +65,8 @@ pub fn compile(
     weights: &[Vec<f32>],
     opts: &Options,
 ) -> Result<CompileReport, CompileError> {
-    if weights.len() != net.layers.len() {
-        return Err(CompileError::WeightCount {
-            expected: net.layers.len(),
-            got: weights.len(),
-        });
-    }
-    let mut limits = opts.limits;
-    match opts.objective {
-        Objective::MinCores => {}
-        Objective::MaxThroughput => limits.neurons_per_nc = limits.neurons_per_nc.min(16).max(1),
-        Objective::Balanced(n) => limits.neurons_per_nc = n.max(1),
-    }
+    check_weight_count(net, weights)?;
+    let limits = effective_limits(opts);
     let part = partition::partition(net, &limits);
     let merged = merge::merge(net, &part, limits.neurons_per_nc, opts.merge);
     let capacity = crate::noc::NUM_CCS * crate::topology::NCS_PER_CC;
@@ -84,23 +76,7 @@ pub fn compile(
             capacity,
         });
     }
-    let traffic = placement::traffic_matrix(net, &part, &opts.rates, 0.1);
-    // traffic is indexed by partition cores; collapse to merged cores.
-    // Rows between non-adjacent layers are all-zero, so skip zero cells
-    // and look the source core's merged index up once per row.
-    let mut mtraffic = vec![vec![0.0; merged.cores.len()]; merged.cores.len()];
-    for (i, row) in traffic.iter().enumerate() {
-        let (mi, _) = merged.origin[i];
-        for (j, &t) in row.iter().enumerate() {
-            if t == 0.0 {
-                continue;
-            }
-            let (mj, _) = merged.origin[j];
-            if mi != mj {
-                mtraffic[mi][mj] += t;
-            }
-        }
-    }
+    let mtraffic = merged_traffic(net, &part, &merged, &opts.rates);
     let init = placement::initial(merged.cores.len());
     let place = if opts.sa_iters > 0 {
         placement::optimize(&mtraffic, init, opts.sa_iters, opts.seed)
@@ -122,6 +98,57 @@ pub struct CompileReport {
     pub compiled: Compiled,
     pub avg_hops: f64,
     pub placement_cost: f64,
+}
+
+/// `weights.len()` must match the layer count (entry 0 stays empty).
+pub(crate) fn check_weight_count(
+    net: &NetDef,
+    weights: &[Vec<f32>],
+) -> Result<(), CompileError> {
+    if weights.len() != net.layers.len() {
+        return Err(CompileError::WeightCount {
+            expected: net.layers.len(),
+            got: weights.len(),
+        });
+    }
+    Ok(())
+}
+
+/// Partition limits after applying the placement objective.
+pub(crate) fn effective_limits(opts: &Options) -> Limits {
+    let mut limits = opts.limits;
+    match opts.objective {
+        Objective::MinCores => {}
+        Objective::MaxThroughput => limits.neurons_per_nc = limits.neurons_per_nc.min(16).max(1),
+        Objective::Balanced(n) => limits.neurons_per_nc = n.max(1),
+    }
+    limits
+}
+
+/// Traffic matrix collapsed onto merged cores. Rows between non-adjacent
+/// layers are all-zero, so zero cells are skipped and the source core's
+/// merged index is looked up once per row; intra-core traffic is free.
+pub(crate) fn merged_traffic(
+    net: &NetDef,
+    part: &partition::Partition,
+    merged: &merge::Merged,
+    rates: &[f64],
+) -> Vec<Vec<f64>> {
+    let traffic = placement::traffic_matrix(net, part, rates, 0.1);
+    let mut mtraffic = vec![vec![0.0; merged.cores.len()]; merged.cores.len()];
+    for (i, row) in traffic.iter().enumerate() {
+        let (mi, _) = merged.origin[i];
+        for (j, &t) in row.iter().enumerate() {
+            if t == 0.0 {
+                continue;
+            }
+            let (mj, _) = merged.origin[j];
+            if mi != mj {
+                mtraffic[mi][mj] += t;
+            }
+        }
+    }
+    mtraffic
 }
 
 #[cfg(test)]

@@ -13,18 +13,39 @@ use crate::util::Rng;
 
 use super::partition::Partition;
 
+/// NC slots on one die (132 CCs × 8 NCs).
+pub const CHIP_SLOTS: usize = NUM_CCS * NCS_PER_CC;
+
 /// A placement: `core_slot[i]` = global NC slot (cc·8 + nc) of core `i`,
 /// where CC order follows the zigzag curve.
+///
+/// Slots beyond one die's [`CHIP_SLOTS`] address further chips of a
+/// sharded deployment: slot `s` lives on die `s / CHIP_SLOTS` at local
+/// slot `s % CHIP_SLOTS`. Single-die placements (the only kind
+/// [`initial`] produces) never use them.
 #[derive(Clone, Debug, Default)]
 pub struct PlacementMap {
     pub core_slot: Vec<usize>,
 }
 
 impl PlacementMap {
-    /// (cc, nc) of core `i`.
+    /// (die-local cc, nc) of core `i`.
     pub fn loc(&self, core: usize) -> (usize, u8) {
-        let slot = self.core_slot[core];
+        let slot = self.core_slot[core] % CHIP_SLOTS;
         (zigzag_cc(slot / NCS_PER_CC), (slot % NCS_PER_CC) as u8)
+    }
+
+    /// Die hosting core `i` (0 for single-chip placements).
+    pub fn chip_of(&self, core: usize) -> usize {
+        self.core_slot[core] / CHIP_SLOTS
+    }
+
+    /// (die-global cc, nc) of core `i`, where a die-global cc id packs
+    /// `chip · NUM_CCS + local_cc` — the key space the code generator
+    /// builds tables in before a sharded image is split per die.
+    pub fn global_cc(&self, core: usize) -> (usize, u8) {
+        let (cc, nc) = self.loc(core);
+        (self.chip_of(core) * NUM_CCS + cc, nc)
     }
 }
 
@@ -65,11 +86,15 @@ pub fn traffic_matrix(
     t
 }
 
-/// Manhattan distance between the CCs hosting two slots.
+/// Manhattan distance between the CCs hosting two slots. Slots on
+/// different dies add a full mesh width per die crossed (edge exit +
+/// SerDes hop — the [`crate::noc::router::inter_chip_cost`] ballpark).
 fn slot_dist(a: usize, b: usize) -> f64 {
-    let (ax, ay) = cc_xy(zigzag_cc(a / NCS_PER_CC));
-    let (bx, by) = cc_xy(zigzag_cc(b / NCS_PER_CC));
+    let (ax, ay) = cc_xy(zigzag_cc(a % CHIP_SLOTS / NCS_PER_CC));
+    let (bx, by) = cc_xy(zigzag_cc(b % CHIP_SLOTS / NCS_PER_CC));
+    let chips_apart = (a / CHIP_SLOTS).abs_diff(b / CHIP_SLOTS);
     ((ax as i32 - bx as i32).abs() + (ay as i32 - by as i32).abs()) as f64
+        + (chips_apart * MESH_W) as f64
 }
 
 /// Traffic-weighted total distance of a placement (the SA objective).

@@ -1,0 +1,328 @@
+//! Multi-chip sharding (paper §IV-B "chip-scale expansion"): compile one
+//! network onto N dies.
+//!
+//! [`CompileError::TooManyCores`] has always told callers to "shard the
+//! model"; this pass is that remedy. It reuses the whole single-chip
+//! pipeline — partition → merge → zigzag placement → codegen — but lays
+//! the merged cores out in a **virtual multi-die slot space** (slot
+//! `s` = die `s / CHIP_SLOTS`, local slot `s % CHIP_SLOTS`, see
+//! [`super::placement::PlacementMap`]). The code generator then emits
+//! [`RouteMode::Remote`] for every fan-out edge whose destination CC
+//! lives on another die; [`compile_sharded`] finally splits the one
+//! die-global image into per-die [`ChipImage`]s plus the host-side maps
+//! a [`crate::coordinator::MultiChipDeployment`] needs to bridge them.
+//!
+//! Cut placement is core-list order: cores are assigned to dies in
+//! contiguous runs, at whole-CC granularity when there are at least as
+//! many occupied CCs as dies (this preserves the single-die NC grouping
+//! exactly — the bit-identity lever the parity tests pin), falling back
+//! to single-core granularity for forced fine splits of small networks.
+//! Cross-die placement is zigzag-only: simulated annealing would have to
+//! model SerDes-crossing costs to be meaningful and is skipped here.
+
+use std::collections::HashMap;
+
+use crate::chip::config::ChipConfig;
+use crate::model::NetDef;
+use crate::noc::{Packet, NUM_CCS};
+use crate::topology::{RouteMode, NCS_PER_CC};
+
+use super::codegen::{self, CoreMeta};
+use super::error::CompileError;
+use super::placement::{self, PlacementMap, CHIP_SLOTS};
+use super::{check_weight_count, effective_limits, merge, merged_traffic, partition, Options};
+
+/// Most dies a sharded deployment can span (the packet header carries
+/// the destination die in 8 bits).
+pub const MAX_CHIPS: usize = 256;
+
+/// One die's share of a sharded deployment.
+#[derive(Clone, Debug, Default)]
+pub struct ChipImage {
+    /// Deployment image with die-local CC ids (`input_map` is empty —
+    /// host inputs are dispatched through
+    /// [`ShardedCompiled::input_map`] instead).
+    pub config: ChipConfig,
+    /// (die-local cc, nc, local neuron) → flattened output index of the
+    /// final layer, for the dies that host readout neurons.
+    pub readout: HashMap<(usize, u8, u16), usize>,
+}
+
+/// A compiled multi-die deployment: per-die images plus the host-side
+/// bridge maps.
+#[derive(Clone, Debug, Default)]
+pub struct ShardedCompiled {
+    pub chips: Vec<ChipImage>,
+    /// Per input channel: (die, die-local packet template) pairs the
+    /// host injects when that channel is active.
+    pub input_map: Vec<Vec<(usize, Packet)>>,
+    /// Per output neuron: (die, die-local error-injection packet) for
+    /// on-chip learning heads.
+    pub error_map: Vec<(usize, Packet)>,
+    /// Every physical core as (die, die-local [`CoreMeta`]) — the state
+    /// reset / weight monitoring walk.
+    pub cores: Vec<(usize, CoreMeta)>,
+    /// Readout width of the final layer.
+    pub n_outputs: usize,
+    pub used_cores: usize,
+    pub cores_saved: usize,
+    /// NC data-memory words each die's chip is instantiated with.
+    pub data_words: usize,
+    /// INIT-stage configuration traffic summed over dies.
+    pub init_packets: u64,
+}
+
+impl ShardedCompiled {
+    pub fn num_chips(&self) -> usize {
+        self.chips.len()
+    }
+}
+
+/// Sharded compilation result + placement diagnostics.
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    pub sharded: ShardedCompiled,
+    /// Mean traffic-weighted hop distance (cross-die edges priced at a
+    /// full mesh width per die crossed).
+    pub avg_hops: f64,
+    pub placement_cost: f64,
+    /// Merged cores per die.
+    pub per_chip_cores: Vec<usize>,
+}
+
+/// Contiguous balanced split: `parts` sizes differing by at most one.
+fn split_sizes(total: usize, parts: usize) -> Vec<usize> {
+    let base = total / parts;
+    let rem = total % parts;
+    (0..parts).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Assign each merged core to a die. Whole-CC (8-slot) granularity when
+/// the occupied CC count allows, single-core granularity otherwise.
+fn assign_chips(total: usize, n_chips: usize) -> Vec<usize> {
+    let groups = total.div_ceil(NCS_PER_CC);
+    let mut chip_of = Vec::with_capacity(total);
+    if groups >= n_chips {
+        let sizes = split_sizes(groups, n_chips);
+        let mut group_chip = Vec::with_capacity(groups);
+        for (chip, &sz) in sizes.iter().enumerate() {
+            group_chip.resize(group_chip.len() + sz, chip);
+        }
+        for core in 0..total {
+            chip_of.push(group_chip[core / NCS_PER_CC]);
+        }
+    } else {
+        let sizes = split_sizes(total, n_chips);
+        for (chip, &sz) in sizes.iter().enumerate() {
+            chip_of.resize(chip_of.len() + sz, chip);
+        }
+    }
+    chip_of
+}
+
+/// Compile a network across multiple dies. `chips = 0` uses just enough
+/// dies for the core count; any larger value forces a finer split (the
+/// parity tests shard networks that would fit one die). Fails with
+/// [`CompileError::TooManyCores`] only when even [`MAX_CHIPS`] dies
+/// cannot hold the model.
+pub fn compile_sharded(
+    net: &NetDef,
+    weights: &[Vec<f32>],
+    opts: &Options,
+    chips: usize,
+) -> Result<ShardReport, CompileError> {
+    check_weight_count(net, weights)?;
+    let limits = effective_limits(opts);
+    let part = partition::partition(net, &limits);
+    let merged = merge::merge(net, &part, limits.neurons_per_nc, opts.merge);
+    let total = merged.cores.len().max(1);
+
+    let auto = total.div_ceil(CHIP_SLOTS);
+    let n_chips = chips.max(auto).max(1).min(total);
+    if n_chips > MAX_CHIPS {
+        return Err(CompileError::TooManyCores {
+            cores: total,
+            capacity: MAX_CHIPS * CHIP_SLOTS,
+        });
+    }
+
+    // virtual multi-die placement: zigzag within each die
+    let chip_of = assign_chips(merged.cores.len(), n_chips);
+    let mut next_local = vec![0usize; n_chips];
+    let mut core_slot = Vec::with_capacity(merged.cores.len());
+    for &chip in &chip_of {
+        core_slot.push(chip * CHIP_SLOTS + next_local[chip]);
+        next_local[chip] += 1;
+    }
+    debug_assert!(next_local.iter().all(|&n| n <= CHIP_SLOTS));
+    let place = PlacementMap { core_slot };
+
+    let mtraffic = merged_traffic(net, &part, &merged, &opts.rates);
+    let avg_hops = placement::avg_hops(&mtraffic, &place);
+    let placement_cost = placement::cost(&mtraffic, &place);
+
+    let compiled = codegen::codegen(net, weights, &merged, &place, opts.learning)?;
+
+    // ---- split the die-global image into per-die slices ----------------
+    let mut sharded = ShardedCompiled {
+        chips: vec![ChipImage::default(); n_chips],
+        n_outputs: net.layers.last().map(|l| l.neurons()).unwrap_or(0),
+        used_cores: compiled.used_cores,
+        cores_saved: compiled.cores_saved,
+        data_words: compiled.data_words,
+        ..Default::default()
+    };
+    for (gcc, image) in compiled.config.ccs {
+        sharded.chips[gcc / NUM_CCS]
+            .config
+            .ccs
+            .insert(gcc % NUM_CCS, image);
+    }
+    for ((gcc, nc, neuron), k) in compiled.readout {
+        sharded.chips[gcc / NUM_CCS]
+            .readout
+            .insert((gcc % NUM_CCS, nc, neuron), k);
+    }
+    sharded.input_map = compiled
+        .config
+        .input_map
+        .iter()
+        .map(|pkts| pkts.iter().map(|p| localize(*p)).collect())
+        .collect();
+    sharded.error_map = compiled.error_map.iter().map(|p| localize(*p)).collect();
+    for mut core in compiled.cores {
+        let chip = core.cc / NUM_CCS;
+        core.cc %= NUM_CCS;
+        sharded.cores.push((chip, core));
+    }
+    sharded.init_packets = sharded
+        .chips
+        .iter()
+        .map(|c| c.config.init_packets())
+        .sum();
+
+    let mut per_chip_cores = vec![0usize; n_chips];
+    for &chip in &chip_of {
+        per_chip_cores[chip] += 1;
+    }
+    Ok(ShardReport {
+        sharded,
+        avg_hops,
+        placement_cost,
+        per_chip_cores,
+    })
+}
+
+/// Host-side view of a die-global packet template: which die it enters
+/// and the die-local (unicast) form it is injected as.
+fn localize(p: Packet) -> (usize, Packet) {
+    match p.mode {
+        RouteMode::Remote { chip, x, y } => (
+            chip as usize,
+            Packet {
+                mode: RouteMode::Unicast { x, y },
+                ..p
+            },
+        ),
+        _ => (0, p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::workloads;
+    use crate::model;
+    use crate::topology::FanOutIE;
+
+    #[test]
+    fn split_sizes_are_balanced_and_total() {
+        assert_eq!(split_sizes(9, 2), vec![5, 4]);
+        assert_eq!(split_sizes(5, 4), vec![2, 1, 1, 1]);
+        assert_eq!(split_sizes(8, 8), vec![1; 8]);
+        assert_eq!(split_sizes(2000, 2).iter().sum::<usize>(), 2000);
+    }
+
+    #[test]
+    fn assignment_prefers_cc_boundaries() {
+        // 9 cores = 2 occupied CCs, 2 dies: cut exactly at the CC edge
+        // so per-die NC grouping matches the single-die layout
+        let a = assign_chips(9, 2);
+        assert_eq!(&a[..8], &[0; 8]);
+        assert_eq!(a[8], 1);
+        // 5 cores on 4 dies: fewer CCs than dies → core granularity
+        let b = assign_chips(5, 4);
+        assert_eq!(b, vec![0, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn sharded_ecg_splits_with_remote_edges() {
+        let net = model::srnn_ecg(true);
+        let weights = workloads::ecg_weights(true, 42);
+        let opts = Options {
+            sa_iters: 0,
+            ..Default::default()
+        };
+        let r = compile_sharded(&net, &weights, &opts, 2).unwrap();
+        let s = &r.sharded;
+        assert_eq!(s.num_chips(), 2);
+        assert_eq!(s.n_outputs, 6);
+        assert_eq!(r.per_chip_cores.iter().sum::<usize>(), 2);
+        // the hidden → readout cut must appear as Remote fan-out IEs on
+        // die 0 and nowhere as a local alias
+        let die0 = &s.chips[0].config;
+        let remote = die0
+            .ccs
+            .values()
+            .flat_map(|cc| cc.tables.fanout_it.iter())
+            .filter(|ie| matches!(ie.mode, RouteMode::Remote { chip: 1, .. }))
+            .count();
+        assert!(remote > 0, "no cross-die fan-out emitted");
+        // die 1 hosts the full readout map, die 0 none of it
+        assert_eq!(s.chips[1].readout.len(), 6);
+        assert!(s.chips[0].readout.is_empty());
+        // all host inputs enter on die 0
+        assert!(s.input_map.iter().flatten().all(|(chip, _)| *chip == 0));
+    }
+
+    #[test]
+    fn single_die_sharding_has_no_remote_edges() {
+        let net = model::srnn_ecg(false);
+        let weights = workloads::ecg_weights(false, 7);
+        let r = compile_sharded(&net, &weights, &Options::default(), 0).unwrap();
+        assert_eq!(r.sharded.num_chips(), 1);
+        let all_local = r.sharded.chips[0].config.ccs.values().all(|cc| {
+            cc.tables
+                .fanout_it
+                .iter()
+                .all(|ie: &FanOutIE| !matches!(ie.mode, RouteMode::Remote { .. }))
+        });
+        assert!(all_local);
+    }
+
+    #[test]
+    fn over_capacity_net_autoshards() {
+        let net = model::wide_fc_net(8, 600, 2, 4);
+        let blobs = model::wide_fc_weights(&net, 5);
+        let opts = Options {
+            objective: super::super::Objective::Balanced(1),
+            sa_iters: 0,
+            merge: false,
+            ..Default::default()
+        };
+        // single-chip compile must still refuse…
+        match super::super::compile(&net, &blobs, &opts) {
+            Err(CompileError::TooManyCores { cores, capacity }) => {
+                assert!(cores > capacity);
+            }
+            other => panic!("expected TooManyCores, got {:?}", other.err()),
+        }
+        // …while the sharded pipeline spreads it over just enough dies
+        let r = compile_sharded(&net, &blobs, &opts, 0).unwrap();
+        assert!(r.sharded.num_chips() >= 2, "{} dies", r.sharded.num_chips());
+        assert!(r
+            .per_chip_cores
+            .iter()
+            .all(|&c| c <= CHIP_SLOTS));
+    }
+}

@@ -4,18 +4,36 @@
 //! timestep, gathers readout values, clears dynamic state between
 //! samples, and drives the on-chip learning loop (error injection for
 //! the BCI cross-day fine-tune).
+//!
+//! [`MultiChipDeployment`] is the sharded counterpart: it owns one
+//! [`Chip`] per die of a [`ShardedCompiled`] image and steps them in
+//! lockstep — one std thread per die, one barrier per timestep — while a
+//! host-side bridge carries each die's [`StepResult::egress`] packets
+//! (fan-out edges the compiler marked [`RouteMode::Remote`]) into the
+//! destination die's next step. Cross-die spikes therefore arrive with
+//! exactly the one-timestep latency of on-die NoC delivery, and in the
+//! same ascending-source order, which is what makes a sharded run
+//! bit-identical to the same network on one (hypothetically larger) die.
 
-use crate::chip::{config::ChipConfig, Chip, StepResult};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+use crate::chip::{config::ChipConfig, Chip, ChipActivity, StepResult};
+use crate::compiler::shard::ShardedCompiled;
 use crate::compiler::Compiled;
 use crate::datasets::{DenseSample, SpikeSample};
 use crate::nc::Trap;
 use crate::noc::Packet;
+use crate::scheduler::HostOutput;
+use crate::topology::RouteMode;
 use crate::util::F16;
 
-/// A deployed model: chip + compilation metadata.
+/// A deployed model: chip + compilation metadata. The compiled image is
+/// behind an [`Arc`] so `run_batch` forks share it instead of deep-
+/// cloning ~the whole deployment per worker.
 pub struct Deployment {
     pub chip: Chip,
-    pub compiled: Compiled,
+    pub compiled: Arc<Compiled>,
     n_outputs: usize,
 }
 
@@ -47,7 +65,15 @@ impl Deployment {
     /// Fails with a [`Trap`] when the image addresses memory outside the
     /// die (a code-generator bug, surfaced instead of panicking).
     pub fn new(compiled: Compiled) -> Result<Deployment, Trap> {
-        let mut chip = Chip::new(crate::nc::DEFAULT_DATA_WORDS);
+        Deployment::from_image(Arc::new(compiled))
+    }
+
+    /// Deploy an already-shared compiled image on a fresh chip — the
+    /// `run_batch` fork path: each worker allocates only chip state
+    /// (sized by [`Compiled::data_words`], not the fixed 64 KB/NC
+    /// maximum), never a copy of the image.
+    pub fn from_image(compiled: Arc<Compiled>) -> Result<Deployment, Trap> {
+        let mut chip = Chip::new(compiled.data_words.max(64));
         chip.configure(&compiled.config)?;
         let n_outputs = compiled.readout.len();
         Ok(Deployment {
@@ -181,6 +207,345 @@ impl Deployment {
             .into_iter()
             .map(|w| F16(w).to_f32())
             .collect())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Multi-chip lockstep deployment.
+// ---------------------------------------------------------------------
+
+/// One parity's staging cells, indexed `[dst][src]`.
+type StageCells = Vec<Vec<Mutex<Vec<Packet>>>>;
+
+/// Host-side inter-die packet staging: `stage[parity][dst][src]` holds
+/// the packets die `src` minted during a step of the given parity, to be
+/// delivered to die `dst` in the next step. Double-buffering by step
+/// parity means one barrier per step is enough: writers fill the other
+/// parity while readers drain their own, and each (dst, src) cell has
+/// exactly one writer and one reader per step.
+struct Bridge {
+    stage: [StageCells; 2],
+    /// Parity of the next lockstep step.
+    parity: usize,
+}
+
+impl Bridge {
+    fn new(n: usize) -> Bridge {
+        let mk = || {
+            (0..n)
+                .map(|_| (0..n).map(|_| Mutex::new(Vec::new())).collect())
+                .collect()
+        };
+        Bridge {
+            stage: [mk(), mk()],
+            parity: 0,
+        }
+    }
+
+    fn clear(&mut self) {
+        for half in &mut self.stage {
+            for row in half {
+                for cell in row {
+                    cell.get_mut().unwrap().clear();
+                }
+            }
+        }
+    }
+}
+
+/// One die's contribution to a lockstep run.
+#[derive(Clone, Debug, Default)]
+struct ChipRun {
+    /// Host outputs per timestep (die-local CC coordinates).
+    outputs: Vec<Vec<HostOutput>>,
+    spikes: u64,
+    packets: u64,
+}
+
+fn host_trap(msg: &str) -> Trap {
+    Trap {
+        pc: 0,
+        msg: msg.to_string(),
+    }
+}
+
+/// N dies of one sharded model, stepped in lockstep.
+///
+/// The run loop spawns one std thread per die. Each timestep, every die
+/// drains its inbound bridge cells (packets from lower-numbered dies are
+/// delivered *before* its own pending spikes, packets from higher dies
+/// and host inputs after — reproducing the single-die ascending-source
+/// delivery order), steps its [`Chip`], stages the step's
+/// [`StepResult::egress`] for the destination dies, and meets the others
+/// at a barrier. State reset, learning, and activity aggregation mirror
+/// the single-die [`Deployment`] surface so the API layer can treat both
+/// uniformly.
+pub struct MultiChipDeployment {
+    pub chips: Vec<Chip>,
+    pub compiled: Arc<ShardedCompiled>,
+    bridge: Bridge,
+}
+
+impl MultiChipDeployment {
+    /// Configure one fresh chip per die (INIT stage on every die).
+    pub fn new(compiled: Arc<ShardedCompiled>) -> Result<MultiChipDeployment, Trap> {
+        if compiled.chips.is_empty() {
+            return Err(host_trap("sharded image carries zero dies"));
+        }
+        let mut chips = Vec::with_capacity(compiled.chips.len());
+        for image in &compiled.chips {
+            let mut chip = Chip::new(compiled.data_words.max(64));
+            chip.configure(&image.config)?;
+            chips.push(chip);
+        }
+        Ok(MultiChipDeployment {
+            bridge: Bridge::new(chips.len()),
+            chips,
+            compiled,
+        })
+    }
+
+    pub fn num_chips(&self) -> usize {
+        self.chips.len()
+    }
+
+    /// Run one spike-train sample across all dies.
+    pub fn run_spikes(&mut self, sample: &SpikeSample) -> Result<SampleRun, Trap> {
+        let t_max = sample.spikes.len();
+        let mut by_chip = vec![vec![Vec::new(); t_max]; self.chips.len()];
+        for (t, active) in sample.spikes.iter().enumerate() {
+            for &ch in active {
+                for (chip, tpl) in &self.compiled.input_map[ch as usize] {
+                    by_chip[*chip][t].push(*tpl);
+                }
+            }
+        }
+        self.run_bridged(&by_chip, t_max)
+    }
+
+    /// Run one dense-valued sample (FP input mode) across all dies.
+    pub fn run_values(&mut self, sample: &DenseSample) -> Result<SampleRun, Trap> {
+        let t_max = sample.values.len();
+        let mut by_chip = vec![vec![Vec::new(); t_max]; self.chips.len()];
+        for (t, row) in sample.values.iter().enumerate() {
+            for (ch, &v) in row.iter().enumerate() {
+                if v == 0.0 {
+                    continue; // zero bins carry no information: stay sparse
+                }
+                for (chip, tpl) in &self.compiled.input_map[ch] {
+                    let mut p = *tpl;
+                    p.payload = F16::from_f32(v).0;
+                    by_chip[*chip][t].push(p);
+                }
+            }
+        }
+        self.run_bridged(&by_chip, t_max)
+    }
+
+    /// Inject per-output errors on the head die(s) and run one lockstep
+    /// learning sweep — the multi-die equivalent of
+    /// [`Deployment::learn_step`].
+    pub fn learn_step(&mut self, errors: &[f32]) -> Result<(), Trap> {
+        assert_eq!(errors.len(), self.compiled.error_map.len());
+        let mut by_chip = vec![vec![Vec::new(); 1]; self.chips.len()];
+        for (k, &e) in errors.iter().enumerate() {
+            let (chip, tpl) = self.compiled.error_map[k];
+            let mut p = tpl;
+            p.payload = F16::from_f32(e).0;
+            by_chip[chip][0].push(p);
+        }
+        self.run_lockstep(&by_chip, 1, false)?;
+        Ok(())
+    }
+
+    /// Zero all dynamic state on every die and drop in-flight bridge
+    /// packets — between samples. Weights and parameters survive.
+    pub fn reset_state(&mut self) -> Result<(), Trap> {
+        for chip in &mut self.chips {
+            chip.flush_packets();
+        }
+        self.bridge.clear();
+        let mut zeros: Vec<u16> = Vec::new();
+        for (chip_idx, core) in &self.compiled.cores {
+            let (cc, nc, l) = (core.cc, core.nc, core.layout);
+            let n = (l.params - l.cur) as usize;
+            let n2 = (l.itof - l.adapt) as usize;
+            if zeros.len() < n.max(n2) {
+                zeros.resize(n.max(n2), 0);
+            }
+            let chip = &mut self.chips[*chip_idx];
+            chip.poke(cc, nc, l.cur, &zeros[..n])?;
+            chip.poke(cc, nc, l.adapt, &zeros[..n2])?;
+        }
+        Ok(())
+    }
+
+    /// Aggregate activity across dies: event counters sum; `timesteps`
+    /// is the lockstep step count (every die steps together), not the
+    /// per-die sum, so energy/throughput math sees wall-clock steps.
+    pub fn activity(&self) -> ChipActivity {
+        let mut total = ChipActivity::default();
+        for chip in &self.chips {
+            let a = chip.activity();
+            total.nc.add(&a.nc);
+            total.dt_reads += a.dt_reads;
+            total.it_reads += a.it_reads;
+            total.activations += a.activations;
+            total.packets += a.packets;
+            total.link_traversals += a.link_traversals;
+            total.timesteps = total.timesteps.max(a.timesteps);
+        }
+        total
+    }
+
+    /// Per-die activity (per-die vs aggregate metrics in the docs).
+    pub fn activity_per_chip(&self) -> Vec<ChipActivity> {
+        self.chips.iter().map(|c| c.activity()).collect()
+    }
+
+    fn run_bridged(
+        &mut self,
+        inputs: &[Vec<Vec<Packet>>],
+        t_max: usize,
+    ) -> Result<SampleRun, Trap> {
+        let runs = self.run_lockstep(inputs, t_max, true)?;
+        let mut run = SampleRun {
+            outputs: Vec::with_capacity(t_max),
+            spikes: 0,
+            packets: 0,
+        };
+        for cr in &runs {
+            run.spikes += cr.spikes;
+            run.packets += cr.packets;
+        }
+        for t in 0..t_max {
+            let mut row = vec![0.0f32; self.compiled.n_outputs];
+            for (i, cr) in runs.iter().enumerate() {
+                for h in &cr.outputs[t] {
+                    if let Some(&k) =
+                        self.compiled.chips[i].readout.get(&(h.cc, h.nc, h.neuron))
+                    {
+                        row[k] = F16(h.value).to_f32();
+                    }
+                }
+            }
+            run.outputs.push(row);
+        }
+        Ok(run)
+    }
+
+    /// The lockstep core: one thread per die, one barrier per timestep.
+    /// `inputs[die][t]` are host packets injected into that die at step
+    /// `t`. On a trap, every thread exits at the same barrier round so
+    /// nobody is left waiting; the first trap wins.
+    fn run_lockstep(
+        &mut self,
+        inputs: &[Vec<Vec<Packet>>],
+        t_max: usize,
+        collect: bool,
+    ) -> Result<Vec<ChipRun>, Trap> {
+        let n = self.chips.len();
+        debug_assert_eq!(inputs.len(), n);
+        let start_parity = self.bridge.parity;
+        let barrier = Barrier::new(n);
+        let failed = AtomicBool::new(false);
+        let bridge = &self.bridge;
+        let results: Vec<Result<ChipRun, Trap>> = std::thread::scope(|sc| {
+            let mut handles = Vec::new();
+            for (i, (chip, chip_inputs)) in
+                self.chips.iter_mut().zip(inputs.iter()).enumerate()
+            {
+                let barrier = &barrier;
+                let failed = &failed;
+                handles.push(sc.spawn(move || {
+                    let mut out = ChipRun::default();
+                    let mut res = StepResult::default();
+                    let mut pre: Vec<Packet> = Vec::new();
+                    let mut post: Vec<Packet> = Vec::new();
+                    let mut err: Option<Trap> = None;
+                    for t in 0..t_max {
+                        let parity = (start_parity + t) & 1;
+                        if err.is_none() {
+                            // A panic escaping past `barrier.wait()` would
+                            // leave the other dies waiting forever, so the
+                            // step body is unwind-caught and converted into
+                            // the same trap path a chip fault takes (this
+                            // also absorbs the lock-poisoning panics a
+                            // peer's panic can induce).
+                            let step = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| -> Result<(), Trap> {
+                                    // Inbound bridge packets: lower-numbered
+                                    // dies land before this die's own pending
+                                    // spikes, higher-numbered dies and host
+                                    // inputs after — the single-die
+                                    // ascending-source order.
+                                    pre.clear();
+                                    post.clear();
+                                    for src in 0..n {
+                                        let mut cell =
+                                            bridge.stage[parity][i][src].lock().unwrap();
+                                        if src < i {
+                                            pre.append(&mut cell);
+                                        } else if src > i {
+                                            post.append(&mut cell);
+                                        }
+                                    }
+                                    post.extend_from_slice(&chip_inputs[t]);
+                                    chip.step_ext(&pre, &post, &mut res)?;
+                                    out.spikes += res.spikes;
+                                    out.packets += res.packets_routed;
+                                    if collect {
+                                        out.outputs.push(res.outputs.clone());
+                                    }
+                                    for p in &res.egress {
+                                        if let RouteMode::Remote { chip: dst, x, y } =
+                                            p.mode
+                                        {
+                                            bridge.stage[parity ^ 1][dst as usize][i]
+                                                .lock()
+                                                .unwrap()
+                                                .push(Packet {
+                                                    mode: RouteMode::Unicast { x, y },
+                                                    ..*p
+                                                });
+                                        }
+                                    }
+                                    Ok(())
+                                }),
+                            );
+                            match step {
+                                Ok(Ok(())) => {}
+                                Ok(Err(e)) => {
+                                    err = Some(e);
+                                    failed.store(true, Ordering::SeqCst);
+                                }
+                                Err(_) => {
+                                    err = Some(host_trap("chip worker panicked"));
+                                    failed.store(true, Ordering::SeqCst);
+                                }
+                            }
+                        }
+                        barrier.wait();
+                        if failed.load(Ordering::SeqCst) {
+                            break;
+                        }
+                    }
+                    match err {
+                        Some(e) => Err(e),
+                        None => Ok(out),
+                    }
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(host_trap("chip worker panicked")))
+                })
+                .collect()
+        });
+        self.bridge.parity = (start_parity + t_max) & 1;
+        results.into_iter().collect()
     }
 }
 

@@ -27,10 +27,13 @@
 //! use taibai::api::workloads::Shd;
 //!
 //! let workload = Shd { dendrites: true };
-//! // the same workload runs on either engine: the event-detailed chip …
+//! // the same workload runs on any engine: the event-detailed chip …
 //! let mut chip = workload.session(Backend::Detailed, 42).expect("compile");
 //! let report = evaluate(&workload, &mut chip, 20, 42).expect("run");
 //! println!("{}: {:.1}% @ {:.2} W", report.name, report.accuracy * 100.0, report.power_w);
+//! // … the same engine sharded across lockstep dies (bit-identical; a
+//! // plain Detailed build falls back here past one die's 1056 cores) …
+//! let mut multi = workload.session(Backend::Sharded { chips: 2 }, 42).expect("compile");
 //! // … or the fast analytic model (Table II-scale nets)
 //! let mut fast = workload.session(Backend::Analytic, 42).expect("deploy");
 //! ```

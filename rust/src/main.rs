@@ -6,7 +6,7 @@
 //! * `disasm <file.s>`              — assemble then disassemble (roundtrip view)
 //! * `run-app <ecg|shd|bci>`        — run an application through the unified
 //!                                    `api::Session` pipeline; pick the engine
-//!                                    with `--backend detailed|analytic`
+//!                                    with `--backend detailed|analytic|sharded[:N]`
 //! * `fast <plif|5blocks|resnet19>` — analytic-backend report for the
 //!                                    Table II benchmark nets
 //! * `storage <vgg16|resnet18|…>`   — Fig 14 topology-table storage view
@@ -41,7 +41,7 @@ fn main() {
 fn backend_flag(args: &Args) -> Backend {
     let name = args.get_or("backend", "detailed");
     Backend::parse(name).unwrap_or_else(|| {
-        eprintln!("unknown backend {name:?} (detailed|analytic)");
+        eprintln!("unknown backend {name:?} (detailed|analytic|sharded[:N])");
         std::process::exit(2);
     })
 }

@@ -370,9 +370,65 @@ pub fn bci_net(subpaths: usize) -> NetDef {
     n
 }
 
+/// A wide feed-forward LIF stack for capacity / sharding tests:
+/// `Input(inputs)` → `Fc(inputs→width)` → `depth-1` × `Fc(width→width)`
+/// → `Fc(width→classes)` readout. Under `Objective::Balanced(1)` it
+/// needs `width · depth + classes` neuron cores, so any `width · depth`
+/// above one die's 1056 cores exercises the multi-chip shard path.
+pub fn wide_fc_net(inputs: usize, width: usize, depth: usize, classes: usize) -> NetDef {
+    let mut n = NetDef::new("Wide-FC", 8);
+    n.layers.push(Layer::Input { size: inputs });
+    let mut fan_in = inputs;
+    for _ in 0..depth.max(1) {
+        n.layers.push(Layer::Fc { input: fan_in, output: width, neuron: LIF });
+        fan_in = width;
+    }
+    n.layers.push(Layer::Fc {
+        input: fan_in,
+        output: classes,
+        neuron: NeuronModel::Readout { tau: 0.9 },
+    });
+    n
+}
+
+/// Deterministic structured weights for [`wide_fc_net`]: sparse banded
+/// excitation strong enough to keep spikes flowing through every layer.
+pub fn wide_fc_weights(net: &NetDef, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = crate::util::Rng::new(seed);
+    let mut blobs = vec![Vec::new()];
+    for layer in net.layers.iter().skip(1) {
+        let Layer::Fc { input, output, .. } = *layer else {
+            blobs.push(Vec::new());
+            continue;
+        };
+        let mut w = vec![0.0f32; input * output];
+        for t in 0..output {
+            // each destination listens to a small band of upstreams
+            for k in 0..4usize {
+                let u = (t * 7 + k * 3) % input;
+                w[u * output + t] = 0.5 + rng.f32() * 0.2;
+            }
+        }
+        blobs.push(w);
+    }
+    blobs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn wide_fc_net_shape_and_weights_align() {
+        let n = wide_fc_net(8, 600, 2, 4);
+        assert_eq!(n.total_neurons(), 600 * 2 + 4);
+        let w = wide_fc_weights(&n, 1);
+        assert_eq!(w.len(), n.layers.len());
+        assert_eq!(w[1].len(), 8 * 600);
+        assert_eq!(w[2].len(), 600 * 600);
+        assert_eq!(w[3].len(), 600 * 4);
+        assert!(w[1].iter().any(|&x| x > 0.0));
+    }
 
     #[test]
     fn conv_shape_math() {

@@ -114,6 +114,9 @@ impl Packet {
             RouteMode::Unicast { x, y } => (0u128, x, y, 0, 0),
             RouteMode::Multicast { x0, y0, x1, y1 } => (1, x0, y0, x1, y1),
             RouteMode::Broadcast => (2, 0, 0, 0, 0),
+            // cross-die: destination die id rides in the (otherwise
+            // unused) second rectangle corner — 8 bits, up to 256 dies
+            RouteMode::Remote { chip, x, y } => (3, x, y, chip & 0xf, chip >> 4),
         };
         let phase = match self.phase {
             PacketPhase::Integ => 0u128,
@@ -151,6 +154,7 @@ impl Packet {
             0 => RouteMode::Unicast { x: x0, y: y0 },
             1 => RouteMode::Multicast { x0, y0, x1, y1 },
             2 => RouteMode::Broadcast,
+            3 => RouteMode::Remote { chip: x1 | (y1 << 4), x: x0, y: y0 },
             _ => return None,
         };
         Some(Packet {
@@ -191,6 +195,23 @@ mod tests {
             mode: RouteMode::Multicast { x0: 1, y0: 2, x1: 9, y1: 10 },
         };
         assert_eq!(Packet::decode(p.encode()).unwrap(), p);
+    }
+
+    #[test]
+    fn remote_mode_roundtrips_with_chip_id() {
+        // cross-die packets carry the destination die in the second
+        // rectangle corner; both nibbles must survive the wire format
+        for chip in [0u8, 1, 3, 15, 16, 130, 255] {
+            let p = Packet {
+                ptype: PacketType::Spike,
+                phase: PacketPhase::Fire,
+                tag: 0x2bc,
+                index: 7,
+                payload: 42,
+                mode: RouteMode::Remote { chip, x: 9, y: 10 },
+            };
+            assert_eq!(Packet::decode(p.encode()).unwrap(), p, "chip={chip}");
+        }
     }
 
     #[test]

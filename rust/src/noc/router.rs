@@ -178,6 +178,14 @@ impl Mesh {
                 out.extend(0..NUM_CCS);
                 ((NUM_CCS - 1) as u64, depth * CYCLES_PER_HOP)
             }
+            RouteMode::Remote { .. } => {
+                // Cross-die packets never reach the on-die mesh: the chip
+                // engine diverts them into `StepResult::egress` before
+                // delivery and the host bridge re-injects them on the
+                // destination die (where they arrive as Unicast).
+                debug_assert!(false, "Remote packets are host-bridged, not mesh-routed");
+                (0, 0)
+            }
         };
         self.total_traversals += traversals;
         self.total_latency += latency;

@@ -6,76 +6,200 @@
 //!
 //! Written by `python/compile/aot.py`, read here at deploy time.
 //! Dependency-free (std only) so the default offline build carries it.
+//!
+//! Loading is defensive: magic, declared sizes, and the actual file
+//! length are cross-checked *before* any payload allocation, so a
+//! truncated or corrupt artifact surfaces as a typed [`ArtifactError`]
+//! (never a panic, a partial read, or a header-driven huge allocation).
 
-use std::io::{Error, ErrorKind, Read, Result, Write};
-use std::path::Path;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
 
-fn bad(path: &Path, what: String) -> Error {
-    Error::new(ErrorKind::InvalidData, format!("{}: {what}", path.display()))
+/// Everything that can go wrong loading a deployment artifact.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// Underlying filesystem failure (open/read/write).
+    Io {
+        path: PathBuf,
+        source: std::io::Error,
+    },
+    /// The file does not start with the expected format magic.
+    BadMagic { path: PathBuf, got: [u8; 4] },
+    /// The file's length disagrees with the sizes its header declares
+    /// (truncated download, interrupted write, trailing garbage).
+    Truncated {
+        path: PathBuf,
+        expected_bytes: u64,
+        got_bytes: u64,
+    },
+    /// The header itself is implausible (absurd rank, size overflow).
+    Corrupt { path: PathBuf, what: String },
 }
 
-pub fn write_weights(path: &Path, w: &[f32]) -> Result<()> {
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(b"TBW1")?;
-    f.write_all(&(w.len() as u32).to_le_bytes())?;
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io { path, source } => {
+                write!(f, "{}: {source}", path.display())
+            }
+            ArtifactError::BadMagic { path, got } => {
+                write!(f, "{}: bad artifact magic {got:?}", path.display())
+            }
+            ArtifactError::Truncated {
+                path,
+                expected_bytes,
+                got_bytes,
+            } => write!(
+                f,
+                "{}: header declares {expected_bytes} bytes but the file has \
+                 {got_bytes} (truncated or corrupt artifact)",
+                path.display()
+            ),
+            ArtifactError::Corrupt { path, what } => {
+                write!(f, "{}: corrupt artifact header: {what}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+fn io_err(path: &Path, source: std::io::Error) -> ArtifactError {
+    ArtifactError::Io {
+        path: path.to_path_buf(),
+        source,
+    }
+}
+
+pub fn write_weights(path: &Path, w: &[f32]) -> Result<(), ArtifactError> {
+    let e = |err| io_err(path, err);
+    let mut f = std::fs::File::create(path).map_err(e)?;
+    f.write_all(b"TBW1").map_err(e)?;
+    f.write_all(&(w.len() as u32).to_le_bytes()).map_err(e)?;
     for x in w {
-        f.write_all(&x.to_le_bytes())?;
+        f.write_all(&x.to_le_bytes()).map_err(e)?;
     }
     Ok(())
 }
 
-pub fn read_weights(path: &Path) -> Result<Vec<f32>> {
-    let mut f = std::fs::File::open(path)
-        .map_err(|e| Error::new(e.kind(), format!("opening weights {}: {e}", path.display())))?;
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != b"TBW1" {
-        return Err(bad(path, format!("bad weights magic {magic:?}")));
-    }
-    let mut n4 = [0u8; 4];
-    f.read_exact(&mut n4)?;
-    let n = u32::from_le_bytes(n4) as usize;
-    read_f32s(&mut f, n)
+pub fn read_weights(path: &Path) -> Result<Vec<f32>, ArtifactError> {
+    let mut f = open_checked(path, b"TBW1")?;
+    let n = read_u32(path, &mut f)? as u64;
+    let expected = 4 + 4 + n * 4;
+    check_len(path, &f, expected)?;
+    read_f32s(path, &mut f, n as usize)
 }
 
-pub fn write_tensor(path: &Path, dims: &[usize], data: &[f32]) -> Result<()> {
+pub fn write_tensor(path: &Path, dims: &[usize], data: &[f32]) -> Result<(), ArtifactError> {
     assert_eq!(dims.iter().product::<usize>(), data.len());
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(b"TBD1")?;
-    f.write_all(&(dims.len() as u32).to_le_bytes())?;
+    let e = |err| io_err(path, err);
+    let mut f = std::fs::File::create(path).map_err(e)?;
+    f.write_all(b"TBD1").map_err(e)?;
+    f.write_all(&(dims.len() as u32).to_le_bytes()).map_err(e)?;
     for d in dims {
-        f.write_all(&(*d as u32).to_le_bytes())?;
+        f.write_all(&(*d as u32).to_le_bytes()).map_err(e)?;
     }
     for x in data {
-        f.write_all(&x.to_le_bytes())?;
+        f.write_all(&x.to_le_bytes()).map_err(e)?;
     }
     Ok(())
 }
 
-pub fn read_tensor(path: &Path) -> Result<(Vec<usize>, Vec<f32>)> {
-    let mut f = std::fs::File::open(path)
-        .map_err(|e| Error::new(e.kind(), format!("opening tensor {}: {e}", path.display())))?;
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != b"TBD1" {
-        return Err(bad(path, format!("bad tensor magic {magic:?}")));
+/// Largest plausible tensor rank — anything above this is a corrupt
+/// header, not a real artifact.
+const MAX_RANK: u32 = 16;
+
+pub fn read_tensor(path: &Path) -> Result<(Vec<usize>, Vec<f32>), ArtifactError> {
+    let mut f = open_checked(path, b"TBD1")?;
+    let rank = read_u32(path, &mut f)?;
+    if rank > MAX_RANK {
+        return Err(ArtifactError::Corrupt {
+            path: path.to_path_buf(),
+            what: format!("rank {rank} exceeds the plausible maximum {MAX_RANK}"),
+        });
     }
-    let mut b4 = [0u8; 4];
-    f.read_exact(&mut b4)?;
-    let rank = u32::from_le_bytes(b4) as usize;
-    let mut dims = Vec::with_capacity(rank);
+    let mut dims = Vec::with_capacity(rank as usize);
+    let mut n: u64 = 1;
     for _ in 0..rank {
-        f.read_exact(&mut b4)?;
-        dims.push(u32::from_le_bytes(b4) as usize);
+        let d = read_u32(path, &mut f)? as u64;
+        n = n.checked_mul(d).ok_or_else(|| ArtifactError::Corrupt {
+            path: path.to_path_buf(),
+            what: "dimension product overflows".to_string(),
+        })?;
+        dims.push(d as usize);
     }
-    let n = dims.iter().product();
-    let data = read_f32s(&mut f, n)?;
+    let expected = 4 + 4 + rank as u64 * 4 + n * 4;
+    check_len(path, &f, expected)?;
+    let data = read_f32s(path, &mut f, n as usize)?;
     Ok((dims, data))
 }
 
-fn read_f32s(f: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+/// Open + magic check. A file too short for the magic reports as
+/// truncated, not as an I/O error.
+fn open_checked(path: &Path, magic: &[u8; 4]) -> Result<std::fs::File, ArtifactError> {
+    let mut f = std::fs::File::open(path).map_err(|e| io_err(path, e))?;
+    let mut got = [0u8; 4];
+    read_exact_checked(path, &mut f, &mut got, 4)?;
+    if &got != magic {
+        return Err(ArtifactError::BadMagic {
+            path: path.to_path_buf(),
+            got,
+        });
+    }
+    Ok(f)
+}
+
+fn read_u32(path: &Path, f: &mut std::fs::File) -> Result<u32, ArtifactError> {
+    let mut b = [0u8; 4];
+    read_exact_checked(path, f, &mut b, 4)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// `read_exact` with EOF reported as [`ArtifactError::Truncated`].
+fn read_exact_checked(
+    path: &Path,
+    f: &mut std::fs::File,
+    buf: &mut [u8],
+    at_least: u64,
+) -> Result<(), ArtifactError> {
+    f.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            let got = f.metadata().map(|m| m.len()).unwrap_or(0);
+            ArtifactError::Truncated {
+                path: path.to_path_buf(),
+                expected_bytes: at_least.max(got + 1),
+                got_bytes: got,
+            }
+        } else {
+            io_err(path, e)
+        }
+    })
+}
+
+/// Cross-check the header-declared size against the real file length
+/// *before* allocating the payload buffer.
+fn check_len(path: &Path, f: &std::fs::File, expected: u64) -> Result<(), ArtifactError> {
+    let got = f.metadata().map_err(|e| io_err(path, e))?.len();
+    if got != expected {
+        return Err(ArtifactError::Truncated {
+            path: path.to_path_buf(),
+            expected_bytes: expected,
+            got_bytes: got,
+        });
+    }
+    Ok(())
+}
+
+fn read_f32s(path: &Path, f: &mut std::fs::File, n: usize) -> Result<Vec<f32>, ArtifactError> {
     let mut buf = vec![0u8; n * 4];
-    f.read_exact(&mut buf)?;
+    read_exact_checked(path, f, &mut buf, 0)?;
     Ok(buf
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -93,9 +217,13 @@ pub fn artifacts_dir() -> std::path::PathBuf {
 mod tests {
     use super::*;
 
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(name)
+    }
+
     #[test]
     fn weights_roundtrip() {
-        let dir = std::env::temp_dir().join("taibai_test_w.bin");
+        let dir = tmp("taibai_test_w.bin");
         let w = vec![1.0f32, -2.5, 0.0, 3.75];
         write_weights(&dir, &w).unwrap();
         assert_eq!(read_weights(&dir).unwrap(), w);
@@ -103,7 +231,7 @@ mod tests {
 
     #[test]
     fn tensor_roundtrip() {
-        let dir = std::env::temp_dir().join("taibai_test_t.bin");
+        let dir = tmp("taibai_test_t.bin");
         let data: Vec<f32> = (0..24).map(|i| i as f32).collect();
         write_tensor(&dir, &[2, 3, 4], &data).unwrap();
         let (dims, d) = read_tensor(&dir).unwrap();
@@ -113,11 +241,77 @@ mod tests {
 
     #[test]
     fn bad_magic_rejected() {
-        let dir = std::env::temp_dir().join("taibai_test_bad.bin");
+        let dir = tmp("taibai_test_bad.bin");
         std::fs::write(&dir, b"XXXX\x01\x00\x00\x00").unwrap();
         let err = read_weights(&dir).unwrap_err();
-        assert_eq!(err.kind(), ErrorKind::InvalidData);
+        assert!(matches!(err, ArtifactError::BadMagic { .. }), "{err}");
         assert!(err.to_string().contains("taibai_test_bad"));
         assert!(read_tensor(&dir).is_err());
+    }
+
+    #[test]
+    fn truncated_weights_report_typed_error() {
+        // write a valid 4-value blob, then chop bytes off the tail:
+        // every truncation point must yield Truncated, never a partial
+        // read or a panic
+        let dir = tmp("taibai_test_trunc.bin");
+        write_weights(&dir, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let full = std::fs::read(&dir).unwrap();
+        assert_eq!(full.len(), 8 + 16);
+        for cut in [full.len() - 1, full.len() - 7, 9, 8, 6, 3, 0] {
+            std::fs::write(&dir, &full[..cut]).unwrap();
+            let err = read_weights(&dir).unwrap_err();
+            assert!(
+                matches!(err, ArtifactError::Truncated { .. }),
+                "cut={cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn lying_header_is_rejected_before_allocation() {
+        // header claims u32::MAX floats in a 12-byte file: must fail on
+        // the length cross-check, not attempt a ~16 GB allocation
+        let dir = tmp("taibai_test_lying.bin");
+        let mut bytes = b"TBW1".to_vec();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 4]);
+        std::fs::write(&dir, &bytes).unwrap();
+        match read_weights(&dir).unwrap_err() {
+            ArtifactError::Truncated {
+                expected_bytes,
+                got_bytes,
+                ..
+            } => {
+                assert_eq!(got_bytes, 12);
+                assert!(expected_bytes > 1 << 33);
+            }
+            other => panic!("expected Truncated, got {other}"),
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let dir = tmp("taibai_test_trail.bin");
+        write_weights(&dir, &[5.0]).unwrap();
+        let mut bytes = std::fs::read(&dir).unwrap();
+        bytes.extend_from_slice(&[0xab; 3]);
+        std::fs::write(&dir, &bytes).unwrap();
+        assert!(matches!(
+            read_weights(&dir).unwrap_err(),
+            ArtifactError::Truncated { .. }
+        ));
+    }
+
+    #[test]
+    fn absurd_tensor_rank_is_corrupt() {
+        let dir = tmp("taibai_test_rank.bin");
+        let mut bytes = b"TBD1".to_vec();
+        bytes.extend_from_slice(&1_000_000u32.to_le_bytes());
+        std::fs::write(&dir, &bytes).unwrap();
+        assert!(matches!(
+            read_tensor(&dir).unwrap_err(),
+            ArtifactError::Corrupt { .. }
+        ));
     }
 }

@@ -95,6 +95,13 @@ pub enum RouteMode {
     Multicast { x0: u8, y0: u8, x1: u8, y1: u8 },
     /// Tree broadcast to every CC.
     Broadcast,
+    /// Cross-die delivery (§IV-B "chip-scale expansion"): XY to the edge
+    /// proxy, SerDes to die `chip`, then XY to CC `(x, y)` on that die.
+    /// The on-die mesh never routes these — the chip engine diverts them
+    /// into [`crate::chip::StepResult::egress`] at the step boundary and
+    /// the host bridge re-injects them into the destination die, with
+    /// the same one-timestep latency as on-die spike delivery.
+    Remote { chip: u8, x: u8, y: u8 },
 }
 
 /// Fan-out Directory Entry (addressed by fired local neuron id).

@@ -1,0 +1,247 @@
+//! Multi-chip sharded execution parity.
+//!
+//! The contract of `compiler::shard` + `coordinator::MultiChipDeployment`
+//! is that sharding is *invisible* to the model: a network cut across N
+//! lockstep dies produces bit-identical readout rows to the single-die
+//! engine, because cross-die spikes travel with exactly the one-timestep
+//! latency (and the same ascending-source delivery order) the on-die NoC
+//! provides.
+//!
+//! Both engines are built with `sa_iters(0)` so the deterministic zigzag
+//! placement isolates the sharding transform itself. Invariants come in
+//! three tiers:
+//!
+//! * **always** — readout rows bit-exact; per-neuron-core activity
+//!   (SOPs, NC activations, lockstep timesteps) equal. These are
+//!   placement-invariant: sharding may regroup cores into different CCs,
+//!   but every neuron sees the same events in the same order. (Raw SEND
+//!   counts are *not* here: a readout core sharing a CC with earlier
+//!   layers emits its zero-valued rows from step 0, so co-residency
+//!   changes shift `spikes_out` without changing any emitted value.)
+//! * **routing** (cut preserves each layer's CC grouping) — minted spike
+//!   packets, routed packets, and table reads also equal.
+//! * **full** (cut falls exactly on a CC boundary, so NC co-residency is
+//!   unchanged) — the entire `NcStats` block matches: instruction counts,
+//!   wakeups, and SEND counts included.
+
+use taibai::api::workloads::{Bci, Ecg, Shd, Workload};
+use taibai::api::{Backend, Sample, Session, Taibai};
+use taibai::compiler::Objective;
+use taibai::model;
+
+fn build(w: &dyn Workload, backend: Backend, objective: Objective, seed: u64) -> Session {
+    Taibai::new(w.net())
+        .weights(w.weights(seed))
+        .rates(w.rates())
+        .learning(w.learning())
+        .objective(objective)
+        .sa_iters(0)
+        .backend(backend)
+        .build()
+        .expect("compile")
+}
+
+/// Run `samples` dataset samples through both engines and pin the
+/// agreed invariant tiers.
+fn assert_parity(
+    w: &dyn Workload,
+    chips: usize,
+    objective: Objective,
+    samples: usize,
+    routing: bool,
+    full: bool,
+) {
+    let seed = 11;
+    let mut single = build(w, Backend::Detailed, objective, seed);
+    let mut sharded = build(w, Backend::Sharded { chips }, objective, seed);
+    assert_eq!(single.info().chips, 1);
+    assert_eq!(sharded.info().chips, chips, "forced die count not honored");
+    assert_eq!(
+        single.info().used_cores,
+        sharded.info().used_cores,
+        "sharding must not change the core count"
+    );
+
+    let data = w.dataset(samples, seed);
+    for (si, s) in data.iter().take(samples).enumerate() {
+        let a = single.run(s).expect("single-die run");
+        let b = sharded.run(s).expect("sharded run");
+        assert_eq!(
+            a.outputs, b.outputs,
+            "{} x{chips}: sample {si} readout rows diverged",
+            w.name()
+        );
+        if routing {
+            assert_eq!(
+                a.spikes, b.spikes,
+                "{} x{chips}: sample {si} minted spike count diverged",
+                w.name()
+            );
+            assert_eq!(
+                a.packets, b.packets,
+                "{} x{chips}: sample {si} routed packet count diverged",
+                w.name()
+            );
+        }
+    }
+
+    let aa = single.activity();
+    let bb = sharded.activity();
+    let tag = format!("{} x{chips}", w.name());
+    assert_eq!(aa.nc.sops, bb.nc.sops, "{tag}: SOPs");
+    assert_eq!(aa.activations, bb.activations, "{tag}: NC activations");
+    assert_eq!(aa.timesteps, bb.timesteps, "{tag}: lockstep timesteps");
+    assert!(bb.link_traversals > 0, "{tag}: dies never talked");
+    if routing {
+        assert_eq!(aa.packets, bb.packets, "{tag}: routed packets");
+        assert_eq!(aa.dt_reads, bb.dt_reads, "{tag}: DT reads");
+        assert_eq!(aa.it_reads, bb.it_reads, "{tag}: IT reads");
+    }
+    if full {
+        assert_eq!(aa.nc, bb.nc, "{tag}: full NC stats block");
+    }
+}
+
+#[test]
+fn ecg_two_way_parity() {
+    // 2 cores on one CC → core-granularity cut: co-residency changes
+    // (full=false) but each layer still occupies one CC (routing=true)
+    assert_parity(
+        &Ecg { heterogeneous: true },
+        2,
+        Objective::MinCores,
+        1,
+        true,
+        false,
+    );
+}
+
+#[test]
+fn shd_two_way_parity() {
+    // 9 cores = CC0 (8 hidden) + CC1 (readout): the cut falls exactly on
+    // the CC boundary, so every counter must match (full=true)
+    assert_parity(&Shd { dendrites: true }, 2, Objective::MinCores, 3, true, true);
+}
+
+#[test]
+fn bci_two_way_parity() {
+    // merged sparse sub-paths on die 0, learning head on die 1
+    assert_parity(&Bci { subpaths: 8, day: 2 }, 2, Objective::MinCores, 2, true, false);
+}
+
+#[test]
+fn ecg_four_way_parity() {
+    // spread the recurrent layer over several dies: recurrence now
+    // crosses the bridge both forward and backward every step
+    assert_parity(
+        &Ecg { heterogeneous: true },
+        4,
+        Objective::Balanced(16),
+        1,
+        false,
+        false,
+    );
+}
+
+#[test]
+fn shd_four_way_parity() {
+    assert_parity(&Shd { dendrites: true }, 4, Objective::MinCores, 2, false, false);
+}
+
+#[test]
+fn bci_four_way_parity() {
+    // Balanced(32) splits each 64-neuron sparse stage in two, yielding
+    // enough cores (5) to spread over four dies
+    assert_parity(
+        &Bci { subpaths: 8, day: 2 },
+        4,
+        Objective::Balanced(32),
+        2,
+        false,
+        false,
+    );
+}
+
+#[test]
+fn sharded_learning_matches_single_die() {
+    // the BCI on-chip fine-tune protocol, lockstep across 2 dies: error
+    // injection, the learning FIRE sweep, and the resulting weight
+    // updates must leave both engines with identical readouts
+    let w = Bci { subpaths: 8, day: 4 };
+    let mut single = build(&w, Backend::Detailed, Objective::MinCores, 7);
+    let mut sharded = build(&w, Backend::Sharded { chips: 2 }, Objective::MinCores, 7);
+    let data = w.dataset(4, 7);
+    let err = [0.5f32, -0.25, 0.125, -0.5];
+    for (si, s) in data.iter().take(2).enumerate() {
+        let ra = single.run(s).expect("single");
+        let rb = sharded.run(s).expect("sharded");
+        assert_eq!(ra.outputs, rb.outputs, "pre-learning sample {si}");
+        single.learn_step(&err).expect("single learn");
+        sharded.learn_step(&err).expect("sharded learn");
+    }
+    let probe = &w.dataset(4, 9)[0];
+    assert_eq!(
+        single.run(probe).expect("single probe").outputs,
+        sharded.run(probe).expect("sharded probe").outputs,
+        "post-learning readouts diverged: weight updates not bit-identical"
+    );
+}
+
+#[test]
+fn over_capacity_net_runs_end_to_end_sharded() {
+    // > 1056 neuron cores: the single-die compiler refuses this net with
+    // TooManyCores; `Backend::Detailed` now falls back to the sharded
+    // pipeline instead of dead-ending
+    let net = model::wide_fc_net(8, 600, 2, 4);
+    let weights = model::wide_fc_weights(&net, 3);
+    let mut session = Taibai::new(net)
+        .weights(weights)
+        .objective(Objective::Balanced(1))
+        .merge(false)
+        .sa_iters(0)
+        .build()
+        .expect("over-capacity net must compile via the sharded fallback");
+    assert!(
+        matches!(session.backend(), Backend::Sharded { .. }),
+        "expected the sharded fallback, got {}",
+        session.backend()
+    );
+    assert!(session.info().chips >= 2, "{} dies", session.info().chips);
+    assert!(
+        session.info().used_cores > 1056,
+        "net should exceed one die: {} cores",
+        session.info().used_cores
+    );
+
+    let run = session.run(&Sample::poisson(8, 8, 0.5, 5)).expect("run");
+    assert_eq!(run.outputs.len(), 8);
+    assert!(run.spikes > 0, "nothing spiked across the dies");
+    assert!(
+        run.outputs.iter().any(|row| row.iter().any(|&v| v != 0.0)),
+        "readout never received a value across the bridge"
+    );
+    let m = session.metrics();
+    assert!(m.sops > 0 && m.power_w > 0.0);
+    assert_eq!(m.chips, session.info().chips);
+}
+
+#[test]
+fn sharded_run_batch_matches_sequential() {
+    // run_batch forks a multi-die deployment per worker (Arc-shared
+    // image) and must return the same results in order
+    let w = Shd { dendrites: true };
+    let data = w.dataset(4, 21);
+    let mut seq = build(&w, Backend::Sharded { chips: 2 }, Objective::MinCores, 21);
+    let mut expected = Vec::new();
+    for s in data.iter().take(4) {
+        expected.push(seq.run(s).expect("sequential"));
+    }
+    let mut par = build(&w, Backend::Sharded { chips: 2 }, Objective::MinCores, 21);
+    let got = par.run_batch(&data[..4.min(data.len())]).expect("batch");
+    assert_eq!(got.len(), expected.len());
+    for (g, e) in got.iter().zip(&expected) {
+        assert_eq!(g.outputs, e.outputs);
+        assert_eq!(g.spikes, e.spikes);
+    }
+    assert_eq!(par.activity().nc.sops, seq.activity().nc.sops);
+}
