@@ -1,36 +1,119 @@
-//! Multi-chip scaling bench: per-step wall-clock vs shard count.
+//! Multi-chip scaling bench: per-step wall-clock, CC visits, and bridge
+//! traffic vs shard count — plus the Contiguous-vs-MinCut cut-strategy
+//! comparison the CI regression guard pins.
 //!
-//! Two claims under measurement:
+//! Claims under measurement:
 //! * forcing a single-die workload (SHD) onto 2 or 4 lockstep dies
 //!   changes wall-clock (thread + bridge overhead vs per-die work
 //!   shrinking) but **never** the readout — outputs are asserted
 //!   bit-identical across die counts;
 //! * a network that cannot compile on one die at all (> 1056 neuron
-//!   cores) runs end-to-end at its natural die count.
+//!   cores) runs end-to-end at its natural die count;
+//! * the `MinCut` cut-point optimizer ships strictly fewer remote
+//!   packets per step across the host bridge than the PR 3
+//!   `Contiguous` split on the same inputs (`--guard-mincut` turns the
+//!   comparison into a hard failure; CI passes it on every run).
+//!
+//! `--json <path>` writes the whole run as machine-readable perf JSON
+//! (`BENCH_multichip.json` in CI, uploaded as an artifact so the perf
+//! trajectory is tracked across PRs).
 //!
 //! ```sh
-//! cargo bench --bench bench_multichip_scaling              # full run
-//! cargo bench --bench bench_multichip_scaling -- --samples 1   # CI smoke
+//! cargo bench --bench bench_multichip_scaling               # full run
+//! cargo bench --bench bench_multichip_scaling -- \
+//!     --samples 1 --json BENCH_multichip.json --guard-mincut   # CI smoke
 //! ```
 
 use std::time::Instant;
 
 use taibai::api::workloads::{Shd, Workload};
-use taibai::api::{Backend, Sample, Taibai};
+use taibai::api::{Backend, Sample, Session, ShardStrategy, Taibai};
 use taibai::bench::Table;
 use taibai::compiler::Objective;
 use taibai::model;
 use taibai::util::cli::Args;
+use taibai::util::json::Json;
+
+/// One measured configuration, for both the table and the JSON report.
+struct Row {
+    deployment: String,
+    strategy: String,
+    dies: usize,
+    cores: usize,
+    ms_per_sample: f64,
+    us_per_step: f64,
+    cc_visits_per_step: f64,
+    remote_packets_per_step: f64,
+    spikes_per_sample: f64,
+}
+
+fn measure(
+    label: &str,
+    session: &mut Session,
+    data: &[Sample],
+) -> (Row, Vec<Vec<Vec<f32>>>) {
+    let total_steps: usize = data.iter().map(|s| s.timesteps()).sum();
+    let mut spikes = 0u64;
+    let mut outs = Vec::new();
+    let start = Instant::now();
+    for s in data {
+        let r = session.run(s).expect("running sample");
+        spikes += r.spikes;
+        outs.push(r.outputs);
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let sched = session.sched_stats();
+    let visits = sched.integ_cc_visits + sched.fire_cc_visits + sched.delay_cc_visits;
+    let a = session.activity();
+    let row = Row {
+        deployment: label.to_string(),
+        strategy: String::new(),
+        dies: session.info().chips,
+        cores: session.info().used_cores,
+        ms_per_sample: secs / data.len() as f64 * 1e3,
+        us_per_step: secs / total_steps.max(1) as f64 * 1e6,
+        cc_visits_per_step: visits as f64 / sched.steps.max(1) as f64,
+        remote_packets_per_step: a.remote_packets as f64 / a.timesteps.max(1) as f64,
+        spikes_per_sample: spikes as f64 / data.len() as f64,
+    };
+    (row, outs)
+}
+
+fn row_json(r: &Row) -> Json {
+    Json::obj()
+        .set("deployment", r.deployment.as_str())
+        .set("strategy", r.strategy.as_str())
+        .set("dies", r.dies)
+        .set("cores", r.cores)
+        .set("ms_per_sample", r.ms_per_sample)
+        .set("us_per_step", r.us_per_step)
+        .set("cc_visits_per_step", r.cc_visits_per_step)
+        .set("remote_packets_per_step", r.remote_packets_per_step)
+        .set("spikes_per_sample", r.spikes_per_sample)
+}
+
+fn print_row(t: &mut Table, r: &Row) {
+    t.row(&[
+        r.deployment.clone(),
+        format!("{}", r.dies),
+        format!("{}", r.cores),
+        format!("{:.3}", r.ms_per_sample),
+        format!("{:.1}", r.us_per_step),
+        format!("{:.1}", r.cc_visits_per_step),
+        format!("{:.1}", r.remote_packets_per_step),
+        format!("{:.1}", r.spikes_per_sample),
+    ]);
+}
 
 fn main() {
     let args = Args::from_env();
     let samples = args.usize("samples", 5);
     let seed = args.u64("seed", 42);
+    let guard = args.has("guard-mincut");
 
     let w = Shd { dendrites: true };
     let all = w.dataset(samples.max(1), seed);
     let data = &all[..samples.min(all.len())];
-    let total_steps: usize = data.iter().map(|s| s.timesteps()).sum();
 
     let mut t = Table::new(&[
         "deployment",
@@ -38,28 +121,23 @@ fn main() {
         "cores",
         "ms/sample",
         "us/step",
+        "CC visits/step",
+        "remote pkts/step",
         "spikes/sample",
     ]);
+    let mut scaling_json = Vec::new();
 
     // ---- SHD forced onto 1 / 2 / 4 dies ------------------------------
     let mut reference: Option<Vec<Vec<Vec<f32>>>> = None;
     for &chips in &[1usize, 2, 4] {
-        let mut session = Taibai::new(w.net())
-            .weights(w.weights(seed))
-            .rates(w.rates())
+        let mut session = w
+            .taibai(seed)
             .sa_iters(0)
             .backend(Backend::Sharded { chips })
             .build()
             .expect("compiling SHD sharded");
-        let mut spikes = 0u64;
-        let mut outs = Vec::new();
-        let start = Instant::now();
-        for s in data {
-            let r = session.run(s).expect("running SHD sample");
-            spikes += r.spikes;
-            outs.push(r.outputs);
-        }
-        let secs = start.elapsed().as_secs_f64();
+        let (mut row, outs) = measure("SHD", &mut session, data);
+        row.strategy = ShardStrategy::default().to_string();
         match &reference {
             None => reference = Some(outs),
             Some(r) => assert_eq!(
@@ -67,45 +145,163 @@ fn main() {
                 "{chips}-die readout diverged from the 1-die reference"
             ),
         }
-        t.row(&[
-            "SHD".to_string(),
-            format!("{}", session.info().chips),
-            format!("{}", session.info().used_cores),
-            format!("{:.3}", secs / data.len() as f64 * 1e3),
-            format!("{:.1}", secs / total_steps.max(1) as f64 * 1e6),
-            format!("{:.1}", spikes as f64 / data.len() as f64),
-        ]);
+        scaling_json.push(row_json(&row));
+        print_row(&mut t, &row);
     }
 
     // ---- over-capacity net at its natural die count ------------------
-    let net = model::wide_fc_net(8, 600, 2, 4);
-    let weights = model::wide_fc_weights(&net, seed);
-    let mut session = Taibai::new(net)
-        .weights(weights)
+    let steps = 8usize;
+    let probe = vec![Sample::poisson(8, steps, 0.5, seed)];
+    let wide_net = model::wide_fc_net(8, 600, 2, 4);
+    let wide_weights = model::wide_fc_weights(&wide_net, seed);
+    let mut session = Taibai::new(wide_net)
+        .weights(wide_weights)
         .objective(Objective::Balanced(1))
         .merge(false)
         .sa_iters(0)
         .backend(Backend::Sharded { chips: 0 })
         .build()
         .expect("compiling the over-capacity net");
-    let steps = 8usize;
-    let probe = Sample::poisson(8, steps, 0.5, seed);
-    let start = Instant::now();
-    let r = session.run(&probe).expect("running the wide net");
-    let secs = start.elapsed().as_secs_f64();
-    assert!(r.spikes > 0, "wide net never spiked");
-    t.row(&[
-        "Wide-FC 1204c".to_string(),
-        format!("{}", session.info().chips),
-        format!("{}", session.info().used_cores),
-        format!("{:.3}", secs * 1e3),
-        format!("{:.1}", secs / steps as f64 * 1e6),
-        format!("{:.1}", r.spikes as f64),
-    ]);
-
+    let (mut row, _) = measure("Wide-FC 1204c", &mut session, &probe);
+    row.strategy = ShardStrategy::default().to_string();
+    assert!(row.spikes_per_sample > 0.0, "wide net never spiked");
+    scaling_json.push(row_json(&row));
+    print_row(&mut t, &row);
     t.print();
+
+    // ---- cut strategy: Contiguous (PR 3 baseline) vs MinCut ----------
+    // Same inputs through both cuts; remote packets/step is the SerDes
+    // traffic the topology-aware cut exists to reduce. The all-on
+    // wide-FC probe saturates every neuron, so its numbers are exactly
+    // reproducible; SHD uses the dataset samples above.
+    let wide_probe = vec![Sample::poisson(8, steps, 1.0, seed)];
+    type SessionBuilder = Box<dyn Fn(ShardStrategy, usize) -> Session>;
+    let configs: Vec<(&str, SessionBuilder, usize, &[Sample])> = vec![
+        (
+            "SHD",
+            Box::new(move |s: ShardStrategy, sa: usize| {
+                Shd { dendrites: true }
+                    .taibai(seed)
+                    .sa_iters(sa)
+                    .shard_strategy(s)
+                    .backend(Backend::Sharded { chips: 4 })
+                    .build()
+                    .expect("compiling SHD x4")
+            }),
+            4,
+            data,
+        ),
+        (
+            "Wide-FC 1204c",
+            Box::new(move |s: ShardStrategy, sa: usize| {
+                let net = model::wide_fc_net(8, 600, 2, 4);
+                let weights = model::wide_fc_weights(&net, seed);
+                Taibai::new(net)
+                    .weights(weights)
+                    .objective(Objective::Balanced(1))
+                    .merge(false)
+                    .sa_iters(sa)
+                    .shard_strategy(s)
+                    .backend(Backend::Sharded { chips: 4 })
+                    .build()
+                    .expect("compiling wide-FC x4")
+            }),
+            4,
+            &wide_probe,
+        ),
+    ];
+
+    let mut t2 = Table::new(&[
+        "cut guard",
+        "dies",
+        "strategy",
+        "remote pkts/step",
+        "cut est/step",
+        "ms/sample",
+    ]);
+    let mut guard_json = Vec::new();
+    let mut guard_failures: Vec<String> = Vec::new();
+    for (name, build, dies, cfg_data) in &configs {
+        let mut per_strategy = Vec::new();
+        for strategy in [ShardStrategy::Contiguous, ShardStrategy::MinCut] {
+            let mut session = build(strategy, 0);
+            assert_eq!(session.info().chips, *dies);
+            let (mut row, _) = measure(name, &mut session, cfg_data);
+            row.strategy = strategy.to_string();
+            t2.row(&[
+                name.to_string(),
+                format!("{dies}"),
+                strategy.to_string(),
+                format!("{:.1}", row.remote_packets_per_step),
+                format!("{:.2}", session.info().cut_traffic),
+                format!("{:.3}", row.ms_per_sample),
+            ]);
+            per_strategy.push((strategy, row, session.info().cut_traffic));
+        }
+        // MinCut + SerDes-aware SA row (reported, not guarded: the SA
+        // refines on-die placement on top of the cut)
+        {
+            let mut session = build(ShardStrategy::MinCut, 1000);
+            let (mut row, _) = measure(name, &mut session, cfg_data);
+            row.strategy = "mincut+sa".to_string();
+            t2.row(&[
+                name.to_string(),
+                format!("{dies}"),
+                row.strategy.clone(),
+                format!("{:.1}", row.remote_packets_per_step),
+                format!("{:.2}", session.info().cut_traffic),
+                format!("{:.3}", row.ms_per_sample),
+            ]);
+            per_strategy.push((ShardStrategy::MinCut, row, session.info().cut_traffic));
+        }
+        let contig = &per_strategy[0].1;
+        let mincut = &per_strategy[1].1;
+        let reduction = contig.remote_packets_per_step - mincut.remote_packets_per_step;
+        guard_json.push(
+            Json::obj()
+                .set("workload", *name)
+                .set("dies", *dies)
+                .set("contiguous", row_json(contig))
+                .set("mincut", row_json(mincut))
+                .set("mincut_sa", row_json(&per_strategy[2].1))
+                .set("remote_reduction_per_step", reduction),
+        );
+        if guard && mincut.remote_packets_per_step >= contig.remote_packets_per_step {
+            guard_failures.push(format!(
+                "{name} x{dies}: MinCut must ship strictly fewer remote packets/step \
+                 than Contiguous ({} vs {})",
+                mincut.remote_packets_per_step, contig.remote_packets_per_step,
+            ));
+        }
+    }
+    t2.print();
+
+    if let Some(path) = args.get("json") {
+        let doc = Json::obj()
+            .set("bench", "multichip_scaling")
+            .set("samples", data.len())
+            .set("seed", seed)
+            .set("scaling", Json::Arr(scaling_json))
+            .set("cut_strategies", Json::Arr(guard_json));
+        std::fs::write(path, doc.render() + "\n").expect("writing perf JSON");
+        println!("\nperf JSON written to {path}");
+    }
+
+    // guard failures abort only *after* the perf JSON is on disk, so a
+    // MinCut regression still leaves the artifact to quantify it
+    assert!(
+        guard_failures.is_empty(),
+        "MinCut regression guard failed:\n{}",
+        guard_failures.join("\n")
+    );
+
     println!(
         "\nReadout rows are asserted bit-identical across die counts; the \
-         wide net only exists beyond one die's 1056 cores."
+         wide net only exists beyond one die's 1056 cores.{}",
+        if guard {
+            " MinCut < Contiguous remote-packet guard: PASSED."
+        } else {
+            ""
+        }
     );
 }

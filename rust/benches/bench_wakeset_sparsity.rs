@@ -8,10 +8,14 @@
 //! traffic — a quiescent step visits **zero** columns — not with
 //! deployment size, which is what a scan-every-column engine pays.
 //!
+//! `--json <path>` writes the per-sparsity-level measurements as
+//! machine-readable perf JSON (`BENCH_wakeset.json` in CI, uploaded as
+//! an artifact so the perf trajectory is tracked across PRs).
+//!
 //! ```sh
 //! cargo bench --bench bench_wakeset_sparsity              # full run
 //! cargo bench --bench bench_wakeset_sparsity -- \
-//!     --samples 1 --timesteps 10                          # CI smoke
+//!     --samples 1 --timesteps 10 --json BENCH_wakeset.json    # CI smoke
 //! ```
 
 use std::time::Instant;
@@ -23,6 +27,7 @@ use taibai::coordinator::Deployment;
 use taibai::datasets::SpikeSample;
 use taibai::model;
 use taibai::util::cli::Args;
+use taibai::util::json::Json;
 use taibai::util::Rng;
 
 const CHANNELS: usize = 700;
@@ -72,6 +77,7 @@ fn main() {
         "ms/sample",
         "spikes/sample",
     ]);
+    let mut levels = Vec::new();
     for &rate in &[0.0, 0.01, 0.10, 0.50] {
         let mut d = Deployment::new(compiled.clone()).expect("deploying");
         let mut rng = Rng::new(seed ^ (rate * 1000.0) as u64);
@@ -96,6 +102,14 @@ fn main() {
             format!("{:.3}", secs / samples as f64 * 1e3),
             format!("{:.1}", spikes_total as f64 / samples as f64),
         ]);
+        levels.push(
+            Json::obj()
+                .set("input_rate", rate)
+                .set("cc_visits_per_step", per_step)
+                .set("configured_ccs", configured_ccs)
+                .set("ms_per_sample", secs / samples as f64 * 1e3)
+                .set("spikes_per_sample", spikes_total as f64 / samples as f64),
+        );
         if rate == 0.0 {
             assert_eq!(
                 visits, 0,
@@ -104,6 +118,20 @@ fn main() {
         }
     }
     t.print();
+
+    if let Some(path) = args.get("json") {
+        let doc = Json::obj()
+            .set("bench", "wakeset_sparsity")
+            .set("samples", samples)
+            .set("timesteps", timesteps)
+            .set("seed", seed)
+            .set("configured_ccs", configured_ccs)
+            .set("used_cores", compiled.used_cores)
+            .set("levels", Json::Arr(levels));
+        std::fs::write(path, doc.render() + "\n").expect("writing perf JSON");
+        println!("\nperf JSON written to {path}");
+    }
+
     println!(
         "\nCC visits track active columns (0 when quiescent), not the \
          {configured_ccs}-column deployment — the wake-set sparsity win."

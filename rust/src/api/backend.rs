@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use crate::chip::fast::{simulate, FastParams, FastReport};
-use crate::chip::ChipActivity;
+use crate::chip::{ChipActivity, SchedStats};
 use crate::compiler::{Compiled, ShardedCompiled};
 use crate::coordinator::{Deployment, MultiChipDeployment, SampleRun};
 use crate::energy::{EnergyModel, CLOCK_HZ};
@@ -43,6 +43,19 @@ pub trait ExecBackend: Send {
 
     /// Performance metrics over activity `a` spanning `samples` runs.
     fn metrics(&self, a: &ChipActivity, samples: u64) -> SessionMetrics;
+
+    /// Cumulative per-edge host-bridge packet counters of a multi-die
+    /// deployment (`[src][dst]`); `None` on single-die and analytic
+    /// engines.
+    fn bridge_traffic(&self) -> Option<Vec<Vec<u64>>> {
+        None
+    }
+
+    /// Wake-set scheduler counters (CC visits per phase); zeros where
+    /// the engine has no event scheduler (analytic mode).
+    fn sched_stats(&self) -> SchedStats {
+        SchedStats::default()
+    }
 
     fn kind(&self) -> Backend;
 }
@@ -160,6 +173,10 @@ impl ExecBackend for DetailedBackend {
         }
     }
 
+    fn sched_stats(&self) -> SchedStats {
+        self.dep.chip.sched
+    }
+
     fn kind(&self) -> Backend {
         Backend::Detailed
     }
@@ -267,6 +284,23 @@ impl ExecBackend for MultiChipBackend {
             spikes_per_sample: a.nc.spikes_out as f64 / samples as f64,
             sops: a.nc.sops,
         }
+    }
+
+    fn bridge_traffic(&self) -> Option<Vec<Vec<u64>>> {
+        Some(self.dep.bridge_traffic().to_vec())
+    }
+
+    fn sched_stats(&self) -> SchedStats {
+        // visits sum across dies; `steps` is the lockstep step count
+        // (every die steps every timestep), not the per-die sum
+        let mut s = SchedStats::default();
+        for chip in &self.dep.chips {
+            s.integ_cc_visits += chip.sched.integ_cc_visits;
+            s.fire_cc_visits += chip.sched.fire_cc_visits;
+            s.delay_cc_visits += chip.sched.delay_cc_visits;
+            s.steps = s.steps.max(chip.sched.steps);
+        }
+        s
     }
 
     fn kind(&self) -> Backend {

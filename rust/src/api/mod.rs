@@ -37,7 +37,7 @@ pub mod workloads;
 use std::sync::Arc;
 
 use crate::chip::fast::{simulate, FastParams};
-use crate::chip::ChipActivity;
+use crate::chip::{ChipActivity, SchedStats};
 use crate::compiler::{self, Options};
 use crate::datasets::{DenseSample, SpikeSample};
 use crate::energy::EnergyModel;
@@ -45,7 +45,7 @@ use crate::model::NetDef;
 use crate::nc::Trap;
 use crate::util::Rng;
 
-pub use crate::compiler::{CompileError, Objective};
+pub use crate::compiler::{CompileError, Objective, ShardStrategy};
 pub use crate::coordinator::SampleRun;
 pub use backend::{AnalyticBackend, DetailedBackend, ExecBackend, MultiChipBackend};
 pub use workloads::{evaluate, Workload, WorkloadReport};
@@ -237,6 +237,10 @@ pub struct DeployInfo {
     /// Mean traffic-weighted hop distance after placement.
     pub avg_hops: f64,
     pub placement_cost: f64,
+    /// Estimated cross-die events per timestep under the final
+    /// placement (sharded backends; 0.0 on single-die and analytic
+    /// deployments). The quantity [`ShardStrategy::MinCut`] minimizes.
+    pub cut_traffic: f64,
     /// INIT-stage configuration traffic in packets (detailed backend).
     pub init_packets: u64,
 }
@@ -295,6 +299,21 @@ impl Taibai {
     /// Placement objective (the Fig 13e cores-vs-throughput knob).
     pub fn objective(mut self, o: Objective) -> Taibai {
         self.opts.objective = o;
+        self
+    }
+
+    /// Core→die assignment of sharded builds
+    /// ([`ShardStrategy::MinCut`] by default; `Contiguous` restores the
+    /// PR 3 baseline split for regression comparisons).
+    pub fn shard_strategy(mut self, s: ShardStrategy) -> Taibai {
+        self.opts.strategy = s;
+        self
+    }
+
+    /// SA cost per die crossed in the multi-die placement objective
+    /// (the SerDes-crossing weight; ≫ any on-die hop distance).
+    pub fn serdes_cost(mut self, c: f64) -> Taibai {
+        self.opts.serdes_cost = c;
         self
     }
 
@@ -390,6 +409,7 @@ impl Taibai {
                             cores_saved: report.compiled.cores_saved,
                             avg_hops: report.avg_hops,
                             placement_cost: report.placement_cost,
+                            cut_traffic: 0.0,
                             init_packets: report.compiled.config.init_packets(),
                         };
                         let timesteps = net.timesteps;
@@ -422,6 +442,7 @@ impl Taibai {
                     cores_saved: 0,
                     avg_hops: fast.avg_hops,
                     placement_cost: 0.0,
+                    cut_traffic: 0.0,
                     init_packets: 0,
                 };
                 let be = AnalyticBackend::new(net.clone(), fast, em);
@@ -457,6 +478,7 @@ fn build_sharded(
         cores_saved: sharded.cores_saved,
         avg_hops: report.avg_hops,
         placement_cost: report.placement_cost,
+        cut_traffic: report.cut_traffic,
         init_packets: sharded.init_packets,
     };
     let timesteps = net.timesteps;
@@ -612,6 +634,20 @@ impl Session {
         a
     }
 
+    /// Cumulative per-edge bridge traffic of a sharded deployment
+    /// (`[src][dst]` remote packets; `None` on single-die and analytic
+    /// backends). The total equals
+    /// [`ChipActivity::remote_packets`] of the primary deployment.
+    pub fn bridge_traffic(&self) -> Option<Vec<Vec<u64>>> {
+        self.backend.bridge_traffic()
+    }
+
+    /// Wake-set scheduler counters (CC visits per phase, summed across
+    /// dies; zeros on the analytic backend).
+    pub fn sched_stats(&self) -> SchedStats {
+        self.backend.sched_stats()
+    }
+
     pub fn info(&self) -> &DeployInfo {
         &self.info
     }
@@ -638,6 +674,7 @@ pub(crate) fn add_activity(a: &mut ChipActivity, b: &ChipActivity) {
     a.activations += b.activations;
     a.packets += b.packets;
     a.link_traversals += b.link_traversals;
+    a.remote_packets += b.remote_packets;
     a.timesteps += b.timesteps;
 }
 
@@ -854,6 +891,7 @@ mod tests {
                 cores_saved: 0,
                 avg_hops: 0.0,
                 placement_cost: 0.0,
+                cut_traffic: 0.0,
                 init_packets: 0,
             },
             backend: Box::new(FlakyBackend {

@@ -43,14 +43,19 @@ pub trait Workload {
     fn prepare(&self, _session: &mut Session, _seed: u64) -> Result<(), RunError> {
         Ok(())
     }
-    /// Build a [`Session`] for this workload on the chosen backend.
-    fn session(&self, backend: Backend, seed: u64) -> Result<Session, CompileError> {
+    /// A pre-filled [`Taibai`] builder for this workload (net, weights,
+    /// rates, learning) — callers chain backend/strategy/placement knobs
+    /// before `build()`.
+    fn taibai(&self, seed: u64) -> Taibai {
         Taibai::new(self.net())
             .weights(self.weights(seed))
             .rates(self.rates())
             .learning(self.learning())
-            .backend(backend)
-            .build()
+    }
+
+    /// Build a [`Session`] for this workload on the chosen backend.
+    fn session(&self, backend: Backend, seed: u64) -> Result<Session, CompileError> {
+        self.taibai(seed).backend(backend).build()
     }
 }
 

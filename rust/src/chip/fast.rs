@@ -91,6 +91,9 @@ pub fn simulate(net: &NetDef, p: &FastParams, em: &EnergyModel) -> FastReport {
     let mut a = ChipActivity::default();
     let mut used_cores = 0usize;
     let mut max_core_cycles_per_step = 0f64;
+    // per-layer (first core index, core count) under the contiguous
+    // layer-order layout — the geometry the cross-die estimate walks
+    let mut geom: Vec<Option<(usize, usize)>> = vec![None; net.layers.len()];
 
     for (li, l) in net.layers.iter().enumerate() {
         let upstream_rate = rate(li.saturating_sub(1));
@@ -105,6 +108,7 @@ pub fn simulate(net: &NetDef, p: &FastParams, em: &EnergyModel) -> FastReport {
         let cores_w =
             (l.unique_weights() as usize + p.nc_weight_capacity - 1) / p.nc_weight_capacity;
         let cores = cores_n.max(cores_w).max(1);
+        geom[li] = Some((used_cores, cores));
         used_cores += cores;
 
         // --- INTEG traffic & work -------------------------------------
@@ -148,10 +152,17 @@ pub fn simulate(net: &NetDef, p: &FastParams, em: &EnergyModel) -> FastReport {
     }
 
     // Multi-chip: serialization over SerDes stretches the bottleneck.
+    // The cross-die packet count is estimated from the contiguous
+    // layer-order layout (balanced CC-group→die split) — i.e. the
+    // `ShardStrategy::Contiguous` geometry, which is what
+    // tests/analytic_reconcile.rs pins against measured bridge
+    // counters. A `MinCut` deployment ships *fewer* remote packets by
+    // construction, so for the default strategy this estimate is an
+    // upper bound, not a point prediction.
     let chips = (used_cores + CORES_PER_CHIP - 1) / CORES_PER_CHIP;
     if chips > 1 {
-        let inter_fraction = 1.0 - 1.0 / chips as f64;
-        let inter_packets = a.packets as f64 * inter_fraction;
+        let inter_packets = remote_packets_per_step(net, &geom, used_cores, chips, &rate);
+        a.remote_packets = inter_packets as u64;
         // SerDes bandwidth: 1 packet/cycle equivalent; add latency term.
         max_core_cycles_per_step +=
             inter_packets / net.layers.len().max(1) as f64 + SERDES_CYCLES as f64;
@@ -185,6 +196,62 @@ pub fn simulate(net: &NetDef, p: &FastParams, em: &EnergyModel) -> FastReport {
     }
 }
 
+/// Expected cross-die packets per timestep: each source-layer spike
+/// mints one packet per destination CC, and the packets whose
+/// destination CC lives on another die cross the host bridge — exactly
+/// what the detailed engine's [`ChipActivity::remote_packets`] counts.
+/// Cores fill CC groups of [`NCS_PER_CC`] in layer order and groups
+/// split over dies in balanced contiguous runs, mirroring the sharded
+/// compiler's contiguous cut. Host inputs enter per-die directly (no
+/// bridge), so the input layer contributes nothing; recurrent layers
+/// feed their own CCs as well as the next layer's.
+fn remote_packets_per_step(
+    net: &NetDef,
+    geom: &[Option<(usize, usize)>],
+    total_cores: usize,
+    chips: usize,
+    rate: &dyn Fn(usize) -> f64,
+) -> f64 {
+    let groups = total_cores.div_ceil(NCS_PER_CC);
+    // balanced contiguous groups→die split (shard::assign_chips)
+    let base = groups / chips;
+    let rem = groups % chips;
+    let mut die_of_group = Vec::with_capacity(groups);
+    for d in 0..chips {
+        let sz = base + usize::from(d < rem);
+        die_of_group.resize(die_of_group.len() + sz, d);
+    }
+    let mut total = 0.0;
+    for li in 1..net.layers.len() {
+        let Some((dst_start, dst_cores)) = geom[li] else {
+            continue;
+        };
+        let g0 = dst_start / NCS_PER_CC;
+        let g1 = (dst_start + dst_cores - 1) / NCS_PER_CC;
+        let total_dcc = g1 - g0 + 1;
+        let mut dcc_on = vec![0usize; chips];
+        for g in g0..=g1 {
+            dcc_on[die_of_group[g]] += 1;
+        }
+        let mut from_layer = |src_li: usize| {
+            let Some((s_start, s_cores)) = geom[src_li] else {
+                return;
+            };
+            let spikes_per_core =
+                net.layers[src_li].neurons() as f64 * rate(src_li) / s_cores as f64;
+            for c in s_start..s_start + s_cores {
+                let die = die_of_group[c / NCS_PER_CC];
+                total += spikes_per_core * (total_dcc - dcc_on[die]) as f64;
+            }
+        };
+        from_layer(li - 1); // input layer has no geometry → host-injected
+        if matches!(net.layers[li], Layer::Recurrent { .. }) {
+            from_layer(li);
+        }
+    }
+    total
+}
+
 fn scale_activity(a: &mut ChipActivity, t: u64) {
     a.nc.sops *= t;
     a.nc.instret *= t;
@@ -200,6 +267,7 @@ fn scale_activity(a: &mut ChipActivity, t: u64) {
     a.it_reads *= t;
     a.activations *= t;
     a.link_traversals *= t;
+    a.remote_packets *= t;
 }
 
 /// Upstream neuron count feeding layer `li`.
@@ -278,6 +346,47 @@ mod tests {
         // Fig 15b: application power ≈ 0.34 W on average
         assert!(r.power_w < 1.5, "power={}", r.power_w);
         assert!(r.fps > 10.0);
+    }
+
+    #[test]
+    fn single_chip_nets_report_zero_remote_packets() {
+        let r = simulate(&model::srnn_ecg(true), &FastParams::default(), &em());
+        assert_eq!(r.chips, 1);
+        assert_eq!(r.activity.remote_packets, 0);
+    }
+
+    #[test]
+    fn remote_packet_estimate_matches_hand_count() {
+        // 4 → 1056 → 8 with one neuron per core: 1064 cores = 133 CC
+        // groups over 2 dies ([67, 66] balanced split). Layer 2's 8
+        // readout cores live in group 132 (die 1), so every one of the
+        // 536 die-0 hidden cores sends exactly one cross-die packet per
+        // spike, and the die-1 hidden cores send none. At rate 1.0:
+        // 536 remote packets per step.
+        let mut n = model::NetDef::new("straddle", 3);
+        n.layers.push(model::Layer::Input { size: 4 });
+        n.layers.push(model::Layer::Fc {
+            input: 4,
+            output: 1056,
+            neuron: model::NeuronModel::Lif { tau: 0.5, vth: 1.0 },
+        });
+        n.layers.push(model::Layer::Fc {
+            input: 1056,
+            output: 8,
+            neuron: model::NeuronModel::Readout { tau: 0.9 },
+        });
+        let mut p = FastParams::default();
+        p.nc_neuron_capacity = 1;
+        p.firing_rates = vec![1.0, 1.0, 0.0];
+        let r = simulate(&n, &p, &em());
+        assert_eq!(r.chips, 2);
+        assert_eq!(r.used_cores, 1064);
+        assert_eq!(
+            r.activity.remote_packets,
+            536 * n.timesteps as u64,
+            "per-step remote estimate off: {}",
+            r.activity.remote_packets
+        );
     }
 
     #[test]

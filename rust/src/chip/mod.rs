@@ -85,6 +85,11 @@ pub struct ChipActivity {
     pub activations: u64,
     pub packets: u64,
     pub link_traversals: u64,
+    /// Packets this die minted for *another* die ([`StepResult::egress`]
+    /// — the SerDes-crossing traffic the host bridge carries). Always 0
+    /// on single-die images; on a multi-die aggregate it is the measured
+    /// bridge traffic the analytic backend's estimate reconciles with.
+    pub remote_packets: u64,
     pub timesteps: u64,
 }
 
@@ -199,6 +204,10 @@ pub struct Chip {
     delayed: WakeSet,
     /// Reusable delivery buffer for [`Mesh::route_into`].
     route_buf: Vec<usize>,
+    /// Cumulative count of cross-die packets diverted into
+    /// [`StepResult::egress`] (reported as
+    /// [`ChipActivity::remote_packets`]).
+    egress_packets: u64,
 }
 
 impl Chip {
@@ -218,6 +227,7 @@ impl Chip {
             live: WakeSet::default(),
             delayed: WakeSet::default(),
             route_buf: Vec::new(),
+            egress_packets: 0,
         }
     }
 
@@ -375,6 +385,7 @@ impl Chip {
             .any(|m| matches!(m.packet.mode, RouteMode::Remote { .. }))
         {
             let egress = &mut res.egress;
+            let before = egress.len();
             self.pending.retain(|m| {
                 if matches!(m.packet.mode, RouteMode::Remote { .. }) {
                     egress.push(m.packet);
@@ -383,6 +394,7 @@ impl Chip {
                     true
                 }
             });
+            self.egress_packets += (egress.len() - before) as u64;
         }
 
         self.timestep += 1;
@@ -513,6 +525,7 @@ impl Chip {
             timesteps: self.timestep,
             packets: self.mesh.total_packets(),
             link_traversals: self.mesh.total_traversals,
+            remote_packets: self.egress_packets,
             ..Default::default()
         };
         for cc in &self.ccs {

@@ -74,7 +74,10 @@ pub struct Compiled {
 }
 
 /// Routing mode from one die-global CC to another: same-die targets stay
-/// on the mesh, cross-die targets leave through the host bridge.
+/// on the mesh, cross-die targets leave through the host bridge. The
+/// die ids come straight from the placement's slot space, so any
+/// core→die assignment — contiguous runs or the MinCut optimizer's
+/// arbitrary CC→die map — lowers to the same Unicast/Remote split.
 fn route_between(src_gcc: usize, dst_gcc: usize) -> RouteMode {
     let (schip, dchip) = (src_gcc / NUM_CCS, dst_gcc / NUM_CCS);
     let (x, y) = cc_xy(dst_gcc % NUM_CCS);

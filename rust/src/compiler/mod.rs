@@ -16,7 +16,7 @@ use crate::model::NetDef;
 pub use codegen::Compiled;
 pub use error::CompileError;
 pub use partition::Limits;
-pub use shard::{compile_sharded, ShardReport, ShardedCompiled};
+pub use shard::{compile_sharded, ShardReport, ShardStrategy, ShardedCompiled};
 
 /// Placement objective (the Fig 13e trade-off knob).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,6 +43,12 @@ pub struct Options {
     pub seed: u64,
     /// Firing-rate estimates per layer (for the traffic matrix).
     pub rates: Vec<f64>,
+    /// Core→die assignment of sharded builds (MinCut by default).
+    pub strategy: ShardStrategy,
+    /// SA cost per die crossed in the multi-die placement objective
+    /// (≫ any on-die hop distance; see
+    /// [`placement::DEFAULT_SERDES_COST`]).
+    pub serdes_cost: f64,
 }
 
 impl Default for Options {
@@ -55,6 +61,8 @@ impl Default for Options {
             learning: false,
             seed: 0x7a1b41,
             rates: Vec::new(),
+            strategy: ShardStrategy::default(),
+            serdes_cost: placement::DEFAULT_SERDES_COST,
         }
     }
 }

@@ -5,8 +5,17 @@
 //! "genetic algorithms or simulated annealing algorithms are used to
 //! optimize core placement") minimizes traffic-weighted distance, the
 //! congestion proxy the chip simulator feeds back.
+//!
+//! The same optimizer runs over the **virtual multi-die slot space** of
+//! a sharded deployment ([`optimize_serdes`]): slots on different dies
+//! are priced at a configurable SerDes-crossing weight per die crossed
+//! (`Options::serdes_cost`, ≫ any on-die Manhattan distance), so swaps
+//! that pull chatty cores onto one die pay off and swaps that scatter
+//! them across the bridge are heavily penalized. Swaps exchange slots,
+//! so per-die occupancy — and therefore the cut optimizer's capacity
+//! guarantee — is preserved by construction.
 
-use crate::model::NetDef;
+use crate::model::{Layer, NetDef};
 use crate::noc::{cc_xy, MESH_H, MESH_W, NUM_CCS};
 use crate::topology::NCS_PER_CC;
 use crate::util::Rng;
@@ -15,6 +24,16 @@ use super::partition::Partition;
 
 /// NC slots on one die (132 CCs × 8 NCs).
 pub const CHIP_SLOTS: usize = NUM_CCS * NCS_PER_CC;
+
+/// Die-crossing weight of the legacy diagnostic metrics
+/// ([`cost`] / [`avg_hops`]): a full mesh width per die crossed — the
+/// [`crate::noc::router::inter_chip_cost`] ballpark.
+pub const MESH_SERDES_HOPS: f64 = MESH_W as f64;
+
+/// Default SA weight per die crossed (`Options::serdes_cost`). Chosen
+/// ≫ the largest on-die Manhattan distance (21 hops on the 12×11 mesh),
+/// so no amount of on-die convenience justifies adding a SerDes hop.
+pub const DEFAULT_SERDES_COST: f64 = 64.0;
 
 /// A placement: `core_slot[i]` = global NC slot (cc·8 + nc) of core `i`,
 /// where CC order follows the zigzag curve.
@@ -83,31 +102,68 @@ pub fn traffic_matrix(
             }
         }
     }
+    // Recurrent layers also feed themselves: every hidden spike fans out
+    // across the layer's own cores, which is exactly the traffic a bad
+    // cut pushes over the bridge every step. Intra-core delivery is free
+    // (skipped), matching the merged-traffic collapse.
+    for (li, layer) in net.layers.iter().enumerate() {
+        if !matches!(layer, Layer::Recurrent { .. }) {
+            continue;
+        }
+        let cores = &part.layer_cores[li];
+        if cores.len() < 2 {
+            continue;
+        }
+        let rate = rates.get(li).copied().unwrap_or(default_rate);
+        for &s in cores {
+            let events = part.cores[s].count as f64 * rate;
+            let per_dst = events / cores.len() as f64;
+            for &d in cores {
+                if d != s {
+                    t[s][d] += per_dst;
+                }
+            }
+        }
+    }
     t
+}
+
+/// Manhattan distance between the CCs hosting two slots, plus
+/// `serdes_cost` per die crossed (the SerDes-crossing weight of the
+/// multi-die SA objective).
+fn slot_dist_w(a: usize, b: usize, serdes_cost: f64) -> f64 {
+    let (ax, ay) = cc_xy(zigzag_cc(a % CHIP_SLOTS / NCS_PER_CC));
+    let (bx, by) = cc_xy(zigzag_cc(b % CHIP_SLOTS / NCS_PER_CC));
+    let chips_apart = (a / CHIP_SLOTS).abs_diff(b / CHIP_SLOTS);
+    ((ax as i32 - bx as i32).abs() + (ay as i32 - by as i32).abs()) as f64
+        + chips_apart as f64 * serdes_cost
 }
 
 /// Manhattan distance between the CCs hosting two slots. Slots on
 /// different dies add a full mesh width per die crossed (edge exit +
 /// SerDes hop — the [`crate::noc::router::inter_chip_cost`] ballpark).
 fn slot_dist(a: usize, b: usize) -> f64 {
-    let (ax, ay) = cc_xy(zigzag_cc(a % CHIP_SLOTS / NCS_PER_CC));
-    let (bx, by) = cc_xy(zigzag_cc(b % CHIP_SLOTS / NCS_PER_CC));
-    let chips_apart = (a / CHIP_SLOTS).abs_diff(b / CHIP_SLOTS);
-    ((ax as i32 - bx as i32).abs() + (ay as i32 - by as i32).abs()) as f64
-        + (chips_apart * MESH_W) as f64
+    slot_dist_w(a, b, MESH_SERDES_HOPS)
 }
 
-/// Traffic-weighted total distance of a placement (the SA objective).
-pub fn cost(traffic: &[Vec<f64>], map: &PlacementMap) -> f64 {
+/// Traffic-weighted total distance of a placement (the SA objective)
+/// under an explicit SerDes-crossing weight.
+pub fn cost_serdes(traffic: &[Vec<f64>], map: &PlacementMap, serdes_cost: f64) -> f64 {
     let mut c = 0.0;
     for (i, row) in traffic.iter().enumerate() {
         for (j, &t) in row.iter().enumerate() {
             if t > 0.0 {
-                c += t * slot_dist(map.core_slot[i], map.core_slot[j]);
+                c += t * slot_dist_w(map.core_slot[i], map.core_slot[j], serdes_cost);
             }
         }
     }
     c
+}
+
+/// Traffic-weighted total distance at the legacy die-crossing weight
+/// (the diagnostic reported in `CompileReport`/`ShardReport`).
+pub fn cost(traffic: &[Vec<f64>], map: &PlacementMap) -> f64 {
+    cost_serdes(traffic, map, MESH_SERDES_HOPS)
 }
 
 /// Mean hops per packet under a placement — the `avg_hops` parameter of
@@ -141,23 +197,87 @@ pub fn initial(n_cores: usize) -> PlacementMap {
     }
 }
 
-/// Simulated-annealing swap optimizer over NC slots.
+/// Simulated-annealing swap optimizer over NC slots (single-die default:
+/// die crossings priced at the legacy [`MESH_SERDES_HOPS`] weight).
 pub fn optimize(
     traffic: &[Vec<f64>],
     init: PlacementMap,
     iters: usize,
     seed: u64,
 ) -> PlacementMap {
+    optimize_serdes(traffic, init, iters, seed, MESH_SERDES_HOPS)
+}
+
+/// Cost change of swapping cores `a` and `b`'s slots, evaluated from the
+/// two cores' adjacency lists in O(degree) instead of recomputing the
+/// full O(n²) objective. The `a`↔`b` term itself is invariant (the
+/// distance is symmetric), so it is skipped.
+fn swap_delta(
+    nbr: &[Vec<(u32, f64)>],
+    map: &PlacementMap,
+    a: usize,
+    b: usize,
+    serdes_cost: f64,
+) -> f64 {
+    let (sa, sb) = (map.core_slot[a], map.core_slot[b]);
+    let mut d = 0.0;
+    for &(j, t) in &nbr[a] {
+        let j = j as usize;
+        if j == b {
+            continue;
+        }
+        let sj = map.core_slot[j];
+        d += t * (slot_dist_w(sb, sj, serdes_cost) - slot_dist_w(sa, sj, serdes_cost));
+    }
+    for &(j, t) in &nbr[b] {
+        let j = j as usize;
+        if j == a {
+            continue;
+        }
+        let sj = map.core_slot[j];
+        d += t * (slot_dist_w(sa, sj, serdes_cost) - slot_dist_w(sb, sj, serdes_cost));
+    }
+    d
+}
+
+/// Simulated-annealing swap optimizer over the (possibly multi-die)
+/// slot space, pricing each die crossing at `serdes_cost`. Swaps are
+/// delta-evaluated from per-core adjacency lists, so an iteration costs
+/// O(degree) rather than O(n²); the running cost is re-anchored to an
+/// exact recompute every 128 accepted moves to keep float drift out of
+/// the best-so-far bookkeeping.
+pub fn optimize_serdes(
+    traffic: &[Vec<f64>],
+    init: PlacementMap,
+    iters: usize,
+    seed: u64,
+    serdes_cost: f64,
+) -> PlacementMap {
     let n = init.core_slot.len();
     if n < 2 {
         return init;
     }
+    // symmetric adjacency: nbr[i] holds every j with traffic in either
+    // direction, weighted t[i][j] + t[j][i]
+    let mut nbr: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let t = traffic[i][j] + traffic[j][i];
+            if t > 0.0 {
+                nbr[i].push((j as u32, t));
+            }
+        }
+    }
     let mut rng = Rng::new(seed);
     let mut cur = init;
-    let mut cur_cost = cost(traffic, &cur);
+    let mut cur_cost = cost_serdes(traffic, &cur, serdes_cost);
     let mut best = cur.clone();
     let mut best_cost = cur_cost;
     let t0 = (cur_cost / n as f64).max(1.0);
+    let mut accepts = 0usize;
     for it in 0..iters {
         let temp = t0 * (1.0 - it as f64 / iters as f64).max(1e-3);
         let a = rng.below(n as u64) as usize;
@@ -165,17 +285,19 @@ pub fn optimize(
         if a == b {
             continue;
         }
-        cur.core_slot.swap(a, b);
-        let c = cost(traffic, &cur);
-        let accept = c <= cur_cost || rng.chance(((cur_cost - c) / temp).exp().min(1.0));
+        let delta = swap_delta(&nbr, &cur, a, b, serdes_cost);
+        let accept = delta <= 0.0 || rng.chance((-delta / temp).exp().min(1.0));
         if accept {
-            cur_cost = c;
-            if c < best_cost {
-                best_cost = c;
+            cur.core_slot.swap(a, b);
+            cur_cost += delta;
+            accepts += 1;
+            if accepts % 128 == 0 {
+                cur_cost = cost_serdes(traffic, &cur, serdes_cost);
+            }
+            if cur_cost < best_cost {
+                best_cost = cur_cost;
                 best = cur.clone();
             }
-        } else {
-            cur.core_slot.swap(a, b); // revert
         }
     }
     best
@@ -248,5 +370,72 @@ mod tests {
     #[should_panic(expected = "exceed one chip")]
     fn oversubscription_panics() {
         initial(NUM_CCS * NCS_PER_CC + 1);
+    }
+
+    #[test]
+    fn traffic_matrix_models_recurrence() {
+        // the ECG SRNN hidden layer feeds itself: with the layer split
+        // over several cores, hidden→hidden traffic must appear
+        let net = model::srnn_ecg(true);
+        let part = partition(&net, &Limits { neurons_per_nc: 16, ..Default::default() });
+        let hidden = part.layer_cores[1].clone();
+        assert!(hidden.len() >= 2, "need a split hidden layer");
+        let t = traffic_matrix(&net, &part, &[0.3, 0.33, 0.2], 0.1);
+        let (a, b) = (hidden[0], hidden[1]);
+        assert!(t[a][b] > 0.0, "recurrent core→core traffic missing");
+        assert!(t[b][a] > 0.0, "recurrence is bidirectional");
+        assert_eq!(t[a][a], 0.0, "intra-core delivery is free");
+    }
+
+    #[test]
+    fn serdes_cost_prices_die_crossings() {
+        // two cores, one traffic unit: same die vs adjacent dies
+        let traffic = vec![vec![0.0, 1.0], vec![0.0, 0.0]];
+        let same = PlacementMap { core_slot: vec![0, 1] };
+        let split = PlacementMap { core_slot: vec![0, CHIP_SLOTS] };
+        let w = 100.0;
+        assert_eq!(cost_serdes(&traffic, &same, w), 1.0);
+        // die crossing: w per die crossed, zero mesh distance (both CC 0)
+        assert_eq!(cost_serdes(&traffic, &split, w), w);
+        // the legacy metric prices the crossing at a mesh width
+        assert_eq!(cost(&traffic, &split), MESH_SERDES_HOPS);
+    }
+
+    #[test]
+    fn serdes_sa_pulls_chatty_cores_onto_one_die() {
+        // cores 0,1 talk heavily but start on different dies; cores 2,3
+        // are silent placeholders occupying the swap targets
+        let n = 4;
+        let mut traffic = vec![vec![0.0; n]; n];
+        traffic[0][1] = 50.0;
+        traffic[1][0] = 50.0;
+        let init = PlacementMap {
+            core_slot: vec![0, CHIP_SLOTS, 1, CHIP_SLOTS + 1],
+        };
+        let c0 = cost_serdes(&traffic, &init, DEFAULT_SERDES_COST);
+        let opt = optimize_serdes(&traffic, init, 3000, 11, DEFAULT_SERDES_COST);
+        let c1 = cost_serdes(&traffic, &opt, DEFAULT_SERDES_COST);
+        assert!(c1 < c0, "SA never escaped the SerDes crossing: {c0} -> {c1}");
+        assert_eq!(
+            opt.chip_of(0),
+            opt.chip_of(1),
+            "chatty pair still split across dies: {:?}",
+            opt.core_slot
+        );
+    }
+
+    #[test]
+    fn delta_evaluated_sa_matches_full_recompute_costs() {
+        // the accumulated-delta cost must track the exact objective:
+        // optimize twice and pin that the returned best's recomputed
+        // cost never exceeds the initial cost (monotonicity of `best`)
+        let net = model::dhsnn_shd(true);
+        let part = partition(&net, &Limits { neurons_per_nc: 4, ..Default::default() });
+        let traffic = traffic_matrix(&net, &part, &[0.012, 0.025], 0.1);
+        let init = initial(part.num_cores());
+        let c0 = cost_serdes(&traffic, &init, DEFAULT_SERDES_COST);
+        let opt = optimize_serdes(&traffic, init, 3000, 3, DEFAULT_SERDES_COST);
+        let c1 = cost_serdes(&traffic, &opt, DEFAULT_SERDES_COST);
+        assert!(c1 <= c0 + 1e-9, "best worsened: {c0} -> {c1}");
     }
 }

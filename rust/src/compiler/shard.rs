@@ -12,13 +12,21 @@
 //! die-global image into per-die [`ChipImage`]s plus the host-side maps
 //! a [`crate::coordinator::MultiChipDeployment`] needs to bridge them.
 //!
-//! Cut placement is core-list order: cores are assigned to dies in
-//! contiguous runs, at whole-CC granularity when there are at least as
-//! many occupied CCs as dies (this preserves the single-die NC grouping
-//! exactly — the bit-identity lever the parity tests pin), falling back
-//! to single-core granularity for forced fine splits of small networks.
-//! Cross-die placement is zigzag-only: simulated annealing would have to
-//! model SerDes-crossing costs to be meaningful and is skipped here.
+//! Cut placement is topology-aware by default ([`ShardStrategy::MinCut`]):
+//! the CC→die assignment is chosen by minimizing the cross-die entries of
+//! the compiler's traffic matrix with greedy KL/FM-style boundary moves
+//! and swaps under a per-die capacity, instead of splitting the core list
+//! contiguously ([`ShardStrategy::Contiguous`], the old behavior, kept as
+//! the regression baseline). Units are whole CC groups (8 consecutive
+//! merged cores) whenever there are at least as many occupied CCs as
+//! dies — this preserves the single-die NC grouping exactly, the
+//! bit-identity lever the parity tests pin — falling back to single-core
+//! units for forced fine splits of small networks. Cross-die placement
+//! then runs the simulated-annealing optimizer over the virtual
+//! multi-die slot space with die crossings priced at
+//! `Options::serdes_cost` ≫ any on-die hop distance (see
+//! [`super::placement::optimize_serdes`]); `sa_iters = 0` keeps the
+//! deterministic per-die zigzag.
 
 use std::collections::HashMap;
 
@@ -35,6 +43,40 @@ use super::{check_weight_count, effective_limits, merge, merged_traffic, partiti
 /// Most dies a sharded deployment can span (the packet header carries
 /// the destination die in 8 bits).
 pub const MAX_CHIPS: usize = 256;
+
+/// How the cores of a sharded deployment are assigned to dies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Contiguous core-list runs (the PR 3 baseline): cross-die SerDes
+    /// traffic is whatever the layer order happens to produce.
+    Contiguous,
+    /// Traffic-minimizing cut (default): greedy KL/FM-style boundary
+    /// moves and swaps over the CC-group graph, minimizing the cross-die
+    /// entries of the compiler's traffic matrix under a balanced per-die
+    /// capacity.
+    #[default]
+    MinCut,
+}
+
+impl ShardStrategy {
+    /// Parse a CLI-style strategy name.
+    pub fn parse(s: &str) -> Option<ShardStrategy> {
+        match s {
+            "contiguous" | "contig" => Some(ShardStrategy::Contiguous),
+            "mincut" | "min-cut" => Some(ShardStrategy::MinCut),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ShardStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardStrategy::Contiguous => write!(f, "contiguous"),
+            ShardStrategy::MinCut => write!(f, "mincut"),
+        }
+    }
+}
 
 /// One die's share of a sharded deployment.
 #[derive(Clone, Debug, Default)]
@@ -86,8 +128,14 @@ pub struct ShardReport {
     /// full mesh width per die crossed).
     pub avg_hops: f64,
     pub placement_cost: f64,
-    /// Merged cores per die.
+    /// Merged cores per die (after the cut optimizer and SA).
     pub per_chip_cores: Vec<usize>,
+    /// Cut-point assignment strategy that produced this shard.
+    pub strategy: ShardStrategy,
+    /// Estimated cross-die events per timestep under the final placement
+    /// (the sum of the traffic matrix's cut entries — the quantity
+    /// `ShardStrategy::MinCut` minimizes).
+    pub cut_traffic: f64,
 }
 
 /// Contiguous balanced split: `parts` sizes differing by at most one.
@@ -97,27 +145,166 @@ fn split_sizes(total: usize, parts: usize) -> Vec<usize> {
     (0..parts).map(|i| base + usize::from(i < rem)).collect()
 }
 
+/// Contiguous balanced unit→part assignment (`split_sizes` expanded).
+fn contiguous_units(units: usize, parts: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(units);
+    for (part, &sz) in split_sizes(units, parts).iter().enumerate() {
+        out.resize(out.len() + sz, part);
+    }
+    out
+}
+
 /// Assign each merged core to a die. Whole-CC (8-slot) granularity when
 /// the occupied CC count allows, single-core granularity otherwise.
 fn assign_chips(total: usize, n_chips: usize) -> Vec<usize> {
     let groups = total.div_ceil(NCS_PER_CC);
-    let mut chip_of = Vec::with_capacity(total);
     if groups >= n_chips {
-        let sizes = split_sizes(groups, n_chips);
-        let mut group_chip = Vec::with_capacity(groups);
-        for (chip, &sz) in sizes.iter().enumerate() {
-            group_chip.resize(group_chip.len() + sz, chip);
-        }
-        for core in 0..total {
-            chip_of.push(group_chip[core / NCS_PER_CC]);
-        }
+        let group_chip = contiguous_units(groups, n_chips);
+        (0..total).map(|core| group_chip[core / NCS_PER_CC]).collect()
     } else {
-        let sizes = split_sizes(total, n_chips);
-        for (chip, &sz) in sizes.iter().enumerate() {
-            chip_of.resize(chip_of.len() + sz, chip);
+        contiguous_units(total, n_chips)
+    }
+}
+
+/// Greedy KL/FM-style min-cut over `units` (CC groups or single cores):
+/// starting from `init`, repeatedly apply the best traffic-gaining
+/// boundary move that respects the per-part capacity `cap`, then
+/// capacity-preserving pair swaps (which escape configurations where
+/// every part sits at its cap). Deterministic, and monotone: the
+/// cross-part traffic of the result never exceeds `init`'s.
+pub fn min_cut_assign(
+    traffic: &[Vec<f64>],
+    n_parts: usize,
+    cap: usize,
+    init: Vec<usize>,
+) -> Vec<usize> {
+    let n = init.len();
+    if n_parts <= 1 || n < 2 {
+        return init;
+    }
+    debug_assert_eq!(traffic.len(), n);
+    let sym = |u: usize, v: usize| traffic[u][v] + traffic[v][u];
+    let mut part = init;
+    let mut sizes = vec![0usize; n_parts];
+    for &p in &part {
+        sizes[p] += 1;
+    }
+    debug_assert!(sizes.iter().all(|&s| s <= cap), "init violates cap");
+    // w[u][p] = traffic between unit u and the units currently in part p
+    let mut w = vec![vec![0.0f64; n_parts]; n];
+    for u in 0..n {
+        for v in 0..n {
+            if u != v {
+                let t = sym(u, v);
+                if t > 0.0 {
+                    w[u][part[v]] += t;
+                }
+            }
         }
     }
-    chip_of
+    const EPS: f64 = 1e-9;
+    // passes are bounded: every accepted change strictly lowers the cut
+    for _pass in 0..8 {
+        let mut improved = false;
+        // FM boundary moves under the capacity cap
+        for u in 0..n {
+            let a = part[u];
+            let mut best = (a, EPS);
+            for b in 0..n_parts {
+                if b == a || sizes[b] >= cap {
+                    continue;
+                }
+                let gain = w[u][b] - w[u][a];
+                if gain > best.1 {
+                    best = (b, gain);
+                }
+            }
+            let b = best.0;
+            if b != a {
+                sizes[a] -= 1;
+                sizes[b] += 1;
+                part[u] = b;
+                for v in 0..n {
+                    if v != u {
+                        let t = sym(u, v);
+                        if t > 0.0 {
+                            w[v][a] -= t;
+                            w[v][b] += t;
+                        }
+                    }
+                }
+                improved = true;
+            }
+        }
+        // KL pair swaps (size-preserving; the u↔v edge stays external,
+        // hence the -2·t(u,v) correction)
+        for u in 0..n {
+            for v in u + 1..n {
+                let (a, b) = (part[u], part[v]);
+                if a == b {
+                    continue;
+                }
+                let tuv = sym(u, v);
+                let gain = (w[u][b] - w[u][a]) + (w[v][a] - w[v][b]) - 2.0 * tuv;
+                if gain <= EPS {
+                    continue;
+                }
+                part[u] = b;
+                part[v] = a;
+                for x in 0..n {
+                    if x == u || x == v {
+                        continue;
+                    }
+                    let tu = sym(x, u);
+                    let tv = sym(x, v);
+                    if tu != 0.0 || tv != 0.0 {
+                        w[x][a] += tv - tu;
+                        w[x][b] += tu - tv;
+                    }
+                }
+                w[u][a] += tuv;
+                w[u][b] -= tuv;
+                w[v][a] -= tuv;
+                w[v][b] += tuv;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    part
+}
+
+/// Traffic-minimizing core→die assignment: contiguous balanced start,
+/// then [`min_cut_assign`] over CC-group units (or single cores when the
+/// model has fewer occupied CCs than dies). The balanced capacity
+/// `ceil(units / n_chips)` keeps every die within its physical
+/// [`CHIP_SLOTS`] while preventing a forced fine split from collapsing
+/// the whole model onto one die.
+fn assign_chips_mincut(total: usize, n_chips: usize, traffic: &[Vec<f64>]) -> Vec<usize> {
+    if n_chips <= 1 {
+        return vec![0; total];
+    }
+    let groups = total.div_ceil(NCS_PER_CC);
+    if groups >= n_chips {
+        // whole-CC units preserve the per-die NC grouping (parity lever)
+        let mut gt = vec![vec![0.0f64; groups]; groups];
+        for (i, row) in traffic.iter().enumerate() {
+            for (j, &t) in row.iter().enumerate() {
+                if t > 0.0 && i / NCS_PER_CC != j / NCS_PER_CC {
+                    gt[i / NCS_PER_CC][j / NCS_PER_CC] += t;
+                }
+            }
+        }
+        let cap = groups.div_ceil(n_chips);
+        debug_assert!(cap <= NUM_CCS);
+        let die = min_cut_assign(&gt, n_chips, cap, contiguous_units(groups, n_chips));
+        (0..total).map(|core| die[core / NCS_PER_CC]).collect()
+    } else {
+        let cap = total.div_ceil(n_chips);
+        min_cut_assign(traffic, n_chips, cap, contiguous_units(total, n_chips))
+    }
 }
 
 /// Compile a network across multiple dies. `chips = 0` uses just enough
@@ -146,8 +333,16 @@ pub fn compile_sharded(
         });
     }
 
-    // virtual multi-die placement: zigzag within each die
-    let chip_of = assign_chips(merged.cores.len(), n_chips);
+    // cut points: traffic-minimizing by default, contiguous baseline on
+    // request; cores of one die then fill its slots in ascending index
+    // order (zigzag within the die)
+    let mtraffic = merged_traffic(net, &part, &merged, &opts.rates);
+    let chip_of = match opts.strategy {
+        ShardStrategy::Contiguous => assign_chips(merged.cores.len(), n_chips),
+        ShardStrategy::MinCut => {
+            assign_chips_mincut(merged.cores.len(), n_chips, &mtraffic)
+        }
+    };
     let mut next_local = vec![0usize; n_chips];
     let mut core_slot = Vec::with_capacity(merged.cores.len());
     for &chip in &chip_of {
@@ -157,9 +352,33 @@ pub fn compile_sharded(
     debug_assert!(next_local.iter().all(|&n| n <= CHIP_SLOTS));
     let place = PlacementMap { core_slot };
 
-    let mtraffic = merged_traffic(net, &part, &merged, &opts.rates);
+    // SerDes-aware SA over the virtual multi-die slot space: swaps keep
+    // per-die occupancy fixed, so the cut optimizer's capacity guarantee
+    // survives while die crossings are priced at `opts.serdes_cost`
+    let place = if opts.sa_iters > 0 && n_chips > 1 {
+        placement::optimize_serdes(
+            &mtraffic,
+            place,
+            opts.sa_iters,
+            opts.seed,
+            opts.serdes_cost,
+        )
+    } else if opts.sa_iters > 0 {
+        placement::optimize(&mtraffic, place, opts.sa_iters, opts.seed)
+    } else {
+        place
+    };
+
     let avg_hops = placement::avg_hops(&mtraffic, &place);
     let placement_cost = placement::cost(&mtraffic, &place);
+    let mut cut_traffic = 0.0;
+    for (i, row) in mtraffic.iter().enumerate() {
+        for (j, &t) in row.iter().enumerate() {
+            if t > 0.0 && place.chip_of(i) != place.chip_of(j) {
+                cut_traffic += t;
+            }
+        }
+    }
 
     let compiled = codegen::codegen(net, weights, &merged, &place, opts.learning)?;
 
@@ -201,15 +420,19 @@ pub fn compile_sharded(
         .map(|c| c.config.init_packets())
         .sum();
 
+    // per-die counts from the *final* placement (SA may have swapped
+    // cores across dies)
     let mut per_chip_cores = vec![0usize; n_chips];
-    for &chip in &chip_of {
-        per_chip_cores[chip] += 1;
+    for core in 0..merged.cores.len() {
+        per_chip_cores[place.chip_of(core)] += 1;
     }
     Ok(ShardReport {
         sharded,
         avg_hops,
         placement_cost,
         per_chip_cores,
+        strategy: opts.strategy,
+        cut_traffic,
     })
 }
 
@@ -241,6 +464,163 @@ mod tests {
         assert_eq!(split_sizes(5, 4), vec![2, 1, 1, 1]);
         assert_eq!(split_sizes(8, 8), vec![1; 8]);
         assert_eq!(split_sizes(2000, 2).iter().sum::<usize>(), 2000);
+    }
+
+    /// Cross-part traffic of an assignment (the min-cut objective).
+    fn cut_of(traffic: &[Vec<f64>], part: &[usize]) -> f64 {
+        let mut c = 0.0;
+        for (i, row) in traffic.iter().enumerate() {
+            for (j, &t) in row.iter().enumerate() {
+                if part[i] != part[j] {
+                    c += t;
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn min_cut_never_violates_per_die_capacity() {
+        // dense pseudo-random traffic: every move is tempting, capacity
+        // must still hold
+        let mut rng = crate::util::Rng::new(99);
+        let n = 20;
+        let mut traffic = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    traffic[i][j] = rng.f64() * 10.0;
+                }
+            }
+        }
+        let cap = 7;
+        let init = super::contiguous_units(n, 3);
+        let out = min_cut_assign(&traffic, 3, cap, init.clone());
+        assert_eq!(out.len(), n);
+        let mut sizes = vec![0usize; 3];
+        for &p in &out {
+            assert!(p < 3, "die id out of range");
+            sizes[p] += 1;
+        }
+        assert_eq!(sizes.iter().sum::<usize>(), n);
+        assert!(sizes.iter().all(|&s| s <= cap), "capacity violated: {sizes:?}");
+        assert!(
+            cut_of(&traffic, &out) <= cut_of(&traffic, &init) + 1e-9,
+            "min-cut worsened the contiguous cut"
+        );
+    }
+
+    #[test]
+    fn min_cut_reunites_a_split_clique() {
+        // units 3..8 form a clique the contiguous start splits across
+        // the part boundary at 5; the rest are silent. Both parts sit
+        // exactly at cap (10 units, 2 parts, cap 5), so only the KL
+        // swap pass can fix it — by trading clique members for silent
+        // units.
+        let n = 10;
+        let mut traffic = vec![vec![0.0; n]; n];
+        for i in 3..8 {
+            for j in 3..8 {
+                if i != j {
+                    traffic[i][j] = 4.0;
+                }
+            }
+        }
+        let init = super::contiguous_units(n, 2);
+        let out = min_cut_assign(&traffic, 2, 5, init.clone());
+        assert!(
+            cut_of(&traffic, &out) < cut_of(&traffic, &init),
+            "cut not improved: {out:?}"
+        );
+        let home = out[3];
+        assert!(
+            (3..8).all(|u| out[u] == home),
+            "clique still split: {out:?}"
+        );
+        let mut sizes = [0usize; 2];
+        for &p in &out {
+            sizes[p] += 1;
+        }
+        assert_eq!(sizes, [5, 5], "swap pass must preserve part sizes");
+    }
+
+    #[test]
+    fn mincut_assignment_keeps_cc_groups_coresident() {
+        // 24 cores = 3 CC groups on 2 dies with traffic favoring the
+        // middle group joining the last: whatever the cut, cores of one
+        // group must share a die (the NC-grouping parity lever)
+        let total = 24;
+        let mut traffic = vec![vec![0.0; total]; total];
+        for i in 8..16 {
+            for j in 16..24 {
+                traffic[i][j] = 2.0;
+            }
+        }
+        let chip_of = super::assign_chips_mincut(total, 2, &traffic);
+        for g in 0..3 {
+            let d = chip_of[g * NCS_PER_CC];
+            assert!(
+                (0..NCS_PER_CC).all(|k| chip_of[g * NCS_PER_CC + k] == d),
+                "group {g} split across dies: {chip_of:?}"
+            );
+        }
+        // and the chatty groups 1,2 ended up together
+        assert_eq!(chip_of[8], chip_of[16], "chatty groups split: {chip_of:?}");
+        assert_ne!(chip_of[0], chip_of[8], "balanced cap ignored: {chip_of:?}");
+    }
+
+    #[test]
+    fn mincut_strategy_cuts_less_traffic_than_contiguous() {
+        // SHD forced onto 4 dies (fewer CCs than dies → core units): the
+        // star topology into the single readout core lets MinCut save
+        // one boundary edge vs the contiguous split
+        let net = model::dhsnn_shd(true);
+        let weights = workloads::shd_weights(true, 7);
+        let base = Options {
+            sa_iters: 0,
+            rates: vec![0.012, 0.025, 0.1],
+            strategy: ShardStrategy::Contiguous,
+            ..Default::default()
+        };
+        let contig = compile_sharded(&net, &weights, &base, 4).unwrap();
+        let mincut = compile_sharded(
+            &net,
+            &weights,
+            &Options { strategy: ShardStrategy::MinCut, ..base },
+            4,
+        )
+        .unwrap();
+        assert_eq!(mincut.strategy, ShardStrategy::MinCut);
+        assert!(
+            mincut.cut_traffic < contig.cut_traffic,
+            "MinCut did not reduce the cut: {} vs {}",
+            mincut.cut_traffic,
+            contig.cut_traffic
+        );
+        assert_eq!(
+            mincut.per_chip_cores.iter().sum::<usize>(),
+            contig.per_chip_cores.iter().sum::<usize>(),
+            "strategies must place the same core count"
+        );
+        let cap = mincut.per_chip_cores.iter().sum::<usize>().div_ceil(4);
+        assert!(
+            mincut.per_chip_cores.iter().all(|&c| c <= cap),
+            "balanced capacity violated: {:?}",
+            mincut.per_chip_cores
+        );
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        assert_eq!(ShardStrategy::parse("mincut"), Some(ShardStrategy::MinCut));
+        assert_eq!(
+            ShardStrategy::parse("contiguous"),
+            Some(ShardStrategy::Contiguous)
+        );
+        assert_eq!(ShardStrategy::parse("zigzag"), None);
+        assert_eq!(ShardStrategy::MinCut.to_string(), "mincut");
+        assert_eq!(ShardStrategy::default(), ShardStrategy::MinCut);
+        assert_eq!(ShardStrategy::Contiguous.to_string(), "contiguous");
     }
 
     #[test]

@@ -260,6 +260,8 @@ struct ChipRun {
     outputs: Vec<Vec<HostOutput>>,
     spikes: u64,
     packets: u64,
+    /// Bridge packets this die staged per destination die.
+    remote: Vec<u64>,
 }
 
 fn host_trap(msg: &str) -> Trap {
@@ -284,6 +286,12 @@ pub struct MultiChipDeployment {
     pub chips: Vec<Chip>,
     pub compiled: Arc<ShardedCompiled>,
     bridge: Bridge,
+    /// Cumulative per-edge bridge traffic: `bridge_packets[src][dst]`
+    /// counts the packets die `src` staged for die `dst` since
+    /// deployment (the measured counterpart of the compiler's
+    /// `cut_traffic` estimate and the fast backend's
+    /// [`ChipActivity::remote_packets`]).
+    bridge_packets: Vec<Vec<u64>>,
 }
 
 impl MultiChipDeployment {
@@ -300,6 +308,7 @@ impl MultiChipDeployment {
         }
         Ok(MultiChipDeployment {
             bridge: Bridge::new(chips.len()),
+            bridge_packets: vec![vec![0; chips.len()]; chips.len()],
             chips,
             compiled,
         })
@@ -307,6 +316,13 @@ impl MultiChipDeployment {
 
     pub fn num_chips(&self) -> usize {
         self.chips.len()
+    }
+
+    /// Cumulative per-edge bridge traffic, `[src][dst]`. The diagonal is
+    /// always zero (a die never bridges to itself), and the total equals
+    /// the aggregate [`ChipActivity::remote_packets`].
+    pub fn bridge_traffic(&self) -> &[Vec<u64>] {
+        &self.bridge_packets
     }
 
     /// Run one spike-train sample across all dies.
@@ -393,6 +409,7 @@ impl MultiChipDeployment {
             total.activations += a.activations;
             total.packets += a.packets;
             total.link_traversals += a.link_traversals;
+            total.remote_packets += a.remote_packets;
             total.timesteps = total.timesteps.max(a.timesteps);
         }
         total
@@ -450,15 +467,22 @@ impl MultiChipDeployment {
         let barrier = Barrier::new(n);
         let failed = AtomicBool::new(false);
         let bridge = &self.bridge;
-        let results: Vec<Result<ChipRun, Trap>> = std::thread::scope(|sc| {
+        let results: Vec<(ChipRun, Option<Trap>)> = std::thread::scope(|sc| {
             let mut handles = Vec::new();
             for (i, (chip, chip_inputs)) in
                 self.chips.iter_mut().zip(inputs.iter()).enumerate()
             {
                 let barrier = &barrier;
                 let failed = &failed;
+                // threads return (run, trap) rather than Result so the
+                // per-edge bridge counts a die staged *before* trapping
+                // are still booked — keeping the bridge matrix equal to
+                // the chips' own egress counters even across failures
                 handles.push(sc.spawn(move || {
-                    let mut out = ChipRun::default();
+                    let mut out = ChipRun {
+                        remote: vec![0; n],
+                        ..ChipRun::default()
+                    };
                     let mut res = StepResult::default();
                     let mut pre: Vec<Packet> = Vec::new();
                     let mut post: Vec<Packet> = Vec::new();
@@ -501,6 +525,7 @@ impl MultiChipDeployment {
                                         if let RouteMode::Remote { chip: dst, x, y } =
                                             p.mode
                                         {
+                                            out.remote[dst as usize] += 1;
                                             bridge.stage[parity ^ 1][dst as usize][i]
                                                 .lock()
                                                 .unwrap()
@@ -530,22 +555,40 @@ impl MultiChipDeployment {
                             break;
                         }
                     }
-                    match err {
-                        Some(e) => Err(e),
-                        None => Ok(out),
-                    }
+                    (out, err)
                 }));
             }
             handles
                 .into_iter()
                 .map(|h| {
-                    h.join()
-                        .unwrap_or_else(|_| Err(host_trap("chip worker panicked")))
+                    h.join().unwrap_or_else(|_| {
+                        // the step body is unwind-caught, so a join
+                        // failure is a harness bug; report it with an
+                        // empty (zero-remote) run
+                        (ChipRun::default(), Some(host_trap("chip worker panicked")))
+                    })
                 })
                 .collect()
         });
         self.bridge.parity = (start_parity + t_max) & 1;
-        results.into_iter().collect()
+        // book every die's per-edge bridge counters — including packets a
+        // die staged before trapping — so the bridge matrix stays equal
+        // to the chips' aggregate egress counters across failures
+        let mut runs = Vec::with_capacity(n);
+        let mut first_err = None;
+        for (i, (cr, err)) in results.into_iter().enumerate() {
+            for (dst, &c) in cr.remote.iter().enumerate() {
+                self.bridge_packets[i][dst] += c;
+            }
+            match err {
+                Some(e) => first_err = first_err.or(Some(e)),
+                None => runs.push(cr),
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(runs),
+        }
     }
 }
 

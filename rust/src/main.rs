@@ -6,7 +6,11 @@
 //! * `disasm <file.s>`              — assemble then disassemble (roundtrip view)
 //! * `run-app <ecg|shd|bci>`        — run an application through the unified
 //!                                    `api::Session` pipeline; pick the engine
-//!                                    with `--backend detailed|analytic|sharded[:N]`
+//!                                    with `--backend detailed|analytic|sharded[:N]`,
+//!                                    the multi-die cut with
+//!                                    `--strategy contiguous|mincut` (mincut
+//!                                    default), and the SA die-crossing weight
+//!                                    with `--serdes-cost <hops>`
 //! * `fast <plif|5blocks|resnet19>` — analytic-backend report for the
 //!                                    Table II benchmark nets
 //! * `storage <vgg16|resnet18|…>`   — Fig 14 topology-table storage view
@@ -162,6 +166,13 @@ fn run_app(args: &Args) {
     let n = args.usize("samples", 3);
     let seed = args.u64("seed", 42);
     let backend = backend_flag(args);
+    // sharded-placement knobs: cut strategy + SerDes-crossing SA weight
+    let strategy = args.get("strategy").map(|s| {
+        taibai::compiler::ShardStrategy::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown strategy {s:?} (contiguous|mincut)");
+            std::process::exit(2);
+        })
+    });
 
     let workload: Box<dyn Workload> = match name {
         "ecg" => Box::new(Ecg { heterogeneous: true }),
@@ -173,7 +184,17 @@ fn run_app(args: &Args) {
         }
     };
 
-    let mut session = match workload.session(backend, seed) {
+    let mut builder = workload.taibai(seed).backend(backend);
+    if let Some(s) = strategy {
+        builder = builder.shard_strategy(s);
+    }
+    if args.has("serdes-cost") {
+        builder = builder.serdes_cost(args.f64(
+            "serdes-cost",
+            taibai::compiler::placement::DEFAULT_SERDES_COST,
+        ));
+    }
+    let mut session = match builder.build() {
         Ok(s) => s,
         Err(e) => {
             eprintln!("compile failed: {e}");

@@ -1,0 +1,85 @@
+//! Analytic-vs-measured multi-chip reconciliation (the ROADMAP item:
+//! "`chip::fast` models multi-chip analytically; reconcile its chips>1
+//! estimates with measured `MultiChipDeployment` activity").
+//!
+//! The fast backend estimates cross-die traffic from the contiguous
+//! layer-order layout and balanced CC-group→die split — the same
+//! geometry `compiler::shard` produces under `ShardStrategy::Contiguous`
+//! — so on a workload with *known* firing rates the estimate must land
+//! within a pinned tolerance of the measured bridge counters.
+//!
+//! The wide FC net is driven with every input channel active on every
+//! timestep: each neuron's in-band weight sum (≥ 4 × 0.5) is at least
+//! twice the LIF threshold, so every hidden neuron fires every step and
+//! the per-layer rates are 1.0 by construction, not by assumption.
+
+use taibai::api::{Backend, Sample, ShardStrategy, Taibai};
+use taibai::chip::fast::FastParams;
+use taibai::compiler::Objective;
+use taibai::datasets::SpikeSample;
+use taibai::model;
+
+#[test]
+fn fast_remote_traffic_matches_measured_bridge_counters() {
+    let net = model::wide_fc_net(8, 600, 2, 4);
+    let weights = model::wide_fc_weights(&net, 3);
+    const T: usize = 12;
+    let all_on = Sample::Spikes(SpikeSample {
+        spikes: vec![(0..8u16).collect(); T],
+        labels: vec![0],
+    });
+
+    // ---- measured: detailed lockstep dies, contiguous split ----------
+    let mut measured = Taibai::new(net.clone())
+        .weights(weights)
+        .objective(Objective::Balanced(1))
+        .merge(false)
+        .sa_iters(0)
+        .shard_strategy(ShardStrategy::Contiguous)
+        .backend(Backend::Sharded { chips: 0 })
+        .build()
+        .expect("sharded compile");
+    assert_eq!(measured.info().chips, 2, "wide FC needs exactly 2 dies");
+    measured.run(&all_on).expect("sharded run");
+    let am = measured.activity();
+    assert!(am.remote_packets > 0, "dies never talked");
+    assert_eq!(am.timesteps, T as u64);
+
+    // per-edge counters are consistent with the aggregate
+    let bridge = measured.bridge_traffic().expect("bridge counters");
+    let total: u64 = bridge.iter().flatten().sum();
+    assert_eq!(total, am.remote_packets, "bridge matrix vs aggregate");
+    for (i, row) in bridge.iter().enumerate() {
+        assert_eq!(row[i], 0, "die {i} bridged to itself");
+    }
+    // feed-forward all-on drive: die 0 (early layers) must dominate
+    assert!(bridge[0][1] > bridge[1][0], "traffic direction inverted");
+
+    // ---- estimated: fast backend at the same geometry and rates ------
+    let mut p = FastParams::default();
+    p.nc_neuron_capacity = 1; // Balanced(1): one neuron per core
+    p.firing_rates = vec![1.0, 1.0, 1.0, 0.0]; // saturated by construction
+    let mut fast = Taibai::new(net)
+        .backend(Backend::Analytic)
+        .fast_params(p)
+        .build()
+        .expect("analytic build");
+    assert_eq!(fast.info().chips, 2, "analytic die count diverged");
+    fast.run(&all_on).expect("analytic run");
+    let af = fast.activity();
+    assert!(af.remote_packets > 0, "analytic model predicts no bridge traffic");
+    assert_eq!(af.timesteps, T as u64);
+
+    // ---- pinned tolerance --------------------------------------------
+    // Both sides ran T lockstep steps; the only honest slack is the
+    // pipeline fill (layer 2 starts one step late) and CC-boundary
+    // rounding, both ≪ 25%.
+    let ratio = am.remote_packets as f64 / af.remote_packets as f64;
+    assert!(
+        ratio > 0.75 && ratio < 1.33,
+        "measured {} vs estimated {} remote packets (ratio {ratio:.4}) \
+         outside the pinned [0.75, 1.33] tolerance",
+        am.remote_packets,
+        af.remote_packets
+    );
+}

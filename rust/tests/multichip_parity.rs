@@ -25,35 +25,46 @@
 //!   wakeups, and SEND counts included.
 
 use taibai::api::workloads::{Bci, Ecg, Shd, Workload};
-use taibai::api::{Backend, Sample, Session, Taibai};
+use taibai::api::{Backend, Sample, Session, ShardStrategy, Taibai};
 use taibai::compiler::Objective;
 use taibai::model;
 
-fn build(w: &dyn Workload, backend: Backend, objective: Objective, seed: u64) -> Session {
+fn build(
+    w: &dyn Workload,
+    backend: Backend,
+    objective: Objective,
+    seed: u64,
+    strategy: ShardStrategy,
+) -> Session {
     Taibai::new(w.net())
         .weights(w.weights(seed))
         .rates(w.rates())
         .learning(w.learning())
         .objective(objective)
         .sa_iters(0)
+        .shard_strategy(strategy)
         .backend(backend)
         .build()
         .expect("compile")
 }
 
 /// Run `samples` dataset samples through both engines and pin the
-/// agreed invariant tiers.
-fn assert_parity(
+/// agreed invariant tiers. The `routing`/`full` tiers describe cuts
+/// that preserve the single-die CC grouping, which only the
+/// `Contiguous` strategy guarantees for every workload; `MinCut` cases
+/// pin the always-tier (rows + placement-invariant counters).
+fn assert_parity_with(
     w: &dyn Workload,
     chips: usize,
     objective: Objective,
     samples: usize,
     routing: bool,
     full: bool,
+    strategy: ShardStrategy,
 ) {
     let seed = 11;
-    let mut single = build(w, Backend::Detailed, objective, seed);
-    let mut sharded = build(w, Backend::Sharded { chips }, objective, seed);
+    let mut single = build(w, Backend::Detailed, objective, seed, strategy);
+    let mut sharded = build(w, Backend::Sharded { chips }, objective, seed, strategy);
     assert_eq!(single.info().chips, 1);
     assert_eq!(sharded.info().chips, chips, "forced die count not honored");
     assert_eq!(
@@ -100,6 +111,39 @@ fn assert_parity(
     if full {
         assert_eq!(aa.nc, bb.nc, "{tag}: full NC stats block");
     }
+    // the sharded engine's bridge accounting is self-consistent: the
+    // per-edge matrix sums to the aggregate remote-packet counter
+    let bridge = sharded
+        .bridge_traffic()
+        .expect("sharded backends expose per-edge bridge counters");
+    assert_eq!(bridge.len(), chips);
+    let total: u64 = bridge.iter().flatten().sum();
+    assert_eq!(total, bb.remote_packets, "{tag}: bridge matrix vs aggregate");
+    for (i, row) in bridge.iter().enumerate() {
+        assert_eq!(row[i], 0, "{tag}: die {i} bridged to itself");
+    }
+    assert_eq!(aa.remote_packets, 0, "{tag}: single die minted remote packets");
+}
+
+/// Contiguous-strategy wrapper (the tier expectations below were
+/// calibrated for contiguous cuts).
+fn assert_parity(
+    w: &dyn Workload,
+    chips: usize,
+    objective: Objective,
+    samples: usize,
+    routing: bool,
+    full: bool,
+) {
+    assert_parity_with(
+        w,
+        chips,
+        objective,
+        samples,
+        routing,
+        full,
+        ShardStrategy::Contiguous,
+    );
 }
 
 #[test]
@@ -168,8 +212,20 @@ fn sharded_learning_matches_single_die() {
     // injection, the learning FIRE sweep, and the resulting weight
     // updates must leave both engines with identical readouts
     let w = Bci { subpaths: 8, day: 4 };
-    let mut single = build(&w, Backend::Detailed, Objective::MinCores, 7);
-    let mut sharded = build(&w, Backend::Sharded { chips: 2 }, Objective::MinCores, 7);
+    let mut single = build(
+        &w,
+        Backend::Detailed,
+        Objective::MinCores,
+        7,
+        ShardStrategy::Contiguous,
+    );
+    let mut sharded = build(
+        &w,
+        Backend::Sharded { chips: 2 },
+        Objective::MinCores,
+        7,
+        ShardStrategy::Contiguous,
+    );
     let data = w.dataset(4, 7);
     let err = [0.5f32, -0.25, 0.125, -0.5];
     for (si, s) in data.iter().take(2).enumerate() {
@@ -184,6 +240,197 @@ fn sharded_learning_matches_single_die() {
         single.run(probe).expect("single probe").outputs,
         sharded.run(probe).expect("sharded probe").outputs,
         "post-learning readouts diverged: weight updates not bit-identical"
+    );
+}
+
+// ---------------------------------------------------------------------
+// MinCut strategy: the topology-aware cut must stay invisible to the
+// model — rows bit-identical, placement-invariant counters equal —
+// while shipping no more bridge traffic than the contiguous baseline.
+// ---------------------------------------------------------------------
+
+#[test]
+fn ecg_two_way_mincut_parity() {
+    assert_parity_with(
+        &Ecg { heterogeneous: true },
+        2,
+        Objective::MinCores,
+        1,
+        false,
+        false,
+        ShardStrategy::MinCut,
+    );
+}
+
+#[test]
+fn shd_two_way_mincut_parity() {
+    // 9 cores = 2 CC groups on 2 dies: the balanced capacity forces the
+    // same CC-boundary cut as the contiguous split, so even the full
+    // NC-stats tier must hold
+    assert_parity_with(
+        &Shd { dendrites: true },
+        2,
+        Objective::MinCores,
+        2,
+        true,
+        true,
+        ShardStrategy::MinCut,
+    );
+}
+
+#[test]
+fn bci_two_way_mincut_parity() {
+    assert_parity_with(
+        &Bci { subpaths: 8, day: 2 },
+        2,
+        Objective::MinCores,
+        2,
+        false,
+        false,
+        ShardStrategy::MinCut,
+    );
+}
+
+#[test]
+fn ecg_four_way_mincut_parity() {
+    // recurrent traffic now steers the cut: hidden cores cluster, the
+    // readout follows its sources — rows must not notice
+    assert_parity_with(
+        &Ecg { heterogeneous: true },
+        4,
+        Objective::Balanced(16),
+        1,
+        false,
+        false,
+        ShardStrategy::MinCut,
+    );
+}
+
+#[test]
+fn shd_four_way_mincut_parity() {
+    assert_parity_with(
+        &Shd { dendrites: true },
+        4,
+        Objective::MinCores,
+        2,
+        false,
+        false,
+        ShardStrategy::MinCut,
+    );
+}
+
+#[test]
+fn bci_four_way_mincut_parity() {
+    assert_parity_with(
+        &Bci { subpaths: 8, day: 2 },
+        4,
+        Objective::Balanced(32),
+        2,
+        false,
+        false,
+        ShardStrategy::MinCut,
+    );
+}
+
+#[test]
+fn mincut_learning_matches_single_die() {
+    // the BCI on-chip fine-tune under the topology-aware cut: error
+    // injection, learning sweeps, and weight updates bit-identical
+    let w = Bci { subpaths: 8, day: 4 };
+    let mut single = build(
+        &w,
+        Backend::Detailed,
+        Objective::MinCores,
+        13,
+        ShardStrategy::MinCut,
+    );
+    let mut sharded = build(
+        &w,
+        Backend::Sharded { chips: 2 },
+        Objective::MinCores,
+        13,
+        ShardStrategy::MinCut,
+    );
+    let data = w.dataset(4, 13);
+    let err = [0.25f32, -0.5, 0.375, -0.125];
+    for (si, s) in data.iter().take(2).enumerate() {
+        let ra = single.run(s).expect("single");
+        let rb = sharded.run(s).expect("sharded");
+        assert_eq!(ra.outputs, rb.outputs, "pre-learning sample {si}");
+        single.learn_step(&err).expect("single learn");
+        sharded.learn_step(&err).expect("sharded learn");
+    }
+    let probe = &w.dataset(4, 17)[0];
+    assert_eq!(
+        single.run(probe).expect("single probe").outputs,
+        sharded.run(probe).expect("sharded probe").outputs,
+        "post-learning readouts diverged under MinCut"
+    );
+}
+
+#[test]
+fn mincut_with_serdes_sa_keeps_rows_identical() {
+    // the full tentpole path — MinCut cut points *plus* SerDes-aware SA
+    // over the multi-die slot space — must still be invisible to the
+    // model's outputs and placement-invariant counters
+    let w = Shd { dendrites: true };
+    let seed = 11;
+    let mut single = build(
+        &w,
+        Backend::Detailed,
+        Objective::MinCores,
+        seed,
+        ShardStrategy::MinCut,
+    );
+    let mut sharded = Taibai::new(w.net())
+        .weights(w.weights(seed))
+        .rates(w.rates())
+        .sa_iters(1500)
+        .shard_strategy(ShardStrategy::MinCut)
+        .backend(Backend::Sharded { chips: 2 })
+        .build()
+        .expect("compile");
+    for (si, s) in w.dataset(2, seed).iter().take(2).enumerate() {
+        assert_eq!(
+            single.run(s).expect("single").outputs,
+            sharded.run(s).expect("sharded").outputs,
+            "sample {si}: SerDes-aware SA placement changed the readout"
+        );
+    }
+    let (aa, bb) = (single.activity(), sharded.activity());
+    assert_eq!(aa.nc.sops, bb.nc.sops, "SOPs");
+    assert_eq!(aa.activations, bb.activations, "NC activations");
+}
+
+#[test]
+fn mincut_ships_no_more_bridge_traffic_than_contiguous() {
+    // the tentpole's win, pinned at test level on the 4-way SHD shard:
+    // both the compiler's cut estimate and the measured bridge counters
+    // must come out strictly lower under MinCut
+    let w = Shd { dendrites: true };
+    let seed = 42;
+    let data = w.dataset(2, seed);
+    let mut remote = Vec::new();
+    let mut estimates = Vec::new();
+    for strategy in [ShardStrategy::Contiguous, ShardStrategy::MinCut] {
+        let mut s = build(&w, Backend::Sharded { chips: 4 }, Objective::MinCores, seed, strategy);
+        estimates.push(s.info().cut_traffic);
+        for sample in data.iter().take(2) {
+            s.run(sample).expect("run");
+        }
+        remote.push(s.activity().remote_packets);
+    }
+    assert!(
+        estimates[1] < estimates[0],
+        "MinCut's cut estimate not lower: {} vs {}",
+        estimates[1],
+        estimates[0]
+    );
+    assert!(
+        remote[1] < remote[0],
+        "MinCut shipped no fewer remote packets: {} vs {}",
+        remote[1],
+        remote[0]
     );
 }
 
@@ -231,12 +478,24 @@ fn sharded_run_batch_matches_sequential() {
     // image) and must return the same results in order
     let w = Shd { dendrites: true };
     let data = w.dataset(4, 21);
-    let mut seq = build(&w, Backend::Sharded { chips: 2 }, Objective::MinCores, 21);
+    let mut seq = build(
+        &w,
+        Backend::Sharded { chips: 2 },
+        Objective::MinCores,
+        21,
+        ShardStrategy::MinCut,
+    );
     let mut expected = Vec::new();
     for s in data.iter().take(4) {
         expected.push(seq.run(s).expect("sequential"));
     }
-    let mut par = build(&w, Backend::Sharded { chips: 2 }, Objective::MinCores, 21);
+    let mut par = build(
+        &w,
+        Backend::Sharded { chips: 2 },
+        Objective::MinCores,
+        21,
+        ShardStrategy::MinCut,
+    );
     let got = par.run_batch(&data[..4.min(data.len())]).expect("batch");
     assert_eq!(got.len(), expected.len());
     for (g, e) in got.iter().zip(&expected) {
