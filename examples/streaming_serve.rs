@@ -1,0 +1,82 @@
+//! Streaming + serving: the event-driven face of the `Session` API.
+//!
+//! Part 1 opens a stream on one session and pushes a spoken-digit
+//! sample one timestep at a time, stopping early once the rate decode
+//! is confident — the latency win over batch `run`. Part 2 multiplexes
+//! four clients over a two-deployment `SessionPool`, interleaving their
+//! pushes the way a network front-end would.
+//!
+//! ```sh
+//! cargo run --release --example streaming_serve
+//! ```
+
+use taibai::api::workloads::{Shd, Workload};
+use taibai::api::{Backend, SessionPool, StepEvents, StreamId};
+
+fn main() {
+    let w = Shd { dendrites: true };
+    let data = w.dataset(4, 7);
+
+    // ---- one client, one stream: events in, rows out ----------------
+    let mut session = w.session(Backend::Detailed, 7).expect("compile");
+    let sample = &data[0];
+    let mut stream = session.open_stream().expect("open stream");
+    for t in 0..sample.timesteps() {
+        stream.push(sample.events_at(t)).expect("push");
+        if t >= 8 && stream.confident(0.9) {
+            println!(
+                "confident after {} of {} timesteps — stopping early",
+                stream.steps(),
+                sample.timesteps()
+            );
+            break;
+        }
+    }
+    let report = stream.finish().expect("finish");
+    println!(
+        "decoded class {:?} (label {:?}); {} spikes, mean push {:.1} µs (max {:.1})",
+        report.decision.map(|(c, _)| c),
+        sample.label(),
+        report.spikes,
+        report.latency.mean_us(),
+        report.latency.max_us(),
+    );
+
+    // ---- four clients over a two-deployment pool ---------------------
+    let template = w.session(Backend::Detailed, 7).expect("compile");
+    let mut pool = SessionPool::new(template, 2).expect("pool");
+    let mut waiting: Vec<usize> = (0..4).rev().collect();
+    let mut active: Vec<(StreamId, usize, usize)> = Vec::new(); // (id, sample, t)
+    let mut done = 0;
+    while done < 4 {
+        while let Some(&k) = waiting.last() {
+            match pool.open() {
+                Ok(id) => {
+                    waiting.pop();
+                    active.push((id, k, 0));
+                }
+                Err(_) => break, // pool saturated: client waits its turn
+            }
+        }
+        let mut i = 0;
+        while i < active.len() {
+            let (id, k, t) = active[i];
+            pool.push(id, data[k].events_at(t)).expect("push");
+            if t + 1 >= data[k].timesteps() {
+                let rep = pool.release(id).expect("release");
+                println!(
+                    "client {k}: decoded {:?} vs label {:?} in {} steps",
+                    rep.decision.map(|(c, _)| c),
+                    data[k].label(),
+                    rep.steps
+                );
+                active.swap_remove(i);
+                done += 1;
+            } else {
+                active[i].2 = t + 1;
+                i += 1;
+            }
+        }
+    }
+    println!("{}", pool.stats());
+}

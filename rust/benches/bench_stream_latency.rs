@@ -1,0 +1,111 @@
+//! Stream-latency bench: per-push wall-clock of the event-driven
+//! Session stream on the SHD workload (700 input channels, the widest
+//! paper app).
+//!
+//! The serving story depends on `Stream::push` being cheap and scaling
+//! with the events actually pushed, not with deployment size — the
+//! streaming face of the wake-set sparsity claim. For input sparsity
+//! levels 1%, 10%, and 50% it reports mean/max per-push wall-clock
+//! (from the stream's own `LatencyStats` counters, measured inside
+//! `stream_push`) and spikes per push.
+//!
+//! `--json <path>` writes the per-level measurements as machine-
+//! readable perf JSON (`BENCH_stream.json` in CI, uploaded as an
+//! artifact next to the wakeset and multichip JSONs so the streaming
+//! perf trajectory is tracked across PRs).
+//!
+//! ```sh
+//! cargo bench --bench bench_stream_latency              # full run
+//! cargo bench --bench bench_stream_latency -- \
+//!     --samples 1 --timesteps 20 --json BENCH_stream.json    # CI smoke
+//! ```
+
+use taibai::api::workloads::{Shd, Workload};
+use taibai::api::{Backend, LatencyStats, StepEvents};
+use taibai::bench::Table;
+use taibai::util::cli::Args;
+use taibai::util::json::Json;
+use taibai::util::Rng;
+
+const CHANNELS: usize = 700;
+
+fn main() {
+    let args = Args::from_env();
+    let samples = args.usize("samples", 5);
+    let timesteps = args.usize("timesteps", 100);
+    let seed = args.u64("seed", 42);
+
+    let w = Shd { dendrites: true };
+    let mut session = w
+        .session(Backend::Detailed, seed)
+        .expect("compiling the SHD workload");
+    println!(
+        "SHD streaming deployment: {} cores; {samples} streams x {timesteps} pushes per level\n",
+        session.info().used_cores
+    );
+
+    let mut t = Table::new(&[
+        "input rate",
+        "µs/push mean",
+        "µs/push max",
+        "spikes/push",
+        "pushes",
+    ]);
+    let mut levels = Vec::new();
+    let mut active: Vec<u16> = Vec::new();
+    for &rate in &[0.01, 0.10, 0.50] {
+        let mut rng = Rng::new(seed ^ (rate * 1000.0) as u64);
+        let mut lat = LatencyStats::default();
+        let mut spikes = 0u64;
+        let mut pushes = 0u64;
+        for _ in 0..samples {
+            let mut stream = session.open_stream().expect("opening stream");
+            for _ in 0..timesteps {
+                active.clear();
+                for ch in 0..CHANNELS {
+                    if rng.chance(rate) {
+                        active.push(ch as u16);
+                    }
+                }
+                stream.push(StepEvents::Spikes(&active)).expect("push");
+            }
+            let rep = stream.finish().expect("finishing stream");
+            lat.merge(&rep.latency);
+            spikes += rep.spikes;
+            pushes += rep.steps;
+        }
+        t.row(&[
+            format!("{:>4.0}%", rate * 100.0),
+            format!("{:.2}", lat.mean_us()),
+            format!("{:.2}", lat.max_us()),
+            format!("{:.1}", spikes as f64 / pushes.max(1) as f64),
+            format!("{pushes}"),
+        ]);
+        levels.push(
+            Json::obj()
+                .set("input_rate", rate)
+                .set("us_per_push_mean", lat.mean_us())
+                .set("us_per_push_max", lat.max_us())
+                .set("spikes_per_push", spikes as f64 / pushes.max(1) as f64)
+                .set("pushes", pushes),
+        );
+    }
+    t.print();
+
+    if let Some(path) = args.get("json") {
+        let doc = Json::obj()
+            .set("bench", "stream_latency")
+            .set("samples", samples)
+            .set("timesteps", timesteps)
+            .set("seed", seed)
+            .set("used_cores", session.info().used_cores)
+            .set("levels", Json::Arr(levels));
+        std::fs::write(path, doc.render() + "\n").expect("writing perf JSON");
+        println!("\nperf JSON written to {path}");
+    }
+
+    println!(
+        "\nper-push cost tracks the events pushed (the wake-set sparsity win, \
+         streaming edition) — the latency a SessionPool tenant sees per timestep."
+    );
+}

@@ -1,30 +1,90 @@
-//! The two execution engines behind one trait.
+//! The execution engines behind one incremental trait.
 //!
-//! [`DetailedBackend`] wraps the event-detailed [`crate::chip::Chip`]
-//! via [`Deployment`]; [`AnalyticBackend`] wraps
-//! [`crate::chip::fast::simulate`]. Both surface the same
-//! [`ChipActivity`] counters, so one [`crate::energy::EnergyModel`]
-//! prices either — that invariant is what the fast-vs-detailed parity
-//! tests pin down.
+//! [`ExecBackend`] is the chip's native contract made explicit: open a
+//! stream ([`begin`](ExecBackend::begin)), inject one timestep of events
+//! at a time ([`step`](ExecBackend::step) — emitted output events plus
+//! step-local stats come back in a [`StepOutput`]), close it
+//! ([`finish`](ExecBackend::finish)). Whole-sample execution
+//! ([`run`](ExecBackend::run)) is a provided loop over those three, so
+//! batch and streaming callers are bit-identical by construction.
+//!
+//! Three engines implement it: [`DetailedBackend`] wraps the
+//! event-detailed [`crate::chip::Chip`] via [`Deployment`];
+//! [`MultiChipBackend`] drives a lockstep [`MultiChipDeployment`] one
+//! barrier-step at a time; [`AnalyticBackend`] wraps
+//! [`crate::chip::fast`] with amortized per-step estimates. All surface
+//! the same [`ChipActivity`] counters, so one
+//! [`crate::energy::EnergyModel`] prices any of them — that invariant is
+//! what the fast-vs-detailed parity tests pin down.
 
 use std::sync::Arc;
 
 use crate::chip::fast::{simulate, FastParams, FastReport};
 use crate::chip::{ChipActivity, SchedStats};
 use crate::compiler::{Compiled, ShardedCompiled};
-use crate::coordinator::{Deployment, MultiChipDeployment, SampleRun};
+use crate::coordinator::{Deployment, MultiChipDeployment, SampleRun, StepEvents};
 use crate::energy::{EnergyModel, CLOCK_HZ};
 use crate::model::{Layer, NetDef};
 
 use super::{Backend, RunError, Sample, SessionMetrics};
 
+/// One timestep's result on the way out of a backend: the emitted
+/// output events (decoded into a readout row) plus `StepResult`-derived
+/// stats. Reused across steps by the caller.
+#[derive(Clone, Debug, Default)]
+pub struct StepOutput {
+    /// Readout row this step — one value per output neuron. `None` on
+    /// engines without a per-step readout (the analytic estimator).
+    pub row: Option<Vec<f32>>,
+    /// Spikes minted this step.
+    pub spikes: u64,
+    /// Packets routed this step.
+    pub packets: u64,
+}
+
 /// One execution engine under a [`super::Session`]. Implementations
-/// must be cheap to [`fork`](ExecBackend::fork) so `run_batch` can
-/// parallelize across deployment clones.
+/// must be cheap to [`fork`](ExecBackend::fork) so `run_batch` and
+/// [`super::serve::SessionPool`] can parallelize across deployment
+/// clones.
 pub trait ExecBackend: Send {
-    /// Execute one sample with the dynamic state as-is
-    /// ([`super::Session::run`] resets first).
-    fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError>;
+    /// Open a stream: zero dynamic state and prepare for per-timestep
+    /// injection. Weights and programs survive (per-stream isolation is
+    /// state isolation, not redeployment).
+    fn begin(&mut self) -> Result<(), RunError>;
+
+    /// Inject one timestep of input events and advance the engine one
+    /// step; the step's emitted outputs and stats land in `out`.
+    fn step(&mut self, ev: StepEvents<'_>, out: &mut StepOutput) -> Result<(), RunError>;
+
+    /// Close the stream. The detailed engines are strictly incremental
+    /// and need no finalization; the analytic engine books its
+    /// whole-stream activity estimate here.
+    fn finish(&mut self) -> Result<(), RunError>;
+
+    /// Execute one sample from a clean dynamic state: the provided
+    /// implementation is exactly a `begin` / per-timestep `step` /
+    /// `finish` loop, so batch results are bit-identical to streaming
+    /// the same timesteps.
+    fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
+        self.begin()?;
+        let t_max = sample.timesteps();
+        let mut run = SampleRun {
+            outputs: Vec::with_capacity(t_max),
+            spikes: 0,
+            packets: 0,
+        };
+        let mut out = StepOutput::default();
+        for t in 0..t_max {
+            self.step(sample.events_at(t), &mut out)?;
+            run.spikes += out.spikes;
+            run.packets += out.packets;
+            if let Some(row) = out.row.take() {
+                run.outputs.push(row);
+            }
+        }
+        self.finish()?;
+        Ok(run)
+    }
 
     /// Zero dynamic state (membranes, currents, accumulators); weights
     /// and programs survive. Fails only on a corrupt deployment image
@@ -107,11 +167,20 @@ impl DetailedBackend {
 }
 
 impl ExecBackend for DetailedBackend {
-    fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
-        match sample {
-            Sample::Spikes(s) => self.dep.run_spikes(s).map_err(RunError::Trap),
-            Sample::Dense(d) => self.dep.run_values(d).map_err(RunError::Trap),
-        }
+    fn begin(&mut self) -> Result<(), RunError> {
+        self.reset()
+    }
+
+    fn step(&mut self, ev: StepEvents<'_>, out: &mut StepOutput) -> Result<(), RunError> {
+        let sr = self.dep.step_events(ev).map_err(RunError::Trap)?;
+        out.row = Some(sr.row);
+        out.spikes = sr.spikes;
+        out.packets = sr.packets;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<(), RunError> {
+        Ok(())
     }
 
     fn reset(&mut self) -> Result<(), RunError> {
@@ -170,6 +239,7 @@ impl ExecBackend for DetailedBackend {
             pj_per_sop: self.em.pj_per_sop(a),
             spikes_per_sample: a.nc.spikes_out as f64 / samples as f64,
             sops: a.nc.sops,
+            serdes_energy_j: self.em.energy(a).serdes_j,
         }
     }
 
@@ -189,7 +259,9 @@ impl ExecBackend for DetailedBackend {
 /// [`ExecBackend`] over a multi-die [`MultiChipDeployment`]. Runs the
 /// same event-detailed engine as [`DetailedBackend`] — results are
 /// bit-identical to a single (hypothetically large enough) die — but
-/// spreads the cores of a [`ShardedCompiled`] image across chips.
+/// spreads the cores of a [`ShardedCompiled`] image across chips,
+/// advancing the whole fleet one lockstep barrier-step per
+/// [`step`](ExecBackend::step).
 pub struct MultiChipBackend {
     dep: MultiChipDeployment,
     em: EnergyModel,
@@ -217,11 +289,20 @@ impl MultiChipBackend {
 }
 
 impl ExecBackend for MultiChipBackend {
-    fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
-        match sample {
-            Sample::Spikes(s) => self.dep.run_spikes(s).map_err(RunError::Trap),
-            Sample::Dense(d) => self.dep.run_values(d).map_err(RunError::Trap),
-        }
+    fn begin(&mut self) -> Result<(), RunError> {
+        self.reset()
+    }
+
+    fn step(&mut self, ev: StepEvents<'_>, out: &mut StepOutput) -> Result<(), RunError> {
+        let sr = self.dep.step_events(ev).map_err(RunError::Trap)?;
+        out.row = Some(sr.row);
+        out.spikes = sr.spikes;
+        out.packets = sr.packets;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<(), RunError> {
+        Ok(())
     }
 
     fn reset(&mut self) -> Result<(), RunError> {
@@ -263,7 +344,8 @@ impl ExecBackend for MultiChipBackend {
         // same throughput model as the single-die backend: bottleneck-
         // core cycles plus per-timestep stage-transition overhead (the
         // bridge adds no modeled cycles — SerDes latency hides inside
-        // the stage transition, §IV-B)
+        // the stage transition, §IV-B; SerDes *energy* is priced off
+        // the measured remote-packet counter, see EnergyModel)
         let busy = a.nc.cycles as f64 / used as f64;
         let cycles_per_sample =
             (busy / samples as f64 + (self.timesteps * 24) as f64).max(1.0);
@@ -283,6 +365,7 @@ impl ExecBackend for MultiChipBackend {
             pj_per_sop: self.em.pj_per_sop(a),
             spikes_per_sample: a.nc.spikes_out as f64 / samples as f64,
             sops: a.nc.sops,
+            serdes_energy_j: self.em.energy(a).serdes_j,
         }
     }
 
@@ -314,23 +397,51 @@ impl ExecBackend for MultiChipBackend {
 // Analytic: shape/rate-driven activity counting.
 // ---------------------------------------------------------------------
 
-/// [`ExecBackend`] over the fast analytic engine.
+/// [`ExecBackend`] over the fast analytic engine. Streaming is
+/// estimate-based: each [`step`](ExecBackend::step) reports the
+/// *delta* of the cumulative whole-stream estimate at the stream's
+/// running mean input rate, so per-push stats telescope to exactly
+/// what [`finish`](ExecBackend::finish) books into the accumulated
+/// activity (identical to a batch `run` over the same timesteps),
+/// up to saturation when a rate drop shrinks the cumulative estimate.
 pub struct AnalyticBackend {
     net: NetDef,
+    /// Cached 1-timestep twin of `net`: per-push estimates run the
+    /// analytic model without re-cloning the whole network each step.
+    net1: NetDef,
     params: FastParams,
     em: EnergyModel,
     acc: ChipActivity,
     last: Option<FastReport>,
+    /// Timesteps pushed into the open stream.
+    stream_steps: u64,
+    /// Active input events pushed into the open stream (measured rate).
+    stream_events: u64,
+    /// Cumulative (spikes, packets) estimate after the previous push —
+    /// per-push stats are the deltas against this.
+    prev_cum: (u64, u64),
+    /// Cached 1-step estimate keyed by the layer-0 rate it was computed
+    /// at (`-1.0` = configured rates, which never drift). Configured-
+    /// rate streams pay one `simulate` total; measured-rate streams
+    /// re-simulate only when the running mean actually moves.
+    step_cache: Option<(f64, u64, u64)>,
 }
 
 impl AnalyticBackend {
     pub fn new(net: NetDef, params: FastParams, em: EnergyModel) -> AnalyticBackend {
+        let mut net1 = net.clone();
+        net1.timesteps = 1;
         AnalyticBackend {
             net,
+            net1,
             params,
             em,
             acc: ChipActivity::default(),
             last: None,
+            stream_steps: 0,
+            stream_events: 0,
+            prev_cum: (0, 0),
+            step_cache: None,
         }
     }
 
@@ -340,27 +451,87 @@ impl AnalyticBackend {
             _ => 0,
         }
     }
+
+    /// Measured layer-0 rate over everything pushed so far (matches
+    /// [`Sample::input_rate`] when a whole sample streams through).
+    fn measured_rate(&self) -> f64 {
+        let ch = self.input_channels();
+        if self.stream_steps == 0 || ch == 0 {
+            return 0.0;
+        }
+        self.stream_events as f64 / (self.stream_steps * ch as u64) as f64
+    }
+
+    /// Effective parameters: configured rates win, otherwise the
+    /// measured stream rate drives layer 0.
+    fn effective_params(&self) -> FastParams {
+        let mut p = self.params.clone();
+        if p.firing_rates.is_empty() {
+            p.firing_rates = vec![self.measured_rate()];
+        }
+        p
+    }
 }
 
 impl ExecBackend for AnalyticBackend {
-    fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
-        let mut p = self.params.clone();
-        if p.firing_rates.is_empty() {
-            // no configured rates: measure the input rate off the sample
-            p.firing_rates = vec![sample.input_rate(self.input_channels())];
+    fn begin(&mut self) -> Result<(), RunError> {
+        self.stream_steps = 0;
+        self.stream_events = 0;
+        self.prev_cum = (0, 0);
+        Ok(())
+    }
+
+    fn step(&mut self, ev: StepEvents<'_>, out: &mut StepOutput) -> Result<(), RunError> {
+        let active = match ev {
+            StepEvents::Spikes(a) => a.len(),
+            StepEvents::Dense(row) => row.iter().filter(|&&v| v != 0.0).count(),
+        };
+        self.stream_steps += 1;
+        self.stream_events += active as u64;
+        // Amortized per-step estimate (analytic mode has no readout):
+        // the delta of the cumulative estimate at the current mean
+        // rate, which telescopes to the finish-booked whole-stream
+        // totals. `simulate` scales per-step counters linearly by the
+        // timestep count, so `1-step × k` IS the k-step estimate; the
+        // 1-step figures are cached by the rate they were computed at.
+        let key = if self.params.firing_rates.is_empty() {
+            self.measured_rate()
+        } else {
+            -1.0 // configured rates: the estimate never drifts
+        };
+        let cached = self.step_cache.filter(|&(k0, _, _)| k0 == key);
+        let (spikes1, packets1) = match cached {
+            Some((_, s, p)) => (s, p),
+            None => {
+                let r1 = simulate(&self.net1, &self.effective_params(), &self.em);
+                let v = (r1.activity.nc.spikes_out, r1.activity.packets);
+                self.step_cache = Some((key, v.0, v.1));
+                v
+            }
+        };
+        let k = self.stream_steps;
+        let cum = (spikes1 * k, packets1 * k);
+        out.row = None;
+        out.spikes = cum.0.saturating_sub(self.prev_cum.0);
+        out.packets = cum.1.saturating_sub(self.prev_cum.1);
+        self.prev_cum = cum;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<(), RunError> {
+        if self.stream_steps == 0 {
+            return Ok(());
         }
+        let p = self.effective_params();
         let mut net = self.net.clone();
-        net.timesteps = sample.timesteps().max(1);
+        net.timesteps = self.stream_steps as usize;
         let r = simulate(&net, &p, &self.em);
         super::add_activity(&mut self.acc, &r.activity);
-        let run = SampleRun {
-            // analytic mode has no per-neuron readout; metrics only
-            outputs: Vec::new(),
-            spikes: r.activity.nc.spikes_out,
-            packets: r.activity.packets,
-        };
         self.last = Some(r);
-        Ok(run)
+        self.stream_steps = 0;
+        self.stream_events = 0;
+        self.prev_cum = (0, 0);
+        Ok(())
     }
 
     fn reset(&mut self) -> Result<(), RunError> {
@@ -404,6 +575,7 @@ impl ExecBackend for AnalyticBackend {
             pj_per_sop: self.em.pj_per_sop(a),
             spikes_per_sample: a.nc.spikes_out as f64 / samples as f64,
             sops: a.nc.sops,
+            serdes_energy_j: self.em.energy(a).serdes_j,
         }
     }
 
@@ -453,5 +625,80 @@ mod tests {
             hi.activity().nc.sops,
             lo.activity().nc.sops
         );
+    }
+
+    #[test]
+    fn analytic_stream_equals_analytic_batch() {
+        // begin/step*/finish must book exactly what run() books: the
+        // finish-time estimate measures the same mean rate over the
+        // same timestep count
+        let net = model::dhsnn_shd(true);
+        let s = Sample::poisson(700, 25, 0.05, 9);
+        let mut batch = AnalyticBackend::new(
+            net.clone(),
+            FastParams::default(),
+            EnergyModel::default(),
+        );
+        batch.run(&s).unwrap();
+        let mut stream = AnalyticBackend::new(
+            net,
+            FastParams::default(),
+            EnergyModel::default(),
+        );
+        stream.begin().unwrap();
+        let mut out = StepOutput::default();
+        for t in 0..s.timesteps() {
+            stream.step(s.events_at(t), &mut out).unwrap();
+            assert!(out.row.is_none(), "analytic mode has no readout rows");
+        }
+        stream.finish().unwrap();
+        assert_eq!(batch.activity(), stream.activity());
+    }
+
+    #[test]
+    fn analytic_run_totals_match_booked_activity() {
+        // per-push deltas telescope to the finish-booked whole-stream
+        // estimate, so SampleRun totals track activity() (exact when
+        // the cumulative estimate is monotone; tiny truncation drift
+        // otherwise)
+        let mut be = AnalyticBackend::new(
+            model::dhsnn_shd(true),
+            FastParams::default(),
+            EnergyModel::default(),
+        );
+        let s = Sample::poisson(700, 30, 0.10, 4);
+        let run = be.run(&s).unwrap();
+        let a = be.activity();
+        let drift = |x: u64, y: u64| {
+            (x as f64 - y as f64).abs() / y.max(1) as f64
+        };
+        assert!(
+            drift(run.spikes, a.nc.spikes_out) < 0.02,
+            "spikes drift: run {} vs booked {}",
+            run.spikes,
+            a.nc.spikes_out
+        );
+        assert!(
+            drift(run.packets, a.packets) < 0.02,
+            "packets drift: run {} vs booked {}",
+            run.packets,
+            a.packets
+        );
+    }
+
+    #[test]
+    fn analytic_step_reports_amortized_estimates() {
+        let mut be = AnalyticBackend::new(
+            model::dhsnn_shd(true),
+            FastParams::default(),
+            EnergyModel::default(),
+        );
+        be.begin().unwrap();
+        let mut out = StepOutput::default();
+        let active: Vec<u16> = (0..70).collect(); // 10% of 700 channels
+        be.step(StepEvents::Spikes(&active), &mut out).unwrap();
+        assert!(out.spikes > 0, "a driven step must estimate spikes");
+        be.finish().unwrap();
+        assert!(be.activity().nc.sops > 0);
     }
 }

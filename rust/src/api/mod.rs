@@ -1,16 +1,28 @@
 //! The one way to run anything on TaiBai: a builder-based
-//! compile → deploy → run pipeline.
+//! compile → deploy → run pipeline with a streaming, event-driven
+//! execution contract.
 //!
 //! The paper's pitch is *programmability* — one chip, one compiler
 //! stack, many workloads (§V-B.3: speech, ECG, BCI, brain simulation).
 //! This module is the crate-level expression of that: every workload is
 //! a [`crate::model::NetDef`] plus weights, every execution engine is an
 //! [`ExecBackend`], and a [`Session`] ties one deployment of the former
-//! to one instance of the latter behind a uniform
-//! `run` / `run_batch` / `learn_step` / `metrics` surface.
+//! to one instance of the latter.
+//!
+//! Because the chip's native I/O is per-timestep AER events, the
+//! session's primitive is too: [`Session::open_stream`] yields a
+//! [`Stream`] handle whose [`push`](Stream::push) injects one timestep
+//! of [`StepEvents`] and returns that step's emitted outputs + stats
+//! ([`StepOutput`]). Batch execution ([`Session::run`] /
+//! [`Session::run_batch`]) is a thin wrapper over the same contract, so
+//! streaming a sample one timestep at a time is bit-identical to
+//! running it whole — the `stream_parity` tests pin this. On top of the
+//! stream sits [`serve::SessionPool`], a fixed pool of deployments
+//! multiplexing many concurrent client streams (the "heavy traffic"
+//! serving story).
 //!
 //! ```no_run
-//! use taibai::api::{Backend, Sample, Taibai};
+//! use taibai::api::{Backend, Sample, StepEvents, Taibai};
 //! use taibai::compiler::Objective;
 //! use taibai::model;
 //!
@@ -21,9 +33,18 @@
 //!     .backend(Backend::Detailed)
 //!     .build()
 //!     .expect("compile");
+//!
+//! // batch: one call per sample …
 //! let sample = Sample::poisson(4, 64, 0.3, 7);
 //! let run = session.run(&sample).expect("run");
 //! println!("{} spikes, {:?}", run.spikes, session.metrics());
+//!
+//! // … or streaming: one call per timestep, outputs as they emerge
+//! let mut stream = session.open_stream().expect("open");
+//! let out = stream.push(StepEvents::Spikes(&[0, 2])).expect("push");
+//! println!("row: {:?}", out.row);
+//! let report = stream.finish().expect("finish");
+//! println!("{} steps, mean push {:.1} µs", report.steps, report.latency.mean_us());
 //! ```
 //!
 //! The same builder with `.backend(Backend::Analytic)` yields a session
@@ -32,6 +53,7 @@
 //! interpret event-by-event), feeding the same [`EnergyModel`].
 
 pub mod backend;
+pub mod serve;
 pub mod workloads;
 
 use std::sync::Arc;
@@ -41,13 +63,17 @@ use crate::chip::{ChipActivity, SchedStats};
 use crate::compiler::{self, Options};
 use crate::datasets::{DenseSample, SpikeSample};
 use crate::energy::EnergyModel;
+use crate::metrics::{argmax, softmax};
 use crate::model::NetDef;
 use crate::nc::Trap;
 use crate::util::Rng;
 
 pub use crate::compiler::{CompileError, Objective, ShardStrategy};
-pub use crate::coordinator::SampleRun;
-pub use backend::{AnalyticBackend, DetailedBackend, ExecBackend, MultiChipBackend};
+pub use crate::coordinator::{SampleRun, StepEvents, StepRow};
+pub use backend::{
+    AnalyticBackend, DetailedBackend, ExecBackend, MultiChipBackend, StepOutput,
+};
+pub use serve::{PoolError, PoolStats, SessionPool, StreamId};
 pub use workloads::{evaluate, Workload, WorkloadReport};
 
 /// Which execution engine a [`Session`] drives.
@@ -113,6 +139,15 @@ impl Sample {
         match self {
             Sample::Spikes(s) => s.spikes.len(),
             Sample::Dense(d) => d.values.len(),
+        }
+    }
+
+    /// Borrow timestep `t` of this sample as stream events — the unit
+    /// [`Stream::push`] consumes. Panics when `t >= timesteps()`.
+    pub fn events_at(&self, t: usize) -> StepEvents<'_> {
+        match self {
+            Sample::Spikes(s) => StepEvents::Spikes(&s.spikes[t]),
+            Sample::Dense(d) => StepEvents::Dense(&d.values[t]),
         }
     }
 
@@ -250,7 +285,7 @@ pub struct DeployInfo {
 /// backends from the shared [`ChipActivity`] counters.
 #[derive(Clone, Copy, Debug)]
 pub struct SessionMetrics {
-    /// Samples executed (via `run` + `run_batch`).
+    /// Samples executed (via `run` + `run_batch` + finished streams).
     pub samples: u64,
     pub used_cores: usize,
     pub chips: usize,
@@ -262,6 +297,85 @@ pub struct SessionMetrics {
     pub pj_per_sop: f64,
     pub spikes_per_sample: f64,
     pub sops: u64,
+    /// Die-to-die SerDes energy over the whole session, priced off the
+    /// measured [`ChipActivity::remote_packets`] counter (0 on
+    /// single-die deployments) — the multi-die energy blind spot the
+    /// per-edge bridge counters closed.
+    pub serdes_energy_j: f64,
+}
+
+/// Per-push wall-clock latency counters of one stream.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyStats {
+    pub pushes: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+}
+
+impl LatencyStats {
+    pub(crate) fn record(&mut self, d: std::time::Duration) {
+        let ns = d.as_nanos() as u64;
+        self.pushes += 1;
+        self.total_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Fold another stream's counters in (pool aggregation).
+    pub fn merge(&mut self, o: &LatencyStats) {
+        self.pushes += o.pushes;
+        self.total_ns += o.total_ns;
+        self.max_ns = self.max_ns.max(o.max_ns);
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.pushes == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.pushes as f64 / 1e3
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_ns as f64 / 1e3
+    }
+}
+
+/// Summary of one finished stream.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamReport {
+    /// Timesteps pushed.
+    pub steps: u64,
+    pub spikes: u64,
+    pub packets: u64,
+    /// Per-push wall-clock latency counters.
+    pub latency: LatencyStats,
+    /// Rate-decoded (class, softmax confidence) of the accumulated
+    /// readout; `None` when the stream emitted no rows (analytic mode).
+    pub decision: Option<(usize, f64)>,
+}
+
+/// Rate-decode an accumulated readout sum into (class, confidence).
+fn decode_confidence(summed: &[f32]) -> Option<(usize, f64)> {
+    if summed.is_empty() {
+        return None;
+    }
+    let p = softmax(summed);
+    let k = argmax(&p);
+    Some((k, p[k] as f64))
+}
+
+/// Rolling state of a session's open stream.
+#[derive(Default)]
+struct StreamState {
+    open: bool,
+    /// Reused per-push output (the handle returns a borrow of it).
+    out: StepOutput,
+    /// Accumulated readout sum (rate decoding / early stop).
+    summed: Vec<f32>,
+    steps: u64,
+    spikes: u64,
+    packets: u64,
+    lat: LatencyStats,
 }
 
 /// Builder for a [`Session`]: collect the network, weights, compiler
@@ -415,14 +529,7 @@ impl Taibai {
                         let timesteps = net.timesteps;
                         let be = DetailedBackend::new(report.compiled, em, timesteps)
                             .map_err(|e| CompileError::Deploy { msg: e.to_string() })?;
-                        Ok(Session {
-                            net,
-                            learning: opts.learning,
-                            info,
-                            backend: Box::new(be),
-                            samples_run: 0,
-                            batch_activity: ChipActivity::default(),
-                        })
+                        Ok(Session::over(net, opts.learning, info, Box::new(be)))
                     }
                     // capacity exceeded → shard across just enough dies
                     Err(CompileError::TooManyCores { .. }) => {
@@ -446,14 +553,7 @@ impl Taibai {
                     init_packets: 0,
                 };
                 let be = AnalyticBackend::new(net.clone(), fast, em);
-                Ok(Session {
-                    net,
-                    learning: opts.learning,
-                    info,
-                    backend: Box::new(be),
-                    samples_run: 0,
-                    batch_activity: ChipActivity::default(),
-                })
+                Ok(Session::over(net, opts.learning, info, Box::new(be)))
             }
         }
     }
@@ -484,20 +584,13 @@ fn build_sharded(
     let timesteps = net.timesteps;
     let be = MultiChipBackend::new(sharded, em, timesteps)
         .map_err(|e| CompileError::Deploy { msg: e.to_string() })?;
-    Ok(Session {
-        net,
-        learning: opts.learning,
-        info,
-        backend: Box::new(be),
-        samples_run: 0,
-        batch_activity: ChipActivity::default(),
-    })
+    Ok(Session::over(net, opts.learning, info, Box::new(be)))
 }
 
 /// A deployed, runnable model: one network on one backend.
 ///
-/// Samples are independent by construction — `run` zeroes dynamic state
-/// (membranes, currents, accumulators) before injecting the sample, so
+/// Samples are independent by construction — every stream (and
+/// therefore every `run`) starts from zero dynamic state, so
 /// `run_batch` can fan samples out over std-thread clones of the
 /// deployment and return bit-identical results in order. Weights and
 /// programs persist across runs; `learn_step` mutates the weights of
@@ -511,15 +604,192 @@ pub struct Session {
     samples_run: u64,
     /// Activity contributed by `run_batch` worker clones.
     batch_activity: ChipActivity,
+    /// Rolling state of the open stream (one per session).
+    stream: StreamState,
 }
 
 impl Session {
-    /// Run one sample from a clean dynamic state.
-    pub fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
-        self.backend.reset()?;
-        let run = self.backend.run(sample)?;
+    fn over(
+        net: NetDef,
+        learning: bool,
+        info: DeployInfo,
+        backend: Box<dyn ExecBackend>,
+    ) -> Session {
+        Session {
+            net,
+            learning,
+            info,
+            backend,
+            samples_run: 0,
+            batch_activity: ChipActivity::default(),
+            stream: StreamState::default(),
+        }
+    }
+
+    /// A fresh session over the same deployed image (shared `Arc`
+    /// image, its own chip state and counters; initial weights —
+    /// `learn_step` updates do not carry over). The lever
+    /// [`serve::SessionPool`] multiplies deployments with.
+    pub fn fork(&self) -> Result<Session, RunError> {
+        Ok(Session::over(
+            self.net.clone(),
+            self.learning,
+            self.info.clone(),
+            self.backend.fork()?,
+        ))
+    }
+
+    // ---- the streaming contract -------------------------------------
+
+    /// Open a stream: reset dynamic state and hand out a [`Stream`]
+    /// handle for per-timestep injection. One stream per session at a
+    /// time; opening a new one implicitly abandons (and resets over)
+    /// anything a dropped handle left behind.
+    pub fn open_stream(&mut self) -> Result<Stream<'_>, RunError> {
+        self.stream_begin()?;
+        Ok(Stream { session: self })
+    }
+
+    /// Handle-free stream start ([`serve::SessionPool`] drives many
+    /// sessions through these `stream_*` calls; [`Stream`] is the
+    /// borrowing sugar over them).
+    pub fn stream_begin(&mut self) -> Result<(), RunError> {
+        self.backend.begin()?;
+        let st = &mut self.stream;
+        st.open = true;
+        st.summed.clear();
+        st.steps = 0;
+        st.spikes = 0;
+        st.packets = 0;
+        st.lat = LatencyStats::default();
+        Ok(())
+    }
+
+    /// Push one timestep of events into the open stream and return the
+    /// step's emitted outputs + stats.
+    pub fn stream_push(&mut self, ev: StepEvents<'_>) -> Result<&StepOutput, RunError> {
+        if !self.stream.open {
+            return Err(RunError::Unsupported(
+                "no open stream (open_stream/stream_begin first)",
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        if let Err(e) = self.backend.step(ev, &mut self.stream.out) {
+            // a faulted engine's in-flight state is meaningless (a
+            // multi-die step may have advanced some dies and not
+            // others): poison the stream so continued pushes get a
+            // typed error instead of silently stale deliveries
+            self.stream.open = false;
+            return Err(e);
+        }
+        let st = &mut self.stream;
+        st.lat.record(t0.elapsed());
+        st.steps += 1;
+        st.spikes += st.out.spikes;
+        st.packets += st.out.packets;
+        if let Some(row) = &st.out.row {
+            if st.summed.len() < row.len() {
+                st.summed.resize(row.len(), 0.0);
+            }
+            for (s, v) in st.summed.iter_mut().zip(row) {
+                *s += v;
+            }
+        }
+        Ok(&self.stream.out)
+    }
+
+    /// Rate-decode of everything pushed into the open stream so far:
+    /// (class, softmax confidence). `None` with no open stream or no
+    /// emitted rows — the early-stop signal.
+    pub fn stream_confidence(&self) -> Option<(usize, f64)> {
+        if !self.stream.open {
+            return None;
+        }
+        decode_confidence(&self.stream.summed)
+    }
+
+    /// Close the open stream: finalize the backend (the analytic engine
+    /// books its whole-stream estimate here), count the stream as one
+    /// sample, and summarize it.
+    pub fn stream_finish(&mut self) -> Result<StreamReport, RunError> {
+        if !self.stream.open {
+            return Err(RunError::Unsupported("no open stream to finish"));
+        }
+        self.backend.finish()?;
+        self.stream.open = false;
         self.samples_run += 1;
-        Ok(run)
+        Ok(StreamReport {
+            steps: self.stream.steps,
+            spikes: self.stream.spikes,
+            packets: self.stream.packets,
+            latency: self.stream.lat,
+            decision: decode_confidence(&self.stream.summed),
+        })
+    }
+
+    // ---- batch wrappers over the stream ------------------------------
+
+    /// Run one sample from a clean dynamic state: a thin wrapper that
+    /// opens a stream, pushes every timestep, and closes it — so batch
+    /// results are bit-identical to streaming the same timesteps.
+    pub fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
+        let t_max = sample.timesteps();
+        let mut outputs = Vec::with_capacity(t_max);
+        self.stream_begin()?;
+        for t in 0..t_max {
+            self.stream_push(sample.events_at(t))?;
+            // the summed decode is already booked; move the row out
+            // instead of cloning (the next push rewrites it anyway)
+            if let Some(row) = self.stream.out.row.take() {
+                outputs.push(row);
+            }
+        }
+        let rep = self.stream_finish()?;
+        Ok(SampleRun {
+            outputs,
+            spikes: rep.spikes,
+            packets: rep.packets,
+        })
+    }
+
+    /// [`Session::run`] with confidence-based early stop: stop pushing
+    /// once at least `min_steps` timesteps are in and the rate-decoded
+    /// softmax confidence reaches `threshold` — the streaming latency
+    /// win for easy samples. Returns the (possibly truncated) run and
+    /// the number of timesteps actually pushed.
+    pub fn run_early_stop(
+        &mut self,
+        sample: &Sample,
+        threshold: f64,
+        min_steps: usize,
+    ) -> Result<(SampleRun, u64), RunError> {
+        let t_max = sample.timesteps();
+        let mut outputs = Vec::new();
+        self.stream_begin()?;
+        let mut used = 0u64;
+        for t in 0..t_max {
+            self.stream_push(sample.events_at(t))?;
+            if let Some(row) = self.stream.out.row.take() {
+                outputs.push(row);
+            }
+            used += 1;
+            if t + 1 >= min_steps {
+                if let Some((_, p)) = self.stream_confidence() {
+                    if p >= threshold {
+                        break;
+                    }
+                }
+            }
+        }
+        let rep = self.stream_finish()?;
+        Ok((
+            SampleRun {
+                outputs,
+                spikes: rep.spikes,
+                packets: rep.packets,
+            },
+            used,
+        ))
     }
 
     /// Run many independent samples, in parallel across deployment
@@ -530,19 +800,15 @@ impl Session {
             return Ok(Vec::new());
         }
         // Forks share the compiled image behind an `Arc` and size their
-        // chip state to the model (`Compiled::data_words`), so the old
-        // ~64 MB-per-clone image cap no longer applies. Still bounded so
-        // fork setup (per-worker INIT-stage configuration) cannot dwarf
-        // small batches on very wide hosts. A sharded fork runs one
-        // lockstep thread per die, so weight the worker count by the die
-        // count to keep total threads near the host's parallelism.
+        // chip state to the model (`Compiled::data_words`). Every fork is
+        // single-threaded (sharded deployments step their dies
+        // sequentially), so worker count maps 1:1 onto host parallelism;
+        // still bounded so fork setup (per-worker INIT-stage
+        // configuration) cannot dwarf small batches on very wide hosts.
         const MAX_WORKERS: usize = 32;
-        let threads_per_fork = self.info.chips.max(1);
-        let threads = (std::thread::available_parallelism()
+        let threads = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
-            / threads_per_fork)
-            .max(1)
             .min(MAX_WORKERS)
             .min(samples.len());
         // Learning sessions must see the primary deployment's (possibly
@@ -572,7 +838,7 @@ impl Session {
                     handles.push(sc.spawn(move || {
                         let mut out = Vec::with_capacity(chunk.len());
                         for s in chunk {
-                            be.reset()?;
+                            // `run` starts each sample from a clean state
                             out.push(be.run(s)?);
                         }
                         Ok::<(Vec<SampleRun>, ChipActivity), RunError>((out, be.activity()))
@@ -609,13 +875,16 @@ impl Session {
     }
 
     /// Inject per-output errors and trigger one on-chip learning sweep
-    /// (detailed backend, `learning(true)` deployments).
+    /// (detailed backend, `learning(true)` deployments). Legal mid-
+    /// stream: an open stream sees the updated weights from its next
+    /// push on — the per-stream online-adaptation hook.
     pub fn learn_step(&mut self, errors: &[f32]) -> Result<(), RunError> {
         self.backend.learn_step(errors)
     }
 
-    /// Zero dynamic state explicitly (run() already does this per
-    /// sample; useful mid-protocol, e.g. between fine-tune phases).
+    /// Zero dynamic state explicitly (streams and runs already start
+    /// from a clean state; useful mid-protocol, e.g. between fine-tune
+    /// phases).
     pub fn reset(&mut self) -> Result<(), RunError> {
         self.backend.reset()
     }
@@ -660,9 +929,72 @@ impl Session {
         &self.net
     }
 
-    /// Samples executed so far.
+    /// Samples executed so far (runs + finished streams).
     pub fn samples_run(&self) -> u64 {
         self.samples_run
+    }
+}
+
+/// A borrowing handle over a session's open stream: per-timestep event
+/// injection in, emitted outputs + stats out.
+///
+/// Dropping the handle without [`Stream::finish`] leaves the stream
+/// open; the next `open_stream`/`run` resets over it (nothing is
+/// booked for the abandoned stream).
+pub struct Stream<'s> {
+    session: &'s mut Session,
+}
+
+impl Stream<'_> {
+    /// Inject one timestep of events; the step's readout row and stats
+    /// come back immediately.
+    pub fn push(&mut self, ev: StepEvents<'_>) -> Result<&StepOutput, RunError> {
+        self.session.stream_push(ev)
+    }
+
+    /// Push `steps` quiet timesteps (no input events) and collect the
+    /// rows they emit — flushes in-flight spikes through the pipeline
+    /// latency at end of input.
+    pub fn drain(&mut self, steps: usize) -> Result<Vec<Vec<f32>>, RunError> {
+        let mut rows = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let out = self.session.stream_push(StepEvents::Spikes(&[]))?;
+            if let Some(row) = &out.row {
+                rows.push(row.clone());
+            }
+        }
+        Ok(rows)
+    }
+
+    /// Rate-decode of everything pushed so far: (class, softmax
+    /// confidence). The early-stop signal.
+    pub fn confidence(&self) -> Option<(usize, f64)> {
+        self.session.stream_confidence()
+    }
+
+    /// True once the accumulated decode reaches `threshold` confidence.
+    pub fn confident(&self, threshold: f64) -> bool {
+        self.confidence().is_some_and(|(_, p)| p >= threshold)
+    }
+
+    /// Accumulated readout sum (rate decoding).
+    pub fn summed(&self) -> &[f32] {
+        &self.session.stream.summed
+    }
+
+    /// Timesteps pushed so far.
+    pub fn steps(&self) -> u64 {
+        self.session.stream.steps
+    }
+
+    /// Per-push wall-clock latency counters so far.
+    pub fn latency(&self) -> LatencyStats {
+        self.session.stream.lat
+    }
+
+    /// Close the stream and summarize it (counts as one sample).
+    pub fn finish(self) -> Result<StreamReport, RunError> {
+        self.session.stream_finish()
     }
 }
 
@@ -719,6 +1051,7 @@ mod tests {
         assert_eq!(s.samples_run(), 1);
         let m = s.metrics();
         assert!(m.fps > 0.0 && m.power_w > 0.0);
+        assert_eq!(m.serdes_energy_j, 0.0, "single die pays no SerDes");
     }
 
     #[test]
@@ -734,6 +1067,111 @@ mod tests {
         let b = s.run(&sample).unwrap();
         assert_eq!(a.outputs, b.outputs);
         assert_eq!(a.spikes, b.spikes);
+    }
+
+    #[test]
+    fn stream_push_per_step_matches_run() {
+        // the tentpole contract on the tiny net: one push per timestep
+        // reproduces run() bit-for-bit (the workload-level pins live in
+        // tests/stream_parity.rs)
+        let (net, w) = tiny_net();
+        let sample = Sample::Spikes(SpikeSample {
+            spikes: vec![vec![0u16, 1], vec![], vec![2, 3], vec![0], vec![], vec![1]],
+            labels: vec![0],
+        });
+        let mut a = Taibai::new(net.clone()).weights(w.clone()).build().unwrap();
+        let run = a.run(&sample).unwrap();
+
+        let mut b = Taibai::new(net).weights(w).build().unwrap();
+        let mut stream = b.open_stream().unwrap();
+        let mut rows = Vec::new();
+        for t in 0..sample.timesteps() {
+            let out = stream.push(sample.events_at(t)).unwrap();
+            rows.push(out.row.clone().expect("detailed engine emits rows"));
+        }
+        let rep = stream.finish().unwrap();
+        assert_eq!(run.outputs, rows);
+        assert_eq!(run.spikes, rep.spikes);
+        assert_eq!(run.packets, rep.packets);
+        assert_eq!(rep.steps, 6);
+        assert_eq!(rep.latency.pushes, 6);
+        assert_eq!(a.activity(), b.activity());
+        assert_eq!(b.samples_run(), 1, "a finished stream counts as a sample");
+    }
+
+    #[test]
+    fn streams_are_isolated_and_runs_survive_abandoned_streams() {
+        let (net, w) = tiny_net();
+        let mut s = Taibai::new(net).weights(w).build().unwrap();
+        let sample = Sample::Spikes(SpikeSample {
+            spikes: vec![vec![0u16, 1, 2, 3]; 5],
+            labels: vec![0],
+        });
+        let baseline = s.run(&sample).unwrap();
+        // abandon a half-pushed stream (drop without finish) …
+        {
+            let mut stream = s.open_stream().unwrap();
+            stream.push(sample.events_at(0)).unwrap();
+        }
+        // … the next run still starts from a clean state
+        let again = s.run(&sample).unwrap();
+        assert_eq!(baseline.outputs, again.outputs);
+        // pushing without an open stream is a typed error
+        let err = s.stream_push(StepEvents::Spikes(&[])).unwrap_err();
+        assert!(matches!(err, RunError::Unsupported(_)), "{err}");
+    }
+
+    #[test]
+    fn stream_confidence_drives_early_stop() {
+        let (net, w) = tiny_net();
+        let mut s = Taibai::new(net).weights(w).build().unwrap();
+        // constant drive of channel 0 → readout 0 dominates quickly
+        let sample = Sample::Spikes(SpikeSample {
+            spikes: vec![vec![0u16]; 12],
+            labels: vec![0],
+        });
+        let (run, used) = s.run_early_stop(&sample, 0.55, 3).unwrap();
+        assert!(used >= 3, "must honor min_steps: {used}");
+        assert!(used < 12, "confident sample should stop early: {used}");
+        assert_eq!(run.outputs.len(), used as usize);
+        // the truncated decode still lands on the driven class
+        let full = s.run(&sample).unwrap();
+        assert_eq!(
+            crate::metrics::argmax(&run.summed()),
+            crate::metrics::argmax(&full.summed())
+        );
+    }
+
+    #[test]
+    fn drain_flushes_pipeline_latency() {
+        let (net, w) = tiny_net();
+        let mut s = Taibai::new(net).weights(w).build().unwrap();
+        let mut stream = s.open_stream().unwrap();
+        // burst at t=0 only: the 2-layer pipeline needs 2 more quiet
+        // steps before the readout reflects it
+        stream.push(StepEvents::Spikes(&[0, 1, 2, 3])).unwrap();
+        let rows = stream.drain(3).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(
+            rows.iter().any(|r| r.iter().any(|&v| v != 0.0)),
+            "drained steps must flush the in-flight spikes: {rows:?}"
+        );
+        stream.finish().unwrap();
+    }
+
+    #[test]
+    fn session_fork_shares_image_not_state() {
+        let (net, w) = tiny_net();
+        let mut s = Taibai::new(net).weights(w).build().unwrap();
+        let sample = Sample::Spikes(SpikeSample {
+            spikes: vec![vec![0u16]; 6],
+            labels: vec![0],
+        });
+        let run = s.run(&sample).unwrap();
+        let mut f = s.fork().unwrap();
+        assert_eq!(f.samples_run(), 0);
+        assert_eq!(f.activity().nc.sops, 0, "forks start with clean counters");
+        assert_eq!(f.run(&sample).unwrap().outputs, run.outputs);
     }
 
     #[test]
@@ -824,6 +1262,22 @@ mod tests {
     }
 
     impl ExecBackend for FlakyBackend {
+        fn begin(&mut self) -> Result<(), RunError> {
+            Ok(())
+        }
+
+        fn step(
+            &mut self,
+            _ev: StepEvents<'_>,
+            _out: &mut StepOutput,
+        ) -> Result<(), RunError> {
+            Err(RunError::Unsupported("mock streams through run only"))
+        }
+
+        fn finish(&mut self) -> Result<(), RunError> {
+            Ok(())
+        }
+
         fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
             if sample.timesteps() == self.poison_t {
                 if self.panic_mode {
@@ -871,6 +1325,7 @@ mod tests {
                 pj_per_sop: 0.0,
                 spikes_per_sample: 0.0,
                 sops: 0,
+                serdes_energy_j: 0.0,
             }
         }
 
@@ -881,10 +1336,10 @@ mod tests {
 
     fn flaky_session(poison_t: usize, panic_mode: bool) -> Session {
         let (net, _) = tiny_net();
-        Session {
+        Session::over(
             net,
-            learning: false,
-            info: DeployInfo {
+            false,
+            DeployInfo {
                 backend: Backend::Detailed,
                 used_cores: 1,
                 chips: 1,
@@ -894,14 +1349,12 @@ mod tests {
                 cut_traffic: 0.0,
                 init_packets: 0,
             },
-            backend: Box::new(FlakyBackend {
+            Box::new(FlakyBackend {
                 poison_t,
                 panic_mode,
                 acc: ChipActivity::default(),
             }),
-            samples_run: 0,
-            batch_activity: ChipActivity::default(),
-        }
+        )
     }
 
     fn two_workers_available() -> bool {
@@ -909,6 +1362,23 @@ mod tests {
             .map(|n| n.get())
             .unwrap_or(1)
             >= 2
+    }
+
+    #[test]
+    fn push_fault_poisons_the_stream() {
+        // a mid-push engine fault must not let the stream continue over
+        // meaningless in-flight state (multi-die steps may have advanced
+        // some dies and not others)
+        let mut s = flaky_session(13, false);
+        s.stream_begin().unwrap();
+        // the mock backend's step always faults
+        assert!(s.stream_push(StepEvents::Spikes(&[])).is_err());
+        assert!(matches!(
+            s.stream_push(StepEvents::Spikes(&[])),
+            Err(RunError::Unsupported(msg)) if msg.contains("no open stream")
+        ));
+        assert!(s.stream_finish().is_err(), "poisoned streams must not book");
+        assert_eq!(s.samples_run(), 0);
     }
 
     #[test]

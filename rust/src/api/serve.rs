@@ -1,0 +1,410 @@
+//! Multi-tenant serving: a fixed pool of deployments multiplexing many
+//! concurrent client streams — the first piece of the ROADMAP's
+//! "heavy traffic from millions of users" story.
+//!
+//! A [`SessionPool`] owns N identical deployments of one model —
+//! every slot a pristine [`Session::fork`] of the template's compiled
+//! image (shared behind an `Arc`, per-slot chip state), so no slot can
+//! carry live fine-tune state the others lack. Clients are admitted
+//! **round-robin** over the free
+//! slots ([`SessionPool::open`]); a full pool rejects with
+//! [`PoolError::Saturated`] (counted in [`PoolStats::rejected`]) so the
+//! caller can queue, shed, or scale. Every admitted client gets an
+//! exclusive [`StreamId`]-addressed stream over its slot:
+//! [`push`](SessionPool::push) one timestep of events at a time,
+//! [`release`](SessionPool::release) when done.
+//!
+//! **Per-stream isolation** is state isolation: a stream opens over
+//! zeroed dynamic state, and release scrubs the slot again before it is
+//! re-admitted, so one client's membrane potentials, currents, or
+//! in-flight spikes can never leak into the next tenant's decode — the
+//! `stream_parity` tests pin N interleaved pool streams bit-identical
+//! to N sequential sessions. [`StreamId`]s carry a generation token, so
+//! a stale handle (kept after release) gets [`PoolError::StaleStream`]
+//! instead of silently touching another client's stream.
+//!
+//! The pool is single-threaded by design — one `push` at a time, which
+//! is exactly the event-loop shape of a network server front-end; for
+//! CPU parallelism, shard clients across several pools (sessions are
+//! `Send`, one pool per worker thread).
+//!
+//! ```no_run
+//! use taibai::api::workloads::{Shd, Workload};
+//! use taibai::api::{Backend, SessionPool};
+//!
+//! let w = Shd { dendrites: true };
+//! let template = w.session(Backend::Detailed, 42).expect("compile");
+//! let mut pool = SessionPool::new(template, 4).expect("pool");
+//! let id = pool.open().expect("admit");
+//! let out = pool.push(id, taibai::api::StepEvents::Spikes(&[1, 5, 9])).expect("push");
+//! println!("row: {:?}", out.row);
+//! let report = pool.release(id).expect("release");
+//! println!("decoded: {:?}", report.decision);
+//! println!("{}", pool.stats());
+//! ```
+
+use crate::chip::ChipActivity;
+
+use super::{
+    add_activity, LatencyStats, RunError, Session, StepEvents, StepOutput, StreamReport,
+};
+
+/// Address of one admitted client stream: slot index + generation
+/// token. `Copy` so callers can hold it across pushes; goes stale at
+/// [`SessionPool::release`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamId {
+    slot: usize,
+    token: u64,
+}
+
+impl StreamId {
+    /// The pool slot this stream runs on (stable for the stream's life).
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+}
+
+/// Serving-layer failures, separated from [`RunError`] so admission
+/// control is matchable.
+#[derive(Clone, Debug)]
+pub enum PoolError {
+    /// Every deployment is serving a stream; retry after a release.
+    Saturated,
+    /// The stream id was already released (or never issued) — the slot
+    /// may be serving another tenant now.
+    StaleStream,
+    /// The underlying engine failed.
+    Run(RunError),
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::Saturated => write!(f, "pool saturated: no free deployment"),
+            PoolError::StaleStream => write!(f, "stale stream id"),
+            PoolError::Run(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for PoolError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PoolError::Run(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<RunError> for PoolError {
+    fn from(e: RunError) -> PoolError {
+        PoolError::Run(e)
+    }
+}
+
+/// Aggregate serving counters of a pool.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Deployments in the pool.
+    pub capacity: usize,
+    /// Streams currently open.
+    pub active: usize,
+    /// High-water mark of concurrently open streams.
+    pub peak_active: usize,
+    /// Streams admitted.
+    pub opened: u64,
+    /// Streams finished and released.
+    pub completed: u64,
+    /// Admissions refused because the pool was saturated.
+    pub rejected: u64,
+    /// Timesteps pushed across all completed streams.
+    pub steps: u64,
+    /// Spikes minted across all completed streams.
+    pub spikes: u64,
+    /// Per-push latency counters across all completed streams.
+    pub latency: LatencyStats,
+}
+
+impl std::fmt::Display for PoolStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pool[{}]: {} open ({} peak), {} admitted / {} completed / {} rejected, \
+             {} steps, {:.1} µs/push mean ({:.1} max)",
+            self.capacity,
+            self.active,
+            self.peak_active,
+            self.opened,
+            self.completed,
+            self.rejected,
+            self.steps,
+            self.latency.mean_us(),
+            self.latency.max_us(),
+        )
+    }
+}
+
+struct Slot {
+    session: Session,
+    /// Generation token of the stream holding this slot (`None` = free).
+    stream: Option<u64>,
+}
+
+/// A fixed pool of deployments multiplexing N concurrent client
+/// streams (see the module docs for the serving contract).
+pub struct SessionPool {
+    slots: Vec<Slot>,
+    /// Round-robin admission cursor.
+    rr: usize,
+    next_token: u64,
+    stats: PoolStats,
+}
+
+impl SessionPool {
+    /// Build a pool of `slots` deployments by forking `template`
+    /// (shared compiled image, per-slot chip state); `slots` is clamped
+    /// to ≥ 1. *Every* slot is a pristine fork and the template itself
+    /// is dropped, so the pool is uniform by construction: live
+    /// `learn_step` state on the template (forks always rebuild from
+    /// the compiled image) cannot make one slot decode differently
+    /// from the others. Serving fine-tuned weights means baking them
+    /// into the image (or per-slot `learn_step`) — see ROADMAP.
+    pub fn new(template: Session, slots: usize) -> Result<SessionPool, RunError> {
+        let mut all = Vec::with_capacity(slots.max(1));
+        for _ in 0..slots.max(1) {
+            all.push(Slot {
+                session: template.fork()?,
+                stream: None,
+            });
+        }
+        let capacity = all.len();
+        Ok(SessionPool {
+            slots: all,
+            rr: 0,
+            next_token: 1,
+            stats: PoolStats {
+                capacity,
+                ..PoolStats::default()
+            },
+        })
+    }
+
+    /// Admit one client: round-robin over the free slots, open a stream
+    /// on the chosen deployment (over zeroed state). Fails with
+    /// [`PoolError::Saturated`] when every slot is busy.
+    pub fn open(&mut self) -> Result<StreamId, PoolError> {
+        let n = self.slots.len();
+        for k in 0..n {
+            let i = (self.rr + k) % n;
+            if self.slots[i].stream.is_none() {
+                self.rr = (i + 1) % n;
+                self.slots[i].session.stream_begin().map_err(PoolError::Run)?;
+                let token = self.next_token;
+                self.next_token += 1;
+                self.slots[i].stream = Some(token);
+                self.stats.opened += 1;
+                self.stats.active += 1;
+                self.stats.peak_active = self.stats.peak_active.max(self.stats.active);
+                return Ok(StreamId { slot: i, token });
+            }
+        }
+        self.stats.rejected += 1;
+        Err(PoolError::Saturated)
+    }
+
+    fn check(&self, id: StreamId) -> Result<(), PoolError> {
+        match self.slots.get(id.slot) {
+            Some(s) if s.stream == Some(id.token) => Ok(()),
+            _ => Err(PoolError::StaleStream),
+        }
+    }
+
+    /// Push one timestep of events into a client's stream.
+    pub fn push(
+        &mut self,
+        id: StreamId,
+        ev: StepEvents<'_>,
+    ) -> Result<&StepOutput, PoolError> {
+        self.check(id)?;
+        self.slots[id.slot]
+            .session
+            .stream_push(ev)
+            .map_err(PoolError::Run)
+    }
+
+    /// Rate-decode of a client's stream so far (early-stop signal).
+    pub fn confidence(&self, id: StreamId) -> Result<Option<(usize, f64)>, PoolError> {
+        self.check(id)?;
+        Ok(self.slots[id.slot].session.stream_confidence())
+    }
+
+    /// Finish a client's stream, scrub the slot (reset-on-release: the
+    /// next tenant starts from provably zero state), and free it for
+    /// re-admission. The id goes stale either way.
+    pub fn release(&mut self, id: StreamId) -> Result<StreamReport, PoolError> {
+        self.check(id)?;
+        let slot = &mut self.slots[id.slot];
+        // free the slot first so a finish/reset fault never wedges it
+        slot.stream = None;
+        self.stats.active -= 1;
+        let rep = slot.session.stream_finish().map_err(PoolError::Run)?;
+        slot.session.reset().map_err(PoolError::Run)?;
+        self.stats.completed += 1;
+        self.stats.steps += rep.steps;
+        self.stats.spikes += rep.spikes;
+        self.stats.latency.merge(&rep.latency);
+        Ok(rep)
+    }
+
+    /// Aggregate serving counters.
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// Deployments in the pool.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Streams currently open.
+    pub fn active(&self) -> usize {
+        self.stats.active
+    }
+
+    /// Aggregate chip activity across every deployment in the pool —
+    /// feed to an [`crate::energy::EnergyModel`] for serving-level
+    /// energy accounting.
+    pub fn activity(&self) -> ChipActivity {
+        let mut total = ChipActivity::default();
+        for slot in &self.slots {
+            add_activity(&mut total, &slot.session.activity());
+        }
+        total
+    }
+
+    /// Read-only view of one slot's session (monitoring paths).
+    pub fn session(&self, slot: usize) -> Option<&Session> {
+        self.slots.get(slot).map(|s| &s.session)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Sample, Taibai};
+    use crate::model::{Layer, NetDef, NeuronModel};
+
+    fn tiny_session() -> Session {
+        let mut net = NetDef::new("tiny-serve", 6);
+        net.layers.push(Layer::Input { size: 4 });
+        net.layers.push(Layer::Fc {
+            input: 4,
+            output: 3,
+            neuron: NeuronModel::Lif { tau: 0.5, vth: 0.9 },
+        });
+        net.layers.push(Layer::Fc {
+            input: 3,
+            output: 2,
+            neuron: NeuronModel::Readout { tau: 0.5 },
+        });
+        let mut w1 = vec![0.0f32; 4 * 3];
+        for i in 0..4 {
+            w1[i * 3 + i % 3] = 1.0;
+        }
+        let w2 = vec![0.6, 0.0, 0.6, 0.0, 0.0, 0.6];
+        Taibai::new(net).weights(vec![vec![], w1, w2]).build().unwrap()
+    }
+
+    #[test]
+    fn admission_is_round_robin_and_saturates() {
+        let mut pool = SessionPool::new(tiny_session(), 2).unwrap();
+        assert_eq!(pool.capacity(), 2);
+        let a = pool.open().unwrap();
+        let b = pool.open().unwrap();
+        assert_ne!(a.slot(), b.slot(), "round-robin must spread admissions");
+        match pool.open() {
+            Err(PoolError::Saturated) => {}
+            other => panic!("expected Saturated, got {other:?}"),
+        }
+        assert_eq!(pool.stats().rejected, 1);
+        pool.release(a).unwrap();
+        let c = pool.open().unwrap();
+        assert_eq!(c.slot(), a.slot(), "released slot must be re-admittable");
+        pool.release(b).unwrap();
+        pool.release(c).unwrap();
+        let st = pool.stats();
+        assert_eq!(st.opened, 3);
+        assert_eq!(st.completed, 3);
+        assert_eq!(st.active, 0);
+        assert_eq!(st.peak_active, 2);
+    }
+
+    #[test]
+    fn stale_ids_cannot_touch_a_reused_slot() {
+        let mut pool = SessionPool::new(tiny_session(), 1).unwrap();
+        let a = pool.open().unwrap();
+        pool.release(a).unwrap();
+        let b = pool.open().unwrap();
+        assert_eq!(a.slot(), b.slot(), "one slot: must be reused");
+        match pool.push(a, StepEvents::Spikes(&[0])) {
+            Err(PoolError::StaleStream) => {}
+            other => panic!("expected StaleStream, got {other:?}"),
+        }
+        match pool.release(a) {
+            Err(PoolError::StaleStream) => {}
+            other => panic!("expected StaleStream, got {other:?}"),
+        }
+        pool.push(b, StepEvents::Spikes(&[0])).unwrap();
+        pool.release(b).unwrap();
+    }
+
+    #[test]
+    fn released_slots_leak_no_state_into_the_next_tenant() {
+        let mut pool = SessionPool::new(tiny_session(), 1).unwrap();
+        let sample = Sample::poisson(4, 6, 0.8, 3);
+        // tenant 1: hammer the deployment with a dense stream
+        let a = pool.open().unwrap();
+        for t in 0..sample.timesteps() {
+            pool.push(a, sample.events_at(t)).unwrap();
+        }
+        let loud = pool.release(a).unwrap();
+        assert!(loud.spikes > 0, "tenant 1 should have spiked");
+        // tenant 2: a silent stream must decode to silence
+        let b = pool.open().unwrap();
+        for _ in 0..6 {
+            let out = pool.push(b, StepEvents::Spikes(&[])).unwrap();
+            assert_eq!(out.spikes, 0, "state leaked across release");
+            assert!(
+                out.row.as_ref().unwrap().iter().all(|&v| v == 0.0),
+                "readout leaked across release"
+            );
+        }
+        pool.release(b).unwrap();
+    }
+
+    #[test]
+    fn bad_client_events_fault_one_stream_not_the_pool() {
+        // untrusted per-client input: an out-of-range channel must be a
+        // typed error on that stream, and the pool (and the slot) must
+        // keep serving — not an index panic through the event loop
+        let mut pool = SessionPool::new(tiny_session(), 2).unwrap();
+        let bad = pool.open().unwrap();
+        let good = pool.open().unwrap();
+        match pool.push(bad, StepEvents::Spikes(&[99])) {
+            Err(PoolError::Run(RunError::Trap(t))) => {
+                assert!(t.msg.contains("channel"), "{t}");
+            }
+            other => panic!("expected a typed trap, got {other:?}"),
+        }
+        // the healthy tenant is untouched …
+        pool.push(good, StepEvents::Spikes(&[0])).unwrap();
+        pool.release(good).unwrap();
+        // … and the faulted slot is recoverable: release frees it even
+        // though the poisoned stream has nothing to book
+        assert!(pool.release(bad).is_err());
+        let again = pool.open().unwrap();
+        pool.push(again, StepEvents::Spikes(&[0])).unwrap();
+        pool.release(again).unwrap();
+    }
+}

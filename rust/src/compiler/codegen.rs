@@ -115,6 +115,70 @@ struct Builder<'a> {
     next_tag: u16,
 }
 
+/// Validate the net's skip (residual) connections against what the
+/// detailed engine can lower. A skip `from -> to` shares the
+/// destination's fan-in: source-layer spikes ride the same axon ids as
+/// the destination's regular upstream (`§III-D.6`: delayed and
+/// non-delayed spikes share the fan-out DT), so the source must emit a
+/// plain `0..neurons` axon space exactly matching the destination's
+/// forward fan-in.
+fn validate_skips(net: &NetDef) -> Result<(), CompileError> {
+    for s in &net.skips {
+        let err = |msg: String| CompileError::Skip {
+            from: s.from,
+            to: s.to,
+            msg,
+        };
+        if s.from == 0 || s.from >= s.to || s.to >= net.layers.len() {
+            return Err(err(
+                "endpoints must satisfy 1 <= from < to < layer count".into(),
+            ));
+        }
+        if s.to == s.from + 1 {
+            // delay 0 would duplicate the regular next-layer edge and
+            // silently double the destination's input current
+            return Err(err(
+                "a skip must cross at least one intermediate layer \
+                 (to == from + 1 duplicates the existing edge)"
+                    .into(),
+            ));
+        }
+        if s.delay() > u8::MAX as usize {
+            return Err(err(format!(
+                "delay {} exceeds the 8-bit delay line",
+                s.delay()
+            )));
+        }
+        match &net.layers[s.from] {
+            Layer::Fc { .. } | Layer::Sparse { .. } => {}
+            l => {
+                return Err(err(format!(
+                    "{} source layers do not emit a plain axon space",
+                    kind_name(l)
+                )))
+            }
+        }
+        let expected = match &net.layers[s.to] {
+            Layer::Fc { input, .. } | Layer::Recurrent { input, .. } => *input,
+            l => {
+                return Err(err(format!(
+                    "{} destination layers are not skip targets on the \
+                     detailed engine",
+                    kind_name(l)
+                )))
+            }
+        };
+        let got = net.layers[s.from].neurons();
+        if got != expected {
+            return Err(err(format!(
+                "source emits {got} axons but the destination's fan-in \
+                 expects {expected}"
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Compile a fused network into a chip deployment.
 pub fn codegen(
     net: &NetDef,
@@ -123,6 +187,7 @@ pub fn codegen(
     place: &PlacementMap,
     learning: bool,
 ) -> Result<Compiled, CompileError> {
+    validate_skips(net)?;
     let locs: Vec<(usize, u8)> = (0..merged.cores.len())
         .map(|i| place.global_cc(i))
         .collect();
@@ -691,6 +756,40 @@ impl<'a> Builder<'a> {
                         }
                         _ => None,
                     };
+                    // skip (residual) fan-out: same DT, delayed release
+                    // (§III-D.6 — delayed and non-delayed spikes share
+                    // the fan-out DT). The scheduler holds the spike in
+                    // the minting CC's delay line for `delay` boundary
+                    // ticks, so it lands together with the direct path
+                    // through the intermediate layers.
+                    for skip in self.net.skips.iter().filter(|s| s.from == li) {
+                        let delay = skip.delay();
+                        for (dcc, _) in self.layer_ccs[skip.to].clone() {
+                            let mode = route_between(cc, dcc);
+                            if delay > 0 && matches!(mode, RouteMode::Remote { .. }) {
+                                // the bridge has no ordering rule for
+                                // delay-line releases across dies
+                                return Err(CompileError::CrossDieDelay {
+                                    from: skip.from,
+                                    to: skip.to,
+                                    delay,
+                                });
+                            }
+                            let index = *self.dt_base.get(&(skip.to, dcc)).ok_or(
+                                CompileError::MissingDtBase {
+                                    layer: skip.to,
+                                    cc: dcc,
+                                },
+                            )?;
+                            ies.push(FanOutIE {
+                                mode,
+                                tag: self.fanin_tag(skip.to, dcc)?,
+                                index,
+                                delay: delay as u8,
+                            });
+                            it_len += 1;
+                        }
+                    }
                     for j in 0..part.count {
                         let global = part.n_base + j;
                         let axon = match recurrent_off {
@@ -914,17 +1013,26 @@ mod tests {
     use crate::compiler::placement;
     use crate::model;
 
+    fn try_compile_net(
+        net: &model::NetDef,
+        weights: Vec<Vec<f32>>,
+        learning: bool,
+        neurons_per_nc: usize,
+    ) -> Result<Compiled, CompileError> {
+        let limits = Limits { neurons_per_nc, ..Default::default() };
+        let part = partition(net, &limits);
+        let merged = merge(net, &part, limits.neurons_per_nc, learning);
+        let place = placement::initial(merged.cores.len());
+        codegen(net, &weights, &merged, &place, learning)
+    }
+
     fn compile_net(
         net: &model::NetDef,
         weights: Vec<Vec<f32>>,
         learning: bool,
         neurons_per_nc: usize,
     ) -> Compiled {
-        let limits = Limits { neurons_per_nc, ..Default::default() };
-        let part = partition(net, &limits);
-        let merged = merge(net, &part, limits.neurons_per_nc, learning);
-        let place = placement::initial(merged.cores.len());
-        codegen(net, &weights, &merged, &place, learning).unwrap()
+        try_compile_net(net, weights, learning, neurons_per_nc).unwrap()
     }
 
     fn fc_weights(input: usize, output: usize, w: f32) -> Vec<f32> {
@@ -1010,6 +1118,81 @@ mod tests {
             }
         }
         w
+    }
+
+    fn skip_chain_net() -> (model::NetDef, Vec<Vec<f32>>) {
+        let lif = model::NeuronModel::Lif { tau: 0.5, vth: 1.0 };
+        let mut net = model::NetDef::new("skip-chain", 8);
+        net.layers.push(model::Layer::Input { size: 2 });
+        net.layers.push(model::Layer::Fc { input: 2, output: 2, neuron: lif });
+        net.layers.push(model::Layer::Fc { input: 2, output: 2, neuron: lif });
+        net.layers.push(model::Layer::Fc {
+            input: 2,
+            output: 2,
+            neuron: model::NeuronModel::Readout { tau: 0.9 },
+        });
+        let diag = vec![1.5f32, 0.0, 0.0, 1.5];
+        (net, vec![vec![], diag.clone(), diag.clone(), diag])
+    }
+
+    #[test]
+    fn skip_connections_emit_delayed_fanout_ies() {
+        let (mut net, w) = skip_chain_net();
+        net.skips.push(model::Skip { from: 1, to: 3 });
+        let c = compile_net(&net, w, false, 256);
+        // layer 1's CC must carry a fan-out IE with the skip's delay
+        // (to - from - 1 = 1) next to its delay-0 next-layer edge
+        let cc = c
+            .cores
+            .iter()
+            .find(|m| m.parts.iter().any(|p| p.0 == 1))
+            .expect("layer 1 core")
+            .cc;
+        let it = &c.config.ccs[&cc].tables.fanout_it;
+        assert!(
+            it.iter().any(|ie| ie.delay == 1),
+            "skip delay not emitted: {it:?}"
+        );
+        assert!(it.iter().any(|ie| ie.delay == 0), "direct edge vanished");
+    }
+
+    #[test]
+    fn undelayed_nets_emit_no_delays() {
+        let (net, w) = skip_chain_net();
+        let c = compile_net(&net, w, false, 256);
+        for cc in c.config.ccs.values() {
+            assert!(cc.tables.fanout_it.iter().all(|ie| ie.delay == 0));
+        }
+    }
+
+    #[test]
+    fn malformed_skips_are_typed_errors() {
+        // shape mismatch: source layer emits 2 axons, destination
+        // fan-in expects 3
+        let lif = model::NeuronModel::Lif { tau: 0.5, vth: 1.0 };
+        let mut net = model::NetDef::new("bad-skip", 4);
+        net.layers.push(model::Layer::Input { size: 2 });
+        net.layers.push(model::Layer::Fc { input: 2, output: 2, neuron: lif });
+        net.layers.push(model::Layer::Fc { input: 2, output: 3, neuron: lif });
+        net.layers.push(model::Layer::Fc { input: 3, output: 2, neuron: lif });
+        net.skips.push(model::Skip { from: 1, to: 3 });
+        let w = vec![vec![], vec![0.1; 4], vec![0.1; 6], vec![0.1; 6]];
+        match try_compile_net(&net, w.clone(), false, 256) {
+            Err(CompileError::Skip { from: 1, to: 3, .. }) => {}
+            other => panic!("expected Skip error, got {other:?}"),
+        }
+        // endpoints out of range
+        net.skips[0] = model::Skip { from: 0, to: 2 };
+        match try_compile_net(&net, w.clone(), false, 256) {
+            Err(CompileError::Skip { .. }) => {}
+            other => panic!("expected Skip error, got {other:?}"),
+        }
+        // degenerate adjacent skip would silently double the edge
+        net.skips[0] = model::Skip { from: 1, to: 2 };
+        match try_compile_net(&net, w, false, 256) {
+            Err(CompileError::Skip { .. }) => {}
+            other => panic!("expected Skip error, got {other:?}"),
+        }
     }
 
     #[test]

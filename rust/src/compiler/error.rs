@@ -39,6 +39,25 @@ pub enum CompileError {
     /// The partitioned network needs more neuron cores than one chip
     /// provides; shard the model or relax the objective.
     TooManyCores { cores: usize, capacity: usize },
+    /// A skip (residual) connection the detailed code generator cannot
+    /// lower: bad endpoints, a source/destination layer kind without a
+    /// plain shared axon space, a fan-in shape mismatch, or a delay
+    /// beyond the 8-bit delay line.
+    Skip {
+        from: usize,
+        to: usize,
+        msg: String,
+    },
+    /// A *delayed* skip edge would cross a die boundary. The host
+    /// bridge delivers remote spikes with a fixed one-step latency and
+    /// has no ordering rule for delay-line releases (ROADMAP item), so
+    /// the sharded compiler refuses instead of silently dropping the
+    /// delay. Remedy: a cut that co-locates the skip's endpoints.
+    CrossDieDelay {
+        from: usize,
+        to: usize,
+        delay: usize,
+    },
     /// The front-end fusion pass rejected the op graph (e.g. a BatchNorm
     /// with no preceding linear op, or a malformed BN blob).
     Fusion { op: usize, msg: String },
@@ -89,6 +108,15 @@ impl std::fmt::Display for CompileError {
                 "placement needs {cores} neuron cores but one chip has \
                  {capacity}; shard the model or pick a denser objective"
             ),
+            CompileError::Skip { from, to, msg } => {
+                write!(f, "skip {from}->{to}: {msg}")
+            }
+            CompileError::CrossDieDelay { from, to, delay } => write!(
+                f,
+                "skip {from}->{to} (delay {delay}) crosses a die boundary; the \
+                 bridge has no ordering rule for delayed remote spikes — use a \
+                 cut that co-locates both endpoints"
+            ),
             CompileError::Fusion { op, msg } => write!(f, "op {op}: {msg}"),
             CompileError::Deploy { msg } => {
                 write!(f, "deployment image rejected by the chip: {msg}")
@@ -125,5 +153,13 @@ mod tests {
             capacity: 1056,
         };
         assert!(e.to_string().contains("5000"));
+
+        let e = CompileError::CrossDieDelay {
+            from: 1,
+            to: 3,
+            delay: 1,
+        };
+        let s = e.to_string();
+        assert!(s.contains("1->3") && s.contains("die"), "{s}");
     }
 }

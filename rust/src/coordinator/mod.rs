@@ -5,18 +5,37 @@
 //! samples, and drives the on-chip learning loop (error injection for
 //! the BCI cross-day fine-tune).
 //!
+//! # The incremental step contract
+//!
+//! The chip's native I/O is AER-style and per-timestep, so the
+//! coordinator's primitive is too: [`Deployment::step_events`] takes one
+//! timestep of host events ([`StepEvents`] — active spike channels or a
+//! dense FP row) and returns one [`StepRow`] (the readout row plus
+//! step-local spike/packet counts). Whole-sample entry points
+//! (`run_spikes` / `run_values`) are thin loops over it, which is what
+//! lets the `api` layer expose both batch (`Session::run`) and streaming
+//! (`Session::open_stream`) execution over the same engine with
+//! bit-identical results.
+//!
 //! [`MultiChipDeployment`] is the sharded counterpart: it owns one
-//! [`Chip`] per die of a [`ShardedCompiled`] image and steps them in
-//! lockstep — one std thread per die, one barrier per timestep — while a
-//! host-side bridge carries each die's [`StepResult::egress`] packets
-//! (fan-out edges the compiler marked [`RouteMode::Remote`]) into the
-//! destination die's next step. Cross-die spikes therefore arrive with
-//! exactly the one-timestep latency of on-die NoC delivery, and in the
-//! same ascending-source order, which is what makes a sharded run
-//! bit-identical to the same network on one (hypothetically larger) die.
+//! [`Chip`] per die of a [`ShardedCompiled`] image and advances them in
+//! lockstep one barrier-step at a time. Each step, every die (in
+//! ascending id order) drains its inbound bridge cells — packets from
+//! lower-numbered dies are delivered *before* its own pending spikes,
+//! packets from higher dies and host inputs after, reproducing the
+//! single-die ascending-source order — steps its [`Chip`], and stages the
+//! step's [`StepResult::egress`] packets (fan-out edges the compiler
+//! marked [`RouteMode::Remote`]) for the destination dies' *next* step.
+//! Because the bridge is double-buffered by step parity, a die can never
+//! observe a packet staged in the current step, so stepping the dies
+//! sequentially on the host thread is semantically identical to the
+//! barrier-synchronized thread-per-die variant this replaces — and it
+//! makes single-step streaming cheap (no per-step thread spawn). Cross-
+//! die spikes arrive with exactly the one-timestep latency of on-die NoC
+//! delivery, which is what makes a sharded run bit-identical to the same
+//! network on one (hypothetically larger) die.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::Arc;
 
 use crate::chip::{config::ChipConfig, Chip, ChipActivity, StepResult};
 use crate::compiler::shard::ShardedCompiled;
@@ -24,9 +43,32 @@ use crate::compiler::Compiled;
 use crate::datasets::{DenseSample, SpikeSample};
 use crate::nc::Trap;
 use crate::noc::Packet;
-use crate::scheduler::HostOutput;
 use crate::topology::RouteMode;
 use crate::util::F16;
+
+/// One timestep of host input — the union of the two injection modes of
+/// §III-B, borrowed from the caller (no per-step allocation).
+#[derive(Clone, Copy, Debug)]
+pub enum StepEvents<'a> {
+    /// Active spike channels this timestep (AER-style event list). An
+    /// empty slice is a quiet step (stream drain / idle tick).
+    Spikes(&'a [u16]),
+    /// Dense FP values for every channel; zero bins carry no information
+    /// and are skipped at injection (stay sparse).
+    Dense(&'a [f32]),
+}
+
+/// One timestep's host-visible result: the streaming unit.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepRow {
+    /// Readout row: one value per output neuron (zeros where no readout
+    /// emitted this step).
+    pub row: Vec<f32>,
+    /// Spikes minted this step.
+    pub spikes: u64,
+    /// Packets routed this step.
+    pub packets: u64,
+}
 
 /// A deployed model: chip + compilation metadata. The compiled image is
 /// behind an [`Arc`] so `run_batch` forks share it instead of deep-
@@ -35,6 +77,10 @@ pub struct Deployment {
     pub chip: Chip,
     pub compiled: Arc<Compiled>,
     n_outputs: usize,
+    /// Reused per-step host packet buffer (allocation-free stepping).
+    in_packets: Vec<Packet>,
+    /// Reused per-step chip result.
+    step_res: StepResult,
 }
 
 /// Per-sample run result: readout values per timestep.
@@ -80,6 +126,8 @@ impl Deployment {
             chip,
             compiled,
             n_outputs,
+            in_packets: Vec::new(),
+            step_res: StepResult::default(),
         })
     }
 
@@ -87,25 +135,84 @@ impl Deployment {
         &self.compiled.config
     }
 
-    /// Run one spike-train sample (ECG / SHD style inputs). The input
-    /// packet list and chip step result are reused across timesteps, so
-    /// the per-step loop is allocation-free apart from the readout rows
-    /// it returns.
+    /// Advance one SNN timestep with one timestep of host events and
+    /// collect its readout row — the incremental primitive everything
+    /// else (whole-sample runs, the api layer's streams) wraps. Apart
+    /// from the returned row the step is allocation-free: the host
+    /// packet list and chip step result persist across calls.
+    ///
+    /// Events now arrive straight from untrusted clients (the serving
+    /// pool), so out-of-range channels are a typed [`Trap`], never a
+    /// panic — one bad push must not take down the host process.
+    pub fn step_events(&mut self, ev: StepEvents<'_>) -> Result<StepRow, Trap> {
+        let Deployment {
+            chip,
+            compiled,
+            n_outputs,
+            in_packets,
+            step_res,
+        } = self;
+        in_packets.clear();
+        let channels = compiled.config.input_map.len();
+        match ev {
+            StepEvents::Spikes(active) => {
+                for &ch in active {
+                    let Some(tpls) = compiled.config.input_map.get(ch as usize) else {
+                        return Err(host_trap(format!(
+                            "input channel {ch} outside the {channels}-channel \
+                             input layer"
+                        )));
+                    };
+                    in_packets.extend(tpls.iter().copied());
+                }
+            }
+            StepEvents::Dense(row) => {
+                if row.len() > channels {
+                    return Err(host_trap(format!(
+                        "dense row carries {} values but the input layer has \
+                         {channels} channels",
+                        row.len()
+                    )));
+                }
+                for (ch, &v) in row.iter().enumerate() {
+                    if v == 0.0 {
+                        continue; // zero bins carry no information: stay sparse
+                    }
+                    for tpl in &compiled.config.input_map[ch] {
+                        let mut p = *tpl;
+                        p.payload = F16::from_f32(v).0;
+                        in_packets.push(p);
+                    }
+                }
+            }
+        }
+        chip.step_into(in_packets, step_res)?;
+        let mut row = vec![0.0f32; *n_outputs];
+        for h in &step_res.outputs {
+            if let Some(&k) = compiled.readout.get(&(h.cc, h.nc, h.neuron)) {
+                row[k] = F16(h.value).to_f32();
+            }
+        }
+        Ok(StepRow {
+            row,
+            spikes: step_res.spikes,
+            packets: step_res.packets_routed,
+        })
+    }
+
+    /// Run one spike-train sample (ECG / SHD style inputs): a loop over
+    /// [`Deployment::step_events`].
     pub fn run_spikes(&mut self, sample: &SpikeSample) -> Result<SampleRun, Trap> {
-        let t_max = sample.spikes.len();
         let mut run = SampleRun {
-            outputs: Vec::with_capacity(t_max),
+            outputs: Vec::with_capacity(sample.spikes.len()),
             spikes: 0,
             packets: 0,
         };
-        let mut packets: Vec<Packet> = Vec::new();
-        let mut res = StepResult::default();
-        for t in 0..t_max {
-            packets.clear();
-            for &ch in &sample.spikes[t] {
-                packets.extend(self.compiled.config.input_map[ch as usize].iter().copied());
-            }
-            self.step_into(&packets, &mut res, &mut run)?;
+        for active in &sample.spikes {
+            let sr = self.step_events(StepEvents::Spikes(active))?;
+            run.spikes += sr.spikes;
+            run.packets += sr.packets;
+            run.outputs.push(sr.row);
         }
         Ok(run)
     }
@@ -117,42 +224,13 @@ impl Deployment {
             spikes: 0,
             packets: 0,
         };
-        let mut packets: Vec<Packet> = Vec::new();
-        let mut res = StepResult::default();
         for row in &sample.values {
-            packets.clear();
-            for (ch, &v) in row.iter().enumerate() {
-                if v == 0.0 {
-                    continue; // zero bins carry no information: stay sparse
-                }
-                for tpl in &self.compiled.config.input_map[ch] {
-                    let mut p = *tpl;
-                    p.payload = F16::from_f32(v).0;
-                    packets.push(p);
-                }
-            }
-            self.step_into(&packets, &mut res, &mut run)?;
+            let sr = self.step_events(StepEvents::Dense(row))?;
+            run.spikes += sr.spikes;
+            run.packets += sr.packets;
+            run.outputs.push(sr.row);
         }
         Ok(run)
-    }
-
-    fn step_into(
-        &mut self,
-        packets: &[Packet],
-        res: &mut StepResult,
-        run: &mut SampleRun,
-    ) -> Result<(), Trap> {
-        self.chip.step_into(packets, res)?;
-        run.spikes += res.spikes;
-        run.packets += res.packets_routed;
-        let mut row = vec![0.0f32; self.n_outputs];
-        for h in &res.outputs {
-            if let Some(&k) = self.compiled.readout.get(&(h.cc, h.nc, h.neuron)) {
-                row[k] = F16(h.value).to_f32();
-            }
-        }
-        run.outputs.push(row);
-        Ok(())
     }
 
     /// Inject per-output-neuron errors and trigger the on-chip learning
@@ -214,28 +292,23 @@ impl Deployment {
 // Multi-chip lockstep deployment.
 // ---------------------------------------------------------------------
 
-/// One parity's staging cells, indexed `[dst][src]`.
-type StageCells = Vec<Vec<Mutex<Vec<Packet>>>>;
-
 /// Host-side inter-die packet staging: `stage[parity][dst][src]` holds
 /// the packets die `src` minted during a step of the given parity, to be
 /// delivered to die `dst` in the next step. Double-buffering by step
-/// parity means one barrier per step is enough: writers fill the other
-/// parity while readers drain their own, and each (dst, src) cell has
-/// exactly one writer and one reader per step.
+/// parity is what decouples steps: writers fill the other parity while
+/// readers drain their own, so no die can see a packet staged in the
+/// step that is currently executing — the invariant that makes the
+/// sequential per-die loop equivalent to barrier-synchronized lockstep
+/// threads.
 struct Bridge {
-    stage: [StageCells; 2],
+    stage: [Vec<Vec<Vec<Packet>>>; 2],
     /// Parity of the next lockstep step.
     parity: usize,
 }
 
 impl Bridge {
     fn new(n: usize) -> Bridge {
-        let mk = || {
-            (0..n)
-                .map(|_| (0..n).map(|_| Mutex::new(Vec::new())).collect())
-                .collect()
-        };
+        let mk = || (0..n).map(|_| vec![Vec::new(); n]).collect();
         Bridge {
             stage: [mk(), mk()],
             parity: 0,
@@ -246,42 +319,29 @@ impl Bridge {
         for half in &mut self.stage {
             for row in half {
                 for cell in row {
-                    cell.get_mut().unwrap().clear();
+                    cell.clear();
                 }
             }
         }
     }
 }
 
-/// One die's contribution to a lockstep run.
-#[derive(Clone, Debug, Default)]
-struct ChipRun {
-    /// Host outputs per timestep (die-local CC coordinates).
-    outputs: Vec<Vec<HostOutput>>,
-    spikes: u64,
-    packets: u64,
-    /// Bridge packets this die staged per destination die.
-    remote: Vec<u64>,
-}
-
-fn host_trap(msg: &str) -> Trap {
+fn host_trap(msg: impl Into<String>) -> Trap {
     Trap {
         pc: 0,
-        msg: msg.to_string(),
+        msg: msg.into(),
     }
 }
 
-/// N dies of one sharded model, stepped in lockstep.
+/// N dies of one sharded model, stepped in lockstep one step at a time.
 ///
-/// The run loop spawns one std thread per die. Each timestep, every die
-/// drains its inbound bridge cells (packets from lower-numbered dies are
-/// delivered *before* its own pending spikes, packets from higher dies
-/// and host inputs after — reproducing the single-die ascending-source
-/// delivery order), steps its [`Chip`], stages the step's
-/// [`StepResult::egress`] for the destination dies, and meets the others
-/// at a barrier. State reset, learning, and activity aggregation mirror
-/// the single-die [`Deployment`] surface so the API layer can treat both
-/// uniformly.
+/// Each [`MultiChipDeployment::step_events`] call advances every die by
+/// one timestep in ascending die order (see the module docs for why that
+/// order is unobservable), delivering inbound bridge packets in the
+/// single-die ascending-source order: lower-numbered dies before the
+/// die's own pending spikes, higher-numbered dies and host inputs after.
+/// State reset, learning, and activity aggregation mirror the single-die
+/// [`Deployment`] surface so the API layer can treat both uniformly.
 pub struct MultiChipDeployment {
     pub chips: Vec<Chip>,
     pub compiled: Arc<ShardedCompiled>,
@@ -292,6 +352,14 @@ pub struct MultiChipDeployment {
     /// `cut_traffic` estimate and the fast backend's
     /// [`ChipActivity::remote_packets`]).
     bridge_packets: Vec<Vec<u64>>,
+    /// Reused per-step host packet staging, one cell per die.
+    host_stage: Vec<Vec<Packet>>,
+    /// Reused pre/post injection buffers (bridge packets from lower /
+    /// higher dies, see [`Chip::step_ext`]).
+    pre: Vec<Packet>,
+    post: Vec<Packet>,
+    /// Reused per-die chip step result.
+    step_res: StepResult,
 }
 
 impl MultiChipDeployment {
@@ -309,6 +377,10 @@ impl MultiChipDeployment {
         Ok(MultiChipDeployment {
             bridge: Bridge::new(chips.len()),
             bridge_packets: vec![vec![0; chips.len()]; chips.len()],
+            host_stage: vec![Vec::new(); chips.len()],
+            pre: Vec::new(),
+            post: Vec::new(),
+            step_res: StepResult::default(),
             chips,
             compiled,
         })
@@ -325,37 +397,83 @@ impl MultiChipDeployment {
         &self.bridge_packets
     }
 
-    /// Run one spike-train sample across all dies.
-    pub fn run_spikes(&mut self, sample: &SpikeSample) -> Result<SampleRun, Trap> {
-        let t_max = sample.spikes.len();
-        let mut by_chip = vec![vec![Vec::new(); t_max]; self.chips.len()];
-        for (t, active) in sample.spikes.iter().enumerate() {
-            for &ch in active {
-                for (chip, tpl) in &self.compiled.input_map[ch as usize] {
-                    by_chip[*chip][t].push(*tpl);
+    /// Advance every die by one lockstep timestep with one timestep of
+    /// host events, and collect the fleet's readout row — the multi-die
+    /// counterpart of [`Deployment::step_events`]. Out-of-range client
+    /// events are a typed [`Trap`], never a panic.
+    pub fn step_events(&mut self, ev: StepEvents<'_>) -> Result<StepRow, Trap> {
+        for cell in &mut self.host_stage {
+            cell.clear();
+        }
+        let channels = self.compiled.input_map.len();
+        match ev {
+            StepEvents::Spikes(active) => {
+                for &ch in active {
+                    let Some(tpls) = self.compiled.input_map.get(ch as usize) else {
+                        return Err(host_trap(format!(
+                            "input channel {ch} outside the {channels}-channel \
+                             input layer"
+                        )));
+                    };
+                    for (chip, tpl) in tpls {
+                        self.host_stage[*chip].push(*tpl);
+                    }
+                }
+            }
+            StepEvents::Dense(row) => {
+                if row.len() > channels {
+                    return Err(host_trap(format!(
+                        "dense row carries {} values but the input layer has \
+                         {channels} channels",
+                        row.len()
+                    )));
+                }
+                for (ch, &v) in row.iter().enumerate() {
+                    if v == 0.0 {
+                        continue; // zero bins carry no information: stay sparse
+                    }
+                    for (chip, tpl) in &self.compiled.input_map[ch] {
+                        let mut p = *tpl;
+                        p.payload = F16::from_f32(v).0;
+                        self.host_stage[*chip].push(p);
+                    }
                 }
             }
         }
-        self.run_bridged(&by_chip, t_max)
+        self.step_staged()
+    }
+
+    /// Run one spike-train sample across all dies: a loop over
+    /// [`MultiChipDeployment::step_events`].
+    pub fn run_spikes(&mut self, sample: &SpikeSample) -> Result<SampleRun, Trap> {
+        let mut run = SampleRun {
+            outputs: Vec::with_capacity(sample.spikes.len()),
+            spikes: 0,
+            packets: 0,
+        };
+        for active in &sample.spikes {
+            let sr = self.step_events(StepEvents::Spikes(active))?;
+            run.spikes += sr.spikes;
+            run.packets += sr.packets;
+            run.outputs.push(sr.row);
+        }
+        Ok(run)
     }
 
     /// Run one dense-valued sample (FP input mode) across all dies.
     pub fn run_values(&mut self, sample: &DenseSample) -> Result<SampleRun, Trap> {
-        let t_max = sample.values.len();
-        let mut by_chip = vec![vec![Vec::new(); t_max]; self.chips.len()];
-        for (t, row) in sample.values.iter().enumerate() {
-            for (ch, &v) in row.iter().enumerate() {
-                if v == 0.0 {
-                    continue; // zero bins carry no information: stay sparse
-                }
-                for (chip, tpl) in &self.compiled.input_map[ch] {
-                    let mut p = *tpl;
-                    p.payload = F16::from_f32(v).0;
-                    by_chip[*chip][t].push(p);
-                }
-            }
+        let mut run = SampleRun {
+            outputs: Vec::with_capacity(sample.values.len()),
+            spikes: 0,
+            packets: 0,
+        };
+        for row in &sample.values {
+            let sr = self.step_events(StepEvents::Dense(row))?;
+            run.spikes += sr.spikes;
+            run.packets += sr.packets;
+            run.outputs.push(sr.row);
         }
-        self.run_bridged(&by_chip, t_max)
+        Ok(run)
     }
 
     /// Inject per-output errors on the head die(s) and run one lockstep
@@ -363,14 +481,16 @@ impl MultiChipDeployment {
     /// [`Deployment::learn_step`].
     pub fn learn_step(&mut self, errors: &[f32]) -> Result<(), Trap> {
         assert_eq!(errors.len(), self.compiled.error_map.len());
-        let mut by_chip = vec![vec![Vec::new(); 1]; self.chips.len()];
+        for cell in &mut self.host_stage {
+            cell.clear();
+        }
         for (k, &e) in errors.iter().enumerate() {
             let (chip, tpl) = self.compiled.error_map[k];
             let mut p = tpl;
             p.payload = F16::from_f32(e).0;
-            by_chip[chip][0].push(p);
+            self.host_stage[chip].push(p);
         }
-        self.run_lockstep(&by_chip, 1, false)?;
+        self.step_staged()?;
         Ok(())
     }
 
@@ -420,175 +540,68 @@ impl MultiChipDeployment {
         self.chips.iter().map(|c| c.activity()).collect()
     }
 
-    fn run_bridged(
-        &mut self,
-        inputs: &[Vec<Vec<Packet>>],
-        t_max: usize,
-    ) -> Result<SampleRun, Trap> {
-        let runs = self.run_lockstep(inputs, t_max, true)?;
-        let mut run = SampleRun {
-            outputs: Vec::with_capacity(t_max),
+    /// The lockstep core: one timestep of every die over the staged host
+    /// packets (`host_stage`), in ascending die order. A [`Trap`] on die
+    /// `i` leaves earlier dies already stepped — in-flight state is
+    /// meaningless after a fault, so callers recover via `reset_state`
+    /// (per-edge bridge counters booked before the fault are kept, which
+    /// is what keeps the bridge matrix equal to the chips' own egress
+    /// counters even across failures).
+    fn step_staged(&mut self) -> Result<StepRow, Trap> {
+        let n = self.chips.len();
+        let parity = self.bridge.parity;
+        self.bridge.parity ^= 1;
+        let MultiChipDeployment {
+            chips,
+            compiled,
+            bridge,
+            bridge_packets,
+            host_stage,
+            pre,
+            post,
+            step_res,
+        } = self;
+        let mut out = StepRow {
+            row: vec![0.0f32; compiled.n_outputs],
             spikes: 0,
             packets: 0,
         };
-        for cr in &runs {
-            run.spikes += cr.spikes;
-            run.packets += cr.packets;
-        }
-        for t in 0..t_max {
-            let mut row = vec![0.0f32; self.compiled.n_outputs];
-            for (i, cr) in runs.iter().enumerate() {
-                for h in &cr.outputs[t] {
-                    if let Some(&k) =
-                        self.compiled.chips[i].readout.get(&(h.cc, h.nc, h.neuron))
-                    {
-                        row[k] = F16(h.value).to_f32();
-                    }
+        for i in 0..n {
+            // Inbound bridge packets: lower-numbered dies land before
+            // this die's own pending spikes, higher-numbered dies and
+            // host inputs after — the single-die ascending-source order.
+            pre.clear();
+            post.clear();
+            for src in 0..n {
+                let cell = &mut bridge.stage[parity][i][src];
+                if src < i {
+                    pre.append(cell);
+                } else if src > i {
+                    post.append(cell);
                 }
             }
-            run.outputs.push(row);
-        }
-        Ok(run)
-    }
-
-    /// The lockstep core: one thread per die, one barrier per timestep.
-    /// `inputs[die][t]` are host packets injected into that die at step
-    /// `t`. On a trap, every thread exits at the same barrier round so
-    /// nobody is left waiting; the first trap wins.
-    fn run_lockstep(
-        &mut self,
-        inputs: &[Vec<Vec<Packet>>],
-        t_max: usize,
-        collect: bool,
-    ) -> Result<Vec<ChipRun>, Trap> {
-        let n = self.chips.len();
-        debug_assert_eq!(inputs.len(), n);
-        let start_parity = self.bridge.parity;
-        let barrier = Barrier::new(n);
-        let failed = AtomicBool::new(false);
-        let bridge = &self.bridge;
-        let results: Vec<(ChipRun, Option<Trap>)> = std::thread::scope(|sc| {
-            let mut handles = Vec::new();
-            for (i, (chip, chip_inputs)) in
-                self.chips.iter_mut().zip(inputs.iter()).enumerate()
-            {
-                let barrier = &barrier;
-                let failed = &failed;
-                // threads return (run, trap) rather than Result so the
-                // per-edge bridge counts a die staged *before* trapping
-                // are still booked — keeping the bridge matrix equal to
-                // the chips' own egress counters even across failures
-                handles.push(sc.spawn(move || {
-                    let mut out = ChipRun {
-                        remote: vec![0; n],
-                        ..ChipRun::default()
-                    };
-                    let mut res = StepResult::default();
-                    let mut pre: Vec<Packet> = Vec::new();
-                    let mut post: Vec<Packet> = Vec::new();
-                    let mut err: Option<Trap> = None;
-                    for t in 0..t_max {
-                        let parity = (start_parity + t) & 1;
-                        if err.is_none() {
-                            // A panic escaping past `barrier.wait()` would
-                            // leave the other dies waiting forever, so the
-                            // step body is unwind-caught and converted into
-                            // the same trap path a chip fault takes (this
-                            // also absorbs the lock-poisoning panics a
-                            // peer's panic can induce).
-                            let step = std::panic::catch_unwind(
-                                std::panic::AssertUnwindSafe(|| -> Result<(), Trap> {
-                                    // Inbound bridge packets: lower-numbered
-                                    // dies land before this die's own pending
-                                    // spikes, higher-numbered dies and host
-                                    // inputs after — the single-die
-                                    // ascending-source order.
-                                    pre.clear();
-                                    post.clear();
-                                    for src in 0..n {
-                                        let mut cell =
-                                            bridge.stage[parity][i][src].lock().unwrap();
-                                        if src < i {
-                                            pre.append(&mut cell);
-                                        } else if src > i {
-                                            post.append(&mut cell);
-                                        }
-                                    }
-                                    post.extend_from_slice(&chip_inputs[t]);
-                                    chip.step_ext(&pre, &post, &mut res)?;
-                                    out.spikes += res.spikes;
-                                    out.packets += res.packets_routed;
-                                    if collect {
-                                        out.outputs.push(res.outputs.clone());
-                                    }
-                                    for p in &res.egress {
-                                        if let RouteMode::Remote { chip: dst, x, y } =
-                                            p.mode
-                                        {
-                                            out.remote[dst as usize] += 1;
-                                            bridge.stage[parity ^ 1][dst as usize][i]
-                                                .lock()
-                                                .unwrap()
-                                                .push(Packet {
-                                                    mode: RouteMode::Unicast { x, y },
-                                                    ..*p
-                                                });
-                                        }
-                                    }
-                                    Ok(())
-                                }),
-                            );
-                            match step {
-                                Ok(Ok(())) => {}
-                                Ok(Err(e)) => {
-                                    err = Some(e);
-                                    failed.store(true, Ordering::SeqCst);
-                                }
-                                Err(_) => {
-                                    err = Some(host_trap("chip worker panicked"));
-                                    failed.store(true, Ordering::SeqCst);
-                                }
-                            }
-                        }
-                        barrier.wait();
-                        if failed.load(Ordering::SeqCst) {
-                            break;
-                        }
-                    }
-                    (out, err)
-                }));
+            post.extend_from_slice(&host_stage[i]);
+            chips[i].step_ext(pre, post, step_res)?;
+            out.spikes += step_res.spikes;
+            out.packets += step_res.packets_routed;
+            for h in &step_res.outputs {
+                if let Some(&k) = compiled.chips[i].readout.get(&(h.cc, h.nc, h.neuron))
+                {
+                    out.row[k] = F16(h.value).to_f32();
+                }
             }
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join().unwrap_or_else(|_| {
-                        // the step body is unwind-caught, so a join
-                        // failure is a harness bug; report it with an
-                        // empty (zero-remote) run
-                        (ChipRun::default(), Some(host_trap("chip worker panicked")))
-                    })
-                })
-                .collect()
-        });
-        self.bridge.parity = (start_parity + t_max) & 1;
-        // book every die's per-edge bridge counters — including packets a
-        // die staged before trapping — so the bridge matrix stays equal
-        // to the chips' aggregate egress counters across failures
-        let mut runs = Vec::with_capacity(n);
-        let mut first_err = None;
-        for (i, (cr, err)) in results.into_iter().enumerate() {
-            for (dst, &c) in cr.remote.iter().enumerate() {
-                self.bridge_packets[i][dst] += c;
-            }
-            match err {
-                Some(e) => first_err = first_err.or(Some(e)),
-                None => runs.push(cr),
+            // Stage this die's cross-die egress for the next step.
+            for p in &step_res.egress {
+                if let RouteMode::Remote { chip: dst, x, y } = p.mode {
+                    bridge_packets[i][dst as usize] += 1;
+                    bridge.stage[parity ^ 1][dst as usize][i].push(Packet {
+                        mode: RouteMode::Unicast { x, y },
+                        ..*p
+                    });
+                }
             }
         }
-        match first_err {
-            Some(e) => Err(e),
-            None => Ok(runs),
-        }
+        Ok(out)
     }
 }
 
@@ -655,6 +668,34 @@ mod tests {
             summed[0] > summed[1],
             "readout 0 should dominate: {summed:?}"
         );
+    }
+
+    #[test]
+    fn step_events_is_the_run_spikes_loop_body() {
+        // pushing the sample one timestep at a time must be bit-identical
+        // to the whole-sample entry point (the streaming contract)
+        let (net, weights) = tiny_net();
+        let sample = SpikeSample {
+            spikes: vec![vec![0u16, 2], vec![], vec![1, 3], vec![], vec![0]],
+            labels: vec![0],
+        };
+        let mut whole = deploy(&net, &weights, false);
+        let run = whole.run_spikes(&sample).unwrap();
+
+        let mut stepped = deploy(&net, &weights, false);
+        let mut rows = Vec::new();
+        let mut spikes = 0u64;
+        let mut packets = 0u64;
+        for active in &sample.spikes {
+            let sr = stepped.step_events(StepEvents::Spikes(active)).unwrap();
+            rows.push(sr.row);
+            spikes += sr.spikes;
+            packets += sr.packets;
+        }
+        assert_eq!(run.outputs, rows);
+        assert_eq!(run.spikes, spikes);
+        assert_eq!(run.packets, packets);
+        assert_eq!(whole.chip.activity(), stepped.chip.activity());
     }
 
     #[test]

@@ -34,6 +34,13 @@ pub struct EnergyModel {
     pub e_hop: f64,
     /// NC wake-up (pipeline refill) event.
     pub e_wakeup: f64,
+    /// One 72-bit packet crossing a die-to-die SerDes link (both PHYs +
+    /// the edge-proxy hop). Priced off the *measured*
+    /// [`ChipActivity::remote_packets`] counter, and calibrated to the
+    /// placement optimizer's crossing weight so the SA objective
+    /// (`DEFAULT_SERDES_COST` = 64 hop-equivalents) literally minimizes
+    /// SerDes energy: 64 × `e_hop` = 35.2 pJ.
+    pub e_serdes: f64,
     /// Die static power, watts (leakage + clock tree at 0.9 V).
     pub p_static_w: f64,
 }
@@ -48,6 +55,7 @@ impl Default for EnergyModel {
             e_table: 0.350,
             e_hop: 0.550,
             e_wakeup: 0.150,
+            e_serdes: 35.2,
             p_static_w: 0.35,
         }
     }
@@ -64,11 +72,18 @@ pub struct EnergyBreakdown {
     pub memory_j: f64,
     pub router_j: f64,
     pub wakeup_j: f64,
+    /// Die-to-die SerDes crossings (multi-die deployments; 0 on one die).
+    pub serdes_j: f64,
 }
 
 impl EnergyBreakdown {
     pub fn dynamic_j(&self) -> f64 {
-        self.nc_logic_j + self.alu_j + self.memory_j + self.router_j + self.wakeup_j
+        self.nc_logic_j
+            + self.alu_j
+            + self.memory_j
+            + self.router_j
+            + self.wakeup_j
+            + self.serdes_j
     }
 
     /// Fraction of dynamic energy spent in memory (Fig 13c's headline).
@@ -85,6 +100,7 @@ impl EnergyBreakdown {
             ("alu", self.alu_j / d),
             ("router", self.router_j / d),
             ("wakeup/ctrl", self.wakeup_j / d),
+            ("serdes", self.serdes_j / d),
         ]
     }
 }
@@ -103,6 +119,7 @@ impl EnergyModel {
                 * pj,
             router_j: a.link_traversals as f64 * self.e_hop * pj,
             wakeup_j: a.nc.wakeups as f64 * self.e_wakeup * pj,
+            serdes_j: a.remote_packets as f64 * self.e_serdes * pj,
         }
     }
 
@@ -194,6 +211,25 @@ mod tests {
         let m = EnergyModel::default();
         let a = ChipActivity::default();
         assert_eq!(m.power_w(&a, 0), m.p_static_w);
+    }
+
+    #[test]
+    fn serdes_energy_prices_measured_remote_packets() {
+        // the multi-die blind spot, closed: bridge traffic costs energy
+        let m = EnergyModel::default();
+        let mut a = dense_sop_activity(1000);
+        let base = m.energy(&a).dynamic_j();
+        assert_eq!(m.energy(&a).serdes_j, 0.0, "single die pays no SerDes");
+        a.remote_packets = 500;
+        let e = m.energy(&a);
+        assert!((e.serdes_j - 500.0 * 35.2e-12).abs() < 1e-18);
+        assert!(
+            e.dynamic_j() > base,
+            "remote packets must raise dynamic energy"
+        );
+        // a cut that halves bridge traffic halves the SerDes bucket
+        a.remote_packets = 250;
+        assert!((m.energy(&a).serdes_j * 2.0 - e.serdes_j).abs() < 1e-18);
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //! [`api::Taibai`] builder, then drive the resulting [`api::Session`]:
 //!
 //! ```no_run
-//! use taibai::api::{evaluate, Backend, Workload};
+//! use taibai::api::{evaluate, Backend, StepEvents, Workload};
 //! use taibai::api::workloads::Shd;
 //!
 //! let workload = Shd { dendrites: true };
@@ -36,10 +36,23 @@
 //! let mut multi = workload.session(Backend::Sharded { chips: 2 }, 42).expect("compile");
 //! // … or the fast analytic model (Table II-scale nets)
 //! let mut fast = workload.session(Backend::Analytic, 42).expect("deploy");
+//!
+//! // the chip's native I/O is per-timestep events, and so is the API:
+//! // stream one timestep at a time (bit-identical to batch `run`)
+//! let mut stream = chip.open_stream().expect("open");
+//! let out = stream.push(StepEvents::Spikes(&[3, 17, 101])).expect("push");
+//! println!("readout row: {:?}", out.row);
+//! stream.finish().expect("finish");
 //! ```
 //!
-//! See `rust/README.md` for the builder-level quickstart and the
-//! migration map from the pre-`Session` free functions.
+//! Many concurrent clients multiplex over a fixed set of deployments
+//! through [`api::serve::SessionPool`] (round-robin admission,
+//! per-stream isolation, aggregate serving stats).
+//!
+//! See `rust/README.md` for the builder-level quickstart, the streaming
+//! and serving sections, and the migration map from the pre-`Session`
+//! free functions (the deprecated `apps::*` shims are gone; see
+//! CHANGES.md for the old → new call map).
 //!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT C API
 //! (`xla` crate) when the optional `pjrt` feature is enabled; the default
@@ -61,5 +74,4 @@ pub mod runtime;
 pub mod coordinator;
 pub mod metrics;
 pub mod api;
-pub mod apps;
 pub mod bench;

@@ -13,14 +13,24 @@
 //!                                    with `--serdes-cost <hops>`
 //! * `fast <plif|5blocks|resnet19>` — analytic-backend report for the
 //!                                    Table II benchmark nets
+//! * `serve-demo <ecg|shd|bci>`     — multi-tenant streaming: N client
+//!                                    streams multiplexed over a fixed
+//!                                    `api::serve::SessionPool` (`--pool`,
+//!                                    `--clients`, `--confidence <p>` for
+//!                                    early-stop decoding)
 //! * `storage <vgg16|resnet18|…>`   — Fig 14 topology-table storage view
 //! * `baseline <model.hlo.txt>`     — load + execute an AOT artifact via PJRT
 //!                                    (requires the `pjrt` feature)
 
-use taibai::api::{evaluate, Backend, Sample, Taibai, Workload};
+use std::collections::VecDeque;
+
 use taibai::api::workloads::{Bci, Ecg, Shd};
+use taibai::api::{
+    evaluate, Backend, Sample, SessionPool, StreamId, Taibai, Workload,
+};
 use taibai::bench::Table;
 use taibai::energy::EnergyModel;
+use taibai::metrics::accuracy;
 use taibai::model;
 use taibai::topology::storage::{storage, ALL_SCHEMES};
 use taibai::util::cli::Args;
@@ -34,9 +44,22 @@ fn main() {
         "fast" => fast(&args),
         "storage" => storage_cmd(&args),
         "run-app" => run_app(&args),
+        "serve-demo" => serve_demo(&args),
         "baseline" => baseline(&args),
         other => {
             eprintln!("unknown command {other:?}; see rust/src/main.rs header");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn workload_by_name(name: &str) -> Box<dyn Workload> {
+    match name {
+        "ecg" => Box::new(Ecg { heterogeneous: true }),
+        "shd" => Box::new(Shd { dendrites: true }),
+        "bci" => Box::new(Bci::default()),
+        other => {
+            eprintln!("unknown app {other:?} (ecg|shd|bci)");
             std::process::exit(2);
         }
     }
@@ -174,15 +197,7 @@ fn run_app(args: &Args) {
         })
     });
 
-    let workload: Box<dyn Workload> = match name {
-        "ecg" => Box::new(Ecg { heterogeneous: true }),
-        "shd" => Box::new(Shd { dendrites: true }),
-        "bci" => Box::new(Bci::default()),
-        other => {
-            eprintln!("unknown app {other:?} (ecg|shd|bci)");
-            std::process::exit(2);
-        }
-    };
+    let workload = workload_by_name(name);
 
     let mut builder = workload.taibai(seed).backend(backend);
     if let Some(s) = strategy {
@@ -223,6 +238,112 @@ fn run_app(args: &Args) {
             std::process::exit(1);
         }
     }
+}
+
+/// Multi-tenant serving demo: a fixed pool of deployments, N client
+/// streams admitted round-robin, one timestep pushed per active stream
+/// per event-loop tick (the shape of a network front-end), optional
+/// confidence-based early stop.
+fn serve_demo(args: &Args) {
+    let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("shd");
+    let pool_size = args.usize("pool", 4);
+    let n_clients = args.usize("clients", 8);
+    // > 1.0 disables early stop; e.g. --confidence 0.9 enables it
+    let threshold = args.f64("confidence", 2.0);
+    let seed = args.u64("seed", 42);
+
+    let workload = workload_by_name(name);
+    let template = match workload.session(Backend::Detailed, seed) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("compile failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let full_steps = template.net().timesteps;
+    let mut pool = SessionPool::new(template, pool_size).expect("building the pool");
+
+    let data = workload.dataset(n_clients, seed);
+    let n_clients = n_clients.min(data.len());
+
+    struct Client<'a> {
+        id: StreamId,
+        sample: &'a Sample,
+        t: usize,
+    }
+    let mut waiting: VecDeque<&Sample> = data.iter().take(n_clients).collect();
+    let mut active: Vec<Client> = Vec::new();
+    let mut done = 0usize;
+    let mut early = 0usize;
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    while done < n_clients {
+        // admit as many waiting clients as the pool allows
+        while let Some(&s) = waiting.front() {
+            match pool.open() {
+                Ok(id) => {
+                    waiting.pop_front();
+                    active.push(Client { id, sample: s, t: 0 });
+                }
+                Err(_) => break, // saturated (counted in PoolStats::rejected)
+            }
+        }
+        // one timestep per active stream per tick
+        let mut k = 0;
+        while k < active.len() {
+            let c = &mut active[k];
+            pool.push(c.id, c.sample.events_at(c.t)).expect("push");
+            c.t += 1;
+            let confident = threshold <= 1.0
+                && c.t >= 8
+                && pool
+                    .confidence(c.id)
+                    .expect("confidence")
+                    .is_some_and(|(_, p)| p >= threshold);
+            if c.t >= c.sample.timesteps() || confident {
+                if c.t < c.sample.timesteps() {
+                    early += 1;
+                }
+                let rep = pool.release(c.id).expect("release");
+                if let (Some((cls, _)), Some(label)) = (rep.decision, c.sample.label())
+                {
+                    pairs.push((cls, label));
+                }
+                active.swap_remove(k);
+                done += 1;
+            } else {
+                k += 1;
+            }
+        }
+    }
+
+    let st = pool.stats();
+    println!("{} serving demo:", workload.name());
+    println!("  {st}");
+    println!(
+        "  accuracy          : {:.1}% over {} decoded streams",
+        accuracy(&pairs) * 100.0,
+        pairs.len()
+    );
+    println!(
+        "  early-stopped     : {early} of {n_clients} streams{}",
+        if threshold <= 1.0 {
+            format!(" (confidence ≥ {threshold})")
+        } else {
+            " (early stop disabled; pass --confidence 0.9)".into()
+        }
+    );
+    println!(
+        "  mean steps/stream : {:.1} (full sample = {full_steps})",
+        st.steps as f64 / st.completed.max(1) as f64
+    );
+    let em = EnergyModel::default();
+    let a = pool.activity();
+    println!(
+        "  pool energy       : {:.3} mJ dynamic, {:.2} pJ/SOP, {:.3} µJ SerDes",
+        em.energy(&a).dynamic_j() * 1e3,
+        em.pj_per_sop(&a),
+        em.energy(&a).serdes_j * 1e6,
+    );
 }
 
 fn baseline(args: &Args) {

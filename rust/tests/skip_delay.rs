@@ -1,0 +1,120 @@
+//! Skip-connection delays, end to end through the compiler and the
+//! chip (ROADMAP item: codegen now emits `FanOutIE::delay > 0`).
+//!
+//! A skip `from -> to` crosses `to - from - 1` intermediate layers, so
+//! its spikes must be held exactly that many timesteps (§III-D.6) to
+//! land together with the direct path. The timing test pins that
+//! alignment on a compiled chain; the sharded test pins that a delayed
+//! edge forced across a die boundary is a *typed* refusal
+//! (`CompileError::CrossDieDelay`) instead of a silently dropped delay.
+
+use taibai::api::{Backend, CompileError, Sample, ShardStrategy, Taibai};
+use taibai::datasets::SpikeSample;
+use taibai::model::{self, Layer, NetDef, NeuronModel, Skip};
+
+/// Input(2) → Fc(2→2 LIF) → Fc(2→2 LIF) → Fc(2→2 readout), diagonal
+/// weights strong enough that a channel-0 spike propagates every hop.
+fn chain_net(skip: bool) -> (NetDef, Vec<Vec<f32>>) {
+    let lif = NeuronModel::Lif { tau: 0.5, vth: 1.0 };
+    let mut net = NetDef::new("skip-chain", 10);
+    net.layers.push(Layer::Input { size: 2 });
+    net.layers.push(Layer::Fc { input: 2, output: 2, neuron: lif });
+    net.layers.push(Layer::Fc { input: 2, output: 2, neuron: lif });
+    net.layers.push(Layer::Fc {
+        input: 2,
+        output: 2,
+        neuron: NeuronModel::Readout { tau: 0.9 },
+    });
+    if skip {
+        // crosses layer 2 → delay 1
+        net.skips.push(Skip { from: 1, to: 3 });
+    }
+    let diag = |v: f32| vec![v, 0.0, 0.0, v];
+    (net, vec![vec![], diag(1.5), diag(1.5), diag(1.0)])
+}
+
+fn burst_sample() -> Sample {
+    // channel 0 fires at t = 0 only
+    let mut spikes = vec![vec![]; 10];
+    spikes[0] = vec![0u16];
+    Sample::Spikes(SpikeSample {
+        spikes,
+        labels: vec![0],
+    })
+}
+
+#[test]
+fn codegen_delay_holds_the_skip_until_the_direct_path_lands() {
+    let (net, w) = chain_net(true);
+    let mut with_skip = Taibai::new(net).weights(w).build().expect("compile");
+    let run = with_skip.run(&burst_sample()).expect("run");
+
+    let (net, w) = chain_net(false);
+    let mut baseline = Taibai::new(net).weights(w).build().expect("compile");
+    let base = baseline.run(&burst_sample()).expect("run");
+
+    // 2-hop pipeline latency: nothing reaches the readout before t = 2.
+    // If codegen had dropped the delay to 0, the skip spike would wake
+    // the readout alone at t = 1.
+    for t in 0..2 {
+        assert!(
+            run.outputs[t].iter().all(|&v| v == 0.0),
+            "t={t}: skip spike arrived early (delay not emitted): {:?}",
+            run.outputs[t]
+        );
+    }
+    // At t = 2 the delayed skip and the direct path land together: the
+    // readout integrates both unit-weight contributions.
+    let skip_v = run.outputs[2][0];
+    let base_v = base.outputs[2][0];
+    assert!(base_v > 0.5, "direct path never arrived: {base_v}");
+    assert!(
+        skip_v > base_v * 1.5,
+        "skip contribution missing at t=2: {skip_v} vs direct-only {base_v}"
+    );
+    // one extra held-then-released spike relative to the plain chain
+    assert_eq!(run.spikes, base.spikes + 1, "skip spike not minted");
+}
+
+#[test]
+fn delayed_skip_across_dies_is_a_typed_compile_error() {
+    // Wide-FC over 2 forced dies, contiguous cut: layer 1 lands on die
+    // 0 and the skip target (layer 3) on die 1, so the delayed edge
+    // would have to cross the host bridge — which has no ordering rule
+    // for delay-line releases.
+    let mut net = model::wide_fc_net(8, 600, 2, 4);
+    net.skips.push(Skip { from: 1, to: 3 });
+    let weights = model::wide_fc_weights(&net, 3);
+    let built = Taibai::new(net)
+        .weights(weights)
+        .backend(Backend::Sharded { chips: 2 })
+        .shard_strategy(ShardStrategy::Contiguous)
+        .merge(false)
+        .sa_iters(0)
+        .build();
+    match built {
+        Err(CompileError::CrossDieDelay {
+            from: 1,
+            to: 3,
+            delay: 1,
+        }) => {}
+        Err(other) => panic!("expected CrossDieDelay, got {other:?}"),
+        Ok(_) => panic!("delayed cross-die skip must be refused"),
+    }
+}
+
+#[test]
+fn single_die_build_of_the_same_skipped_net_compiles() {
+    // the refusal above is about the cut, not the skip: the identical
+    // net on one (auto-sized) die deploys fine
+    let mut net = model::wide_fc_net(8, 600, 2, 4);
+    net.skips.push(Skip { from: 1, to: 3 });
+    let weights = model::wide_fc_weights(&net, 3);
+    let session = Taibai::new(net)
+        .weights(weights)
+        .merge(false)
+        .sa_iters(0)
+        .build()
+        .expect("single-die delayed skip must compile");
+    assert_eq!(session.info().chips, 1);
+}

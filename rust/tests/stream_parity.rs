@@ -1,0 +1,178 @@
+//! Streaming-vs-batch parity: the tentpole contract of the event-driven
+//! Session API.
+//!
+//! `Session::run` is a thin wrapper over the same `begin/step/finish`
+//! backend contract `Session::open_stream` exposes, so pushing a sample
+//! one timestep at a time must reproduce the batch run **bit-exactly**:
+//! identical readout rows, identical spike/packet counts, identical
+//! `ChipActivity` and scheduler counters — on every workload and on
+//! both detailed engines (single-die and lockstep-sharded). On top of
+//! that, `serve::SessionPool` multiplexing N interleaved client streams
+//! must decode exactly what N sequential sessions decode (per-stream
+//! isolation leaves no cross-tenant trace).
+
+use taibai::api::workloads::{Bci, Ecg, Shd, Workload};
+use taibai::api::{Backend, Sample, SessionPool};
+use taibai::metrics::argmax;
+
+/// Stream every sample push-per-step next to a batch `run` on a twin
+/// session and pin rows, counts, and whole-session activity.
+fn assert_stream_parity(w: &dyn Workload, backend: Backend, samples: usize) {
+    let seed = 17;
+    let mut batch = w
+        .session(backend, seed)
+        .unwrap_or_else(|e| panic!("{} on {backend}: {e}", w.name()));
+    let mut streaming = w.session(backend, seed).unwrap();
+    let data = w.dataset(samples, seed);
+    for (si, s) in data.iter().take(samples).enumerate() {
+        let run = batch.run(s).expect("batch run");
+
+        let mut stream = streaming.open_stream().expect("open stream");
+        let mut rows = Vec::with_capacity(s.timesteps());
+        for t in 0..s.timesteps() {
+            let out = stream.push(s.events_at(t)).expect("push");
+            if let Some(row) = &out.row {
+                rows.push(row.clone());
+            }
+        }
+        let rep = stream.finish().expect("finish");
+
+        let tag = format!("{} {backend}: sample {si}", w.name());
+        assert_eq!(run.outputs, rows, "{tag}: readout rows diverged");
+        assert_eq!(run.spikes, rep.spikes, "{tag}: spike counts diverged");
+        assert_eq!(run.packets, rep.packets, "{tag}: packet counts diverged");
+        assert_eq!(rep.steps as usize, s.timesteps(), "{tag}: step count");
+    }
+    let tag = format!("{} {backend}", w.name());
+    assert_eq!(
+        batch.activity(),
+        streaming.activity(),
+        "{tag}: ChipActivity diverged"
+    );
+    assert_eq!(
+        batch.sched_stats(),
+        streaming.sched_stats(),
+        "{tag}: scheduler counters diverged"
+    );
+    assert_eq!(batch.samples_run(), streaming.samples_run(), "{tag}: samples");
+}
+
+#[test]
+fn ecg_stream_matches_batch_detailed() {
+    assert_stream_parity(&Ecg { heterogeneous: true }, Backend::Detailed, 1);
+}
+
+#[test]
+fn shd_stream_matches_batch_detailed() {
+    assert_stream_parity(&Shd { dendrites: true }, Backend::Detailed, 2);
+}
+
+#[test]
+fn bci_stream_matches_batch_detailed() {
+    assert_stream_parity(&Bci { subpaths: 8, day: 2 }, Backend::Detailed, 2);
+}
+
+#[test]
+fn ecg_stream_matches_batch_sharded() {
+    assert_stream_parity(
+        &Ecg { heterogeneous: true },
+        Backend::Sharded { chips: 2 },
+        1,
+    );
+}
+
+#[test]
+fn shd_stream_matches_batch_sharded() {
+    assert_stream_parity(&Shd { dendrites: true }, Backend::Sharded { chips: 2 }, 2);
+}
+
+#[test]
+fn bci_stream_matches_batch_sharded() {
+    assert_stream_parity(
+        &Bci { subpaths: 8, day: 2 },
+        Backend::Sharded { chips: 2 },
+        2,
+    );
+}
+
+#[test]
+fn run_batch_workers_match_streams() {
+    // the forked-worker path (`run_batch`) goes through the same
+    // begin/step/finish loop — pin it against hand-driven streams
+    let w = Shd { dendrites: true };
+    let seed = 29;
+    let data: Vec<Sample> = w.dataset(4, seed).into_iter().take(4).collect();
+
+    let mut streaming = w.session(Backend::Detailed, seed).unwrap();
+    let mut expected = Vec::new();
+    for s in &data {
+        let mut stream = streaming.open_stream().unwrap();
+        let mut rows = Vec::new();
+        for t in 0..s.timesteps() {
+            let out = stream.push(s.events_at(t)).unwrap();
+            rows.push(out.row.clone().unwrap());
+        }
+        let rep = stream.finish().unwrap();
+        expected.push((rows, rep.spikes));
+    }
+
+    let mut batch = w.session(Backend::Detailed, seed).unwrap();
+    let got = batch.run_batch(&data).unwrap();
+    assert_eq!(got.len(), expected.len());
+    for (i, (g, (rows, spikes))) in got.iter().zip(&expected).enumerate() {
+        assert_eq!(&g.outputs, rows, "sample {i}: worker rows diverged");
+        assert_eq!(g.spikes, *spikes, "sample {i}: worker spikes diverged");
+    }
+    assert_eq!(batch.activity().nc.sops, streaming.activity().nc.sops);
+}
+
+#[test]
+fn pool_interleaved_streams_match_sequential_sessions() {
+    // 4 clients stream concurrently over a 4-deployment pool, pushes
+    // interleaved round-robin per timestep; each must decode exactly
+    // what its own private sequential session decodes
+    let w = Shd { dendrites: true };
+    let seed = 23;
+    let data: Vec<Sample> = w.dataset(4, seed).into_iter().take(4).collect();
+
+    let mut seq = w.session(Backend::Detailed, seed).unwrap();
+    let mut expected = Vec::new();
+    for s in &data {
+        let run = seq.run(s).unwrap();
+        expected.push((argmax(&run.summed()), run.spikes, run.packets));
+    }
+
+    let template = w.session(Backend::Detailed, seed).unwrap();
+    let mut pool = SessionPool::new(template, data.len()).unwrap();
+    let ids: Vec<_> = data.iter().map(|_| pool.open().unwrap()).collect();
+    let t_max = data.iter().map(|s| s.timesteps()).max().unwrap();
+    for t in 0..t_max {
+        for (k, s) in data.iter().enumerate() {
+            if t < s.timesteps() {
+                pool.push(ids[k], s.events_at(t)).unwrap();
+            }
+        }
+    }
+    for (k, s) in data.iter().enumerate() {
+        let rep = pool.release(ids[k]).unwrap();
+        let (cls, conf) = rep.decision.expect("pool stream must decode");
+        assert_eq!(
+            cls, expected[k].0,
+            "stream {k}: decoded label diverged from the sequential session"
+        );
+        assert!(conf > 0.0 && conf <= 1.0);
+        assert_eq!(rep.spikes, expected[k].1, "stream {k}: spikes diverged");
+        assert_eq!(rep.packets, expected[k].2, "stream {k}: packets diverged");
+        assert_eq!(rep.steps as usize, s.timesteps());
+    }
+    let st = pool.stats();
+    assert_eq!(st.peak_active, data.len());
+    assert_eq!(st.completed, data.len() as u64);
+    assert_eq!(st.rejected, 0);
+    // all four tenants' work is visible in the pool-level activity
+    assert_eq!(
+        pool.activity().nc.sops,
+        seq.activity().nc.sops,
+        "pool aggregate activity diverged from the sequential reference"
+    );
+}
