@@ -15,7 +15,7 @@
 use std::collections::HashMap;
 
 use crate::chip::config::{CcImage, ChipConfig, NcImage};
-use crate::model::{Layer, NetDef, NeuronModel};
+use crate::model::{axon_pad, Layer, NetDef, NeuronModel};
 use crate::noc::{cc_xy, Packet, PacketPhase, PacketType, NUM_CCS};
 use crate::programs::{self, learning, NcLayout};
 use crate::scheduler::NcConfig;
@@ -104,6 +104,7 @@ struct Builder<'a> {
     merged: &'a Merged,
     place: &'a PlacementMap,
     learning: bool,
+    aliased_sparse_fanout: bool,
     /// merged-core index → (cc, nc)
     locs: Vec<(usize, u8)>,
     tables: HashMap<usize, CcTables>,
@@ -175,17 +176,33 @@ fn validate_skips(net: &NetDef) -> Result<(), CompileError> {
                  expects {expected}"
             )));
         }
+        // A recurrent predecessor rebases the destination's weight rows
+        // into its extended axon space; the skip source's shared fan-out
+        // DE cannot stamp two different axons, so its plain-space spikes
+        // would land on the dead pad rows.
+        if axon_pad(net, s.to) != 0 {
+            return Err(err(
+                "the destination's fan-in is rebased past a recurrent \
+                 predecessor; plain skip axons cannot share it"
+                    .into(),
+            ));
+        }
     }
     Ok(())
 }
 
 /// Compile a fused network into a chip deployment.
+///
+/// `aliased_sparse_fanout` re-enables the pre-fix shared-IE encoding for
+/// Sparse destinations (see [`crate::compiler::Options`]); pass `false`
+/// everywhere outside the regression suite.
 pub fn codegen(
     net: &NetDef,
     weights: &[Vec<f32>],
     merged: &Merged,
     place: &PlacementMap,
     learning: bool,
+    aliased_sparse_fanout: bool,
 ) -> Result<Compiled, CompileError> {
     validate_skips(net)?;
     let locs: Vec<(usize, u8)> = (0..merged.cores.len())
@@ -217,6 +234,7 @@ pub fn codegen(
         merged,
         place,
         learning,
+        aliased_sparse_fanout,
         locs,
         tables: HashMap::new(),
         images: HashMap::new(),
@@ -313,14 +331,17 @@ impl<'a> Builder<'a> {
             .or_insert_with(|| (0..NCS_PER_CC).map(|_| None).collect())
     }
 
-    /// Upstream axon-space size of layer `li`'s inbound connection.
+    /// Upstream axon-space size of layer `li`'s inbound connection,
+    /// including the dead leading rows a recurrent predecessor's
+    /// extended axon space imposes (see [`axon_pad`]).
     fn axon_space(&self, li: usize) -> usize {
+        let pad = axon_pad(self.net, li);
         match &self.net.layers[li] {
             Layer::Fc { input, neuron, .. } => match neuron {
-                NeuronModel::DhLif { branches, .. } => input * branches,
-                _ => *input,
+                NeuronModel::DhLif { branches, .. } => pad + input * branches,
+                _ => pad + input,
             },
-            Layer::Recurrent { input, size, .. } => input + size,
+            Layer::Recurrent { input, size, .. } => pad + input + size,
             Layer::Sparse { input, .. } => *input,
             _ => 0,
         }
@@ -467,12 +488,15 @@ impl<'a> Builder<'a> {
         let mut a = 16usize;
         for part in &core.parts {
             let layer = &self.net.layers[part.layer];
+            let pad = axon_pad(self.net, part.layer);
             let (banks, per_n) = match layer {
                 Layer::Fc { input, neuron, .. } => match neuron {
-                    NeuronModel::DhLif { branches, .. } => (*branches, input * branches),
-                    _ => (1, *input),
+                    NeuronModel::DhLif { branches, .. } => {
+                        (*branches, pad + input * branches)
+                    }
+                    _ => (1, pad + *input),
                 },
-                Layer::Recurrent { input, size, .. } => (1, input + size),
+                Layer::Recurrent { input, size, .. } => (1, pad + input + size),
                 Layer::Sparse { input, density, .. } => {
                     (1, ((*input as f64 * density).ceil() as usize).max(1))
                 }
@@ -643,6 +667,11 @@ impl<'a> Builder<'a> {
         count: usize,
         blob: &[f32],
     ) -> Result<Vec<u16>, CompileError> {
+        // Full2 rows are addressed by the arriving payload axon, which a
+        // recurrent predecessor emits in its extended axon space — lay
+        // out that many dead (zero) leading rows so forward spikes land
+        // on the intended weights.
+        let pad = axon_pad(self.net, li);
         match layer {
             Layer::Fc { input, output, neuron } => {
                 let branches = match neuron {
@@ -657,7 +686,8 @@ impl<'a> Builder<'a> {
                         got: blob.len(),
                     });
                 }
-                let mut w = Vec::with_capacity(rows * count);
+                let mut w = vec![0u16; pad * count];
+                w.reserve(rows * count);
                 for r in 0..rows {
                     for j in 0..count {
                         w.push(F16::from_f32(blob[r * output + n_base + j]).0);
@@ -674,7 +704,8 @@ impl<'a> Builder<'a> {
                         got: blob.len(),
                     });
                 }
-                let mut w = Vec::with_capacity(rows * count);
+                let mut w = vec![0u16; pad * count];
+                w.reserve(rows * count);
                 for r in 0..rows {
                     for j in 0..count {
                         w.push(F16::from_f32(blob[r * size + n_base + j]).0);
@@ -718,22 +749,38 @@ impl<'a> Builder<'a> {
                     let li = part.layer;
                     let _ = pi;
                     let next = li + 1;
-                    // route IEs for this part's neurons
-                    let it_base = ies.len() as u32;
-                    let mut it_len = 0u32;
+                    // A Sparse destination decodes per-upstream Type-1 DT
+                    // entries (`dt_base + upstream_id`), so its inbound
+                    // fan-out IEs are per-neuron — sharing one IE with
+                    // `index = dt_base` aliases every upstream spike onto
+                    // axon 0 (the bug the compat flag reproduces). Full2
+                    // destinations decode a shared entry and keep the
+                    // one-IE-per-destination-CC encoding.
+                    let per_neuron_next = next < self.net.layers.len()
+                        && matches!(self.net.layers[next], Layer::Sparse { .. })
+                        && !self.aliased_sparse_fanout;
+                    let mut next_ccs: Vec<(usize, u16, u16)> = Vec::new();
+                    // IEs every neuron of this part mints identically:
+                    // shared-DT next-layer edges, recurrent self-edges,
+                    // skip edges (skip targets are Fc/Recurrent only).
+                    let mut shared: Vec<FanOutIE> = Vec::new();
                     if next < self.net.layers.len() {
                         for (dcc, _) in self.layer_ccs[next].clone() {
                             let index = *self
                                 .dt_base
                                 .get(&(next, dcc))
                                 .ok_or(CompileError::MissingDtBase { layer: next, cc: dcc })?;
-                            ies.push(FanOutIE {
-                                mode: route_between(cc, dcc),
-                                tag: self.fanin_tag(next, dcc)?,
-                                index,
-                                delay: 0,
-                            });
-                            it_len += 1;
+                            let tag = self.fanin_tag(next, dcc)?;
+                            if per_neuron_next {
+                                next_ccs.push((dcc, index, tag));
+                            } else {
+                                shared.push(FanOutIE {
+                                    mode: route_between(cc, dcc),
+                                    tag,
+                                    index,
+                                    delay: 0,
+                                });
+                            }
                         }
                     }
                     // recurrent self-connection
@@ -744,15 +791,16 @@ impl<'a> Builder<'a> {
                                     .dt_base
                                     .get(&(li, dcc))
                                     .ok_or(CompileError::MissingDtBase { layer: li, cc: dcc })?;
-                                ies.push(FanOutIE {
+                                shared.push(FanOutIE {
                                     mode: route_between(cc, dcc),
                                     tag: self.fanin_tag(li, dcc)?,
                                     index,
                                     delay: 0,
                                 });
-                                it_len += 1;
                             }
-                            Some(*input)
+                            // self-edges address this layer's own rows
+                            // past its (possibly padded) forward block
+                            Some(axon_pad(self.net, li) + *input)
                         }
                         _ => None,
                     };
@@ -781,14 +829,21 @@ impl<'a> Builder<'a> {
                                     cc: dcc,
                                 },
                             )?;
-                            ies.push(FanOutIE {
+                            shared.push(FanOutIE {
                                 mode,
                                 tag: self.fanin_tag(skip.to, dcc)?,
                                 index,
                                 delay: delay as u8,
                             });
-                            it_len += 1;
                         }
+                    }
+                    // Shared-only parts reuse one IE block across all of
+                    // the part's neurons; a Sparse next layer gets one
+                    // block per neuron (its per-upstream DT index), with
+                    // the shared IEs duplicated into each block.
+                    let shared_base = ies.len() as u32;
+                    if next_ccs.is_empty() {
+                        ies.extend(shared.iter().copied());
                     }
                     for j in 0..part.count {
                         let global = part.n_base + j;
@@ -799,6 +854,21 @@ impl<'a> Builder<'a> {
                             // makes them the same number space
                             Some(off) => (off + global) as u16,
                             None => global as u16,
+                        };
+                        let (it_base, it_len) = if next_ccs.is_empty() {
+                            (shared_base, shared.len() as u32)
+                        } else {
+                            let base = ies.len() as u32;
+                            for &(dcc, dt, tag) in &next_ccs {
+                                ies.push(FanOutIE {
+                                    mode: route_between(cc, dcc),
+                                    tag,
+                                    index: dt + global as u16,
+                                    delay: 0,
+                                });
+                            }
+                            ies.extend(shared.iter().copied());
+                            (base, (next_ccs.len() + shared.len()) as u32)
                         };
                         des.push(FanOutDE {
                             global_axon: axon,
@@ -1023,7 +1093,7 @@ mod tests {
         let part = partition(net, &limits);
         let merged = merge(net, &part, limits.neurons_per_nc, learning);
         let place = placement::initial(merged.cores.len());
-        codegen(net, &weights, &merged, &place, learning)
+        codegen(net, &weights, &merged, &place, learning, false)
     }
 
     fn compile_net(
@@ -1081,6 +1151,33 @@ mod tests {
         let (axon, ies) = tables.fanout(0).unwrap();
         assert_eq!(axon, 4, "recurrent axon offset = n_inputs + idx");
         assert_eq!(ies.len(), 2);
+    }
+
+    #[test]
+    fn recurrent_forward_rows_are_rebased() {
+        // A recurrent layer's fan-out DE stamps one axon (n_inputs + id)
+        // shared by its self-edge and forward edge, and Full2
+        // destinations decode that payload directly as a weight row —
+        // so the readout downstream of the ECG reservoir needs 4 dead
+        // leading rows (the reservoir's own input pad) or every forward
+        // spike reads a row shifted by 4.
+        let net = model::srnn_ecg(true);
+        let w1 = vec![0.1; (4 + 64) * 64];
+        let w2 = vec![0.1; 64 * 6];
+        let c = compile_net(&net, vec![vec![], w1, w2], false, 256);
+        let head = c
+            .cores
+            .iter()
+            .find(|m| m.parts.iter().any(|p| p.0 == 2))
+            .expect("readout core");
+        // per_n is 68 for both parts: the reservoir's extended input
+        // (4 + 64) and the padded readout fan-in (4 dead + 64 real)
+        let expect: usize = head.parts.iter().map(|p| 68 * p.2).sum();
+        assert_eq!(
+            (head.layout.cur - head.layout.weights) as usize,
+            expect,
+            "readout weight region must include the 4-row axon pad"
+        );
     }
 
     #[test]

@@ -65,6 +65,11 @@ pub enum CompileError {
     /// program/memory region — a code-generator bug surfaced by the
     /// range-checked INIT stage instead of a panic).
     Deploy { msg: String },
+    /// The fuzz net generator ([`crate::model::gen`]) could not produce a
+    /// compilable network within its retry budget: every candidate drawn
+    /// from the spec hit an expected compile refusal (`TooManyCores`,
+    /// `Skip`, …). Carries the seed for replay and the last refusal text.
+    Generator { seed: u64, msg: String },
 }
 
 impl std::fmt::Display for CompileError {
@@ -121,6 +126,10 @@ impl std::fmt::Display for CompileError {
             CompileError::Deploy { msg } => {
                 write!(f, "deployment image rejected by the chip: {msg}")
             }
+            CompileError::Generator { seed, msg } => write!(
+                f,
+                "net generator (seed {seed}) exhausted its retry budget: {msg}"
+            ),
         }
     }
 }
@@ -161,5 +170,12 @@ mod tests {
         };
         let s = e.to_string();
         assert!(s.contains("1->3") && s.contains("die"), "{s}");
+
+        let e = CompileError::Generator {
+            seed: 0xabcd,
+            msg: "every draw hit TooManyCores".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("43981") && s.contains("TooManyCores"), "{s}");
     }
 }

@@ -49,6 +49,13 @@ pub struct Options {
     /// (≫ any on-die hop distance; see
     /// [`placement::DEFAULT_SERDES_COST`]).
     pub serdes_cost: f64,
+    /// Bug-compat switch: reproduce the pre-fix sparse-destination
+    /// fan-out encoding (one shared IE with `index = dt_base` per
+    /// destination CC, aliasing every upstream spike onto axon 0 of the
+    /// destination's per-upstream DT block). Exists solely so the fuzz
+    /// oracle and the regression suite can demonstrate the divergence
+    /// the per-neuron encoding fixes. Never enable in real deployments.
+    pub aliased_sparse_fanout: bool,
 }
 
 impl Default for Options {
@@ -63,6 +70,7 @@ impl Default for Options {
             rates: Vec::new(),
             strategy: ShardStrategy::default(),
             serdes_cost: placement::DEFAULT_SERDES_COST,
+            aliased_sparse_fanout: false,
         }
     }
 }
@@ -92,7 +100,14 @@ pub fn compile(
         init
     };
     let avg_hops = placement::avg_hops(&mtraffic, &place);
-    let compiled = codegen::codegen(net, weights, &merged, &place, opts.learning)?;
+    let compiled = codegen::codegen(
+        net,
+        weights,
+        &merged,
+        &place,
+        opts.learning,
+        opts.aliased_sparse_fanout,
+    )?;
     Ok(CompileReport {
         avg_hops,
         placement_cost: placement::cost(&mtraffic, &place),

@@ -380,7 +380,14 @@ pub fn compile_sharded(
         }
     }
 
-    let compiled = codegen::codegen(net, weights, &merged, &place, opts.learning)?;
+    let compiled = codegen::codegen(
+        net,
+        weights,
+        &merged,
+        &place,
+        opts.learning,
+        opts.aliased_sparse_fanout,
+    )?;
 
     // ---- split the die-global image into per-die slices ----------------
     let mut sharded = ShardedCompiled {

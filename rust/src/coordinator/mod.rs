@@ -516,6 +516,19 @@ impl MultiChipDeployment {
         Ok(())
     }
 
+    /// Read back a weight region from the die hosting `core_idx` — the
+    /// multi-die counterpart of [`Deployment::peek_weights`], used by
+    /// the differential fuzz oracle to compare post-learning weights
+    /// bit-exactly across shard counts.
+    pub fn peek_weights(&self, core_idx: usize, n: usize) -> Result<Vec<f32>, Trap> {
+        let (chip_idx, core) = &self.compiled.cores[core_idx];
+        Ok(self.chips[*chip_idx]
+            .peek(core.cc, core.nc, core.layout.weights, n)?
+            .into_iter()
+            .map(|w| F16(w).to_f32())
+            .collect())
+    }
+
     /// Aggregate activity across dies: event counters sum; `timesteps`
     /// is the lockstep step count (every die steps together), not the
     /// per-die sum, so energy/throughput math sees wall-clock steps.

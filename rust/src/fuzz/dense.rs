@@ -1,0 +1,521 @@
+//! Golden dense reference: a direct [`NetDef`] interpreter that
+//! bypasses partitioning, placement, codegen and the NoC entirely —
+//! every neuron of every layer is simulated every step, straight from
+//! the model description and the f32 weight blobs.
+//!
+//! It reproduces the engine's arithmetic *exactly*: weights and
+//! parameters are quantized through [`F16::from_f32`] once at
+//! construction, membrane updates use the single-rounding
+//! [`F16::mul_add`] the `diff.f` ALU op performs, and synaptic
+//! accumulation uses the `locacc.f` FP16 add. On the generator's
+//! exactness grid (see [`crate::model::gen`]) the accumulation order
+//! cannot affect any value, so a compiled engine — any placement, any
+//! shard count — must produce bit-identical readout rows. A mismatch is
+//! a routing/codegen bug by construction, never FP noise.
+//!
+//! Timing model (mirrors the chip scheduler):
+//! * host events injected at step `t` integrate at step `t`;
+//! * spikes minted at step `t` integrate at step `t + 1`;
+//! * skip spikes minted at `t` over a `delay = d` edge integrate at
+//!   step `t + 1 + d` (held in the minting CC's delay line);
+//! * the learning step delivers the final stream step's spikes, stores
+//!   the host error vector, then runs the learn sweep.
+
+use crate::model::{gen::Stream, Layer, NetDef, NeuronModel, Skip};
+use crate::util::F16;
+
+/// Branch time constants baked into the DH-LIF parameter block by
+/// codegen (heterogeneous per branch, not taken from the model).
+const BRANCH_TAUS: [f32; 8] = [0.2, 0.5, 0.8, 0.95, 0.3, 0.6, 0.9, 0.99];
+
+/// The learning rate codegen bakes into `params[4]`.
+const LEARNING_RATE: f32 = 0.02;
+
+#[derive(Clone, Copy)]
+enum SimKind {
+    /// Full connection; `branches > 1` for DH-LIF row banks.
+    Fc,
+    /// Extended-input fold: rows `0..n_in` forward, `n_in..n_in+n` self.
+    Recurrent,
+    /// Only nonzero blob entries connect.
+    Sparse,
+}
+
+#[derive(Clone, Copy)]
+struct Delivery {
+    /// Destination layer as a sim index (layer index − 1).
+    dest: usize,
+    /// Weight row at the destination.
+    axon: usize,
+}
+
+struct Sim {
+    kind: SimKind,
+    model: NeuronModel,
+    n_in: usize,
+    n: usize,
+    branches: usize,
+    /// FP16-quantized weights, logical row-major `[rows][n]`.
+    w: Vec<F16>,
+    /// Sparse connection mask (empty for dense kinds): the engine only
+    /// materializes nonzero f32 blob entries as synapses.
+    conn: Vec<bool>,
+    /// Accumulated currents, one bank of `n` per branch.
+    cur: Vec<F16>,
+    vmem: Vec<F16>,
+    /// ALIF threshold offset (`n`) or DH-LIF branch state
+    /// (`branches · n`).
+    adapt: Vec<F16>,
+    /// Learning head: per-upstream-axon spike counters.
+    acc: Vec<u32>,
+    /// Learning head: per-neuron error slots.
+    err: Vec<F16>,
+}
+
+impl Sim {
+    fn rows(&self) -> usize {
+        match self.kind {
+            SimKind::Fc => self.branches * self.n_in,
+            SimKind::Recurrent => self.n_in + self.n,
+            SimKind::Sparse => self.n_in,
+        }
+    }
+}
+
+/// The interpreter. Construct once per case; state persists across
+/// [`DenseRef::run`] and [`DenseRef::learn`] like a deployed chip's.
+pub struct DenseRef {
+    layers: Vec<Sim>,
+    skips: Vec<Skip>,
+    learning: bool,
+    lr: F16,
+    dense_input: bool,
+    /// Deliveries due at each absolute step.
+    pending: Vec<Vec<Delivery>>,
+    steps_run: usize,
+}
+
+impl DenseRef {
+    pub fn new(
+        net: &NetDef,
+        weights: &[Vec<f32>],
+        learning: bool,
+    ) -> Result<DenseRef, String> {
+        let mut layers = Vec::new();
+        match net.layers.first() {
+            Some(Layer::Input { .. }) => {}
+            _ => return Err("first layer must be Input".into()),
+        }
+        for (li, layer) in net.layers.iter().enumerate().skip(1) {
+            let blob = weights
+                .get(li)
+                .ok_or_else(|| format!("missing weight blob for layer {li}"))?;
+            layers.push(build_sim(li, layer, blob)?);
+        }
+        if layers.is_empty() {
+            return Err("net has no connection layers".into());
+        }
+        if learning {
+            let head = layers.last_mut().expect("non-empty");
+            head.acc = vec![0; head.n_in];
+            head.err = vec![F16::ZERO; head.n];
+        }
+        let dense_input = matches!(net.layers[1], Layer::Sparse { .. });
+        Ok(DenseRef {
+            layers,
+            skips: net.skips.clone(),
+            learning,
+            lr: F16::from_f32(LEARNING_RATE),
+            dense_input,
+            pending: Vec::new(),
+            steps_run: 0,
+        })
+    }
+
+    /// Simulate the full stream; returns one readout row per step
+    /// (zeros where the head emitted nothing — matching the engine's
+    /// default row).
+    pub fn run(&mut self, stream: &Stream) -> Vec<Vec<f32>> {
+        match stream {
+            Stream::Dense(_) => assert!(
+                self.dense_input,
+                "dense stream into a spike-input first layer"
+            ),
+            Stream::Spikes(_) => assert!(
+                !self.dense_input,
+                "spike stream into a dense-input (Sparse) first layer"
+            ),
+        }
+        let steps = stream.steps();
+        let mut rows = Vec::with_capacity(steps);
+        for t in 0..steps {
+            self.deliver_due(t);
+            match stream {
+                Stream::Spikes(s) => self.inject_spikes(&s[t]),
+                Stream::Dense(v) => self.inject_dense(&v[t]),
+            }
+            rows.push(self.fire(t));
+        }
+        self.steps_run = steps;
+        rows
+    }
+
+    /// One on-chip learning step after the stream: deliver the final
+    /// step's spikes (they land in the learn step's INTEG, bumping the
+    /// head's ACC counters), store the error vector, then apply the
+    /// `fire_learn_head` sweep `w[u][i] -= itof(ACC[u]) · ERR[i] · lr`.
+    pub fn learn(&mut self, errors: &[f32]) {
+        assert!(self.learning, "learn() on a non-learning reference");
+        self.deliver_due(self.steps_run);
+        let head = self.layers.last_mut().expect("non-empty");
+        assert_eq!(errors.len(), head.n, "error vector width");
+        for (i, &e) in errors.iter().enumerate() {
+            head.err[i] = F16::from_f32(e);
+        }
+        let (n_in, n) = (head.n_in, head.n);
+        for i in 0..n {
+            let el = head.err[i].mul(self.lr);
+            for u in 0..n_in {
+                let c = head.acc[u].min(255) as f32;
+                let delta = F16::from_f32(c).mul(el);
+                head.w[u * n + i] = head.w[u * n + i].sub(delta);
+            }
+        }
+    }
+
+    /// The head's logical weight matrix (`[n_in][n]`, row-major) as
+    /// f32 — comparable against `peek_weights` of a compiled engine.
+    pub fn head_weights(&self) -> Vec<f32> {
+        let head = self.layers.last().expect("non-empty");
+        head.w.iter().map(|w| w.to_f32()).collect()
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.layers.last().expect("non-empty").n
+    }
+
+    // -- internals ----------------------------------------------------
+
+    fn slot(&mut self, step: usize) -> &mut Vec<Delivery> {
+        if self.pending.len() <= step {
+            self.pending.resize_with(step + 1, Vec::new);
+        }
+        &mut self.pending[step]
+    }
+
+    fn deliver_due(&mut self, t: usize) {
+        if self.pending.len() <= t {
+            return;
+        }
+        let due = std::mem::take(&mut self.pending[t]);
+        for d in due {
+            self.deliver(d);
+        }
+    }
+
+    fn deliver(&mut self, d: Delivery) {
+        let is_head = self.learning && d.dest == self.layers.len() - 1;
+        let l = &mut self.layers[d.dest];
+        match l.kind {
+            SimKind::Fc | SimKind::Recurrent => {
+                debug_assert!(d.axon < l.rows());
+                for j in 0..l.n {
+                    let w = l.w[d.axon * l.n + j];
+                    l.cur[j] = l.cur[j].add(w);
+                }
+            }
+            SimKind::Sparse => {
+                for j in 0..l.n {
+                    if l.conn[d.axon * l.n + j] {
+                        let w = l.w[d.axon * l.n + j];
+                        l.cur[j] = l.cur[j].add(w);
+                    }
+                }
+            }
+        }
+        if is_head {
+            l.acc[d.axon] += 1;
+        }
+    }
+
+    fn inject_spikes(&mut self, channels: &[u16]) {
+        let l = &mut self.layers[0];
+        for &ch in channels {
+            let ch = ch as usize;
+            match l.kind {
+                SimKind::Fc => {
+                    // one packet per branch: channel `ch` feeds branch
+                    // `b` through weight row `b·n_in + ch` into that
+                    // branch's current bank
+                    for b in 0..l.branches {
+                        let row = b * l.n_in + ch;
+                        for j in 0..l.n {
+                            let w = l.w[row * l.n + j];
+                            l.cur[b * l.n + j] = l.cur[b * l.n + j].add(w);
+                        }
+                    }
+                }
+                SimKind::Recurrent => {
+                    for j in 0..l.n {
+                        let w = l.w[ch * l.n + j];
+                        l.cur[j] = l.cur[j].add(w);
+                    }
+                }
+                SimKind::Sparse => unreachable!("guarded in run()"),
+            }
+        }
+    }
+
+    fn inject_dense(&mut self, values: &[f32]) {
+        let l = &mut self.layers[0];
+        for (ch, &v) in values.iter().enumerate() {
+            // the coordinator skips exact-zero bins at injection
+            if v == 0.0 {
+                continue;
+            }
+            let scale = F16::from_f32(v);
+            for j in 0..l.n {
+                if l.conn[ch * l.n + j] {
+                    let w = l.w[ch * l.n + j].mul(scale);
+                    l.cur[j] = l.cur[j].add(w);
+                }
+            }
+        }
+    }
+
+    /// FIRE every neuron of every layer; returns the head readout row
+    /// and schedules minted spikes.
+    fn fire(&mut self, t: usize) -> Vec<f32> {
+        let last = self.layers.len() - 1;
+        let mut row = vec![0.0f32; self.layers[last].n];
+        let mut minted: Vec<(usize, usize)> = Vec::new();
+        for (idx, l) in self.layers.iter_mut().enumerate() {
+            for j in 0..l.n {
+                match l.model {
+                    NeuronModel::Lif { .. } => {
+                        let (tau, vth) = f16_tau_vth(&l.model);
+                        let v2 = tau.mul_add(l.vmem[j], l.cur[j]);
+                        l.cur[j] = F16::ZERO;
+                        if ge(v2, vth) {
+                            minted.push((idx, j));
+                            l.vmem[j] = F16::ZERO;
+                        } else {
+                            l.vmem[j] = v2;
+                        }
+                    }
+                    NeuronModel::Alif { .. } => {
+                        let (tau, vth) = f16_tau_vth(&l.model);
+                        let (rho, beta) = f16_rho_beta(&l.model);
+                        let v2 = tau.mul_add(l.vmem[j], l.cur[j]);
+                        l.cur[j] = F16::ZERO;
+                        let mut a1 = l.adapt[j].mul(rho);
+                        let th = vth.add(a1);
+                        if ge(v2, th) {
+                            minted.push((idx, j));
+                            l.vmem[j] = F16::ZERO;
+                            a1 = a1.add(beta);
+                        } else {
+                            l.vmem[j] = v2;
+                        }
+                        l.adapt[j] = a1;
+                    }
+                    NeuronModel::DhLif { branches, .. } => {
+                        let (tau, vth) = f16_tau_vth(&l.model);
+                        let mut v2 = tau.mul_add(l.vmem[j], F16::ZERO);
+                        for b in 0..branches {
+                            let tb = F16::from_f32(BRANCH_TAUS[b % BRANCH_TAUS.len()]);
+                            let b2 = tb.mul_add(l.adapt[b * l.n + j], l.cur[b * l.n + j]);
+                            l.adapt[b * l.n + j] = b2;
+                            l.cur[b * l.n + j] = F16::ZERO;
+                            v2 = v2.add(b2);
+                        }
+                        if ge(v2, vth) {
+                            minted.push((idx, j));
+                            l.vmem[j] = F16::ZERO;
+                        } else {
+                            l.vmem[j] = v2;
+                        }
+                    }
+                    NeuronModel::Readout { tau } => {
+                        let tau = F16::from_f32(tau);
+                        let v2 = tau.mul_add(l.vmem[j], l.cur[j]);
+                        l.cur[j] = F16::ZERO;
+                        l.vmem[j] = v2;
+                        if idx == last {
+                            row[j] = v2.to_f32();
+                        }
+                    }
+                    NeuronModel::Psum => unreachable!("rejected in new()"),
+                }
+            }
+        }
+        for (idx, j) in minted {
+            self.schedule(idx, j, t);
+        }
+        row
+    }
+
+    /// Route one minted spike: forward edge, recurrent self-edge, and
+    /// any skip edges sourced at this layer.
+    fn schedule(&mut self, idx: usize, j: usize, t: usize) {
+        let li = idx + 1;
+        let n_in = self.layers[idx].n_in;
+        let recurrent = matches!(self.layers[idx].kind, SimKind::Recurrent);
+        if idx + 1 < self.layers.len() {
+            self.slot(t + 1).push(Delivery { dest: idx + 1, axon: j });
+        }
+        if recurrent {
+            self.slot(t + 1).push(Delivery { dest: idx, axon: n_in + j });
+        }
+        let skips: Vec<Skip> =
+            self.skips.iter().copied().filter(|s| s.from == li).collect();
+        for s in skips {
+            let due = t + 1 + s.delay();
+            self.slot(due).push(Delivery { dest: s.to - 1, axon: j });
+        }
+    }
+}
+
+fn build_sim(li: usize, layer: &Layer, blob: &[f32]) -> Result<Sim, String> {
+    let (kind, n_in, n, branches, model) = match layer {
+        Layer::Fc { input, output, neuron } => {
+            let branches = match neuron {
+                NeuronModel::DhLif { branches, .. } => *branches,
+                _ => 1,
+            };
+            (SimKind::Fc, *input, *output, branches, *neuron)
+        }
+        Layer::Recurrent { input, size, neuron } => {
+            (SimKind::Recurrent, *input, *size, 1, *neuron)
+        }
+        Layer::Sparse { input, output, neuron, .. } => {
+            (SimKind::Sparse, *input, *output, 1, *neuron)
+        }
+        l => return Err(format!("layer {li}: unsupported kind {l:?}")),
+    };
+    if matches!(model, NeuronModel::Psum) {
+        return Err(format!("layer {li}: explicit Psum neurons unsupported"));
+    }
+    let rows = match kind {
+        SimKind::Fc => branches * n_in,
+        SimKind::Recurrent => n_in + n,
+        SimKind::Sparse => n_in,
+    };
+    if blob.len() != rows * n {
+        return Err(format!(
+            "layer {li}: weight blob has {} entries, expected {}",
+            blob.len(),
+            rows * n
+        ));
+    }
+    let w: Vec<F16> = blob.iter().map(|&x| F16::from_f32(x)).collect();
+    let conn = if matches!(kind, SimKind::Sparse) {
+        blob.iter().map(|&x| x != 0.0).collect()
+    } else {
+        Vec::new()
+    };
+    let adapt_len = match model {
+        NeuronModel::Alif { .. } => n,
+        NeuronModel::DhLif { .. } => branches * n,
+        _ => 0,
+    };
+    Ok(Sim {
+        kind,
+        model,
+        n_in,
+        n,
+        branches,
+        w,
+        conn,
+        cur: vec![F16::ZERO; branches * n],
+        vmem: vec![F16::ZERO; n],
+        adapt: vec![F16::ZERO; adapt_len],
+        acc: Vec::new(),
+        err: Vec::new(),
+    })
+}
+
+fn f16_tau_vth(m: &NeuronModel) -> (F16, F16) {
+    let (tau, vth) = match *m {
+        NeuronModel::Lif { tau, vth } => (tau, vth),
+        NeuronModel::Alif { tau, vth, .. } => (tau, vth),
+        NeuronModel::DhLif { tau_soma, vth, .. } => (tau_soma, vth),
+        NeuronModel::Readout { tau } => (tau, 1.0),
+        NeuronModel::Psum => (0.0, 1.0),
+    };
+    (F16::from_f32(tau), F16::from_f32(vth))
+}
+
+fn f16_rho_beta(m: &NeuronModel) -> (F16, F16) {
+    match *m {
+        NeuronModel::Alif { rho, beta, .. } => {
+            (F16::from_f32(rho), F16::from_f32(beta))
+        }
+        _ => (F16::ZERO, F16::ZERO),
+    }
+}
+
+/// The FIRE programs spike on `NOT (v < threshold)`.
+fn ge(a: F16, b: F16) -> bool {
+    !(a.to_f32() < b.to_f32())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::NetDef;
+
+    fn two_layer_net() -> (NetDef, Vec<Vec<f32>>) {
+        let lif = NeuronModel::Lif { tau: 0.5, vth: 1.0 };
+        let mut net = NetDef::new("dense-ref-unit", 4);
+        net.layers.push(Layer::Input { size: 2 });
+        net.layers.push(Layer::Fc { input: 2, output: 2, neuron: lif });
+        net.layers.push(Layer::Fc {
+            input: 2,
+            output: 1,
+            neuron: NeuronModel::Readout { tau: 0.5 },
+        });
+        // channel 0 drives neuron 0 at exactly vth; neuron 1 never fires
+        let w1 = vec![1.0, 0.0, 0.0, 0.25];
+        let w2 = vec![0.5, 0.25];
+        (net, vec![vec![], w1, w2])
+    }
+
+    #[test]
+    fn spike_reaches_readout_two_steps_later() {
+        let (net, w) = two_layer_net();
+        let mut r = DenseRef::new(&net, &w, false).unwrap();
+        let stream = Stream::Spikes(vec![vec![0], vec![], vec![], vec![]]);
+        let rows = r.run(&stream);
+        // t=0: hidden 0 hits vth and fires; t=1 the spike integrates at
+        // the readout, which emits 0.5 that same step's FIRE
+        assert_eq!(rows[0], vec![0.0]);
+        assert_eq!(rows[1], vec![0.5]);
+        // decay afterwards: 0.25, 0.125
+        assert_eq!(rows[2], vec![0.25]);
+        assert_eq!(rows[3], vec![0.125]);
+    }
+
+    #[test]
+    fn threshold_is_inclusive() {
+        let (net, w) = two_layer_net();
+        let mut r = DenseRef::new(&net, &w, false).unwrap();
+        // v == vth must spike (the ALU branches on NOT lt)
+        let rows = r.run(&Stream::Spikes(vec![vec![0], vec![]]));
+        assert_eq!(rows[1], vec![0.5], "exact-threshold spike must fire");
+    }
+
+    #[test]
+    fn learn_sweep_moves_head_weights() {
+        let (net, w) = two_layer_net();
+        let mut r = DenseRef::new(&net, &w, true).unwrap();
+        let _ = r.run(&Stream::Spikes(vec![vec![0], vec![], vec![]]));
+        let before = r.head_weights();
+        r.learn(&[1.0]);
+        let after = r.head_weights();
+        // hidden 0 fired once → ACC[0] = 1 → w[0] moves by 1·1.0·lr;
+        // hidden 1 never fired → w[1] untouched
+        assert!(after[0] < before[0]);
+        assert_eq!(after[1], before[1]);
+    }
+}

@@ -1,0 +1,608 @@
+//! The multi-engine differential oracle.
+//!
+//! Each generated case ([`crate::model::gen::generate`]) runs through
+//! every execution engine the repo has — the golden dense reference
+//! ([`DenseRef`]), the event-driven wake-set chip, the same image with
+//! `scan_all` sweeping, and `compile_sharded` at 2/4/8 dies under both
+//! [`ShardStrategy`] cuts — and every readout row (plus, for learning
+//! cases, the post-update head weight matrix) is compared with exact
+//! f32 equality. The generator keeps all values on an exactness grid,
+//! so the first mismatch is a routing/codegen bug, never FP noise; the
+//! report pins it to (engine, step, output neuron) with the single-die
+//! (cc, nc, neuron) coordinates and a seed-replay repro line.
+//!
+//! A typed compiler refusal (e.g. `CrossDieDelay` for a delayed skip
+//! crossing a die cut) is counted per engine, not treated as a failure:
+//! the oracle distinguishes "this engine declines the case" from "this
+//! engine computes the wrong answer".
+
+use std::sync::Arc;
+
+use crate::compiler::{self, Compiled, CompileError, ShardStrategy};
+use crate::coordinator::{Deployment, MultiChipDeployment, StepEvents, StepRow};
+use crate::fuzz::dense::DenseRef;
+use crate::model::gen::{generate, validate_options, GenCase, GenSpec, Stream};
+use crate::model::{axon_pad, Layer, NetDef, NeuronModel};
+use crate::nc::Trap;
+use crate::util::json::Json;
+
+/// Die counts every shardable case is exercised at.
+pub const SHARD_COUNTS: [usize; 3] = [2, 4, 8];
+
+/// One engine-vs-reference mismatch, localized as far as the compiled
+/// metadata allows.
+#[derive(Clone, Debug)]
+pub struct Divergence {
+    pub engine: String,
+    /// The replay seed ([`GenCase::seed`]).
+    pub seed: u64,
+    /// Timestep of the first bad readout row (`None` for post-learning
+    /// weight mismatches and engine faults).
+    pub step: Option<usize>,
+    /// Output-neuron index of the first mismatch (readout rows) or
+    /// head-matrix column (weight mismatches).
+    pub output: Option<usize>,
+    pub expected: f32,
+    pub got: f32,
+    /// (cc, nc, local neuron) of the diverging readout neuron on the
+    /// single-die reference image, when one compiled.
+    pub location: Option<(usize, u8, u16)>,
+    pub detail: String,
+}
+
+impl Divergence {
+    /// The command line that regenerates and re-runs exactly this case.
+    pub fn repro(&self) -> String {
+        format!("cargo run --release -- fuzz --replay {}", self.seed)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let loc = match self.location {
+            Some((cc, nc, n)) => {
+                Json::Str(format!("cc{cc}/nc{nc}/neuron{n}"))
+            }
+            None => Json::Null,
+        };
+        Json::obj()
+            .set("engine", self.engine.as_str())
+            .set("seed", self.seed)
+            .set(
+                "step",
+                self.step.map(|s| Json::Int(s as i64)).unwrap_or(Json::Null),
+            )
+            .set(
+                "output",
+                self.output
+                    .map(|k| Json::Int(k as i64))
+                    .unwrap_or(Json::Null),
+            )
+            .set("expected", self.expected)
+            .set("got", self.got)
+            .set("location", loc)
+            .set("detail", self.detail.as_str())
+            .set("repro", self.repro())
+    }
+}
+
+/// A compiler refusing to build one engine for one case.
+#[derive(Clone, Debug)]
+pub struct Refusal {
+    pub engine: String,
+    pub seed: u64,
+    pub msg: String,
+}
+
+/// How one engine fared on one case.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// Every readout row (and the head weights, for learning cases)
+    /// matched the dense reference bit-exactly.
+    Match,
+    /// The compiler declined this (net, engine) pairing with a typed
+    /// error.
+    Refused(String),
+    Diverged(Divergence),
+}
+
+#[derive(Clone, Debug)]
+pub struct EngineOutcome {
+    pub engine: String,
+    pub outcome: Outcome,
+}
+
+/// All engines' outcomes for one generated case.
+#[derive(Clone, Debug)]
+pub struct CaseReport {
+    pub seed: u64,
+    pub learning: bool,
+    /// Candidates the generator redrew before this case.
+    pub rejected: usize,
+    pub engines: Vec<EngineOutcome>,
+}
+
+impl CaseReport {
+    pub fn divergences(&self) -> impl Iterator<Item = &Divergence> {
+        self.engines.iter().filter_map(|e| match &e.outcome {
+            Outcome::Diverged(d) => Some(d),
+            _ => None,
+        })
+    }
+}
+
+/// Aggregate over a fuzz run.
+#[derive(Clone, Debug, Default)]
+pub struct FuzzReport {
+    /// Cases the generator produced (excludes generator give-ups).
+    pub cases: usize,
+    /// Seeds where the retry budget ran out
+    /// ([`CompileError::Generator`]).
+    pub generator_rejects: usize,
+    pub learning_cases: usize,
+    /// Engine runs that completed and matched.
+    pub engine_matches: usize,
+    pub refusals: Vec<Refusal>,
+    pub divergences: Vec<Divergence>,
+}
+
+impl FuzzReport {
+    pub fn ok(&self) -> bool {
+        self.divergences.is_empty()
+    }
+
+    fn absorb(&mut self, case: CaseReport) {
+        self.cases += 1;
+        if case.learning {
+            self.learning_cases += 1;
+        }
+        for e in case.engines {
+            match e.outcome {
+                Outcome::Match => self.engine_matches += 1,
+                Outcome::Refused(msg) => self.refusals.push(Refusal {
+                    engine: e.engine,
+                    seed: case.seed,
+                    msg,
+                }),
+                Outcome::Diverged(d) => self.divergences.push(d),
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let refusals: Vec<Json> = self
+            .refusals
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("engine", r.engine.as_str())
+                    .set("seed", r.seed)
+                    .set("msg", r.msg.as_str())
+            })
+            .collect();
+        let divergences: Vec<Json> =
+            self.divergences.iter().map(|d| d.to_json()).collect();
+        Json::obj()
+            .set("cases", self.cases as u64)
+            .set("generator_rejects", self.generator_rejects as u64)
+            .set("learning_cases", self.learning_cases as u64)
+            .set("engine_matches", self.engine_matches as u64)
+            .set("refusals", refusals)
+            .set("divergences", divergences)
+    }
+}
+
+/// Run `cases` sequentially-seeded cases through the full oracle.
+pub fn run_fuzz(spec: &GenSpec, cases: usize, base_seed: u64) -> FuzzReport {
+    let mut report = FuzzReport::default();
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64);
+        match generate(spec, seed) {
+            Ok(case) => report.absorb(run_case(spec, &case)),
+            Err(_) => report.generator_rejects += 1,
+        }
+    }
+    report
+}
+
+/// Regenerate one seed and run it through the oracle (`--replay`).
+pub fn replay(spec: &GenSpec, seed: u64) -> Result<CaseReport, CompileError> {
+    let case = generate(spec, seed)?;
+    Ok(run_case(spec, &case))
+}
+
+/// One case through every engine.
+pub fn run_case(spec: &GenSpec, case: &GenCase) -> CaseReport {
+    let mut report = CaseReport {
+        seed: case.seed,
+        learning: case.learning,
+        rejected: case.rejected,
+        engines: Vec::new(),
+    };
+    let mut dense = match DenseRef::new(&case.net, &case.weights, case.learning) {
+        Ok(d) => d,
+        Err(msg) => {
+            report.engines.push(EngineOutcome {
+                engine: "dense-ref".into(),
+                outcome: Outcome::Refused(msg),
+            });
+            return report;
+        }
+    };
+    let golden = dense.run(&case.stream);
+    let golden_w = if case.learning {
+        dense.learn(&case.errors);
+        Some(dense.head_weights())
+    } else {
+        None
+    };
+
+    let opts = validate_options(case.learning, spec);
+
+    // single-die engines share one compiled image: the wake-set run and
+    // the scan-every-column run differ only in the chip's scan flag
+    match compiler::compile(&case.net, &case.weights, &opts) {
+        Ok(rep) => {
+            let image = Arc::new(rep.compiled);
+            let locs = readout_locs(&image);
+            for (name, scan) in [("wake", false), ("scan-all", true)] {
+                let outcome = match Deployment::from_image(image.clone()) {
+                    Ok(mut d) => {
+                        d.chip.scan_all = scan;
+                        drive(
+                            name,
+                            &mut Engine::Single(d),
+                            case,
+                            &golden,
+                            golden_w.as_deref(),
+                            &locs,
+                        )
+                    }
+                    Err(t) => Outcome::Diverged(fault(name, case.seed, &t)),
+                };
+                report.engines.push(EngineOutcome {
+                    engine: name.into(),
+                    outcome,
+                });
+            }
+        }
+        Err(e) => {
+            for name in ["wake", "scan-all"] {
+                report.engines.push(EngineOutcome {
+                    engine: name.into(),
+                    outcome: Outcome::Refused(e.to_string()),
+                });
+            }
+        }
+    }
+
+    for chips in SHARD_COUNTS {
+        for strategy in [ShardStrategy::Contiguous, ShardStrategy::MinCut] {
+            let name = format!("sharded-{chips}-{strategy}");
+            let mut o = opts.clone();
+            o.strategy = strategy;
+            let outcome =
+                match compiler::compile_sharded(&case.net, &case.weights, &o, chips) {
+                    Ok(rep) => match MultiChipDeployment::new(Arc::new(rep.sharded)) {
+                        Ok(m) => drive(
+                            &name,
+                            &mut Engine::Multi(m),
+                            case,
+                            &golden,
+                            golden_w.as_deref(),
+                            &[],
+                        ),
+                        Err(t) => Outcome::Diverged(fault(&name, case.seed, &t)),
+                    },
+                    Err(e) => Outcome::Refused(e.to_string()),
+                };
+            report.engines.push(EngineOutcome {
+                engine: name,
+                outcome,
+            });
+        }
+    }
+    report
+}
+
+/// Compile the single-die engine in the pre-fix bug-compat mode
+/// (`Options::aliased_sparse_fanout`) and diff its forward pass against
+/// the dense reference. Returns the first divergence — `None` when the
+/// case never exercises a spike-fed sparse destination (or the compiler
+/// refuses it), in which case the aliasing bug has nothing to bite.
+pub fn aliased_divergence(spec: &GenSpec, case: &GenCase) -> Option<Divergence> {
+    let mut dense = DenseRef::new(&case.net, &case.weights, false).ok()?;
+    let golden = dense.run(&case.stream);
+    let mut opts = validate_options(false, spec);
+    opts.aliased_sparse_fanout = true;
+    let rep = compiler::compile(&case.net, &case.weights, &opts).ok()?;
+    let image = Arc::new(rep.compiled);
+    let locs = readout_locs(&image);
+    let d = Deployment::from_image(image).ok()?;
+    match drive(
+        "aliased",
+        &mut Engine::Single(d),
+        case,
+        &golden,
+        None,
+        &locs,
+    ) {
+        Outcome::Diverged(d) => Some(d),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine plumbing.
+// ---------------------------------------------------------------------
+
+enum Engine {
+    Single(Deployment),
+    Multi(MultiChipDeployment),
+}
+
+impl Engine {
+    fn step(&mut self, ev: StepEvents<'_>) -> Result<StepRow, Trap> {
+        match self {
+            Engine::Single(d) => d.step_events(ev),
+            Engine::Multi(m) => m.step_events(ev),
+        }
+    }
+
+    fn learn(&mut self, errors: &[f32]) -> Result<(), Trap> {
+        match self {
+            Engine::Single(d) => d.learn_step(errors),
+            Engine::Multi(m) => m.learn_step(errors),
+        }
+    }
+
+    /// The head's logical weight matrix read back from the die(s) —
+    /// comparable against [`DenseRef::head_weights`].
+    fn head_weights(
+        &self,
+        net: &NetDef,
+        weights: &[Vec<f32>],
+    ) -> Result<Vec<f32>, Trap> {
+        match self {
+            Engine::Single(d) => head_weights_via(
+                net,
+                weights,
+                d.compiled.cores.iter().enumerate(),
+                |k, n| d.peek_weights(k, n),
+            ),
+            Engine::Multi(m) => head_weights_via(
+                net,
+                weights,
+                m.compiled.cores.iter().enumerate().map(|(k, (_, c))| (k, c)),
+                |k, n| m.peek_weights(k, n),
+            ),
+        }
+    }
+}
+
+fn fault(engine: &str, seed: u64, t: &Trap) -> Divergence {
+    Divergence {
+        engine: engine.into(),
+        seed,
+        step: None,
+        output: None,
+        expected: 0.0,
+        got: 0.0,
+        location: None,
+        detail: format!("engine fault: {}", t.msg),
+    }
+}
+
+/// Invert the single-die readout map: output index → (cc, nc, neuron).
+fn readout_locs(image: &Compiled) -> Vec<Option<(usize, u8, u16)>> {
+    let mut locs = vec![None; image.readout.len()];
+    for (&(cc, nc, neuron), &k) in &image.readout {
+        if let Some(slot) = locs.get_mut(k) {
+            *slot = Some((cc, nc, neuron));
+        }
+    }
+    locs
+}
+
+/// Step the engine through the case's stream comparing every readout
+/// row against the golden rows, then (for learning cases) apply the
+/// learning step and compare the head weight matrix.
+fn drive(
+    name: &str,
+    eng: &mut Engine,
+    case: &GenCase,
+    golden: &[Vec<f32>],
+    golden_w: Option<&[f32]>,
+    locs: &[Option<(usize, u8, u16)>],
+) -> Outcome {
+    for (t, want) in golden.iter().enumerate() {
+        let ev = match &case.stream {
+            Stream::Spikes(s) => StepEvents::Spikes(&s[t]),
+            Stream::Dense(v) => StepEvents::Dense(&v[t]),
+        };
+        let sr = match eng.step(ev) {
+            Ok(sr) => sr,
+            Err(trap) => return Outcome::Diverged(fault(name, case.seed, &trap)),
+        };
+        for (k, &w) in want.iter().enumerate() {
+            let got = sr.row.get(k).copied().unwrap_or(0.0);
+            if got != w {
+                return Outcome::Diverged(Divergence {
+                    engine: name.into(),
+                    seed: case.seed,
+                    step: Some(t),
+                    output: Some(k),
+                    expected: w,
+                    got,
+                    location: locs.get(k).copied().flatten(),
+                    detail: format!(
+                        "readout row mismatch at step {t}, output {k}"
+                    ),
+                });
+            }
+        }
+    }
+    let Some(want_w) = golden_w else {
+        return Outcome::Match;
+    };
+    if let Err(trap) = eng.learn(&case.errors) {
+        return Outcome::Diverged(fault(name, case.seed, &trap));
+    }
+    let got_w = match eng.head_weights(&case.net, &case.weights) {
+        Ok(w) => w,
+        Err(trap) => return Outcome::Diverged(fault(name, case.seed, &trap)),
+    };
+    let n_out = case.errors.len();
+    for (idx, (&w, &g)) in want_w.iter().zip(got_w.iter()).enumerate() {
+        if w != g {
+            return Outcome::Diverged(Divergence {
+                engine: name.into(),
+                seed: case.seed,
+                step: None,
+                output: Some(idx % n_out.max(1)),
+                expected: w,
+                got: g,
+                location: None,
+                detail: format!(
+                    "post-learning head weight mismatch at row {}, column {}",
+                    idx / n_out.max(1),
+                    idx % n_out.max(1)
+                ),
+            });
+        }
+    }
+    Outcome::Match
+}
+
+/// Weight-region words one core part occupies (must mirror
+/// `codegen::core_weights` exactly — the peek offsets walk this).
+fn part_words(
+    net: &NetDef,
+    weights: &[Vec<f32>],
+    li: usize,
+    n_base: usize,
+    count: usize,
+) -> usize {
+    let pad = axon_pad(net, li);
+    match &net.layers[li] {
+        Layer::Fc { input, neuron, .. } => {
+            let branches = match neuron {
+                NeuronModel::DhLif { branches, .. } => *branches,
+                _ => 1,
+            };
+            (pad + input * branches) * count
+        }
+        Layer::Recurrent { input, size, .. } => (pad + input + size) * count,
+        Layer::Sparse { input, output, .. } => {
+            let blob = &weights[li];
+            let mut nz = 0usize;
+            for u in 0..*input {
+                for j in 0..count {
+                    if blob[u * output + n_base + j] != 0.0 {
+                        nz += 1;
+                    }
+                }
+            }
+            nz
+        }
+        _ => 0,
+    }
+}
+
+/// Reassemble the head's logical weight matrix from per-core weight
+/// regions: each hosting core stores `(pad + n_in)` rows × `count`
+/// columns for its resident head neurons, after any co-located earlier
+/// parts' weights.
+fn head_weights_via<'a, I, F>(
+    net: &NetDef,
+    weights: &[Vec<f32>],
+    cores: I,
+    mut peek: F,
+) -> Result<Vec<f32>, Trap>
+where
+    I: Iterator<Item = (usize, &'a crate::compiler::codegen::CoreMeta)>,
+    F: FnMut(usize, usize) -> Result<Vec<f32>, Trap>,
+{
+    let head_li = net.layers.len() - 1;
+    let (n_in, n_out) = match &net.layers[head_li] {
+        Layer::Fc { input, output, .. } => (*input, *output),
+        other => {
+            return Err(Trap {
+                pc: 0,
+                msg: format!("learning head is not Fc: {other:?}"),
+            })
+        }
+    };
+    let pad = axon_pad(net, head_li);
+    let mut w = vec![0.0f32; n_in * n_out];
+    for (k, core) in cores {
+        let mut off = 0usize;
+        for &(li, n_base, count, _) in &core.parts {
+            if li == head_li {
+                let region = peek(k, off + (pad + n_in) * count)?;
+                for u in 0..n_in {
+                    for j in 0..count {
+                        w[u * n_out + n_base + j] =
+                            region[off + (pad + u) * count + j];
+                    }
+                }
+            }
+            off += part_words(net, weights, li, n_base, count);
+        }
+    }
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_cases_match_across_all_engines() {
+        let spec = GenSpec::default();
+        let report = run_fuzz(&spec, 12, 100);
+        assert!(report.cases >= 10, "generator gave up too often");
+        assert!(
+            report.ok(),
+            "divergences: {:#?}\nrepro: {}",
+            report.divergences,
+            report.divergences[0].repro()
+        );
+        assert!(report.engine_matches > 0);
+    }
+
+    #[test]
+    fn sharded_scale_cases_run_on_multi_die_engines_only() {
+        let spec = GenSpec::sharded_scale();
+        let case = generate(&spec, 3).unwrap();
+        let report = run_case(&spec, &case);
+        // one die cannot hold the net: the single-die engines refuse …
+        for name in ["wake", "scan-all"] {
+            let e = report
+                .engines
+                .iter()
+                .find(|e| e.engine == name)
+                .unwrap();
+            assert!(
+                matches!(e.outcome, Outcome::Refused(_)),
+                "{name} should refuse a past-one-die net"
+            );
+        }
+        // … and at least one sharded engine runs it and matches
+        let matched = report
+            .engines
+            .iter()
+            .filter(|e| e.engine.starts_with("sharded"))
+            .filter(|e| matches!(e.outcome, Outcome::Match))
+            .count();
+        assert!(matched > 0, "no sharded engine matched: {report:#?}");
+        assert_eq!(report.divergences().count(), 0, "{report:#?}");
+    }
+
+    #[test]
+    fn report_json_renders() {
+        let spec = GenSpec::default();
+        let report = run_fuzz(&spec, 2, 7);
+        let s = report.to_json().render();
+        assert!(s.contains("\"cases\":2"), "{s}");
+        assert!(s.contains("divergences"), "{s}");
+    }
+}

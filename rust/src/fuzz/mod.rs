@@ -1,0 +1,40 @@
+//! Differential fuzzing subsystem.
+//!
+//! Two halves, matching the two halves of the bug-hunting loop:
+//!
+//! * [`crate::model::gen`] — the seeded, parameterized net/workload
+//!   generator. A [`GenSpec`] describes a family of networks (layer
+//!   kinds, widths, skip/recurrence/learning probabilities, input
+//!   statistics) and `generate(spec, seed)` draws one compilable
+//!   `(net, weights, stream)` case, deterministically per seed, with
+//!   every value placed on an exactness grid so FP16 accumulation
+//!   order cannot affect any result.
+//! * [`differential`] — the multi-engine oracle. Each case runs on the
+//!   [`dense::DenseRef`] golden interpreter (straight from the
+//!   `NetDef`, no placement or codegen anywhere near it) and on every
+//!   compiled engine: wake-set, scan-all, and 2/4/8-die sharded builds
+//!   under both cut strategies. Rows must match with exact f32
+//!   equality; the first mismatch is reported with (engine, step,
+//!   output neuron), chip coordinates, and a `--replay <seed>` repro
+//!   line.
+//!
+//! The subsystem exists because the sparse-destination fan-out
+//! aliasing bug survived every example-based test in the repo: it only
+//! bites when ≥ 2 distinct upstream axons hit a sparse destination
+//! with different connection rows — a shape no hand-written workload
+//! happened to pin. `Options::aliased_sparse_fanout` preserves the
+//! broken encoding so [`differential::aliased_divergence`] can
+//! demonstrate, forever, that the oracle catches it mechanically.
+//!
+//! CLI: `taibai fuzz --cases N --seed S [--max-neurons M] [--sharded]
+//! [--aliased] [--replay SEED]`.
+
+pub mod dense;
+pub mod differential;
+
+pub use crate::model::gen::{generate, GenCase, GenSpec, Stream};
+pub use dense::DenseRef;
+pub use differential::{
+    aliased_divergence, replay, run_case, run_fuzz, CaseReport, Divergence,
+    FuzzReport, Outcome,
+};

@@ -72,6 +72,7 @@ pub mod compiler;
 pub mod datasets;
 pub mod runtime;
 pub mod coordinator;
+pub mod fuzz;
 pub mod metrics;
 pub mod api;
 pub mod bench;

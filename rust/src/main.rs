@@ -18,6 +18,18 @@
 //!                                    `api::serve::SessionPool` (`--pool`,
 //!                                    `--clients`, `--confidence <p>` for
 //!                                    early-stop decoding)
+//! * `fuzz`                         — differential fuzzing: seeded random
+//!                                    nets through every engine (dense
+//!                                    reference, wake-set, scan-all,
+//!                                    sharded 2/4/8 × both cut strategies)
+//!                                    with exact row comparison. `--cases N
+//!                                    --seed S --max-neurons M`, plus
+//!                                    `--sharded` (past-one-die nets),
+//!                                    `--aliased` (prove the oracle catches
+//!                                    the pre-fix fan-out aliasing bug), and
+//!                                    `--replay SEED` (re-run one case).
+//!                                    Writes `fuzz-repro.json` (`--out`) and
+//!                                    exits 1 on any divergence
 //! * `storage <vgg16|resnet18|…>`   — Fig 14 topology-table storage view
 //! * `baseline <model.hlo.txt>`     — load + execute an AOT artifact via PJRT
 //!                                    (requires the `pjrt` feature)
@@ -45,6 +57,7 @@ fn main() {
         "storage" => storage_cmd(&args),
         "run-app" => run_app(&args),
         "serve-demo" => serve_demo(&args),
+        "fuzz" => fuzz(&args),
         "baseline" => baseline(&args),
         other => {
             eprintln!("unknown command {other:?}; see rust/src/main.rs header");
@@ -365,5 +378,128 @@ fn baseline(args: &Args) {
             eprintln!("failed: {e}");
             std::process::exit(1);
         }
+    }
+}
+
+/// Differential fuzzing: seeded generated nets through every engine,
+/// with exact row (and post-learning weight) comparison against the
+/// dense reference. Exits 1 on any divergence, writing a JSON repro
+/// report for CI to archive.
+fn fuzz(args: &Args) {
+    use taibai::fuzz::{
+        aliased_divergence, generate, replay, run_fuzz, GenSpec, Outcome,
+    };
+
+    let cases = args.usize("cases", 100);
+    let base_seed = args.u64("seed", 1);
+    let out_path = args.get_or("out", "fuzz-repro.json");
+    let mut spec = if args.has("sharded") {
+        GenSpec::sharded_scale()
+    } else {
+        GenSpec::default()
+    };
+    if args.has("max-neurons") {
+        spec.max_neurons = args.usize("max-neurons", spec.max_neurons);
+    }
+
+    if let Some(raw) = args.get("replay") {
+        let seed: u64 = raw.parse().unwrap_or_else(|_| {
+            eprintln!("--replay expects a case seed (u64), got {raw:?}");
+            std::process::exit(2);
+        });
+        let report = match replay(&spec, seed) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("replay failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        println!(
+            "case {seed}: learning={}, {} candidate redraws",
+            report.learning, report.rejected
+        );
+        let mut bad = 0usize;
+        for e in &report.engines {
+            match &e.outcome {
+                Outcome::Match => println!("  {:<22} match", e.engine),
+                Outcome::Refused(msg) => {
+                    println!("  {:<22} refused: {msg}", e.engine)
+                }
+                Outcome::Diverged(d) => {
+                    bad += 1;
+                    println!(
+                        "  {:<22} DIVERGED: {} (expected {}, got {})",
+                        e.engine, d.detail, d.expected, d.got
+                    );
+                }
+            }
+        }
+        if bad > 0 {
+            std::process::exit(1);
+        }
+        return;
+    }
+
+    if args.has("aliased") {
+        // bug-compat demonstration: the pre-fix sparse-destination
+        // fan-out encoding must diverge from the dense reference on
+        // cases that exercise a spike-fed sparse destination
+        let (mut diverged, mut eligible) = (0usize, 0usize);
+        for i in 0..cases {
+            let seed = base_seed.wrapping_add(i as u64);
+            let Ok(case) = generate(&spec, seed) else { continue };
+            eligible += 1;
+            if let Some(d) = aliased_divergence(&spec, &case) {
+                diverged += 1;
+                if diverged == 1 {
+                    println!(
+                        "first aliasing divergence: seed {}, step {:?}, \
+                         output {:?} (expected {}, got {})",
+                        d.seed, d.step, d.output, d.expected, d.got
+                    );
+                }
+            }
+        }
+        println!(
+            "aliased mode: {diverged}/{eligible} cases diverged from the \
+             dense reference"
+        );
+        if diverged == 0 {
+            eprintln!(
+                "pre-fix encoding produced no divergence — the oracle lost \
+                 its teeth"
+            );
+            std::process::exit(1);
+        }
+        return;
+    }
+
+    let report = run_fuzz(&spec, cases, base_seed);
+    println!(
+        "fuzz: {} cases ({} learning), {} engine runs matched, {} refusals, \
+         {} generator give-ups, {} divergences",
+        report.cases,
+        report.learning_cases,
+        report.engine_matches,
+        report.refusals.len(),
+        report.generator_rejects,
+        report.divergences.len(),
+    );
+    if !report.ok() {
+        for d in report.divergences.iter().take(5) {
+            eprintln!(
+                "  {} seed {}: {} — repro: {}",
+                d.engine,
+                d.seed,
+                d.detail,
+                d.repro()
+            );
+        }
+        if let Err(e) = std::fs::write(out_path, report.to_json().render()) {
+            eprintln!("writing {out_path}: {e}");
+        } else {
+            eprintln!("repro report written to {out_path}");
+        }
+        std::process::exit(1);
     }
 }

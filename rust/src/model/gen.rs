@@ -1,0 +1,554 @@
+//! Seeded, parameterized net/workload generator — the `GenSpec` half of
+//! the differential fuzzing subsystem (see [`crate::fuzz`]).
+//!
+//! Every quantity the generator draws lives on a coarse power-of-two
+//! grid chosen so that cross-engine divergence can only come from
+//! *routing* bugs, never from FP16 accumulation order:
+//!
+//! * spike-path weights are multiples of 1/32 with |w| ≤ 0.5 and the
+//!   nonzero fan-in per destination neuron is small, so every partial
+//!   sum of synaptic currents is an exact multiple of 1/32 far below
+//!   64 — the region where FP16 represents that grid exactly. The
+//!   order deliveries land in (which differs across placements and
+//!   shard counts) therefore cannot change any value.
+//! * dense input values are multiples of 1/8 in [0, 1] and the first
+//!   layer's weights are ≤ 4/32, so payload-scaled products are exact
+//!   multiples of 1/256 summing far below 8 — again exact.
+//!
+//! A candidate the compiler refuses (`TooManyCores`, `Skip`, …) is
+//! redrawn from a derived sub-seed; after [`GenSpec::attempts`]
+//! refusals the generator returns [`CompileError::Generator`] so fuzz
+//! drivers count the refusal instead of aborting.
+
+use crate::compiler::{self, CompileError, Objective, Options};
+use crate::model::{Layer, NetDef, NeuronModel, Skip};
+use crate::util::Rng;
+
+/// Inclusive `(lo, hi)` knob ranges describing one family of fuzz cases.
+#[derive(Clone, Debug)]
+pub struct GenSpec {
+    pub hidden_layers: (usize, usize),
+    pub width: (usize, usize),
+    pub input_size: (usize, usize),
+    pub outputs: (usize, usize),
+    /// Keep `hi` < 256 so learning-head fire counters stay inside the
+    /// 256-entry ITOF table.
+    pub timesteps: (usize, usize),
+    /// Nonzero connections per destination neuron (clamped to the
+    /// source width). Keep `hi` ≤ 48 to preserve the exactness grid.
+    pub fan_in: (usize, usize),
+    /// Probability a hidden layer is a random-sparse connection.
+    pub p_sparse: f64,
+    /// Probability the first hidden layer is recurrent (deeper layers
+    /// get a reduced chance).
+    pub p_recurrent: f64,
+    /// Probability the first hidden layer uses dendritic DH-LIF
+    /// neurons.
+    pub p_dhlif: f64,
+    /// Probability a non-sparse hidden layer uses adaptive ALIF
+    /// neurons (sparse layers always deploy plain LIF).
+    pub p_alif: f64,
+    /// Probability of one delayed skip connection (needs ≥ 2 hidden
+    /// layers to have a non-adjacent destination).
+    pub p_skip: f64,
+    /// Probability the case deploys the on-chip learning head.
+    pub p_learning: f64,
+    /// Per-channel event probability per timestep.
+    pub input_rate: f64,
+    pub max_neurons: usize,
+    /// Candidate redraws before giving up with
+    /// [`CompileError::Generator`].
+    pub attempts: usize,
+    /// Validate under `Objective::Balanced(n)` instead of the default
+    /// dense packing (`Some(1)` forces one neuron per core — the knob
+    /// that pushes nets past one die).
+    pub neurons_per_core: Option<usize>,
+    /// Accept candidates that exceed one die as long as
+    /// [`compiler::compile_sharded`] can place them (the
+    /// `Backend::Sharded`-only regime).
+    pub allow_sharded: bool,
+}
+
+impl Default for GenSpec {
+    fn default() -> GenSpec {
+        GenSpec {
+            hidden_layers: (1, 3),
+            width: (4, 12),
+            input_size: (4, 16),
+            outputs: (2, 4),
+            timesteps: (8, 24),
+            fan_in: (2, 6),
+            p_sparse: 0.35,
+            p_recurrent: 0.25,
+            p_dhlif: 0.2,
+            p_alif: 0.3,
+            p_skip: 0.3,
+            p_learning: 0.25,
+            input_rate: 0.3,
+            max_neurons: 96,
+            attempts: 16,
+            neurons_per_core: None,
+            allow_sharded: false,
+        }
+    }
+}
+
+impl GenSpec {
+    /// Nets one die cannot hold under one-neuron-per-core placement:
+    /// `compile` refuses with `TooManyCores`, `compile_sharded`
+    /// succeeds — the `Backend::Sharded`-only regime.
+    pub fn sharded_scale() -> GenSpec {
+        GenSpec {
+            hidden_layers: (2, 2),
+            width: (560, 600),
+            fan_in: (2, 4),
+            p_sparse: 0.0,
+            p_recurrent: 0.0,
+            p_dhlif: 0.0,
+            p_skip: 0.0,
+            p_learning: 0.0,
+            max_neurons: 1300,
+            neurons_per_core: Some(1),
+            allow_sharded: true,
+            ..GenSpec::default()
+        }
+    }
+}
+
+/// One generated event stream, matching the first layer's input mode.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stream {
+    /// Firing channel ids per timestep (spike input).
+    Spikes(Vec<Vec<u16>>),
+    /// Per-channel FP values per timestep (dense input; the first
+    /// hidden layer is `Layer::Sparse`, whose integration program
+    /// scales by the packet payload).
+    Dense(Vec<Vec<f32>>),
+}
+
+impl Stream {
+    pub fn steps(&self) -> usize {
+        match self {
+            Stream::Spikes(s) => s.len(),
+            Stream::Dense(v) => v.len(),
+        }
+    }
+}
+
+/// One compilable fuzz case: net + weights + event stream (plus an
+/// error vector for learning cases), with the seed that replays it.
+#[derive(Clone, Debug)]
+pub struct GenCase {
+    pub seed: u64,
+    pub net: NetDef,
+    pub weights: Vec<Vec<f32>>,
+    pub stream: Stream,
+    pub learning: bool,
+    /// Per-class error signal applied in one `learn_step` after the
+    /// stream (empty when `learning` is false).
+    pub errors: Vec<f32>,
+    /// Candidates the compiler refused before this one.
+    pub rejected: usize,
+}
+
+/// Draw-and-validate loop: redraw from derived sub-seeds until the
+/// compiler accepts a candidate or the retry budget runs out.
+pub fn generate(spec: &GenSpec, seed: u64) -> Result<GenCase, CompileError> {
+    let mut last = String::from("no candidate drawn");
+    let mut rejected = 0usize;
+    for attempt in 0..spec.attempts.max(1) {
+        let sub = seed ^ (attempt as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut case = draw(spec, sub);
+        case.seed = seed;
+        match validate(&case, spec) {
+            Ok(()) => {
+                case.rejected = rejected;
+                return Ok(case);
+            }
+            Err(e) => {
+                rejected += 1;
+                last = e.to_string();
+            }
+        }
+    }
+    Err(CompileError::Generator { seed, msg: last })
+}
+
+/// The compile options a case is validated under — oracle engines
+/// should deploy with the same learning flag and objective.
+pub fn validate_options(learning: bool, spec: &GenSpec) -> Options {
+    Options {
+        sa_iters: 0,
+        learning,
+        objective: match spec.neurons_per_core {
+            Some(n) => Objective::Balanced(n),
+            None => Objective::MinCores,
+        },
+        ..Options::default()
+    }
+}
+
+fn validate(case: &GenCase, spec: &GenSpec) -> Result<(), CompileError> {
+    let opts = validate_options(case.learning, spec);
+    match compiler::compile(&case.net, &case.weights, &opts) {
+        Ok(_) => Ok(()),
+        Err(CompileError::TooManyCores { .. }) if spec.allow_sharded => {
+            compiler::compile_sharded(&case.net, &case.weights, &opts, 2).map(|_| ())
+        }
+        Err(e) => Err(e),
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Kind {
+    Fc,
+    DhLif,
+    Recurrent,
+    Sparse,
+}
+
+fn draw(spec: &GenSpec, sub_seed: u64) -> GenCase {
+    let mut rng = Rng::new(sub_seed);
+    let h = irange(&mut rng, spec.hidden_layers).max(1);
+    let n_in = irange(&mut rng, spec.input_size).max(1);
+    let n_out = irange(&mut rng, spec.outputs).max(1);
+    let timesteps = irange(&mut rng, spec.timesteps).max(1);
+    let learning = rng.chance(spec.p_learning);
+
+    // One optional skip over ≥ 1 intermediate layer. Layer indices
+    // include Input (0); hidden layers are 1..=h, the head is h+1.
+    // Learning cases keep the head skip-free so its fan-in stays the
+    // plain trained matrix.
+    let skip = if h >= 2 && rng.chance(spec.p_skip) {
+        let to_hi = if learning { h } else { h + 1 };
+        if to_hi >= 3 {
+            let to = rng.range(3, to_hi + 1);
+            let from = rng.range(1, to - 1);
+            Some(Skip { from, to })
+        } else {
+            None
+        }
+    } else {
+        None
+    };
+
+    let mut kinds: Vec<Kind> = Vec::with_capacity(h);
+    for i in 0..h {
+        let k = if rng.chance(spec.p_sparse) {
+            Kind::Sparse
+        } else if i == 0 && rng.chance(spec.p_recurrent) {
+            Kind::Recurrent
+        } else if i == 0 && rng.chance(spec.p_dhlif) {
+            Kind::DhLif
+        } else if i > 0 && rng.chance(spec.p_recurrent * 0.4) {
+            Kind::Recurrent
+        } else {
+            Kind::Fc
+        };
+        kinds.push(k);
+    }
+    if let Some(s) = skip {
+        // skip sources need a plain shared axon space (Fc/Sparse) and
+        // destinations a full fan-in matrix (Fc)
+        if !matches!(kinds[s.from - 1], Kind::Fc | Kind::Sparse) {
+            kinds[s.from - 1] = Kind::Fc;
+        }
+        if s.to <= h {
+            kinds[s.to - 1] = Kind::Fc;
+        }
+        // a recurrent layer right before the destination would rebase
+        // the destination's fan-in rows past the skip's plain axons
+        if matches!(kinds[s.to - 2], Kind::Recurrent) {
+            kinds[s.to - 2] = Kind::Fc;
+        }
+    }
+
+    // Widths; a skip reuses the destination's weight matrix, so the
+    // source layer must match the destination's input width.
+    let mut widths = vec![spec.width.0; h];
+    for _ in 0..8 {
+        let mut cand: Vec<usize> =
+            (0..h).map(|_| irange(&mut rng, spec.width)).collect();
+        if let Some(s) = skip {
+            cand[s.to - 2] = cand[s.from - 1];
+        }
+        if cand.iter().sum::<usize>() + n_out <= spec.max_neurons {
+            widths = cand;
+            break;
+        }
+    }
+
+    let dense_input = matches!(kinds[0], Kind::Sparse);
+    let mut net = NetDef::new(&format!("fuzz-{sub_seed:016x}"), timesteps);
+    net.layers.push(Layer::Input { size: n_in });
+    let mut weights: Vec<Vec<f32>> = vec![Vec::new()];
+    let mut prev = n_in;
+    for (i, &k) in kinds.iter().enumerate() {
+        let out = widths[i];
+        let vth = pick(&mut rng, &[0.5, 0.75, 1.0]);
+        let tau = pick(&mut rng, &[0.25, 0.5, 0.75, 0.9]);
+        match k {
+            Kind::Sparse => {
+                let (w, max_fan) = sparse_blob(&mut rng, spec, prev, out, i == 0);
+                net.layers.push(Layer::Sparse {
+                    input: prev,
+                    output: out,
+                    density: (max_fan as f64 / prev as f64).min(1.0),
+                    neuron: NeuronModel::Lif { tau, vth },
+                });
+                weights.push(w);
+            }
+            Kind::Recurrent => {
+                net.layers.push(Layer::Recurrent {
+                    input: prev,
+                    size: out,
+                    neuron: lif_or_alif(&mut rng, spec, tau, vth),
+                });
+                weights.push(recurrent_blob(&mut rng, spec, prev, out));
+            }
+            Kind::DhLif => {
+                let branches = rng.range(2, 5);
+                net.layers.push(Layer::Fc {
+                    input: prev,
+                    output: out,
+                    neuron: NeuronModel::DhLif { branches, tau_soma: tau, vth },
+                });
+                weights.push(fc_blob(&mut rng, spec, prev, out, branches));
+            }
+            Kind::Fc => {
+                net.layers.push(Layer::Fc {
+                    input: prev,
+                    output: out,
+                    neuron: lif_or_alif(&mut rng, spec, tau, vth),
+                });
+                weights.push(fc_blob(&mut rng, spec, prev, out, 1));
+            }
+        }
+        prev = out;
+    }
+    let head_tau = pick(&mut rng, &[0.5, 0.75, 0.9]);
+    net.layers.push(Layer::Fc {
+        input: prev,
+        output: n_out,
+        neuron: NeuronModel::Readout { tau: head_tau },
+    });
+    weights.push(fc_blob(&mut rng, spec, prev, n_out, 1));
+    if let Some(s) = skip {
+        net.skips.push(s);
+    }
+
+    let stream = if dense_input {
+        let mut vals = Vec::with_capacity(timesteps);
+        for _ in 0..timesteps {
+            let row: Vec<f32> = (0..n_in)
+                .map(|_| {
+                    if rng.chance(spec.input_rate) {
+                        rng.range(1, 9) as f32 / 8.0
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            vals.push(row);
+        }
+        Stream::Dense(vals)
+    } else {
+        let mut sp = Vec::with_capacity(timesteps);
+        for _ in 0..timesteps {
+            let mut row: Vec<u16> = Vec::new();
+            for c in 0..n_in {
+                if rng.chance(spec.input_rate) {
+                    row.push(c as u16);
+                }
+            }
+            sp.push(row);
+        }
+        Stream::Spikes(sp)
+    };
+
+    let errors = if learning {
+        let mut e: Vec<f32> = (0..n_out)
+            .map(|_| (rng.range(0, 17) as f32 - 8.0) / 8.0)
+            .collect();
+        if e.iter().all(|&x| x == 0.0) {
+            e[0] = 0.5;
+        }
+        e
+    } else {
+        Vec::new()
+    };
+
+    GenCase {
+        seed: sub_seed,
+        net,
+        weights,
+        stream,
+        learning,
+        errors,
+        rejected: 0,
+    }
+}
+
+fn irange(rng: &mut Rng, (lo, hi): (usize, usize)) -> usize {
+    rng.range(lo, hi.max(lo) + 1)
+}
+
+fn pick(rng: &mut Rng, xs: &[f32]) -> f32 {
+    xs[rng.range(0, xs.len())]
+}
+
+/// 1/32-grid spike-path weight, |w| ≤ 16/32, biased excitatory.
+fn spike_weight(rng: &mut Rng) -> f32 {
+    let mag = rng.range(1, 17) as f32 / 32.0;
+    if rng.chance(0.2) {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// 1/32-grid data-path weight, |w| ≤ 4/32 — products against 1/8-grid
+/// inputs stay on the exact 1/256 grid.
+fn data_weight(rng: &mut Rng) -> f32 {
+    let mag = rng.range(1, 5) as f32 / 32.0;
+    if rng.chance(0.2) {
+        -mag
+    } else {
+        mag
+    }
+}
+
+fn fan(rng: &mut Rng, spec: &GenSpec, n_in: usize) -> usize {
+    let lo = spec.fan_in.0.clamp(1, n_in);
+    let hi = spec.fan_in.1.clamp(lo, n_in);
+    rng.range(lo, hi + 1)
+}
+
+fn fc_blob(
+    rng: &mut Rng,
+    spec: &GenSpec,
+    n_in: usize,
+    n_out: usize,
+    branches: usize,
+) -> Vec<f32> {
+    let mut w = vec![0.0f32; branches * n_in * n_out];
+    for t in 0..n_out {
+        let f = fan(rng, spec, n_in);
+        for u in rng.sample_indices(n_in, f) {
+            let b = if branches > 1 { rng.range(0, branches) } else { 0 };
+            w[(b * n_in + u) * n_out + t] = spike_weight(rng);
+        }
+    }
+    w
+}
+
+fn recurrent_blob(rng: &mut Rng, spec: &GenSpec, n_in: usize, size: usize) -> Vec<f32> {
+    let mut w = vec![0.0f32; (n_in + size) * size];
+    for t in 0..size {
+        let f = fan(rng, spec, n_in);
+        for u in rng.sample_indices(n_in, f) {
+            w[u * size + t] = spike_weight(rng);
+        }
+        let rec = rng.range(0, size.min(3) + 1);
+        if rec > 0 {
+            for j in rng.sample_indices(size, rec) {
+                w[(n_in + j) * size + t] = spike_weight(rng);
+            }
+        }
+    }
+    w
+}
+
+fn sparse_blob(
+    rng: &mut Rng,
+    spec: &GenSpec,
+    n_in: usize,
+    n_out: usize,
+    dense: bool,
+) -> (Vec<f32>, usize) {
+    let mut w = vec![0.0f32; n_in * n_out];
+    let mut max_fan = 1usize;
+    for t in 0..n_out {
+        let f = fan(rng, spec, n_in);
+        max_fan = max_fan.max(f);
+        for u in rng.sample_indices(n_in, f) {
+            w[u * n_out + t] = if dense {
+                data_weight(rng)
+            } else {
+                spike_weight(rng)
+            };
+        }
+    }
+    (w, max_fan)
+}
+
+fn lif_or_alif(rng: &mut Rng, spec: &GenSpec, tau: f32, vth: f32) -> NeuronModel {
+    if rng.chance(spec.p_alif) {
+        NeuronModel::Alif { tau, vth, beta: 0.25, rho: 0.875 }
+    } else {
+        NeuronModel::Lif { tau, vth }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_equal_seeds() {
+        let spec = GenSpec::default();
+        for seed in [1u64, 7, 42] {
+            let a = generate(&spec, seed).unwrap();
+            let b = generate(&spec, seed).unwrap();
+            assert_eq!(a.net.layers, b.net.layers);
+            assert_eq!(a.net.skips, b.net.skips);
+            assert_eq!(a.weights, b.weights);
+            assert_eq!(a.stream, b.stream);
+            assert_eq!(a.errors, b.errors);
+        }
+    }
+
+    #[test]
+    fn cases_compile_and_respect_bounds() {
+        let spec = GenSpec::default();
+        let (mut sparse, mut learn, mut skip) = (false, false, false);
+        for seed in 0..40u64 {
+            let c = generate(&spec, seed).unwrap();
+            assert!(c.net.total_neurons() <= spec.max_neurons);
+            assert!(c.net.timesteps >= spec.timesteps.0);
+            assert!(c.net.timesteps <= spec.timesteps.1);
+            assert_eq!(c.stream.steps(), c.net.timesteps);
+            assert_eq!(c.learning, !c.errors.is_empty());
+            sparse |= c.net.layers.iter().any(|l| matches!(l, Layer::Sparse { .. }));
+            learn |= c.learning;
+            skip |= !c.net.skips.is_empty();
+        }
+        assert!(sparse && learn && skip, "spec space under-covered");
+    }
+
+    #[test]
+    fn sharded_scale_exceeds_one_die() {
+        let spec = GenSpec::sharded_scale();
+        let c = generate(&spec, 3).unwrap();
+        let opts = validate_options(false, &spec);
+        match compiler::compile(&c.net, &c.weights, &opts) {
+            Err(CompileError::TooManyCores { .. }) => {}
+            Ok(_) => panic!("single-die compile unexpectedly succeeded"),
+            Err(e) => panic!("expected TooManyCores, got {e:?}"),
+        }
+        assert!(compiler::compile_sharded(&c.net, &c.weights, &opts, 2).is_ok());
+    }
+
+    #[test]
+    fn impossible_spec_reports_generator_error() {
+        let spec = GenSpec {
+            allow_sharded: false,
+            attempts: 2,
+            ..GenSpec::sharded_scale()
+        };
+        match generate(&spec, 9) {
+            Err(CompileError::Generator { seed: 9, .. }) => {}
+            other => panic!("expected Generator refusal, got {other:?}"),
+        }
+    }
+}

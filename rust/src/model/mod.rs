@@ -7,6 +7,8 @@
 //! TensorFlow, …, Fig 12a) correspond to constructors here; the Table II
 //! benchmark nets and the three §V applications are all expressible.
 
+pub mod gen;
+
 /// Spiking neuron models supported out of the box. Each maps to a
 /// TaiBai-assembly program in [`crate::programs`] — and because the NC is
 /// fully programmable, users can register their own (§III-B).
@@ -148,6 +150,27 @@ pub struct Skip {
 impl Skip {
     pub fn delay(&self) -> usize {
         self.to - self.from - 1
+    }
+}
+
+/// Payload-axon offset of forward spikes arriving at layer `li`.
+///
+/// A recurrent layer's fan-out DE carries one axon shared by its
+/// self-edge and its forward edge, stamped in the *extended* axon space
+/// `recurrent input + neuron id` (§III-D: the recurrence is folded into
+/// an extended input). A Full2 destination decodes that payload directly
+/// as its weight row, so any Fc/Recurrent layer downstream of a
+/// recurrent layer must lay out its weight rows (and size its per-axon
+/// state) with this many dead leading rows. Type-1 (Sparse) destinations
+/// decode per-upstream DT entries and ignore the payload, so the pad
+/// does not apply to them.
+pub fn axon_pad(net: &NetDef, li: usize) -> usize {
+    if li < 2 {
+        return 0;
+    }
+    match net.layers[li - 1] {
+        Layer::Recurrent { input, .. } => axon_pad(net, li - 1) + input,
+        _ => 0,
     }
 }
 

@@ -1,0 +1,362 @@
+//! Golden dense-reference cross-checks: workload-shaped nets (ECG's
+//! recurrent ALIF stack, SHD's dendritic DH-LIF stack, BCI's sparse
+//! random-projection stack with the on-chip learning head) compared
+//! bit-exactly against every compiled engine, plus the regression pin
+//! for the sparse-destination fan-out aliasing bug and the 200-case
+//! seeded fuzz sweep from the issue's acceptance criteria.
+//!
+//! All weights live on the generator's exactness grid (1/32 spike
+//! weights with small fan-in; 1/8-grid dense inputs against ≤ 4/32
+//! first-layer weights), so every comparison is exact `f32 ==`: any
+//! mismatch is a routing/codegen bug, not FP noise.
+
+use taibai::fuzz::{
+    aliased_divergence, run_case, run_fuzz, GenCase, GenSpec, Outcome, Stream,
+};
+use taibai::model::{Layer, NetDef, NeuronModel, Skip};
+use taibai::util::Rng;
+
+/// 1/32-grid spike weight, mostly excitatory.
+fn spike_w(rng: &mut Rng) -> f32 {
+    let mag = rng.range(1, 17) as f32 / 32.0;
+    if rng.chance(0.2) {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Row-sparse Fc blob: `fan` nonzero grid weights per target column.
+fn fc_blob(rng: &mut Rng, n_in: usize, n_out: usize, fan: usize) -> Vec<f32> {
+    let mut w = vec![0.0f32; n_in * n_out];
+    for t in 0..n_out {
+        for u in rng.sample_indices(n_in, fan.min(n_in)) {
+            w[u * n_out + t] = spike_w(rng);
+        }
+    }
+    w
+}
+
+fn spike_stream(rng: &mut Rng, channels: usize, steps: usize, rate: f64) -> Stream {
+    let mut sp = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let mut row = Vec::new();
+        for c in 0..channels {
+            if rng.chance(rate) {
+                row.push(c as u16);
+            }
+        }
+        sp.push(row);
+    }
+    Stream::Spikes(sp)
+}
+
+fn case(net: NetDef, weights: Vec<Vec<f32>>, stream: Stream) -> GenCase {
+    GenCase {
+        seed: 0,
+        net,
+        weights,
+        stream,
+        learning: false,
+        errors: Vec::new(),
+        rejected: 0,
+    }
+}
+
+/// Run a hand-built case through the full oracle and demand a clean
+/// sweep: zero divergences, and the named engines actually ran.
+fn assert_all_engines_match(c: &GenCase, must_run: &[&str]) {
+    let report = run_case(&GenSpec::default(), c);
+    let bad: Vec<_> = report.divergences().collect();
+    assert!(bad.is_empty(), "engine divergences: {bad:#?}");
+    for name in must_run {
+        let e = report
+            .engines
+            .iter()
+            .find(|e| e.engine == *name)
+            .unwrap_or_else(|| panic!("engine {name} missing from report"));
+        assert!(
+            matches!(e.outcome, Outcome::Match),
+            "{name} did not run clean: {:?}",
+            e.outcome
+        );
+    }
+}
+
+/// ECG-shaped: recurrent ALIF hidden layer into a readout head. Also
+/// pins the recurrent forward-axon rebase end-to-end — before the
+/// `axon_pad` fix, a recurrent layer's forward spikes indexed the
+/// readout's weight rows shifted by the recurrent input width.
+#[test]
+fn ecg_shaped_recurrent_alif_matches_everywhere() {
+    let mut rng = Rng::new(11);
+    let (n_in, hidden, n_out, steps) = (4, 24, 6, 40);
+    let mut net = NetDef::new("ecg-shaped", steps);
+    net.layers.push(Layer::Input { size: n_in });
+    net.layers.push(Layer::Recurrent {
+        input: n_in,
+        size: hidden,
+        neuron: NeuronModel::Alif { tau: 0.9, vth: 1.0, beta: 0.3, rho: 0.97 },
+    });
+    net.layers.push(Layer::Fc {
+        input: hidden,
+        output: n_out,
+        neuron: NeuronModel::Readout { tau: 0.9 },
+    });
+    let mut w1 = vec![0.0f32; (n_in + hidden) * hidden];
+    for t in 0..hidden {
+        for u in rng.sample_indices(n_in, 3) {
+            w1[u * hidden + t] = spike_w(&mut rng).abs().max(0.25);
+        }
+        for j in rng.sample_indices(hidden, 2) {
+            w1[(n_in + j) * hidden + t] = spike_w(&mut rng);
+        }
+    }
+    let w2 = fc_blob(&mut rng, hidden, n_out, 4);
+    let stream = spike_stream(&mut rng, n_in, steps, 0.5);
+
+    let c = case(net, vec![vec![], w1, w2], stream);
+    // the net must actually spike through to the head, or the test is
+    // vacuous
+    let mut dense =
+        taibai::fuzz::DenseRef::new(&c.net, &c.weights, false).unwrap();
+    let rows = dense.run(&c.stream);
+    assert!(
+        rows.iter().flatten().any(|&v| v != 0.0),
+        "ECG-shaped net never reached the readout"
+    );
+    assert_all_engines_match(&c, &["wake", "scan-all", "sharded-2-mincut"]);
+}
+
+/// SHD-shaped (scaled): dendritic DH-LIF hidden layer — per-branch
+/// current banks, the fixed heterogeneous branch-tau table — into a
+/// readout head.
+#[test]
+fn shd_shaped_dendritic_matches_everywhere() {
+    let mut rng = Rng::new(12);
+    let (n_in, hidden, branches, n_out, steps) = (40, 16, 4, 5, 30);
+    let mut net = NetDef::new("shd-shaped", steps);
+    net.layers.push(Layer::Input { size: n_in });
+    net.layers.push(Layer::Fc {
+        input: n_in,
+        output: hidden,
+        neuron: NeuronModel::DhLif { branches, tau_soma: 0.9, vth: 1.0 },
+    });
+    net.layers.push(Layer::Fc {
+        input: hidden,
+        output: n_out,
+        neuron: NeuronModel::Readout { tau: 0.9 },
+    });
+    let mut w1 = vec![0.0f32; branches * n_in * hidden];
+    for t in 0..hidden {
+        for u in rng.sample_indices(n_in, 5) {
+            let b = rng.range(0, branches);
+            w1[(b * n_in + u) * hidden + t] = spike_w(&mut rng).abs();
+        }
+    }
+    let w2 = fc_blob(&mut rng, hidden, n_out, 4);
+    let stream = spike_stream(&mut rng, n_in, steps, 0.25);
+
+    let c = case(net, vec![vec![], w1, w2], stream);
+    let mut dense =
+        taibai::fuzz::DenseRef::new(&c.net, &c.weights, false).unwrap();
+    let rows = dense.run(&c.stream);
+    assert!(
+        rows.iter().flatten().any(|&v| v != 0.0),
+        "SHD-shaped net never reached the readout"
+    );
+    assert_all_engines_match(&c, &["wake", "scan-all", "sharded-4-mincut"]);
+}
+
+/// BCI-shaped with the learning head: dense 1/8-grid input into a
+/// sparse projection, a sparse spike layer, and a trained Fc readout.
+/// The learning run compares the post-update head weight matrix
+/// bit-exactly across every engine (single-die and sharded).
+#[test]
+fn bci_shaped_learning_run_matches_everywhere() {
+    let mut rng = Rng::new(13);
+    let (n_in, h1, h2, n_out, steps) = (16, 24, 16, 4, 24);
+    let mut net = NetDef::new("bci-shaped", steps);
+    net.layers.push(Layer::Input { size: n_in });
+    net.layers.push(Layer::Sparse {
+        input: n_in,
+        output: h1,
+        density: 0.25,
+        neuron: NeuronModel::Lif { tau: 0.5, vth: 0.5 },
+    });
+    net.layers.push(Layer::Sparse {
+        input: h1,
+        output: h2,
+        density: 0.25,
+        neuron: NeuronModel::Lif { tau: 0.5, vth: 0.5 },
+    });
+    net.layers.push(Layer::Fc {
+        input: h2,
+        output: n_out,
+        neuron: NeuronModel::Readout { tau: 0.9 },
+    });
+    // layer 1 sees payload-scaled dense input: ≤ 4/32 weights keep
+    // products on the exact 1/256 grid
+    let mut w1 = vec![0.0f32; n_in * h1];
+    for t in 0..h1 {
+        for u in rng.sample_indices(n_in, 4) {
+            w1[u * h1 + t] = rng.range(1, 5) as f32 / 32.0;
+        }
+    }
+    let mut w2 = vec![0.0f32; h1 * h2];
+    for t in 0..h2 {
+        for u in rng.sample_indices(h1, 4) {
+            w2[u * h2 + t] = spike_w(&mut rng).abs().max(0.25);
+        }
+    }
+    let w3 = fc_blob(&mut rng, h2, n_out, 4);
+
+    let mut vals = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let row: Vec<f32> = (0..n_in)
+            .map(|_| {
+                if rng.chance(0.5) {
+                    rng.range(1, 9) as f32 / 8.0
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        vals.push(row);
+    }
+
+    let c = GenCase {
+        seed: 0,
+        net,
+        weights: vec![vec![], w1, w2, w3],
+        stream: Stream::Dense(vals),
+        learning: true,
+        errors: vec![0.5, -0.25, 0.125, -0.5],
+        rejected: 0,
+    };
+    let mut dense =
+        taibai::fuzz::DenseRef::new(&c.net, &c.weights, true).unwrap();
+    let rows = dense.run(&c.stream);
+    assert!(
+        rows.iter().flatten().any(|&v| v != 0.0),
+        "BCI-shaped net never reached the readout"
+    );
+    let before = dense.head_weights();
+    dense.learn(&c.errors);
+    assert_ne!(before, dense.head_weights(), "learning was a no-op");
+    assert_all_engines_match(&c, &["wake", "scan-all", "sharded-2-mincut"]);
+}
+
+/// The bug this subsystem exists to kill: a spike-fed sparse
+/// destination where upstream neuron 1 (not 0) fires. The pre-fix
+/// encoding aliased every upstream spike onto the destination's first
+/// DT slot, crediting upstream 0's weights instead — caught by the
+/// dense reference; the fixed encoding matches it exactly.
+#[test]
+fn sparse_fanout_aliasing_diverges_pre_fix_and_matches_post_fix() {
+    let steps = 8;
+    let mut net = NetDef::new("aliasing-pin", steps);
+    net.layers.push(Layer::Input { size: 2 });
+    net.layers.push(Layer::Fc {
+        input: 2,
+        output: 2,
+        neuron: NeuronModel::Lif { tau: 0.5, vth: 1.0 },
+    });
+    net.layers.push(Layer::Sparse {
+        input: 2,
+        output: 2,
+        density: 0.5,
+        neuron: NeuronModel::Lif { tau: 0.5, vth: 0.125 },
+    });
+    net.layers.push(Layer::Fc {
+        input: 2,
+        output: 2,
+        neuron: NeuronModel::Readout { tau: 0.5 },
+    });
+    // channel i drives hidden i at exactly vth
+    let w1 = vec![1.0, 0.0, 0.0, 1.0];
+    // upstream 0 → dest 0 (0.5); upstream 1 → dest 1 (0.25): distinct
+    // rows, so aliasing u=1 onto u=0's slot flips which neuron fires
+    let w2 = vec![0.5, 0.0, 0.0, 0.25];
+    // dest i → readout i
+    let w3 = vec![0.5, 0.0, 0.0, 0.5];
+    // only channel 1 is driven: the correct engine lights readout 1,
+    // the aliased encoding lights readout 0
+    let mut sp = vec![vec![1u16]; steps];
+    sp[steps - 1] = vec![];
+    let c = case(net, vec![vec![], w1, w2, w3], Stream::Spikes(sp));
+
+    let spec = GenSpec::default();
+    let d = aliased_divergence(&spec, &c)
+        .expect("pre-fix encoding must diverge from the dense reference");
+    assert_eq!(d.engine, "aliased");
+    assert!(d.step.is_some(), "divergence must name a step: {d:#?}");
+
+    // and the shipped (fixed) encoding sails through every engine
+    assert_all_engines_match(&c, &["wake", "scan-all"]);
+}
+
+/// A delayed skip across the oracle: source and destination widths
+/// match, spikes arrive `delay` steps late, and every engine that
+/// accepts the net agrees with the dense reference. (Sharded engines
+/// may refuse with `CrossDieDelay` — counted as refusals, not
+/// failures.)
+#[test]
+fn skip_connection_case_matches_or_refuses() {
+    let mut rng = Rng::new(14);
+    let (n_in, w, n_out, steps) = (6, 10, 3, 24);
+    let mut net = NetDef::new("skip-shaped", steps);
+    net.layers.push(Layer::Input { size: n_in });
+    for li in 0..3usize {
+        let input = if li == 0 { n_in } else { w };
+        net.layers.push(Layer::Fc {
+            input,
+            output: w,
+            neuron: NeuronModel::Lif { tau: 0.75, vth: 0.5 },
+        });
+    }
+    net.layers.push(Layer::Fc {
+        input: w,
+        output: n_out,
+        neuron: NeuronModel::Readout { tau: 0.9 },
+    });
+    net.skips.push(Skip { from: 1, to: 3 });
+    let mut weights = vec![Vec::new()];
+    weights.push(fc_blob(&mut rng, n_in, w, 3));
+    for _ in 0..2 {
+        weights.push(fc_blob(&mut rng, w, w, 3));
+    }
+    weights.push(fc_blob(&mut rng, w, n_out, 3));
+    let stream = spike_stream(&mut rng, n_in, steps, 0.5);
+
+    let c = case(net, weights, stream);
+    let report = run_case(&GenSpec::default(), &c);
+    let bad: Vec<_> = report.divergences().collect();
+    assert!(bad.is_empty(), "engine divergences: {bad:#?}");
+    let matched = report
+        .engines
+        .iter()
+        .filter(|e| matches!(e.outcome, Outcome::Match))
+        .count();
+    assert!(matched >= 2, "too few engines accepted the skip net");
+}
+
+/// The issue's acceptance sweep: 200 sequentially-seeded cases across
+/// dense/sparse/recurrent/dendritic/skip/learning nets, every engine,
+/// zero divergences.
+#[test]
+fn fuzz_200_seeded_cases_zero_divergences() {
+    let report = run_fuzz(&GenSpec::default(), 200, 6);
+    assert!(
+        report.cases >= 190,
+        "generator gave up too often: {} of 200",
+        report.cases
+    );
+    assert!(report.learning_cases > 0, "no learning case in the sweep");
+    assert!(
+        report.ok(),
+        "divergences: {:#?}\nfirst repro: {}",
+        report.divergences,
+        report.divergences[0].repro()
+    );
+}
