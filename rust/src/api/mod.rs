@@ -467,6 +467,14 @@ impl Taibai {
         self
     }
 
+    /// Run the static image verifier ([`crate::compiler::verify`]) on
+    /// every compiled artifact before deployment (on by default in
+    /// debug/test builds; enable for release-mode belt-and-braces).
+    pub fn verify(mut self, on: bool) -> Taibai {
+        self.opts.verify = on;
+        self
+    }
+
     pub fn energy_model(mut self, em: EnergyModel) -> Taibai {
         self.em = em;
         self

@@ -420,8 +420,18 @@ impl<'a> Builder<'a> {
                     });
                 }
                 for (cc, members) in &groups {
-                    // per-core weight allocation counters
-                    let mut next_w: HashMap<usize, u16> = HashMap::new();
+                    // Per-part weight-slot counters, seeded at each part's
+                    // core-local weight base: merged cores lay their parts'
+                    // weight words sequentially (see `emit_image`) and the
+                    // NC reads `local_axon` as a direct offset into that
+                    // region, so a part that is not first on its core must
+                    // start past its predecessors' words — and two parts
+                    // sharing one core must not interleave one counter.
+                    let mut next_w: HashMap<(usize, usize), u16> = HashMap::new();
+                    for &(_nc, mi, pi) in members {
+                        let off = self.part_weight_off(mi, pi)?;
+                        next_w.insert((mi, pi), off as u16);
+                    }
                     let mut des = Vec::new();
                     let mut ies = Vec::new();
                     for u in 0..input {
@@ -433,7 +443,7 @@ impl<'a> Builder<'a> {
                                 let t = part.n_base + j;
                                 let w = blob[u * outputs + t];
                                 if w != 0.0 {
-                                    let slot = next_w.entry(mi).or_insert(0);
+                                    let slot = next_w.get_mut(&(mi, pi)).unwrap();
                                     ies.push(FanInIE::Type1 {
                                         nc,
                                         neuron: (local_base + j) as u16,
@@ -611,15 +621,9 @@ impl<'a> Builder<'a> {
         let w_words = self.core_weights(li, layer, part.n_base, count, blob)?;
         if !w_words.is_empty() {
             // merged cores: parts' weights are laid out sequentially; the
-            // sparse fan-in builder allocates local axons in the same
-            // first-fit order, so recompute the base from earlier parts.
-            let mut w_off = 0usize;
-            for k in 0..pi {
-                let p = self.merged.cores[mi].parts[k];
-                let lay = &self.net.layers[p.layer];
-                let pb = &self.weights[p.layer];
-                w_off += self.core_weights(p.layer, lay, p.n_base, p.count, pb)?.len();
-            }
+            // sparse fan-in builder seeds its local-axon counters at the
+            // same per-part bases (`part_weight_off`).
+            let w_off = self.part_weight_off(mi, pi)?;
             mem.push((layout.weights + w_off as u16, w_words));
         }
 
@@ -655,6 +659,21 @@ impl<'a> Builder<'a> {
             }
         }
         Ok(())
+    }
+
+    /// Core-local base offset of part `pi`'s weight region on merged
+    /// core `mi`: the summed weight words of the parts laid out before
+    /// it. Both the memory image and the sparse fan-in slot allocator
+    /// derive their bases from this, keeping them in lockstep.
+    fn part_weight_off(&self, mi: usize, pi: usize) -> Result<usize, CompileError> {
+        let mut off = 0usize;
+        for k in 0..pi {
+            let p = self.merged.cores[mi].parts[k];
+            let lay = &self.net.layers[p.layer];
+            let pb = &self.weights[p.layer];
+            off += self.core_weights(p.layer, lay, p.n_base, p.count, pb)?.len();
+        }
+        Ok(off)
     }
 
     /// Extract this core's weight words for `layer` (rows = upstream

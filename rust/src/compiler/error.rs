@@ -70,6 +70,11 @@ pub enum CompileError {
     /// from the spec hit an expected compile refusal (`TooManyCores`,
     /// `Skip`, …). Carries the seed for replay and the last refusal text.
     Generator { seed: u64, msg: String },
+    /// The static image verifier ([`crate::compiler::verify`]) rejected
+    /// the compiled artifact — a code-generator bug caught before
+    /// deployment. The boxed report carries every coordinate-bearing
+    /// diagnostic.
+    Verify(Box<crate::compiler::verify::VerifyReport>),
 }
 
 impl std::fmt::Display for CompileError {
@@ -130,6 +135,9 @@ impl std::fmt::Display for CompileError {
                 f,
                 "net generator (seed {seed}) exhausted its retry budget: {msg}"
             ),
+            CompileError::Verify(report) => {
+                write!(f, "static verification rejected the image: {report}")
+            }
         }
     }
 }

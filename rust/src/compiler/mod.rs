@@ -10,6 +10,7 @@ pub mod merge;
 pub mod codegen;
 pub mod error;
 pub mod shard;
+pub mod verify;
 
 use crate::model::NetDef;
 
@@ -56,6 +57,10 @@ pub struct Options {
     /// oracle and the regression suite can demonstrate the divergence
     /// the per-neuron encoding fixes. Never enable in real deployments.
     pub aliased_sparse_fanout: bool,
+    /// Run the static image verifier ([`verify`]) over the compiled
+    /// artifact before returning it (on by default in debug/test builds).
+    /// Deliberately aliased images skip it — they exist to fail.
+    pub verify: bool,
 }
 
 impl Default for Options {
@@ -71,6 +76,7 @@ impl Default for Options {
             strategy: ShardStrategy::default(),
             serdes_cost: placement::DEFAULT_SERDES_COST,
             aliased_sparse_fanout: false,
+            verify: cfg!(debug_assertions),
         }
     }
 }
@@ -108,6 +114,12 @@ pub fn compile(
         opts.learning,
         opts.aliased_sparse_fanout,
     )?;
+    if opts.verify && !opts.aliased_sparse_fanout {
+        let report = verify::verify(&compiled, net, opts.learning);
+        if !report.ok() {
+            return Err(CompileError::Verify(Box::new(report)));
+        }
+    }
     Ok(CompileReport {
         avg_hops,
         placement_cost: placement::cost(&mtraffic, &place),

@@ -427,6 +427,13 @@ pub fn compile_sharded(
         .map(|c| c.config.init_packets())
         .sum();
 
+    if opts.verify && !opts.aliased_sparse_fanout {
+        let report = super::verify::verify_sharded(&sharded, net, opts.learning);
+        if !report.ok() {
+            return Err(CompileError::Verify(Box::new(report)));
+        }
+    }
+
     // per-die counts from the *final* placement (SA may have swapped
     // cores across dies)
     let mut per_chip_cores = vec![0usize; n_chips];

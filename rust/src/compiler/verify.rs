@@ -1,0 +1,1849 @@
+//! Static chip-image verifier — an LLVM-MachineVerifier-style pass over
+//! compiled deployment images.
+//!
+//! A compiled [`Compiled`] / per-die [`crate::compiler::ChipImage`] is a
+//! dense web of cross-referencing tables: fan-out IEs index fan-in DT
+//! entries on other CCs, DT entries slice IT ranges, IEs address NC-local
+//! neurons and weight slots, host maps inject into all of it. One
+//! mis-indexed entry silently corrupts inference (the PR 6 sparse fan-out
+//! aliasing bug was exactly this class). This pass proves, without
+//! executing a step, that every image the compiler emits is well formed:
+//!
+//! * **fan-in table shape** — each CC's DT is exactly the concatenation
+//!   of the per-hosted-layer blocks codegen derives from the placement
+//!   (per-branch Full2, per-upstream Sparse1, per-head-neuron Sparse0
+//!   error entries), with uniform tags and in-range IT slices;
+//! * **fan-out/DT consistency** — every fan-out IE lands inside the
+//!   destination CC's decoded DT block for the right layer with the
+//!   right tag; Sparse destinations get a *bijective* per-upstream
+//!   mapping (≥2 distinct sources on one upstream entry is the aliasing
+//!   bug, reported as [`VerifyError::SparseFanOutAliased`]);
+//! * **route soundness** — Unicast coordinates in-mesh, `Remote` die ids
+//!   within the fleet, no delayed cross-die releases (the
+//!   `CrossDieDelay` invariant re-proven on the artifact itself);
+//! * **memory/weight bounds** — every initialized region inside
+//!   `data_words`, regions non-overlapping, weight entries tiling the
+//!   layout's weight region at the per-part offsets the fan-in slots
+//!   address (`axon_pad` rebasing accounted for, so no live edge can
+//!   address a dead padded row);
+//! * **ISA checks** — NC programs survive encode/decode and
+//!   disassemble/reassemble round-trips, branch targets stay inside the
+//!   program, memory operands stay inside `data_words`, and only
+//!   learning heads store into the weight region;
+//! * **liveness** — fan-in blocks nothing routes to and non-final
+//!   fan-out entries that mint nothing are reported as warnings.
+//!
+//! Entry points: [`verify`] for a single-die [`Compiled`] image and
+//! [`verify_sharded`] for a [`ShardedCompiled`] fleet. Both run by
+//! default inside `compile`/`compile_sharded` behind
+//! [`crate::compiler::Options::verify`] (on in debug/test builds), from
+//! the `taibai verify` CLI subcommand, and as a pre-flight stage in
+//! `fuzz::differential`.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::chip::config::{CcImage, NcImage};
+use crate::isa::assembler::{assemble, Program};
+use crate::isa::disasm::disassemble;
+use crate::isa::Opcode;
+use crate::model::{axon_pad, Layer, NetDef, NeuronModel};
+use crate::noc::{cc_id, Packet, PacketPhase, PacketType, MESH_H, MESH_W, NUM_CCS};
+use crate::programs::learning::ITOF_SIZE;
+use crate::programs::NcLayout;
+use crate::topology::{FanInIE, IeType, NCS_PER_CC};
+use crate::topology::{FanOutIE, RouteMode};
+
+use super::codegen::{Compiled, CoreMeta};
+use super::shard::ShardedCompiled;
+
+/// Retained-diagnostic caps: past these the report only counts.
+const MAX_ERRORS: usize = 64;
+const MAX_WARNINGS: usize = 256;
+
+/// Chip coordinates a diagnostic points at: die, die-local CC, and
+/// optionally the NC and the table entry index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Loc {
+    pub die: usize,
+    /// Die-local CC id (`0..NUM_CCS`).
+    pub cc: usize,
+    pub nc: Option<u8>,
+    pub entry: Option<usize>,
+}
+
+impl Loc {
+    /// Location of a die-global CC id.
+    pub fn at(gcc: usize) -> Loc {
+        Loc { die: gcc / NUM_CCS, cc: gcc % NUM_CCS, nc: None, entry: None }
+    }
+
+    pub fn nc(self, nc: u8) -> Loc {
+        Loc { nc: Some(nc), ..self }
+    }
+
+    pub fn entry(self, entry: usize) -> Loc {
+        Loc { entry: Some(entry), ..self }
+    }
+}
+
+impl fmt::Display for Loc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "die {} cc {}", self.die, self.cc)?;
+        if let Some(nc) = self.nc {
+            write!(f, " nc {nc}")?;
+        }
+        if let Some(e) = self.entry {
+            write!(f, " entry {e}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A static invariant violation in a compiled image.
+#[derive(Clone, Debug, PartialEq)]
+pub enum VerifyError {
+    /// The image disagrees with the network/placement at a structural
+    /// level (missing NC image, bad layer kind, inconsistent metadata).
+    Structure { at: Loc, detail: String },
+    /// A CC's fan-in DT is not the expected concatenation of per-layer
+    /// blocks (wrong length, wrong entry type, non-uniform tag, k2 ≠ 0).
+    FanInShape { at: Loc, detail: String },
+    /// A DT entry's IT slice runs past the IT table.
+    ItRange { at: Loc, table: &'static str, it_base: u32, it_len: u32, avail: usize },
+    /// A fan-in IE addresses a non-resident neuron / wrong NC / wrong
+    /// layer, or differs from the placement-derived encoding.
+    IeTarget { at: Loc, detail: String },
+    /// A CC's fan-out DT length differs from its resident neuron count.
+    FanOutShape { at: Loc, expected: usize, got: usize },
+    /// A fan-out DE carries the wrong global axon id (recurrent rebase
+    /// included).
+    FanOutAxon { at: Loc, expected: u16, got: u16 },
+    /// A Unicast/Remote target lies outside the 12×11 mesh.
+    RouteOffMesh { at: Loc, x: u8, y: u8 },
+    /// A Remote route names a die outside the fleet.
+    RemoteChipRange { at: Loc, chip: u8, dies: usize },
+    /// A delayed (skip) release crosses a die boundary — the bridge has
+    /// no ordering rule for it (`CompileError::CrossDieDelay`).
+    DelayedRemote { at: Loc, delay: u8 },
+    /// An edge routes to a CC with no deployment image.
+    DanglingRoute { at: Loc, dest: Loc },
+    /// A fan-out IE's DT index is past the destination's DT.
+    FanOutIndexRange { at: Loc, dest: Loc, index: u16, dt_len: usize },
+    /// The tag an edge carries differs from the destination DT entry's.
+    TagMismatch { at: Loc, dest: Loc, sent: u16, expected: u16 },
+    /// A payload row lands outside the destination layer's axon space.
+    AxonRowRange { at: Loc, dest: Loc, payload: u16, rows: usize },
+    /// A payload row lands inside the destination's dead `axon_pad`
+    /// rows (the recurrent-predecessor rebase region).
+    DeadRowAddressed { at: Loc, dest: Loc, payload: u16, pad: usize },
+    /// A Sparse-destination edge's DT index disagrees with its upstream
+    /// id (`index` must be `dt_base + upstream`).
+    SparseIndexSkew { at: Loc, dest: Loc, index: u16, expected: usize },
+    /// ≥2 distinct sources deliver onto one per-upstream Sparse entry —
+    /// the PR 6 fan-out aliasing bug, caught statically.
+    SparseFanOutAliased { dest: Loc, layer: usize, sources: usize },
+    /// One source delivers twice onto the same destination entry.
+    DuplicateEdge { at: Loc, dest: Loc, index: u16 },
+    /// A spike edge lands on a host error-injection (Sparse0) entry.
+    ErrorBlockEdge { at: Loc, dest: Loc },
+    /// A host error-injection entry is not covered exactly once.
+    ErrorInjCoverage { dest: Loc, detail: String },
+    /// An initialized memory region runs past the NC's data memory.
+    MemRegion { at: Loc, addr: u16, len: usize, data_words: usize },
+    /// Two initialized memory regions overlap.
+    MemOverlap { at: Loc, a: (u16, usize), b: (u16, usize) },
+    /// Weight entries do not tile the layout's weight region at the
+    /// per-part offsets (merged cores lay parts sequentially).
+    WeightRegion { at: Loc, detail: String },
+    /// A sparse part's fan-in weight slots do not cover its weight words
+    /// bijectively (each slot exactly once, at the part's base offset).
+    SparseWeightSlot { at: Loc, layer: usize, detail: String },
+    /// An NC program fails a round-trip or operand-range check.
+    Isa { at: Loc, program: &'static str, pc: usize, detail: String },
+    /// A host-side map (input / error / readout) is malformed.
+    HostMap { kind: &'static str, channel: usize, detail: String },
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use VerifyError as E;
+        match self {
+            E::Structure { at, detail } => write!(f, "{at}: {detail}"),
+            E::FanInShape { at, detail } => write!(f, "{at}: fan-in shape: {detail}"),
+            E::ItRange { at, table, it_base, it_len, avail } => write!(
+                f,
+                "{at}: {table} DT slice [{it_base}, {}) exceeds IT table of {avail} entries",
+                it_base + it_len
+            ),
+            E::IeTarget { at, detail } => write!(f, "{at}: fan-in IE: {detail}"),
+            E::FanOutShape { at, expected, got } => write!(
+                f,
+                "{at}: fan-out DT has {got} entries, residents mint {expected}"
+            ),
+            E::FanOutAxon { at, expected, got } => write!(
+                f,
+                "{at}: fan-out DE carries global axon {got}, expected {expected}"
+            ),
+            E::RouteOffMesh { at, x, y } => {
+                write!(f, "{at}: route targets ({x}, {y}) outside the {MESH_W}x{MESH_H} mesh")
+            }
+            E::RemoteChipRange { at, chip, dies } => {
+                write!(f, "{at}: remote route targets die {chip} of a {dies}-die fleet")
+            }
+            E::DelayedRemote { at, delay } => write!(
+                f,
+                "{at}: delayed release (delay {delay}) crosses a die boundary"
+            ),
+            E::DanglingRoute { at, dest } => {
+                write!(f, "{at}: edge routes to {dest}, which has no deployment image")
+            }
+            E::FanOutIndexRange { at, dest, index, dt_len } => write!(
+                f,
+                "{at}: edge indexes DT entry {index} at {dest}, which has {dt_len} entries"
+            ),
+            E::TagMismatch { at, dest, sent, expected } => write!(
+                f,
+                "{at}: edge carries tag {sent}, {dest} expects {expected}"
+            ),
+            E::AxonRowRange { at, dest, payload, rows } => write!(
+                f,
+                "{at}: payload row {payload} exceeds the {rows}-row axon space at {dest}"
+            ),
+            E::DeadRowAddressed { at, dest, payload, pad } => write!(
+                f,
+                "{at}: payload row {payload} lands in the {pad} dead pad rows at {dest}"
+            ),
+            E::SparseIndexSkew { at, dest, index, expected } => write!(
+                f,
+                "{at}: sparse edge indexes DT entry {index} at {dest}, upstream id implies {expected}"
+            ),
+            E::SparseFanOutAliased { dest, layer, sources } => write!(
+                f,
+                "{dest}: {sources} distinct sources alias one per-upstream entry of sparse layer {layer}"
+            ),
+            E::DuplicateEdge { at, dest, index } => write!(
+                f,
+                "{at}: duplicate delivery onto DT entry {index} at {dest}"
+            ),
+            E::ErrorBlockEdge { at, dest } => write!(
+                f,
+                "{at}: spike edge lands on the host error-injection entry at {dest}"
+            ),
+            E::ErrorInjCoverage { dest, detail } => write!(f, "{dest}: error injection: {detail}"),
+            E::MemRegion { at, addr, len, data_words } => write!(
+                f,
+                "{at}: memory region [{addr}, {}) exceeds {data_words} data words",
+                addr as usize + len
+            ),
+            E::MemOverlap { at, a, b } => write!(
+                f,
+                "{at}: memory regions [{}, {}) and [{}, {}) overlap",
+                a.0,
+                a.0 as usize + a.1,
+                b.0,
+                b.0 as usize + b.1
+            ),
+            E::WeightRegion { at, detail } => write!(f, "{at}: weight region: {detail}"),
+            E::SparseWeightSlot { at, layer, detail } => {
+                write!(f, "{at}: sparse layer {layer} weight slots: {detail}")
+            }
+            E::Isa { at, program, pc, detail } => {
+                write!(f, "{at}: {program} program pc {pc}: {detail}")
+            }
+            E::HostMap { kind, channel, detail } => {
+                write!(f, "host {kind} map channel {channel}: {detail}")
+            }
+        }
+    }
+}
+
+/// A suspicious-but-not-fatal finding.
+#[derive(Clone, Debug, PartialEq)]
+pub enum VerifyWarning {
+    /// No edge or host packet routes into this fan-in block.
+    DeadFanIn { at: Loc, layer: usize },
+    /// A non-final-layer neuron's fan-out mints no packets.
+    OrphanFanOut { at: Loc, layer: usize },
+    /// A Multicast/Broadcast route the verifier cannot resolve.
+    UnroutedMode { at: Loc, detail: String },
+    /// A Remote route targets the sender's own die.
+    RemoteSelf { at: Loc },
+}
+
+impl fmt::Display for VerifyWarning {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyWarning::DeadFanIn { at, layer } => {
+                write!(f, "{at}: nothing routes into layer {layer}'s fan-in block")
+            }
+            VerifyWarning::OrphanFanOut { at, layer } => {
+                write!(f, "{at}: layer {layer} neuron mints no fan-out packets")
+            }
+            VerifyWarning::UnroutedMode { at, detail } => {
+                write!(f, "{at}: unverifiable route mode {detail}")
+            }
+            VerifyWarning::RemoteSelf { at } => {
+                write!(f, "{at}: remote route targets its own die")
+            }
+        }
+    }
+}
+
+/// Outcome of a verification pass.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VerifyReport {
+    /// Retained errors (capped at 64; `suppressed` counts the rest).
+    pub errors: Vec<VerifyError>,
+    pub warnings: Vec<VerifyWarning>,
+    pub checked_ccs: usize,
+    pub checked_edges: usize,
+    pub checked_instrs: usize,
+    /// Errors dropped past the retention cap.
+    pub suppressed: usize,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty() && self.suppressed == 0
+    }
+
+    fn push(&mut self, e: VerifyError) {
+        if self.errors.len() < MAX_ERRORS {
+            self.errors.push(e);
+        } else {
+            self.suppressed += 1;
+        }
+    }
+
+    fn warn(&mut self, w: VerifyWarning) {
+        if self.warnings.len() < MAX_WARNINGS {
+            self.warnings.push(w);
+        }
+    }
+
+    /// One-line outcome for logs and CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} error(s){}, {} warning(s) over {} CCs, {} edges, {} instructions",
+            self.errors.len(),
+            if self.suppressed > 0 {
+                format!(" (+{} suppressed)", self.suppressed)
+            } else {
+                String::new()
+            },
+            self.warnings.len(),
+            self.checked_ccs,
+            self.checked_edges,
+            self.checked_instrs,
+        )
+    }
+}
+
+impl fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "verify: {}", self.summary())?;
+        for e in &self.errors {
+            writeln!(f, "  error: {e}")?;
+        }
+        for w in &self.warnings {
+            writeln!(f, "  warning: {w}")?;
+        }
+        Ok(())
+    }
+}
+
+type HostPackets = Vec<Vec<(Option<usize>, Packet)>>;
+type ErrorPackets = Vec<(Option<usize>, Packet)>;
+type ReadoutMap = Vec<((usize, u8, u16), usize)>;
+
+/// Verify a single-image compilation (one die, or a pre-split die-global
+/// image — `Remote` routes are resolved by absolute die id either way).
+pub fn verify(compiled: &Compiled, net: &NetDef, learning: bool) -> VerifyReport {
+    let dies = compiled
+        .config
+        .ccs
+        .keys()
+        .map(|g| g / NUM_CCS)
+        .max()
+        .map_or(1, |d| d + 1);
+    let ccs: HashMap<usize, &CcImage> =
+        compiled.config.ccs.iter().map(|(&g, img)| (g, img)).collect();
+    let cores: Vec<(usize, &CoreMeta)> = compiled.cores.iter().map(|m| (m.cc, m)).collect();
+    let input: HostPackets = compiled
+        .config
+        .input_map
+        .iter()
+        .map(|pkts| pkts.iter().map(|&p| (None, p)).collect())
+        .collect();
+    let error_pkts: ErrorPackets = compiled.error_map.iter().map(|&p| (None, p)).collect();
+    let readout: ReadoutMap = compiled.readout.iter().map(|(&k, &v)| (k, v)).collect();
+    run(
+        net,
+        learning,
+        dies,
+        compiled.data_words,
+        ccs,
+        cores,
+        input,
+        error_pkts,
+        readout,
+        VerifyReport::default(),
+    )
+}
+
+/// Verify a sharded fleet: the per-die images plus the split host maps,
+/// with `Remote` die ids checked against the actual fleet size and the
+/// per-die readout union checked to cover every output exactly once.
+pub fn verify_sharded(sharded: &ShardedCompiled, net: &NetDef, learning: bool) -> VerifyReport {
+    let mut report = VerifyReport::default();
+    let dies = sharded.chips.len();
+    if dies == 0 {
+        report.push(VerifyError::Structure {
+            at: Loc::at(0),
+            detail: "sharded image has no dies".into(),
+        });
+        return report;
+    }
+    if let Some(last) = net.layers.last() {
+        if sharded.n_outputs != last.neurons() {
+            report.push(VerifyError::Structure {
+                at: Loc::at(0),
+                detail: format!(
+                    "image records {} outputs, final layer has {}",
+                    sharded.n_outputs,
+                    last.neurons()
+                ),
+            });
+        }
+    }
+    let mut ccs: HashMap<usize, &CcImage> = HashMap::new();
+    for (die, chip) in sharded.chips.iter().enumerate() {
+        for (&lcc, img) in &chip.config.ccs {
+            if lcc >= NUM_CCS {
+                report.push(VerifyError::Structure {
+                    at: Loc { die, cc: lcc, nc: None, entry: None },
+                    detail: format!("die-local CC id {lcc} outside 0..{NUM_CCS}"),
+                });
+            } else {
+                ccs.insert(die * NUM_CCS + lcc, img);
+            }
+        }
+    }
+    let cores: Vec<(usize, &CoreMeta)> = sharded
+        .cores
+        .iter()
+        .map(|&(die, ref m)| (die * NUM_CCS + m.cc, m))
+        .collect();
+    let input: HostPackets = sharded
+        .input_map
+        .iter()
+        .map(|pkts| pkts.iter().map(|&(die, p)| (Some(die), p)).collect())
+        .collect();
+    let error_pkts: ErrorPackets =
+        sharded.error_map.iter().map(|&(die, p)| (Some(die), p)).collect();
+    let mut readout: ReadoutMap = Vec::new();
+    for (die, chip) in sharded.chips.iter().enumerate() {
+        for (&(lcc, nc, neuron), &out) in &chip.readout {
+            readout.push(((die * NUM_CCS + lcc, nc, neuron), out));
+        }
+    }
+    run(
+        net,
+        learning,
+        dies,
+        sharded.data_words,
+        ccs,
+        cores,
+        input,
+        error_pkts,
+        readout,
+        report,
+    )
+}
+
+/// One expected fan-in DT block of a CC, reconstructed from the
+/// placement: which layer it decodes (None = the host error-injection
+/// block), its entry type, its DT range, and its payload-row geometry.
+#[derive(Clone, Copy, Debug)]
+struct BlockInfo {
+    layer: Option<usize>,
+    kind: IeType,
+    dt_base: usize,
+    len: usize,
+    /// Upstream axon-space rows (Full2 payload bound).
+    rows: usize,
+    /// Leading dead rows from a recurrent predecessor's rebase.
+    pad: usize,
+}
+
+/// Per-CC derived state shared between the table pass and the edge pass.
+struct CcInfo {
+    blocks: Vec<BlockInfo>,
+    /// DT index → block index (`usize::MAX` when the shape check failed).
+    block_of: Vec<usize>,
+    /// Fan-out DT index → minting layer (`usize::MAX` when unknown).
+    fanout_layer: Vec<usize>,
+    shape_ok: bool,
+}
+
+struct Pass<'a> {
+    net: &'a NetDef,
+    learning: bool,
+    dies: usize,
+    data_words: usize,
+    ccs: HashMap<usize, &'a CcImage>,
+    cores: Vec<(usize, &'a CoreMeta)>,
+    /// (die-global cc, nc) → index into `cores`.
+    metas: HashMap<(usize, u8), usize>,
+    info: HashMap<usize, CcInfo>,
+    /// Per-CC inbound-delivery counters per fan-in DT entry.
+    covered: HashMap<usize, Vec<u32>>,
+    /// Per-CC host-error-delivery counters per fan-in DT entry.
+    err_covered: HashMap<usize, Vec<u32>>,
+    /// (dest cc, DT index) → distinct (source cc, source DE) per-upstream
+    /// sparse deliveries, for the bijectivity check.
+    alias: HashMap<(usize, usize), Vec<(usize, usize)>>,
+    report: VerifyReport,
+}
+
+fn branches_of(neuron: &NeuronModel) -> usize {
+    match neuron {
+        NeuronModel::DhLif { branches, .. } => *branches,
+        _ => 1,
+    }
+}
+
+/// Per-neuron inbound weight words of layer `li` (mirrors codegen's
+/// `axon_space`), including the recurrent-predecessor pad rows.
+fn axon_space_of(net: &NetDef, li: usize) -> usize {
+    let pad = axon_pad(net, li);
+    match &net.layers[li] {
+        Layer::Fc { input, neuron, .. } => pad + input * branches_of(neuron),
+        Layer::Recurrent { input, size, .. } => pad + input + size,
+        Layer::Sparse { input, .. } => *input,
+        _ => 0,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run<'a>(
+    net: &'a NetDef,
+    learning: bool,
+    dies: usize,
+    data_words: usize,
+    ccs: HashMap<usize, &'a CcImage>,
+    cores: Vec<(usize, &'a CoreMeta)>,
+    input: HostPackets,
+    error_pkts: ErrorPackets,
+    readout: ReadoutMap,
+    mut report: VerifyReport,
+) -> VerifyReport {
+    if net.layers.len() < 2 {
+        report.push(VerifyError::Structure {
+            at: Loc::at(0),
+            detail: "network needs an input layer and at least one connection layer".into(),
+        });
+        return report;
+    }
+    let mut metas: HashMap<(usize, u8), usize> = HashMap::new();
+    for (mi, &(gcc, meta)) in cores.iter().enumerate() {
+        if metas.insert((gcc, meta.nc), mi).is_some() {
+            report.push(VerifyError::Structure {
+                at: Loc::at(gcc).nc(meta.nc),
+                detail: "two cores mapped onto one NC".into(),
+            });
+        }
+    }
+    let mut pass = Pass {
+        net,
+        learning,
+        dies,
+        data_words,
+        ccs,
+        cores,
+        metas,
+        info: HashMap::new(),
+        covered: HashMap::new(),
+        err_covered: HashMap::new(),
+        alias: HashMap::new(),
+        report,
+    };
+
+    // Every core's NC must carry an image on a configured CC.
+    let mut placed: Vec<(usize, u8)> = pass.metas.keys().copied().collect();
+    placed.sort_unstable();
+    for (gcc, nc) in placed {
+        let present = pass
+            .ccs
+            .get(&gcc)
+            .and_then(|img| img.ncs.get(nc as usize))
+            .is_some_and(|slot| slot.is_some());
+        if !present {
+            pass.report.push(VerifyError::Structure {
+                at: Loc::at(gcc).nc(nc),
+                detail: "core metadata names an NC with no deployment image".into(),
+            });
+        }
+    }
+
+    let mut gccs: Vec<usize> = pass.ccs.keys().copied().collect();
+    gccs.sort_unstable();
+    for &gcc in &gccs {
+        let dt_len = pass.ccs[&gcc].tables.fanin_dt.len();
+        let info = pass.check_cc(gcc);
+        pass.info.insert(gcc, info);
+        pass.covered.insert(gcc, vec![0; dt_len]);
+        pass.err_covered.insert(gcc, vec![0; dt_len]);
+        pass.report.checked_ccs += 1;
+    }
+
+    // Edge pass: collect every owned fan-out edge first, then deliver.
+    let mut edges: Vec<(usize, usize, usize, u16, FanOutIE)> = Vec::new();
+    for &gcc in &gccs {
+        let img = pass.ccs[&gcc];
+        for (d, de) in img.tables.fanout_dt.iter().enumerate() {
+            let lo = de.it_base as usize;
+            let Some(ies) = img.tables.fanout_it.get(lo..lo + de.it_len as usize) else {
+                continue; // already reported as ItRange
+            };
+            let li = pass.info[&gcc].fanout_layer.get(d).copied().unwrap_or(usize::MAX);
+            for &ie in ies {
+                edges.push((gcc, d, li, de.global_axon, ie));
+            }
+        }
+    }
+    for (gcc, d, li, axon, ie) in edges {
+        pass.check_edge(gcc, d, li, axon, ie);
+    }
+
+    pass.check_input(input);
+    pass.check_error(error_pkts);
+    pass.check_readout(readout);
+    pass.finish_alias();
+    pass.finish_liveness(&gccs);
+    pass.report
+}
+
+impl<'a> Pass<'a> {
+    /// Members `(nc, core index, part index)` of layer `li` on CC `gcc`,
+    /// in the same sorted order codegen's `layer_ccs` uses.
+    fn members_of(&self, gcc: usize, li: usize) -> Vec<(u8, usize, usize)> {
+        let mut m = Vec::new();
+        for (mi, &(g, meta)) in self.cores.iter().enumerate() {
+            if g != gcc {
+                continue;
+            }
+            for (pi, part) in meta.parts.iter().enumerate() {
+                if part.0 == li {
+                    m.push((meta.nc, mi, pi));
+                }
+            }
+        }
+        m.sort_unstable();
+        m
+    }
+
+    /// The single-IE "regular margin" encoding, when it applies (mirrors
+    /// codegen's `regular_group`).
+    fn regular(&self, members: &[(u8, usize, usize)]) -> Option<(u16, u16, u16)> {
+        let &(_, mi0, pi0) = members.first()?;
+        let margin = self.cores[mi0].1.parts[pi0].2 as u16;
+        let mut mask = 0u16;
+        let mut total = 0u16;
+        for (k, &(nc, mi, pi)) in members.iter().enumerate() {
+            let (_, _, count, local_base) = self.cores[mi].1.parts[pi];
+            if local_base != 0 {
+                return None;
+            }
+            let c = count as u16;
+            if (k + 1 < members.len() && c != margin) || c > margin {
+                return None;
+            }
+            mask |= 1 << nc;
+            total += c;
+        }
+        Some((mask, margin, total))
+    }
+
+    /// Expected Full2 IE list for one branch of a layer block.
+    fn expected_full2(
+        &self,
+        members: &[(u8, usize, usize)],
+        br: usize,
+        branches: usize,
+    ) -> Vec<FanInIE> {
+        if branches == 1 {
+            if let Some((nc_mask, margin, count)) = self.regular(members) {
+                return vec![FanInIE::Type2 { nc_mask, margin, count, start: 0 }];
+            }
+        }
+        members
+            .iter()
+            .map(|&(nc, mi, pi)| {
+                let (_, _, count, local_base) = self.cores[mi].1.parts[pi];
+                let count = count as u16;
+                FanInIE::Type2 {
+                    nc_mask: 1 << nc,
+                    margin: count,
+                    count,
+                    start: local_base as u16 + br as u16 * count,
+                }
+            })
+            .collect()
+    }
+
+    /// Structural pass over one CC: fan-in block reconstruction, fan-out
+    /// shape, NC memory/weight regions, NC program checks.
+    fn check_cc(&mut self, gcc: usize) -> CcInfo {
+        let img = self.ccs[&gcc];
+        let tables = &img.tables;
+        let at0 = Loc::at(gcc);
+        let last = self.net.layers.len() - 1;
+
+        // IT slice bounds (both directions).
+        for (i, de) in tables.fanin_dt.iter().enumerate() {
+            if de.it_base as usize + de.it_len as usize > tables.fanin_it.len() {
+                self.report.push(VerifyError::ItRange {
+                    at: at0.entry(i),
+                    table: "fan-in",
+                    it_base: de.it_base,
+                    it_len: de.it_len,
+                    avail: tables.fanin_it.len(),
+                });
+            }
+        }
+        for (i, de) in tables.fanout_dt.iter().enumerate() {
+            if de.it_base as usize + de.it_len as usize > tables.fanout_it.len() {
+                self.report.push(VerifyError::ItRange {
+                    at: at0.entry(i),
+                    table: "fan-out",
+                    it_base: de.it_base,
+                    it_len: de.it_len,
+                    avail: tables.fanout_it.len(),
+                });
+            }
+        }
+
+        // Expected fan-in blocks: hosted layers in ascending order, then
+        // the learning error-injection block.
+        let mut hosted: Vec<usize> = Vec::new();
+        for &(g, meta) in &self.cores {
+            if g == gcc {
+                hosted.extend(meta.parts.iter().map(|p| p.0));
+            }
+        }
+        hosted.sort_unstable();
+        hosted.dedup();
+        let mut blocks: Vec<BlockInfo> = Vec::new();
+        let mut shape_ok = true;
+        for &li in &hosted {
+            if li == 0 || li > last {
+                self.report.push(VerifyError::Structure {
+                    at: at0,
+                    detail: format!("hosted part names layer {li} outside the network"),
+                });
+                shape_ok = false;
+                continue;
+            }
+            let (kind, len) = match &self.net.layers[li] {
+                Layer::Fc { neuron, .. } | Layer::Recurrent { neuron, .. } => {
+                    (IeType::Full2, branches_of(neuron))
+                }
+                Layer::Sparse { input, .. } => (IeType::Sparse1, *input),
+                other => {
+                    self.report.push(VerifyError::Structure {
+                        at: at0,
+                        detail: format!("layer {li} ({other:?}) has no fan-in encoding"),
+                    });
+                    shape_ok = false;
+                    continue;
+                }
+            };
+            blocks.push(BlockInfo {
+                layer: Some(li),
+                kind,
+                dt_base: 0,
+                len,
+                rows: axon_space_of(self.net, li),
+                pad: axon_pad(self.net, li),
+            });
+        }
+        if self.learning && hosted.contains(&last) {
+            let n: usize = self
+                .members_of(gcc, last)
+                .iter()
+                .map(|&(_, mi, pi)| self.cores[mi].1.parts[pi].2)
+                .sum();
+            blocks.push(BlockInfo {
+                layer: None,
+                kind: IeType::Sparse0,
+                dt_base: 0,
+                len: n,
+                rows: 0,
+                pad: 0,
+            });
+        }
+        let total: usize = blocks.iter().map(|b| b.len).sum();
+        if shape_ok && tables.fanin_dt.len() != total {
+            self.report.push(VerifyError::FanInShape {
+                at: at0,
+                detail: format!(
+                    "DT has {} entries, hosted layers {hosted:?} imply {total}",
+                    tables.fanin_dt.len()
+                ),
+            });
+            shape_ok = false;
+        }
+
+        let mut info = CcInfo {
+            blocks: Vec::new(),
+            block_of: vec![usize::MAX; tables.fanin_dt.len()],
+            fanout_layer: vec![usize::MAX; tables.fanout_dt.len()],
+            shape_ok,
+        };
+
+        // Sparse fan-in weight slots per (nc, part), for the tiling check.
+        let mut sparse_slots: HashMap<(u8, usize, usize), Vec<u16>> = HashMap::new();
+
+        if shape_ok {
+            let mut cursor = 0usize;
+            for b in &mut blocks {
+                b.dt_base = cursor;
+                cursor += b.len;
+            }
+            for (bi, b) in blocks.iter().enumerate() {
+                for slot in &mut info.block_of[b.dt_base..b.dt_base + b.len] {
+                    *slot = bi;
+                }
+                if b.len == 0 {
+                    continue;
+                }
+                let tag0 = tables.fanin_dt[b.dt_base].tag;
+                for i in b.dt_base..b.dt_base + b.len {
+                    let de = &tables.fanin_dt[i];
+                    if de.ie_type != b.kind {
+                        self.report.push(VerifyError::FanInShape {
+                            at: at0.entry(i),
+                            detail: format!(
+                                "entry is {:?}, block for layer {:?} expects {:?}",
+                                de.ie_type, b.layer, b.kind
+                            ),
+                        });
+                    }
+                    if de.tag != tag0 {
+                        self.report.push(VerifyError::FanInShape {
+                            at: at0.entry(i),
+                            detail: format!("tag {} breaks block uniformity ({tag0})", de.tag),
+                        });
+                    }
+                    if de.k2 != 0 {
+                        self.report.push(VerifyError::FanInShape {
+                            at: at0.entry(i),
+                            detail: format!("k2 {} on a non-convolutional entry", de.k2),
+                        });
+                    }
+                }
+            }
+            for b in &blocks {
+                match (b.layer, b.kind) {
+                    (Some(li), IeType::Full2) => {
+                        let members = self.members_of(gcc, li);
+                        for br in 0..b.len {
+                            let de = tables.fanin_dt[b.dt_base + br];
+                            let lo = de.it_base as usize;
+                            let Some(got) = tables.fanin_it.get(lo..lo + de.it_len as usize)
+                            else {
+                                continue;
+                            };
+                            let want = self.expected_full2(&members, br, b.len);
+                            if got != want.as_slice() {
+                                self.report.push(VerifyError::IeTarget {
+                                    at: at0.entry(b.dt_base + br),
+                                    detail: format!(
+                                        "layer {li} branch {br} IEs {got:?} differ from the placement-derived {want:?}"
+                                    ),
+                                });
+                            }
+                        }
+                    }
+                    (Some(li), IeType::Sparse1) => {
+                        for i in b.dt_base..b.dt_base + b.len {
+                            let de = tables.fanin_dt[i];
+                            let lo = de.it_base as usize;
+                            let Some(ies) = tables.fanin_it.get(lo..lo + de.it_len as usize)
+                            else {
+                                continue;
+                            };
+                            let mut seen: Vec<(u8, u16)> = Vec::new();
+                            for ie in ies {
+                                let FanInIE::Type1 { nc, neuron, local_axon } = *ie else {
+                                    self.report.push(VerifyError::IeTarget {
+                                        at: at0.entry(i),
+                                        detail: format!(
+                                            "sparse upstream entry holds {ie:?}, expected Type1"
+                                        ),
+                                    });
+                                    continue;
+                                };
+                                if seen.contains(&(nc, neuron)) {
+                                    self.report.push(VerifyError::IeTarget {
+                                        at: at0.entry(i),
+                                        detail: format!(
+                                            "neuron (nc {nc}, {neuron}) targeted twice by one upstream entry"
+                                        ),
+                                    });
+                                }
+                                seen.push((nc, neuron));
+                                let Some(&mi) = self.metas.get(&(gcc, nc)) else {
+                                    self.report.push(VerifyError::IeTarget {
+                                        at: at0.entry(i),
+                                        detail: format!("targets unplaced nc {nc}"),
+                                    });
+                                    continue;
+                                };
+                                let meta = self.cores[mi].1;
+                                let mut owner: Option<(usize, usize)> = None;
+                                for (pi, &(pl, _, count, base)) in meta.parts.iter().enumerate() {
+                                    if (base..base + count).contains(&(neuron as usize)) {
+                                        owner = Some((pi, pl));
+                                        break;
+                                    }
+                                }
+                                match owner {
+                                    None => self.report.push(VerifyError::IeTarget {
+                                        at: at0.entry(i),
+                                        detail: format!(
+                                            "targets non-resident neuron {neuron} on nc {nc}"
+                                        ),
+                                    }),
+                                    Some((_, pl)) if pl != li => {
+                                        self.report.push(VerifyError::IeTarget {
+                                            at: at0.entry(i),
+                                            detail: format!(
+                                                "layer {li} entry targets a layer {pl} neuron (nc {nc}, {neuron})"
+                                            ),
+                                        });
+                                    }
+                                    Some((pi, _)) => {
+                                        sparse_slots
+                                            .entry((nc, mi, pi))
+                                            .or_default()
+                                            .push(local_axon);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    (None, _) => {
+                        // Error-injection block: one Type0 per resident
+                        // head neuron in member order.
+                        let members = self.members_of(gcc, last);
+                        let mut k = 0usize;
+                        for &(nc, mi, pi) in &members {
+                            let (_, _, count, base) = self.cores[mi].1.parts[pi];
+                            for j in 0..count {
+                                let i = b.dt_base + k;
+                                k += 1;
+                                let de = tables.fanin_dt[i];
+                                if de.it_len != 1 {
+                                    self.report.push(VerifyError::FanInShape {
+                                        at: at0.entry(i),
+                                        detail: format!(
+                                            "error-injection entry carries {} IEs, expected 1",
+                                            de.it_len
+                                        ),
+                                    });
+                                    continue;
+                                }
+                                let Some(&ie) = tables.fanin_it.get(de.it_base as usize) else {
+                                    continue;
+                                };
+                                let want = FanInIE::Type0 { nc, neuron: (base + j) as u16 };
+                                if ie != want {
+                                    self.report.push(VerifyError::IeTarget {
+                                        at: at0.entry(i),
+                                        detail: format!(
+                                            "error-injection IE {ie:?} differs from {want:?}"
+                                        ),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            info.blocks = blocks;
+        }
+
+        // Fan-out shape: one DE per resident neuron, cores in (nc, core)
+        // order, parts in part order, with the recurrent axon rebase.
+        let mut present: Vec<(u8, usize)> = Vec::new();
+        for (mi, &(g, meta)) in self.cores.iter().enumerate() {
+            if g == gcc {
+                present.push((meta.nc, mi));
+            }
+        }
+        present.sort_unstable();
+        let mut expected: Vec<(usize, u16)> = Vec::new();
+        for &(_nc, mi) in &present {
+            let meta = self.cores[mi].1;
+            for &(li, n_base, count, _) in &meta.parts {
+                let rec_off = match self.net.layers.get(li) {
+                    Some(Layer::Recurrent { input, .. }) => Some(axon_pad(self.net, li) + input),
+                    _ => None,
+                };
+                for j in 0..count {
+                    let global = n_base + j;
+                    let axon = rec_off.map_or(global, |off| off + global);
+                    expected.push((li, axon as u16));
+                }
+            }
+        }
+        if tables.fanout_dt.len() == expected.len() {
+            for (d, (de, &(li, axon))) in
+                tables.fanout_dt.iter().zip(expected.iter()).enumerate()
+            {
+                info.fanout_layer[d] = li;
+                if de.global_axon != axon {
+                    self.report.push(VerifyError::FanOutAxon {
+                        at: at0.entry(d),
+                        expected: axon,
+                        got: de.global_axon,
+                    });
+                }
+            }
+        } else {
+            self.report.push(VerifyError::FanOutShape {
+                at: at0,
+                expected: expected.len(),
+                got: tables.fanout_dt.len(),
+            });
+        }
+
+        // NC images: config consistency, memory regions, programs.
+        if img.ncs.len() > NCS_PER_CC {
+            self.report.push(VerifyError::Structure {
+                at: at0,
+                detail: format!("{} NC slots on a {NCS_PER_CC}-NC CC", img.ncs.len()),
+            });
+        }
+        for (nci, slot) in img.ncs.iter().enumerate() {
+            let Some(nc_img) = slot.as_ref() else { continue };
+            let nc = nci as u8;
+            let at = at0.nc(nc);
+            let Some(&mi) = self.metas.get(&(gcc, nc)) else {
+                self.report.push(VerifyError::Structure {
+                    at,
+                    detail: "NC image with no core metadata".into(),
+                });
+                continue;
+            };
+            let meta = self.cores[mi].1;
+            self.check_nc(at, meta, nc_img, last, &sparse_slots, nc, mi, shape_ok);
+        }
+
+        info
+    }
+
+    /// Per-NC checks: scheduler config vs residents, memory regions vs
+    /// `data_words`, weight-region tiling + sparse slot bijectivity, and
+    /// the ISA pass over both programs.
+    #[allow(clippy::too_many_arguments)]
+    fn check_nc(
+        &mut self,
+        at: Loc,
+        meta: &'a CoreMeta,
+        nc_img: &'a NcImage,
+        last: usize,
+        sparse_slots: &HashMap<(u8, usize, usize), Vec<u16>>,
+        nc: u8,
+        mi: usize,
+        shape_ok: bool,
+    ) {
+        let lay = &meta.layout;
+        // Parts are laid out contiguously; the scheduler visits
+        // `cfg.neurons` of them.
+        let mut base = 0usize;
+        let mut contiguous = true;
+        for &(_, _, count, local_base) in &meta.parts {
+            if local_base != base {
+                contiguous = false;
+            }
+            base += count;
+        }
+        if !contiguous {
+            self.report.push(VerifyError::Structure {
+                at,
+                detail: format!("parts are not contiguous: {:?}", meta.parts),
+            });
+        }
+        let residents: usize = meta.parts.iter().map(|p| p.2).sum();
+        if nc_img.cfg.neurons as usize != residents {
+            self.report.push(VerifyError::Structure {
+                at,
+                detail: format!(
+                    "scheduler config visits {} neurons, {residents} resident",
+                    nc_img.cfg.neurons
+                ),
+            });
+        }
+        let hosts_head = meta.parts.iter().any(|&(li, ..)| li == last);
+        let want_learn = self.learning && hosts_head;
+        if nc_img.cfg.learn != want_learn {
+            self.report.push(VerifyError::Structure {
+                at,
+                detail: format!(
+                    "learn flag is {}, expected {want_learn} (learning {}, hosts head {hosts_head})",
+                    nc_img.cfg.learn, self.learning
+                ),
+            });
+        }
+
+        // Memory regions: in-bounds and non-overlapping (two identical
+        // itof images from merged head parts are benign duplicates).
+        let mut spans: Vec<(u16, usize)> =
+            nc_img.mem.iter().map(|(a, w)| (*a, w.len())).collect();
+        for &(a, len) in &spans {
+            if a as usize + len > self.data_words {
+                self.report.push(VerifyError::MemRegion {
+                    at,
+                    addr: a,
+                    len,
+                    data_words: self.data_words,
+                });
+            }
+        }
+        spans.sort_unstable();
+        for w in spans.windows(2) {
+            let (a0, l0) = w[0];
+            let (a1, l1) = w[1];
+            let identical_itof = a0 == a1 && l0 == l1 && a0 == lay.itof;
+            if a0 as usize + l0 > a1 as usize && !identical_itof {
+                self.report.push(VerifyError::MemOverlap { at, a: (a0, l0), b: (a1, l1) });
+            }
+        }
+        if want_learn && lay.itof as usize + ITOF_SIZE > self.data_words {
+            self.report.push(VerifyError::MemRegion {
+                at,
+                addr: lay.itof,
+                len: ITOF_SIZE,
+                data_words: self.data_words,
+            });
+        }
+
+        // Weight-region tiling: entries inside [weights, cur) must sit at
+        // the cumulative per-part offsets (merged cores lay their parts'
+        // weights sequentially, in part order).
+        let mut wentries: Vec<(u16, usize)> = nc_img
+            .mem
+            .iter()
+            .filter(|(a, _)| *a >= lay.weights && *a < lay.cur)
+            .map(|(a, w)| (*a, w.len()))
+            .collect();
+        wentries.sort_unstable();
+        let mut acc = lay.weights as usize;
+        let mut next = 0usize;
+        for (pi, &(li, _, count, _)) in meta.parts.iter().enumerate() {
+            let fixed = match self.net.layers.get(li) {
+                Some(Layer::Sparse { .. }) => None,
+                Some(_) => Some(axon_space_of(self.net, li) * count),
+                None => Some(0),
+            };
+            let entry_len = if next < wentries.len() && wentries[next].0 as usize == acc {
+                let l = wentries[next].1;
+                next += 1;
+                l
+            } else {
+                0
+            };
+            match fixed {
+                Some(want) => {
+                    if entry_len != want {
+                        self.report.push(VerifyError::WeightRegion {
+                            at,
+                            detail: format!(
+                                "part {pi} (layer {li}) holds {entry_len} weight words at offset {}, expected {want}",
+                                acc - lay.weights as usize
+                            ),
+                        });
+                    }
+                    acc += want;
+                }
+                None => {
+                    // Sparse: the entry length is the part's nonzero
+                    // count; the fan-in slots must tile it bijectively.
+                    let off = acc - lay.weights as usize;
+                    if shape_ok {
+                        let mut got =
+                            sparse_slots.get(&(nc, mi, pi)).cloned().unwrap_or_default();
+                        got.sort_unstable();
+                        let want: Vec<u16> =
+                            (off as u16..(off + entry_len) as u16).collect();
+                        if got != want {
+                            self.report.push(VerifyError::SparseWeightSlot {
+                                at,
+                                layer: li,
+                                detail: format!(
+                                    "part {pi}: fan-in addresses {} slot(s) in [{:?}, {:?}], weight words occupy [{off}, {})",
+                                    got.len(),
+                                    got.first(),
+                                    got.last(),
+                                    off + entry_len
+                                ),
+                            });
+                        }
+                    }
+                    acc += entry_len;
+                }
+            }
+        }
+        if next < wentries.len() {
+            self.report.push(VerifyError::WeightRegion {
+                at,
+                detail: format!(
+                    "{} weight entr(ies) at unexpected offsets (first at {})",
+                    wentries.len() - next,
+                    wentries[next].0
+                ),
+            });
+        }
+        if acc > lay.cur as usize {
+            self.report.push(VerifyError::WeightRegion {
+                at,
+                detail: format!(
+                    "weight words run to {} but the region ends at {}",
+                    acc, lay.cur
+                ),
+            });
+        }
+
+        self.check_program(at, "integ", &nc_img.integ, nc_img.cfg.learn, lay);
+        self.check_program(at, "fire", &nc_img.fire, nc_img.cfg.learn, lay);
+    }
+
+    /// ISA pass over one NC program: encode/decode and disassemble/
+    /// reassemble round-trips, branch targets, shift and memory-operand
+    /// ranges, and the learning-only weight-store rule.
+    fn check_program(
+        &mut self,
+        at: Loc,
+        program: &'static str,
+        p: &Program,
+        learn: bool,
+        lay: &NcLayout,
+    ) {
+        self.report.checked_instrs += p.code.len();
+        match Program::from_words(&p.to_words()) {
+            Some(q) if q.code == p.code => {}
+            _ => self.report.push(VerifyError::Isa {
+                at,
+                program,
+                pc: 0,
+                detail: "instruction words do not decode back to the source program".into(),
+            }),
+        }
+        match assemble(&disassemble(&p.code)) {
+            Ok(q) => {
+                let n = p.code.len();
+                let faithful = q.code.len() >= n
+                    && q.code[..n] == p.code[..]
+                    && q.code[n..].iter().all(|i| i.op == Opcode::Nop);
+                if !faithful {
+                    self.report.push(VerifyError::Isa {
+                        at,
+                        program,
+                        pc: 0,
+                        detail: "disassembly does not reassemble to the same program".into(),
+                    });
+                }
+            }
+            Err(e) => self.report.push(VerifyError::Isa {
+                at,
+                program,
+                pc: 0,
+                detail: format!("disassembly does not reassemble: {e:?}"),
+            }),
+        }
+        for (pc, i) in p.code.iter().enumerate() {
+            match i.op {
+                Opcode::B | Opcode::Bc => {
+                    if i.imm < 0 || i.imm as usize > p.code.len() {
+                        self.report.push(VerifyError::Isa {
+                            at,
+                            program,
+                            pc,
+                            detail: format!(
+                                "branch target {} outside [0, {}]",
+                                i.imm,
+                                p.code.len()
+                            ),
+                        });
+                    }
+                }
+                Opcode::Shl | Opcode::Shr => {
+                    if i.imm < 0 || i.imm > 15 {
+                        self.report.push(VerifyError::Isa {
+                            at,
+                            program,
+                            pc,
+                            detail: format!("shift amount {} outside 0..16", i.imm),
+                        });
+                    }
+                }
+                Opcode::Ld | Opcode::St | Opcode::Locacc | Opcode::Findidx => {
+                    if i.imm < 0 || i.imm as usize >= self.data_words {
+                        self.report.push(VerifyError::Isa {
+                            at,
+                            program,
+                            pc,
+                            detail: format!(
+                                "memory operand {} outside the {}-word data memory",
+                                i.imm, self.data_words
+                            ),
+                        });
+                    } else if i.op == Opcode::St && !learn {
+                        let a = i.imm as usize;
+                        if a >= lay.weights as usize && a < lay.cur as usize {
+                            self.report.push(VerifyError::Isa {
+                                at,
+                                program,
+                                pc,
+                                detail:
+                                    "stores into the weight region on a non-learning NC".into(),
+                            });
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// One fan-out IE: route resolution, then delivery-side checks.
+    fn check_edge(&mut self, src: usize, d: usize, li: usize, axon: u16, ie: FanOutIE) {
+        self.report.checked_edges += 1;
+        let at = Loc::at(src).entry(d);
+        let dst = match ie.mode {
+            RouteMode::Unicast { x, y } => {
+                if x as usize >= MESH_W || y as usize >= MESH_H {
+                    self.report.push(VerifyError::RouteOffMesh { at, x, y });
+                    return;
+                }
+                (src / NUM_CCS) * NUM_CCS + cc_id(x, y)
+            }
+            RouteMode::Remote { chip, x, y } => {
+                if ie.delay > 0 {
+                    self.report.push(VerifyError::DelayedRemote { at, delay: ie.delay });
+                }
+                if chip as usize >= self.dies {
+                    self.report.push(VerifyError::RemoteChipRange {
+                        at,
+                        chip,
+                        dies: self.dies,
+                    });
+                    return;
+                }
+                if x as usize >= MESH_W || y as usize >= MESH_H {
+                    self.report.push(VerifyError::RouteOffMesh { at, x, y });
+                    return;
+                }
+                if chip as usize == src / NUM_CCS {
+                    self.report.warn(VerifyWarning::RemoteSelf { at });
+                }
+                chip as usize * NUM_CCS + cc_id(x, y)
+            }
+            other => {
+                self.report.warn(VerifyWarning::UnroutedMode {
+                    at,
+                    detail: format!("{other:?}"),
+                });
+                return;
+            }
+        };
+        // Expected upstream id for sparse-destination index checks: the
+        // payload is the minting DE's global axon, rebased for recurrent
+        // sources (their axons sit past the destination's forward block).
+        let expect_up = (li != usize::MAX).then(|| match self.net.layers.get(li) {
+            Some(Layer::Recurrent { input, .. }) => (axon as usize)
+                .checked_sub(axon_pad(self.net, li) + input)
+                .unwrap_or(usize::MAX),
+            _ => axon as usize,
+        });
+        self.deliver(at, Some((src, d)), expect_up, dst, ie.tag, ie.index, axon, false);
+    }
+
+    /// Delivery-side checks shared by spike edges and host packets.
+    #[allow(clippy::too_many_arguments)]
+    fn deliver(
+        &mut self,
+        at: Loc,
+        source: Option<(usize, usize)>,
+        expect_up: Option<usize>,
+        dst: usize,
+        tag: u16,
+        index: u16,
+        payload: u16,
+        from_error: bool,
+    ) {
+        let dest0 = Loc::at(dst);
+        if !self.info.contains_key(&dst) {
+            self.report.push(VerifyError::DanglingRoute { at, dest: dest0 });
+            return;
+        }
+        let img = self.ccs[&dst];
+        let i = index as usize;
+        if i >= img.tables.fanin_dt.len() {
+            self.report.push(VerifyError::FanOutIndexRange {
+                at,
+                dest: dest0,
+                index,
+                dt_len: img.tables.fanin_dt.len(),
+            });
+            return;
+        }
+        let dest = dest0.entry(i);
+        let de_tag = img.tables.fanin_dt[i].tag;
+        if de_tag != tag {
+            self.report.push(VerifyError::TagMismatch { at, dest, sent: tag, expected: de_tag });
+        }
+        if let Some(c) = self.covered.get_mut(&dst).and_then(|v| v.get_mut(i)) {
+            *c += 1;
+        }
+        let block = {
+            let info = &self.info[&dst];
+            info.block_of.get(i).and_then(|&b| info.blocks.get(b)).copied()
+        };
+        let Some(b) = block else { return }; // shape mismatch already reported
+        match b.kind {
+            IeType::Full2 => {
+                let row = payload as usize;
+                if row >= b.rows {
+                    self.report.push(VerifyError::AxonRowRange {
+                        at,
+                        dest,
+                        payload,
+                        rows: b.rows,
+                    });
+                } else if row < b.pad {
+                    self.report.push(VerifyError::DeadRowAddressed {
+                        at,
+                        dest,
+                        payload,
+                        pad: b.pad,
+                    });
+                }
+            }
+            IeType::Sparse1 => {
+                if let Some(up) = expect_up {
+                    if up != i - b.dt_base {
+                        self.report.push(VerifyError::SparseIndexSkew {
+                            at,
+                            dest,
+                            index,
+                            expected: b.dt_base.saturating_add(up),
+                        });
+                    }
+                }
+                if let Some(s) = source {
+                    self.alias.entry((dst, i)).or_default().push(s);
+                }
+            }
+            IeType::Sparse0 => {
+                if from_error {
+                    if let Some(c) = self.err_covered.get_mut(&dst).and_then(|v| v.get_mut(i)) {
+                        *c += 1;
+                    }
+                } else {
+                    self.report.push(VerifyError::ErrorBlockEdge { at, dest });
+                }
+            }
+            IeType::Conv3 => {
+                self.report.push(VerifyError::Structure {
+                    at: dest,
+                    detail: "Conv3 fan-in is not emitted by this compiler".into(),
+                });
+            }
+        }
+    }
+
+    /// Resolve a host-injected packet to a die-global CC.
+    fn resolve_host(
+        &mut self,
+        kind: &'static str,
+        channel: usize,
+        die: Option<usize>,
+        p: &Packet,
+    ) -> Option<usize> {
+        let in_mesh = |x: u8, y: u8| (x as usize) < MESH_W && (y as usize) < MESH_H;
+        match (die, p.mode) {
+            (Some(d), RouteMode::Unicast { x, y }) => {
+                if !in_mesh(x, y) {
+                    self.report.push(VerifyError::HostMap {
+                        kind,
+                        channel,
+                        detail: format!("targets ({x}, {y}) outside the mesh"),
+                    });
+                    return None;
+                }
+                if d >= self.dies {
+                    self.report.push(VerifyError::HostMap {
+                        kind,
+                        channel,
+                        detail: format!("targets die {d} of a {}-die fleet", self.dies),
+                    });
+                    return None;
+                }
+                Some(d * NUM_CCS + cc_id(x, y))
+            }
+            (Some(_), mode) => {
+                self.report.push(VerifyError::HostMap {
+                    kind,
+                    channel,
+                    detail: format!("sharded host packets must be die-local unicast, got {mode:?}"),
+                });
+                None
+            }
+            (None, RouteMode::Unicast { x, y }) => {
+                if !in_mesh(x, y) {
+                    self.report.push(VerifyError::HostMap {
+                        kind,
+                        channel,
+                        detail: format!("targets ({x}, {y}) outside the mesh"),
+                    });
+                    return None;
+                }
+                Some(cc_id(x, y))
+            }
+            (None, RouteMode::Remote { chip, x, y }) => {
+                if chip as usize >= self.dies || !in_mesh(x, y) {
+                    self.report.push(VerifyError::HostMap {
+                        kind,
+                        channel,
+                        detail: format!(
+                            "remote target (die {chip}, {x}, {y}) outside the {}-die fleet/mesh",
+                            self.dies
+                        ),
+                    });
+                    return None;
+                }
+                Some(chip as usize * NUM_CCS + cc_id(x, y))
+            }
+            (None, mode) => {
+                self.report.push(VerifyError::HostMap {
+                    kind,
+                    channel,
+                    detail: format!("unsupported host route {mode:?}"),
+                });
+                None
+            }
+        }
+    }
+
+    /// Host input map: one channel per input, Data packets iff layer 1
+    /// decodes FP data (Sparse), INTEG phase, resolvable routes, and the
+    /// payload/index pair valid at the destination.
+    fn check_input(&mut self, input: HostPackets) {
+        let n_in = match self.net.layers[0] {
+            Layer::Input { size } => size,
+            _ => {
+                self.report.push(VerifyError::Structure {
+                    at: Loc::at(0),
+                    detail: "layer 0 is not an Input layer".into(),
+                });
+                return;
+            }
+        };
+        if input.len() != n_in {
+            self.report.push(VerifyError::HostMap {
+                kind: "input",
+                channel: input.len(),
+                detail: format!("map covers {} channels, network has {n_in}", input.len()),
+            });
+        }
+        let want_data = matches!(self.net.layers.get(1), Some(Layer::Sparse { .. }));
+        for (ch, pkts) in input.iter().enumerate() {
+            if pkts.is_empty() {
+                self.report.push(VerifyError::HostMap {
+                    kind: "input",
+                    channel: ch,
+                    detail: "channel has no delivery".into(),
+                });
+                continue;
+            }
+            for &(die, p) in pkts {
+                let want = if want_data { PacketType::Data } else { PacketType::Spike };
+                if p.ptype != want {
+                    self.report.push(VerifyError::HostMap {
+                        kind: "input",
+                        channel: ch,
+                        detail: format!("packet type {:?}, expected {want:?}", p.ptype),
+                    });
+                }
+                if p.phase != PacketPhase::Integ {
+                    self.report.push(VerifyError::HostMap {
+                        kind: "input",
+                        channel: ch,
+                        detail: format!("packet phase {:?}, expected Integ", p.phase),
+                    });
+                }
+                let Some(dst) = self.resolve_host("input", ch, die, &p) else { continue };
+                self.deliver(
+                    Loc::at(dst),
+                    None,
+                    Some(p.payload as usize),
+                    dst,
+                    p.tag,
+                    p.index,
+                    p.payload,
+                    false,
+                );
+            }
+        }
+    }
+
+    /// Host error-injection map: present iff learning, one packet per
+    /// output neuron, each landing on a distinct Sparse0 entry.
+    fn check_error(&mut self, error_pkts: ErrorPackets) {
+        let n_out = self.net.layers[self.net.layers.len() - 1].neurons();
+        if !self.learning {
+            if !error_pkts.is_empty() {
+                self.report.push(VerifyError::HostMap {
+                    kind: "error",
+                    channel: 0,
+                    detail: format!(
+                        "{} error packets on a non-learning deployment",
+                        error_pkts.len()
+                    ),
+                });
+            }
+            return;
+        }
+        if error_pkts.len() != n_out {
+            self.report.push(VerifyError::HostMap {
+                kind: "error",
+                channel: error_pkts.len(),
+                detail: format!("map covers {} outputs, network has {n_out}", error_pkts.len()),
+            });
+        }
+        for (o, &(die, p)) in error_pkts.iter().enumerate() {
+            if p.ptype != PacketType::Data || p.phase != PacketPhase::Integ {
+                self.report.push(VerifyError::HostMap {
+                    kind: "error",
+                    channel: o,
+                    detail: format!(
+                        "packet is {:?}/{:?}, expected Data/Integ",
+                        p.ptype, p.phase
+                    ),
+                });
+            }
+            let Some(dst) = self.resolve_host("error", o, die, &p) else { continue };
+            self.deliver(Loc::at(dst), None, None, dst, p.tag, p.index, p.payload, true);
+        }
+        // Every error-injection entry covered exactly once.
+        let mut gccs: Vec<usize> = self.info.keys().copied().collect();
+        gccs.sort_unstable();
+        let mut findings: Vec<VerifyError> = Vec::new();
+        for gcc in gccs {
+            let info = &self.info[&gcc];
+            let counts = &self.err_covered[&gcc];
+            for b in &info.blocks {
+                if b.layer.is_some() {
+                    continue;
+                }
+                for i in b.dt_base..b.dt_base + b.len {
+                    let c = counts.get(i).copied().unwrap_or(0);
+                    if c != 1 {
+                        findings.push(VerifyError::ErrorInjCoverage {
+                            dest: Loc::at(gcc).entry(i),
+                            detail: format!("entry receives {c} host packets, expected 1"),
+                        });
+                    }
+                }
+            }
+        }
+        for e in findings {
+            self.report.push(e);
+        }
+    }
+
+    /// Host readout map: every target a resident final-layer neuron,
+    /// every output covered exactly once across the fleet.
+    fn check_readout(&mut self, readout: ReadoutMap) {
+        let last = self.net.layers.len() - 1;
+        let n_out = self.net.layers[last].neurons();
+        let mut seen = vec![0u32; n_out];
+        let mut rd = readout;
+        rd.sort_unstable();
+        for ((gcc, nc, neuron), out) in rd {
+            if out >= n_out {
+                self.report.push(VerifyError::HostMap {
+                    kind: "readout",
+                    channel: out,
+                    detail: format!("output index past the {n_out} network outputs"),
+                });
+                continue;
+            }
+            seen[out] += 1;
+            let Some(&mi) = self.metas.get(&(gcc, nc)) else {
+                self.report.push(VerifyError::HostMap {
+                    kind: "readout",
+                    channel: out,
+                    detail: format!("reads {} nc {nc}, which hosts no core", Loc::at(gcc)),
+                });
+                continue;
+            };
+            let meta = self.cores[mi].1;
+            let resident = meta.parts.iter().any(|&(li, _, count, base)| {
+                li == last && (base..base + count).contains(&(neuron as usize))
+            });
+            if !resident {
+                self.report.push(VerifyError::HostMap {
+                    kind: "readout",
+                    channel: out,
+                    detail: format!(
+                        "reads neuron {neuron} on {} nc {nc}, not a resident final-layer neuron",
+                        Loc::at(gcc)
+                    ),
+                });
+            }
+        }
+        for (o, &c) in seen.iter().enumerate() {
+            if c != 1 {
+                self.report.push(VerifyError::HostMap {
+                    kind: "readout",
+                    channel: o,
+                    detail: format!("output covered {c} times, expected 1"),
+                });
+            }
+        }
+    }
+
+    /// Sparse-destination bijectivity: each per-upstream entry must have
+    /// at most one distinct source (the aliased encoding collapses a
+    /// whole upstream part onto `dt_base`).
+    fn finish_alias(&mut self) {
+        let mut keys: Vec<(usize, usize)> = self.alias.keys().copied().collect();
+        keys.sort_unstable();
+        let mut findings: Vec<VerifyError> = Vec::new();
+        for key in keys {
+            let (dst, i) = key;
+            let mut srcs = self.alias[&key].clone();
+            srcs.sort_unstable();
+            let dest = Loc::at(dst).entry(i);
+            if let Some(w) = srcs.windows(2).find(|w| w[0] == w[1]) {
+                findings.push(VerifyError::DuplicateEdge {
+                    at: Loc::at(w[0].0).entry(w[0].1),
+                    dest,
+                    index: i as u16,
+                });
+            }
+            srcs.dedup();
+            if srcs.len() > 1 {
+                let layer = {
+                    let info = &self.info[&dst];
+                    info.block_of
+                        .get(i)
+                        .and_then(|&b| info.blocks.get(b))
+                        .and_then(|b| b.layer)
+                        .unwrap_or(0)
+                };
+                findings.push(VerifyError::SparseFanOutAliased {
+                    dest,
+                    layer,
+                    sources: srcs.len(),
+                });
+            }
+        }
+        for e in findings {
+            self.report.push(e);
+        }
+    }
+
+    /// Liveness sweep: fan-in blocks nothing routes into, and non-final
+    /// neurons whose fan-out mints nothing.
+    fn finish_liveness(&mut self, gccs: &[usize]) {
+        let last = self.net.layers.len() - 1;
+        let mut warnings: Vec<VerifyWarning> = Vec::new();
+        for &gcc in gccs {
+            let info = &self.info[&gcc];
+            let counts = &self.covered[&gcc];
+            for b in &info.blocks {
+                let Some(layer) = b.layer else { continue };
+                if b.len == 0 {
+                    continue;
+                }
+                let any = (b.dt_base..b.dt_base + b.len)
+                    .any(|i| counts.get(i).copied().unwrap_or(0) > 0);
+                if !any {
+                    warnings.push(VerifyWarning::DeadFanIn { at: Loc::at(gcc), layer });
+                }
+            }
+            let img = self.ccs[&gcc];
+            for (d, de) in img.tables.fanout_dt.iter().enumerate() {
+                let li = info.fanout_layer.get(d).copied().unwrap_or(usize::MAX);
+                if li < last && de.it_len == 0 {
+                    warnings.push(VerifyWarning::OrphanFanOut {
+                        at: Loc::at(gcc).entry(d),
+                        layer: li,
+                    });
+                }
+            }
+        }
+        for w in warnings {
+            self.report.warn(w);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loc_display_carries_all_coordinates() {
+        let l = Loc::at(NUM_CCS + 17).nc(3).entry(12);
+        assert_eq!(l.die, 1);
+        assert_eq!(l.cc, 17);
+        assert_eq!(format!("{l}"), "die 1 cc 17 nc 3 entry 12");
+    }
+
+    #[test]
+    fn report_caps_and_counts_suppressed() {
+        let mut r = VerifyReport::default();
+        for i in 0..(MAX_ERRORS + 5) {
+            r.push(VerifyError::Structure {
+                at: Loc::at(i % NUM_CCS),
+                detail: "x".into(),
+            });
+        }
+        assert_eq!(r.errors.len(), MAX_ERRORS);
+        assert_eq!(r.suppressed, 5);
+        assert!(!r.ok());
+        assert!(r.summary().contains("suppressed"));
+    }
+
+    #[test]
+    fn empty_report_is_ok_and_displays() {
+        let mut r = VerifyReport::default();
+        assert!(r.ok());
+        r.warn(VerifyWarning::RemoteSelf { at: Loc::at(0) });
+        assert!(r.ok(), "warnings alone must not fail verification");
+        let text = format!("{r}");
+        assert!(text.contains("warning"));
+    }
+
+    #[test]
+    fn error_display_is_coordinate_bearing() {
+        let e = VerifyError::SparseFanOutAliased {
+            dest: Loc::at(5).entry(9),
+            layer: 2,
+            sources: 4,
+        };
+        let s = format!("{e}");
+        assert!(s.contains("cc 5"), "{s}");
+        assert!(s.contains("entry 9"), "{s}");
+        assert!(s.contains("layer 2"), "{s}");
+    }
+}

@@ -368,6 +368,25 @@ impl MultiChipDeployment {
         if compiled.chips.is_empty() {
             return Err(host_trap("sharded image carries zero dies"));
         }
+        // A Remote route naming a die outside this fleet would index
+        // straight past the bridge tables mid-run; refuse at deploy time
+        // with coordinates instead (the static verifier reports the same
+        // condition as `RemoteChipRange` at compile time).
+        let dies = compiled.chips.len();
+        for (die, image) in compiled.chips.iter().enumerate() {
+            for (&cc, cc_img) in &image.config.ccs {
+                for ie in &cc_img.tables.fanout_it {
+                    if let RouteMode::Remote { chip, .. } = ie.mode {
+                        if chip as usize >= dies {
+                            return Err(host_trap(format!(
+                                "die {die} cc {cc}: remote route targets die \
+                                 {chip} of a {dies}-die fleet"
+                            )));
+                        }
+                    }
+                }
+            }
+        }
         let mut chips = Vec::with_capacity(compiled.chips.len());
         for image in &compiled.chips {
             let mut chip = Chip::new(compiled.data_words.max(64));

@@ -235,12 +235,24 @@ pub fn run_case(spec: &GenSpec, case: &GenCase) -> CaseReport {
         None
     };
 
-    let opts = validate_options(case.learning, spec);
+    // The oracle runs the static verifier itself as a pre-flight stage,
+    // so a malformed image surfaces as a localized divergence instead of
+    // an opaque compile refusal (and is never executed).
+    let mut opts = validate_options(case.learning, spec);
+    opts.verify = false;
 
     // single-die engines share one compiled image: the wake-set run and
     // the scan-every-column run differ only in the chip's scan flag
     match compiler::compile(&case.net, &case.weights, &opts) {
         Ok(rep) => {
+            let vr = compiler::verify::verify(&rep.compiled, &case.net, case.learning);
+            if !vr.ok() {
+                report.engines.push(EngineOutcome {
+                    engine: "verify".into(),
+                    outcome: Outcome::Diverged(preflight("verify", case.seed, &vr)),
+                });
+                return report;
+            }
             let image = Arc::new(rep.compiled);
             let locs = readout_locs(&image);
             for (name, scan) in [("wake", false), ("scan-all", true)] {
@@ -281,17 +293,30 @@ pub fn run_case(spec: &GenSpec, case: &GenCase) -> CaseReport {
             o.strategy = strategy;
             let outcome =
                 match compiler::compile_sharded(&case.net, &case.weights, &o, chips) {
-                    Ok(rep) => match MultiChipDeployment::new(Arc::new(rep.sharded)) {
-                        Ok(m) => drive(
-                            &name,
-                            &mut Engine::Multi(m),
-                            case,
-                            &golden,
-                            golden_w.as_deref(),
-                            &[],
-                        ),
-                        Err(t) => Outcome::Diverged(fault(&name, case.seed, &t)),
-                    },
+                    Ok(rep) => {
+                        let vr = compiler::verify::verify_sharded(
+                            &rep.sharded,
+                            &case.net,
+                            case.learning,
+                        );
+                        if vr.ok() {
+                            match MultiChipDeployment::new(Arc::new(rep.sharded)) {
+                                Ok(m) => drive(
+                                    &name,
+                                    &mut Engine::Multi(m),
+                                    case,
+                                    &golden,
+                                    golden_w.as_deref(),
+                                    &[],
+                                ),
+                                Err(t) => {
+                                    Outcome::Diverged(fault(&name, case.seed, &t))
+                                }
+                            }
+                        } else {
+                            Outcome::Diverged(preflight(&name, case.seed, &vr))
+                        }
+                    }
                     Err(e) => Outcome::Refused(e.to_string()),
                 };
             report.engines.push(EngineOutcome {
@@ -375,6 +400,29 @@ impl Engine {
                 |k, n| m.peek_weights(k, n),
             ),
         }
+    }
+}
+
+/// A static-verifier rejection, shaped as a divergence so the fuzz
+/// report pins it with the same seed-replay machinery.
+fn preflight(
+    engine: &str,
+    seed: u64,
+    vr: &crate::compiler::verify::VerifyReport,
+) -> Divergence {
+    let first = vr
+        .errors
+        .first()
+        .map_or_else(|| vr.summary(), |e| e.to_string());
+    Divergence {
+        engine: engine.into(),
+        seed,
+        step: None,
+        output: None,
+        expected: 0.0,
+        got: 0.0,
+        location: None,
+        detail: format!("pre-flight verify: {first}"),
     }
 }
 

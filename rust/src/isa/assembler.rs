@@ -428,6 +428,83 @@ mod tests {
     }
 
     #[test]
+    fn all_opcodes_roundtrip_asm_and_words() {
+        // One representative instruction per opcode — every entry of
+        // `Opcode::ALL` — through both round-trips the static verifier
+        // leans on: disassemble→assemble and encode→decode.
+        let mut code = Vec::new();
+        for (k, &op) in Opcode::ALL.iter().enumerate() {
+            let mut i = Instr::new(op);
+            i.dt = match op {
+                Opcode::Diff | Opcode::Ld => DType::F16,
+                _ => DType::I16,
+            };
+            match op {
+                Opcode::Nop | Opcode::Recv | Opcode::Halt => {}
+                Opcode::B => i.imm = 0,
+                Opcode::Bc => {
+                    i.cond = Cond::Ne;
+                    i.imm = k as i32; // an in-program label target
+                }
+                Opcode::Movi | Opcode::Cmpi => {
+                    i.rd = 3;
+                    i.imm = -7;
+                }
+                Opcode::Cmp | Opcode::Mov => {
+                    i.rd = 2;
+                    i.rs1 = 4;
+                }
+                Opcode::Send
+                | Opcode::Findidx
+                | Opcode::Locacc
+                | Opcode::Ld
+                | Opcode::St
+                | Opcode::Addi
+                | Opcode::Subi
+                | Opcode::Muli
+                | Opcode::Andi
+                | Opcode::Ori
+                | Opcode::Xori => {
+                    i.rd = 5;
+                    i.rs1 = 6;
+                    i.imm = 0x40;
+                }
+                Opcode::Shl | Opcode::Shr => {
+                    i.rd = 5;
+                    i.rs1 = 6;
+                    i.imm = 3;
+                }
+                Opcode::Addc | Opcode::Subc | Opcode::Mulc => {
+                    i.cond = Cond::Ge;
+                    i.rd = 1;
+                    i.rs1 = 2;
+                    i.rs2 = 3;
+                }
+                // remaining three-register forms: Diff/Add/Sub/Mul/And/Or/Xor
+                _ => {
+                    i.rd = 1;
+                    i.rs1 = 2;
+                    i.rs2 = 3;
+                }
+            }
+            code.push(i);
+        }
+        assert_eq!(code.len(), 32, "every opcode represented exactly once");
+
+        let text = disassemble(&code);
+        let p = assemble(&text)
+            .unwrap_or_else(|e| panic!("reassembly failed: {e}\n{text}"));
+        assert_eq!(p.code, code, "asm<->disasm round-trip:\n{text}");
+
+        let img = Program {
+            code: code.clone(),
+            labels: HashMap::new(),
+        };
+        let q = Program::from_words(&img.to_words()).unwrap();
+        assert_eq!(q.code, code, "encode<->decode round-trip");
+    }
+
+    #[test]
     fn prop_asm_disasm_roundtrip() {
         // any assembled program disassembles to text that reassembles
         // to the identical code

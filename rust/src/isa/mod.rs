@@ -171,6 +171,44 @@ pub enum Opcode {
 }
 
 impl Opcode {
+    /// Every opcode, in encoding order — exhaustive-coverage sweeps
+    /// (assembler/disassembler round-trips, the static verifier's ISA
+    /// tables) iterate this instead of hand-listing variants.
+    pub const ALL: [Opcode; 32] = [
+        Opcode::Nop,
+        Opcode::Recv,
+        Opcode::Send,
+        Opcode::Findidx,
+        Opcode::Locacc,
+        Opcode::Diff,
+        Opcode::Add,
+        Opcode::Sub,
+        Opcode::Mul,
+        Opcode::Addc,
+        Opcode::Subc,
+        Opcode::Mulc,
+        Opcode::And,
+        Opcode::Or,
+        Opcode::Xor,
+        Opcode::Cmp,
+        Opcode::Mov,
+        Opcode::Movi,
+        Opcode::Ld,
+        Opcode::St,
+        Opcode::B,
+        Opcode::Bc,
+        Opcode::Addi,
+        Opcode::Subi,
+        Opcode::Muli,
+        Opcode::Andi,
+        Opcode::Ori,
+        Opcode::Xori,
+        Opcode::Cmpi,
+        Opcode::Shl,
+        Opcode::Shr,
+        Opcode::Halt,
+    ];
+
     pub fn from_bits(b: u32) -> Option<Opcode> {
         use Opcode::*;
         Some(match b & 0x3f {

@@ -30,6 +30,16 @@
 //!                                    `--replay SEED` (re-run one case).
 //!                                    Writes `fuzz-repro.json` (`--out`) and
 //!                                    exits 1 on any divergence
+//! * `verify [ecg|shd|bci|all]`     — static chip-image verification: compile
+//!                                    each workload single-die and sharded
+//!                                    2/4/8 × both cut strategies, then prove
+//!                                    routing/encoding invariants on the
+//!                                    artifact without executing a step.
+//!                                    `--corpus N` additionally sweeps N
+//!                                    generated fuzz nets, `--aliased` proves
+//!                                    the pre-fix fan-out encoding is rejected
+//!                                    with a coordinate-bearing diagnostic.
+//!                                    Exits 1 on any unexpected outcome
 //! * `storage <vgg16|resnet18|…>`   — Fig 14 topology-table storage view
 //! * `baseline <model.hlo.txt>`     — load + execute an AOT artifact via PJRT
 //!                                    (requires the `pjrt` feature)
@@ -58,6 +68,7 @@ fn main() {
         "run-app" => run_app(&args),
         "serve-demo" => serve_demo(&args),
         "fuzz" => fuzz(&args),
+        "verify" => verify_cmd(&args),
         "baseline" => baseline(&args),
         other => {
             eprintln!("unknown command {other:?}; see rust/src/main.rs header");
@@ -379,6 +390,194 @@ fn baseline(args: &Args) {
             std::process::exit(1);
         }
     }
+}
+
+/// Static chip-image verification: every image the current compiler
+/// emits for the packaged workloads (single-die + 2/4/8-die × both cut
+/// strategies) must pass; with `--aliased`, the pre-fix sparse fan-out
+/// encoding must be *rejected* with an aliasing diagnostic carrying chip
+/// coordinates; with `--corpus N`, N generated fuzz nets sweep through
+/// the same checks. Exits 1 on any unexpected outcome.
+fn verify_cmd(args: &Args) {
+    use taibai::compiler::{self, verify::VerifyError, Options, ShardStrategy};
+
+    let seed = args.u64("seed", 42);
+
+    if args.has("aliased") {
+        // Teeth check: BCI feeds spikes into Sparse layers, so the
+        // bug-compat encoding collapses whole upstream blocks onto one
+        // per-upstream DT entry — the verifier must see the aliasing.
+        let w = workload_by_name("bci");
+        let net = w.net();
+        let weights = w.weights(seed);
+        let opts = Options {
+            learning: w.learning(),
+            rates: w.rates(),
+            verify: false,
+            aliased_sparse_fanout: true,
+            ..Default::default()
+        };
+        let rep = match compiler::compile(&net, &weights, &opts) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("aliased compile failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        let r = compiler::verify::verify(&rep.compiled, &net, opts.learning);
+        let aliased = r
+            .errors
+            .iter()
+            .find(|e| matches!(e, VerifyError::SparseFanOutAliased { .. }));
+        match aliased {
+            Some(e) => println!("aliased image rejected as expected: {e}"),
+            None => {
+                eprintln!(
+                    "aliased image was NOT rejected with an aliasing \
+                     diagnostic — the verifier lost its teeth ({})",
+                    r.summary()
+                );
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let names: Vec<&str> = match which {
+        "all" => vec!["ecg", "shd", "bci"],
+        w => vec![w],
+    };
+    let mut bad = 0usize;
+    let mut images = 0usize;
+    fn show(
+        label: &str,
+        r: &taibai::compiler::verify::VerifyReport,
+        bad: &mut usize,
+        images: &mut usize,
+    ) {
+        *images += 1;
+        if r.ok() {
+            println!(
+                "  {label:<24} OK   ({} CCs, {} edges, {} instrs, {} warnings)",
+                r.checked_ccs,
+                r.checked_edges,
+                r.checked_instrs,
+                r.warnings.len()
+            );
+        } else {
+            *bad += 1;
+            println!("  {label:<24} FAIL {}", r.summary());
+            for e in r.errors.iter().take(5) {
+                println!("      {e}");
+            }
+        }
+    }
+    for name in names {
+        let w = workload_by_name(name);
+        let net = w.net();
+        let weights = w.weights(seed);
+        let opts = Options {
+            learning: w.learning(),
+            rates: w.rates(),
+            verify: false,
+            ..Default::default()
+        };
+        println!("{name}:");
+        match compiler::compile(&net, &weights, &opts) {
+            Ok(rep) => {
+                let r = compiler::verify::verify(&rep.compiled, &net, opts.learning);
+                show("single-die", &r, &mut bad, &mut images);
+            }
+            Err(e) => {
+                bad += 1;
+                eprintln!("  single-die compile failed: {e}");
+            }
+        }
+        for chips in [2usize, 4, 8] {
+            for strategy in [ShardStrategy::Contiguous, ShardStrategy::MinCut] {
+                let mut o = opts.clone();
+                o.strategy = strategy;
+                let label = format!("sharded-{chips}-{strategy}");
+                match compiler::compile_sharded(&net, &weights, &o, chips) {
+                    Ok(rep) => {
+                        let r = compiler::verify::verify_sharded(
+                            &rep.sharded,
+                            &net,
+                            o.learning,
+                        );
+                        show(&label, &r, &mut bad, &mut images);
+                    }
+                    Err(e) => {
+                        bad += 1;
+                        eprintln!("  {label} compile failed: {e}");
+                    }
+                }
+            }
+        }
+    }
+
+    let corpus = args.usize("corpus", 0);
+    if corpus > 0 {
+        use taibai::fuzz::{generate, GenSpec};
+        use taibai::model::gen::validate_options;
+        let spec = GenSpec::default();
+        let (mut checked, mut gave_up, mut refused) = (0usize, 0usize, 0usize);
+        for i in 0..corpus {
+            let cseed = seed.wrapping_add(i as u64);
+            let Ok(case) = generate(&spec, cseed) else {
+                gave_up += 1;
+                continue;
+            };
+            let mut o = validate_options(case.learning, &spec);
+            o.verify = false;
+            match compiler::compile(&case.net, &case.weights, &o) {
+                Ok(rep) => {
+                    checked += 1;
+                    let r = compiler::verify::verify(
+                        &rep.compiled,
+                        &case.net,
+                        case.learning,
+                    );
+                    if !r.ok() {
+                        bad += 1;
+                        println!("  corpus seed {cseed} single-die FAIL {}", r.summary());
+                    }
+                }
+                Err(_) => refused += 1,
+            }
+            for chips in [2usize, 4, 8] {
+                match compiler::compile_sharded(&case.net, &case.weights, &o, chips) {
+                    Ok(rep) => {
+                        checked += 1;
+                        let r = compiler::verify::verify_sharded(
+                            &rep.sharded,
+                            &case.net,
+                            case.learning,
+                        );
+                        if !r.ok() {
+                            bad += 1;
+                            println!(
+                                "  corpus seed {cseed} sharded-{chips} FAIL {}",
+                                r.summary()
+                            );
+                        }
+                    }
+                    Err(_) => refused += 1,
+                }
+            }
+        }
+        println!(
+            "corpus: {checked} generated images verified over {corpus} seeds \
+             ({gave_up} generator give-ups, {refused} typed compile refusals)"
+        );
+    }
+
+    if bad > 0 {
+        eprintln!("verify: {bad} image(s) FAILED");
+        std::process::exit(1);
+    }
+    println!("verify: all {images} workload images clean");
 }
 
 /// Differential fuzzing: seeded generated nets through every engine,

@@ -1,0 +1,305 @@
+//! Static verifier acceptance: every image the current compiler emits
+//! must pass, hand-corrupted images must fail with the right diagnostic,
+//! and the bug-compat aliased encoding must be rejected with chip
+//! coordinates.
+
+use taibai::api::workloads::{Bci, Ecg, Shd};
+use taibai::api::Workload;
+use taibai::compiler::verify::{verify, verify_sharded, VerifyError};
+use taibai::compiler::{self, Compiled, Options, ShardStrategy};
+use taibai::fuzz::{generate, GenSpec};
+use taibai::model::gen::validate_options;
+use taibai::model::{Layer, NetDef, NeuronModel};
+use taibai::topology::RouteMode;
+
+fn workload_opts(w: &dyn Workload) -> Options {
+    Options {
+        learning: w.learning(),
+        rates: w.rates(),
+        verify: false, // explicit verify calls below; avoids double work
+        ..Default::default()
+    }
+}
+
+fn compile_one(w: &dyn Workload, seed: u64) -> (NetDef, Vec<Vec<f32>>, Options, Compiled) {
+    let net = w.net();
+    let weights = w.weights(seed);
+    let opts = workload_opts(w);
+    let rep = compiler::compile(&net, &weights, &opts)
+        .unwrap_or_else(|e| panic!("{} compile failed: {e}", w.name()));
+    (net, weights, opts, rep.compiled)
+}
+
+/// Every packaged workload, on every engine configuration the repo
+/// ships (single-die plus 2/4/8-die with both cut strategies), produces
+/// an image the verifier accepts with zero errors.
+#[test]
+fn packaged_workloads_verify_clean_on_every_engine() {
+    let workloads: Vec<Box<dyn Workload>> = vec![
+        Box::new(Ecg { heterogeneous: true }),
+        Box::new(Shd { dendrites: true }),
+        Box::new(Bci::default()),
+    ];
+    for w in &workloads {
+        let (net, weights, opts, compiled) = compile_one(w.as_ref(), 42);
+        let r = verify(&compiled, &net, opts.learning);
+        assert!(r.ok(), "{} single-die: {}\n{r}", w.name(), r.summary());
+        for chips in [2usize, 4, 8] {
+            for strategy in [ShardStrategy::Contiguous, ShardStrategy::MinCut] {
+                let mut o = opts.clone();
+                o.strategy = strategy;
+                let rep = compiler::compile_sharded(&net, &weights, &o, chips)
+                    .unwrap_or_else(|e| {
+                        panic!("{} sharded-{chips}-{strategy}: {e}", w.name())
+                    });
+                let r = verify_sharded(&rep.sharded, &net, o.learning);
+                assert!(
+                    r.ok(),
+                    "{} sharded-{chips}-{strategy}: {}\n{r}",
+                    w.name(),
+                    r.summary()
+                );
+            }
+        }
+    }
+}
+
+/// 200-seed generated-net sweep: no false positives on anything the
+/// compiler actually emits, across single-die and 2/4/8-die builds.
+#[test]
+fn corpus_sweep_has_no_false_positives() {
+    let spec = GenSpec::default();
+    let mut checked = 0usize;
+    for i in 0..200u64 {
+        let seed = 3_000 + i;
+        let Ok(case) = generate(&spec, seed) else { continue };
+        let mut opts = validate_options(case.learning, &spec);
+        opts.verify = false;
+        let Ok(rep) = compiler::compile(&case.net, &case.weights, &opts) else {
+            continue; // typed refusal (capacity etc.) is not a verifier bug
+        };
+        let r = verify(&rep.compiled, &case.net, case.learning);
+        assert!(r.ok(), "seed {seed} single-die: {}\n{r}", r.summary());
+        checked += 1;
+        for chips in [2usize, 4, 8] {
+            let strategies: &[ShardStrategy] = if chips == 2 {
+                &[ShardStrategy::Contiguous, ShardStrategy::MinCut]
+            } else {
+                &[ShardStrategy::MinCut]
+            };
+            for &strategy in strategies {
+                let mut o = opts.clone();
+                o.strategy = strategy;
+                let Ok(rep) = compiler::compile_sharded(&case.net, &case.weights, &o, chips)
+                else {
+                    continue;
+                };
+                let r = verify_sharded(&rep.sharded, &case.net, case.learning);
+                assert!(
+                    r.ok(),
+                    "seed {seed} sharded-{chips}-{strategy}: {}\n{r}",
+                    r.summary()
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 200, "corpus mostly refused ({checked} images checked)");
+}
+
+/// The pre-fix aliased sparse fan-out encoding must be *rejected*, with
+/// a diagnostic that names the destination chip coordinates.
+#[test]
+fn aliased_sparse_fanout_is_rejected_with_coordinates() {
+    let w = Bci::default();
+    let net = w.net();
+    let weights = w.weights(42);
+    let opts = Options {
+        learning: w.learning(),
+        rates: w.rates(),
+        verify: false,
+        aliased_sparse_fanout: true,
+        ..Default::default()
+    };
+    let rep = compiler::compile(&net, &weights, &opts).expect("aliased compile");
+    let r = verify(&rep.compiled, &net, opts.learning);
+    assert!(!r.ok(), "aliased image passed verification");
+    let e = r
+        .errors
+        .iter()
+        .find(|e| matches!(e, VerifyError::SparseFanOutAliased { .. }))
+        .unwrap_or_else(|| panic!("no aliasing diagnostic among: {r}"));
+    let s = format!("{e}");
+    assert!(s.contains("cc "), "diagnostic lacks chip coordinates: {s}");
+    assert!(s.contains("alias"), "diagnostic does not name the defect: {s}");
+}
+
+/// Regression pin for the merged-sparse weight-slot bug: two identical
+/// Lif sparse layers merge onto one NC; the second part's fan-in slots
+/// must address weights at the part's cumulative base, not restart at 0.
+#[test]
+fn merged_sparse_parts_weight_slots_verify() {
+    let lif = NeuronModel::Lif { tau: 0.9, vth: 1.0 };
+    let blob = |input: usize, output: usize| -> Vec<f32> {
+        (0..input * output)
+            .map(|k| {
+                if k % 3 == 0 {
+                    0.0
+                } else {
+                    0.05 + (k % 7) as f32 * 0.01
+                }
+            })
+            .collect()
+    };
+    let net = NetDef {
+        name: "merged-sparse".into(),
+        layers: vec![
+            Layer::Input { size: 24 },
+            Layer::Sparse { input: 24, output: 20, density: 0.7, neuron: lif },
+            Layer::Sparse { input: 20, output: 16, density: 0.7, neuron: lif },
+        ],
+        skips: vec![],
+        timesteps: 4,
+    };
+    let weights = vec![vec![], blob(24, 20), blob(20, 16)];
+    let opts = Options { verify: false, ..Default::default() };
+    let rep = compiler::compile(&net, &weights, &opts).expect("compile");
+    let merged = rep
+        .compiled
+        .cores
+        .iter()
+        .any(|m| m.parts.len() >= 2 && m.parts.iter().skip(1).any(|&(li, ..)| {
+            matches!(net.layers[li], Layer::Sparse { .. })
+        }));
+    assert!(merged, "net no longer exercises a merged sparse core");
+    let r = verify(&rep.compiled, &net, opts.learning);
+    assert!(
+        !r.errors.iter().any(|e| matches!(e, VerifyError::SparseWeightSlot { .. })),
+        "merged sparse weight slots regressed:\n{r}"
+    );
+    assert!(r.ok(), "{}\n{r}", r.summary());
+    // And the default-on compile-time gate accepts it too.
+    compiler::compile(&net, &weights, &Options::default()).expect("gated compile");
+}
+
+// ---- hand-corrupted images: one test per checker family ----------------
+
+fn compiled_ecg() -> (NetDef, Options, Compiled) {
+    let w = Ecg { heterogeneous: true };
+    let (net, _weights, opts, compiled) = compile_one(&w, 42);
+    (net, opts, compiled)
+}
+
+fn sorted_ccs(compiled: &Compiled) -> Vec<usize> {
+    let mut ccs: Vec<usize> = compiled.config.ccs.keys().copied().collect();
+    ccs.sort_unstable();
+    ccs
+}
+
+#[test]
+fn corrupt_fanout_index_is_caught() {
+    let (net, opts, mut compiled) = compiled_ecg();
+    let cc = sorted_ccs(&compiled)
+        .into_iter()
+        .find(|cc| !compiled.config.ccs[cc].tables.fanout_it.is_empty())
+        .expect("a CC with fan-out");
+    compiled.config.ccs.get_mut(&cc).unwrap().tables.fanout_it[0].index = u16::MAX;
+    let r = verify(&compiled, &net, opts.learning);
+    assert!(
+        r.errors.iter().any(|e| matches!(e, VerifyError::FanOutIndexRange { .. })),
+        "expected FanOutIndexRange:\n{r}"
+    );
+}
+
+#[test]
+fn corrupt_fanout_tag_is_caught() {
+    let (net, opts, mut compiled) = compiled_ecg();
+    let cc = sorted_ccs(&compiled)
+        .into_iter()
+        .find(|cc| !compiled.config.ccs[cc].tables.fanout_it.is_empty())
+        .expect("a CC with fan-out");
+    let ie = &mut compiled.config.ccs.get_mut(&cc).unwrap().tables.fanout_it[0];
+    ie.tag += 1;
+    let r = verify(&compiled, &net, opts.learning);
+    assert!(
+        r.errors.iter().any(|e| matches!(e, VerifyError::TagMismatch { .. })),
+        "expected TagMismatch:\n{r}"
+    );
+}
+
+#[test]
+fn corrupt_route_off_mesh_is_caught() {
+    let (net, opts, mut compiled) = compiled_ecg();
+    let cc = sorted_ccs(&compiled)
+        .into_iter()
+        .find(|cc| !compiled.config.ccs[cc].tables.fanout_it.is_empty())
+        .expect("a CC with fan-out");
+    let ie = &mut compiled.config.ccs.get_mut(&cc).unwrap().tables.fanout_it[0];
+    ie.mode = RouteMode::Unicast { x: 200, y: 0 };
+    let r = verify(&compiled, &net, opts.learning);
+    assert!(
+        r.errors.iter().any(|e| matches!(e, VerifyError::RouteOffMesh { .. })),
+        "expected RouteOffMesh:\n{r}"
+    );
+}
+
+#[test]
+fn corrupt_mem_region_is_caught() {
+    let (net, opts, mut compiled) = compiled_ecg();
+    let dw = compiled.data_words;
+    let cc = sorted_ccs(&compiled)
+        .into_iter()
+        .find(|cc| compiled.config.ccs[cc].ncs.iter().any(Option::is_some))
+        .expect("a CC with an NC");
+    let img = compiled.config.ccs.get_mut(&cc).unwrap();
+    let nc = img.ncs.iter_mut().flatten().next().unwrap();
+    nc.mem.push(((dw - 8) as u16, vec![0u16; 64]));
+    let r = verify(&compiled, &net, opts.learning);
+    assert!(
+        r.errors.iter().any(|e| matches!(e, VerifyError::MemRegion { .. })),
+        "expected MemRegion:\n{r}"
+    );
+}
+
+#[test]
+fn corrupt_program_memory_operand_is_caught() {
+    use taibai::isa::Opcode;
+    let (net, opts, mut compiled) = compiled_ecg();
+    let dw = compiled.data_words;
+    let mut hit = false;
+    'outer: for cc in sorted_ccs(&compiled) {
+        let img = compiled.config.ccs.get_mut(&cc).unwrap();
+        for nc in img.ncs.iter_mut().flatten() {
+            if let Some(i) = nc
+                .integ
+                .code
+                .iter_mut()
+                .find(|i| matches!(i.op, Opcode::Ld | Opcode::St))
+            {
+                i.imm = dw as i32; // first address past the data memory
+                hit = true;
+                break 'outer;
+            }
+        }
+    }
+    assert!(hit, "no Ld/St instruction found to corrupt");
+    let r = verify(&compiled, &net, opts.learning);
+    assert!(
+        r.errors.iter().any(|e| matches!(e, VerifyError::Isa { .. })),
+        "expected Isa:\n{r}"
+    );
+}
+
+#[test]
+fn corrupt_readout_is_caught() {
+    let (net, opts, mut compiled) = compiled_ecg();
+    let key = *compiled.readout.keys().next().expect("a readout entry");
+    compiled.readout.remove(&key);
+    let r = verify(&compiled, &net, opts.learning);
+    assert!(
+        r.errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::HostMap { kind: "readout", .. })),
+        "expected readout HostMap:\n{r}"
+    );
+}
