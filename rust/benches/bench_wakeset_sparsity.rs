@@ -8,21 +8,33 @@
 //! traffic — a quiescent step visits **zero** columns — not with
 //! deployment size, which is what a scan-every-column engine pays.
 //!
-//! `--json <path>` writes the per-sparsity-level measurements as
-//! machine-readable perf JSON (`BENCH_wakeset.json` in CI, uploaded as
-//! an artifact so the perf trajectory is tracked across PRs).
+//! A second section races the statically scheduled engine
+//! ([`taibai::chip::StepSchedule::Static`]) against wake-set
+//! bookkeeping on the same image and streams: per-step wall-clock and
+//! CC visits for both, with min-over-`--repeats` timing to shed timer
+//! noise. `--guard-schedule` turns the claim "scheduled is never
+//! slower once traffic is dense (≥ 10% input rate)" into a hard exit
+//! code for CI.
+//!
+//! `--json <path>` writes the wake-set measurements as machine-readable
+//! perf JSON (`BENCH_wakeset.json` in CI); `--json-schedule <path>`
+//! writes the scheduled-vs-wakeset comparison (`BENCH_schedule.json`).
+//! Both are uploaded as artifacts so the perf trajectory is tracked
+//! across PRs.
 //!
 //! ```sh
 //! cargo bench --bench bench_wakeset_sparsity              # full run
 //! cargo bench --bench bench_wakeset_sparsity -- \
-//!     --samples 1 --timesteps 10 --json BENCH_wakeset.json    # CI smoke
+//!     --samples 1 --timesteps 10 --json BENCH_wakeset.json \
+//!     --json-schedule BENCH_schedule.json --guard-schedule    # CI smoke
 //! ```
 
 use std::time::Instant;
 
 use taibai::api::workloads::shd_weights;
 use taibai::bench::Table;
-use taibai::compiler::{self, Options};
+use taibai::chip::{SchedStats, StepSchedule};
+use taibai::compiler::{self, Compiled, Options};
 use taibai::coordinator::Deployment;
 use taibai::datasets::SpikeSample;
 use taibai::model;
@@ -58,10 +70,12 @@ fn main() {
         &shd_weights(true, seed),
         &Options {
             rates: vec![0.012, 0.025, 0.1],
+            schedule: true,
             ..Default::default()
         },
     )
     .expect("compiling the SHD workload");
+    assert!(r.compiled.schedule.is_some(), "SHD image carries no visit program");
     let configured_ccs = r.compiled.config.ccs.len();
     let compiled = r.compiled;
     println!(
@@ -80,6 +94,7 @@ fn main() {
     let mut levels = Vec::new();
     for &rate in &[0.0, 0.01, 0.10, 0.50] {
         let mut d = Deployment::new(compiled.clone()).expect("deploying");
+        d.chip.schedule = StepSchedule::default();
         let mut rng = Rng::new(seed ^ (rate * 1000.0) as u64);
         let data: Vec<SpikeSample> = (0..samples)
             .map(|_| bernoulli_sample(timesteps, rate, &mut rng))
@@ -136,4 +151,132 @@ fn main() {
         "\nCC visits track active columns (0 when quiescent), not the \
          {configured_ccs}-column deployment — the wake-set sparsity win."
     );
+
+    // ---- scheduled vs wake-set on the same image and streams ----
+    let repeats = args.usize("repeats", 3);
+    println!("\nScheduled vs wake-set engine (min wall-clock over {repeats} repeats):\n");
+    let mut t = Table::new(&[
+        "input rate",
+        "wake µs/step",
+        "sched µs/step",
+        "sched/wake",
+        "static visits/step",
+    ]);
+    let mut levels = Vec::new();
+    let mut guard_failures = Vec::new();
+    for &rate in &[0.0, 0.01, 0.10, 0.50] {
+        let mut rng = Rng::new(seed ^ (rate * 1000.0) as u64);
+        let data: Vec<SpikeSample> = (0..samples)
+            .map(|_| bernoulli_sample(timesteps, rate, &mut rng))
+            .collect();
+        let (wake_secs, wake_stats) = time_engine(&compiled, false, &data, repeats);
+        let (sched_secs, sched_stats) = time_engine(&compiled, true, &data, repeats);
+        let steps = sched_stats.steps.max(1) as f64;
+        let wake_us = wake_secs / steps * 1e6;
+        let sched_us = sched_secs / steps * 1e6;
+        let static_per_step = sched_stats.static_cc_visits as f64 / steps;
+        t.row(&[
+            format!("{:>4.0}%", rate * 100.0),
+            format!("{wake_us:.3}"),
+            format!("{sched_us:.3}"),
+            format!("{:.2}x", sched_us / wake_us.max(f64::MIN_POSITIVE)),
+            format!("{static_per_step:.2}"),
+        ]);
+        levels.push(
+            Json::obj()
+                .set("input_rate", rate)
+                .set("wake_us_per_step", wake_us)
+                .set("sched_us_per_step", sched_us)
+                .set(
+                    "wake_cc_visits_per_step",
+                    (wake_stats.integ_cc_visits
+                        + wake_stats.fire_cc_visits
+                        + wake_stats.delay_cc_visits) as f64
+                        / steps,
+                )
+                .set(
+                    "sched_cc_visits_per_step",
+                    (sched_stats.integ_cc_visits
+                        + sched_stats.fire_cc_visits
+                        + sched_stats.delay_cc_visits) as f64
+                        / steps,
+                )
+                .set("static_cc_visits_per_step", static_per_step),
+        );
+        assert_eq!(
+            wake_stats.static_cc_visits, 0,
+            "wake-set mode must never bump the static counter"
+        );
+        // SHD is fully feed-forward, so once traffic flows the program
+        // must be serving visits.
+        if rate > 0.0 {
+            assert!(
+                sched_stats.static_cc_visits > 0,
+                "scheduled run at {rate} carried no static visits"
+            );
+        }
+        if rate >= 0.10 && sched_us > wake_us {
+            guard_failures.push(format!(
+                "at {:.0}% input rate: scheduled {sched_us:.3} µs/step > \
+                 wake-set {wake_us:.3} µs/step",
+                rate * 100.0
+            ));
+        }
+    }
+    t.print();
+
+    if let Some(path) = args.get("json-schedule") {
+        let doc = Json::obj()
+            .set("bench", "schedule_vs_wakeset")
+            .set("samples", samples)
+            .set("timesteps", timesteps)
+            .set("repeats", repeats)
+            .set("seed", seed)
+            .set("configured_ccs", configured_ccs)
+            .set("levels", Json::Arr(levels));
+        std::fs::write(path, doc.render() + "\n").expect("writing schedule perf JSON");
+        println!("\nschedule perf JSON written to {path}");
+    }
+
+    if args.has("guard-schedule") && !guard_failures.is_empty() {
+        eprintln!("\n--guard-schedule FAILED:");
+        for f in &guard_failures {
+            eprintln!("  {f}");
+        }
+        std::process::exit(1);
+    }
+    println!(
+        "\nAt dense traffic the static program drains whole CC ranges \
+         without wake-set bookkeeping; at 0% both engines stay asleep."
+    );
+}
+
+/// Min-over-repeats wall-clock for one engine over `data`, returning
+/// the scheduler counters from the fastest repeat (counters are
+/// deterministic across repeats — only the clock varies).
+fn time_engine(
+    compiled: &Compiled,
+    scheduled: bool,
+    data: &[SpikeSample],
+    repeats: usize,
+) -> (f64, SchedStats) {
+    let mut best = f64::INFINITY;
+    let mut stats = SchedStats::default();
+    for _ in 0..repeats.max(1) {
+        let mut d = Deployment::new(compiled.clone()).expect("deploying");
+        if !scheduled {
+            d.chip.schedule = StepSchedule::default();
+        }
+        let start = Instant::now();
+        for s in data {
+            d.reset_state().expect("resetting between samples");
+            d.run_spikes(s).expect("running sample");
+        }
+        let secs = start.elapsed().as_secs_f64();
+        if secs < best {
+            best = secs;
+            stats = d.chip.sched;
+        }
+    }
+    (best, stats)
 }

@@ -381,6 +381,7 @@ impl ExecBackend for MultiChipBackend {
             s.integ_cc_visits += chip.sched.integ_cc_visits;
             s.fire_cc_visits += chip.sched.fire_cc_visits;
             s.delay_cc_visits += chip.sched.delay_cc_visits;
+            s.static_cc_visits += chip.sched.static_cc_visits;
             s.steps = s.steps.max(chip.sched.steps);
         }
         s

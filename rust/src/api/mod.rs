@@ -475,6 +475,17 @@ impl Taibai {
         self
     }
 
+    /// Compile a static visit program ([`crate::compiler::schedule`]) so
+    /// the deployed chips run the statically-scheduled step engine:
+    /// feed-forward regions drain in compile-time order,
+    /// recurrent/delayed-skip/learning regions fall back to the wake
+    /// set. Bit-identical to the default engine; wins on
+    /// feed-forward-dominated nets with non-trivial activity.
+    pub fn schedule(mut self, on: bool) -> Taibai {
+        self.opts.schedule = on;
+        self
+    }
+
     pub fn energy_model(mut self, em: EnergyModel) -> Taibai {
         self.em = em;
         self

@@ -45,6 +45,20 @@
 //! setting [`Chip::scan_all`] switches to a naive scan-every-column
 //! reference that derives the same work sets by predicate scan, which
 //! the wake-set parity tests compare against bit-for-bit.
+//!
+//! # Static scheduling
+//!
+//! For feed-forward regions the per-step visit order is fully
+//! predictable at compile time, so deciding it dynamically every step
+//! is pure overhead. [`StepSchedule::Static`] installs a
+//! [`VisitProgram`] (built by [`crate::compiler::schedule`]): INTEG
+//! drains the program's layer-ordered CC lists (skipped wholesale on
+//! quiescent steps) and FIRE walks the word-parallel union of the
+//! dynamic and static live sets, while columns in recurrent /
+//! delayed-skip / learning regions — and host I/O — ride the wake-set
+//! machinery unchanged. Results are bit-identical to the wake-set
+//! engine (pinned by `tests/wakeset_parity.rs` and the differential
+//! fuzzer's `scheduled` engine column).
 
 pub mod config;
 pub mod fast;
@@ -104,6 +118,11 @@ pub struct SchedStats {
     pub fire_cc_visits: u64,
     /// Columns whose delay lines were ticked.
     pub delay_cc_visits: u64,
+    /// Of the INTEG/FIRE visits above, how many were served by a
+    /// compile-time [`VisitProgram`] drain instead of wake-set
+    /// bookkeeping. Always zero in wake-set and scan-all modes (the
+    /// counter costs nothing there — the static path alone bumps it).
+    pub static_cc_visits: u64,
     /// Timesteps executed.
     pub steps: u64,
 }
@@ -146,6 +165,17 @@ impl WakeSet {
         self.bits.iter().all(|&w| w == 0)
     }
 
+    /// Word-parallel union (three `u64` ORs — the static-schedule FIRE
+    /// drain unions the dynamic and static live sets without touching
+    /// per-column bookkeeping).
+    pub fn union(&self, other: &WakeSet) -> WakeSet {
+        let mut out = *self;
+        for (w, o) in out.bits.iter_mut().zip(other.bits.iter()) {
+            *w |= *o;
+        }
+        out
+    }
+
     /// Ascending-id iteration over a snapshot of the set.
     pub fn iter(&self) -> WakeIter {
         WakeIter { bits: self.bits, word: 0 }
@@ -175,6 +205,56 @@ impl Iterator for WakeIter {
     }
 }
 
+/// One entry of a [`VisitProgram`]: the static CCs hosting (parts of)
+/// one layer, drained in ascending CC order during INTEG. A CC hosting
+/// several layers (merged cores) appears once, at its lowest layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerDrain {
+    /// Net layer index this drain corresponds to (informational — the
+    /// drain order follows the feed-forward layer order).
+    pub layer: usize,
+    /// Die-local CC ids, ascending.
+    pub ccs: Vec<u16>,
+}
+
+/// A compile-time per-host-step visit program (built by
+/// [`crate::compiler::schedule`]): which columns the INTEG stage drains
+/// in which order, decided once at compile time instead of dynamically
+/// every step. Columns in regions whose visit set *cannot* be predicted
+/// statically — recurrent layers, endpoints of delayed skip
+/// connections, the learning head — are carried in `dynamic_ccs` and
+/// keep riding the wake-set engine unchanged.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct VisitProgram {
+    /// Ordered INTEG drains over the static region, one per layer that
+    /// owns at least one static CC, ascending by layer.
+    pub drains: Vec<LayerDrain>,
+    /// Union of all `drains` CCs (the statically-scheduled region).
+    pub static_ccs: WakeSet,
+    /// Configured CCs excluded from static scheduling (wake-set
+    /// fallback region). Disjoint from `static_ccs`; together they
+    /// cover exactly the configured CCs.
+    pub dynamic_ccs: WakeSet,
+    /// Net layer indices that forced CCs into `dynamic_ccs`
+    /// (recurrent / delayed-skip endpoints / learning head).
+    pub dynamic_layers: Vec<usize>,
+}
+
+/// Scheduling strategy seam for [`Chip::step_ext`]: every chip runs
+/// either the dynamic wake-set walk (the default) or a compile-time
+/// [`VisitProgram`] with wake-set fallback for its dynamic region.
+/// [`Chip::scan_all`] overrides both with the naive scan-everything
+/// reference.
+#[derive(Clone, Debug, Default)]
+pub enum StepSchedule {
+    /// Decide the visit set dynamically every step (PR 2 engine).
+    #[default]
+    WakeSet,
+    /// Drain the program's static region in compile-time order;
+    /// dynamic CCs keep using the wake sets.
+    Static(std::sync::Arc<VisitProgram>),
+}
+
 /// The TaiBai chip (one die). Multi-die deployments instantiate one
 /// `Chip` per die and bridge them through [`StepResult::egress`] /
 /// [`Chip::step_ext`] (see [`crate::coordinator::MultiChipDeployment`]);
@@ -190,6 +270,10 @@ pub struct Chip {
     /// every column's predicate instead of the incremental wake sets.
     /// Used by the wake-set parity tests; results must be identical.
     pub scan_all: bool,
+    /// Visit-scheduling strategy (see [`StepSchedule`]). Installed at
+    /// deployment time; `scan_all` takes precedence over a static
+    /// program.
+    pub schedule: StepSchedule,
     /// Wake-set bookkeeping counters (see [`SchedStats`]).
     pub sched: SchedStats,
     /// Packets minted this step, delivered next step (reused buffer).
@@ -202,6 +286,14 @@ pub struct Chip {
     live: WakeSet,
     /// Columns holding delayed spikes.
     delayed: WakeSet,
+    /// Static-region columns touched since configure/flush (the
+    /// static engine's FIRE set — the counterpart of `live` that a
+    /// [`VisitProgram`] maintains without integ-wake bookkeeping).
+    static_live: WakeSet,
+    /// A static-region column received a delivery this step, so the
+    /// INTEG stage must walk the visit program. Quiescent steps (and
+    /// steps touching only dynamic CCs) skip the walk entirely.
+    static_touched: bool,
     /// Reusable delivery buffer for [`Mesh::route_into`].
     route_buf: Vec<usize>,
     /// Cumulative count of cross-die packets diverted into
@@ -220,12 +312,15 @@ impl Chip {
             timestep: 0,
             proxy_cc: crate::noc::cc_id(0, 5),
             scan_all: false,
+            schedule: StepSchedule::default(),
             sched: SchedStats::default(),
             pending: Vec::new(),
             inbox: Vec::new(),
             integ_wake: WakeSet::default(),
             live: WakeSet::default(),
             delayed: WakeSet::default(),
+            static_live: WakeSet::default(),
+            static_touched: false,
             route_buf: Vec::new(),
             egress_packets: 0,
         }
@@ -334,11 +429,40 @@ impl Chip {
             self.deliver(self.proxy_cc, p, res);
         }
         let integ = std::mem::take(&mut self.integ_wake);
+        let prog = match &self.schedule {
+            StepSchedule::Static(p) if !self.scan_all => Some(p.clone()),
+            _ => None,
+        };
         if self.scan_all {
             for i in 0..self.ccs.len() {
                 self.integ_cc(i)?;
             }
         } else {
+            if let Some(prog) = &prog {
+                // Static region: drain in the compile-time layer order.
+                // The per-column `has_pending_events` gate keeps the
+                // visit set identical to what the wake set would have
+                // produced (a static column with queued events was by
+                // definition delivered to this step), and the
+                // `static_touched` flag skips the whole walk on steps
+                // where no static column received traffic.
+                if self.static_touched {
+                    self.static_touched = false;
+                    for drain in &prog.drains {
+                        for &cc in &drain.ccs {
+                            let i = cc as usize;
+                            if self.ccs[i].has_pending_events() {
+                                self.sched.integ_cc_visits += 1;
+                                self.sched.static_cc_visits += 1;
+                                self.ccs[i].run_integ()?;
+                            }
+                        }
+                    }
+                }
+            }
+            // Dynamic region (the whole die in pure wake-set mode).
+            // INTEG mints no packets, so cross-column order between the
+            // static and dynamic drains is unobservable.
             for i in integ.iter() {
                 self.integ_cc(i)?;
             }
@@ -346,7 +470,17 @@ impl Chip {
 
         // ---- FIRE -----------------------------------------------------
         // Visit only live columns; everything else is provably at rest.
-        let live = self.live;
+        // Under a static program the FIRE set is the word-parallel union
+        // of the dynamic and static live sets, iterated ascending — the
+        // exact order (and thus minted-packet order) of the wake-set
+        // engine.
+        let live = match &prog {
+            Some(_) => {
+                self.sched.static_cc_visits += self.static_live.count() as u64;
+                self.live.union(&self.static_live)
+            }
+            None => self.live,
+        };
         if self.scan_all {
             for i in 0..self.ccs.len() {
                 if self.ccs[i].is_live() {
@@ -450,11 +584,13 @@ impl Chip {
         self.inbox.clear();
         self.integ_wake.clear();
         self.delayed.clear();
-        let live = self.live;
+        let live = self.live.union(&self.static_live);
         for i in live.iter() {
             self.ccs[i].flush();
         }
         self.live.clear();
+        self.static_live.clear();
+        self.static_touched = false;
     }
 
     fn deliver(&mut self, src: usize, pkt: &Packet, res: &mut StepResult) {
@@ -464,15 +600,40 @@ impl Chip {
             route_buf,
             integ_wake,
             live,
+            schedule,
+            static_live,
+            static_touched,
+            scan_all,
             ..
         } = self;
         route_buf.clear();
         mesh.route_into(src, pkt.mode, route_buf);
         res.packets_routed += 1;
-        for &cc in route_buf.iter() {
-            ccs[cc].handle_packet(pkt);
-            integ_wake.insert(cc);
-            live.insert(cc);
+        match schedule {
+            // Static mode: columns the program covers skip integ-wake
+            // bookkeeping entirely (the saved hot-path work) — the
+            // program knows when to visit them. Dynamic *and*
+            // unconfigured columns keep the wake path, so a packet
+            // landing outside the program is never lost.
+            StepSchedule::Static(prog) if !*scan_all => {
+                for &cc in route_buf.iter() {
+                    ccs[cc].handle_packet(pkt);
+                    if prog.static_ccs.contains(cc) {
+                        static_live.insert(cc);
+                        *static_touched = true;
+                    } else {
+                        integ_wake.insert(cc);
+                        live.insert(cc);
+                    }
+                }
+            }
+            _ => {
+                for &cc in route_buf.iter() {
+                    ccs[cc].handle_packet(pkt);
+                    integ_wake.insert(cc);
+                    live.insert(cc);
+                }
+            }
         }
     }
 
@@ -882,5 +1043,104 @@ mod tests {
         // so delay=1 arrived together with delay=0
         assert_eq!(t1, t0 + 1, "delay=1 must arrive one step later");
         assert_eq!(t2, t0 + 2);
+    }
+
+    /// Visit program covering the two-CC chain: CC(2,2) static if
+    /// `a_static`, CC(8,7) static if `b_static` (non-static CCs fall
+    /// back to the wake set).
+    fn program(a_static: bool, b_static: bool) -> StepSchedule {
+        let mut prog = VisitProgram::default();
+        for (li, cc, on) in [(1, cc_id(2, 2), a_static), (2, cc_id(8, 7), b_static)] {
+            if on {
+                prog.drains.push(LayerDrain { layer: li, ccs: vec![cc as u16] });
+                prog.static_ccs.insert(cc);
+            } else {
+                prog.dynamic_ccs.insert(cc);
+                prog.dynamic_layers.push(li);
+            }
+        }
+        StepSchedule::Static(std::sync::Arc::new(prog))
+    }
+
+    /// Drive the same input trace through a wake-set chip and a
+    /// statically-scheduled one; every observable must match.
+    fn assert_static_parity(schedule: StepSchedule) -> Chip {
+        let mut wake = two_cc_chip();
+        let mut stat = two_cc_chip();
+        stat.schedule = schedule;
+        let trace: [&[Packet]; 4] = [&[input_packet(1.5)], &[], &[input_packet(0.6)], &[]];
+        for inputs in trace {
+            let rw = wake.step(inputs).unwrap();
+            let rs = stat.step(inputs).unwrap();
+            assert_eq!(rw, rs);
+        }
+        assert_eq!(wake.activity(), stat.activity());
+        assert_eq!(wake.sched.integ_cc_visits, stat.sched.integ_cc_visits);
+        assert_eq!(wake.sched.fire_cc_visits, stat.sched.fire_cc_visits);
+        assert_eq!(wake.sched.delay_cc_visits, stat.sched.delay_cc_visits);
+        assert_eq!(wake.sched.static_cc_visits, 0);
+        stat
+    }
+
+    #[test]
+    fn static_schedule_is_bit_identical_and_attributes_its_visits() {
+        let stat = assert_static_parity(program(true, true));
+        // fully static program: every visit was statically scheduled
+        assert_eq!(
+            stat.sched.static_cc_visits,
+            stat.sched.integ_cc_visits + stat.sched.fire_cc_visits
+        );
+    }
+
+    #[test]
+    fn mixed_program_splits_visits_between_static_and_wake_paths() {
+        // only the input column is static; the readout rides the wake set
+        let stat = assert_static_parity(program(true, false));
+        assert!(stat.sched.static_cc_visits > 0);
+        assert!(
+            stat.sched.static_cc_visits
+                < stat.sched.integ_cc_visits + stat.sched.fire_cc_visits
+        );
+    }
+
+    #[test]
+    fn quiescent_static_schedule_skips_the_program_walk() {
+        let mut chip = two_cc_chip();
+        chip.schedule = program(true, true);
+        for _ in 0..5 {
+            let r = chip.step(&[]).unwrap();
+            assert_eq!(r.spikes, 0);
+            assert!(r.outputs.is_empty());
+        }
+        assert_eq!(chip.sched.integ_cc_visits, 0);
+        assert_eq!(chip.sched.fire_cc_visits, 0);
+        assert_eq!(chip.sched.static_cc_visits, 0);
+        assert_eq!(chip.activity().nc.instret, 0);
+    }
+
+    #[test]
+    fn flush_packets_puts_a_static_die_back_to_sleep() {
+        let mut chip = two_cc_chip();
+        chip.schedule = program(true, true);
+        chip.step(&[input_packet(1.5)]).unwrap();
+        chip.step(&[]).unwrap();
+        assert!(chip.sched.static_cc_visits > 0);
+        chip.flush_packets();
+        let visits = chip.sched;
+        chip.step(&[]).unwrap();
+        assert_eq!(chip.sched.integ_cc_visits, visits.integ_cc_visits);
+        assert_eq!(chip.sched.fire_cc_visits, visits.fire_cc_visits);
+        assert_eq!(chip.sched.static_cc_visits, visits.static_cc_visits);
+    }
+
+    #[test]
+    fn scan_all_overrides_a_static_program() {
+        let mut chip = two_cc_chip();
+        chip.schedule = program(true, true);
+        chip.scan_all = true;
+        chip.step(&[input_packet(1.5)]).unwrap();
+        let r1 = chip.step(&[]).unwrap();
+        assert_eq!(r1.outputs.len(), 1);
+        assert_eq!(chip.sched.static_cc_visits, 0);
     }
 }

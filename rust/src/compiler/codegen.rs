@@ -66,6 +66,9 @@ pub struct Compiled {
     pub error_map: Vec<Packet>,
     pub used_cores: usize,
     pub cores_saved: usize,
+    /// Compile-time visit program for the static step engine
+    /// ([`super::schedule`]; `None` unless `Options::schedule`).
+    pub schedule: Option<crate::chip::VisitProgram>,
     /// NC data-memory words this image needs (largest initialized or
     /// layout-addressed extent plus headroom) — what
     /// [`crate::coordinator::Deployment`] sizes its chip with, so clones
@@ -310,6 +313,7 @@ pub fn codegen(
         error_map,
         used_cores: used,
         cores_saved: merged.saved(),
+        schedule: None,
         data_words,
     })
 }

@@ -9,6 +9,7 @@ pub mod placement;
 pub mod merge;
 pub mod codegen;
 pub mod error;
+pub mod schedule;
 pub mod shard;
 pub mod verify;
 
@@ -61,6 +62,11 @@ pub struct Options {
     /// artifact before returning it (on by default in debug/test builds).
     /// Deliberately aliased images skip it — they exist to fail.
     pub verify: bool,
+    /// Emit a compile-time [`schedule`] visit program so deployments run
+    /// the statically-scheduled step engine (feed-forward regions drain
+    /// in compile-time order; recurrent/delayed-skip/learning regions
+    /// fall back to the wake set). Off by default.
+    pub schedule: bool,
 }
 
 impl Default for Options {
@@ -77,6 +83,7 @@ impl Default for Options {
             serdes_cost: placement::DEFAULT_SERDES_COST,
             aliased_sparse_fanout: false,
             verify: cfg!(debug_assertions),
+            schedule: false,
         }
     }
 }
@@ -106,7 +113,7 @@ pub fn compile(
         init
     };
     let avg_hops = placement::avg_hops(&mtraffic, &place);
-    let compiled = codegen::codegen(
+    let mut compiled = codegen::codegen(
         net,
         weights,
         &merged,
@@ -114,6 +121,9 @@ pub fn compile(
         opts.learning,
         opts.aliased_sparse_fanout,
     )?;
+    if opts.schedule {
+        compiled.schedule = Some(schedule::schedule(&compiled, net, opts.learning));
+    }
     if opts.verify && !opts.aliased_sparse_fanout {
         let report = verify::verify(&compiled, net, opts.learning);
         if !report.ok() {

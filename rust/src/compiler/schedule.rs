@@ -1,0 +1,262 @@
+//! Compile-time step scheduling: turn the placed net into a
+//! [`VisitProgram`] the chip drains instead of deciding its visit set
+//! dynamically every step (ROADMAP "statically-scheduled step engine";
+//! cf. the berkeley-emulation-engine compiler, which schedules
+//! processor/network steps statically against known latencies).
+//!
+//! The analysis is deliberately conservative. A layer is **dynamic** —
+//! its columns keep riding the wake-set engine — when its per-step
+//! visit pattern cannot be read off the feed-forward structure:
+//!
+//! * `Layer::Recurrent` (self-traffic re-wakes the layer data-dependently),
+//! * both endpoints of a skip connection with `delay() > 0` (spikes sit
+//!   in delay lines for a data-dependent number of boundary ticks),
+//! * the final layer when on-chip learning is deployed (error packets
+//!   arrive outside the normal layer cadence).
+//!
+//! Everything else is **static**: its columns are drained in layer
+//! order, ascending CC id within a layer. Dynamic-ness is closed over
+//! merged-core co-residency — one dynamic part on a column makes the
+//! whole column dynamic, because the wake bits are per-CC.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::chip::{LayerDrain, VisitProgram};
+use crate::model::{Layer, NetDef};
+
+use super::codegen::{Compiled, CoreMeta};
+
+/// Net layer indices whose columns must stay on the wake-set engine
+/// (ascending, deduplicated). Shared by the pass and the
+/// [`super::verify`] schedule checker so they cannot drift apart.
+pub fn dynamic_layers(net: &NetDef, learning: bool) -> Vec<usize> {
+    let mut dyn_layers = BTreeSet::new();
+    for (li, layer) in net.layers.iter().enumerate() {
+        if matches!(layer, Layer::Recurrent { .. }) {
+            dyn_layers.insert(li);
+        }
+    }
+    for skip in &net.skips {
+        if skip.delay() > 0 {
+            dyn_layers.insert(skip.from);
+            dyn_layers.insert(skip.to);
+        }
+    }
+    if learning && net.layers.len() > 1 {
+        dyn_layers.insert(net.layers.len() - 1);
+    }
+    dyn_layers.into_iter().collect()
+}
+
+/// Build the visit program for a single-die image.
+pub fn schedule(compiled: &Compiled, net: &NetDef, learning: bool) -> VisitProgram {
+    build(compiled.cores.iter().map(|c| (c.cc, &c.parts)), net, learning)
+}
+
+/// Build one visit program per die for a sharded placement. `cores`
+/// pairs each die id with its die-local [`CoreMeta`]
+/// ([`super::ShardedCompiled::cores`]); dies without cores get an empty
+/// program.
+pub fn schedule_sharded(
+    cores: &[(usize, CoreMeta)],
+    dies: usize,
+    net: &NetDef,
+    learning: bool,
+) -> Vec<VisitProgram> {
+    (0..dies)
+        .map(|die| {
+            build(
+                cores
+                    .iter()
+                    .filter(move |(d, _)| *d == die)
+                    .map(|(_, c)| (c.cc, &c.parts)),
+                net,
+                learning,
+            )
+        })
+        .collect()
+}
+
+fn build<'a>(
+    cores: impl Iterator<Item = (usize, &'a Vec<(usize, usize, usize, usize)>)>,
+    net: &NetDef,
+    learning: bool,
+) -> VisitProgram {
+    let dynamic_layers = dynamic_layers(net, learning);
+    let dyn_set: BTreeSet<usize> = dynamic_layers.iter().copied().collect();
+
+    // CC → layers it hosts (all NCs, all merged parts).
+    let mut cc_layers: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+    for (cc, parts) in cores {
+        let hosted = cc_layers.entry(cc).or_default();
+        for &(layer, ..) in parts {
+            hosted.insert(layer);
+        }
+    }
+
+    let mut prog = VisitProgram {
+        dynamic_layers,
+        ..VisitProgram::default()
+    };
+    let mut drains: BTreeMap<usize, Vec<u16>> = BTreeMap::new();
+    for (&cc, hosted) in &cc_layers {
+        if hosted.iter().any(|l| dyn_set.contains(l)) {
+            // co-residency closure: wake bits are per-CC, so one
+            // dynamic part drags the whole column into the fallback
+            prog.dynamic_ccs.insert(cc);
+        } else {
+            prog.static_ccs.insert(cc);
+            // merged cores appear once, at the lowest layer they host
+            // (every hosted layer's traffic re-queues events; INTEG
+            // drains them all in one visit)
+            let lowest = *hosted.iter().next().expect("core with no parts");
+            drains.entry(lowest).or_default().push(cc as u16);
+        }
+    }
+    for (layer, mut ccs) in drains {
+        ccs.sort_unstable();
+        prog.drains.push(LayerDrain { layer, ccs });
+    }
+    prog
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::workloads::{bci_weights, ecg_weights, shd_weights};
+    use crate::compiler::{compile, Options};
+    use crate::model;
+
+    fn opts(learning: bool) -> Options {
+        Options {
+            schedule: true,
+            learning,
+            sa_iters: 0,
+            ..Options::default()
+        }
+    }
+
+    fn compiled_program(
+        net: &model::NetDef,
+        weights: &[Vec<f32>],
+        learning: bool,
+    ) -> (Compiled, VisitProgram) {
+        let c = compile(net, weights, &opts(learning)).unwrap().compiled;
+        let p = c.schedule.clone().expect("schedule requested");
+        (c, p)
+    }
+
+    /// Invariants every program must satisfy, against its own image.
+    fn check_invariants(c: &Compiled, p: &VisitProgram) {
+        // static ∪ dynamic == configured, disjoint
+        for &cc in c.config.ccs.keys() {
+            assert_ne!(
+                p.static_ccs.contains(cc),
+                p.dynamic_ccs.contains(cc),
+                "cc {cc} must be in exactly one region"
+            );
+        }
+        assert_eq!(
+            p.static_ccs.count() + p.dynamic_ccs.count(),
+            c.config.ccs.len()
+        );
+        // drains cover the static set exactly once, layer-ordered
+        let mut seen = std::collections::BTreeSet::new();
+        let mut last_layer = 0;
+        for d in &p.drains {
+            assert!(d.layer > last_layer || seen.is_empty());
+            last_layer = d.layer;
+            for w in d.ccs.windows(2) {
+                assert!(w[0] < w[1], "ccs ascending within a drain");
+            }
+            for &cc in &d.ccs {
+                assert!(p.static_ccs.contains(cc as usize));
+                assert!(seen.insert(cc), "cc {cc} drained twice");
+            }
+        }
+        assert_eq!(seen.len(), p.static_ccs.count());
+    }
+
+    #[test]
+    fn shd_is_fully_static() {
+        let net = model::dhsnn_shd(true);
+        let (c, p) = compiled_program(&net, &shd_weights(true, 7), false);
+        check_invariants(&c, &p);
+        assert!(p.dynamic_layers.is_empty());
+        assert_eq!(p.dynamic_ccs.count(), 0);
+        assert!(p.static_ccs.count() > 0);
+    }
+
+    #[test]
+    fn ecg_recurrent_layer_is_dynamic_rest_static() {
+        let net = model::srnn_ecg(true);
+        let (c, p) = compiled_program(&net, &ecg_weights(true, 7), false);
+        check_invariants(&c, &p);
+        assert_eq!(p.dynamic_layers, vec![1], "SRNN hidden layer");
+        assert!(p.dynamic_ccs.count() > 0, "recurrent CCs fall back");
+        // the mixed case the parity suite leans on: readout stays static
+        // unless it co-resides with the recurrent layer
+        assert_eq!(
+            p.static_ccs.count() + p.dynamic_ccs.count(),
+            c.config.ccs.len()
+        );
+    }
+
+    #[test]
+    fn learning_marks_the_head_dynamic() {
+        let net = model::bci_net(2);
+        let w = bci_weights(2, 7);
+        let (c0, p0) = compiled_program(&net, &w, false);
+        check_invariants(&c0, &p0);
+        assert!(p0.dynamic_layers.is_empty());
+        let (c1, p1) = compiled_program(&net, &w, true);
+        check_invariants(&c1, &p1);
+        assert_eq!(p1.dynamic_layers, vec![net.layers.len() - 1]);
+        assert!(p1.dynamic_ccs.count() > 0);
+    }
+
+    #[test]
+    fn delayed_skip_endpoints_go_dynamic() {
+        let mut net = model::NetDef::new("skipnet", 4);
+        let lif = model::NeuronModel::Lif { tau: 0.5, vth: 1.0 };
+        net.layers.push(model::Layer::Input { size: 4 });
+        net.layers.push(model::Layer::Fc { input: 4, output: 8, neuron: lif });
+        net.layers.push(model::Layer::Fc { input: 8, output: 8, neuron: lif });
+        net.layers.push(model::Layer::Fc {
+            input: 8,
+            output: 2,
+            neuron: model::NeuronModel::Readout { tau: 0.9 },
+        });
+        net.skips.push(model::Skip { from: 1, to: 3 });
+        assert_eq!(dynamic_layers(&net, false), vec![1, 3]);
+        // a zero-delay skip (adjacent layers) stays static
+        let mut adj = net.clone();
+        adj.skips = vec![model::Skip { from: 2, to: 3 }];
+        assert_eq!(dynamic_layers(&adj, false), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn sharded_programs_split_by_die() {
+        let net = model::dhsnn_shd(true);
+        let w = shd_weights(true, 7);
+        let report =
+            crate::compiler::compile_sharded(&net, &w, &opts(false), 2).unwrap();
+        let progs = &report.sharded.schedules;
+        assert_eq!(progs.len(), 2);
+        let total: usize = progs.iter().map(|p| p.static_ccs.count()).sum();
+        assert_eq!(
+            total,
+            report.sharded.chips.iter().map(|c| c.config.ccs.len()).sum::<usize>()
+        );
+        for (die, prog) in progs.iter().enumerate() {
+            for d in &prog.drains {
+                for &cc in &d.ccs {
+                    assert!(
+                        report.sharded.chips[die].config.ccs.contains_key(&(cc as usize)),
+                        "die {die} cc {cc} not configured"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -112,6 +112,9 @@ pub struct ShardedCompiled {
     pub data_words: usize,
     /// INIT-stage configuration traffic summed over dies.
     pub init_packets: u64,
+    /// One compile-time visit program per die (die-local CC ids; see
+    /// [`super::schedule`]). Empty unless `Options::schedule`.
+    pub schedules: Vec<crate::chip::VisitProgram>,
 }
 
 impl ShardedCompiled {
@@ -426,6 +429,14 @@ pub fn compile_sharded(
         .iter()
         .map(|c| c.config.init_packets())
         .sum();
+    if opts.schedule {
+        sharded.schedules = super::schedule::schedule_sharded(
+            &sharded.cores,
+            n_chips,
+            net,
+            opts.learning,
+        );
+    }
 
     if opts.verify && !opts.aliased_sparse_fanout {
         let report = super::verify::verify_sharded(&sharded, net, opts.learning);

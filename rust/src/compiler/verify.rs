@@ -40,10 +40,11 @@
 //! the `taibai verify` CLI subcommand, and as a pre-flight stage in
 //! `fuzz::differential`.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::fmt;
 
 use crate::chip::config::{CcImage, NcImage};
+use crate::chip::VisitProgram;
 use crate::isa::assembler::{assemble, Program};
 use crate::isa::disasm::disassemble;
 use crate::isa::Opcode;
@@ -163,6 +164,14 @@ pub enum VerifyError {
     Isa { at: Loc, program: &'static str, pc: usize, detail: String },
     /// A host-side map (input / error / readout) is malformed.
     HostMap { kind: &'static str, channel: usize, detail: String },
+    /// A visit program's drains do not cover the configured static
+    /// region exactly once (missing / duplicated / unconfigured CC).
+    ScheduleCoverage { at: Loc, detail: String },
+    /// A visit program's static/dynamic split disagrees with the
+    /// recomputed recurrent/delayed-skip/learning region.
+    ScheduleDynamic { at: Loc, detail: String },
+    /// A visit program's drains are out of layer/CC order.
+    ScheduleOrder { at: Loc, detail: String },
 }
 
 impl fmt::Display for VerifyError {
@@ -254,6 +263,11 @@ impl fmt::Display for VerifyError {
             E::HostMap { kind, channel, detail } => {
                 write!(f, "host {kind} map channel {channel}: {detail}")
             }
+            E::ScheduleCoverage { at, detail } => write!(f, "{at}: schedule coverage: {detail}"),
+            E::ScheduleDynamic { at, detail } => {
+                write!(f, "{at}: schedule dynamic region: {detail}")
+            }
+            E::ScheduleOrder { at, detail } => write!(f, "{at}: schedule order: {detail}"),
         }
     }
 }
@@ -378,7 +392,7 @@ pub fn verify(compiled: &Compiled, net: &NetDef, learning: bool) -> VerifyReport
         .collect();
     let error_pkts: ErrorPackets = compiled.error_map.iter().map(|&p| (None, p)).collect();
     let readout: ReadoutMap = compiled.readout.iter().map(|(&k, &v)| (k, v)).collect();
-    run(
+    let mut report = run(
         net,
         learning,
         dies,
@@ -389,7 +403,180 @@ pub fn verify(compiled: &Compiled, net: &NetDef, learning: bool) -> VerifyReport
         error_pkts,
         readout,
         VerifyReport::default(),
-    )
+    );
+    if let Some(prog) = &compiled.schedule {
+        check_schedule_program(prog, compiled, net, learning, &mut report);
+    }
+    report
+}
+
+/// Check a compile-time visit program against the image it will drive:
+/// the drains must cover exactly the configured-minus-dynamic CCs once
+/// each in ascending layer/CC order, and the dynamic region must be
+/// exactly the recomputed recurrent/delayed-skip/learning set (closed
+/// over merged-core co-residency). Exposed separately from [`verify`]
+/// so the fuzzer and the CLI teeth check can validate a program
+/// computed (or corrupted) after compilation.
+pub fn verify_schedule(
+    prog: &VisitProgram,
+    compiled: &Compiled,
+    net: &NetDef,
+    learning: bool,
+) -> VerifyReport {
+    let mut report = VerifyReport::default();
+    check_schedule_program(prog, compiled, net, learning, &mut report);
+    report
+}
+
+fn check_schedule_program(
+    prog: &VisitProgram,
+    compiled: &Compiled,
+    net: &NetDef,
+    learning: bool,
+    report: &mut VerifyReport,
+) {
+    let configured: BTreeSet<usize> = compiled.config.ccs.keys().copied().collect();
+    let mut cc_layers: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+    for core in &compiled.cores {
+        let hosted = cc_layers.entry(core.cc).or_default();
+        for &(layer, ..) in &core.parts {
+            hosted.insert(layer);
+        }
+    }
+    check_schedule(0, prog, &configured, &cc_layers, net, learning, report);
+}
+
+/// Core schedule checker. CC ids are die-local (a single-die image's
+/// die-global ids pass through as die 0); `die` only stamps the
+/// diagnostic coordinates.
+fn check_schedule(
+    die: usize,
+    prog: &VisitProgram,
+    configured: &BTreeSet<usize>,
+    cc_layers: &BTreeMap<usize, BTreeSet<usize>>,
+    net: &NetDef,
+    learning: bool,
+    report: &mut VerifyReport,
+) {
+    let at = |cc: usize| Loc { die, cc, nc: None, entry: None };
+    let expected_layers = super::schedule::dynamic_layers(net, learning);
+    if prog.dynamic_layers != expected_layers {
+        report.push(VerifyError::ScheduleDynamic {
+            at: at(0),
+            detail: format!(
+                "program marks layers {:?} dynamic, net implies {:?}",
+                prog.dynamic_layers, expected_layers
+            ),
+        });
+    }
+    let dyn_set: BTreeSet<usize> = expected_layers.iter().copied().collect();
+
+    // drains: ascending layers, ascending CCs, configured, static-mask
+    // members, hosted by the drained layer, each CC exactly once
+    let mut drained = BTreeSet::new();
+    let mut prev_layer = None;
+    for drain in &prog.drains {
+        if prev_layer.is_some_and(|p| p >= drain.layer) {
+            report.push(VerifyError::ScheduleOrder {
+                at: at(0),
+                detail: format!("drain for layer {} follows layer {:?}", drain.layer, prev_layer),
+            });
+        }
+        prev_layer = Some(drain.layer);
+        let mut prev_cc = None;
+        for &cc16 in &drain.ccs {
+            let cc = cc16 as usize;
+            if prev_cc.is_some_and(|p| p >= cc) {
+                report.push(VerifyError::ScheduleOrder {
+                    at: at(cc),
+                    detail: format!("layer {} drain lists CCs out of ascending order", drain.layer),
+                });
+            }
+            prev_cc = Some(cc);
+            if !configured.contains(&cc) {
+                report.push(VerifyError::ScheduleCoverage {
+                    at: at(cc),
+                    detail: format!("layer {} drain visits an unconfigured CC", drain.layer),
+                });
+                continue;
+            }
+            if !prog.static_ccs.contains(cc) {
+                report.push(VerifyError::ScheduleCoverage {
+                    at: at(cc),
+                    detail: format!(
+                        "layer {} drain visits a CC outside the static mask",
+                        drain.layer
+                    ),
+                });
+            }
+            if !drained.insert(cc) {
+                report.push(VerifyError::ScheduleCoverage {
+                    at: at(cc),
+                    detail: format!("drained twice (again at layer {})", drain.layer),
+                });
+            }
+            if let Some(hosted) = cc_layers.get(&cc) {
+                if !hosted.contains(&drain.layer) {
+                    report.push(VerifyError::ScheduleOrder {
+                        at: at(cc),
+                        detail: format!(
+                            "drained at layer {} but hosts layers {:?}",
+                            drain.layer, hosted
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // every configured CC: exactly one region, dynamic-ness matching
+    // the recomputed co-residency closure, static CCs drained
+    for &cc in configured {
+        let in_static = prog.static_ccs.contains(cc);
+        let in_dynamic = prog.dynamic_ccs.contains(cc);
+        if in_static == in_dynamic {
+            report.push(VerifyError::ScheduleCoverage {
+                at: at(cc),
+                detail: if in_static {
+                    "claimed by both the static and dynamic region".into()
+                } else {
+                    "claimed by neither the static nor the dynamic region".into()
+                },
+            });
+            continue;
+        }
+        let hosts_dynamic = cc_layers
+            .get(&cc)
+            .is_some_and(|hosted| hosted.iter().any(|l| dyn_set.contains(l)));
+        if in_static && hosts_dynamic {
+            report.push(VerifyError::ScheduleDynamic {
+                at: at(cc),
+                detail: "hosts a dynamic layer but sits in the static region".into(),
+            });
+        }
+        if in_dynamic && !hosts_dynamic {
+            report.push(VerifyError::ScheduleDynamic {
+                at: at(cc),
+                detail: "hosts no dynamic layer but sits in the dynamic region".into(),
+            });
+        }
+        if in_static && !drained.contains(&cc) {
+            report.push(VerifyError::ScheduleCoverage {
+                at: at(cc),
+                detail: "static CC never drained by the program".into(),
+            });
+        }
+    }
+
+    // the masks must not claim CCs the image does not configure
+    for cc in prog.static_ccs.iter().chain(prog.dynamic_ccs.iter()) {
+        if !configured.contains(&cc) {
+            report.push(VerifyError::ScheduleCoverage {
+                at: at(cc),
+                detail: "region mask claims an unconfigured CC".into(),
+            });
+        }
+    }
 }
 
 /// Verify a sharded fleet: the per-die images plus the split host maps,
@@ -448,7 +635,7 @@ pub fn verify_sharded(sharded: &ShardedCompiled, net: &NetDef, learning: bool) -
             readout.push(((die * NUM_CCS + lcc, nc, neuron), out));
         }
     }
-    run(
+    let mut report = run(
         net,
         learning,
         dies,
@@ -459,7 +646,34 @@ pub fn verify_sharded(sharded: &ShardedCompiled, net: &NetDef, learning: bool) -
         error_pkts,
         readout,
         report,
-    )
+    );
+    if !sharded.schedules.is_empty() {
+        if sharded.schedules.len() != dies {
+            report.push(VerifyError::ScheduleCoverage {
+                at: Loc::at(0),
+                detail: format!(
+                    "{} visit programs for a {dies}-die fleet",
+                    sharded.schedules.len()
+                ),
+            });
+        }
+        for (die, prog) in sharded.schedules.iter().enumerate().take(dies) {
+            let configured: BTreeSet<usize> =
+                sharded.chips[die].config.ccs.keys().copied().collect();
+            let mut cc_layers: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+            for (d, core) in &sharded.cores {
+                if *d != die {
+                    continue;
+                }
+                let hosted = cc_layers.entry(core.cc).or_default();
+                for &(layer, ..) in &core.parts {
+                    hosted.insert(layer);
+                }
+            }
+            check_schedule(die, prog, &configured, &cc_layers, net, learning, &mut report);
+        }
+    }
+    report
 }
 
 /// One expected fan-in DT block of a CC, reconstructed from the

@@ -37,7 +37,7 @@
 
 use std::sync::Arc;
 
-use crate::chip::{config::ChipConfig, Chip, ChipActivity, StepResult};
+use crate::chip::{config::ChipConfig, Chip, ChipActivity, StepResult, StepSchedule};
 use crate::compiler::shard::ShardedCompiled;
 use crate::compiler::Compiled;
 use crate::datasets::{DenseSample, SpikeSample};
@@ -121,6 +121,9 @@ impl Deployment {
     pub fn from_image(compiled: Arc<Compiled>) -> Result<Deployment, Trap> {
         let mut chip = Chip::new(compiled.data_words.max(64));
         chip.configure(&compiled.config)?;
+        if let Some(prog) = &compiled.schedule {
+            chip.schedule = StepSchedule::Static(Arc::new(prog.clone()));
+        }
         let n_outputs = compiled.readout.len();
         Ok(Deployment {
             chip,
@@ -388,9 +391,12 @@ impl MultiChipDeployment {
             }
         }
         let mut chips = Vec::with_capacity(compiled.chips.len());
-        for image in &compiled.chips {
+        for (die, image) in compiled.chips.iter().enumerate() {
             let mut chip = Chip::new(compiled.data_words.max(64));
             chip.configure(&image.config)?;
+            if let Some(prog) = compiled.schedules.get(die) {
+                chip.schedule = StepSchedule::Static(Arc::new(prog.clone()));
+            }
             chips.push(chip);
         }
         Ok(MultiChipDeployment {

@@ -3,7 +3,10 @@
 //! Each generated case ([`crate::model::gen::generate`]) runs through
 //! every execution engine the repo has — the golden dense reference
 //! ([`DenseRef`]), the event-driven wake-set chip, the same image with
-//! `scan_all` sweeping, and `compile_sharded` at 2/4/8 dies under both
+//! `scan_all` sweeping, the statically-scheduled engine (a
+//! [`crate::compiler::schedule`] visit program over the same image,
+//! pre-flighted by the schedule checker), and `compile_sharded` at
+//! 2/4/8 dies under both
 //! [`ShardStrategy`] cuts — and every readout row (plus, for learning
 //! cases, the post-update head weight matrix) is compared with exact
 //! f32 equality. The generator keeps all values on an exactness grid,
@@ -18,6 +21,7 @@
 
 use std::sync::Arc;
 
+use crate::chip::StepSchedule;
 use crate::compiler::{self, Compiled, CompileError, ShardStrategy};
 use crate::coordinator::{Deployment, MultiChipDeployment, StepEvents, StepRow};
 use crate::fuzz::dense::DenseRef;
@@ -275,9 +279,33 @@ pub fn run_case(spec: &GenSpec, case: &GenCase) -> CaseReport {
                     outcome,
                 });
             }
+            // fourth single-die column: the statically-scheduled engine
+            // over the same image, its visit program computed here and
+            // pre-flighted by the schedule checker
+            let prog = compiler::schedule::schedule(&image, &case.net, case.learning);
+            let sr = compiler::verify::verify_schedule(&prog, &image, &case.net, case.learning);
+            let outcome = if sr.ok() {
+                match Deployment::from_image(image.clone()) {
+                    Ok(mut d) => {
+                        d.chip.schedule = StepSchedule::Static(Arc::new(prog));
+                        drive(
+                            "scheduled",
+                            &mut Engine::Single(d),
+                            case,
+                            &golden,
+                            golden_w.as_deref(),
+                            &locs,
+                        )
+                    }
+                    Err(t) => Outcome::Diverged(fault("scheduled", case.seed, &t)),
+                }
+            } else {
+                Outcome::Diverged(preflight("scheduled", case.seed, &sr))
+            };
+            report.engines.push(EngineOutcome { engine: "scheduled".into(), outcome });
         }
         Err(e) => {
-            for name in ["wake", "scan-all"] {
+            for name in ["wake", "scan-all", "scheduled"] {
                 report.engines.push(EngineOutcome {
                     engine: name.into(),
                     outcome: Outcome::Refused(e.to_string()),
@@ -623,7 +651,7 @@ mod tests {
         let case = generate(&spec, 3).unwrap();
         let report = run_case(&spec, &case);
         // one die cannot hold the net: the single-die engines refuse …
-        for name in ["wake", "scan-all"] {
+        for name in ["wake", "scan-all", "scheduled"] {
             let e = report
                 .engines
                 .iter()

@@ -9,8 +9,10 @@
 //!                                    with `--backend detailed|analytic|sharded[:N]`,
 //!                                    the multi-die cut with
 //!                                    `--strategy contiguous|mincut` (mincut
-//!                                    default), and the SA die-crossing weight
-//!                                    with `--serdes-cost <hops>`
+//!                                    default), the SA die-crossing weight
+//!                                    with `--serdes-cost <hops>`, and the
+//!                                    statically scheduled step engine with
+//!                                    `--schedule`
 //! * `fast <plif|5blocks|resnet19>` — analytic-backend report for the
 //!                                    Table II benchmark nets
 //! * `serve-demo <ecg|shd|bci>`     — multi-tenant streaming: N client
@@ -21,10 +23,13 @@
 //! * `fuzz`                         — differential fuzzing: seeded random
 //!                                    nets through every engine (dense
 //!                                    reference, wake-set, scan-all,
+//!                                    statically scheduled,
 //!                                    sharded 2/4/8 × both cut strategies)
 //!                                    with exact row comparison. `--cases N
 //!                                    --seed S --max-neurons M`, plus
 //!                                    `--sharded` (past-one-die nets),
+//!                                    `--feedforward` (fully static
+//!                                    programs with quiescent tails),
 //!                                    `--aliased` (prove the oracle catches
 //!                                    the pre-fix fan-out aliasing bug), and
 //!                                    `--replay SEED` (re-run one case).
@@ -38,7 +43,11 @@
 //!                                    `--corpus N` additionally sweeps N
 //!                                    generated fuzz nets, `--aliased` proves
 //!                                    the pre-fix fan-out encoding is rejected
-//!                                    with a coordinate-bearing diagnostic.
+//!                                    with a coordinate-bearing diagnostic,
+//!                                    `--schedule` sweeps compile-time visit
+//!                                    programs through the schedule checker
+//!                                    and proves it rejects hand-corrupted
+//!                                    programs with coordinates.
 //!                                    Exits 1 on any unexpected outcome
 //! * `storage <vgg16|resnet18|…>`   — Fig 14 topology-table storage view
 //! * `baseline <model.hlo.txt>`     — load + execute an AOT artifact via PJRT
@@ -233,6 +242,9 @@ fn run_app(args: &Args) {
             taibai::compiler::placement::DEFAULT_SERDES_COST,
         ));
     }
+    if args.has("schedule") {
+        builder = builder.schedule(true);
+    }
     let mut session = match builder.build() {
         Ok(s) => s,
         Err(e) => {
@@ -397,7 +409,9 @@ fn baseline(args: &Args) {
 /// strategies) must pass; with `--aliased`, the pre-fix sparse fan-out
 /// encoding must be *rejected* with an aliasing diagnostic carrying chip
 /// coordinates; with `--corpus N`, N generated fuzz nets sweep through
-/// the same checks. Exits 1 on any unexpected outcome.
+/// the same checks; with `--schedule`, compile-time visit programs sweep
+/// through the schedule checker and hand-corrupted programs must be
+/// rejected with coordinates. Exits 1 on any unexpected outcome.
 fn verify_cmd(args: &Args) {
     use taibai::compiler::{self, verify::VerifyError, Options, ShardStrategy};
 
@@ -440,6 +454,11 @@ fn verify_cmd(args: &Args) {
                 std::process::exit(1);
             }
         }
+        return;
+    }
+
+    if args.has("schedule") {
+        verify_schedule_cmd(seed);
         return;
     }
 
@@ -580,6 +599,157 @@ fn verify_cmd(args: &Args) {
     println!("verify: all {images} workload images clean");
 }
 
+/// `verify --schedule`: sweep compile-time visit programs through the
+/// schedule checker (every packaged workload, single-die + 2-die), then
+/// prove the checker has teeth by hand-corrupting a program two ways —
+/// losing a drained CC and force-scheduling a dynamic CC — and
+/// demanding a coordinate-bearing `Schedule*` diagnostic for each.
+fn verify_schedule_cmd(seed: u64) {
+    use taibai::compiler::{self, verify::VerifyError, Options};
+
+    let mut bad = 0usize;
+    println!("schedule programs:");
+    for name in ["ecg", "shd", "bci"] {
+        let w = workload_by_name(name);
+        let net = w.net();
+        let weights = w.weights(seed);
+        let opts = Options {
+            learning: w.learning(),
+            rates: w.rates(),
+            verify: false,
+            schedule: true,
+            ..Default::default()
+        };
+        match compiler::compile(&net, &weights, &opts) {
+            Ok(rep) => {
+                let r = compiler::verify::verify(&rep.compiled, &net, opts.learning);
+                let prog = rep.compiled.schedule.as_ref();
+                match (r.ok(), prog) {
+                    (true, Some(p)) => println!(
+                        "  {name:<18} OK   ({} static / {} dynamic CCs, {} drains)",
+                        p.static_ccs.count(),
+                        p.dynamic_ccs.count(),
+                        p.drains.len()
+                    ),
+                    (true, None) => {
+                        bad += 1;
+                        println!("  {name:<18} FAIL no visit program attached");
+                    }
+                    (false, _) => {
+                        bad += 1;
+                        println!("  {name:<18} FAIL {}", r.summary());
+                        for e in r.errors.iter().take(5) {
+                            println!("      {e}");
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                bad += 1;
+                eprintln!("  {name} compile failed: {e}");
+            }
+        }
+        let label = format!("{name}-sharded-2");
+        match compiler::compile_sharded(&net, &weights, &opts, 2) {
+            Ok(rep) => {
+                let r = compiler::verify::verify_sharded(&rep.sharded, &net, opts.learning);
+                if r.ok() && rep.sharded.schedules.len() == rep.sharded.chips.len() {
+                    println!(
+                        "  {label:<18} OK   ({} per-die programs)",
+                        rep.sharded.schedules.len()
+                    );
+                } else {
+                    bad += 1;
+                    println!("  {label:<18} FAIL {}", r.summary());
+                    for e in r.errors.iter().take(5) {
+                        println!("      {e}");
+                    }
+                }
+            }
+            Err(e) => {
+                bad += 1;
+                eprintln!("  {label} compile failed: {e}");
+            }
+        }
+    }
+
+    // Teeth, each on the workload whose topology guarantees the shape
+    // being corrupted: SHD is fully feed-forward, so its program always
+    // carries drains; ECG's recurrent hidden layer guarantees a
+    // non-empty dynamic region.
+    let teeth_image = |name: &str| {
+        let w = workload_by_name(name);
+        let net = w.net();
+        let opts = Options {
+            learning: w.learning(),
+            rates: w.rates(),
+            verify: false,
+            schedule: true,
+            ..Default::default()
+        };
+        match compiler::compile(&net, &w.weights(seed), &opts) {
+            Ok(rep) => (rep.compiled, net, opts.learning),
+            Err(e) => {
+                eprintln!("teeth compile of {name} failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    };
+
+    // (a) lose a drained CC: the static mask still claims it, but no
+    // drain ever visits it
+    let (image, net, learning) = teeth_image("shd");
+    let prog = image.schedule.clone().expect("SHD image carries a program");
+    let mut lost = prog.clone();
+    assert!(!lost.drains.is_empty() && !lost.drains[0].ccs.is_empty());
+    let dropped = lost.drains[0].ccs.remove(0);
+    let r = compiler::verify::verify_schedule(&lost, &image, &net, learning);
+    let hit = r.errors.iter().find(|e| matches!(e, VerifyError::ScheduleCoverage { .. }));
+    match hit {
+        Some(e) => println!("teeth: dropped drain of CC {dropped} rejected: {e}"),
+        None => {
+            eprintln!(
+                "teeth: losing CC {dropped} from its drain was NOT rejected \
+                 with a coverage diagnostic ({})",
+                r.summary()
+            );
+            std::process::exit(1);
+        }
+    }
+
+    // (b) force-schedule a dynamic CC: move a recurrent-layer CC into
+    // the static region and drain it
+    let (image, net, learning) = teeth_image("ecg");
+    let prog = image.schedule.clone().expect("ECG image carries a program");
+    let mut forced = prog.clone();
+    let dyn_cc = forced.dynamic_ccs.iter().next().expect("ECG program has a dynamic region");
+    forced.dynamic_ccs.remove(dyn_cc);
+    forced.static_ccs.insert(dyn_cc);
+    forced.drains.push(taibai::chip::LayerDrain {
+        layer: net.layers.len(),
+        ccs: vec![dyn_cc as u16],
+    });
+    let r = compiler::verify::verify_schedule(&forced, &image, &net, learning);
+    let hit = r.errors.iter().find(|e| matches!(e, VerifyError::ScheduleDynamic { .. }));
+    match hit {
+        Some(e) => println!("teeth: force-scheduled CC {dyn_cc} rejected: {e}"),
+        None => {
+            eprintln!(
+                "teeth: statically scheduling dynamic CC {dyn_cc} was NOT \
+                 rejected with a dynamic-region diagnostic ({})",
+                r.summary()
+            );
+            std::process::exit(1);
+        }
+    }
+
+    if bad > 0 {
+        eprintln!("verify --schedule: {bad} image(s) FAILED");
+        std::process::exit(1);
+    }
+    println!("verify --schedule: all programs clean, checker teeth intact");
+}
+
 /// Differential fuzzing: seeded generated nets through every engine,
 /// with exact row (and post-learning weight) comparison against the
 /// dense reference. Exits 1 on any divergence, writing a JSON repro
@@ -594,6 +764,8 @@ fn fuzz(args: &Args) {
     let out_path = args.get_or("out", "fuzz-repro.json");
     let mut spec = if args.has("sharded") {
         GenSpec::sharded_scale()
+    } else if args.has("feedforward") {
+        GenSpec::feedforward_only()
     } else {
         GenSpec::default()
     };

@@ -55,6 +55,11 @@ pub struct GenSpec {
     pub p_learning: f64,
     /// Per-channel event probability per timestep.
     pub input_rate: f64,
+    /// Inclusive range of trailing stream steps forced silent (no
+    /// events). `(0, 0)` — the default — draws nothing from the RNG,
+    /// so existing seeded cases replay unchanged. Long quiescent tails
+    /// exercise the static engine's nothing-pending fast path.
+    pub quiescent_tail: (usize, usize),
     pub max_neurons: usize,
     /// Candidate redraws before giving up with
     /// [`CompileError::Generator`].
@@ -85,6 +90,7 @@ impl Default for GenSpec {
             p_skip: 0.3,
             p_learning: 0.25,
             input_rate: 0.3,
+            quiescent_tail: (0, 0),
             max_neurons: 96,
             attempts: 16,
             neurons_per_core: None,
@@ -110,6 +116,23 @@ impl GenSpec {
             max_neurons: 1300,
             neurons_per_core: Some(1),
             allow_sharded: true,
+            ..GenSpec::default()
+        }
+    }
+
+    /// Purely feed-forward nets — no recurrence, no skips, no learning
+    /// head — with long quiescent stream tails. Every case in this
+    /// family compiles to a fully static [`crate::chip::VisitProgram`]
+    /// (empty dynamic region), and the silent tail steps pin the
+    /// scheduled engine's quiescent fast path against wake-set
+    /// behaviour.
+    pub fn feedforward_only() -> GenSpec {
+        GenSpec {
+            p_recurrent: 0.0,
+            p_skip: 0.0,
+            p_learning: 0.0,
+            timesteps: (16, 32),
+            quiescent_tail: (6, 12),
             ..GenSpec::default()
         }
     }
@@ -366,6 +389,25 @@ fn draw(spec: &GenSpec, sub_seed: u64) -> GenCase {
         Stream::Spikes(sp)
     };
 
+    let mut stream = stream;
+    if spec.quiescent_tail.1 > 0 {
+        // Keep at least one active prefix step so the case still
+        // pushes traffic through the net.
+        let tail = irange(&mut rng, spec.quiescent_tail).min(timesteps - 1);
+        match &mut stream {
+            Stream::Spikes(rows) => {
+                for row in rows.iter_mut().rev().take(tail) {
+                    row.clear();
+                }
+            }
+            Stream::Dense(rows) => {
+                for row in rows.iter_mut().rev().take(tail) {
+                    row.fill(0.0);
+                }
+            }
+        }
+    }
+
     let errors = if learning {
         let mut e: Vec<f32> = (0..n_out)
             .map(|_| (rng.range(0, 17) as f32 - 8.0) / 8.0)
@@ -537,6 +579,50 @@ mod tests {
             Err(e) => panic!("expected TooManyCores, got {e:?}"),
         }
         assert!(compiler::compile_sharded(&c.net, &c.weights, &opts, 2).is_ok());
+    }
+
+    #[test]
+    fn feedforward_only_is_fully_static_with_silent_tails() {
+        let spec = GenSpec::feedforward_only();
+        for seed in 0..12u64 {
+            let c = generate(&spec, seed).unwrap();
+            assert!(!c.learning, "seed {seed}: learning head drawn");
+            assert!(c.net.skips.is_empty(), "seed {seed}: skip drawn");
+            assert!(
+                !c.net.layers.iter().any(|l| matches!(l, Layer::Recurrent { .. })),
+                "seed {seed}: recurrent layer drawn"
+            );
+            assert!(
+                crate::compiler::schedule::dynamic_layers(&c.net, c.learning).is_empty(),
+                "seed {seed}: dynamic region non-empty on a feed-forward net"
+            );
+            // The drawn tail is ≥ quiescent_tail.0, so at least that
+            // many trailing steps carry no events.
+            let silent = |t: usize| match &c.stream {
+                Stream::Spikes(rows) => rows[t].is_empty(),
+                Stream::Dense(rows) => rows[t].iter().all(|&v| v == 0.0),
+            };
+            let steps = c.stream.steps();
+            for t in steps - spec.quiescent_tail.0..steps {
+                assert!(silent(t), "seed {seed}: step {t} not quiescent");
+            }
+        }
+    }
+
+    #[test]
+    fn quiescent_tail_off_leaves_seeded_draws_untouched() {
+        // Turning the tail knob on must not perturb any draw that
+        // precedes it — the stream prefix and the net are identical.
+        let base = generate(&GenSpec::default(), 11).unwrap();
+        let tailed =
+            generate(&GenSpec { quiescent_tail: (2, 4), ..GenSpec::default() }, 11).unwrap();
+        assert_eq!(base.net.layers, tailed.net.layers);
+        assert_eq!(base.weights, tailed.weights);
+        match (&base.stream, &tailed.stream) {
+            (Stream::Spikes(a), Stream::Spikes(b)) => assert_eq!(a[0], b[0]),
+            (Stream::Dense(a), Stream::Dense(b)) => assert_eq!(a[0], b[0]),
+            _ => panic!("stream kind changed"),
+        }
     }
 
     #[test]

@@ -1,36 +1,66 @@
-//! Wake-set parity suite: the event-driven engine (bitset wake sets,
-//! incremental bookkeeping) must produce results bit-identical to the
-//! naive scan-every-column reference (`Chip::scan_all`), which derives
-//! the same per-phase work sets by predicate scan each step. Divergence
-//! means the incremental bookkeeping lost or invented work.
+//! Engine parity suite: the event-driven wake-set engine, the naive
+//! scan-every-column reference (`Chip::scan_all`), and the statically
+//! scheduled engine (compile-time [`taibai::chip::VisitProgram`]) must
+//! all produce bit-identical results. Divergence means one engine lost
+//! or invented work.
 //!
 //! Covered per workload (ECG / SHD / BCI): readout rows, spike counts,
 //! routed-packet counts, the full [`ChipActivity`] counter set (so the
-//! energy model prices both engines identically), and the scheduler's
-//! own visit counters. Plus: a quiescent compiled deployment must cost
-//! zero column visits per step.
+//! energy model prices every engine identically), and the scheduler's
+//! own visit counters — including the pin that `static_cc_visits` is
+//! zero in wake-set and scan-all modes and strictly positive whenever
+//! a program with a non-empty static region carries traffic. Plus: a
+//! quiescent compiled
+//! deployment must cost zero column visits per step in every mode.
 
 use taibai::api::workloads::{Bci, Ecg, Shd, Workload};
 use taibai::api::Sample;
+use taibai::chip::StepSchedule;
 use taibai::compiler::{self, Options};
 use taibai::coordinator::Deployment;
 
-/// Two deployments of the same compiled image: wake-set and scan-all.
-fn build_pair(w: &dyn Workload, seed: u64) -> (Deployment, Deployment) {
+/// Three deployments of one compiled image: wake-set, scan-all, and
+/// statically scheduled. All share the exact same image (compiled once,
+/// with the visit program attached); the wake deployment resets its
+/// schedule back to the default strategy, and the scan deployment keeps
+/// the program installed so the test also exercises the `scan_all`
+/// override.
+fn build_trio(w: &dyn Workload, seed: u64) -> (Deployment, Deployment, Deployment) {
     let r = compiler::compile(
         &w.net(),
         &w.weights(seed),
         &Options {
             learning: w.learning(),
             rates: w.rates(),
+            schedule: true,
             ..Default::default()
         },
     )
     .unwrap_or_else(|e| panic!("{}: compile failed: {e}", w.name()));
-    let wake = Deployment::new(r.compiled.clone()).unwrap();
-    let mut scan = Deployment::new(r.compiled).unwrap();
+    assert!(
+        r.compiled.schedule.is_some(),
+        "{}: Options::schedule did not attach a visit program",
+        w.name()
+    );
+    let mut wake = Deployment::new(r.compiled.clone()).unwrap();
+    wake.chip.schedule = StepSchedule::default();
+    let mut scan = Deployment::new(r.compiled.clone()).unwrap();
     scan.chip.scan_all = true;
-    (wake, scan)
+    let sched = Deployment::new(r.compiled).unwrap();
+    assert!(
+        matches!(sched.chip.schedule, StepSchedule::Static(_)),
+        "{}: deployment did not install the compiled visit program",
+        w.name()
+    );
+    (wake, scan, sched)
+}
+
+fn run_one(d: &mut Deployment, s: &Sample) -> taibai::coordinator::SampleRun {
+    d.reset_state().unwrap();
+    match s {
+        Sample::Spikes(sp) => d.run_spikes(sp).unwrap(),
+        Sample::Dense(v) => d.run_values(v).unwrap(),
+    }
 }
 
 fn run_both(
@@ -38,21 +68,21 @@ fn run_both(
     scan: &mut Deployment,
     s: &Sample,
 ) -> (taibai::coordinator::SampleRun, taibai::coordinator::SampleRun) {
-    wake.reset_state().unwrap();
-    scan.reset_state().unwrap();
-    match s {
-        Sample::Spikes(sp) => (wake.run_spikes(sp).unwrap(), scan.run_spikes(sp).unwrap()),
-        Sample::Dense(d) => (wake.run_values(d).unwrap(), scan.run_values(d).unwrap()),
-    }
+    (run_one(wake, s), run_one(scan, s))
 }
 
 fn assert_parity(w: &dyn Workload, samples: usize, seed: u64) {
-    let (mut wake, mut scan) = build_pair(w, seed);
+    let (mut wake, mut scan, mut sched) = build_trio(w, seed);
     for (k, s) in w.dataset(samples, seed).iter().take(samples).enumerate() {
-        let (a, b) = run_both(&mut wake, &mut scan, s);
+        let a = run_one(&mut wake, s);
+        let b = run_one(&mut scan, s);
+        let c = run_one(&mut sched, s);
         assert_eq!(a.outputs, b.outputs, "{} sample {k}: readout rows diverged", w.name());
         assert_eq!(a.spikes, b.spikes, "{} sample {k}: spike counts diverged", w.name());
         assert_eq!(a.packets, b.packets, "{} sample {k}: packet counts diverged", w.name());
+        assert_eq!(a.outputs, c.outputs, "{} sample {k}: scheduled readout diverged", w.name());
+        assert_eq!(a.spikes, c.spikes, "{} sample {k}: scheduled spikes diverged", w.name());
+        assert_eq!(a.packets, c.packets, "{} sample {k}: scheduled packets diverged", w.name());
     }
     assert_eq!(
         wake.chip.activity(),
@@ -61,9 +91,55 @@ fn assert_parity(w: &dyn Workload, samples: usize, seed: u64) {
         w.name()
     );
     assert_eq!(
+        wake.chip.activity(),
+        sched.chip.activity(),
+        "{}: scheduled ChipActivity diverged (energy model would disagree)",
+        w.name()
+    );
+    assert_eq!(
         wake.chip.sched,
         scan.chip.sched,
         "{}: wake sets visited different columns than the predicate scan",
+        w.name()
+    );
+    // Every engine does the same amount of column work; the scheduled
+    // engine merely attributes part of it to the static program.
+    let (a, b) = (&wake.chip.sched, &sched.chip.sched);
+    assert_eq!(a.steps, b.steps, "{}: step counts diverged", w.name());
+    assert_eq!(a.integ_cc_visits, b.integ_cc_visits, "{}: INTEG visits diverged", w.name());
+    assert_eq!(a.fire_cc_visits, b.fire_cc_visits, "{}: FIRE visits diverged", w.name());
+    assert_eq!(a.delay_cc_visits, b.delay_cc_visits, "{}: delay visits diverged", w.name());
+    assert_eq!(a.static_cc_visits, 0, "{}: wake-set mode bumped the static counter", w.name());
+    assert_eq!(
+        scan.chip.sched.static_cc_visits,
+        0,
+        "{}: scan-all mode bumped the static counter",
+        w.name()
+    );
+    // Positivity is pinned only when the program actually has a static
+    // region: placement is free to co-locate a small net's static
+    // layers with its dynamic ones on a single CC, which legitimately
+    // leaves the whole image on the wake path.
+    let prog = match &sched.chip.schedule {
+        StepSchedule::Static(p) => p.clone(),
+        StepSchedule::WakeSet => unreachable!("build_trio pinned a static program"),
+    };
+    if prog.static_ccs.is_empty() {
+        assert_eq!(
+            b.static_cc_visits, 0,
+            "{}: fully dynamic program attributed static visits",
+            w.name()
+        );
+    } else {
+        assert!(
+            b.static_cc_visits > 0,
+            "{}: static program carried no traffic — nothing was scheduled",
+            w.name()
+        );
+    }
+    assert!(
+        b.static_cc_visits <= b.integ_cc_visits + b.fire_cc_visits,
+        "{}: static counter exceeds total INTEG+FIRE work",
         w.name()
     );
 }
@@ -86,32 +162,43 @@ fn bci_wake_set_matches_scan_all_reference() {
 #[test]
 fn bci_learning_step_matches_scan_all_reference() {
     let w = Bci { subpaths: 8, day: 2 };
-    let (mut wake, mut scan) = build_pair(&w, 5);
+    let (mut wake, mut scan, mut sched) = build_trio(&w, 5);
     let data = w.dataset(1, 5);
     let (a, b) = run_both(&mut wake, &mut scan, &data[0]);
+    let c = run_one(&mut sched, &data[0]);
     assert_eq!(a.outputs, b.outputs);
-    // identical error injection must move identical weights
+    assert_eq!(a.outputs, c.outputs);
+    // identical error injection must move identical weights — the
+    // learning head sits in the dynamic region of the visit program,
+    // so the scheduled engine routes its traffic over the wake path
     let errors = [0.5, -0.25, -0.15, -0.1];
     wake.learn_step(&errors).unwrap();
     scan.learn_step(&errors).unwrap();
+    sched.learn_step(&errors).unwrap();
     assert_eq!(wake.chip.activity(), scan.chip.activity());
+    assert_eq!(wake.chip.activity(), sched.chip.activity());
     let (a, b) = run_both(&mut wake, &mut scan, &data[0]);
+    let c = run_one(&mut sched, &data[0]);
     assert_eq!(a.outputs, b.outputs, "post-learning runs diverged");
+    assert_eq!(a.outputs, c.outputs, "scheduled post-learning run diverged");
 }
 
 #[test]
 fn quiescent_deployment_visits_zero_columns() {
     let w = Ecg { heterogeneous: true };
-    let (mut d, _) = build_pair(&w, 9);
-    for _ in 0..10 {
-        let r = d.chip.step(&[]).unwrap();
-        assert_eq!(r.spikes, 0);
-        assert!(r.outputs.is_empty());
+    let (wake, _, sched) = build_trio(&w, 9);
+    for (mode, mut d) in [("wake-set", wake), ("scheduled", sched)] {
+        for _ in 0..10 {
+            let r = d.chip.step(&[]).unwrap();
+            assert_eq!(r.spikes, 0);
+            assert!(r.outputs.is_empty());
+        }
+        assert_eq!(d.chip.sched.steps, 10);
+        let visits = d.chip.sched.integ_cc_visits
+            + d.chip.sched.fire_cc_visits
+            + d.chip.sched.delay_cc_visits
+            + d.chip.sched.static_cc_visits;
+        assert_eq!(visits, 0, "{mode}: a silent deployment must not visit a column");
+        assert_eq!(d.chip.activity().nc.instret, 0, "{mode}: no NC may execute");
     }
-    assert_eq!(d.chip.sched.steps, 10);
-    let visits = d.chip.sched.integ_cc_visits
-        + d.chip.sched.fire_cc_visits
-        + d.chip.sched.delay_cc_visits;
-    assert_eq!(visits, 0, "a silent deployment must not visit a single column");
-    assert_eq!(d.chip.activity().nc.instret, 0, "no NC may execute");
 }
