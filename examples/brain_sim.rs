@@ -10,7 +10,7 @@
 //! cargo run --release --example brain_sim -- --neurons 512 --steps 80
 //! ```
 
-use taibai::api::{Sample, Taibai};
+use taibai::api::{ExecOptions, Sample, Taibai};
 use taibai::datasets::SpikeSample;
 use taibai::energy::EnergyModel;
 use taibai::model::{Layer, NetDef, NeuronModel};
@@ -70,7 +70,10 @@ fn main() {
     let mut session = Taibai::new(net)
         .weights(vec![vec![], w1, w2])
         .rates(vec![0.2, 0.1, 0.0])
-        .sa_iters(1000)
+        .exec(ExecOptions {
+            sa_iters: 1000,
+            ..ExecOptions::default()
+        })
         .build()
         .expect("compile");
     println!(

@@ -3,7 +3,7 @@
 //! must agree closely; energy within a documented band. Both engines run
 //! behind the same `api::Session` surface, on the *same* input sample.
 
-use taibai::api::{Backend, Sample, Taibai};
+use taibai::api::{Backend, ExecOptions, Sample, Taibai};
 use taibai::bench::Table;
 use taibai::energy::EnergyModel;
 use taibai::model::{Layer, NetDef, NeuronModel};
@@ -41,8 +41,11 @@ fn main() {
 
     // analytic prediction at the measured input rate, silent hidden
     let mut fast = Taibai::new(net)
-        .backend(Backend::Analytic)
         .rates(vec![measured, 0.0])
+        .exec(ExecOptions {
+            backend: Backend::Analytic,
+            ..ExecOptions::default()
+        })
         .build()
         .expect("analytic deploy");
     fast.run(&sample).expect("analytic run");

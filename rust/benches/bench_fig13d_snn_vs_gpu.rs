@@ -5,7 +5,7 @@
 //! the multi-chip nets (PLIF, ResNet19) lose throughput to inter-chip
 //! packets.
 
-use taibai::api::{Backend, Sample, Taibai};
+use taibai::api::{Backend, ExecOptions, FastParams, Sample, Taibai};
 use taibai::bench::{f2, si, Table};
 use taibai::energy::gpu::GpuModel;
 use taibai::model::{self, Layer};
@@ -40,9 +40,15 @@ fn main() {
         let layers = net.layers.len() as u64;
 
         let mut session = Taibai::new(net)
-            .backend(Backend::Analytic)
             .rates(vec![rate]) // pin the input rate exactly
-            .default_rate(rate)
+            .exec(ExecOptions {
+                backend: Backend::Analytic,
+                fast: FastParams {
+                    default_rate: rate,
+                    ..FastParams::default()
+                },
+                ..ExecOptions::default()
+            })
             .build()
             .expect("analytic deploy");
         session

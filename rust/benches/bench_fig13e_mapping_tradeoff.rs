@@ -5,7 +5,7 @@
 //! +greedy/SA placement. The per-point report runs through an analytic
 //! `api::Session` parameterized with the placement-derived hop count.
 
-use taibai::api::{Backend, Sample, Taibai};
+use taibai::api::{Backend, ExecOptions, Sample, Taibai};
 use taibai::bench::Table;
 use taibai::chip::fast::FastParams;
 use taibai::compiler::{partition, placement};
@@ -42,8 +42,11 @@ fn main() {
         p.nc_neuron_capacity = npn;
         p.avg_hops = hops.max(0.5);
         let mut session = Taibai::new(net.clone())
-            .backend(Backend::Analytic)
-            .fast_params(p)
+            .exec(ExecOptions {
+                backend: Backend::Analytic,
+                fast: p,
+                ..ExecOptions::default()
+            })
             .build()
             .expect("analytic deploy");
         session

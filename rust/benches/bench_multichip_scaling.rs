@@ -1,6 +1,7 @@
 //! Multi-chip scaling bench: per-step wall-clock, CC visits, and bridge
 //! traffic vs shard count — plus the Contiguous-vs-MinCut cut-strategy
-//! comparison the CI regression guard pins.
+//! comparison and the pipelined-vs-sequential stepper comparison the CI
+//! regression guards pin.
 //!
 //! Claims under measurement:
 //! * forcing a single-die workload (SHD) onto 2 or 4 lockstep dies
@@ -12,7 +13,14 @@
 //! * the `MinCut` cut-point optimizer ships strictly fewer remote
 //!   packets per step across the host bridge than the PR 3
 //!   `Contiguous` split on the same inputs (`--guard-mincut` turns the
-//!   comparison into a hard failure; CI passes it on every run).
+//!   comparison into a hard failure; CI passes it on every run);
+//! * the pipelined stepper (bounded run-ahead, `--depth`, default 2)
+//!   produces bit-identical rows to the sequential reference and does
+//!   not cost wall-clock beyond a small synchronization margin
+//!   (`--guard-pipeline` turns the 4-die wide-FC comparison into a hard
+//!   failure; on multi-core hosts the pipeline should win outright, and
+//!   the guard's margin only absorbs condvar overhead on core-starved
+//!   CI runners).
 //!
 //! `--json <path>` writes the whole run as machine-readable perf JSON
 //! (`BENCH_multichip.json` in CI, uploaded as an artifact so the perf
@@ -21,13 +29,14 @@
 //! ```sh
 //! cargo bench --bench bench_multichip_scaling               # full run
 //! cargo bench --bench bench_multichip_scaling -- \
-//!     --samples 1 --json BENCH_multichip.json --guard-mincut   # CI smoke
+//!     --samples 1 --json BENCH_multichip.json \
+//!     --guard-mincut --guard-pipeline                          # CI smoke
 //! ```
 
 use std::time::Instant;
 
 use taibai::api::workloads::{Shd, Workload};
-use taibai::api::{Backend, Sample, Session, ShardStrategy, Taibai};
+use taibai::api::{Backend, ExecOptions, Sample, Session, ShardStrategy, Taibai};
 use taibai::bench::Table;
 use taibai::compiler::Objective;
 use taibai::model;
@@ -62,9 +71,10 @@ fn measure(
         outs.push(r.outputs);
     }
     let secs = start.elapsed().as_secs_f64();
-    let sched = session.sched_stats();
+    let tele = session.telemetry();
+    let sched = &tele.sched;
     let visits = sched.integ_cc_visits + sched.fire_cc_visits + sched.delay_cc_visits;
-    let a = session.activity();
+    let a = &tele.activity;
     let row = Row {
         deployment: label.to_string(),
         strategy: String::new(),
@@ -77,6 +87,22 @@ fn measure(
         spikes_per_sample: spikes as f64 / data.len() as f64,
     };
     (row, outs)
+}
+
+/// Run the dataset `reps` times on one session and keep the fastest
+/// wall-clock, in ms/sample: best-of-N squeezes scheduler noise out of
+/// the pipelined-vs-sequential comparison.
+fn best_ms_per_sample(session: &mut Session, data: &[Sample], reps: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let start = Instant::now();
+        for s in data {
+            session.run(s).expect("running sample");
+        }
+        let ms = start.elapsed().as_secs_f64() / data.len() as f64 * 1e3;
+        best = best.min(ms);
+    }
+    best
 }
 
 fn row_json(r: &Row) -> Json {
@@ -105,11 +131,46 @@ fn print_row(t: &mut Table, r: &Row) {
     ]);
 }
 
+fn shd_session(seed: u64, chips: usize, strategy: ShardStrategy, sa: usize, depth: usize) -> Session {
+    Shd { dendrites: true }
+        .taibai(seed)
+        .exec(ExecOptions {
+            backend: Backend::Sharded { chips },
+            strategy,
+            sa_iters: sa,
+            pipeline_depth: depth,
+            ..ExecOptions::default()
+        })
+        .build()
+        .expect("compiling SHD sharded")
+}
+
+fn wide_session(seed: u64, chips: usize, strategy: ShardStrategy, sa: usize, depth: usize) -> Session {
+    let net = model::wide_fc_net(8, 600, 2, 4);
+    let weights = model::wide_fc_weights(&net, seed);
+    Taibai::new(net)
+        .weights(weights)
+        .exec(ExecOptions {
+            backend: Backend::Sharded { chips },
+            objective: Objective::Balanced(1),
+            strategy,
+            merge: false,
+            sa_iters: sa,
+            pipeline_depth: depth,
+            ..ExecOptions::default()
+        })
+        .build()
+        .expect("compiling the wide-FC net")
+}
+
 fn main() {
     let args = Args::from_env();
     let samples = args.usize("samples", 5);
     let seed = args.u64("seed", 42);
     let guard = args.has("guard-mincut");
+    let guard_pipeline = args.has("guard-pipeline");
+    let depth = args.usize("depth", 2).max(1);
+    let reps = args.usize("reps", 3);
 
     let w = Shd { dendrites: true };
     let all = w.dataset(samples.max(1), seed);
@@ -130,12 +191,7 @@ fn main() {
     // ---- SHD forced onto 1 / 2 / 4 dies ------------------------------
     let mut reference: Option<Vec<Vec<Vec<f32>>>> = None;
     for &chips in &[1usize, 2, 4] {
-        let mut session = w
-            .taibai(seed)
-            .sa_iters(0)
-            .backend(Backend::Sharded { chips })
-            .build()
-            .expect("compiling SHD sharded");
+        let mut session = shd_session(seed, chips, ShardStrategy::default(), 0, 0);
         let (mut row, outs) = measure("SHD", &mut session, data);
         row.strategy = ShardStrategy::default().to_string();
         match &reference {
@@ -152,16 +208,7 @@ fn main() {
     // ---- over-capacity net at its natural die count ------------------
     let steps = 8usize;
     let probe = vec![Sample::poisson(8, steps, 0.5, seed)];
-    let wide_net = model::wide_fc_net(8, 600, 2, 4);
-    let wide_weights = model::wide_fc_weights(&wide_net, seed);
-    let mut session = Taibai::new(wide_net)
-        .weights(wide_weights)
-        .objective(Objective::Balanced(1))
-        .merge(false)
-        .sa_iters(0)
-        .backend(Backend::Sharded { chips: 0 })
-        .build()
-        .expect("compiling the over-capacity net");
+    let mut session = wide_session(seed, 0, ShardStrategy::default(), 0, 0);
     let (mut row, _) = measure("Wide-FC 1204c", &mut session, &probe);
     row.strategy = ShardStrategy::default().to_string();
     assert!(row.spikes_per_sample > 0.0, "wide net never spiked");
@@ -179,33 +226,13 @@ fn main() {
     let configs: Vec<(&str, SessionBuilder, usize, &[Sample])> = vec![
         (
             "SHD",
-            Box::new(move |s: ShardStrategy, sa: usize| {
-                Shd { dendrites: true }
-                    .taibai(seed)
-                    .sa_iters(sa)
-                    .shard_strategy(s)
-                    .backend(Backend::Sharded { chips: 4 })
-                    .build()
-                    .expect("compiling SHD x4")
-            }),
+            Box::new(move |s: ShardStrategy, sa: usize| shd_session(seed, 4, s, sa, 0)),
             4,
             data,
         ),
         (
             "Wide-FC 1204c",
-            Box::new(move |s: ShardStrategy, sa: usize| {
-                let net = model::wide_fc_net(8, 600, 2, 4);
-                let weights = model::wide_fc_weights(&net, seed);
-                Taibai::new(net)
-                    .weights(weights)
-                    .objective(Objective::Balanced(1))
-                    .merge(false)
-                    .sa_iters(sa)
-                    .shard_strategy(s)
-                    .backend(Backend::Sharded { chips: 4 })
-                    .build()
-                    .expect("compiling wide-FC x4")
-            }),
+            Box::new(move |s: ShardStrategy, sa: usize| wide_session(seed, 4, s, sa, 0)),
             4,
             &wide_probe,
         ),
@@ -276,30 +303,123 @@ fn main() {
     }
     t2.print();
 
+    // ---- pipelined vs sequential stepper per die count ---------------
+    // Same compiled image class, two step engines: the sequential
+    // reference and the bounded-run-ahead pipeline. Rows are asserted
+    // bit-identical first, then best-of-N wall-clock is compared. The
+    // 4-die wide-FC config is the guarded one: it is the only workload
+    // here with enough per-die work for the pipeline to amortize its
+    // synchronization, so it is where a pipelined regression would be
+    // a real loss rather than condvar noise.
+    let mut t3 = Table::new(&[
+        "pipeline",
+        "dies",
+        "depth",
+        "seq ms/sample",
+        "piped ms/sample",
+        "speedup",
+    ]);
+    let mut pipe_json = Vec::new();
+    type DepthBuilder = Box<dyn Fn(usize) -> Session>;
+    let pipe_configs: Vec<(&str, DepthBuilder, usize, &[Sample], bool)> = vec![
+        (
+            "SHD",
+            Box::new(move |d: usize| shd_session(seed, 2, ShardStrategy::default(), 0, d)),
+            2,
+            data,
+            false,
+        ),
+        (
+            "SHD",
+            Box::new(move |d: usize| shd_session(seed, 4, ShardStrategy::default(), 0, d)),
+            4,
+            data,
+            false,
+        ),
+        (
+            "Wide-FC 1204c",
+            Box::new(move |d: usize| wide_session(seed, 4, ShardStrategy::default(), 0, d)),
+            4,
+            &wide_probe,
+            true,
+        ),
+    ];
+    // On a multi-core host the pipeline overlaps per-die work and should
+    // simply be faster. The guard margin exists for core-starved CI
+    // runners, where both engines serialize onto one CPU and the
+    // pipeline can only pay (bounded) synchronization overhead.
+    const PIPELINE_GUARD_MARGIN: f64 = 1.25;
+    for (name, build, dies, cfg_data, guarded) in &pipe_configs {
+        let mut seq = build(0);
+        let mut piped = build(depth);
+        for (si, s) in cfg_data.iter().enumerate() {
+            assert_eq!(
+                seq.run(s).expect("sequential run").outputs,
+                piped.run(s).expect("pipelined run").outputs,
+                "{name} x{dies} depth {depth}: sample {si} rows diverged"
+            );
+        }
+        let seq_ms = best_ms_per_sample(&mut seq, cfg_data, reps);
+        let piped_ms = best_ms_per_sample(&mut piped, cfg_data, reps);
+        let speedup = seq_ms / piped_ms.max(1e-9);
+        t3.row(&[
+            name.to_string(),
+            format!("{dies}"),
+            format!("{depth}"),
+            format!("{seq_ms:.3}"),
+            format!("{piped_ms:.3}"),
+            format!("{speedup:.2}x"),
+        ]);
+        pipe_json.push(
+            Json::obj()
+                .set("workload", *name)
+                .set("dies", *dies)
+                .set("depth", depth)
+                .set("sequential_ms_per_sample", seq_ms)
+                .set("pipelined_ms_per_sample", piped_ms)
+                .set("speedup", speedup),
+        );
+        if guard_pipeline && *guarded && piped_ms > seq_ms * PIPELINE_GUARD_MARGIN {
+            guard_failures.push(format!(
+                "{name} x{dies}: pipelined stepper slower than sequential beyond \
+                 the {PIPELINE_GUARD_MARGIN}x margin ({piped_ms:.3} ms vs {seq_ms:.3} ms \
+                 per sample, best of {reps})",
+            ));
+        }
+    }
+    t3.print();
+
     if let Some(path) = args.get("json") {
         let doc = Json::obj()
             .set("bench", "multichip_scaling")
             .set("samples", data.len())
             .set("seed", seed)
+            .set("pipeline_depth", depth)
             .set("scaling", Json::Arr(scaling_json))
-            .set("cut_strategies", Json::Arr(guard_json));
+            .set("cut_strategies", Json::Arr(guard_json))
+            .set("pipeline", Json::Arr(pipe_json));
         std::fs::write(path, doc.render() + "\n").expect("writing perf JSON");
         println!("\nperf JSON written to {path}");
     }
 
     // guard failures abort only *after* the perf JSON is on disk, so a
-    // MinCut regression still leaves the artifact to quantify it
+    // regression still leaves the artifact to quantify it
     assert!(
         guard_failures.is_empty(),
-        "MinCut regression guard failed:\n{}",
+        "regression guard failed:\n{}",
         guard_failures.join("\n")
     );
 
     println!(
-        "\nReadout rows are asserted bit-identical across die counts; the \
-         wide net only exists beyond one die's 1056 cores.{}",
+        "\nReadout rows are asserted bit-identical across die counts and step \
+         engines; the wide net only exists beyond one die's 1056 cores.{}{}",
         if guard {
             " MinCut < Contiguous remote-packet guard: PASSED."
+        } else {
+            ""
+        },
+        if guard_pipeline {
+            " Pipelined-vs-sequential wall-clock guard: PASSED."
         } else {
             ""
         }

@@ -7,7 +7,15 @@
 //! streaming face of the wake-set sparsity claim. For input sparsity
 //! levels 1%, 10%, and 50% it reports mean/max per-push wall-clock
 //! (from the stream's own `LatencyStats` counters, measured inside
-//! `stream_push`) and spikes per push.
+//! `stream_push`) and spikes per push — across three engine modes:
+//!
+//! * `wake-set`   — the dynamic wake-set stepper (baseline);
+//! * `scheduled`  — the statically scheduled step engine (compile-time
+//!   `VisitProgram` drains instead of wake-set bookkeeping);
+//! * `pipelined`  — a 2-die shard on the pipelined multi-die stepper
+//!   (depth 2, per-die visit programs installed), pushing through the
+//!   same streaming face; each push drains to the step barrier, so this
+//!   measures the pipeline's per-step floor, not its run-ahead ceiling.
 //!
 //! `--json <path>` writes the per-level measurements as machine-
 //! readable perf JSON (`BENCH_stream.json` in CI, uploaded as an
@@ -21,7 +29,7 @@
 //! ```
 
 use taibai::api::workloads::{Shd, Workload};
-use taibai::api::{Backend, LatencyStats, StepEvents};
+use taibai::api::{Backend, ExecOptions, LatencyStats, Session, StepEvents};
 use taibai::bench::Table;
 use taibai::util::cli::Args;
 use taibai::util::json::Json;
@@ -29,28 +37,17 @@ use taibai::util::Rng;
 
 const CHANNELS: usize = 700;
 
-fn main() {
-    let args = Args::from_env();
-    let samples = args.usize("samples", 5);
-    let timesteps = args.usize("timesteps", 100);
-    let seed = args.u64("seed", 42);
-
-    let w = Shd { dendrites: true };
-    let mut session = w
-        .session(Backend::Detailed, seed)
-        .expect("compiling the SHD workload");
-    println!(
-        "SHD streaming deployment: {} cores; {samples} streams x {timesteps} pushes per level\n",
-        session.info().used_cores
-    );
-
-    let mut t = Table::new(&[
-        "input rate",
-        "µs/push mean",
-        "µs/push max",
-        "spikes/push",
-        "pushes",
-    ]);
+/// Push `samples` streams of `timesteps` random-sparsity steps per
+/// level through one session, appending a table row and a JSON entry
+/// per level.
+fn measure_levels(
+    mode: &str,
+    session: &mut Session,
+    samples: usize,
+    timesteps: usize,
+    seed: u64,
+    t: &mut Table,
+) -> Vec<Json> {
     let mut levels = Vec::new();
     let mut active: Vec<u16> = Vec::new();
     for &rate in &[0.01, 0.10, 0.50] {
@@ -75,6 +72,7 @@ fn main() {
             pushes += rep.steps;
         }
         t.row(&[
+            mode.to_string(),
             format!("{:>4.0}%", rate * 100.0),
             format!("{:.2}", lat.mean_us()),
             format!("{:.2}", lat.max_us()),
@@ -83,6 +81,7 @@ fn main() {
         ]);
         levels.push(
             Json::obj()
+                .set("mode", mode)
                 .set("input_rate", rate)
                 .set("us_per_push_mean", lat.mean_us())
                 .set("us_per_push_max", lat.max_us())
@@ -90,6 +89,83 @@ fn main() {
                 .set("pushes", pushes),
         );
     }
+    levels
+}
+
+fn main() {
+    let args = Args::from_env();
+    let samples = args.usize("samples", 5);
+    let timesteps = args.usize("timesteps", 100);
+    let seed = args.u64("seed", 42);
+
+    let w = Shd { dendrites: true };
+    let build = |x: ExecOptions| w.taibai(seed).exec(x).build();
+    let mut session = build(ExecOptions::default()).expect("compiling the SHD workload");
+    println!(
+        "SHD streaming deployment: {} cores; {samples} streams x {timesteps} pushes per level\n",
+        session.info().used_cores
+    );
+
+    let mut t = Table::new(&[
+        "mode",
+        "input rate",
+        "µs/push mean",
+        "µs/push max",
+        "spikes/push",
+        "pushes",
+    ]);
+    // wake-set baseline (the historical top-level "levels" JSON block)
+    let levels = measure_levels("wake-set", &mut session, samples, timesteps, seed, &mut t);
+    let mut modes = Vec::new();
+
+    // statically scheduled single die (ROADMAP static-schedule rung)
+    let mut scheduled = build(ExecOptions {
+        schedule: true,
+        ..ExecOptions::default()
+    })
+    .expect("compiling the scheduled SHD deployment");
+    let sched_levels =
+        measure_levels("scheduled", &mut scheduled, samples, timesteps, seed, &mut t);
+    let sched_visits = scheduled.telemetry().sched;
+    assert!(
+        sched_visits.static_cc_visits > 0,
+        "scheduled mode never used its visit program"
+    );
+    modes.push(
+        Json::obj()
+            .set("mode", "scheduled")
+            .set("static_cc_visits", sched_visits.static_cc_visits)
+            .set("levels", Json::Arr(sched_levels)),
+    );
+
+    // pipelined 2-die shard, per-die visit programs, streaming pushes
+    let mut piped = build(ExecOptions {
+        backend: Backend::Sharded { chips: 2 },
+        schedule: true,
+        sa_iters: 0,
+        pipeline_depth: 2,
+        ..ExecOptions::default()
+    })
+    .expect("compiling the pipelined SHD shard");
+    let piped_levels =
+        measure_levels("pipelined", &mut piped, samples, timesteps, seed, &mut t);
+    let piped_tele = piped.telemetry();
+    assert!(
+        piped_tele.sched.static_cc_visits > 0,
+        "pipelined stepper never used its per-die visit programs"
+    );
+    assert!(
+        piped_tele.pipeline.is_some(),
+        "pipelined mode must expose PipelineStats"
+    );
+    modes.push(
+        Json::obj()
+            .set("mode", "pipelined")
+            .set("dies", 2)
+            .set("depth", 2)
+            .set("static_cc_visits", piped_tele.sched.static_cc_visits)
+            .set("levels", Json::Arr(piped_levels)),
+    );
     t.print();
 
     if let Some(path) = args.get("json") {
@@ -99,7 +175,8 @@ fn main() {
             .set("timesteps", timesteps)
             .set("seed", seed)
             .set("used_cores", session.info().used_cores)
-            .set("levels", Json::Arr(levels));
+            .set("levels", Json::Arr(levels))
+            .set("modes", Json::Arr(modes));
         std::fs::write(path, doc.render() + "\n").expect("writing perf JSON");
         println!("\nperf JSON written to {path}");
     }

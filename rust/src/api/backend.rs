@@ -22,7 +22,9 @@ use std::sync::Arc;
 use crate::chip::fast::{simulate, FastParams, FastReport};
 use crate::chip::{ChipActivity, SchedStats};
 use crate::compiler::{Compiled, ShardedCompiled};
-use crate::coordinator::{Deployment, MultiChipDeployment, SampleRun, StepEvents};
+use crate::coordinator::{
+    Deployment, MultiChipDeployment, PipelineStats, SampleRun, StepEvents,
+};
 use crate::energy::{EnergyModel, CLOCK_HZ};
 use crate::model::{Layer, NetDef};
 
@@ -115,6 +117,18 @@ pub trait ExecBackend: Send {
     /// the engine has no event scheduler (analytic mode).
     fn sched_stats(&self) -> SchedStats {
         SchedStats::default()
+    }
+
+    /// Run-ahead depth and lag histogram of a pipelined multi-die
+    /// deployment; `None` everywhere else.
+    fn pipeline_stats(&self) -> Option<PipelineStats> {
+        None
+    }
+
+    /// Activity split per die; single-die and analytic engines report
+    /// one entry (their aggregate).
+    fn activity_per_chip(&self) -> Vec<ChipActivity> {
+        vec![self.activity()]
     }
 
     fn kind(&self) -> Backend;
@@ -267,6 +281,8 @@ pub struct MultiChipBackend {
     em: EnergyModel,
     /// SNN timesteps per sample (same role as on the single-die backend).
     timesteps: usize,
+    /// Run-ahead bound; 0 selects the sequential reference stepper.
+    depth: usize,
 }
 
 impl MultiChipBackend {
@@ -274,11 +290,19 @@ impl MultiChipBackend {
         compiled: Arc<ShardedCompiled>,
         em: EnergyModel,
         timesteps: usize,
+        depth: usize,
     ) -> Result<MultiChipBackend, RunError> {
+        let dep = if depth == 0 {
+            MultiChipDeployment::new(compiled)
+        } else {
+            MultiChipDeployment::pipelined(compiled, depth)
+        }
+        .map_err(RunError::Trap)?;
         Ok(MultiChipBackend {
-            dep: MultiChipDeployment::new(compiled).map_err(RunError::Trap)?,
+            dep,
             em,
             timesteps,
+            depth,
         })
     }
 
@@ -329,11 +353,28 @@ impl ExecBackend for MultiChipBackend {
         self.dep.activity()
     }
 
+    /// Whole-sample runs go through the deployment's own sample loop so
+    /// a pipelined fleet stages every timestep up front and runs ahead
+    /// to the depth bound; per-push streaming (`step`) still drains to
+    /// the barrier. Both paths are bit-identical by the bridge's
+    /// step-indexed fusion, so the streaming==batch invariant holds.
+    fn run(&mut self, sample: &Sample) -> Result<SampleRun, RunError> {
+        self.begin()?;
+        let run = match sample {
+            Sample::Spikes(s) => self.dep.run_spikes(s),
+            Sample::Dense(d) => self.dep.run_values(d),
+        }
+        .map_err(RunError::Trap)?;
+        self.finish()?;
+        Ok(run)
+    }
+
     fn fork(&self) -> Result<Box<dyn ExecBackend>, RunError> {
         Ok(Box::new(MultiChipBackend::new(
             self.dep.compiled.clone(),
             self.em,
             self.timesteps,
+            self.depth,
         )?))
     }
 
@@ -370,21 +411,19 @@ impl ExecBackend for MultiChipBackend {
     }
 
     fn bridge_traffic(&self) -> Option<Vec<Vec<u64>>> {
-        Some(self.dep.bridge_traffic().to_vec())
+        Some(self.dep.bridge_traffic())
     }
 
     fn sched_stats(&self) -> SchedStats {
-        // visits sum across dies; `steps` is the lockstep step count
-        // (every die steps every timestep), not the per-die sum
-        let mut s = SchedStats::default();
-        for chip in &self.dep.chips {
-            s.integ_cc_visits += chip.sched.integ_cc_visits;
-            s.fire_cc_visits += chip.sched.fire_cc_visits;
-            s.delay_cc_visits += chip.sched.delay_cc_visits;
-            s.static_cc_visits += chip.sched.static_cc_visits;
-            s.steps = s.steps.max(chip.sched.steps);
-        }
-        s
+        self.dep.sched_stats()
+    }
+
+    fn pipeline_stats(&self) -> Option<PipelineStats> {
+        self.dep.pipeline_stats()
+    }
+
+    fn activity_per_chip(&self) -> Vec<ChipActivity> {
+        self.dep.activity_per_chip()
     }
 
     fn kind(&self) -> Backend {

@@ -22,15 +22,13 @@
 //! serving story).
 //!
 //! ```no_run
-//! use taibai::api::{Backend, Sample, StepEvents, Taibai};
-//! use taibai::compiler::Objective;
+//! use taibai::api::{Backend, ExecOptions, Sample, StepEvents, Taibai};
 //! use taibai::model;
 //!
 //! let mut session = Taibai::new(model::srnn_ecg(true))
 //!     .weights(taibai::api::workloads::ecg_weights(true, 42))
 //!     .rates(vec![0.33, 0.2, 0.1])
-//!     .objective(Objective::MinCores)
-//!     .backend(Backend::Detailed)
+//!     .exec(ExecOptions { backend: Backend::Detailed, ..ExecOptions::default() })
 //!     .build()
 //!     .expect("compile");
 //!
@@ -47,7 +45,7 @@
 //! println!("{} steps, mean push {:.1} µs", report.steps, report.latency.mean_us());
 //! ```
 //!
-//! The same builder with `.backend(Backend::Analytic)` yields a session
+//! The same builder with `Backend::Analytic` yields a session
 //! whose `run` computes the identical activity counters analytically
 //! (for the 10⁵-neuron Table II nets the detailed engine cannot
 //! interpret event-by-event), feeding the same [`EnergyModel`].
@@ -58,7 +56,7 @@ pub mod workloads;
 
 use std::sync::Arc;
 
-use crate::chip::fast::{simulate, FastParams};
+use crate::chip::fast::simulate;
 use crate::chip::{ChipActivity, SchedStats};
 use crate::compiler::{self, Options};
 use crate::datasets::{DenseSample, SpikeSample};
@@ -68,8 +66,9 @@ use crate::model::NetDef;
 use crate::nc::Trap;
 use crate::util::Rng;
 
+pub use crate::chip::fast::FastParams;
 pub use crate::compiler::{CompileError, Objective, ShardStrategy};
-pub use crate::coordinator::{SampleRun, StepEvents, StepRow};
+pub use crate::coordinator::{PipelineStats, SampleRun, StepEvents, StepMode, StepRow};
 pub use backend::{
     AnalyticBackend, DetailedBackend, ExecBackend, MultiChipBackend, StepOutput,
 };
@@ -304,6 +303,30 @@ pub struct SessionMetrics {
     pub serdes_energy_j: f64,
 }
 
+/// One observability snapshot from [`Session::telemetry`]: the union of
+/// the formerly scattered getters (`activity`, `bridge_traffic`,
+/// `sched_stats`, `metrics`) plus the pipelined-stepper lag histogram,
+/// all sampled at the same instant so the numbers reconcile.
+#[derive(Clone, Debug)]
+pub struct Telemetry {
+    /// Fleet-wide activity counters (batch clones folded in, like
+    /// [`Session::activity`]).
+    pub activity: ChipActivity,
+    /// Per-die activity of a sharded deployment (one entry on
+    /// single-die and analytic backends).
+    pub per_die: Vec<ChipActivity>,
+    /// Cumulative `[src][dst]` remote-packet matrix (`None` off the
+    /// sharded backend).
+    pub bridge: Option<Vec<Vec<u64>>>,
+    /// Wake-set scheduler counters, summed across dies.
+    pub sched: SchedStats,
+    /// Pipelined-stepper depth and lag histogram (`None` when running
+    /// the sequential reference stepper or a non-sharded backend).
+    pub pipeline: Option<PipelineStats>,
+    /// Throughput / power / efficiency derived from `activity`.
+    pub metrics: SessionMetrics,
+}
+
 /// Per-push wall-clock latency counters of one stream.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LatencyStats {
@@ -378,8 +401,77 @@ struct StreamState {
     lat: LatencyStats,
 }
 
-/// Builder for a [`Session`]: collect the network, weights, compiler
-/// options, and backend choice, then `build()` once.
+/// Typed execution options: every engine/compile knob in one struct,
+/// applied with [`Taibai::exec`] in a single call instead of a chain of
+/// per-knob builder methods. Model-level knobs (weights, rates,
+/// learning, seed, energy model) stay on the builder — `ExecOptions`
+/// describes *how* to compile and run, not *what*.
+///
+/// ```no_run
+/// use taibai::api::{Backend, ExecOptions, ShardStrategy, Workload};
+/// use taibai::api::workloads::Shd;
+/// let session = Shd { dendrites: true }
+///     .taibai(42)
+///     .exec(ExecOptions {
+///         backend: Backend::Sharded { chips: 4 },
+///         strategy: ShardStrategy::MinCut,
+///         pipeline_depth: 2,
+///         ..ExecOptions::default()
+///     })
+///     .build()
+///     .expect("compile");
+/// ```
+#[derive(Clone, Debug)]
+pub struct ExecOptions {
+    /// Execution engine (detailed / sharded / analytic).
+    pub backend: Backend,
+    /// Placement objective (the Fig 13e cores-vs-throughput knob).
+    pub objective: Objective,
+    /// Core→die assignment of sharded builds.
+    pub strategy: ShardStrategy,
+    /// SA cost per die crossed in the multi-die placement objective.
+    pub serdes_cost: f64,
+    /// Simulated-annealing iterations for placement (0 = zigzag only).
+    pub sa_iters: usize,
+    /// Resource optimizer (core merging) on/off.
+    pub merge: bool,
+    /// Static image verifier on every compiled artifact (defaults on in
+    /// debug/test builds).
+    pub verify: bool,
+    /// Compile a static visit program so deployed chips run the
+    /// statically-scheduled step engine.
+    pub schedule: bool,
+    /// Multi-die run-ahead bound: each die may advance this many steps
+    /// past the slowest peer. `0` selects the sequential reference
+    /// stepper; `1` is parallel lockstep. Results are bit-identical at
+    /// every depth. Ignored by single-die and analytic backends.
+    pub pipeline_depth: usize,
+    /// Analytic-backend parameters (capacities, avg hops, default
+    /// rate). An empty `firing_rates` here preserves rates set via
+    /// [`Taibai::rates`].
+    pub fast: FastParams,
+}
+
+impl Default for ExecOptions {
+    fn default() -> ExecOptions {
+        let o = Options::default();
+        ExecOptions {
+            backend: Backend::Detailed,
+            objective: o.objective,
+            strategy: o.strategy,
+            serdes_cost: o.serdes_cost,
+            sa_iters: o.sa_iters,
+            merge: o.merge,
+            verify: o.verify,
+            schedule: o.schedule,
+            pipeline_depth: 0,
+            fast: FastParams::default(),
+        }
+    }
+}
+
+/// Builder for a [`Session`]: collect the network, weights, execution
+/// options ([`Taibai::exec`]), then `build()` once.
 ///
 /// Defaults: `Backend::Detailed`, `Objective::MinCores`, learning off,
 /// default [`EnergyModel`] and [`FastParams`].
@@ -390,6 +482,7 @@ pub struct Taibai {
     backend: Backend,
     em: EnergyModel,
     fast: FastParams,
+    pipeline_depth: usize,
 }
 
 impl Taibai {
@@ -401,7 +494,33 @@ impl Taibai {
             backend: Backend::Detailed,
             em: EnergyModel::default(),
             fast: FastParams::default(),
+            pipeline_depth: 0,
         }
+    }
+
+    /// Apply a whole [`ExecOptions`] in one call — the consolidated
+    /// entry point the per-knob setters below are deprecated in favor
+    /// of. Overwrites every knob `ExecOptions` carries; model-level
+    /// state ([`Taibai::weights`], [`Taibai::rates`],
+    /// [`Taibai::learning`], [`Taibai::seed`], [`Taibai::energy_model`])
+    /// is untouched, and rates set before or after survive (an empty
+    /// `fast.firing_rates` keeps the mirror).
+    pub fn exec(mut self, x: ExecOptions) -> Taibai {
+        self.opts.objective = x.objective;
+        self.opts.strategy = x.strategy;
+        self.opts.serdes_cost = x.serdes_cost;
+        self.opts.sa_iters = x.sa_iters;
+        self.opts.merge = x.merge;
+        self.opts.verify = x.verify;
+        self.opts.schedule = x.schedule;
+        self.backend = x.backend;
+        self.pipeline_depth = x.pipeline_depth;
+        let rates = std::mem::take(&mut self.fast.firing_rates);
+        self.fast = x.fast;
+        if self.fast.firing_rates.is_empty() {
+            self.fast.firing_rates = rates;
+        }
+        self
     }
 
     /// Per-layer weight blobs (entry 0, the input layer, stays empty).
@@ -411,6 +530,7 @@ impl Taibai {
     }
 
     /// Placement objective (the Fig 13e cores-vs-throughput knob).
+    #[deprecated(note = "use Taibai::exec(ExecOptions { objective, .. })")]
     pub fn objective(mut self, o: Objective) -> Taibai {
         self.opts.objective = o;
         self
@@ -419,6 +539,7 @@ impl Taibai {
     /// Core→die assignment of sharded builds
     /// ([`ShardStrategy::MinCut`] by default; `Contiguous` restores the
     /// PR 3 baseline split for regression comparisons).
+    #[deprecated(note = "use Taibai::exec(ExecOptions { strategy, .. })")]
     pub fn shard_strategy(mut self, s: ShardStrategy) -> Taibai {
         self.opts.strategy = s;
         self
@@ -426,11 +547,13 @@ impl Taibai {
 
     /// SA cost per die crossed in the multi-die placement objective
     /// (the SerDes-crossing weight; ≫ any on-die hop distance).
+    #[deprecated(note = "use Taibai::exec(ExecOptions { serdes_cost, .. })")]
     pub fn serdes_cost(mut self, c: f64) -> Taibai {
         self.opts.serdes_cost = c;
         self
     }
 
+    #[deprecated(note = "use Taibai::exec(ExecOptions { backend, .. })")]
     pub fn backend(mut self, b: Backend) -> Taibai {
         self.backend = b;
         self
@@ -456,12 +579,14 @@ impl Taibai {
     }
 
     /// Simulated-annealing iterations for placement (0 = zigzag only).
+    #[deprecated(note = "use Taibai::exec(ExecOptions { sa_iters, .. })")]
     pub fn sa_iters(mut self, n: usize) -> Taibai {
         self.opts.sa_iters = n;
         self
     }
 
     /// Enable/disable the resource optimizer (core merging).
+    #[deprecated(note = "use Taibai::exec(ExecOptions { merge, .. })")]
     pub fn merge(mut self, on: bool) -> Taibai {
         self.opts.merge = on;
         self
@@ -470,6 +595,7 @@ impl Taibai {
     /// Run the static image verifier ([`crate::compiler::verify`]) on
     /// every compiled artifact before deployment (on by default in
     /// debug/test builds; enable for release-mode belt-and-braces).
+    #[deprecated(note = "use Taibai::exec(ExecOptions { verify, .. })")]
     pub fn verify(mut self, on: bool) -> Taibai {
         self.opts.verify = on;
         self
@@ -481,6 +607,7 @@ impl Taibai {
     /// recurrent/delayed-skip/learning regions fall back to the wake
     /// set. Bit-identical to the default engine; wins on
     /// feed-forward-dominated nets with non-trivial activity.
+    #[deprecated(note = "use Taibai::exec(ExecOptions { schedule, .. })")]
     pub fn schedule(mut self, on: bool) -> Taibai {
         self.opts.schedule = on;
         self
@@ -496,6 +623,7 @@ impl Taibai {
     /// setters touch; like [`Taibai::rates`], the option's `rates` are
     /// mirrored into the analytic backend's firing rates so both
     /// engines see the same estimates.
+    #[deprecated(note = "use Taibai::exec(ExecOptions { options, .. })")]
     pub fn options(mut self, o: Options) -> Taibai {
         self.fast.firing_rates = o.rates.clone();
         self.opts = o;
@@ -505,6 +633,7 @@ impl Taibai {
     /// Analytic-backend parameters override (capacities, avg hops).
     /// Call before [`Taibai::rates`] if you set both — the later call
     /// wins for `firing_rates`.
+    #[deprecated(note = "use Taibai::exec(ExecOptions { fast, .. })")]
     pub fn fast_params(mut self, p: FastParams) -> Taibai {
         self.fast = p;
         self
@@ -512,6 +641,7 @@ impl Taibai {
 
     /// Fallback firing rate for layers without an explicit entry
     /// (analytic backend only).
+    #[deprecated(note = "use Taibai::exec(ExecOptions { fast.default_rate, .. })")]
     pub fn default_rate(mut self, r: f64) -> Taibai {
         self.fast.default_rate = r;
         self
@@ -530,6 +660,7 @@ impl Taibai {
             backend,
             em,
             fast,
+            pipeline_depth,
         } = self;
         match backend {
             Backend::Detailed => {
@@ -552,12 +683,14 @@ impl Taibai {
                     }
                     // capacity exceeded → shard across just enough dies
                     Err(CompileError::TooManyCores { .. }) => {
-                        build_sharded(net, weights, opts, em, 0)
+                        build_sharded(net, weights, opts, em, 0, pipeline_depth)
                     }
                     Err(e) => Err(e),
                 }
             }
-            Backend::Sharded { chips } => build_sharded(net, weights, opts, em, chips),
+            Backend::Sharded { chips } => {
+                build_sharded(net, weights, opts, em, chips, pipeline_depth)
+            }
             Backend::Analytic => {
                 // probe once for the deployment geometry (pure function)
                 let probe = simulate(&net, &fast, &em);
@@ -578,14 +711,17 @@ impl Taibai {
     }
 }
 
-/// Compile across multiple dies and deploy a lockstep multi-chip
-/// session ([`Backend::Sharded`] and the `Detailed` capacity fallback).
+/// Compile across multiple dies and deploy a multi-chip session
+/// ([`Backend::Sharded`] and the `Detailed` capacity fallback).
+/// `pipeline_depth = 0` deploys the sequential reference stepper; any
+/// other value the pipelined run-ahead engine at that depth.
 fn build_sharded(
     net: NetDef,
     weights: Vec<Vec<f32>>,
     opts: Options,
     em: EnergyModel,
     chips: usize,
+    pipeline_depth: usize,
 ) -> Result<Session, CompileError> {
     let report = compiler::compile_sharded(&net, &weights, &opts, chips)?;
     let sharded = Arc::new(report.sharded);
@@ -601,7 +737,7 @@ fn build_sharded(
         init_packets: sharded.init_packets,
     };
     let timesteps = net.timesteps;
-    let be = MultiChipBackend::new(sharded, em, timesteps)
+    let be = MultiChipBackend::new(sharded, em, timesteps, pipeline_depth)
         .map_err(|e| CompileError::Deploy { msg: e.to_string() })?;
     Ok(Session::over(net, opts.learning, info, Box::new(be)))
 }
@@ -922,16 +1058,36 @@ impl Session {
         a
     }
 
+    /// One observability snapshot: everything the scattered getters
+    /// used to return, taken at the same instant. Preferred over
+    /// calling [`Session::activity`], the deprecated
+    /// [`Session::bridge_traffic`] / [`Session::sched_stats`], and
+    /// [`Session::metrics`] piecemeal.
+    pub fn telemetry(&self) -> Telemetry {
+        let activity = self.activity();
+        let metrics = self.backend.metrics(&activity, self.samples_run);
+        Telemetry {
+            per_die: self.backend.activity_per_chip(),
+            bridge: self.backend.bridge_traffic(),
+            sched: self.backend.sched_stats(),
+            pipeline: self.backend.pipeline_stats(),
+            activity,
+            metrics,
+        }
+    }
+
     /// Cumulative per-edge bridge traffic of a sharded deployment
     /// (`[src][dst]` remote packets; `None` on single-die and analytic
     /// backends). The total equals
     /// [`ChipActivity::remote_packets`] of the primary deployment.
+    #[deprecated(note = "use Session::telemetry().bridge")]
     pub fn bridge_traffic(&self) -> Option<Vec<Vec<u64>>> {
         self.backend.bridge_traffic()
     }
 
     /// Wake-set scheduler counters (CC visits per phase, summed across
     /// dies; zeros on the analytic backend).
+    #[deprecated(note = "use Session::telemetry().sched")]
     pub fn sched_stats(&self) -> SchedStats {
         self.backend.sched_stats()
     }
@@ -1206,7 +1362,10 @@ mod tests {
     fn analytic_backend_runs_without_weights() {
         let (net, _) = tiny_net();
         let mut s = Taibai::new(net)
-            .backend(Backend::Analytic)
+            .exec(ExecOptions {
+                backend: Backend::Analytic,
+                ..ExecOptions::default()
+            })
             .build()
             .unwrap();
         let sample = Sample::poisson(4, 6, 0.5, 3);
@@ -1215,6 +1374,56 @@ mod tests {
         let m = s.metrics();
         assert!(m.sops > 0, "analytic run must count SOPs");
         assert!(m.fps > 0.0);
+    }
+
+    /// The deprecated per-knob setters must keep routing through the
+    /// same state `exec()` writes, so migrating call sites is purely
+    /// mechanical.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_knob_shims_match_exec() {
+        let (net, w) = tiny_net();
+        let shimmed = Taibai::new(net.clone())
+            .weights(w.clone())
+            .objective(Objective::MaxThroughput)
+            .sa_iters(0)
+            .merge(false)
+            .backend(Backend::Detailed)
+            .build()
+            .unwrap();
+        let execed = Taibai::new(net)
+            .weights(w)
+            .exec(ExecOptions {
+                backend: Backend::Detailed,
+                objective: Objective::MaxThroughput,
+                sa_iters: 0,
+                merge: false,
+                ..ExecOptions::default()
+            })
+            .build()
+            .unwrap();
+        assert_eq!(shimmed.info().used_cores, execed.info().used_cores);
+        assert_eq!(shimmed.info().avg_hops, execed.info().avg_hops);
+    }
+
+    /// `telemetry()` is one coherent snapshot of the formerly scattered
+    /// getters.
+    #[test]
+    fn telemetry_snapshot_reconciles_with_getters() {
+        let (net, w) = tiny_net();
+        let mut s = Taibai::new(net).weights(w).build().unwrap();
+        let sample = Sample::Spikes(SpikeSample {
+            spikes: vec![vec![0u16]; 6],
+            labels: vec![0],
+        });
+        s.run(&sample).unwrap();
+        let t = s.telemetry();
+        assert_eq!(t.activity.nc.sops, s.activity().nc.sops);
+        assert_eq!(t.metrics.samples, s.metrics().samples);
+        assert_eq!(t.per_die.len(), 1, "single-die: one activity entry");
+        assert!(t.bridge.is_none(), "single-die: no bridge matrix");
+        assert!(t.pipeline.is_none(), "sequential: no pipeline stats");
+        assert!(t.sched.steps > 0, "scheduler counters populated");
     }
 
     #[test]

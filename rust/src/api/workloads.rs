@@ -15,7 +15,7 @@ use crate::model::{self, NetDef};
 use crate::runtime::artifacts::{artifacts_dir, read_weights};
 use crate::util::Rng;
 
-use super::{Backend, CompileError, RunError, Sample, SampleRun, Session, Taibai};
+use super::{Backend, CompileError, ExecOptions, RunError, Sample, SampleRun, Session, Taibai};
 
 /// A complete application: everything a [`Session`] needs plus the
 /// dataset and the decode (output → prediction) logic.
@@ -55,7 +55,12 @@ pub trait Workload {
 
     /// Build a [`Session`] for this workload on the chosen backend.
     fn session(&self, backend: Backend, seed: u64) -> Result<Session, CompileError> {
-        self.taibai(seed).backend(backend).build()
+        self.taibai(seed)
+            .exec(ExecOptions {
+                backend,
+                ..ExecOptions::default()
+            })
+            .build()
     }
 }
 

@@ -78,7 +78,22 @@ pub struct StepResult {
     /// is another die. They are *not* delivered locally; the host bridge
     /// must inject them into the destination chip's next step (multi-chip
     /// deployments). Always empty on single-die images.
-    pub egress: Vec<Packet>,
+    pub egress: Vec<EgressPacket>,
+}
+
+/// One cross-die packet leaving the chip, tagged with the absolute
+/// timestep it left on. FIRE-minted packets carry the step that minted
+/// them; a delayed skip spike carries its *release* step (the delay line
+/// holds it on the source die and it egresses only when due), so the
+/// host bridge can order delayed remote spikes against undelayed ones
+/// without knowing anything about delays — delivery is always
+/// `release_step + 1`, exactly the single-die timing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EgressPacket {
+    /// Absolute chip timestep ([`Chip::timestep`]) the packet egressed
+    /// on.
+    pub release_step: u64,
+    pub packet: Packet,
 }
 
 impl StepResult {
@@ -520,9 +535,13 @@ impl Chip {
         {
             let egress = &mut res.egress;
             let before = egress.len();
+            let now = self.timestep;
             self.pending.retain(|m| {
                 if matches!(m.packet.mode, RouteMode::Remote { .. }) {
-                    egress.push(m.packet);
+                    egress.push(EgressPacket {
+                        release_step: now,
+                        packet: m.packet,
+                    });
                     false
                 } else {
                     true

@@ -832,20 +832,17 @@ impl<'a> Builder<'a> {
                     // the fan-out DT). The scheduler holds the spike in
                     // the minting CC's delay line for `delay` boundary
                     // ticks, so it lands together with the direct path
-                    // through the intermediate layers.
+                    // through the intermediate layers. Delayed releases
+                    // work across dies too: the delay line holds the
+                    // spike on the *source* die and it egresses on its
+                    // release step tagged with it, so the bridge
+                    // delivers it one step later — exactly the on-die
+                    // timing (this lifted the old CrossDieDelay
+                    // refusal).
                     for skip in self.net.skips.iter().filter(|s| s.from == li) {
                         let delay = skip.delay();
                         for (dcc, _) in self.layer_ccs[skip.to].clone() {
                             let mode = route_between(cc, dcc);
-                            if delay > 0 && matches!(mode, RouteMode::Remote { .. }) {
-                                // the bridge has no ordering rule for
-                                // delay-line releases across dies
-                                return Err(CompileError::CrossDieDelay {
-                                    from: skip.from,
-                                    to: skip.to,
-                                    delay,
-                                });
-                            }
                             let index = *self.dt_base.get(&(skip.to, dcc)).ok_or(
                                 CompileError::MissingDtBase {
                                     layer: skip.to,

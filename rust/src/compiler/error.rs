@@ -48,16 +48,6 @@ pub enum CompileError {
         to: usize,
         msg: String,
     },
-    /// A *delayed* skip edge would cross a die boundary. The host
-    /// bridge delivers remote spikes with a fixed one-step latency and
-    /// has no ordering rule for delay-line releases (ROADMAP item), so
-    /// the sharded compiler refuses instead of silently dropping the
-    /// delay. Remedy: a cut that co-locates the skip's endpoints.
-    CrossDieDelay {
-        from: usize,
-        to: usize,
-        delay: usize,
-    },
     /// The front-end fusion pass rejected the op graph (e.g. a BatchNorm
     /// with no preceding linear op, or a malformed BN blob).
     Fusion { op: usize, msg: String },
@@ -121,12 +111,6 @@ impl std::fmt::Display for CompileError {
             CompileError::Skip { from, to, msg } => {
                 write!(f, "skip {from}->{to}: {msg}")
             }
-            CompileError::CrossDieDelay { from, to, delay } => write!(
-                f,
-                "skip {from}->{to} (delay {delay}) crosses a die boundary; the \
-                 bridge has no ordering rule for delayed remote spikes — use a \
-                 cut that co-locates both endpoints"
-            ),
             CompileError::Fusion { op, msg } => write!(f, "op {op}: {msg}"),
             CompileError::Deploy { msg } => {
                 write!(f, "deployment image rejected by the chip: {msg}")
@@ -170,14 +154,6 @@ mod tests {
             capacity: 1056,
         };
         assert!(e.to_string().contains("5000"));
-
-        let e = CompileError::CrossDieDelay {
-            from: 1,
-            to: 3,
-            delay: 1,
-        };
-        let s = e.to_string();
-        assert!(s.contains("1->3") && s.contains("die"), "{s}");
 
         let e = CompileError::Generator {
             seed: 0xabcd,

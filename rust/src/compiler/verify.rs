@@ -19,8 +19,8 @@
 //!   mapping (≥2 distinct sources on one upstream entry is the aliasing
 //!   bug, reported as [`VerifyError::SparseFanOutAliased`]);
 //! * **route soundness** — Unicast coordinates in-mesh, `Remote` die ids
-//!   within the fleet, no delayed cross-die releases (the
-//!   `CrossDieDelay` invariant re-proven on the artifact itself);
+//!   within the fleet (delayed cross-die releases are a working path:
+//!   the bridge orders them by tagged release step);
 //! * **memory/weight bounds** — every initialized region inside
 //!   `data_words`, regions non-overlapping, weight entries tiling the
 //!   layout's weight region at the per-part offsets the fan-in slots
@@ -124,9 +124,6 @@ pub enum VerifyError {
     RouteOffMesh { at: Loc, x: u8, y: u8 },
     /// A Remote route names a die outside the fleet.
     RemoteChipRange { at: Loc, chip: u8, dies: usize },
-    /// A delayed (skip) release crosses a die boundary — the bridge has
-    /// no ordering rule for it (`CompileError::CrossDieDelay`).
-    DelayedRemote { at: Loc, delay: u8 },
     /// An edge routes to a CC with no deployment image.
     DanglingRoute { at: Loc, dest: Loc },
     /// A fan-out IE's DT index is past the destination's DT.
@@ -200,10 +197,6 @@ impl fmt::Display for VerifyError {
             E::RemoteChipRange { at, chip, dies } => {
                 write!(f, "{at}: remote route targets die {chip} of a {dies}-die fleet")
             }
-            E::DelayedRemote { at, delay } => write!(
-                f,
-                "{at}: delayed release (delay {delay}) crosses a die boundary"
-            ),
             E::DanglingRoute { at, dest } => {
                 write!(f, "{at}: edge routes to {dest}, which has no deployment image")
             }
@@ -1548,9 +1541,11 @@ impl<'a> Pass<'a> {
                 (src / NUM_CCS) * NUM_CCS + cc_id(x, y)
             }
             RouteMode::Remote { chip, x, y } => {
-                if ie.delay > 0 {
-                    self.report.push(VerifyError::DelayedRemote { at, delay: ie.delay });
-                }
+                // A delayed remote release is a working path: the delay
+                // line holds the spike on the source die and the bridge
+                // orders it by its tagged release step (the old
+                // `DelayedRemote` refusal was lifted with the pipelined
+                // coordinator).
                 if chip as usize >= self.dies {
                     self.report.push(VerifyError::RemoteChipRange {
                         at,

@@ -18,26 +18,45 @@
 //! bit-identical results.
 //!
 //! [`MultiChipDeployment`] is the sharded counterpart: it owns one
-//! [`Chip`] per die of a [`ShardedCompiled`] image and advances them in
-//! lockstep one barrier-step at a time. Each step, every die (in
-//! ascending id order) drains its inbound bridge cells — packets from
-//! lower-numbered dies are delivered *before* its own pending spikes,
-//! packets from higher dies and host inputs after, reproducing the
-//! single-die ascending-source order — steps its [`Chip`], and stages the
-//! step's [`StepResult::egress`] packets (fan-out edges the compiler
-//! marked [`RouteMode::Remote`]) for the destination dies' *next* step.
-//! Because the bridge is double-buffered by step parity, a die can never
-//! observe a packet staged in the current step, so stepping the dies
-//! sequentially on the host thread is semantically identical to the
-//! barrier-synchronized thread-per-die variant this replaces — and it
-//! makes single-step streaming cheap (no per-step thread spawn). Cross-
-//! die spikes arrive with exactly the one-timestep latency of on-die NoC
-//! delivery, which is what makes a sharded run bit-identical to the same
-//! network on one (hypothetically larger) die.
+//! [`Chip`] per die of a [`ShardedCompiled`] image and advances them
+//! behind a [`StepMode`] seam with two engines:
+//!
+//! * [`StepMode::Sequential`] — one barrier step at a time on the host
+//!   thread, dies in ascending id order. Each step, every die drains its
+//!   inbound bridge cells — packets from lower-numbered dies are
+//!   delivered *before* its own pending spikes, packets from higher dies
+//!   and host inputs after, reproducing the single-die ascending-source
+//!   order — steps its [`Chip`], and stages the step's
+//!   [`StepResult::egress`] packets (fan-out edges the compiler marked
+//!   [`RouteMode::Remote`]) for the destination dies' *next* step.
+//!   Because the bridge is double-buffered by step parity, a die can
+//!   never observe a packet staged in the current step, which makes the
+//!   sequential per-die loop the trustworthy parity reference.
+//!
+//! * [`StepMode::Pipelined`] — one worker thread per die with bounded
+//!   run-ahead: a die may advance up to `depth` steps past the slowest
+//!   peer's completed work. Egress is staged into per-edge step-indexed
+//!   FIFOs (one entry per source step, tagged with the absolute
+//!   [`crate::chip::EgressPacket::release_step`]), and fusion happens at
+//!   the lag boundary: die `i`'s step `t` consumes exactly the step
+//!   `t-1` entry of every inbound edge, split around its own pending
+//!   spikes in the same ascending-source order. Delivery order is
+//!   therefore bit-identical to the sequential stepper at every depth —
+//!   including delayed cross-die skip spikes, which egress on their
+//!   *release* step and land one step later, exactly the single-die
+//!   timing (this is what lifted `CompileError::CrossDieDelay`).
+//!
+//! Cross-die spikes arrive with exactly the one-timestep latency of
+//! on-die NoC delivery in both modes, which is what makes a sharded run
+//! bit-identical to the same network on one (hypothetically larger) die.
 
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread;
 
-use crate::chip::{config::ChipConfig, Chip, ChipActivity, StepResult, StepSchedule};
+use crate::chip::{
+    config::ChipConfig, Chip, ChipActivity, SchedStats, StepResult, StepSchedule,
+};
 use crate::compiler::shard::ShardedCompiled;
 use crate::compiler::Compiled;
 use crate::datasets::{DenseSample, SpikeSample};
@@ -336,24 +355,257 @@ fn host_trap(msg: impl Into<String>) -> Trap {
     }
 }
 
-/// N dies of one sharded model, stepped in lockstep one step at a time.
+/// How a [`MultiChipDeployment`] advances its dies — the multi-die
+/// counterpart of the chip's `scan_all` seam: one reference mode whose
+/// simplicity makes it trustworthy, one fast mode pinned bit-identical
+/// against it by the parity tests and the differential fuzzer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepMode {
+    /// One barrier step at a time on the host thread, dies in ascending
+    /// order — the parity reference and fallback.
+    Sequential,
+    /// Per-die worker threads with bounded run-ahead: each die may
+    /// advance up to `depth` steps past the slowest peer's completed
+    /// work. `depth = 1` is parallel lockstep; results are bit-identical
+    /// to [`StepMode::Sequential`] at every depth.
+    Pipelined { depth: usize },
+}
+
+/// Run-ahead observability for a pipelined deployment.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// Configured run-ahead bound.
+    pub depth: usize,
+    /// `lag_histogram[k]` counts die-steps claimed `k` steps ahead of
+    /// the slowest die's completed work (`k < depth` by construction).
+    /// A push-per-step streaming workload sits entirely at `k = 0`;
+    /// whole-sample runs spread toward `depth - 1` as faster dies run
+    /// ahead of the straggler.
+    pub lag_histogram: Vec<u64>,
+}
+
+/// One die's uncollected step result in pipelined mode; the host fuses
+/// one `StepPart` per die per step into a [`StepRow`].
+struct StepPart {
+    /// Sparse readout row: (output index, value).
+    row: Vec<(usize, f32)>,
+    spikes: u64,
+    packets: u64,
+}
+
+/// Pipelined-mode coordination state shared between the host and the
+/// per-die workers behind one mutex. Every field is only touched in
+/// short critical sections; chip stepping happens outside the lock.
+struct PipeCoord {
+    /// Set once by [`MultiChipDeployment::drop`]; workers exit on sight.
+    stop: bool,
+    /// First fault of the epoch. Workers park on it and the host
+    /// surfaces it from every entry point until `reset_state`.
+    error: Option<Trap>,
+    /// Steps the host has staged input for this epoch.
+    target: u64,
+    /// Steps each die has completed this epoch.
+    completed: Vec<u64>,
+    /// Dies currently inside `step_ext` (quiescing waits these out).
+    running: Vec<bool>,
+    /// Staged host inputs: one entry per not-yet-claimed step per die.
+    inputs: Vec<VecDeque<Vec<Packet>>>,
+    /// `fifos[dst][src]`: one `(absolute release step, packets)` entry
+    /// per completed `src` step, consumed by `dst` exactly one entry per
+    /// step — the step-indexed egress staging that replaces the
+    /// sequential bridge's parity double-buffer.
+    fifos: Vec<Vec<VecDeque<(u64, Vec<Packet>)>>>,
+    /// Completed-but-uncollected step results per die, oldest first.
+    parts: Vec<VecDeque<StepPart>>,
+    /// Absolute chip timestep each die was at when the epoch was armed;
+    /// bridge FIFO tags are checked against `base[src] + step`.
+    base: Vec<u64>,
+    /// Cumulative per-edge traffic, `[src][dst]` — never reset, matching
+    /// the sequential counters.
+    bridge_packets: Vec<Vec<u64>>,
+    /// See [`PipelineStats::lag_histogram`].
+    lag_histogram: Vec<u64>,
+}
+
+struct PipeShared {
+    coord: Mutex<PipeCoord>,
+    /// Workers wait here for claimable steps.
+    work: Condvar,
+    /// The host waits here for rows, drains, and quiesce.
+    done: Condvar,
+    /// Run-ahead bound (≥ 1).
+    depth: u64,
+    /// `preds[i]`: dies with a Remote edge into die `i`, ascending.
+    preds: Vec<Vec<usize>>,
+    /// `succs[i]`: dies die `i` has a Remote edge into, ascending.
+    succs: Vec<Vec<usize>>,
+}
+
+struct Pipeline {
+    shared: Arc<PipeShared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+/// Mutex lock that shrugs off poisoning: a panicking worker is a bug in
+/// its own right, but the host must still be able to read counters and
+/// reset state rather than cascade panics through the API layer.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Per-die worker: claim the next runnable step under the coord lock,
+/// step the chip outside it, book results back under the lock.
+fn worker_loop(
+    die: usize,
+    shared: Arc<PipeShared>,
+    chip: Arc<Mutex<Chip>>,
+    compiled: Arc<ShardedCompiled>,
+) {
+    let readout = &compiled.chips[die].readout;
+    let mut pre: Vec<Packet> = Vec::new();
+    let mut post: Vec<Packet> = Vec::new();
+    let mut res = StepResult::default();
+    loop {
+        let t = {
+            let mut c = lock(&shared.coord);
+            loop {
+                if c.stop {
+                    return;
+                }
+                let t = c.completed[die];
+                let low = c.completed.iter().copied().min().unwrap_or(0);
+                // Runnable iff: no pending fault, host input staged,
+                // every inbound edge has produced its step t-1 entry,
+                // and we stay within `depth` of the slowest peer.
+                let runnable = c.error.is_none()
+                    && t < c.target
+                    && !c.inputs[die].is_empty()
+                    && t < low + shared.depth
+                    && shared.preds[die].iter().all(|&s| c.completed[s] >= t);
+                if !runnable {
+                    c = shared.work.wait(c).unwrap_or_else(|e| e.into_inner());
+                    continue;
+                }
+                // Fuse at the lag boundary: step t consumes exactly the
+                // step t-1 entry of every inbound edge, split around
+                // this die's own pending spikes in ascending-source
+                // order — the single-die delivery order the sequential
+                // stepper reproduces.
+                pre.clear();
+                post.clear();
+                if t > 0 {
+                    for &s in &shared.preds[die] {
+                        let (tag, mut pkts) = c.fifos[die][s]
+                            .pop_front()
+                            .expect("bridge FIFO missing a step entry");
+                        debug_assert_eq!(
+                            tag,
+                            c.base[s] + t - 1,
+                            "die {die} step {t}: src {s} bridge entry out of order"
+                        );
+                        if s < die {
+                            pre.append(&mut pkts);
+                        } else {
+                            post.append(&mut pkts);
+                        }
+                    }
+                }
+                let mut host = c.inputs[die]
+                    .pop_front()
+                    .expect("claimed a step without staged host input");
+                post.append(&mut host);
+                let lead = (t - low) as usize;
+                if let Some(slot) = c.lag_histogram.get_mut(lead) {
+                    *slot += 1;
+                }
+                c.running[die] = true;
+                break t;
+            }
+        };
+
+        let stepped = {
+            let mut ch = lock(&chip);
+            ch.step_ext(&pre, &post, &mut res)
+        };
+
+        let mut c = lock(&shared.coord);
+        c.running[die] = false;
+        match stepped {
+            Err(trap) => {
+                if c.error.is_none() {
+                    c.error = Some(trap);
+                }
+            }
+            Ok(()) => {
+                let now = c.base[die] + t;
+                let mut row = Vec::new();
+                for h in &res.outputs {
+                    if let Some(&k) = readout.get(&(h.cc, h.nc, h.neuron)) {
+                        row.push((k, F16(h.value).to_f32()));
+                    }
+                }
+                // One FIFO entry per outbound edge per step, even when
+                // empty — successors pop exactly one entry per step, so
+                // quiet steps must still mark their slot.
+                for &dst in &shared.succs[die] {
+                    let mut pkts = Vec::new();
+                    for e in &res.egress {
+                        debug_assert_eq!(
+                            e.release_step, now,
+                            "egress must carry the step it left the die on"
+                        );
+                        if let RouteMode::Remote { chip: d, x, y } = e.packet.mode {
+                            if d as usize == dst {
+                                pkts.push(Packet {
+                                    mode: RouteMode::Unicast { x, y },
+                                    ..e.packet
+                                });
+                            }
+                        }
+                    }
+                    c.bridge_packets[die][dst] += pkts.len() as u64;
+                    c.fifos[dst][die].push_back((now, pkts));
+                }
+                c.parts[die].push_back(StepPart {
+                    row,
+                    spikes: res.spikes,
+                    packets: res.packets_routed,
+                });
+                c.completed[die] = t + 1;
+            }
+        }
+        drop(c);
+        // Both a completion and a fault can unblock peers (runnability)
+        // and the host (row collection / quiesce).
+        shared.work.notify_all();
+        shared.done.notify_all();
+    }
+}
+
+/// N dies of one sharded model, advanced behind the [`StepMode`] seam.
 ///
 /// Each [`MultiChipDeployment::step_events`] call advances every die by
-/// one timestep in ascending die order (see the module docs for why that
-/// order is unobservable), delivering inbound bridge packets in the
-/// single-die ascending-source order: lower-numbered dies before the
-/// die's own pending spikes, higher-numbered dies and host inputs after.
+/// one timestep, delivering inbound bridge packets in the single-die
+/// ascending-source order: lower-numbered dies before the die's own
+/// pending spikes, higher-numbered dies and host inputs after. In
+/// pipelined mode the per-die workers may additionally run ahead on
+/// whole-sample runs (see [`StepMode::Pipelined`]); push-per-step
+/// streaming drains to the barrier each push, as does `learn_step`.
 /// State reset, learning, and activity aggregation mirror the single-die
 /// [`Deployment`] surface so the API layer can treat both uniformly.
 pub struct MultiChipDeployment {
-    pub chips: Vec<Chip>,
+    chips: Vec<Arc<Mutex<Chip>>>,
     pub compiled: Arc<ShardedCompiled>,
+    mode: StepMode,
+    /// Lazily spawned worker fleet (pipelined mode only).
+    pipe: Option<Pipeline>,
     bridge: Bridge,
     /// Cumulative per-edge bridge traffic: `bridge_packets[src][dst]`
     /// counts the packets die `src` staged for die `dst` since
     /// deployment (the measured counterpart of the compiler's
     /// `cut_traffic` estimate and the fast backend's
-    /// [`ChipActivity::remote_packets`]).
+    /// [`ChipActivity::remote_packets`]). Sequential mode books here;
+    /// pipelined mode books into [`PipeCoord::bridge_packets`].
     bridge_packets: Vec<Vec<u64>>,
     /// Reused per-step host packet staging, one cell per die.
     host_stage: Vec<Vec<Packet>>,
@@ -361,13 +613,36 @@ pub struct MultiChipDeployment {
     /// higher dies, see [`Chip::step_ext`]).
     pre: Vec<Packet>,
     post: Vec<Packet>,
-    /// Reused per-die chip step result.
+    /// Reused per-die chip step result (sequential mode).
     step_res: StepResult,
 }
 
 impl MultiChipDeployment {
-    /// Configure one fresh chip per die (INIT stage on every die).
+    /// Configure one fresh chip per die (INIT stage on every die) and
+    /// step them with the sequential reference engine.
     pub fn new(compiled: Arc<ShardedCompiled>) -> Result<MultiChipDeployment, Trap> {
+        MultiChipDeployment::with_mode(compiled, StepMode::Sequential)
+    }
+
+    /// Like [`MultiChipDeployment::new`] but stepped by per-die worker
+    /// threads with a run-ahead bound of `depth` steps (clamped to ≥ 1).
+    pub fn pipelined(
+        compiled: Arc<ShardedCompiled>,
+        depth: usize,
+    ) -> Result<MultiChipDeployment, Trap> {
+        MultiChipDeployment::with_mode(
+            compiled,
+            StepMode::Pipelined {
+                depth: depth.max(1),
+            },
+        )
+    }
+
+    /// Configure one fresh chip per die with an explicit [`StepMode`].
+    pub fn with_mode(
+        compiled: Arc<ShardedCompiled>,
+        mode: StepMode,
+    ) -> Result<MultiChipDeployment, Trap> {
         if compiled.chips.is_empty() {
             return Err(host_trap("sharded image carries zero dies"));
         }
@@ -390,6 +665,12 @@ impl MultiChipDeployment {
                 }
             }
         }
+        let mode = match mode {
+            StepMode::Pipelined { depth } => StepMode::Pipelined {
+                depth: depth.max(1),
+            },
+            StepMode::Sequential => StepMode::Sequential,
+        };
         let mut chips = Vec::with_capacity(compiled.chips.len());
         for (die, image) in compiled.chips.iter().enumerate() {
             let mut chip = Chip::new(compiled.data_words.max(64));
@@ -397,7 +678,7 @@ impl MultiChipDeployment {
             if let Some(prog) = compiled.schedules.get(die) {
                 chip.schedule = StepSchedule::Static(Arc::new(prog.clone()));
             }
-            chips.push(chip);
+            chips.push(Arc::new(Mutex::new(chip)));
         }
         Ok(MultiChipDeployment {
             bridge: Bridge::new(chips.len()),
@@ -406,6 +687,8 @@ impl MultiChipDeployment {
             pre: Vec::new(),
             post: Vec::new(),
             step_res: StepResult::default(),
+            mode,
+            pipe: None,
             chips,
             compiled,
         })
@@ -415,18 +698,155 @@ impl MultiChipDeployment {
         self.chips.len()
     }
 
+    /// The engine this deployment was constructed with.
+    pub fn mode(&self) -> StepMode {
+        self.mode
+    }
+
     /// Cumulative per-edge bridge traffic, `[src][dst]`. The diagonal is
     /// always zero (a die never bridges to itself), and the total equals
     /// the aggregate [`ChipActivity::remote_packets`].
-    pub fn bridge_traffic(&self) -> &[Vec<u64>] {
-        &self.bridge_packets
+    pub fn bridge_traffic(&self) -> Vec<Vec<u64>> {
+        match &self.pipe {
+            Some(p) => lock(&p.shared.coord).bridge_packets.clone(),
+            None => self.bridge_packets.clone(),
+        }
+    }
+
+    /// Run-ahead depth and lag histogram; `None` on a sequential
+    /// deployment (or before the first pipelined step).
+    pub fn pipeline_stats(&self) -> Option<PipelineStats> {
+        let p = self.pipe.as_ref()?;
+        let c = lock(&p.shared.coord);
+        Some(PipelineStats {
+            depth: p.shared.depth as usize,
+            lag_histogram: c.lag_histogram.clone(),
+        })
+    }
+
+    /// Scheduler counters summed across dies; `steps` is the lockstep
+    /// step count (every die steps every timestep), not the per-die sum.
+    pub fn sched_stats(&self) -> SchedStats {
+        let mut s = SchedStats::default();
+        for chip in &self.chips {
+            let c = lock(chip);
+            s.integ_cc_visits += c.sched.integ_cc_visits;
+            s.fire_cc_visits += c.sched.fire_cc_visits;
+            s.delay_cc_visits += c.sched.delay_cc_visits;
+            s.static_cc_visits += c.sched.static_cc_visits;
+            s.steps = s.steps.max(c.sched.steps);
+        }
+        s
+    }
+
+    /// Spawn the per-die workers on first pipelined use. Predecessor /
+    /// successor edges come from the compiled images' Remote fan-out
+    /// modes, so dies with no cut edge between them never synchronize on
+    /// each other (only through the depth bound).
+    fn ensure_pipeline(&mut self) -> Result<Arc<PipeShared>, Trap> {
+        if let Some(p) = &self.pipe {
+            return Ok(p.shared.clone());
+        }
+        let n = self.chips.len();
+        let depth = match self.mode {
+            StepMode::Pipelined { depth } => depth.max(1),
+            StepMode::Sequential => {
+                return Err(host_trap("pipeline on a sequential deployment"))
+            }
+        };
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (die, image) in self.compiled.chips.iter().enumerate() {
+            let mut outs: Vec<usize> = image
+                .config
+                .ccs
+                .values()
+                .flat_map(|cc| cc.tables.fanout_it.iter())
+                .filter_map(|ie| match ie.mode {
+                    RouteMode::Remote { chip, .. } => Some(chip as usize),
+                    _ => None,
+                })
+                .filter(|&d| d != die)
+                .collect();
+            outs.sort_unstable();
+            outs.dedup();
+            for &dst in &outs {
+                preds[dst].push(die);
+            }
+            succs[die] = outs;
+        }
+        for p in &mut preds {
+            p.sort_unstable();
+        }
+        let base: Vec<u64> = self.chips.iter().map(|c| lock(c).timestep).collect();
+        let shared = Arc::new(PipeShared {
+            coord: Mutex::new(PipeCoord {
+                stop: false,
+                error: None,
+                target: 0,
+                completed: vec![0; n],
+                running: vec![false; n],
+                inputs: (0..n).map(|_| VecDeque::new()).collect(),
+                fifos: (0..n)
+                    .map(|_| (0..n).map(|_| VecDeque::new()).collect())
+                    .collect(),
+                parts: (0..n).map(|_| VecDeque::new()).collect(),
+                base,
+                bridge_packets: vec![vec![0; n]; n],
+                lag_histogram: vec![0; depth],
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            depth: depth as u64,
+            preds,
+            succs,
+        });
+        let mut workers = Vec::with_capacity(n);
+        for die in 0..n {
+            let sh = shared.clone();
+            let chip = self.chips[die].clone();
+            let compiled = self.compiled.clone();
+            match thread::Builder::new()
+                .name(format!("taibai-die{die}"))
+                .spawn(move || worker_loop(die, sh, chip, compiled))
+            {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    lock(&shared.coord).stop = true;
+                    shared.work.notify_all();
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    return Err(host_trap(format!("spawning die {die} worker: {e}")));
+                }
+            }
+        }
+        self.pipe = Some(Pipeline {
+            shared: shared.clone(),
+            workers,
+        });
+        Ok(shared)
     }
 
     /// Advance every die by one lockstep timestep with one timestep of
     /// host events, and collect the fleet's readout row — the multi-die
     /// counterpart of [`Deployment::step_events`]. Out-of-range client
-    /// events are a typed [`Trap`], never a panic.
+    /// events are a typed [`Trap`], never a panic. In pipelined mode
+    /// this drains to the barrier (the row for this step is collected
+    /// before returning), so a push-per-step stream sees lockstep
+    /// latency; whole-sample runs get real run-ahead via
+    /// [`MultiChipDeployment::run_spikes`] / `run_values`.
     pub fn step_events(&mut self, ev: StepEvents<'_>) -> Result<StepRow, Trap> {
+        self.stage_events(ev)?;
+        match self.mode {
+            StepMode::Sequential => self.step_staged(),
+            StepMode::Pipelined { .. } => self.step_pipelined(),
+        }
+    }
+
+    /// Translate one timestep of host events into per-die packet cells
+    /// (`host_stage`) without stepping anything.
+    fn stage_events(&mut self, ev: StepEvents<'_>) -> Result<(), Trap> {
         for cell in &mut self.host_stage {
             cell.clear();
         }
@@ -465,12 +885,19 @@ impl MultiChipDeployment {
                 }
             }
         }
-        self.step_staged()
+        Ok(())
     }
 
-    /// Run one spike-train sample across all dies: a loop over
-    /// [`MultiChipDeployment::step_events`].
+    /// Run one spike-train sample across all dies. Sequential mode loops
+    /// [`MultiChipDeployment::step_events`]; pipelined mode stages every
+    /// timestep's input up front so dies run ahead to the depth bound
+    /// instead of barriering on each push.
     pub fn run_spikes(&mut self, sample: &SpikeSample) -> Result<SampleRun, Trap> {
+        if let StepMode::Pipelined { .. } = self.mode {
+            return self.run_pipelined(sample.spikes.len(), |d, t| {
+                d.stage_events(StepEvents::Spikes(&sample.spikes[t]))
+            });
+        }
         let mut run = SampleRun {
             outputs: Vec::with_capacity(sample.spikes.len()),
             spikes: 0,
@@ -487,6 +914,11 @@ impl MultiChipDeployment {
 
     /// Run one dense-valued sample (FP input mode) across all dies.
     pub fn run_values(&mut self, sample: &DenseSample) -> Result<SampleRun, Trap> {
+        if let StepMode::Pipelined { .. } = self.mode {
+            return self.run_pipelined(sample.values.len(), |d, t| {
+                d.stage_events(StepEvents::Dense(&sample.values[t]))
+            });
+        }
         let mut run = SampleRun {
             outputs: Vec::with_capacity(sample.values.len()),
             spikes: 0,
@@ -499,6 +931,95 @@ impl MultiChipDeployment {
             run.outputs.push(sr.row);
         }
         Ok(run)
+    }
+
+    /// Whole-sample pipelined run: stage all `t_max` host inputs, bump
+    /// the target once, then collect rows in order while the workers run
+    /// ahead (bounded by depth).
+    fn run_pipelined(
+        &mut self,
+        t_max: usize,
+        mut stage: impl FnMut(&mut MultiChipDeployment, usize) -> Result<(), Trap>,
+    ) -> Result<SampleRun, Trap> {
+        let shared = self.ensure_pipeline()?;
+        let mut staged: Vec<Vec<Vec<Packet>>> = Vec::with_capacity(t_max);
+        for t in 0..t_max {
+            stage(self, t)?;
+            staged.push(self.host_stage.iter_mut().map(std::mem::take).collect());
+        }
+        {
+            let mut c = lock(&shared.coord);
+            if let Some(t) = &c.error {
+                return Err(t.clone());
+            }
+            for step in staged {
+                for (die, cell) in step.into_iter().enumerate() {
+                    c.inputs[die].push_back(cell);
+                }
+            }
+            c.target += t_max as u64;
+        }
+        shared.work.notify_all();
+        let mut run = SampleRun {
+            outputs: Vec::with_capacity(t_max),
+            spikes: 0,
+            packets: 0,
+        };
+        for _ in 0..t_max {
+            let sr = self.collect_row(&shared)?;
+            run.spikes += sr.spikes;
+            run.packets += sr.packets;
+            run.outputs.push(sr.row);
+        }
+        Ok(run)
+    }
+
+    /// One pipelined step at the barrier: push this step's staged host
+    /// input, then block until every die's row part for it is in.
+    fn step_pipelined(&mut self) -> Result<StepRow, Trap> {
+        let shared = self.ensure_pipeline()?;
+        {
+            let mut c = lock(&shared.coord);
+            if let Some(t) = &c.error {
+                return Err(t.clone());
+            }
+            for (die, cell) in self.host_stage.iter_mut().enumerate() {
+                c.inputs[die].push_back(std::mem::take(cell));
+            }
+            c.target += 1;
+        }
+        shared.work.notify_all();
+        self.collect_row(&shared)
+    }
+
+    /// Fuse the oldest uncollected step across all dies into one
+    /// [`StepRow`]. Parts are checked before the error so rows the
+    /// workers already completed still come back in order even when a
+    /// later run-ahead step has faulted.
+    fn collect_row(&self, shared: &PipeShared) -> Result<StepRow, Trap> {
+        let mut c = lock(&shared.coord);
+        loop {
+            if c.parts.iter().all(|q| !q.is_empty()) {
+                let mut out = StepRow {
+                    row: vec![0.0f32; self.compiled.n_outputs],
+                    spikes: 0,
+                    packets: 0,
+                };
+                for q in c.parts.iter_mut() {
+                    let p = q.pop_front().expect("checked non-empty");
+                    for (k, v) in p.row {
+                        out.row[k] = v;
+                    }
+                    out.spikes += p.spikes;
+                    out.packets += p.packets;
+                }
+                return Ok(out);
+            }
+            if let Some(t) = &c.error {
+                return Err(t.clone());
+            }
+            c = shared.done.wait(c).unwrap_or_else(|e| e.into_inner());
+        }
     }
 
     /// Inject per-output errors on the head die(s) and run one lockstep
@@ -515,15 +1036,61 @@ impl MultiChipDeployment {
             p.payload = F16::from_f32(e).0;
             self.host_stage[chip].push(p);
         }
-        self.step_staged()?;
+        match self.mode {
+            StepMode::Sequential => self.step_staged()?,
+            // The learning sweep rides the pipelined path too; the row
+            // is collected and discarded to keep the per-die part
+            // queues aligned with the host's step count.
+            StepMode::Pipelined { .. } => self.step_pipelined()?,
+        };
         Ok(())
     }
 
     /// Zero all dynamic state on every die and drop in-flight bridge
-    /// packets — between samples. Weights and parameters survive.
+    /// packets — between samples. Weights and parameters survive, as do
+    /// the cumulative bridge-traffic counters. In pipelined mode this
+    /// first quiesces the workers (waits for any in-flight steps to
+    /// land) and clears the epoch's queues and any parked fault.
     pub fn reset_state(&mut self) -> Result<(), Trap> {
-        for chip in &mut self.chips {
-            chip.flush_packets();
+        if let Some(p) = &self.pipe {
+            let shared = p.shared.clone();
+            let mut c = lock(&shared.coord);
+            // Quiesce: on a clean epoch the workers drain to the staged
+            // target on their own (host input for every target step is
+            // already queued); on a fault they park immediately.
+            loop {
+                let drained =
+                    c.error.is_some() || c.completed.iter().all(|&t| t == c.target);
+                if drained && c.running.iter().all(|r| !r) {
+                    break;
+                }
+                c = shared.done.wait(c).unwrap_or_else(|e| e.into_inner());
+            }
+            c.error = None;
+            c.target = 0;
+            for v in &mut c.completed {
+                *v = 0;
+            }
+            for q in &mut c.inputs {
+                q.clear();
+            }
+            for row in &mut c.fifos {
+                for q in row {
+                    q.clear();
+                }
+            }
+            for q in &mut c.parts {
+                q.clear();
+            }
+            // Re-arm the epoch bases off the chip clocks, which may have
+            // skewed across dies if a fault stopped the epoch mid-step
+            // (harmless: FIFO tags are per-source-die absolute).
+            for (die, chip) in self.chips.iter().enumerate() {
+                c.base[die] = lock(chip).timestep;
+            }
+        }
+        for chip in &self.chips {
+            lock(chip).flush_packets();
         }
         self.bridge.clear();
         let mut zeros: Vec<u16> = Vec::new();
@@ -534,7 +1101,7 @@ impl MultiChipDeployment {
             if zeros.len() < n.max(n2) {
                 zeros.resize(n.max(n2), 0);
             }
-            let chip = &mut self.chips[*chip_idx];
+            let mut chip = lock(&self.chips[*chip_idx]);
             chip.poke(cc, nc, l.cur, &zeros[..n])?;
             chip.poke(cc, nc, l.adapt, &zeros[..n2])?;
         }
@@ -547,7 +1114,7 @@ impl MultiChipDeployment {
     /// bit-exactly across shard counts.
     pub fn peek_weights(&self, core_idx: usize, n: usize) -> Result<Vec<f32>, Trap> {
         let (chip_idx, core) = &self.compiled.cores[core_idx];
-        Ok(self.chips[*chip_idx]
+        Ok(lock(&self.chips[*chip_idx])
             .peek(core.cc, core.nc, core.layout.weights, n)?
             .into_iter()
             .map(|w| F16(w).to_f32())
@@ -560,7 +1127,7 @@ impl MultiChipDeployment {
     pub fn activity(&self) -> ChipActivity {
         let mut total = ChipActivity::default();
         for chip in &self.chips {
-            let a = chip.activity();
+            let a = lock(chip).activity();
             total.nc.add(&a.nc);
             total.dt_reads += a.dt_reads;
             total.it_reads += a.it_reads;
@@ -575,7 +1142,7 @@ impl MultiChipDeployment {
 
     /// Per-die activity (per-die vs aggregate metrics in the docs).
     pub fn activity_per_chip(&self) -> Vec<ChipActivity> {
-        self.chips.iter().map(|c| c.activity()).collect()
+        self.chips.iter().map(|c| lock(c).activity()).collect()
     }
 
     /// The lockstep core: one timestep of every die over the staged host
@@ -598,6 +1165,7 @@ impl MultiChipDeployment {
             pre,
             post,
             step_res,
+            ..
         } = self;
         let mut out = StepRow {
             row: vec![0.0f32; compiled.n_outputs],
@@ -619,7 +1187,7 @@ impl MultiChipDeployment {
                 }
             }
             post.extend_from_slice(&host_stage[i]);
-            chips[i].step_ext(pre, post, step_res)?;
+            lock(&chips[i]).step_ext(pre, post, step_res)?;
             out.spikes += step_res.spikes;
             out.packets += step_res.packets_routed;
             for h in &step_res.outputs {
@@ -628,18 +1196,33 @@ impl MultiChipDeployment {
                     out.row[k] = F16(h.value).to_f32();
                 }
             }
-            // Stage this die's cross-die egress for the next step.
-            for p in &step_res.egress {
-                if let RouteMode::Remote { chip: dst, x, y } = p.mode {
+            // Stage this die's cross-die egress for the next step. The
+            // release tag is informational here — the parity double-
+            // buffer already enforces next-step delivery — but it must
+            // agree with what the pipelined engine would see.
+            for e in &step_res.egress {
+                if let RouteMode::Remote { chip: dst, x, y } = e.packet.mode {
                     bridge_packets[i][dst as usize] += 1;
                     bridge.stage[parity ^ 1][dst as usize][i].push(Packet {
                         mode: RouteMode::Unicast { x, y },
-                        ..*p
+                        ..e.packet
                     });
                 }
             }
         }
         Ok(out)
+    }
+}
+
+impl Drop for MultiChipDeployment {
+    fn drop(&mut self) {
+        if let Some(p) = self.pipe.take() {
+            lock(&p.shared.coord).stop = true;
+            p.shared.work.notify_all();
+            for h in p.workers {
+                let _ = h.join();
+            }
+        }
     }
 }
 

@@ -14,10 +14,12 @@
 //! report pins it to (engine, step, output neuron) with the single-die
 //! (cc, nc, neuron) coordinates and a seed-replay repro line.
 //!
-//! A typed compiler refusal (e.g. `CrossDieDelay` for a delayed skip
-//! crossing a die cut) is counted per engine, not treated as a failure:
-//! the oracle distinguishes "this engine declines the case" from "this
-//! engine computes the wrong answer".
+//! A typed compiler refusal (e.g. `TooManyCores` on a cut the placement
+//! cannot satisfy) is counted per engine, not treated as a failure: the
+//! oracle distinguishes "this engine declines the case" from "this
+//! engine computes the wrong answer". Sharded cases additionally run on
+//! the pipelined multi-die engine (bounded run-ahead) against the same
+//! compiled image, so the bridge's step-indexed fusion is fuzzed too.
 
 use std::sync::Arc;
 
@@ -317,20 +319,44 @@ pub fn run_case(spec: &GenSpec, case: &GenCase) -> CaseReport {
     for chips in SHARD_COUNTS {
         for strategy in [ShardStrategy::Contiguous, ShardStrategy::MinCut] {
             let name = format!("sharded-{chips}-{strategy}");
-            let mut o = opts.clone();
-            o.strategy = strategy;
-            let outcome =
-                match compiler::compile_sharded(&case.net, &case.weights, &o, chips) {
-                    Ok(rep) => {
-                        let vr = compiler::verify::verify_sharded(
-                            &rep.sharded,
-                            &case.net,
-                            case.learning,
-                        );
-                        if vr.ok() {
-                            match MultiChipDeployment::new(Arc::new(rep.sharded)) {
+            let pname = format!("pipelined-{chips}-{strategy}");
+            match compiler::compile_sharded(&case.net, &case.weights, &{
+                let mut o = opts.clone();
+                o.strategy = strategy;
+                o
+            }, chips)
+            {
+                Ok(rep) => {
+                    let vr = compiler::verify::verify_sharded(
+                        &rep.sharded,
+                        &case.net,
+                        case.learning,
+                    );
+                    if vr.ok() {
+                        // sequential reference and the pipelined
+                        // run-ahead engine share one compiled image, so
+                        // any mismatch between the two columns is a
+                        // bridge-fusion bug, never a compile difference
+                        let image = Arc::new(rep.sharded);
+                        let outcome = match MultiChipDeployment::new(image.clone()) {
+                            Ok(m) => drive(
+                                &name,
+                                &mut Engine::Multi(m),
+                                case,
+                                &golden,
+                                golden_w.as_deref(),
+                                &[],
+                            ),
+                            Err(t) => Outcome::Diverged(fault(&name, case.seed, &t)),
+                        };
+                        report.engines.push(EngineOutcome {
+                            engine: name,
+                            outcome,
+                        });
+                        let outcome =
+                            match MultiChipDeployment::pipelined(image, 2) {
                                 Ok(m) => drive(
-                                    &name,
+                                    &pname,
                                     &mut Engine::Multi(m),
                                     case,
                                     &golden,
@@ -338,19 +364,36 @@ pub fn run_case(spec: &GenSpec, case: &GenCase) -> CaseReport {
                                     &[],
                                 ),
                                 Err(t) => {
-                                    Outcome::Diverged(fault(&name, case.seed, &t))
+                                    Outcome::Diverged(fault(&pname, case.seed, &t))
                                 }
-                            }
-                        } else {
-                            Outcome::Diverged(preflight(&name, case.seed, &vr))
-                        }
+                            };
+                        report.engines.push(EngineOutcome {
+                            engine: pname,
+                            outcome,
+                        });
+                    } else {
+                        let d = Outcome::Diverged(preflight(&name, case.seed, &vr));
+                        report.engines.push(EngineOutcome {
+                            engine: name,
+                            outcome: d.clone(),
+                        });
+                        report.engines.push(EngineOutcome {
+                            engine: pname,
+                            outcome: d,
+                        });
                     }
-                    Err(e) => Outcome::Refused(e.to_string()),
-                };
-            report.engines.push(EngineOutcome {
-                engine: name,
-                outcome,
-            });
+                }
+                Err(e) => {
+                    report.engines.push(EngineOutcome {
+                        engine: name,
+                        outcome: Outcome::Refused(e.to_string()),
+                    });
+                    report.engines.push(EngineOutcome {
+                        engine: pname,
+                        outcome: Outcome::Refused(e.to_string()),
+                    });
+                }
+            }
         }
     }
     report
@@ -662,14 +705,17 @@ mod tests {
                 "{name} should refuse a past-one-die net"
             );
         }
-        // … and at least one sharded engine runs it and matches
-        let matched = report
-            .engines
-            .iter()
-            .filter(|e| e.engine.starts_with("sharded"))
-            .filter(|e| matches!(e.outcome, Outcome::Match))
-            .count();
-        assert!(matched > 0, "no sharded engine matched: {report:#?}");
+        // … and at least one sharded engine runs it and matches, on
+        // both the sequential reference and the pipelined engine
+        for prefix in ["sharded", "pipelined"] {
+            let matched = report
+                .engines
+                .iter()
+                .filter(|e| e.engine.starts_with(prefix))
+                .filter(|e| matches!(e.outcome, Outcome::Match))
+                .count();
+            assert!(matched > 0, "no {prefix} engine matched: {report:#?}");
+        }
         assert_eq!(report.divergences().count(), 0, "{report:#?}");
     }
 

@@ -10,9 +10,12 @@
 //!                                    the multi-die cut with
 //!                                    `--strategy contiguous|mincut` (mincut
 //!                                    default), the SA die-crossing weight
-//!                                    with `--serdes-cost <hops>`, and the
+//!                                    with `--serdes-cost <hops>`, the
 //!                                    statically scheduled step engine with
-//!                                    `--schedule`
+//!                                    `--schedule`, and the pipelined
+//!                                    multi-die stepper with
+//!                                    `--pipeline-depth <N>` (run-ahead
+//!                                    bound; 0 = sequential reference)
 //! * `fast <plif|5blocks|resnet19>` — analytic-backend report for the
 //!                                    Table II benchmark nets
 //! * `serve-demo <ecg|shd|bci>`     — multi-tenant streaming: N client
@@ -57,7 +60,8 @@ use std::collections::VecDeque;
 
 use taibai::api::workloads::{Bci, Ecg, Shd};
 use taibai::api::{
-    evaluate, Backend, Sample, SessionPool, StreamId, Taibai, Workload,
+    evaluate, Backend, ExecOptions, FastParams, Sample, SessionPool, StreamId,
+    Taibai, Workload,
 };
 use taibai::bench::Table;
 use taibai::energy::EnergyModel;
@@ -173,9 +177,15 @@ fn fast(args: &Args) {
     let neurons = net.total_neurons();
 
     let mut session = Taibai::new(net)
-        .backend(Backend::Analytic)
         .rates(vec![rate]) // pin the input-layer rate exactly
-        .default_rate(rate)
+        .exec(ExecOptions {
+            backend: Backend::Analytic,
+            fast: FastParams {
+                default_rate: rate,
+                ..FastParams::default()
+            },
+            ..ExecOptions::default()
+        })
         .build()
         .expect("analytic deploy");
     let sample = Sample::poisson(channels.unwrap_or(0), timesteps, rate, 42);
@@ -232,20 +242,23 @@ fn run_app(args: &Args) {
 
     let workload = workload_by_name(name);
 
-    let mut builder = workload.taibai(seed).backend(backend);
+    let mut x = ExecOptions {
+        backend,
+        // multi-die run-ahead bound; 0 = sequential reference stepper
+        pipeline_depth: args.usize("pipeline-depth", 0),
+        schedule: args.has("schedule"),
+        ..ExecOptions::default()
+    };
     if let Some(s) = strategy {
-        builder = builder.shard_strategy(s);
+        x.strategy = s;
     }
     if args.has("serdes-cost") {
-        builder = builder.serdes_cost(args.f64(
+        x.serdes_cost = args.f64(
             "serdes-cost",
             taibai::compiler::placement::DEFAULT_SERDES_COST,
-        ));
+        );
     }
-    if args.has("schedule") {
-        builder = builder.schedule(true);
-    }
-    let mut session = match builder.build() {
+    let mut session = match workload.taibai(seed).exec(x).build() {
         Ok(s) => s,
         Err(e) => {
             eprintln!("compile failed: {e}");

@@ -13,7 +13,7 @@
 //! twice the LIF threshold, so every hidden neuron fires every step and
 //! the per-layer rates are 1.0 by construction, not by assumption.
 
-use taibai::api::{Backend, Sample, ShardStrategy, Taibai};
+use taibai::api::{Backend, ExecOptions, Sample, ShardStrategy, Taibai};
 use taibai::chip::fast::FastParams;
 use taibai::compiler::Objective;
 use taibai::datasets::SpikeSample;
@@ -32,11 +32,14 @@ fn fast_remote_traffic_matches_measured_bridge_counters() {
     // ---- measured: detailed lockstep dies, contiguous split ----------
     let mut measured = Taibai::new(net.clone())
         .weights(weights)
-        .objective(Objective::Balanced(1))
-        .merge(false)
-        .sa_iters(0)
-        .shard_strategy(ShardStrategy::Contiguous)
-        .backend(Backend::Sharded { chips: 0 })
+        .exec(ExecOptions {
+            backend: Backend::Sharded { chips: 0 },
+            objective: Objective::Balanced(1),
+            strategy: ShardStrategy::Contiguous,
+            merge: false,
+            sa_iters: 0,
+            ..ExecOptions::default()
+        })
         .build()
         .expect("sharded compile");
     assert_eq!(measured.info().chips, 2, "wide FC needs exactly 2 dies");
@@ -46,7 +49,7 @@ fn fast_remote_traffic_matches_measured_bridge_counters() {
     assert_eq!(am.timesteps, T as u64);
 
     // per-edge counters are consistent with the aggregate
-    let bridge = measured.bridge_traffic().expect("bridge counters");
+    let bridge = measured.telemetry().bridge.expect("bridge counters");
     let total: u64 = bridge.iter().flatten().sum();
     assert_eq!(total, am.remote_packets, "bridge matrix vs aggregate");
     for (i, row) in bridge.iter().enumerate() {
@@ -60,8 +63,11 @@ fn fast_remote_traffic_matches_measured_bridge_counters() {
     p.nc_neuron_capacity = 1; // Balanced(1): one neuron per core
     p.firing_rates = vec![1.0, 1.0, 1.0, 0.0]; // saturated by construction
     let mut fast = Taibai::new(net)
-        .backend(Backend::Analytic)
-        .fast_params(p)
+        .exec(ExecOptions {
+            backend: Backend::Analytic,
+            fast: p,
+            ..ExecOptions::default()
+        })
         .build()
         .expect("analytic build");
     assert_eq!(fast.info().chips, 2, "analytic die count diverged");

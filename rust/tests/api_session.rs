@@ -5,7 +5,7 @@
 //! * `run_batch` returns exactly what sequential `run` calls return.
 
 use taibai::api::workloads::{Bci, Ecg, Shd};
-use taibai::api::{evaluate, Backend, Sample, Taibai, Workload};
+use taibai::api::{evaluate, Backend, ExecOptions, Sample, Taibai, Workload};
 use taibai::energy::EnergyModel;
 use taibai::model::{Layer, NetDef, NeuronModel};
 
@@ -70,8 +70,11 @@ fn fast_vs_detailed_parity_on_a_small_net() {
     detailed.run(&sample).unwrap();
 
     let mut fast = Taibai::new(net)
-        .backend(Backend::Analytic)
         .rates(vec![measured, 0.0])
+        .exec(ExecOptions {
+            backend: Backend::Analytic,
+            ..ExecOptions::default()
+        })
         .build()
         .unwrap();
     fast.run(&sample).unwrap();

@@ -298,9 +298,9 @@ fn sparse_fanout_aliasing_diverges_pre_fix_and_matches_post_fix() {
 
 /// A delayed skip across the oracle: source and destination widths
 /// match, spikes arrive `delay` steps late, and every engine that
-/// accepts the net agrees with the dense reference. (Sharded engines
-/// may refuse with `CrossDieDelay` — counted as refusals, not
-/// failures.)
+/// accepts the net agrees with the dense reference — including sharded
+/// engines, now that the bridge orders delay-line releases by their
+/// tagged release step.
 #[test]
 fn skip_connection_case_matches_or_refuses() {
     let mut rng = Rng::new(14);

@@ -25,9 +25,37 @@
 //!   wakeups, and SEND counts included.
 
 use taibai::api::workloads::{Bci, Ecg, Shd, Workload};
-use taibai::api::{Backend, Sample, Session, ShardStrategy, Taibai};
+use taibai::api::{Backend, ExecOptions, Sample, Session, ShardStrategy, Taibai};
 use taibai::compiler::Objective;
 use taibai::model;
+
+/// Run-ahead depths every parity tier is pinned at (1 = parallel
+/// lockstep, 8 > any tested die count's natural lag).
+const DEPTHS: [usize; 3] = [1, 2, 8];
+
+fn build_depth(
+    w: &dyn Workload,
+    backend: Backend,
+    objective: Objective,
+    seed: u64,
+    strategy: ShardStrategy,
+    depth: usize,
+) -> Session {
+    Taibai::new(w.net())
+        .weights(w.weights(seed))
+        .rates(w.rates())
+        .learning(w.learning())
+        .exec(ExecOptions {
+            backend,
+            objective,
+            strategy,
+            sa_iters: 0,
+            pipeline_depth: depth,
+            ..ExecOptions::default()
+        })
+        .build()
+        .expect("compile")
+}
 
 fn build(
     w: &dyn Workload,
@@ -36,16 +64,7 @@ fn build(
     seed: u64,
     strategy: ShardStrategy,
 ) -> Session {
-    Taibai::new(w.net())
-        .weights(w.weights(seed))
-        .rates(w.rates())
-        .learning(w.learning())
-        .objective(objective)
-        .sa_iters(0)
-        .shard_strategy(strategy)
-        .backend(backend)
-        .build()
-        .expect("compile")
+    build_depth(w, backend, objective, seed, strategy, 0)
 }
 
 /// Run `samples` dataset samples through both engines and pin the
@@ -74,6 +93,7 @@ fn assert_parity_with(
     );
 
     let data = w.dataset(samples, seed);
+    let mut reference = Vec::new();
     for (si, s) in data.iter().take(samples).enumerate() {
         let a = single.run(s).expect("single-die run");
         let b = sharded.run(s).expect("sharded run");
@@ -94,6 +114,7 @@ fn assert_parity_with(
                 w.name()
             );
         }
+        reference.push(a);
     }
 
     let aa = single.activity();
@@ -114,7 +135,8 @@ fn assert_parity_with(
     // the sharded engine's bridge accounting is self-consistent: the
     // per-edge matrix sums to the aggregate remote-packet counter
     let bridge = sharded
-        .bridge_traffic()
+        .telemetry()
+        .bridge
         .expect("sharded backends expose per-edge bridge counters");
     assert_eq!(bridge.len(), chips);
     let total: u64 = bridge.iter().flatten().sum();
@@ -123,6 +145,51 @@ fn assert_parity_with(
         assert_eq!(row[i], 0, "{tag}: die {i} bridged to itself");
     }
     assert_eq!(aa.remote_packets, 0, "{tag}: single die minted remote packets");
+
+    // pipelined stepper: bounded run-ahead must be invisible at every
+    // depth — same rows, same activity, same per-edge bridge matrix
+    for depth in DEPTHS {
+        let mut piped =
+            build_depth(w, Backend::Sharded { chips }, objective, seed, strategy, depth);
+        for (si, (s, a)) in data.iter().take(samples).zip(&reference).enumerate() {
+            let p = piped.run(s).expect("pipelined run");
+            assert_eq!(
+                p.outputs, a.outputs,
+                "{tag} depth {depth}: sample {si} rows diverged"
+            );
+            if routing {
+                assert_eq!(p.spikes, a.spikes, "{tag} depth {depth}: sample {si} spikes");
+                assert_eq!(
+                    p.packets, a.packets,
+                    "{tag} depth {depth}: sample {si} packets"
+                );
+            }
+        }
+        let t = piped.telemetry();
+        assert_eq!(t.activity.nc.sops, aa.nc.sops, "{tag} depth {depth}: SOPs");
+        assert_eq!(
+            t.activity.activations, aa.activations,
+            "{tag} depth {depth}: NC activations"
+        );
+        assert_eq!(
+            t.activity.timesteps, aa.timesteps,
+            "{tag} depth {depth}: timesteps"
+        );
+        assert_eq!(
+            t.bridge.as_ref(),
+            Some(&bridge),
+            "{tag} depth {depth}: bridge matrix diverged from sequential"
+        );
+        let ps = t.pipeline.expect("pipelined mode exposes PipelineStats");
+        assert_eq!(ps.depth, depth, "{tag}: depth echoed back");
+        let claims: u64 = ps.lag_histogram.iter().sum();
+        assert!(claims > 0, "{tag} depth {depth}: lag histogram never bumped");
+        assert!(
+            ps.lag_histogram.len() <= depth,
+            "{tag} depth {depth}: lag {} exceeded the run-ahead bound",
+            ps.lag_histogram.len()
+        );
+    }
 }
 
 /// Contiguous-strategy wrapper (the tier expectations below were
@@ -210,8 +277,13 @@ fn bci_four_way_parity() {
 fn sharded_learning_matches_single_die() {
     // the BCI on-chip fine-tune protocol, lockstep across 2 dies: error
     // injection, the learning FIRE sweep, and the resulting weight
-    // updates must leave both engines with identical readouts
+    // updates must leave every engine — sequential and pipelined at
+    // each depth — with readouts identical to the single-die reference
     let w = Bci { subpaths: 8, day: 4 };
+    let data = w.dataset(4, 7);
+    let err = [0.5f32, -0.25, 0.125, -0.5];
+    let probe = &w.dataset(4, 9)[0];
+
     let mut single = build(
         &w,
         Backend::Detailed,
@@ -219,28 +291,37 @@ fn sharded_learning_matches_single_die() {
         7,
         ShardStrategy::Contiguous,
     );
-    let mut sharded = build(
-        &w,
-        Backend::Sharded { chips: 2 },
-        Objective::MinCores,
-        7,
-        ShardStrategy::Contiguous,
-    );
-    let data = w.dataset(4, 7);
-    let err = [0.5f32, -0.25, 0.125, -0.5];
-    for (si, s) in data.iter().take(2).enumerate() {
-        let ra = single.run(s).expect("single");
-        let rb = sharded.run(s).expect("sharded");
-        assert_eq!(ra.outputs, rb.outputs, "pre-learning sample {si}");
+    let mut pre = Vec::new();
+    for s in data.iter().take(2) {
+        pre.push(single.run(s).expect("single").outputs);
         single.learn_step(&err).expect("single learn");
-        sharded.learn_step(&err).expect("sharded learn");
     }
-    let probe = &w.dataset(4, 9)[0];
-    assert_eq!(
-        single.run(probe).expect("single probe").outputs,
-        sharded.run(probe).expect("sharded probe").outputs,
-        "post-learning readouts diverged: weight updates not bit-identical"
-    );
+    let post = single.run(probe).expect("single probe").outputs;
+
+    for depth in [0, DEPTHS[0], DEPTHS[1], DEPTHS[2]] {
+        let mut sharded = build_depth(
+            &w,
+            Backend::Sharded { chips: 2 },
+            Objective::MinCores,
+            7,
+            ShardStrategy::Contiguous,
+            depth,
+        );
+        for (si, s) in data.iter().take(2).enumerate() {
+            let rb = sharded.run(s).expect("sharded");
+            assert_eq!(
+                rb.outputs, pre[si],
+                "depth {depth}: pre-learning sample {si}"
+            );
+            sharded.learn_step(&err).expect("sharded learn");
+        }
+        assert_eq!(
+            sharded.run(probe).expect("sharded probe").outputs,
+            post,
+            "depth {depth}: post-learning readouts diverged: weight \
+             updates not bit-identical"
+        );
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -335,8 +416,13 @@ fn bci_four_way_mincut_parity() {
 #[test]
 fn mincut_learning_matches_single_die() {
     // the BCI on-chip fine-tune under the topology-aware cut: error
-    // injection, learning sweeps, and weight updates bit-identical
+    // injection, learning sweeps, and weight updates bit-identical,
+    // sequentially and at every pipelined depth
     let w = Bci { subpaths: 8, day: 4 };
+    let data = w.dataset(4, 13);
+    let err = [0.25f32, -0.5, 0.375, -0.125];
+    let probe = &w.dataset(4, 17)[0];
+
     let mut single = build(
         &w,
         Backend::Detailed,
@@ -344,28 +430,36 @@ fn mincut_learning_matches_single_die() {
         13,
         ShardStrategy::MinCut,
     );
-    let mut sharded = build(
-        &w,
-        Backend::Sharded { chips: 2 },
-        Objective::MinCores,
-        13,
-        ShardStrategy::MinCut,
-    );
-    let data = w.dataset(4, 13);
-    let err = [0.25f32, -0.5, 0.375, -0.125];
-    for (si, s) in data.iter().take(2).enumerate() {
-        let ra = single.run(s).expect("single");
-        let rb = sharded.run(s).expect("sharded");
-        assert_eq!(ra.outputs, rb.outputs, "pre-learning sample {si}");
+    let mut pre = Vec::new();
+    for s in data.iter().take(2) {
+        pre.push(single.run(s).expect("single").outputs);
         single.learn_step(&err).expect("single learn");
-        sharded.learn_step(&err).expect("sharded learn");
     }
-    let probe = &w.dataset(4, 17)[0];
-    assert_eq!(
-        single.run(probe).expect("single probe").outputs,
-        sharded.run(probe).expect("sharded probe").outputs,
-        "post-learning readouts diverged under MinCut"
-    );
+    let post = single.run(probe).expect("single probe").outputs;
+
+    for depth in [0, DEPTHS[0], DEPTHS[1], DEPTHS[2]] {
+        let mut sharded = build_depth(
+            &w,
+            Backend::Sharded { chips: 2 },
+            Objective::MinCores,
+            13,
+            ShardStrategy::MinCut,
+            depth,
+        );
+        for (si, s) in data.iter().take(2).enumerate() {
+            let rb = sharded.run(s).expect("sharded");
+            assert_eq!(
+                rb.outputs, pre[si],
+                "depth {depth}: pre-learning sample {si}"
+            );
+            sharded.learn_step(&err).expect("sharded learn");
+        }
+        assert_eq!(
+            sharded.run(probe).expect("sharded probe").outputs,
+            post,
+            "depth {depth}: post-learning readouts diverged under MinCut"
+        );
+    }
 }
 
 #[test]
@@ -385,9 +479,12 @@ fn mincut_with_serdes_sa_keeps_rows_identical() {
     let mut sharded = Taibai::new(w.net())
         .weights(w.weights(seed))
         .rates(w.rates())
-        .sa_iters(1500)
-        .shard_strategy(ShardStrategy::MinCut)
-        .backend(Backend::Sharded { chips: 2 })
+        .exec(ExecOptions {
+            backend: Backend::Sharded { chips: 2 },
+            strategy: ShardStrategy::MinCut,
+            sa_iters: 1500,
+            ..ExecOptions::default()
+        })
         .build()
         .expect("compile");
     for (si, s) in w.dataset(2, seed).iter().take(2).enumerate() {
@@ -443,9 +540,12 @@ fn over_capacity_net_runs_end_to_end_sharded() {
     let weights = model::wide_fc_weights(&net, 3);
     let mut session = Taibai::new(net)
         .weights(weights)
-        .objective(Objective::Balanced(1))
-        .merge(false)
-        .sa_iters(0)
+        .exec(ExecOptions {
+            objective: Objective::Balanced(1),
+            merge: false,
+            sa_iters: 0,
+            ..ExecOptions::default()
+        })
         .build()
         .expect("over-capacity net must compile via the sharded fallback");
     assert!(

@@ -5,12 +5,16 @@
 //! its spikes must be held exactly that many timesteps (§III-D.6) to
 //! land together with the direct path. The timing test pins that
 //! alignment on a compiled chain; the sharded test pins that a delayed
-//! edge forced across a die boundary is a *typed* refusal
-//! (`CompileError::CrossDieDelay`) instead of a silently dropped delay.
+//! edge forced across a die boundary *compiles and runs* (the bridge
+//! orders releases by their tagged `release_step`, so the former
+//! `CrossDieDelay` refusal is lifted) and holds exactly its delay —
+//! bit-identical to the single-die reference, in sequential and
+//! pipelined stepping alike.
 
-use taibai::api::{Backend, CompileError, Sample, ShardStrategy, Taibai};
+use taibai::api::{Backend, ExecOptions, Sample, ShardStrategy, Taibai};
 use taibai::datasets::SpikeSample;
 use taibai::model::{self, Layer, NetDef, NeuronModel, Skip};
+use taibai::topology::RouteMode;
 
 /// Input(2) → Fc(2→2 LIF) → Fc(2→2 LIF) → Fc(2→2 readout), diagonal
 /// weights strong enough that a channel-0 spike propagates every hop.
@@ -77,43 +81,112 @@ fn codegen_delay_holds_the_skip_until_the_direct_path_lands() {
 }
 
 #[test]
-fn delayed_skip_across_dies_is_a_typed_compile_error() {
+fn delayed_skip_across_dies_compiles_and_holds_its_delay() {
     // Wide-FC over 2 forced dies, contiguous cut: layer 1 lands on die
     // 0 and the skip target (layer 3) on die 1, so the delayed edge
-    // would have to cross the host bridge — which has no ordering rule
-    // for delay-line releases.
+    // crosses the host bridge. This used to be a typed refusal
+    // (`CompileError::CrossDieDelay`); the bridge now tags every
+    // egressed packet with its absolute release step, so delay-line
+    // releases order correctly across dies and the path just works.
     let mut net = model::wide_fc_net(8, 600, 2, 4);
     net.skips.push(Skip { from: 1, to: 3 });
     let weights = model::wide_fc_weights(&net, 3);
-    let built = Taibai::new(net)
-        .weights(weights)
-        .backend(Backend::Sharded { chips: 2 })
-        .shard_strategy(ShardStrategy::Contiguous)
-        .merge(false)
-        .sa_iters(0)
-        .build();
-    match built {
-        Err(CompileError::CrossDieDelay {
-            from: 1,
-            to: 3,
-            delay: 1,
-        }) => {}
-        Err(other) => panic!("expected CrossDieDelay, got {other:?}"),
-        Ok(_) => panic!("delayed cross-die skip must be refused"),
+    let sample = Sample::poisson(8, 8, 0.5, 7);
+
+    let sharded_opts = |depth: usize| ExecOptions {
+        backend: Backend::Sharded { chips: 2 },
+        strategy: ShardStrategy::Contiguous,
+        merge: false,
+        sa_iters: 0,
+        pipeline_depth: depth,
+        ..ExecOptions::default()
+    };
+
+    // the compiled 2-die image really carries a delayed remote edge
+    let image = {
+        let opts = taibai::compiler::Options {
+            strategy: ShardStrategy::Contiguous,
+            merge: false,
+            sa_iters: 0,
+            ..Default::default()
+        };
+        taibai::compiler::compile_sharded(&net, &weights, &opts, 2)
+            .expect("delayed cross-die skip must compile")
+            .sharded
+    };
+    let delayed_remote = image
+        .chips
+        .iter()
+        .flat_map(|img| img.config.ccs.values())
+        .flat_map(|cc| cc.tables.fanout_it.iter())
+        .any(|ie| ie.delay > 0 && matches!(ie.mode, RouteMode::Remote { .. }));
+    assert!(
+        delayed_remote,
+        "expected a delayed Remote fan-out IE in the 2-die image"
+    );
+
+    // single-die reference (same net, auto-sized to one chip)
+    let mut single = Taibai::new(net.clone())
+        .weights(weights.clone())
+        .exec(ExecOptions {
+            merge: false,
+            sa_iters: 0,
+            ..ExecOptions::default()
+        })
+        .build()
+        .expect("single-die reference");
+    assert_eq!(single.info().chips, 1);
+    let reference = single.run(&sample).expect("single-die run");
+
+    // sequential 2-die run: bit-identical rows, and the skip actually
+    // crossed the bridge
+    let mut seq = Taibai::new(net.clone())
+        .weights(weights.clone())
+        .exec(sharded_opts(0))
+        .build()
+        .expect("2-die sequential build");
+    let seq_run = seq.run(&sample).expect("2-die sequential run");
+    assert_eq!(
+        seq_run.outputs, reference.outputs,
+        "2-die rows must match the single-die reference exactly"
+    );
+    assert_eq!(seq_run.spikes, reference.spikes);
+    let bridge = seq.telemetry().bridge.expect("bridge matrix");
+    let crossed: u64 = bridge.iter().flatten().sum();
+    assert!(crossed > 0, "no packets crossed the bridge: {bridge:?}");
+
+    // pipelined runs at several depths: same bits again
+    for depth in [1usize, 2, 8] {
+        let mut piped = Taibai::new(net.clone())
+            .weights(weights.clone())
+            .exec(sharded_opts(depth))
+            .build()
+            .unwrap_or_else(|e| panic!("depth-{depth} build: {e}"));
+        let run = piped
+            .run(&sample)
+            .unwrap_or_else(|e| panic!("depth-{depth} run: {e}"));
+        assert_eq!(
+            run.outputs, reference.outputs,
+            "pipelined depth {depth} diverged from the reference"
+        );
+        assert_eq!(run.spikes, reference.spikes, "depth {depth} spike count");
     }
 }
 
 #[test]
 fn single_die_build_of_the_same_skipped_net_compiles() {
-    // the refusal above is about the cut, not the skip: the identical
-    // net on one (auto-sized) die deploys fine
+    // sanity anchor for the cross-die test above: the identical net on
+    // one (auto-sized) die deploys fine
     let mut net = model::wide_fc_net(8, 600, 2, 4);
     net.skips.push(Skip { from: 1, to: 3 });
     let weights = model::wide_fc_weights(&net, 3);
     let session = Taibai::new(net)
         .weights(weights)
-        .merge(false)
-        .sa_iters(0)
+        .exec(ExecOptions {
+            merge: false,
+            sa_iters: 0,
+            ..ExecOptions::default()
+        })
         .build()
         .expect("single-die delayed skip must compile");
     assert_eq!(session.info().chips, 1);

@@ -50,8 +50,8 @@ fn assert_stream_parity(w: &dyn Workload, backend: Backend, samples: usize) {
         "{tag}: ChipActivity diverged"
     );
     assert_eq!(
-        batch.sched_stats(),
-        streaming.sched_stats(),
+        batch.telemetry().sched,
+        streaming.telemetry().sched,
         "{tag}: scheduler counters diverged"
     );
     assert_eq!(batch.samples_run(), streaming.samples_run(), "{tag}: samples");
