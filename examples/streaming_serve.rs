@@ -78,5 +78,5 @@ fn main() {
             }
         }
     }
-    println!("{}", pool.stats());
+    println!("{}", pool.telemetry().stats);
 }

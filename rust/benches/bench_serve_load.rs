@@ -1,0 +1,391 @@
+//! Serving-load bench: open-loop Poisson arrivals across N synthetic
+//! tenants mixing the ECG / SHD / BCI workloads, submitted to the
+//! sharded `api::serve::Gateway`.
+//!
+//! Three gateways run side by side (one per workload, sharing nothing);
+//! each arrival picks a tenant uniformly, the tenant's workload is
+//! `tenant % 3`, and the whole sample is submitted non-blocking
+//! (`Gateway::submit`) — a full admission queue sheds the arrival, the
+//! open-loop generator does not retry (that's the load-shedding
+//! contract under test). Every admitted stream's decoded decision is
+//! compared bit-exactly against a sequential single-pool reference
+//! computed up front, so the sweep doubles as a concurrency-correctness
+//! check: threading may change *which* streams are admitted, never what
+//! an admitted stream decodes to.
+//!
+//! The sweep is `rates × workers` (defaults: 3 arrival rates × {1, 2,
+//! 4} worker threads per gateway); each column reports admitted /
+//! shed / completed counts, the rejection breakdown, admitted
+//! throughput, and p50/p99/p999 push latency from the gateway
+//! histogram. `--json <path>` writes the grid as machine-readable perf
+//! JSON (`BENCH_serve.json` in CI).
+//!
+//! `--guard-serve` turns the run into a gate:
+//!   * every column reconciles its admission accounting and decodes
+//!     bit-identically to the sequential reference;
+//!   * at the lowest rate, the max-worker p99 stays within one
+//!     histogram bucket (2×) of the single-worker baseline — sharding
+//!     must not regress the uncontended tail;
+//!   * at the highest (saturating) rate, the max-worker configuration
+//!     admits strictly more streams than the single-worker baseline —
+//!     scale-out must buy admitted throughput.
+//!
+//! ```sh
+//! cargo bench --bench bench_serve_load                  # full sweep
+//! cargo bench --bench bench_serve_load -- --arrivals 30 --samples 3 \
+//!     --json BENCH_serve.json --guard-serve             # CI smoke
+//! ```
+
+use std::time::{Duration, Instant};
+
+use taibai::api::workloads::{Bci, Ecg, Shd, Workload};
+use taibai::api::{
+    Backend, Gateway, GatewayConfig, GatewayError, Rejected, Sample, Session,
+    SessionPool, Ticket,
+};
+use taibai::bench::Table;
+use taibai::util::cli::Args;
+use taibai::util::json::Json;
+use taibai::util::Rng;
+
+/// One (rate × workers) column of the sweep.
+struct Column {
+    rate: f64,
+    workers: usize,
+    arrivals: u64,
+    admitted: u64,
+    shed: u64,
+    completed: u64,
+    faults: u64,
+    mismatches: u64,
+    queue_full: u64,
+    deadline: u64,
+    saturated: u64,
+    throughput_sps: f64,
+    p50_us: f64,
+    p99_us: f64,
+    p999_us: f64,
+    reconciled: bool,
+}
+
+/// Sequential single-pool reference decisions, one per (workload,
+/// sample) — the bit-identity baseline every threaded column must hit.
+fn reference_decisions(
+    template: &Session,
+    data: &[Sample],
+) -> Vec<Option<(usize, f64)>> {
+    let mut pool =
+        SessionPool::new(template.fork().expect("forking the reference"), 1)
+            .expect("building the reference pool");
+    data.iter()
+        .map(|s| {
+            let id = pool.open().expect("reference open");
+            for t in 0..s.timesteps() {
+                pool.push(id, s.events_at(t)).expect("reference push");
+            }
+            pool.release(id).expect("reference release").decision
+        })
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_column(
+    templates: &[Session],
+    data: &[Vec<Sample>],
+    refs: &[Vec<Option<(usize, f64)>>],
+    rate: f64,
+    workers: usize,
+    cfg_base: &GatewayConfig,
+    tenants: u64,
+    arrivals: u64,
+    seed: u64,
+) -> Column {
+    let cfg = GatewayConfig {
+        workers,
+        ..cfg_base.clone()
+    };
+    let gws: Vec<Gateway> = templates
+        .iter()
+        .map(|t| Gateway::new(t, cfg.clone()).expect("building a gateway"))
+        .collect();
+
+    // Arrival pattern is deterministic per column; only wall-clock
+    // pacing (and therefore shedding) varies run to run.
+    let mut rng = Rng::new(seed ^ ((workers as u64) << 32) ^ rate.to_bits());
+    let mut counters = vec![0usize; data.len()];
+    let mut tickets: Vec<(usize, usize, Ticket)> = Vec::with_capacity(arrivals as usize);
+    let mut shed = 0u64;
+    let t0 = Instant::now();
+    let mut next = t0;
+    for _ in 0..arrivals {
+        next += Duration::from_secs_f64(-(1.0 - rng.f64()).ln() / rate);
+        if let Some(pause) = next.checked_duration_since(Instant::now()) {
+            std::thread::sleep(pause);
+        }
+        let tenant = rng.below(tenants);
+        let w = (tenant % data.len() as u64) as usize;
+        let sidx = counters[w] % data[w].len();
+        counters[w] += 1;
+        match gws[w].submit(tenant, data[w][sidx].clone(), None) {
+            Ok(t) => tickets.push((w, sidx, t)),
+            Err(GatewayError::Rejected(Rejected::QueueFull)) => shed += 1,
+            Err(e) => panic!("submit failed: {e}"),
+        }
+    }
+
+    let mut completed = 0u64;
+    let mut faults = 0u64;
+    let mut mismatches = 0u64;
+    let mut waited_rejects = 0u64;
+    for (w, sidx, ticket) in tickets {
+        match ticket.wait() {
+            Ok(rep) => {
+                completed += 1;
+                if rep.decision != refs[w][sidx] {
+                    mismatches += 1;
+                }
+            }
+            Err(GatewayError::Rejected(_)) => waited_rejects += 1,
+            Err(e) => {
+                faults += 1;
+                eprintln!("stream fault: {e}");
+            }
+        }
+    }
+    let elapsed = t0.elapsed();
+
+    let mut admitted = 0u64;
+    let mut queue_full = 0u64;
+    let mut deadline = 0u64;
+    let mut saturated = 0u64;
+    let mut hist = taibai::api::LatencyHistogram::default();
+    let mut reconciled = true;
+    for gw in &gws {
+        let t = gw.telemetry();
+        admitted += t.stats.opened;
+        queue_full += t.rejected.queue_full;
+        deadline += t.rejected.deadline;
+        saturated += t.rejected.saturated;
+        hist.merge(&t.histogram);
+        reconciled &= t.reconciled();
+    }
+    // the generator's local counts must agree with gateway telemetry
+    reconciled &= queue_full == shed
+        && deadline + saturated == waited_rejects
+        && admitted == completed + faults;
+
+    Column {
+        rate,
+        workers,
+        arrivals,
+        admitted,
+        shed,
+        completed,
+        faults,
+        mismatches,
+        queue_full,
+        deadline,
+        saturated,
+        throughput_sps: completed as f64 / elapsed.as_secs_f64(),
+        p50_us: hist.p50_us(),
+        p99_us: hist.p99_us(),
+        p999_us: hist.p999_us(),
+        reconciled,
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let tenants = args.u64("tenants", 12).max(1);
+    let arrivals = args.u64("arrivals", 90).max(1);
+    let samples = args.usize("samples", 6).max(1);
+    let pool = args.usize("pool", 2);
+    let queue_depth = args.usize("queue-depth", 16);
+    let deadline_ms = args.u64("deadline-ms", 0);
+    let seed = args.u64("seed", 42);
+    let parse_list = |key: &str, default: &str| -> Vec<f64> {
+        args.get_or(key, default)
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects numbers, got {s:?}"))
+            })
+            .collect()
+    };
+    let rates = parse_list("rates", "200,1000,4000");
+    let worker_counts: Vec<usize> =
+        parse_list("workers", "1,2,4").iter().map(|&w| w as usize).collect();
+
+    let workloads: Vec<Box<dyn Workload>> = vec![
+        Box::new(Ecg {
+            heterogeneous: true,
+        }),
+        Box::new(Shd { dendrites: true }),
+        Box::new(Bci::default()),
+    ];
+    println!(
+        "serve-load sweep: {} tenants over {} workloads, {} arrivals per column, \
+         rates {rates:?} /s x workers {worker_counts:?}",
+        tenants,
+        workloads.len(),
+        arrivals,
+    );
+    let templates: Vec<Session> = workloads
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            w.session(Backend::Detailed, seed.wrapping_add(i as u64))
+                .expect("compiling a workload")
+        })
+        .collect();
+    let data: Vec<Vec<Sample>> = workloads
+        .iter()
+        .enumerate()
+        .map(|(i, w)| w.dataset(samples, seed.wrapping_add(i as u64)))
+        .collect();
+    let refs: Vec<Vec<Option<(usize, f64)>>> = templates
+        .iter()
+        .zip(&data)
+        .map(|(t, d)| reference_decisions(t, d))
+        .collect();
+
+    let cfg_base = GatewayConfig {
+        workers: 1,
+        slots_per_worker: pool,
+        queue_depth,
+        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+    };
+    let mut t = Table::new(&[
+        "rate/s",
+        "workers",
+        "admitted",
+        "shed",
+        "completed",
+        "q-full",
+        "deadline",
+        "saturated",
+        "streams/s",
+        "p50 µs",
+        "p99 µs",
+        "p999 µs",
+        "ok",
+    ]);
+    let mut columns: Vec<Column> = Vec::new();
+    for &rate in &rates {
+        for &workers in &worker_counts {
+            let c = run_column(
+                &templates, &data, &refs, rate, workers, &cfg_base, tenants,
+                arrivals, seed,
+            );
+            t.row(&[
+                format!("{rate:.0}"),
+                format!("{workers}"),
+                format!("{}", c.admitted),
+                format!("{}", c.shed),
+                format!("{}", c.completed),
+                format!("{}", c.queue_full),
+                format!("{}", c.deadline),
+                format!("{}", c.saturated),
+                format!("{:.0}", c.throughput_sps),
+                format!("{:.1}", c.p50_us),
+                format!("{:.1}", c.p99_us),
+                format!("{:.1}", c.p999_us),
+                format!(
+                    "{}",
+                    c.reconciled && c.mismatches == 0 && c.faults == 0
+                ),
+            ]);
+            columns.push(c);
+        }
+    }
+    t.print();
+
+    if let Some(path) = args.get("json") {
+        let cols: Vec<Json> = columns
+            .iter()
+            .map(|c| {
+                Json::obj()
+                    .set("rate_per_s", c.rate)
+                    .set("workers", c.workers)
+                    .set("arrivals", c.arrivals)
+                    .set("admitted", c.admitted)
+                    .set("shed", c.shed)
+                    .set("completed", c.completed)
+                    .set("faults", c.faults)
+                    .set("mismatches", c.mismatches)
+                    .set("rejected_queue_full", c.queue_full)
+                    .set("rejected_deadline", c.deadline)
+                    .set("rejected_saturated", c.saturated)
+                    .set("throughput_sps", c.throughput_sps)
+                    .set("p50_us", c.p50_us)
+                    .set("p99_us", c.p99_us)
+                    .set("p999_us", c.p999_us)
+                    .set("reconciled", c.reconciled)
+            })
+            .collect();
+        let doc = Json::obj()
+            .set("bench", "serve_load")
+            .set("tenants", tenants)
+            .set("arrivals", arrivals)
+            .set("samples", samples)
+            .set("slots_per_worker", pool)
+            .set("queue_depth", queue_depth)
+            .set("deadline_ms", deadline_ms)
+            .set("seed", seed)
+            .set("columns", Json::Arr(cols));
+        std::fs::write(path, doc.render() + "\n").expect("writing perf JSON");
+        println!("\nperf JSON written to {path}");
+    }
+
+    if args.has("guard-serve") {
+        for c in &columns {
+            assert!(
+                c.reconciled,
+                "rate {} x {} workers: admission accounting does not reconcile",
+                c.rate, c.workers
+            );
+            assert_eq!(
+                c.mismatches, 0,
+                "rate {} x {} workers: threaded decisions diverged from the \
+                 sequential reference",
+                c.rate, c.workers
+            );
+            assert_eq!(
+                c.faults, 0,
+                "rate {} x {} workers: streams faulted",
+                c.rate, c.workers
+            );
+        }
+        let lo = rates.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = rates.iter().copied().fold(0.0f64, f64::max);
+        let wmin = *worker_counts.iter().min().expect("workers list");
+        let wmax = *worker_counts.iter().max().expect("workers list");
+        let find = |rate: f64, workers: usize| {
+            columns
+                .iter()
+                .find(|c| c.rate == rate && c.workers == workers)
+                .expect("column present")
+        };
+        if wmax > wmin {
+            // tail guard: one log2 histogram bucket (2x) of slack for
+            // scheduler noise; sharding must not regress the idle tail
+            let (single, multi) = (find(lo, wmin), find(lo, wmax));
+            assert!(
+                multi.p99_us <= single.p99_us * 2.0 * 1.01,
+                "low-rate p99 regressed: {} workers {:.1} µs vs {} worker {:.1} µs",
+                wmax, multi.p99_us, wmin, single.p99_us
+            );
+            // scale-out guard: at the saturating rate, more workers
+            // must admit strictly more streams
+            let (single, multi) = (find(hi, wmin), find(hi, wmax));
+            assert!(
+                multi.admitted > single.admitted,
+                "scale-out bought nothing at {} /s: {} workers admitted {} vs \
+                 {} worker admitted {}",
+                hi, wmax, multi.admitted, wmin, single.admitted
+            );
+        }
+        println!("guard-serve: all gates passed");
+    }
+}

@@ -44,6 +44,24 @@ pub struct StepOutput {
     pub packets: u64,
 }
 
+/// An opaque snapshot of a deployment's on-chip weights: the raw u16
+/// weight words of every core, in compiled-core order. Produced by
+/// [`ExecBackend::checkpoint_weights`] and written back bit-exactly by
+/// [`ExecBackend::restore_weights`] — the isolation lever the serving
+/// gateway uses so one tenant's `learn_step`s cannot leak into the next
+/// tenant admitted on the same slot.
+#[derive(Clone, Debug)]
+pub struct WeightCheckpoint {
+    cores: Vec<Vec<u16>>,
+}
+
+impl WeightCheckpoint {
+    /// Total raw weight words captured (all cores).
+    pub fn words(&self) -> usize {
+        self.cores.iter().map(Vec::len).sum()
+    }
+}
+
 /// One execution engine under a [`super::Session`]. Implementations
 /// must be cheap to [`fork`](ExecBackend::fork) so `run_batch` and
 /// [`super::serve::SessionPool`] can parallelize across deployment
@@ -129,6 +147,25 @@ pub trait ExecBackend: Send {
     /// one entry (their aggregate).
     fn activity_per_chip(&self) -> Vec<ChipActivity> {
         vec![self.activity()]
+    }
+
+    /// Snapshot the deployment's on-chip weights bit-exactly. `None` on
+    /// engines without restorable weight state (the analytic
+    /// estimator); the detailed engines read the raw u16 weight words
+    /// of every core. On a pipelined multi-die fleet, call only while
+    /// quiesced (right after [`reset`](ExecBackend::reset) /
+    /// [`finish`](ExecBackend::finish)).
+    fn checkpoint_weights(&self) -> Result<Option<WeightCheckpoint>, RunError> {
+        Ok(None)
+    }
+
+    /// Write a [`checkpoint_weights`](ExecBackend::checkpoint_weights)
+    /// snapshot back, undoing any `learn_step` updates since it was
+    /// taken. Same quiescence requirement as the checkpoint.
+    fn restore_weights(&mut self, _ckpt: &WeightCheckpoint) -> Result<(), RunError> {
+        Err(RunError::Unsupported(
+            "this engine has no restorable on-chip weights",
+        ))
     }
 
     fn kind(&self) -> Backend;
@@ -259,6 +296,15 @@ impl ExecBackend for DetailedBackend {
 
     fn sched_stats(&self) -> SchedStats {
         self.dep.chip.sched
+    }
+
+    fn checkpoint_weights(&self) -> Result<Option<WeightCheckpoint>, RunError> {
+        let cores = self.dep.checkpoint_weights().map_err(RunError::Trap)?;
+        Ok(Some(WeightCheckpoint { cores }))
+    }
+
+    fn restore_weights(&mut self, ckpt: &WeightCheckpoint) -> Result<(), RunError> {
+        self.dep.restore_weights(&ckpt.cores).map_err(RunError::Trap)
     }
 
     fn kind(&self) -> Backend {
@@ -424,6 +470,15 @@ impl ExecBackend for MultiChipBackend {
 
     fn activity_per_chip(&self) -> Vec<ChipActivity> {
         self.dep.activity_per_chip()
+    }
+
+    fn checkpoint_weights(&self) -> Result<Option<WeightCheckpoint>, RunError> {
+        let cores = self.dep.checkpoint_weights().map_err(RunError::Trap)?;
+        Ok(Some(WeightCheckpoint { cores }))
+    }
+
+    fn restore_weights(&mut self, ckpt: &WeightCheckpoint) -> Result<(), RunError> {
+        self.dep.restore_weights(&ckpt.cores).map_err(RunError::Trap)
     }
 
     fn kind(&self) -> Backend {

@@ -71,8 +71,13 @@ pub use crate::compiler::{CompileError, Objective, ShardStrategy};
 pub use crate::coordinator::{PipelineStats, SampleRun, StepEvents, StepMode, StepRow};
 pub use backend::{
     AnalyticBackend, DetailedBackend, ExecBackend, MultiChipBackend, StepOutput,
+    WeightCheckpoint,
 };
-pub use serve::{PoolError, PoolStats, SessionPool, StreamId};
+pub use serve::{
+    Gateway, GatewayConfig, GatewayError, GatewayTelemetry, PoolError, PoolStats,
+    PoolTelemetry, Rejected, RejectionStats, SessionPool, ShardSnapshot, StreamId,
+    TenantStream, Ticket,
+};
 pub use workloads::{evaluate, Workload, WorkloadReport};
 
 /// Which execution engine a [`Session`] drives.
@@ -360,6 +365,95 @@ impl LatencyStats {
 
     pub fn max_us(&self) -> f64 {
         self.max_ns as f64 / 1e3
+    }
+}
+
+/// Log₂-bucketed latency histogram: the tail-quantile companion to
+/// [`LatencyStats`] (which carries mean/max only). Bucket `i` counts
+/// observations in `[2^i, 2^(i+1))` nanoseconds, so p50/p99/p999 come
+/// back with ≤ 2× resolution at any magnitude from sub-µs pushes to
+/// multi-second stalls, and shard histograms merge by plain addition —
+/// what [`serve::Gateway::telemetry`] aggregates across workers.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: [u64; LatencyHistogram::BUCKETS],
+    count: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: [0; LatencyHistogram::BUCKETS],
+            count: 0,
+            max_ns: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// 2^39 ns ≈ 9 minutes in the top bucket — beyond any plausible push.
+    const BUCKETS: usize = 40;
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        let idx = (63 - ns.max(1).leading_zeros() as usize)
+            .min(LatencyHistogram::BUCKETS - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Fold another histogram in (per-shard → aggregate).
+    pub fn merge(&mut self, o: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&o.buckets) {
+            *a += b;
+        }
+        self.count += o.count;
+        self.max_ns = self.max_ns.max(o.max_ns);
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_ns as f64 / 1e3
+    }
+
+    /// The `q`-quantile in microseconds (conservative: the upper bound
+    /// of the bucket holding the rank-`⌈q·count⌉` observation, clamped
+    /// to the observed max). 0.0 with no observations.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let hi = (1u128 << (i + 1)) - 1;
+                return (hi.min(self.max_ns as u128)) as f64 / 1e3;
+            }
+        }
+        self.max_us()
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.quantile_us(0.50)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.quantile_us(0.99)
+    }
+
+    pub fn p999_us(&self) -> f64 {
+        self.quantile_us(0.999)
     }
 }
 
@@ -1104,9 +1198,32 @@ impl Session {
         &self.net
     }
 
+    /// Whether this deployment was built with on-chip learning — i.e.
+    /// whether [`Session::learn_step`] can mutate its weights.
+    pub fn learning(&self) -> bool {
+        self.learning
+    }
+
     /// Samples executed so far (runs + finished streams).
     pub fn samples_run(&self) -> u64 {
         self.samples_run
+    }
+
+    /// Snapshot the deployment's on-chip weights bit-exactly (`None` on
+    /// engines without restorable weight state — the analytic
+    /// estimator). With [`Session::restore_weights`] this is the
+    /// serving gateway's tenant-isolation lever: capture at admission,
+    /// restore on release, so one tenant's `learn_step` fine-tune
+    /// cannot leak into the next tenant on the same slot. Call between
+    /// streams (a pipelined multi-die fleet must be quiesced).
+    pub fn checkpoint_weights(&self) -> Result<Option<WeightCheckpoint>, RunError> {
+        self.backend.checkpoint_weights()
+    }
+
+    /// Write a [`Session::checkpoint_weights`] snapshot back, undoing
+    /// any `learn_step` updates since it was taken.
+    pub fn restore_weights(&mut self, ckpt: &WeightCheckpoint) -> Result<(), RunError> {
+        self.backend.restore_weights(ckpt)
     }
 }
 
@@ -1477,6 +1594,87 @@ mod tests {
             w.decode(&run, &s).is_empty(),
             "unlabeled runs must not contribute accuracy pairs"
         );
+    }
+
+    /// Sessions (and the pool/gateway built over them) cross thread
+    /// boundaries — the sharded-gateway contract, pinned at compile
+    /// time.
+    #[test]
+    fn sessions_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Session>();
+        assert_send::<SessionPool>();
+        assert_send::<WeightCheckpoint>();
+    }
+
+    #[test]
+    fn latency_histogram_quantiles_bracket_samples() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.quantile_us(0.99), 0.0, "empty histogram reads 0");
+        for _ in 0..99 {
+            h.record_ns(1_000); // bucket [512, 1024): upper bound 1.023 µs
+        }
+        h.record_ns(1_000_000); // one 1 ms outlier
+        assert_eq!(h.count(), 100);
+        assert!(h.p50_us() >= 1.0 && h.p50_us() < 1.1, "p50={}", h.p50_us());
+        assert!(h.p99_us() < 1.1, "p99 sits below the outlier: {}", h.p99_us());
+        assert!(
+            h.p999_us() >= 999.0,
+            "p999 must surface the outlier: {}",
+            h.p999_us()
+        );
+        assert_eq!(h.max_us(), 1000.0);
+
+        // merge = bucket-wise addition
+        let mut other = LatencyHistogram::default();
+        for _ in 0..900 {
+            other.record_ns(100);
+        }
+        other.merge(&h);
+        assert_eq!(other.count(), 1000);
+        assert!(other.p50_us() < 1.0, "p50 moved to the fast bucket");
+        assert!(other.p999_us() >= 1.0, "tail still visible after merge");
+    }
+
+    #[test]
+    fn weight_checkpoint_restores_learned_weights() {
+        // learn_step perturbs on-chip weights; restore_weights must
+        // bring back the exact pre-learning snapshot (bit-exact raw
+        // words, so a restored run reproduces the original outputs)
+        let (net, w) = tiny_net();
+        let mut s = Taibai::new(net).weights(w).learning(true).build().unwrap();
+        let sample = Sample::Spikes(SpikeSample {
+            spikes: vec![vec![0u16, 1, 2, 3]; 6],
+            labels: vec![0],
+        });
+        let before = s.run(&sample).unwrap();
+        let ckpt = s
+            .checkpoint_weights()
+            .unwrap()
+            .expect("detailed engine has restorable weights");
+        assert!(ckpt.words() > 0);
+        s.learn_step(&[0.9, -0.9]).unwrap();
+        let during = s.run(&sample).unwrap();
+        assert_ne!(
+            before.outputs, during.outputs,
+            "learn_step must actually move the readout"
+        );
+        s.restore_weights(&ckpt).unwrap();
+        let after = s.run(&sample).unwrap();
+        assert_eq!(before.outputs, after.outputs, "restore must be bit-exact");
+    }
+
+    #[test]
+    fn analytic_backend_has_no_weight_checkpoint() {
+        let (net, _) = tiny_net();
+        let s = Taibai::new(net)
+            .exec(ExecOptions {
+                backend: Backend::Analytic,
+                ..ExecOptions::default()
+            })
+            .build()
+            .unwrap();
+        assert!(s.checkpoint_weights().unwrap().is_none());
     }
 
     // ---- run_batch partial-failure accounting ------------------------

@@ -1,0 +1,850 @@
+//! The sharded, multi-threaded serving front-end: N worker threads,
+//! each owning one single-threaded [`SessionPool`], behind bounded
+//! admission queues — the pool-scale-out rung of the ROADMAP's serving
+//! story.
+//!
+//! **Sharding** is by tenant hash: [`Gateway::open`] and
+//! [`Gateway::submit`] route a tenant id through a splitmix64 hash to
+//! its *home shard*, so every push of a given stream lands on the same
+//! worker (streams never migrate — the pool's single-threaded event
+//! loop stays the unit of execution, and results stay bit-identical to
+//! a sequential run by construction).
+//!
+//! **Admission control** replaces bare `Saturated` rejections with
+//! typed, counted outcomes ([`Rejected`]): a full admission queue sheds
+//! load immediately ([`Rejected::QueueFull`] — `try_send`, the caller
+//! never blocks), a queued request whose deadline passes before its
+//! worker dequeues it is dropped ([`Rejected::DeadlineExceeded`]), and
+//! a pool with every slot busy still rejects with
+//! [`Rejected::Saturated`]. Mid-stream operations (push / confidence /
+//! learn / release) use *blocking* sends instead — backpressure, not
+//! load-shedding: an admitted stream is never dropped by the gateway.
+//!
+//! **Tenant isolation for learning deployments**: the worker captures a
+//! bit-exact per-slot weight checkpoint at admission and restores it on
+//! release, so one tenant's [`Gateway::learn`] fine-tune cannot leak
+//! into the next tenant admitted on the same slot — the leak the bare
+//! pool documents and `tests/gateway_serve.rs` pins.
+//!
+//! **Telemetry** follows the one-snapshot consolidation:
+//! [`Gateway::telemetry`] returns per-shard [`ShardSnapshot`]s (pool
+//! counters, p50/p99/p999 push-latency histogram, rejection breakdown,
+//! chip activity) plus the merged aggregate, and
+//! [`GatewayTelemetry::reconciled`] proves the accounting closes:
+//! `attempts == opened + rejected` and `opened == completed + faulted +
+//! active`.
+//!
+//! ```no_run
+//! use taibai::api::workloads::{Shd, Workload};
+//! use taibai::api::{Backend, Gateway, GatewayConfig, Sample};
+//!
+//! let template = Shd { dendrites: true }.session(Backend::Detailed, 42).unwrap();
+//! let gw = Gateway::new(&template, GatewayConfig {
+//!     workers: 4,
+//!     slots_per_worker: 2,
+//!     queue_depth: 32,
+//!     deadline: Some(std::time::Duration::from_millis(50)),
+//! }).unwrap();
+//! let ticket = gw.submit(7, Sample::poisson(700, 25, 0.1, 1), None).unwrap();
+//! let report = ticket.wait().unwrap();
+//! println!("decoded {:?}", report.decision);
+//! let t = gw.telemetry();
+//! println!("p99 {:.1} µs, rejected {}", t.histogram.p99_us(), t.rejected.total());
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::chip::ChipActivity;
+
+use super::super::{
+    add_activity, LatencyHistogram, RunError, Sample, Session, StepEvents, StepOutput,
+    StreamReport, WeightCheckpoint,
+};
+use super::{PoolError, PoolStats, SessionPool, StreamId};
+
+/// Gateway shape: how many worker threads, how deep each pool and
+/// queue, and the admission deadline.
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Worker threads, one [`SessionPool`] each (clamped ≥ 1).
+    pub workers: usize,
+    /// Deployments per worker pool (clamped ≥ 1).
+    pub slots_per_worker: usize,
+    /// Bound of each shard's admission queue; a full queue sheds new
+    /// open/submit requests with [`Rejected::QueueFull`] (clamped ≥ 1).
+    pub queue_depth: usize,
+    /// Max time an open/submit may sit queued before its worker picks
+    /// it up; overdue requests are dropped with
+    /// [`Rejected::DeadlineExceeded`]. `None` = no deadline.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> GatewayConfig {
+        GatewayConfig {
+            workers: 2,
+            slots_per_worker: 4,
+            queue_depth: 32,
+            deadline: None,
+        }
+    }
+}
+
+/// Why the gateway refused a request — every variant is counted in
+/// [`RejectionStats`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// The home shard's admission queue was full (load shed at the
+    /// door; nothing was enqueued).
+    QueueFull,
+    /// The request sat queued past the configured deadline and was
+    /// dropped by the worker before touching a pool.
+    DeadlineExceeded,
+    /// The home shard's pool had no free slot.
+    Saturated,
+}
+
+/// Serving-gateway failures: typed rejections plus the pass-throughs
+/// from the pool underneath.
+#[derive(Clone, Debug)]
+pub enum GatewayError {
+    /// Admission control refused the request (see [`Rejected`]).
+    Rejected(Rejected),
+    /// The stream handle was already released (or never issued).
+    StaleStream,
+    /// The underlying engine failed.
+    Run(RunError),
+    /// The shard worker is gone (gateway shut down or worker died).
+    Closed,
+}
+
+impl std::fmt::Display for GatewayError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GatewayError::Rejected(Rejected::QueueFull) => {
+                write!(f, "rejected: admission queue full")
+            }
+            GatewayError::Rejected(Rejected::DeadlineExceeded) => {
+                write!(f, "rejected: queued past deadline")
+            }
+            GatewayError::Rejected(Rejected::Saturated) => {
+                write!(f, "rejected: pool saturated")
+            }
+            GatewayError::StaleStream => write!(f, "stale stream handle"),
+            GatewayError::Run(e) => write!(f, "{e}"),
+            GatewayError::Closed => write!(f, "shard worker is gone"),
+        }
+    }
+}
+
+impl std::error::Error for GatewayError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            GatewayError::Run(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+fn from_pool(e: PoolError) -> GatewayError {
+    match e {
+        PoolError::Saturated => GatewayError::Rejected(Rejected::Saturated),
+        PoolError::StaleStream => GatewayError::StaleStream,
+        PoolError::Run(e) => GatewayError::Run(e),
+    }
+}
+
+/// Typed rejection counters, one per [`Rejected`] variant.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RejectionStats {
+    pub queue_full: u64,
+    pub deadline: u64,
+    pub saturated: u64,
+}
+
+impl RejectionStats {
+    pub fn total(&self) -> u64 {
+        self.queue_full + self.deadline + self.saturated
+    }
+
+    pub fn merge(&mut self, o: &RejectionStats) {
+        self.queue_full += o.queue_full;
+        self.deadline += o.deadline;
+        self.saturated += o.saturated;
+    }
+}
+
+/// Handle of one admitted tenant stream: which shard it lives on plus
+/// the pool-level generation-tokened [`StreamId`]. `Copy`, like the id
+/// it wraps; goes stale at [`Gateway::release`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TenantStream {
+    tenant: u64,
+    shard: usize,
+    id: StreamId,
+}
+
+impl TenantStream {
+    pub fn tenant(&self) -> u64 {
+        self.tenant
+    }
+
+    /// Home shard (worker index) — every operation on this stream runs
+    /// there.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Pool slot within the home shard.
+    pub fn slot(&self) -> usize {
+        self.id.slot()
+    }
+}
+
+/// Completion handle of a [`Gateway::submit`]-ed whole-stream request.
+pub struct Ticket {
+    rx: Receiver<Result<StreamReport, GatewayError>>,
+}
+
+impl Ticket {
+    /// Block until the home shard finishes (or rejects) the stream.
+    pub fn wait(self) -> Result<StreamReport, GatewayError> {
+        self.rx.recv().map_err(|_| GatewayError::Closed)?
+    }
+}
+
+/// One shard's telemetry: its pool counters + histogram + activity,
+/// the shard-local rejection breakdown, and the admission attempts
+/// routed to it.
+#[derive(Clone, Debug)]
+pub struct ShardSnapshot {
+    /// Worker index.
+    pub shard: usize,
+    /// The shard pool's serving counters.
+    pub stats: PoolStats,
+    /// Push-latency histogram of the shard pool (p50/p99/p999).
+    pub histogram: LatencyHistogram,
+    /// Rejection breakdown (`saturated` mirrors `stats.rejected`).
+    pub rejected: RejectionStats,
+    /// open/submit requests routed to this shard (admitted + rejected).
+    pub attempts: u64,
+    /// Aggregate chip activity of the shard pool.
+    pub activity: ChipActivity,
+}
+
+/// One observability snapshot of the whole gateway
+/// ([`Gateway::telemetry`]): per-shard snapshots plus their merged
+/// aggregate.
+#[derive(Clone, Debug)]
+pub struct GatewayTelemetry {
+    pub shards: Vec<ShardSnapshot>,
+    /// Aggregate pool counters across shards.
+    pub stats: PoolStats,
+    /// Merged push-latency histogram across shards.
+    pub histogram: LatencyHistogram,
+    /// Aggregate rejection breakdown.
+    pub rejected: RejectionStats,
+    /// Total open/submit requests routed (admitted + rejected).
+    pub attempts: u64,
+    /// Aggregate chip activity across every deployment.
+    pub activity: ChipActivity,
+}
+
+impl GatewayTelemetry {
+    /// The admission accounting closes: every routed request was either
+    /// admitted or counted in exactly one rejection bucket, and every
+    /// admitted stream completed, faulted, or is still active. Holds
+    /// whenever no request is mid-flight (snapshot with requests in the
+    /// queues may transiently miscount `attempts` vs `opened`).
+    pub fn reconciled(&self) -> bool {
+        self.attempts == self.stats.opened + self.rejected.total()
+            && self.stats.reconciled()
+    }
+}
+
+/// Owned per-timestep events — [`StepEvents`] that can cross the
+/// channel into a worker thread.
+enum OwnedEvents {
+    Spikes(Vec<u16>),
+    Dense(Vec<f32>),
+}
+
+impl OwnedEvents {
+    fn own(ev: StepEvents<'_>) -> OwnedEvents {
+        match ev {
+            StepEvents::Spikes(s) => OwnedEvents::Spikes(s.to_vec()),
+            StepEvents::Dense(d) => OwnedEvents::Dense(d.to_vec()),
+        }
+    }
+
+    fn as_events(&self) -> StepEvents<'_> {
+        match self {
+            OwnedEvents::Spikes(s) => StepEvents::Spikes(s),
+            OwnedEvents::Dense(d) => StepEvents::Dense(d),
+        }
+    }
+}
+
+/// One queued request. Open/Run carry their enqueue instant so the
+/// worker can enforce the admission deadline at dequeue; mid-stream
+/// operations are never deadline-dropped (backpressure instead).
+enum Job {
+    Open {
+        enqueued: Instant,
+        reply: Sender<Result<StreamId, GatewayError>>,
+    },
+    Push {
+        id: StreamId,
+        ev: OwnedEvents,
+        reply: Sender<Result<StepOutput, GatewayError>>,
+    },
+    Confidence {
+        id: StreamId,
+        #[allow(clippy::type_complexity)]
+        reply: Sender<Result<Option<(usize, f64)>, GatewayError>>,
+    },
+    Learn {
+        id: StreamId,
+        errors: Vec<f32>,
+        reply: Sender<Result<(), GatewayError>>,
+    },
+    Release {
+        id: StreamId,
+        reply: Sender<Result<StreamReport, GatewayError>>,
+    },
+    Run {
+        enqueued: Instant,
+        sample: Sample,
+        /// `(confidence threshold, min steps)` early stop.
+        early_stop: Option<(f64, usize)>,
+        reply: Sender<Result<StreamReport, GatewayError>>,
+    },
+    Telemetry {
+        reply: Sender<ShardSnapshot>,
+    },
+    Shutdown,
+}
+
+/// Counters the caller side updates (rejections that never reach the
+/// worker) — folded into the shard snapshot at telemetry time.
+struct ShardShared {
+    attempts: AtomicU64,
+    queue_full: AtomicU64,
+}
+
+struct Shard {
+    tx: SyncSender<Job>,
+    shared: Arc<ShardShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The worker-thread side of one shard: a single-threaded
+/// [`SessionPool`] plus the per-slot weight checkpoints that isolate
+/// learning tenants.
+struct ShardWorker {
+    pool: SessionPool,
+    /// Weights captured at admission, restored at release (learning
+    /// deployments only — `None` per slot otherwise).
+    checkpoints: Vec<Option<WeightCheckpoint>>,
+    deadline: Option<Duration>,
+    /// Requests dropped at dequeue because they sat queued past the
+    /// deadline.
+    deadline_missed: u64,
+}
+
+impl ShardWorker {
+    fn overdue(&self, enqueued: Instant) -> bool {
+        self.deadline.is_some_and(|d| enqueued.elapsed() > d)
+    }
+
+    /// Admit one stream and, on learning deployments, capture the
+    /// slot's pre-tenant weights so release can undo any fine-tune.
+    fn admit(&mut self) -> Result<StreamId, GatewayError> {
+        let id = self.pool.open().map_err(from_pool)?;
+        let slot = id.slot();
+        let learning = self
+            .pool
+            .session(slot)
+            .is_some_and(|s| s.learning());
+        if learning {
+            match self.pool.session(slot).unwrap().checkpoint_weights() {
+                Ok(ckpt) => self.checkpoints[slot] = ckpt,
+                Err(e) => {
+                    // cannot guarantee isolation: refuse the admission
+                    let _ = self.pool.release(id);
+                    return Err(GatewayError::Run(e));
+                }
+            }
+        }
+        Ok(id)
+    }
+
+    /// Release a stream and restore the slot's pre-admission weights
+    /// (checkpointed at admit). The release result wins unless the
+    /// restore itself fails — a compromised slot is worth surfacing.
+    fn release(&mut self, id: StreamId) -> Result<StreamReport, GatewayError> {
+        let slot = id.slot();
+        let rep = self.pool.release(id).map_err(from_pool);
+        if let Some(ckpt) = self.checkpoints[slot].take() {
+            if let Some(sess) = self.pool.session_mut(slot) {
+                if let Err(e) = sess.restore_weights(&ckpt) {
+                    return Err(GatewayError::Run(e));
+                }
+            }
+        }
+        rep
+    }
+
+    /// Whole-stream execution: admit, push every timestep (with
+    /// optional confidence early-stop), release. An engine fault mid-
+    /// stream still releases the slot (the fault is booked as
+    /// `faulted`) and surfaces the push error.
+    fn run_stream(
+        &mut self,
+        sample: &Sample,
+        early_stop: Option<(f64, usize)>,
+    ) -> Result<StreamReport, GatewayError> {
+        let id = self.admit()?;
+        let mut failed = None;
+        for t in 0..sample.timesteps() {
+            if let Err(e) = self.pool.push(id, sample.events_at(t)) {
+                failed = Some(from_pool(e));
+                break;
+            }
+            if let Some((threshold, min_steps)) = early_stop {
+                if t + 1 >= min_steps {
+                    if let Ok(Some((_, p))) = self.pool.confidence(id) {
+                        if p >= threshold {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        let released = self.release(id);
+        match failed {
+            Some(e) => Err(e),
+            None => released,
+        }
+    }
+
+    fn snapshot(&self) -> ShardSnapshot {
+        let t = self.pool.telemetry();
+        ShardSnapshot {
+            shard: 0, // filled by the gateway side
+            rejected: RejectionStats {
+                queue_full: 0, // filled by the gateway side
+                deadline: self.deadline_missed,
+                saturated: t.stats.rejected,
+            },
+            attempts: 0, // filled by the gateway side
+            stats: t.stats,
+            histogram: t.histogram,
+            activity: t.activity,
+        }
+    }
+
+    fn run(mut self, rx: Receiver<Job>) {
+        while let Ok(job) = rx.recv() {
+            match job {
+                Job::Open { enqueued, reply } => {
+                    let r = if self.overdue(enqueued) {
+                        self.deadline_missed += 1;
+                        Err(GatewayError::Rejected(Rejected::DeadlineExceeded))
+                    } else {
+                        self.admit()
+                    };
+                    let _ = reply.send(r);
+                }
+                Job::Push { id, ev, reply } => {
+                    let r = self
+                        .pool
+                        .push(id, ev.as_events())
+                        .map(|o| o.clone())
+                        .map_err(from_pool);
+                    let _ = reply.send(r);
+                }
+                Job::Confidence { id, reply } => {
+                    let _ = reply.send(self.pool.confidence(id).map_err(from_pool));
+                }
+                Job::Learn { id, errors, reply } => {
+                    let _ = reply.send(self.pool.learn(id, &errors).map_err(from_pool));
+                }
+                Job::Release { id, reply } => {
+                    let r = self.release(id);
+                    let _ = reply.send(r);
+                }
+                Job::Run {
+                    enqueued,
+                    sample,
+                    early_stop,
+                    reply,
+                } => {
+                    let r = if self.overdue(enqueued) {
+                        self.deadline_missed += 1;
+                        Err(GatewayError::Rejected(Rejected::DeadlineExceeded))
+                    } else {
+                        self.run_stream(&sample, early_stop)
+                    };
+                    let _ = reply.send(r);
+                }
+                Job::Telemetry { reply } => {
+                    let _ = reply.send(self.snapshot());
+                }
+                Job::Shutdown => break,
+            }
+        }
+    }
+}
+
+/// The sharded serving front-end (see the module docs for the
+/// contract). Construction spawns the workers; drop shuts them down
+/// and joins them.
+pub struct Gateway {
+    shards: Vec<Shard>,
+}
+
+impl Gateway {
+    /// Spawn `cfg.workers` shard threads, each with its own
+    /// [`SessionPool`] of `cfg.slots_per_worker` forks of `template`
+    /// (shared compiled image, per-slot chip state).
+    pub fn new(template: &Session, cfg: GatewayConfig) -> Result<Gateway, RunError> {
+        let workers = cfg.workers.max(1);
+        let slots = cfg.slots_per_worker.max(1);
+        let depth = cfg.queue_depth.max(1);
+        let mut shards = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let pool = SessionPool::new(template.fork()?, slots)?;
+            let (tx, rx) = sync_channel::<Job>(depth);
+            let worker = ShardWorker {
+                pool,
+                checkpoints: vec![None; slots],
+                deadline: cfg.deadline,
+                deadline_missed: 0,
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("taibai-shard-{w}"))
+                .spawn(move || worker.run(rx))
+                .map_err(|e| RunError::Thread(e.to_string()))?;
+            shards.push(Shard {
+                tx,
+                shared: Arc::new(ShardShared {
+                    attempts: AtomicU64::new(0),
+                    queue_full: AtomicU64::new(0),
+                }),
+                handle: Some(handle),
+            });
+        }
+        Ok(Gateway { shards })
+    }
+
+    /// Worker threads (= shards).
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The home shard a tenant id routes to — stable for the gateway's
+    /// life, so all of a tenant's streams share one worker's pools.
+    pub fn shard_of(&self, tenant: u64) -> usize {
+        // splitmix64 finalizer: avalanches dense tenant ids (0, 1, 2…)
+        // across shards instead of mapping them modulo-contiguously
+        let mut z = tenant.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        ((z ^ (z >> 31)) % self.shards.len() as u64) as usize
+    }
+
+    /// Route an admission attempt: count it, shed immediately on a full
+    /// queue, otherwise enqueue and wait for the worker's answer.
+    fn enqueue_admission(
+        &self,
+        shard: usize,
+        make: impl FnOnce(Instant) -> Job,
+    ) -> Result<(), GatewayError> {
+        let s = &self.shards[shard];
+        s.shared.attempts.fetch_add(1, Ordering::Relaxed);
+        match s.tx.try_send(make(Instant::now())) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => {
+                s.shared.queue_full.fetch_add(1, Ordering::Relaxed);
+                Err(GatewayError::Rejected(Rejected::QueueFull))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(GatewayError::Closed),
+        }
+    }
+
+    /// Admit one stream for `tenant` on its home shard. Sheds with
+    /// [`Rejected::QueueFull`] / [`Rejected::DeadlineExceeded`] /
+    /// [`Rejected::Saturated`] under load; otherwise blocks for the
+    /// admission result.
+    pub fn open(&self, tenant: u64) -> Result<TenantStream, GatewayError> {
+        let shard = self.shard_of(tenant);
+        let (rtx, rrx) = channel();
+        self.enqueue_admission(shard, |enqueued| Job::Open {
+            enqueued,
+            reply: rtx,
+        })?;
+        let id = rrx.recv().map_err(|_| GatewayError::Closed)??;
+        Ok(TenantStream { tenant, shard, id })
+    }
+
+    /// Submit a whole sample as one stream on the tenant's home shard
+    /// and return a [`Ticket`] immediately — the open-loop serving
+    /// path. `early_stop` is `(confidence threshold, min steps)`.
+    /// Sheds with [`Rejected::QueueFull`] when the queue is full; the
+    /// deadline and saturation verdicts arrive through the ticket.
+    pub fn submit(
+        &self,
+        tenant: u64,
+        sample: Sample,
+        early_stop: Option<(f64, usize)>,
+    ) -> Result<Ticket, GatewayError> {
+        let shard = self.shard_of(tenant);
+        let (rtx, rrx) = channel();
+        self.enqueue_admission(shard, |enqueued| Job::Run {
+            enqueued,
+            sample,
+            early_stop,
+            reply: rtx,
+        })?;
+        Ok(Ticket { rx: rrx })
+    }
+
+    /// Send a mid-stream job with backpressure (blocking send — an
+    /// admitted stream is never shed) and wait for the reply.
+    fn roundtrip<T>(
+        &self,
+        shard: usize,
+        job: Job,
+        rrx: Receiver<Result<T, GatewayError>>,
+    ) -> Result<T, GatewayError> {
+        self.shards[shard]
+            .tx
+            .send(job)
+            .map_err(|_| GatewayError::Closed)?;
+        rrx.recv().map_err(|_| GatewayError::Closed)?
+    }
+
+    /// Push one timestep of events into a tenant's stream (on its home
+    /// shard).
+    pub fn push(
+        &self,
+        h: TenantStream,
+        ev: StepEvents<'_>,
+    ) -> Result<StepOutput, GatewayError> {
+        let (rtx, rrx) = channel();
+        self.roundtrip(
+            h.shard,
+            Job::Push {
+                id: h.id,
+                ev: OwnedEvents::own(ev),
+                reply: rtx,
+            },
+            rrx,
+        )
+    }
+
+    /// Rate-decode of a tenant's stream so far (early-stop signal).
+    pub fn confidence(
+        &self,
+        h: TenantStream,
+    ) -> Result<Option<(usize, f64)>, GatewayError> {
+        let (rtx, rrx) = channel();
+        self.roundtrip(h.shard, Job::Confidence { id: h.id, reply: rtx }, rrx)
+    }
+
+    /// Per-tenant online fine-tune: one on-chip learning sweep on the
+    /// tenant's slot. Isolated — the slot's weights are checkpointed at
+    /// admission and restored at release, so the fine-tune dies with
+    /// the stream.
+    pub fn learn(&self, h: TenantStream, errors: &[f32]) -> Result<(), GatewayError> {
+        let (rtx, rrx) = channel();
+        self.roundtrip(
+            h.shard,
+            Job::Learn {
+                id: h.id,
+                errors: errors.to_vec(),
+                reply: rtx,
+            },
+            rrx,
+        )
+    }
+
+    /// Finish a tenant's stream, scrub the slot, restore its
+    /// pre-admission weights (learning deployments), and free it.
+    pub fn release(&self, h: TenantStream) -> Result<StreamReport, GatewayError> {
+        let (rtx, rrx) = channel();
+        self.roundtrip(h.shard, Job::Release { id: h.id, reply: rtx }, rrx)
+    }
+
+    /// One observability snapshot: per-shard counters + histograms +
+    /// rejection breakdowns, and their merged aggregate. Queues behind
+    /// in-flight jobs on each shard (it is itself a job), so the
+    /// numbers are each shard's view at its dequeue instant.
+    pub fn telemetry(&self) -> GatewayTelemetry {
+        let mut shards = Vec::with_capacity(self.shards.len());
+        for (i, s) in self.shards.iter().enumerate() {
+            let (rtx, rrx) = channel();
+            if s.tx.send(Job::Telemetry { reply: rtx }).is_err() {
+                continue;
+            }
+            let Ok(mut snap) = rrx.recv() else { continue };
+            snap.shard = i;
+            snap.attempts = s.shared.attempts.load(Ordering::Relaxed);
+            snap.rejected.queue_full = s.shared.queue_full.load(Ordering::Relaxed);
+            shards.push(snap);
+        }
+        let mut stats = PoolStats::default();
+        let mut histogram = LatencyHistogram::default();
+        let mut rejected = RejectionStats::default();
+        let mut attempts = 0;
+        let mut activity = ChipActivity::default();
+        for s in &shards {
+            stats.merge(&s.stats);
+            histogram.merge(&s.histogram);
+            rejected.merge(&s.rejected);
+            attempts += s.attempts;
+            add_activity(&mut activity, &s.activity);
+        }
+        GatewayTelemetry {
+            shards,
+            stats,
+            histogram,
+            rejected,
+            attempts,
+            activity,
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        // queued jobs drain first (Shutdown sits behind them), so
+        // outstanding tickets resolve before the workers exit
+        for s in &self.shards {
+            let _ = s.tx.send(Job::Shutdown);
+        }
+        for s in &mut self.shards {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Taibai;
+    use crate::model::{Layer, NetDef, NeuronModel};
+
+    fn tiny_session() -> Session {
+        let mut net = NetDef::new("tiny-gw", 6);
+        net.layers.push(Layer::Input { size: 4 });
+        net.layers.push(Layer::Fc {
+            input: 4,
+            output: 3,
+            neuron: NeuronModel::Lif { tau: 0.5, vth: 0.9 },
+        });
+        net.layers.push(Layer::Fc {
+            input: 3,
+            output: 2,
+            neuron: NeuronModel::Readout { tau: 0.5 },
+        });
+        let mut w1 = vec![0.0f32; 4 * 3];
+        for i in 0..4 {
+            w1[i * 3 + i % 3] = 1.0;
+        }
+        let w2 = vec![0.6, 0.0, 0.6, 0.0, 0.0, 0.6];
+        Taibai::new(net).weights(vec![vec![], w1, w2]).build().unwrap()
+    }
+
+    #[test]
+    fn open_push_release_roundtrips_across_threads() {
+        let gw = Gateway::new(&tiny_session(), GatewayConfig::default()).unwrap();
+        let h = gw.open(7).unwrap();
+        assert_eq!(h.tenant(), 7);
+        assert_eq!(h.shard(), gw.shard_of(7));
+        let out = gw.push(h, StepEvents::Spikes(&[0, 1])).unwrap();
+        assert!(out.row.is_some());
+        let rep = gw.release(h).unwrap();
+        assert_eq!(rep.steps, 1);
+        let t = gw.telemetry();
+        assert_eq!(t.stats.opened, 1);
+        assert_eq!(t.stats.completed, 1);
+        assert_eq!(t.attempts, 1);
+        assert!(t.reconciled(), "{t:?}");
+    }
+
+    #[test]
+    fn submit_tickets_resolve_with_decisions() {
+        let gw = Gateway::new(
+            &tiny_session(),
+            GatewayConfig {
+                workers: 2,
+                slots_per_worker: 1,
+                ..GatewayConfig::default()
+            },
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..6u64)
+            .map(|t| gw.submit(t, Sample::poisson(4, 6, 0.5, t), None).unwrap())
+            .collect();
+        for ticket in tickets {
+            let rep = ticket.wait().unwrap();
+            assert_eq!(rep.steps, 6);
+            assert!(rep.decision.is_some());
+        }
+        let t = gw.telemetry();
+        assert_eq!(t.stats.opened, 6);
+        assert_eq!(t.stats.completed, 6);
+        assert!(t.reconciled(), "{t:?}");
+    }
+
+    #[test]
+    fn zero_deadline_rejects_every_queued_admission() {
+        let gw = Gateway::new(
+            &tiny_session(),
+            GatewayConfig {
+                workers: 1,
+                deadline: Some(Duration::ZERO),
+                ..GatewayConfig::default()
+            },
+        )
+        .unwrap();
+        match gw.open(1) {
+            Err(GatewayError::Rejected(Rejected::DeadlineExceeded)) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        let t = gw.telemetry();
+        assert_eq!(t.rejected.deadline, 1);
+        assert_eq!(t.attempts, 1);
+        assert!(t.reconciled(), "{t:?}");
+    }
+
+    #[test]
+    fn tenants_route_to_stable_shards() {
+        let gw = Gateway::new(
+            &tiny_session(),
+            GatewayConfig {
+                workers: 4,
+                ..GatewayConfig::default()
+            },
+        )
+        .unwrap();
+        for tenant in 0..32u64 {
+            assert_eq!(gw.shard_of(tenant), gw.shard_of(tenant), "stable routing");
+            assert!(gw.shard_of(tenant) < 4);
+        }
+        // dense tenant ids must not all collapse onto one shard
+        let mut hit = [false; 4];
+        for tenant in 0..32u64 {
+            hit[gw.shard_of(tenant)] = true;
+        }
+        assert!(hit.iter().filter(|&&h| h).count() >= 2, "{hit:?}");
+    }
+}

@@ -1,13 +1,15 @@
 //! Multi-tenant serving: a fixed pool of deployments multiplexing many
-//! concurrent client streams — the first piece of the ROADMAP's
-//! "heavy traffic from millions of users" story.
+//! concurrent client streams — the per-worker core of the ROADMAP's
+//! "heavy traffic from millions of users" story. The multi-threaded
+//! front-end over N of these pools lives in [`gateway`].
 //!
 //! A [`SessionPool`] owns N identical deployments of one model —
 //! every slot a pristine [`Session::fork`] of the template's compiled
 //! image (shared behind an `Arc`, per-slot chip state), so no slot can
-//! carry live fine-tune state the others lack. Clients are admitted
-//! **round-robin** over the free
-//! slots ([`SessionPool::open`]); a full pool rejects with
+//! carry live fine-tune state the others lack. Clients are admitted off
+//! a free-list in round-robin order ([`SessionPool::open`] is O(1) —
+//! released slots return to the list *tail*, so admissions spread over
+//! the slots instead of hammering slot 0); a full pool rejects with
 //! [`PoolError::Saturated`] (counted in [`PoolStats::rejected`]) so the
 //! caller can queue, shed, or scale. Every admitted client gets an
 //! exclusive [`StreamId`]-addressed stream over its slot:
@@ -21,12 +23,26 @@
 //! `stream_parity` tests pin N interleaved pool streams bit-identical
 //! to N sequential sessions. [`StreamId`]s carry a generation token, so
 //! a stale handle (kept after release) gets [`PoolError::StaleStream`]
-//! instead of silently touching another client's stream.
+//! instead of silently touching another client's stream. *Weights* are
+//! NOT scrubbed by release ([`Session::reset`] zeroes dynamic state
+//! only) — a learning tenant's [`learn`](SessionPool::learn) updates
+//! survive into the next tenant on that slot. The bare pool leaves
+//! that policy to the caller; the [`gateway`] closes the leak with
+//! per-slot weight checkpoints (capture at admission, restore on
+//! release).
 //!
 //! The pool is single-threaded by design — one `push` at a time, which
 //! is exactly the event-loop shape of a network server front-end; for
 //! CPU parallelism, shard clients across several pools (sessions are
-//! `Send`, one pool per worker thread).
+//! `Send`, one pool per worker thread) — that is precisely what
+//! [`gateway::Gateway`] does, adding bounded admission queues,
+//! deadlines, and typed rejection accounting on top.
+//!
+//! Observability is one snapshot: [`SessionPool::telemetry`] returns a
+//! [`PoolTelemetry`] — counters, the p50/p99/p999 push-latency
+//! histogram, and aggregate chip activity, sampled at the same instant
+//! (the free-standing [`SessionPool::stats`] getter is deprecated in
+//! line with the `Session::telemetry()` consolidation).
 //!
 //! ```no_run
 //! use taibai::api::workloads::{Shd, Workload};
@@ -40,13 +56,24 @@
 //! println!("row: {:?}", out.row);
 //! let report = pool.release(id).expect("release");
 //! println!("decoded: {:?}", report.decision);
-//! println!("{}", pool.stats());
+//! let t = pool.telemetry();
+//! println!("{} (p99 {:.1} µs)", t.stats, t.histogram.p99_us());
 //! ```
+
+pub mod gateway;
+
+use std::collections::VecDeque;
 
 use crate::chip::ChipActivity;
 
 use super::{
-    add_activity, LatencyStats, RunError, Session, StepEvents, StepOutput, StreamReport,
+    add_activity, LatencyHistogram, LatencyStats, RunError, Session, StepEvents,
+    StepOutput, StreamReport,
+};
+
+pub use gateway::{
+    Gateway, GatewayConfig, GatewayError, GatewayTelemetry, Rejected, RejectionStats,
+    ShardSnapshot, TenantStream, Ticket,
 };
 
 /// Address of one admitted client stream: slot index + generation
@@ -103,7 +130,9 @@ impl From<RunError> for PoolError {
     }
 }
 
-/// Aggregate serving counters of a pool.
+/// Aggregate serving counters of a pool. Reconciles: every admitted
+/// stream is accounted exactly once, `opened == completed + faulted +
+/// active` (see [`PoolStats::reconciled`]).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PoolStats {
     /// Deployments in the pool.
@@ -114,8 +143,11 @@ pub struct PoolStats {
     pub peak_active: usize,
     /// Streams admitted.
     pub opened: u64,
-    /// Streams finished and released.
+    /// Streams finished and released cleanly.
     pub completed: u64,
+    /// Streams whose release faulted (engine error on finish/reset);
+    /// the slot itself recovers.
+    pub faulted: u64,
     /// Admissions refused because the pool was saturated.
     pub rejected: u64,
     /// Timesteps pushed across all completed streams.
@@ -126,23 +158,62 @@ pub struct PoolStats {
     pub latency: LatencyStats,
 }
 
+impl PoolStats {
+    /// Every admitted stream is accounted exactly once: completed,
+    /// faulted, or still active. Holds at every instant on a
+    /// single-threaded pool; on the gateway it holds whenever no
+    /// request is mid-flight.
+    pub fn reconciled(&self) -> bool {
+        self.opened == self.completed + self.faulted + self.active as u64
+    }
+
+    /// Fold another pool's counters in (per-shard → gateway aggregate).
+    /// `peak_active` sums — an upper bound on the true joint peak.
+    pub fn merge(&mut self, o: &PoolStats) {
+        self.capacity += o.capacity;
+        self.active += o.active;
+        self.peak_active += o.peak_active;
+        self.opened += o.opened;
+        self.completed += o.completed;
+        self.faulted += o.faulted;
+        self.rejected += o.rejected;
+        self.steps += o.steps;
+        self.spikes += o.spikes;
+        self.latency.merge(&o.latency);
+    }
+}
+
 impl std::fmt::Display for PoolStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "pool[{}]: {} open ({} peak), {} admitted / {} completed / {} rejected, \
-             {} steps, {:.1} µs/push mean ({:.1} max)",
+            "pool[{}]: {} open ({} peak), {} admitted / {} completed / {} faulted \
+             / {} rejected, {} steps, {:.1} µs/push mean ({:.1} max)",
             self.capacity,
             self.active,
             self.peak_active,
             self.opened,
             self.completed,
+            self.faulted,
             self.rejected,
             self.steps,
             self.latency.mean_us(),
             self.latency.max_us(),
         )
     }
+}
+
+/// One observability snapshot of a pool ([`SessionPool::telemetry`]):
+/// counters, tail-latency histogram, and chip activity sampled at the
+/// same instant — the serving-layer sibling of `Session::telemetry()`.
+#[derive(Clone, Debug)]
+pub struct PoolTelemetry {
+    /// Serving counters (admissions, releases, rejections, …).
+    pub stats: PoolStats,
+    /// Push-latency histogram across every stream served (p50/p99/p999).
+    pub histogram: LatencyHistogram,
+    /// Aggregate chip activity across every deployment in the pool.
+    pub activity: ChipActivity,
 }
 
 struct Slot {
@@ -155,10 +226,15 @@ struct Slot {
 /// streams (see the module docs for the serving contract).
 pub struct SessionPool {
     slots: Vec<Slot>,
-    /// Round-robin admission cursor.
-    rr: usize,
+    /// Free slots in admission order: `open` pops the head (O(1)),
+    /// `release` returns the slot to the tail — round-robin spread
+    /// without scanning.
+    free: VecDeque<usize>,
     next_token: u64,
     stats: PoolStats,
+    /// Push-latency histogram (serving-layer latency: the full
+    /// [`SessionPool::push`] path).
+    hist: LatencyHistogram,
 }
 
 impl SessionPool {
@@ -181,36 +257,37 @@ impl SessionPool {
         let capacity = all.len();
         Ok(SessionPool {
             slots: all,
-            rr: 0,
+            free: (0..capacity).collect(),
             next_token: 1,
             stats: PoolStats {
                 capacity,
                 ..PoolStats::default()
             },
+            hist: LatencyHistogram::default(),
         })
     }
 
-    /// Admit one client: round-robin over the free slots, open a stream
-    /// on the chosen deployment (over zeroed state). Fails with
-    /// [`PoolError::Saturated`] when every slot is busy.
+    /// Admit one client: pop the free-list head (round-robin order,
+    /// O(1)), open a stream on the chosen deployment (over zeroed
+    /// state). Fails with [`PoolError::Saturated`] when every slot is
+    /// busy.
     pub fn open(&mut self) -> Result<StreamId, PoolError> {
-        let n = self.slots.len();
-        for k in 0..n {
-            let i = (self.rr + k) % n;
-            if self.slots[i].stream.is_none() {
-                self.rr = (i + 1) % n;
-                self.slots[i].session.stream_begin().map_err(PoolError::Run)?;
-                let token = self.next_token;
-                self.next_token += 1;
-                self.slots[i].stream = Some(token);
-                self.stats.opened += 1;
-                self.stats.active += 1;
-                self.stats.peak_active = self.stats.peak_active.max(self.stats.active);
-                return Ok(StreamId { slot: i, token });
-            }
+        let Some(i) = self.free.pop_front() else {
+            self.stats.rejected += 1;
+            return Err(PoolError::Saturated);
+        };
+        if let Err(e) = self.slots[i].session.stream_begin() {
+            // failed admission: the slot was never handed out
+            self.free.push_front(i);
+            return Err(PoolError::Run(e));
         }
-        self.stats.rejected += 1;
-        Err(PoolError::Saturated)
+        let token = self.next_token;
+        self.next_token += 1;
+        self.slots[i].stream = Some(token);
+        self.stats.opened += 1;
+        self.stats.active += 1;
+        self.stats.peak_active = self.stats.peak_active.max(self.stats.active);
+        Ok(StreamId { slot: i, token })
     }
 
     fn check(&self, id: StreamId) -> Result<(), PoolError> {
@@ -220,17 +297,19 @@ impl SessionPool {
         }
     }
 
-    /// Push one timestep of events into a client's stream.
+    /// Push one timestep of events into a client's stream. The push's
+    /// wall-clock lands in the pool's tail-latency histogram
+    /// ([`PoolTelemetry::histogram`]).
     pub fn push(
         &mut self,
         id: StreamId,
         ev: StepEvents<'_>,
     ) -> Result<&StepOutput, PoolError> {
         self.check(id)?;
-        self.slots[id.slot]
-            .session
-            .stream_push(ev)
-            .map_err(PoolError::Run)
+        let t0 = std::time::Instant::now();
+        let r = self.slots[id.slot].session.stream_push(ev);
+        self.hist.record(t0.elapsed());
+        r.map_err(PoolError::Run)
     }
 
     /// Rate-decode of a client's stream so far (early-stop signal).
@@ -239,17 +318,43 @@ impl SessionPool {
         Ok(self.slots[id.slot].session.stream_confidence())
     }
 
+    /// Inject per-output errors and trigger one on-chip learning sweep
+    /// on the client's slot (learning deployments only) — per-tenant
+    /// online fine-tuning. NOTE: on the bare pool the updated weights
+    /// *stay on the slot* after release (reset scrubs dynamic state,
+    /// not weights); the [`gateway`] wraps this with checkpoint/restore
+    /// so tenants cannot observe each other's fine-tunes.
+    pub fn learn(&mut self, id: StreamId, errors: &[f32]) -> Result<(), PoolError> {
+        self.check(id)?;
+        self.slots[id.slot]
+            .session
+            .learn_step(errors)
+            .map_err(PoolError::Run)
+    }
+
     /// Finish a client's stream, scrub the slot (reset-on-release: the
     /// next tenant starts from provably zero state), and free it for
-    /// re-admission. The id goes stale either way.
+    /// re-admission. The id goes stale either way; a finish/reset fault
+    /// books the stream as [`PoolStats::faulted`] instead of completed.
     pub fn release(&mut self, id: StreamId) -> Result<StreamReport, PoolError> {
         self.check(id)?;
         let slot = &mut self.slots[id.slot];
-        // free the slot first so a finish/reset fault never wedges it
+        // free the slot first so a finish/reset fault never wedges it;
+        // tail re-insertion keeps admissions round-robin
         slot.stream = None;
+        self.free.push_back(id.slot);
         self.stats.active -= 1;
-        let rep = slot.session.stream_finish().map_err(PoolError::Run)?;
-        slot.session.reset().map_err(PoolError::Run)?;
+        let rep = match slot.session.stream_finish() {
+            Ok(r) => r,
+            Err(e) => {
+                self.stats.faulted += 1;
+                return Err(PoolError::Run(e));
+            }
+        };
+        if let Err(e) = slot.session.reset() {
+            self.stats.faulted += 1;
+            return Err(PoolError::Run(e));
+        }
         self.stats.completed += 1;
         self.stats.steps += rep.steps;
         self.stats.spikes += rep.spikes;
@@ -257,7 +362,18 @@ impl SessionPool {
         Ok(rep)
     }
 
+    /// One observability snapshot: counters + tail-latency histogram +
+    /// chip activity at the same instant.
+    pub fn telemetry(&self) -> PoolTelemetry {
+        PoolTelemetry {
+            stats: self.stats,
+            histogram: self.hist.clone(),
+            activity: self.activity(),
+        }
+    }
+
     /// Aggregate serving counters.
+    #[deprecated(note = "use SessionPool::telemetry().stats")]
     pub fn stats(&self) -> PoolStats {
         self.stats
     }
@@ -286,6 +402,13 @@ impl SessionPool {
     /// Read-only view of one slot's session (monitoring paths).
     pub fn session(&self, slot: usize) -> Option<&Session> {
         self.slots.get(slot).map(|s| &s.session)
+    }
+
+    /// Mutable view of one slot's session — maintenance paths only
+    /// (e.g. the gateway's weight-checkpoint restore between tenants).
+    /// Never touch a slot that currently serves a stream.
+    pub fn session_mut(&mut self, slot: usize) -> Option<&mut Session> {
+        self.slots.get_mut(slot).map(|s| &mut s.session)
     }
 }
 
@@ -327,17 +450,36 @@ mod tests {
             Err(PoolError::Saturated) => {}
             other => panic!("expected Saturated, got {other:?}"),
         }
-        assert_eq!(pool.stats().rejected, 1);
+        assert_eq!(pool.telemetry().stats.rejected, 1);
         pool.release(a).unwrap();
         let c = pool.open().unwrap();
         assert_eq!(c.slot(), a.slot(), "released slot must be re-admittable");
         pool.release(b).unwrap();
         pool.release(c).unwrap();
-        let st = pool.stats();
+        let st = pool.telemetry().stats;
         assert_eq!(st.opened, 3);
         assert_eq!(st.completed, 3);
         assert_eq!(st.active, 0);
         assert_eq!(st.peak_active, 2);
+        assert!(st.reconciled());
+    }
+
+    #[test]
+    fn free_list_keeps_round_robin_spread_under_churn() {
+        // open/release churn on a partially busy pool must keep walking
+        // the free slots (tail re-insertion), not hammer one index
+        let mut pool = SessionPool::new(tiny_session(), 3).unwrap();
+        let hold = pool.open().unwrap();
+        let mut seen = Vec::new();
+        for _ in 0..4 {
+            let id = pool.open().unwrap();
+            seen.push(id.slot());
+            pool.release(id).unwrap();
+        }
+        assert_ne!(seen[0], seen[1], "churn must alternate free slots: {seen:?}");
+        assert_eq!(seen[0], seen[2], "two free slots alternate: {seen:?}");
+        pool.release(hold).unwrap();
+        assert!(pool.telemetry().stats.reconciled());
     }
 
     #[test]
@@ -406,5 +548,24 @@ mod tests {
         let again = pool.open().unwrap();
         pool.push(again, StepEvents::Spikes(&[0])).unwrap();
         pool.release(again).unwrap();
+        // the faulted stream is accounted exactly once
+        let st = pool.telemetry().stats;
+        assert_eq!(st.faulted, 1);
+        assert!(st.reconciled(), "{st}");
+    }
+
+    #[test]
+    fn telemetry_histogram_tracks_pushes() {
+        let mut pool = SessionPool::new(tiny_session(), 1).unwrap();
+        let id = pool.open().unwrap();
+        for _ in 0..8 {
+            pool.push(id, StepEvents::Spikes(&[0])).unwrap();
+        }
+        pool.release(id).unwrap();
+        let t = pool.telemetry();
+        assert_eq!(t.histogram.count(), 8);
+        assert!(t.histogram.p99_us() >= t.histogram.p50_us());
+        assert!(t.activity.nc.sops > 0);
+        assert_eq!(t.stats.steps, 8);
     }
 }

@@ -308,6 +308,31 @@ impl Deployment {
             .map(|w| F16(w).to_f32())
             .collect())
     }
+
+    /// Snapshot every core's raw weight words (`[weights, cur)` in NC
+    /// memory, one vector per core in `compiled.cores` order). Raw u16
+    /// words — not the F16→f32 view of [`Deployment::peek_weights`] —
+    /// so [`Deployment::restore_weights`] is bit-exact: restoring a
+    /// checkpoint provably undoes any interleaved `learn_step`s (the
+    /// serving gateway's per-tenant isolation lever).
+    pub fn checkpoint_weights(&self) -> Result<Vec<Vec<u16>>, Trap> {
+        let mut cores = Vec::with_capacity(self.compiled.cores.len());
+        for core in &self.compiled.cores {
+            let n = (core.layout.cur - core.layout.weights) as usize;
+            cores.push(self.chip.peek(core.cc, core.nc, core.layout.weights, n)?);
+        }
+        Ok(cores)
+    }
+
+    /// Write a [`Deployment::checkpoint_weights`] snapshot back. The
+    /// checkpoint must come from a deployment of the same compiled
+    /// image (same cores, same layouts).
+    pub fn restore_weights(&mut self, cores: &[Vec<u16>]) -> Result<(), Trap> {
+        for (core, words) in self.compiled.cores.iter().zip(cores) {
+            self.chip.poke(core.cc, core.nc, core.layout.weights, words)?;
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -1119,6 +1144,40 @@ impl MultiChipDeployment {
             .into_iter()
             .map(|w| F16(w).to_f32())
             .collect())
+    }
+
+    /// Snapshot every core's raw weight words across the fleet — the
+    /// multi-die counterpart of [`Deployment::checkpoint_weights`]
+    /// (same `compiled.cores` order, bit-exact u16 words). Host-side
+    /// like `peek_weights`: call it between steps, not mid-step.
+    pub fn checkpoint_weights(&self) -> Result<Vec<Vec<u16>>, Trap> {
+        let mut cores = Vec::with_capacity(self.compiled.cores.len());
+        for (chip_idx, core) in &self.compiled.cores {
+            let n = (core.layout.cur - core.layout.weights) as usize;
+            cores.push(lock(&self.chips[*chip_idx]).peek(
+                core.cc,
+                core.nc,
+                core.layout.weights,
+                n,
+            )?);
+        }
+        Ok(cores)
+    }
+
+    /// Write a [`MultiChipDeployment::checkpoint_weights`] snapshot
+    /// back onto the die hosting each core. In pipelined mode call it
+    /// only with the fleet quiesced (e.g. right after
+    /// [`MultiChipDeployment::reset_state`], which drains the workers).
+    pub fn restore_weights(&mut self, cores: &[Vec<u16>]) -> Result<(), Trap> {
+        for ((chip_idx, core), words) in self.compiled.cores.iter().zip(cores) {
+            lock(&self.chips[*chip_idx]).poke(
+                core.cc,
+                core.nc,
+                core.layout.weights,
+                words,
+            )?;
+        }
+        Ok(())
     }
 
     /// Aggregate activity across dies: event counters sum; `timesteps`

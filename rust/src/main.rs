@@ -18,11 +18,19 @@
 //!                                    bound; 0 = sequential reference)
 //! * `fast <plif|5blocks|resnet19>` — analytic-backend report for the
 //!                                    Table II benchmark nets
-//! * `serve-demo <ecg|shd|bci>`     — multi-tenant streaming: N client
-//!                                    streams multiplexed over a fixed
-//!                                    `api::serve::SessionPool` (`--pool`,
-//!                                    `--clients`, `--confidence <p>` for
-//!                                    early-stop decoding)
+//! * `serve-demo <ecg|shd|bci>`     — multi-tenant serving through the
+//!                                    sharded `api::serve::Gateway`: N
+//!                                    client streams submitted open-loop
+//!                                    across worker threads (`--workers`),
+//!                                    each worker one `SessionPool`
+//!                                    (`--pool` slots), bounded admission
+//!                                    queues (`--queue-depth`), per-request
+//!                                    deadlines (`--deadline-ms`, 0 = off),
+//!                                    `--clients`, and `--confidence <p>`
+//!                                    for early-stop decoding; prints the
+//!                                    rejection/deadline breakdown and
+//!                                    p50/p99/p999 push latency alongside
+//!                                    accuracy and pool energy
 //! * `fuzz`                         — differential fuzzing: seeded random
 //!                                    nets through every engine (dense
 //!                                    reference, wake-set, scan-all,
@@ -60,8 +68,8 @@ use std::collections::VecDeque;
 
 use taibai::api::workloads::{Bci, Ecg, Shd};
 use taibai::api::{
-    evaluate, Backend, ExecOptions, FastParams, Sample, SessionPool, StreamId,
-    Taibai, Workload,
+    evaluate, Backend, ExecOptions, FastParams, Gateway, GatewayConfig, GatewayError,
+    Rejected, Sample, Taibai, Ticket, Workload,
 };
 use taibai::bench::Table;
 use taibai::energy::EnergyModel;
@@ -289,13 +297,17 @@ fn run_app(args: &Args) {
     }
 }
 
-/// Multi-tenant serving demo: a fixed pool of deployments, N client
-/// streams admitted round-robin, one timestep pushed per active stream
-/// per event-loop tick (the shape of a network front-end), optional
-/// confidence-based early stop.
+/// Multi-tenant serving demo over the sharded gateway: N client
+/// streams submitted open-loop as whole-sample requests, fanned across
+/// worker threads by tenant hash, with bounded admission queues
+/// (backpressure when full), optional per-request deadlines, and
+/// optional confidence-based early stop.
 fn serve_demo(args: &Args) {
     let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("shd");
+    let workers = args.usize("workers", 2);
     let pool_size = args.usize("pool", 4);
+    let queue_depth = args.usize("queue-depth", 32);
+    let deadline_ms = args.u64("deadline-ms", 0); // 0 = no deadline
     let n_clients = args.usize("clients", 8);
     // > 1.0 disables early stop; e.g. --confidence 0.9 enables it
     let threshold = args.f64("confidence", 2.0);
@@ -310,64 +322,89 @@ fn serve_demo(args: &Args) {
         }
     };
     let full_steps = template.net().timesteps;
-    let mut pool = SessionPool::new(template, pool_size).expect("building the pool");
+    let gw = Gateway::new(
+        &template,
+        GatewayConfig {
+            workers,
+            slots_per_worker: pool_size,
+            queue_depth,
+            deadline: (deadline_ms > 0)
+                .then(|| std::time::Duration::from_millis(deadline_ms)),
+        },
+    )
+    .expect("building the gateway");
 
     let data = workload.dataset(n_clients, seed);
     let n_clients = n_clients.min(data.len());
+    let early_stop = (threshold <= 1.0).then_some((threshold, 8));
 
-    struct Client<'a> {
-        id: StreamId,
-        sample: &'a Sample,
-        t: usize,
-    }
-    let mut waiting: VecDeque<&Sample> = data.iter().take(n_clients).collect();
-    let mut active: Vec<Client> = Vec::new();
-    let mut done = 0usize;
-    let mut early = 0usize;
+    let mut tickets: VecDeque<(usize, Ticket)> = VecDeque::new();
     let mut pairs: Vec<(usize, usize)> = Vec::new();
-    while done < n_clients {
-        // admit as many waiting clients as the pool allows
-        while let Some(&s) = waiting.front() {
-            match pool.open() {
-                Ok(id) => {
-                    waiting.pop_front();
-                    active.push(Client { id, sample: s, t: 0 });
-                }
-                Err(_) => break, // saturated (counted in PoolStats::rejected)
+    let mut early = 0usize;
+    let mut shed = 0usize;
+    let mut collect = |i: usize, ticket: Ticket| match ticket.wait() {
+        Ok(rep) => {
+            if (rep.steps as usize) < data[i].timesteps() {
+                early += 1;
+            }
+            if let (Some((cls, _)), Some(label)) = (rep.decision, data[i].label()) {
+                pairs.push((cls, label));
             }
         }
-        // one timestep per active stream per tick
-        let mut k = 0;
-        while k < active.len() {
-            let c = &mut active[k];
-            pool.push(c.id, c.sample.events_at(c.t)).expect("push");
-            c.t += 1;
-            let confident = threshold <= 1.0
-                && c.t >= 8
-                && pool
-                    .confidence(c.id)
-                    .expect("confidence")
-                    .is_some_and(|(_, p)| p >= threshold);
-            if c.t >= c.sample.timesteps() || confident {
-                if c.t < c.sample.timesteps() {
-                    early += 1;
+        Err(GatewayError::Rejected(_)) => shed += 1, // counted in telemetry too
+        Err(e) => eprintln!("stream {i} failed: {e}"),
+    };
+    for i in 0..n_clients {
+        loop {
+            match gw.submit(i as u64, data[i].clone(), early_stop) {
+                Ok(t) => {
+                    tickets.push_back((i, t));
+                    break;
                 }
-                let rep = pool.release(c.id).expect("release");
-                if let (Some((cls, _)), Some(label)) = (rep.decision, c.sample.label())
-                {
-                    pairs.push((cls, label));
+                Err(GatewayError::Rejected(Rejected::QueueFull)) => {
+                    // backpressure: drain the oldest in-flight stream,
+                    // then retry this submit (the shed is counted)
+                    match tickets.pop_front() {
+                        Some((j, t)) => collect(j, t),
+                        None => std::thread::yield_now(),
+                    }
                 }
-                active.swap_remove(k);
-                done += 1;
-            } else {
-                k += 1;
+                Err(e) => {
+                    eprintln!("submit failed: {e}");
+                    std::process::exit(1);
+                }
             }
         }
     }
+    while let Some((j, t)) = tickets.pop_front() {
+        collect(j, t);
+    }
 
-    let st = pool.stats();
-    println!("{} serving demo:", workload.name());
-    println!("  {st}");
+    let t = gw.telemetry();
+    println!("{} serving demo ({} workers):", workload.name(), gw.workers());
+    println!("  {}", t.stats);
+    println!(
+        "  rejections        : {} queue-full, {} deadline, {} saturated \
+         ({} of {} attempts admitted{})",
+        t.rejected.queue_full,
+        t.rejected.deadline,
+        t.rejected.saturated,
+        t.stats.opened,
+        t.attempts,
+        if shed > 0 {
+            format!("; {shed} client streams shed")
+        } else {
+            String::new()
+        }
+    );
+    println!(
+        "  push latency      : p50 {:.1} µs, p99 {:.1} µs, p999 {:.1} µs \
+         over {} pushes",
+        t.histogram.p50_us(),
+        t.histogram.p99_us(),
+        t.histogram.p999_us(),
+        t.histogram.count(),
+    );
     println!(
         "  accuracy          : {:.1}% over {} decoded streams",
         accuracy(&pairs) * 100.0,
@@ -383,16 +420,20 @@ fn serve_demo(args: &Args) {
     );
     println!(
         "  mean steps/stream : {:.1} (full sample = {full_steps})",
-        st.steps as f64 / st.completed.max(1) as f64
+        t.stats.steps as f64 / t.stats.completed.max(1) as f64
     );
     let em = EnergyModel::default();
-    let a = pool.activity();
+    let a = t.activity;
     println!(
         "  pool energy       : {:.3} mJ dynamic, {:.2} pJ/SOP, {:.3} µJ SerDes",
         em.energy(&a).dynamic_j() * 1e3,
         em.pj_per_sop(&a),
         em.energy(&a).serdes_j * 1e6,
     );
+    if !t.reconciled() {
+        eprintln!("WARNING: gateway accounting does not reconcile: {t:?}");
+        std::process::exit(1);
+    }
 }
 
 fn baseline(args: &Args) {

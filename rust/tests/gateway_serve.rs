@@ -1,0 +1,291 @@
+//! Gateway concurrency-correctness: the sharded serving front-end must
+//! never trade correctness for throughput.
+//!
+//! * Interleaved ECG / SHD / BCI tenant streams pushed through a
+//!   multi-threaded `Gateway` decode **bit-identically** to sequential
+//!   single-session runs — threading changes scheduling, never results.
+//! * Admission control rejections (`Saturated`, `QueueFull`,
+//!   `DeadlineExceeded`) and stale handles surface as typed errors
+//!   across the thread boundary, and the telemetry accounting
+//!   reconciles: every routed request lands in exactly one bucket.
+//! * A learning tenant's on-chip fine-tune is confined to its own
+//!   stream: the gateway checkpoints a slot's weights at admission and
+//!   restores them at release. The control half of that test shows the
+//!   bare single `SessionPool` *leaking* the fine-tune into the next
+//!   tenant on the slot — so the isolation pin cannot pass on the
+//!   unsharded pool.
+
+use std::time::Duration;
+
+use taibai::api::workloads::{Bci, Ecg, Shd, Workload};
+use taibai::api::{
+    Backend, Gateway, GatewayConfig, GatewayError, Rejected, Sample, SessionPool,
+    StreamReport,
+};
+use taibai::metrics::argmax;
+
+fn gw_cfg(workers: usize, slots: usize, depth: usize) -> GatewayConfig {
+    GatewayConfig {
+        workers,
+        slots_per_worker: slots,
+        queue_depth: depth,
+        deadline: None,
+    }
+}
+
+/// Serve one whole sample on a bare pool (open → push-all → release).
+fn serve_whole(pool: &mut SessionPool, s: &Sample) -> StreamReport {
+    let id = pool.open().expect("open");
+    for t in 0..s.timesteps() {
+        pool.push(id, s.events_at(t)).expect("push");
+    }
+    pool.release(id).expect("release")
+}
+
+#[test]
+fn gateway_streams_match_sequential_sessions_across_workloads() {
+    // 2 tenants per workload stream concurrently over a 2-worker
+    // gateway, pushes interleaved per timestep across the shard
+    // threads; each must decode exactly what its own private
+    // sequential session decodes (rows aggregated, spikes, packets).
+    let seed = 29;
+    let workloads: Vec<Box<dyn Workload>> = vec![
+        Box::new(Ecg {
+            heterogeneous: true,
+        }),
+        Box::new(Shd { dendrites: true }),
+        Box::new(Bci::default()),
+    ];
+    for (wi, w) in workloads.iter().enumerate() {
+        let data: Vec<Sample> = w.dataset(2, seed).into_iter().take(2).collect();
+
+        let mut seq = w.session(Backend::Detailed, seed).unwrap();
+        let mut expected = Vec::new();
+        for s in &data {
+            let run = seq.run(s).unwrap();
+            expected.push((argmax(&run.summed()), run.spikes, run.packets));
+        }
+
+        let template = w.session(Backend::Detailed, seed).unwrap();
+        let gw = Gateway::new(&template, gw_cfg(2, data.len(), 16)).unwrap();
+        let handles: Vec<_> = data
+            .iter()
+            .enumerate()
+            .map(|(k, _)| {
+                gw.open(k as u64 * 7 + wi as u64).expect("admission")
+            })
+            .collect();
+        let t_max = data.iter().map(|s| s.timesteps()).max().unwrap();
+        for t in 0..t_max {
+            for (k, s) in data.iter().enumerate() {
+                if t < s.timesteps() {
+                    gw.push(handles[k], s.events_at(t)).expect("push");
+                }
+            }
+        }
+        for (k, s) in data.iter().enumerate() {
+            let rep = gw.release(handles[k]).expect("release");
+            let (cls, conf) = rep.decision.expect("gateway stream must decode");
+            let tag = format!("{} stream {k}", w.name());
+            assert_eq!(
+                cls, expected[k].0,
+                "{tag}: decoded label diverged from the sequential session"
+            );
+            assert!(conf > 0.0 && conf <= 1.0, "{tag}: confidence out of range");
+            assert_eq!(rep.spikes, expected[k].1, "{tag}: spikes diverged");
+            assert_eq!(rep.packets, expected[k].2, "{tag}: packets diverged");
+            assert_eq!(rep.steps as usize, s.timesteps(), "{tag}: steps");
+        }
+        let t = gw.telemetry();
+        assert!(t.reconciled(), "{}: accounting does not reconcile", w.name());
+        assert_eq!(t.stats.completed, data.len() as u64);
+        assert_eq!(t.rejected.total(), 0);
+    }
+}
+
+#[test]
+fn gateway_rejections_saturated_and_stale_cross_thread() {
+    let w = Shd { dendrites: true };
+    let template = w.session(Backend::Detailed, 5).unwrap();
+    let sample = w.dataset(1, 5).remove(0);
+    let gw = Gateway::new(&template, gw_cfg(1, 1, 8)).unwrap();
+
+    let a = gw.open(1).unwrap();
+    match gw.open(2) {
+        Err(GatewayError::Rejected(Rejected::Saturated)) => {}
+        other => panic!("second open on a full 1-slot shard: {other:?}"),
+    }
+    gw.push(a, sample.events_at(0)).unwrap();
+    let rep = gw.release(a).unwrap();
+    assert_eq!(rep.steps, 1);
+    // the handle is stale now — the slot may belong to someone else
+    match gw.release(a) {
+        Err(GatewayError::StaleStream) => {}
+        other => panic!("release of a released handle: {other:?}"),
+    }
+    match gw.push(a, sample.events_at(0)) {
+        Err(GatewayError::StaleStream) => {}
+        other => panic!("push on a released handle: {other:?}"),
+    }
+
+    let t = gw.telemetry();
+    assert_eq!(t.attempts, 2);
+    assert_eq!(t.stats.opened, 1);
+    assert_eq!(t.rejected.saturated, 1);
+    assert_eq!(t.rejected.queue_full + t.rejected.deadline, 0);
+    assert!(t.reconciled());
+}
+
+#[test]
+fn gateway_zero_deadline_rejects_submissions() {
+    let w = Shd { dendrites: true };
+    let template = w.session(Backend::Detailed, 5).unwrap();
+    let sample = w.dataset(1, 5).remove(0);
+    let gw = Gateway::new(
+        &template,
+        GatewayConfig {
+            deadline: Some(Duration::ZERO),
+            ..gw_cfg(1, 1, 8)
+        },
+    )
+    .unwrap();
+
+    let tickets: Vec<_> = (0..3)
+        .map(|i| gw.submit(i, sample.clone(), None).expect("queued"))
+        .collect();
+    for ticket in tickets {
+        match ticket.wait() {
+            Err(GatewayError::Rejected(Rejected::DeadlineExceeded)) => {}
+            other => panic!("zero deadline must reject at dequeue: {other:?}"),
+        }
+    }
+    let t = gw.telemetry();
+    assert_eq!(t.rejected.deadline, 3);
+    assert_eq!(t.stats.opened, 0);
+    assert!(t.reconciled());
+}
+
+#[test]
+fn gateway_sheds_queue_full_under_burst() {
+    let w = Shd { dendrites: true };
+    let template = w.session(Backend::Detailed, 7).unwrap();
+    let sample = w.dataset(1, 7).remove(0);
+    // depth-1 queue, one worker busy for ~a full sample per request:
+    // an instant burst must shed most of itself at the door
+    let gw = Gateway::new(&template, gw_cfg(1, 1, 1)).unwrap();
+
+    let mut tickets = Vec::new();
+    let mut shed = 0u64;
+    let burst = 24u64;
+    for i in 0..burst {
+        match gw.submit(i, sample.clone(), None) {
+            Ok(t) => tickets.push(t),
+            Err(GatewayError::Rejected(Rejected::QueueFull)) => shed += 1,
+            Err(e) => panic!("submit: {e}"),
+        }
+    }
+    assert!(
+        shed > 0,
+        "{burst} back-to-back submits never filled a depth-1 queue"
+    );
+    for ticket in tickets {
+        ticket.wait().expect("admitted streams must complete");
+    }
+    let t = gw.telemetry();
+    assert_eq!(t.attempts, burst);
+    assert_eq!(t.rejected.queue_full, shed);
+    assert_eq!(t.stats.opened, burst - shed);
+    assert_eq!(t.stats.completed, burst - shed);
+    assert!(t.reconciled());
+}
+
+#[test]
+fn gateway_isolates_learning_tenants_where_bare_pool_leaks() {
+    // Tenant A fine-tunes on its stream, then tenant B lands on the
+    // same slot. On the bare single pool the fine-tune persists into
+    // B's decode (the control — this pin CANNOT pass there); the
+    // gateway restores the slot's pre-admission weights at release, so
+    // B bit-matches a pool that never saw A.
+    let w = Bci::default();
+    let seed = 11;
+    let data = w.dataset(4, seed);
+    let (sample_a, sample_b) = (&data[1], &data[0]);
+    let errors = [1.5f32, -1.5, 1.5, -1.5];
+
+    // reference: a fresh pool serving only tenant B
+    let mut fresh =
+        SessionPool::new(w.session(Backend::Detailed, seed).unwrap(), 1).unwrap();
+    let reference = serve_whole(&mut fresh, sample_b);
+    assert!(reference.decision.is_some());
+
+    // control: bare pool — A's learn updates leak into B's slot
+    let mut bare =
+        SessionPool::new(w.session(Backend::Detailed, seed).unwrap(), 1).unwrap();
+    let id = bare.open().unwrap();
+    for t in 0..sample_a.timesteps() {
+        bare.push(id, sample_a.events_at(t)).unwrap();
+    }
+    for _ in 0..4 {
+        bare.learn(id, &errors).unwrap();
+    }
+    bare.release(id).unwrap();
+    let leaked = serve_whole(&mut bare, sample_b);
+    assert!(
+        leaked.spikes != reference.spikes || leaked.decision != reference.decision,
+        "control lost its teeth: tenant A's fine-tune left no visible trace \
+         on the bare pool, so the isolation pin below pins nothing"
+    );
+
+    // gateway: same protocol, same (only) slot — isolated
+    let template = w.session(Backend::Detailed, seed).unwrap();
+    let gw = Gateway::new(&template, gw_cfg(1, 1, 8)).unwrap();
+    let a = gw.open(1).unwrap();
+    for t in 0..sample_a.timesteps() {
+        gw.push(a, sample_a.events_at(t)).unwrap();
+    }
+    for _ in 0..4 {
+        gw.learn(a, &errors).unwrap();
+    }
+    gw.release(a).unwrap();
+    let b = gw.open(2).unwrap();
+    assert_eq!(b.slot(), a.slot(), "B must reuse A's slot for the pin to bite");
+    for t in 0..sample_b.timesteps() {
+        gw.push(b, sample_b.events_at(t)).unwrap();
+    }
+    let rep = gw.release(b).unwrap();
+    assert_eq!(
+        rep.spikes, reference.spikes,
+        "gateway leaked tenant A's fine-tune into tenant B (spikes)"
+    );
+    assert_eq!(
+        rep.decision, reference.decision,
+        "gateway leaked tenant A's fine-tune into tenant B (decision)"
+    );
+    let t = gw.telemetry();
+    assert_eq!(t.stats.completed, 2);
+    assert!(t.reconciled());
+}
+
+#[test]
+fn sharded_backend_weight_checkpoint_roundtrip() {
+    // checkpoint/restore must also work on the lockstep multi-die
+    // engine (per-chip peek/poke over merged layouts), and restoring
+    // an untouched checkpoint must be a bit-exact no-op.
+    let w = Shd { dendrites: true };
+    let mut s = w.session(Backend::Sharded { chips: 2 }, 13).unwrap();
+    let sample = w.dataset(1, 13).remove(0);
+
+    let before = s.run(&sample).unwrap();
+    let ckpt = s
+        .checkpoint_weights()
+        .unwrap()
+        .expect("the detailed engines expose weight checkpoints");
+    assert!(ckpt.words() > 0, "checkpoint captured no weight words");
+    s.restore_weights(&ckpt).unwrap();
+    let after = s.run(&sample).unwrap();
+    assert_eq!(
+        before.outputs, after.outputs,
+        "restoring an untouched checkpoint perturbed the deployment"
+    );
+    assert_eq!(before.spikes, after.spikes);
+}

@@ -165,7 +165,7 @@ fn pool_interleaved_streams_match_sequential_sessions() {
         assert_eq!(rep.packets, expected[k].2, "stream {k}: packets diverged");
         assert_eq!(rep.steps as usize, s.timesteps());
     }
-    let st = pool.stats();
+    let st = pool.telemetry().stats;
     assert_eq!(st.peak_active, data.len());
     assert_eq!(st.completed, data.len() as u64);
     assert_eq!(st.rejected, 0);
