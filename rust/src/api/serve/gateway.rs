@@ -354,11 +354,17 @@ struct ShardWorker {
     /// Requests dropped at dequeue because they sat queued past the
     /// deadline.
     deadline_missed: u64,
+    /// Admissions refused because the slot's isolation checkpoint could
+    /// not be captured; the rollback release books them as completed in
+    /// the pool, so the snapshot reclassifies them as faulted.
+    ckpt_refused: u64,
 }
 
 impl ShardWorker {
     fn overdue(&self, enqueued: Instant) -> bool {
-        self.deadline.is_some_and(|d| enqueued.elapsed() > d)
+        // >= so a zero deadline deterministically rejects every queued
+        // request even when a coarse monotonic clock reads elapsed == 0
+        self.deadline.is_some_and(|d| enqueued.elapsed() >= d)
     }
 
     /// Admit one stream and, on learning deployments, capture the
@@ -374,8 +380,15 @@ impl ShardWorker {
             match self.pool.session(slot).unwrap().checkpoint_weights() {
                 Ok(ckpt) => self.checkpoints[slot] = ckpt,
                 Err(e) => {
-                    // cannot guarantee isolation: refuse the admission
-                    let _ = self.pool.release(id);
+                    // cannot guarantee isolation: refuse the admission.
+                    // A clean rollback release books the stream as
+                    // completed in the pool even though the caller saw
+                    // it fail — remember it so the snapshot can book it
+                    // as faulted instead. (A faulted rollback is already
+                    // booked as faulted by the pool itself.)
+                    if self.pool.release(id).is_ok() {
+                        self.ckpt_refused += 1;
+                    }
                     return Err(GatewayError::Run(e));
                 }
             }
@@ -389,6 +402,14 @@ impl ShardWorker {
     fn release(&mut self, id: StreamId) -> Result<StreamReport, GatewayError> {
         let slot = id.slot();
         let rep = self.pool.release(id).map_err(from_pool);
+        // A stale handle no longer owns the slot: the checkpoint there
+        // (if any) belongs to whichever stream is active now, so a
+        // replayed release must not consume or restore it. Any other
+        // outcome (completed or faulted) did free the slot, and the
+        // restore must still run to keep the isolation contract.
+        if matches!(rep, Err(GatewayError::StaleStream)) {
+            return rep;
+        }
         if let Some(ckpt) = self.checkpoints[slot].take() {
             if let Some(sess) = self.pool.session_mut(slot) {
                 if let Err(e) = sess.restore_weights(&ckpt) {
@@ -434,15 +455,21 @@ impl ShardWorker {
 
     fn snapshot(&self) -> ShardSnapshot {
         let t = self.pool.telemetry();
+        // checkpoint-refused admissions failed from the caller's point
+        // of view: move their clean rollback releases from completed to
+        // faulted (keeps `opened == completed + faulted + active`).
+        let mut stats = t.stats;
+        stats.completed -= self.ckpt_refused;
+        stats.faulted += self.ckpt_refused;
         ShardSnapshot {
             shard: 0, // filled by the gateway side
             rejected: RejectionStats {
                 queue_full: 0, // filled by the gateway side
                 deadline: self.deadline_missed,
-                saturated: t.stats.rejected,
+                saturated: stats.rejected,
             },
             attempts: 0, // filled by the gateway side
-            stats: t.stats,
+            stats,
             histogram: t.histogram,
             activity: t.activity,
         }
@@ -525,6 +552,7 @@ impl Gateway {
                 checkpoints: vec![None; slots],
                 deadline: cfg.deadline,
                 deadline_missed: 0,
+                ckpt_refused: 0,
             };
             let handle = std::thread::Builder::new()
                 .name(format!("taibai-shard-{w}"))
@@ -566,13 +594,19 @@ impl Gateway {
         make: impl FnOnce(Instant) -> Job,
     ) -> Result<(), GatewayError> {
         let s = &self.shards[shard];
-        s.shared.attempts.fetch_add(1, Ordering::Relaxed);
         match s.tx.try_send(make(Instant::now())) {
-            Ok(()) => Ok(()),
+            Ok(()) => {
+                s.shared.attempts.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
             Err(TrySendError::Full(_)) => {
+                s.shared.attempts.fetch_add(1, Ordering::Relaxed);
                 s.shared.queue_full.fetch_add(1, Ordering::Relaxed);
                 Err(GatewayError::Rejected(Rejected::QueueFull))
             }
+            // a dead worker never opens nor rejects the request, so it
+            // must not count as an attempt or reconciled() would fail
+            // forever after
             Err(TrySendError::Disconnected(_)) => Err(GatewayError::Closed),
         }
     }

@@ -267,6 +267,72 @@ fn gateway_isolates_learning_tenants_where_bare_pool_leaks() {
 }
 
 #[test]
+fn stale_release_replay_cannot_clobber_active_tenants_checkpoint() {
+    // TenantStream is Copy, so a released handle can be replayed after
+    // the slot was re-admitted to someone else. The replay must fail
+    // with StaleStream and leave the slot's checkpoint alone: consuming
+    // it would (a) restore pre-admission weights mid-stream under the
+    // active tenant and (b) disarm that tenant's real release, leaking
+    // its fine-tune into the next admission.
+    let w = Bci::default();
+    let seed = 11;
+    let data = w.dataset(4, seed);
+    let (sample_b, sample_c) = (&data[1], &data[0]);
+    let errors = [1.5f32, -1.5, 1.5, -1.5];
+
+    // reference: what tenant C decodes on a pool that never saw B
+    let mut fresh =
+        SessionPool::new(w.session(Backend::Detailed, seed).unwrap(), 1).unwrap();
+    let reference = serve_whole(&mut fresh, sample_c);
+    assert!(reference.decision.is_some());
+
+    let template = w.session(Backend::Detailed, seed).unwrap();
+    let gw = Gateway::new(&template, gw_cfg(1, 1, 8)).unwrap();
+
+    // A opens and releases; its Copy handle is now stale
+    let a = gw.open(1).unwrap();
+    gw.push(a, sample_c.events_at(0)).unwrap();
+    gw.release(a).unwrap();
+
+    // B is admitted on the same slot
+    let b = gw.open(2).unwrap();
+    assert_eq!(b.slot(), a.slot());
+    for t in 0..sample_b.timesteps() {
+        gw.push(b, sample_b.events_at(t)).unwrap();
+    }
+
+    // replaying A's dead handle mid-stream must be a pure no-op
+    match gw.release(a) {
+        Err(GatewayError::StaleStream) => {}
+        other => panic!("replayed stale release: {other:?}"),
+    }
+
+    // B fine-tunes *after* the replay: if the replay consumed B's
+    // checkpoint, this fine-tune has nothing left to undo it and leaks
+    for _ in 0..4 {
+        gw.learn(b, &errors).unwrap();
+    }
+
+    // B's real release must still restore the slot, so C bit-matches
+    // the fresh-pool reference
+    gw.release(b).unwrap();
+    let c = gw.open(3).unwrap();
+    assert_eq!(c.slot(), b.slot());
+    for t in 0..sample_c.timesteps() {
+        gw.push(c, sample_c.events_at(t)).unwrap();
+    }
+    let rep = gw.release(c).unwrap();
+    assert_eq!(
+        rep.spikes, reference.spikes,
+        "stale replay consumed B's checkpoint: B's fine-tune leaked into C"
+    );
+    assert_eq!(rep.decision, reference.decision);
+    let t = gw.telemetry();
+    assert_eq!(t.stats.completed, 3);
+    assert!(t.reconciled(), "{t:?}");
+}
+
+#[test]
 fn sharded_backend_weight_checkpoint_roundtrip() {
     // checkpoint/restore must also work on the lockstep multi-die
     // engine (per-chip peek/poke over merged layouts), and restoring
